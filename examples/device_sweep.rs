@@ -1,0 +1,64 @@
+//! Sweep every model over every device (the full Table II grid plus the
+//! cells the paper leaves out) — useful for scoping a deployment.
+//!
+//! ```sh
+//! cargo run --release --example device_sweep [w4a4|w4a5|w8a8]
+//! ```
+
+use autows::baseline::{self, sequential_latency_ms};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::sim::{simulate, SimConfig};
+
+fn main() {
+    let quant = match std::env::args().nth(1).as_deref() {
+        Some("w4a4") => Quant::W4A4,
+        Some("w8a8") => Quant::W8A8,
+        _ => Quant::W4A5,
+    };
+    println!("quant = {quant}\n");
+    println!(
+        "{:<13}{:<11}{:>10}{:>10}{:>10}{:>9}{:>8}",
+        "network", "device", "seq ms", "van ms", "AutoWS", "off-ch%", "DMA%"
+    );
+    for model in ["mobilenetv2", "resnet18", "resnet50", "yolov5n"] {
+        let net = models::by_name(model, quant).unwrap();
+        for dev in Device::all() {
+            let seq = sequential_latency_ms(&net, &dev);
+            let van = baseline::vanilla(&net, &dev)
+                .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
+            let (autows, off, dma) = match dse::run(&net, &dev, &DseConfig::default()) {
+                None => (None, 0.0, 0.0),
+                Some(r) => {
+                    let sim = simulate(&r.design, &dev, &SimConfig::default());
+                    let total: u64 = net.layers.iter().map(|l| l.weight_bits()).sum();
+                    let off: f64 = r
+                        .design
+                        .cfgs
+                        .iter()
+                        .zip(&net.layers)
+                        .map(|(c, l)| c.frag.off_chip_ratio() * l.weight_bits() as f64)
+                        .sum::<f64>()
+                        / total as f64;
+                    let sched =
+                        autows::schedule::BurstSchedule::from_design(&r.design, &dev, 1);
+                    (Some(sim.latency_ms), off * 100.0, sched.dma_utilization() * 100.0)
+                }
+            };
+            let fmt = |v: Option<f64>| v.map_or("X".into(), |x| format!("{x:.1}"));
+            println!(
+                "{:<13}{:<11}{:>10.1}{:>10}{:>10}{:>8.1}%{:>7.0}%",
+                model,
+                dev.name,
+                seq,
+                fmt(van),
+                fmt(autows),
+                off,
+                dma
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,99 @@
+//! END-TO-END DRIVER (DESIGN.md experiment "E2E"): serve batched inference
+//! requests on a real (toy) quantized CNN through the full stack —
+//!
+//!   L1 Pallas weight-streaming kernel (inside the AOT artifact)
+//!   L2 JAX quantized forward, lowered once to HLO text
+//!   L3 Rust: DSE schedule + PJRT numerics + coordinator batching
+//!
+//! — proving all three layers compose. Reports latency/throughput; the run
+//! is recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_serve
+//! ```
+
+use std::time::{Duration, Instant};
+
+use autows::coordinator::{BatchPolicy, PjrtEngine, Server};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::runtime::Runtime;
+use autows::schedule::BurstSchedule;
+
+fn main() -> anyhow::Result<()> {
+    let artifact = format!("{}/artifacts/toy_cnn_b8.hlo.txt", env!("CARGO_MANIFEST_DIR"));
+    anyhow::ensure!(
+        std::path::Path::new(&artifact).exists(),
+        "{artifact} missing — run `make artifacts` first"
+    );
+
+    // ---- L3 schedule: the accelerator design for the same network ----
+    let net = models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let plan = dse::run(&net, &dev, &DseConfig::default()).expect("toy CNN fits zcu102");
+    let sched = BurstSchedule::from_design(&plan.design, &dev, 8);
+    println!(
+        "accelerator plan on {}: {:.0} fps, {} streaming layers (balanced={})",
+        dev.name,
+        plan.throughput,
+        sched.entries.len(),
+        sched.balanced()
+    );
+
+    // ---- serving loop: PJRT numerics + simulated accelerator clock ----
+    let design = plan.design;
+    let server = Server::start_with(
+        move || {
+            let rt = Runtime::cpu()?;
+            println!("PJRT platform: {}", rt.platform());
+            let model = rt.load_hlo_text(&artifact)?;
+            Ok(Box::new(PjrtEngine::new(model, design, dev, (3, 32, 32), 8)) as _)
+        },
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    )?;
+
+    const REQUESTS: usize = 512;
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            // deterministic synthetic "image"
+            let input: Vec<f32> =
+                (0..3 * 32 * 32).map(|j| ((i * 131 + j * 7) % 255) as f32 / 255.0 - 0.5).collect();
+            server.submit(input).unwrap()
+        })
+        .collect();
+    let mut predictions = vec![0usize; 10];
+    for rx in receivers {
+        let resp = rx.recv()??;
+        let argmax = resp
+            .output
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        predictions[argmax] += 1;
+    }
+    let wall = t0.elapsed();
+
+    let m = server.metrics();
+    println!(
+        "\n{REQUESTS} requests in {:.1} ms wall: {:.0} req/s, \
+         p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+        wall.as_secs_f64() * 1e3,
+        REQUESTS as f64 / wall.as_secs_f64(),
+        m.p50_ms,
+        m.p99_ms,
+        m.mean_batch
+    );
+    println!(
+        "simulated accelerator time: {:.2} ms total ({:.3} ms per batch)",
+        m.sim_accel_s * 1e3,
+        m.sim_accel_s * 1e3 / m.batches as f64
+    );
+    println!("prediction histogram (10 classes): {predictions:?}");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Multi-model serving under open-loop load: the deployment scenario.
+//!
+//! Two accelerator designs (toy CNN + SqueezeNet) are registered in the
+//! model registry, each with its own DSE schedule, batcher and admission
+//! cap. A deterministic Poisson load generator sweeps the offered rate and
+//! prints the latency-vs-load curve per model — the knee where the
+//! (simulated) accelerator saturates is the serving-side counterpart of the
+//! paper's throughput numbers.
+//!
+//! ```sh
+//! cargo run --release --example multi_model_serve
+//! ```
+
+use std::time::Duration;
+
+use autows::coordinator::{
+    run_open_loop, ArrivalSchedule, BatchPolicy, ModelEntry, ModelRegistry, Priority,
+    ServerOptions, SimOnlyEngine,
+};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+
+fn main() -> anyhow::Result<()> {
+    let dev = Device::zcu102();
+    let mut reg = ModelRegistry::new();
+
+    for (alias, model, q) in
+        [("toy-w8", "toy", Quant::W8A8), ("squeezenet-w8", "squeezenet", Quant::W8A8)]
+    {
+        let net = models::by_name(model, q).unwrap();
+        let r = dse::run(&net, &dev, &DseConfig::default())
+            .ok_or_else(|| anyhow::anyhow!("{model} infeasible on {}", dev.name))?;
+        println!(
+            "{alias}: θ={:.0} fps, {} streaming layers, mem {:.0}%",
+            r.throughput,
+            r.design.streaming_layers().len(),
+            r.area.mem_utilization(&dev) * 100.0
+        );
+        let (c, h, w) = net.input_shape;
+        let input_len = (c * h * w) as usize;
+        let engine = SimOnlyEngine {
+            design: r.design,
+            device: dev.clone(),
+            input_len,
+            output_len: 10,
+        };
+        reg.register(
+            ModelEntry {
+                name: alias.into(),
+                input_len,
+                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                options: ServerOptions { queue_cap: 256 },
+            },
+            move || Ok(Box::new(engine) as _),
+        )?;
+    }
+
+    println!("\nopen-loop latency vs offered load (64 Poisson arrivals per point):");
+    println!("model           offered(rps)  achieved  p50(ms)  p95(ms)  p99(ms)  rejected");
+    for alias in ["toy-w8", "squeezenet-w8"] {
+        let input_len = reg.entry(alias).unwrap().input_len;
+        for rate in [200.0, 1000.0, 5000.0] {
+            let schedule = ArrivalSchedule::poisson(64, rate, 42);
+            let res = run_open_loop(&schedule, || {
+                reg.submit(alias, vec![0.5; input_len], Priority::Normal)
+            });
+            println!(
+                "{alias:<15} {:>11.0} {:>9.0} {:>8.2} {:>8.2} {:>8.2} {:>9}",
+                res.offered_rps, res.achieved_rps, res.p50_ms, res.p95_ms, res.p99_ms, res.rejected
+            );
+        }
+    }
+
+    // per-model metrics are independent
+    for alias in ["toy-w8", "squeezenet-w8"] {
+        let m = reg.metrics(alias).unwrap();
+        println!(
+            "{alias}: served {} requests in {} batches (mean batch {:.1})",
+            m.requests, m.batches, m.mean_batch
+        );
+    }
+    reg.shutdown();
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: map a DNN onto an FPGA with AutoWS in ~20 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::schedule::BurstSchedule;
+use autows::sim::{simulate, SimConfig};
+
+fn main() {
+    // 1. pick a network and a target device
+    let network = models::resnet18(Quant::W4A5);
+    let device = Device::zcu102();
+    println!(
+        "{}: {:.1}M params, {:.1}G MACs -> {} ({:.1} MB on-chip, {:.0} Gbps)",
+        network.name,
+        network.stats().params as f64 / 1e6,
+        network.stats().macs as f64 / 1e9,
+        device.name,
+        device.mem_mbytes(),
+        device.bandwidth_gbps()
+    );
+
+    // 2. run the greedy DSE (paper Algorithm 1)
+    let result = dse::run(&network, &device, &DseConfig::default())
+        .expect("AutoWS always finds a feasible design when streaming is allowed");
+    println!(
+        "design: {:.1} fps, {:.2} ms latency, {} DSPs, {} BRAMs ({:.0}% of device memory)",
+        result.throughput,
+        result.latency_ms,
+        result.area.dsp,
+        result.area.bram.total(),
+        result.area.mem_utilization(&device) * 100.0
+    );
+
+    // 3. inspect the weight-streaming schedule (paper §IV-B)
+    let schedule = BurstSchedule::from_design(&result.design, &device, 1);
+    println!(
+        "streaming {} layers, write bursts balanced: {}, DMA utilization {:.0}%",
+        schedule.entries.len(),
+        schedule.balanced(),
+        schedule.dma_utilization() * 100.0
+    );
+
+    // 4. validate with the cycle-accurate simulator
+    let sim = simulate(&result.design, &device, &SimConfig::default());
+    println!(
+        "simulated: {:.2} ms ({} DMA events, {:.1} us stalled, DMA busy {:.0}%)",
+        sim.latency_ms,
+        sim.events,
+        sim.total_stall_s * 1e6,
+        sim.dma_busy_frac * 100.0
+    );
+}

@@ -1,0 +1,15 @@
+//! The paper's §V-C case study: ResNet18 on ZCU102 — regenerates Fig. 6
+//! (memory/performance trade-off), Table III (resource breakdown) and
+//! Fig. 7 (per-layer allocation) in one run.
+//!
+//! ```sh
+//! cargo run --release --example resnet18_zcu102
+//! ```
+
+use autows::report;
+
+fn main() {
+    println!("{}", report::fig6());
+    println!("{}", report::table3());
+    println!("{}", report::fig7());
+}

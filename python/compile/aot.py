@@ -1,0 +1,95 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Artifacts written:
+  toy_cnn_b1.hlo.txt / toy_cnn_b8.hlo.txt
+      quantized toy-CNN forward (weights baked as constants; input: image
+      batch) — the serving path's numerics.
+  stream_matmul.hlo.txt
+      the bare L1 kernel at (8,64)@(64,32), n_frags=4 — used by the Rust
+      runtime round-trip integration test.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model  # noqa: E402
+from compile.kernels import stream_matmul  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_toy_cnn(batch: int, seed: int = 0) -> str:
+    params = model.init_params(seed)
+
+    def fn(x):
+        return model.forward(params, x)
+
+    spec = jax.ShapeDtypeStruct((batch, *model.SPEC.input_shape), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_mobile_block(batch: int, seed: int = 0) -> str:
+    params = model.init_mobile_params(seed)
+
+    def fn(x):
+        return model.mobile_block_forward(params, x)
+
+    spec_shape = (batch, model.MOBILE_SPEC.c_in, model.MOBILE_SPEC.spatial,
+                  model.MOBILE_SPEC.spatial)
+    spec = jax.ShapeDtypeStruct(spec_shape, jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_stream_matmul(m=8, k=64, n=32, n_frags=4) -> str:
+    def fn(x, w):
+        return (stream_matmul(x, w, n_frags=n_frags),)
+
+    xs = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    ws = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(xs, ws))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = {
+        "toy_cnn_b1.hlo.txt": lambda: lower_toy_cnn(1, args.seed),
+        "toy_cnn_b8.hlo.txt": lambda: lower_toy_cnn(8, args.seed),
+        "stream_matmul.hlo.txt": lower_stream_matmul,
+        "mobile_block_b4.hlo.txt": lambda: lower_mobile_block(4, args.seed),
+    }
+    for name, build in artifacts.items():
+        path = os.path.join(args.out_dir, name)
+        text = build()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from .stream_matmul import stream_matmul, vmem_footprint_bytes  # noqa: F401
+from .depthwise import stream_depthwise  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernel: weight-streaming depthwise convolution.
+
+MobileNetV2's depthwise layers are the grouped-conv extreme (groups == C,
+paper §III-B generalization with ``c_per_group = 1``). The weight tensor is
+tiny per channel (k*k values) but the channel count is large, so AutoWS
+fragments it along the *channel* axis: each grid step stages one channel
+block's filters HBM->VMEM (the paper's off-chip fragment DMA) and convolves
+the matching channel slice of the input.
+
+Stride is implemented by computing the dense (stride-1) output and
+subsampling — keeps the kernel's inner loop a pure shift-and-MAC over the
+static k*k taps, the same structure as the FPGA CE's sliding window + PE
+array (paper Fig. 2).
+
+``interpret=True`` everywhere (see stream_matmul.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, k, stride, ho, wo):
+    """One grid step: depthwise-convolve one channel fragment.
+
+    x_ref: (B, C_blk, H_pad, W_pad)  padded input channel block
+    w_ref: (C_blk, k, k)             this block's filters (the DMA'd fragment)
+    o_ref: (B, C_blk, Ho, Wo)        output channel block
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    span_h = 1 + stride * (ho - 1)
+    span_w = 1 + stride * (wo - 1)
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    # static k*k tap loop — unrolled at trace time, like the CE's k_p unroll
+    for dh in range(k):
+        for dw in range(k):
+            sl = x[:, :, dh : dh + span_h : stride, dw : dw + span_w : stride]
+            acc += sl * w[:, dh, dw][None, :, None, None]
+    o_ref[...] = acc
+
+
+def stream_depthwise(x, w, *, stride=1, pad=0, n_frags=1):
+    """Depthwise conv with channel-fragmented weight streaming.
+
+    Args:
+      x: ``(B, C, H, W)`` activations.
+      w: ``(C, K, K)`` one filter per channel.
+      stride: spatial stride.
+      pad: symmetric zero padding.
+      n_frags: channel fragments ``n`` (paper Eq. 2). Must divide C.
+
+    Returns:
+      ``(B, C, Ho, Wo)`` float32 output.
+    """
+    b, c, h, wd = x.shape
+    c2, k, k2 = w.shape
+    if c != c2 or k != k2:
+        raise ValueError(f"filter shape mismatch: x {x.shape}, w {w.shape}")
+    if c % n_frags != 0:
+        raise ValueError(f"n_frags={n_frags} must divide C={c}")
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (wd + 2 * pad - k) // stride + 1
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty output map for input {x.shape}, k={k}, stride={stride}")
+    c_blk = c // n_frags
+
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    hp, wp = h + 2 * pad, wd + 2 * pad
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, stride=stride, ho=ho, wo=wo),
+        grid=(n_frags,),
+        in_specs=[
+            # input: the channel slice matching the current fragment
+            pl.BlockSpec((b, c_blk, hp, wp), lambda i: (0, i, 0, 0)),
+            # weights: fragment i staged HBM->VMEM (the DMA burst)
+            pl.BlockSpec((c_blk, k, k), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, c_blk, ho, wo), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, ho, wo), jnp.float32),
+        interpret=True,
+    )(xp, w.astype(jnp.float32))

@@ -1,0 +1,85 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+These are the ground truth the pytest suite checks everything against; they
+deliberately use only `jnp` primitives (no pallas, no custom calls).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x, w):
+    """Oracle for kernels.stream_matmul."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def ref_conv2d(x, w, stride=1, pad=0):
+    """NCHW direct convolution oracle (dense, groups=1).
+
+    Args:
+      x: (B, C, H, W) activations.
+      w: (F, C, K, K) filters.
+    """
+    lhs = x.astype(jnp.float32)
+    rhs = w.astype(jnp.float32)
+    import jax
+
+    return jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def fake_quant(x, bits, scale):
+    """Uniform symmetric fake-quantization to `bits` (f32 carrier):
+    round(clip(x/scale)) * scale on the signed integer grid."""
+    if bits >= 32:
+        return x
+    qmax = 2.0 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q * scale
+
+
+def ref_im2col(x, k, stride=1, pad=0):
+    """im2col for NCHW input: returns (B*Ho*Wo, C*k*k) patches."""
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    idx_h = jnp.arange(ho) * stride
+    idx_w = jnp.arange(wo) * stride
+    # gather k x k windows
+    patches = jnp.stack(
+        [
+            xp[:, :, idx_h[:, None] + dh, idx_w[None, :] + dw]
+            for dh in range(k)
+            for dw in range(k)
+        ],
+        axis=2,
+    )  # (B, C, k*k, Ho, Wo)
+    patches = patches.reshape(b, c * k * k, ho, wo)
+    patches = patches.transpose(0, 2, 3, 1).reshape(b * ho * wo, c * k * k)
+    return patches, ho, wo
+
+
+def ref_depthwise(x, w, stride=1, pad=0):
+    """Depthwise convolution oracle for kernels.stream_depthwise.
+
+    Args:
+      x: (B, C, H, W) activations.
+      w: (C, K, K) one filter per channel.
+    """
+    import jax
+
+    c = x.shape[1]
+    rhs = w[:, None, :, :].astype(jnp.float32)  # (C, 1, K, K) == OIHW, I=1
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        rhs,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    )

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: weight-streaming matmul.
+
+The TPU-idiom analogue of AutoWS's fragmented weights memory (paper Fig. 3):
+the weight matrix is partitioned along its reduction dimension into `n`
+fragments. The Pallas grid walks the fragment axis; at each step the
+`BlockSpec` stages one fragment HBM->VMEM (the paper's off-chip -> shared
+buffer DMA burst, double-buffered by the hardware against the previous
+step's MXU work, i.e. the clk_dma/clk_comp overlap) and accumulates its
+partial product into the resident output block (the paper's Read-After-Write
+ordering: a fragment's contribution lands only once its block is resident).
+
+DESIGN.md §Hardware-Adaptation documents the full FPGA->TPU mapping.
+
+Everything here runs with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT client cannot execute; interpret mode
+lowers to plain HLO so the AOT artifacts run anywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, n_frags):
+    """One grid step: accumulate x_frag @ w_frag into the output block."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped partial product; f32 accumulation.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def stream_matmul(x, w, *, n_frags=4):
+    """``x @ w`` with ``w`` streamed in ``n_frags`` fragments along K.
+
+    Args:
+      x: ``(M, K)`` activations (resident, the paper's on-chip stream).
+      w: ``(K, N)`` weights (streamed fragment-by-fragment).
+      n_frags: number of weight fragments ``n`` (paper Eq. 2). Must divide K.
+
+    Returns:
+      ``(M, N)`` float32 product, numerically equal (up to accumulation
+      order) to ``x @ w``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+    if k % n_frags != 0:
+        raise ValueError(f"n_frags={n_frags} must divide K={k}")
+    frag = k // n_frags
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_frags=n_frags),
+        grid=(n_frags,),
+        in_specs=[
+            # activations: the K-slice matching the current fragment
+            pl.BlockSpec((m, frag), lambda i: (0, i)),
+            # weights: fragment i staged HBM->VMEM (the DMA burst)
+            pl.BlockSpec((frag, n), lambda i: (i, 0)),
+        ],
+        # output block resident across all grid steps (accumulator)
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def vmem_footprint_bytes(m, k, n, n_frags, dtype_bytes=4):
+    """Estimated VMEM working set of one grid step (for the §Perf table):
+    x-slice + one weight fragment + the resident output block."""
+    frag = k // n_frags
+    return dtype_bytes * (m * frag + frag * n + m * n)

@@ -1,0 +1,212 @@
+"""Layer-2 JAX model: the quantized toy CNN served by the Rust coordinator.
+
+Architecture MUST mirror ``rust/src/models/toy.rs`` (`toy_cnn`): the Rust
+side derives the accelerator schedule from the same network the artifacts
+compute. Convolutions are lowered to im2col + the Layer-1 weight-streaming
+Pallas matmul kernel, so every conv's weight traffic follows the paper's
+fragment schedule. Weights and activations are fake-quantized to W8A8 on an
+f32 carrier — integer-exact arithmetic without integer dtypes, matching the
+bit-accurate behaviour of the FPGA datapath.
+
+Build-time only: `aot.py` lowers `forward` to HLO text once; Python never
+runs on the request path.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import stream_matmul
+from .kernels.ref import fake_quant, ref_im2col
+
+
+@dataclass(frozen=True)
+class ToyCnnSpec:
+    """Keep in sync with rust/src/models/toy.rs."""
+
+    input_shape: tuple = (3, 32, 32)
+    # (name, c_in, c_out, kernel, stride, pad)
+    convs: tuple = (
+        ("conv1", 3, 16, 3, 1, 1),
+        ("conv2", 16, 32, 3, 2, 1),
+        ("conv3", 32, 64, 3, 2, 1),
+    )
+    fc: tuple = ("fc", 64, 10)
+    w_bits: int = 8
+    a_bits: int = 8
+    # fragments for the streamed layers (paper Eq. 2 `n`); conv3 and fc are
+    # the "evicted" layers in the reference schedule.
+    n_frags: dict = None
+
+    def frags_for(self, name):
+        default = {"conv1": 1, "conv2": 1, "conv3": 4, "fc": 2}
+        table = self.n_frags or default
+        return table.get(name, 1)
+
+
+SPEC = ToyCnnSpec()
+
+
+def init_params(seed=0, spec=SPEC):
+    """He-init conv/fc weights, fake-quantized to the weight grid."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(spec.convs) + 1)
+    params = {}
+    for key, (name, c_in, c_out, k, _, _) in zip(keys[:-1], spec.convs):
+        fan_in = c_in * k * k
+        w = jax.random.normal(key, (c_out, c_in, k, k)) * (2.0 / fan_in) ** 0.5
+        params[name] = fake_quant(w, spec.w_bits, scale=1.0 / 64)
+    name, c_in, c_out = spec.fc
+    w = jax.random.normal(keys[-1], (c_in, c_out)) * (2.0 / c_in) ** 0.5
+    params[name] = fake_quant(w, spec.w_bits, scale=1.0 / 64)
+    return params
+
+
+def _quant_act(x, spec):
+    return fake_quant(x, spec.a_bits, scale=1.0 / 16)
+
+
+def conv2d_streamed(x, w, stride, pad, n_frags):
+    """Convolution as im2col + the L1 weight-streaming kernel.
+
+    The weight matrix (C*k*k, F) is fragmented along its reduction dim —
+    the same axis the paper fragments `M_dep` on (Eq. 1: depth = f_t c_t
+    k_t²).
+    """
+    f, c, k, _ = w.shape
+    patches, ho, wo = ref_im2col(x, k, stride, pad)
+    wmat = w.reshape(f, c * k * k).T  # (C*k*k, F)
+    depth = c * k * k
+    # fragments must divide the reduction depth; fall back to 1 otherwise
+    n = n_frags if depth % n_frags == 0 else 1
+    y = stream_matmul(patches, wmat, n_frags=n)  # (B*Ho*Wo, F)
+    b = x.shape[0]
+    return y.reshape(b, ho, wo, f).transpose(0, 3, 1, 2)
+
+
+def forward(params, x, spec=SPEC):
+    """Quantized forward pass: logits for a (B, 3, 32, 32) input batch."""
+    h = _quant_act(x, spec)
+    for name, _, _, k, stride, pad in spec.convs:
+        h = conv2d_streamed(h, params[name], stride, pad, spec.frags_for(name))
+        h = jax.nn.relu(h)
+        h = _quant_act(h, spec)
+    # global average pool
+    h = h.mean(axis=(2, 3))
+    # classifier (streamed matmul as well)
+    logits = stream_matmul(h, params[spec.fc[0]], n_frags=spec.frags_for(spec.fc[0]))
+    return (logits,)
+
+
+def forward_monolithic(params, x, spec=SPEC):
+    """Reference forward with plain (non-streamed) matmuls — the numerics
+    oracle proving the fragment schedule is value-preserving."""
+    h = _quant_act(x, spec)
+    for name, _, _, k, stride, pad in spec.convs:
+        w = params[name]
+        f, c, kk, _ = w.shape
+        patches, ho, wo = ref_im2col(h, kk, stride, pad)
+        y = patches @ w.reshape(f, c * kk * kk).T.astype(jnp.float32)
+        b = h.shape[0]
+        h = y.reshape(b, ho, wo, f).transpose(0, 3, 1, 2)
+        h = jax.nn.relu(h)
+        h = _quant_act(h, spec)
+    h = h.mean(axis=(2, 3))
+    return (h @ params[spec.fc[0]].astype(jnp.float32),)
+
+
+# --- MobileNetV2-style inverted-residual block -----------------------------
+#
+# The second L2 model: pointwise-expand -> depthwise -> pointwise-project
+# with a residual add, every weight tensor streamed through an L1 kernel
+# (matmuls fragment the reduction depth, the depthwise kernel fragments the
+# channel axis). Exercises the grouped-conv generalization of paper §III-B.
+
+
+@dataclass(frozen=True)
+class MobileBlockSpec:
+    """One inverted-residual block (stride 1 => residual connection)."""
+
+    c_in: int = 16
+    expand: int = 6
+    spatial: int = 14
+    w_bits: int = 8
+    a_bits: int = 8
+    # fragment counts for the three weight tensors
+    n_frags_expand: int = 2
+    n_frags_dw: int = 4
+    n_frags_project: int = 4
+
+    @property
+    def c_mid(self):
+        return self.c_in * self.expand
+
+
+MOBILE_SPEC = MobileBlockSpec()
+
+
+def init_mobile_params(seed=0, spec=MOBILE_SPEC):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    c, m = spec.c_in, spec.c_mid
+    params = {
+        # pointwise conv == matmul over channels: store as (C_in, C_mid)
+        "expand": fake_quant(
+            jax.random.normal(k1, (c, m)) * (2.0 / c) ** 0.5, spec.w_bits, 1.0 / 64
+        ),
+        "dw": fake_quant(
+            jax.random.normal(k2, (m, 3, 3)) * (2.0 / 9) ** 0.5, spec.w_bits, 1.0 / 64
+        ),
+        "project": fake_quant(
+            jax.random.normal(k3, (m, c)) * (2.0 / m) ** 0.5, spec.w_bits, 1.0 / 64
+        ),
+    }
+    return params
+
+
+def mobile_block_forward(params, x, spec=MOBILE_SPEC):
+    """Streamed inverted-residual block: (B, C, H, W) -> (B, C, H, W)."""
+    from .kernels import stream_depthwise
+
+    b, c, h, w = x.shape
+    xq = fake_quant(x, spec.a_bits, 1.0 / 16)
+
+    # pointwise expand: channels-last matmul via the streaming kernel
+    t = xq.transpose(0, 2, 3, 1).reshape(b * h * w, c)
+    t = stream_matmul(t, params["expand"], n_frags=spec.n_frags_expand)
+    t = jax.nn.relu6(t)
+    t = fake_quant(t, spec.a_bits, 1.0 / 16)
+    t = t.reshape(b, h, w, spec.c_mid).transpose(0, 3, 1, 2)
+
+    # depthwise 3x3, channel-fragmented streaming
+    t = stream_depthwise(t, params["dw"], stride=1, pad=1, n_frags=spec.n_frags_dw)
+    t = jax.nn.relu6(t)
+    t = fake_quant(t, spec.a_bits, 1.0 / 16)
+
+    # pointwise project (linear, no activation) + residual
+    t = t.transpose(0, 2, 3, 1).reshape(b * h * w, spec.c_mid)
+    t = stream_matmul(t, params["project"], n_frags=spec.n_frags_project)
+    t = t.reshape(b, h, w, c).transpose(0, 3, 1, 2)
+    return (xq + t,)
+
+
+def mobile_block_monolithic(params, x, spec=MOBILE_SPEC):
+    """Plain-jnp reference of the same block (no streaming kernels)."""
+    from .kernels.ref import ref_depthwise
+
+    b, c, h, w = x.shape
+    xq = fake_quant(x, spec.a_bits, 1.0 / 16)
+
+    t = xq.transpose(0, 2, 3, 1).reshape(b * h * w, c)
+    t = t @ params["expand"].astype(jnp.float32)
+    t = jax.nn.relu6(t)
+    t = fake_quant(t, spec.a_bits, 1.0 / 16)
+    t = t.reshape(b, h, w, spec.c_mid).transpose(0, 3, 1, 2)
+
+    t = ref_depthwise(t, params["dw"], stride=1, pad=1)
+    t = jax.nn.relu6(t)
+    t = fake_quant(t, spec.a_bits, 1.0 / 16)
+
+    t = t.transpose(0, 2, 3, 1).reshape(b * h * w, spec.c_mid)
+    t = t @ params["project"].astype(jnp.float32)
+    t = t.reshape(b, h, w, c).transpose(0, 3, 1, 2)
+    return (xq + t,)

@@ -1,0 +1,83 @@
+"""L2 model tests: shapes, quantization, and the streamed-vs-monolithic
+numerics equivalence that proves the weight-streaming schedule is
+value-preserving end-to-end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import fake_quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(seed=0)
+
+
+def test_forward_shapes(params):
+    x = jnp.zeros((2, 3, 32, 32))
+    (logits,) = model.forward(params, x)
+    assert logits.shape == (2, 10)
+
+
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_streamed_equals_monolithic(params, batch):
+    """The paper's core invariant, at full-model scope: running every conv
+    and the classifier through the fragment-streamed kernel produces the
+    same logits as plain matmuls."""
+    x = jax.random.normal(jax.random.PRNGKey(batch), (batch, 3, 32, 32))
+    (streamed,) = model.forward(params, x)
+    (mono,) = model.forward_monolithic(params, x)
+    np.testing.assert_allclose(streamed, mono, rtol=1e-5, atol=1e-4)
+
+
+def test_weights_are_on_quant_grid(params):
+    scale = 1.0 / 64
+    for name, w in params.items():
+        q = np.asarray(w) / scale
+        np.testing.assert_allclose(q, np.round(q), atol=1e-5, err_msg=name)
+
+
+def test_param_count_matches_rust_toy_cnn(params):
+    """rust/src/models/toy.rs asserts 24_112 parameters; the artifacts must
+    describe the same network."""
+    count = sum(int(np.prod(w.shape)) for w in params.values())
+    assert count == 432 + 4608 + 18432 + 640 == 24_112
+
+
+def test_forward_is_deterministic(params):
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 3, 32, 32))
+    (a,) = model.forward(params, x)
+    (b,) = model.forward(params, x)
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_logits_finite_for_random_inputs(seed):
+    params = model.init_params(seed=1)
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (1, 3, 32, 32), minval=-2, maxval=2)
+    (logits,) = model.forward(params, x)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_fake_quant_properties():
+    x = jnp.linspace(-3, 3, 101)
+    q = fake_quant(x, 8, scale=1.0 / 16)
+    # idempotent
+    np.testing.assert_allclose(fake_quant(q, 8, scale=1.0 / 16), q, atol=1e-7)
+    # bounded error
+    assert float(jnp.max(jnp.abs(q - jnp.clip(x, -8, 127 / 16)))) <= 1.0 / 32 + 1e-6
+    # 32-bit passthrough
+    np.testing.assert_array_equal(fake_quant(x, 32, 1.0), x)
+
+
+def test_quantization_grid_size():
+    x = jnp.linspace(-0.9, 0.9, 1001)
+    q = np.unique(np.asarray(fake_quant(x, 4, scale=0.1)))
+    assert len(q) <= 16, "4-bit grid has at most 16 levels"

@@ -1,0 +1,65 @@
+//! Ablation: pruning + encoding co-design sweep (the paper's §VI future
+//! work) — compression ratio, feasibility and throughput vs sparsity across
+//! encodings, on a memory-tight device.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::compress::{bits_per_weight, compress_network, CompressionSpec, Encoding};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+
+fn main() {
+    println!("=== Ablation: pruning + encoding co-design ===\n");
+    let net = models::resnet18(Quant::W8A8);
+    let dev = Device::zc706();
+    let cfg = DseConfig::default();
+
+    // encoding cost curves (pure model, no DSE)
+    println!("bits/weight at L_W=8:");
+    println!("sparsity   dense  bitmap     rle  entropy");
+    for s in [0.0, 0.25, 0.5, 0.75, 0.9] {
+        println!(
+            "{s:>8.2} {:>7.2} {:>7.2} {:>7.2} {:>8.2}",
+            bits_per_weight(8, s, Encoding::Dense),
+            bits_per_weight(8, s, Encoding::Bitmap),
+            bits_per_weight(8, s, Encoding::Rle),
+            bits_per_weight(8, s, Encoding::Entropy),
+        );
+    }
+
+    // co-design sweep: sparsity -> compression -> DSE
+    println!("\nsparsity  ratio  acc-proxy  AutoWS fps  latency(ms)");
+    let (_, rows) = harness::bench("ablation_compress/sweep-5pts", 3, || {
+        let mut rows = Vec::new();
+        for s in [0.0, 0.2, 0.4, 0.6, 0.8] {
+            let (cnet, rep) = compress_network(&net, &CompressionSpec::pruned(s));
+            let r = dse::run(&cnet, &dev, &cfg);
+            rows.push((
+                s,
+                rep.ratio(),
+                rep.accuracy_drop_proxy,
+                r.as_ref().map(|r| r.throughput),
+                r.as_ref().map(|r| r.latency_ms),
+            ));
+        }
+        rows
+    });
+    let mut last_fps = 0.0;
+    for (s, ratio, drop, fps, lat) in &rows {
+        let f = fps.unwrap_or(0.0);
+        println!(
+            "{s:>8.1} {ratio:>6.2} {drop:>8.1}pp {f:>11.1} {:>12.3}",
+            lat.unwrap_or(f64::NAN)
+        );
+        assert!(f >= last_fps * 0.99, "throughput must not regress with sparsity");
+        last_fps = f;
+    }
+    // the shape the co-design predicts: meaningful speedup by 80% sparsity
+    let first = rows.first().unwrap().3.unwrap();
+    let last = rows.last().unwrap().3.unwrap();
+    assert!(last > first * 1.5, "80% sparsity should speed up >1.5x: {first} -> {last}");
+    println!("\nablation_compress bench OK");
+}

@@ -1,0 +1,35 @@
+//! Performance benchmark of the DSE itself (the §Perf L3 target: a full
+//! ResNet50/U250 exploration in under one second).
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+
+fn main() {
+    println!("=== DSE performance (L3 hot path #1) ===\n");
+    let cases = [
+        ("toy/zcu102", models::toy_cnn(Quant::W8A8), Device::zcu102()),
+        ("resnet18/zcu102", models::resnet18(Quant::W4A5), Device::zcu102()),
+        ("resnet18/zedboard", models::resnet18(Quant::W4A5), Device::zedboard()),
+        ("resnet50/u250", models::resnet50(Quant::W8A8), Device::u250()),
+        ("resnet50/zcu102", models::resnet50(Quant::W4A5), Device::zcu102()),
+        ("mobilenetv2/zc706", models::mobilenet_v2(Quant::W4A4), Device::zc706()),
+        ("yolov5n/zcu102", models::yolov5n(Quant::W8A8), Device::zcu102()),
+    ];
+    let mut worst = std::time::Duration::ZERO;
+    for (name, net, dev) in cases {
+        let (stats, r) = harness::bench(&format!("dse/{name}"), 10, || {
+            dse::run(&net, &dev, &DseConfig::default())
+        });
+        if let Some(r) = &r {
+            println!("        -> θ={:.1} fps in {} iterations", r.throughput, r.iterations);
+        }
+        worst = worst.max(stats.median);
+    }
+    println!("\nworst-case median DSE time: {worst:?} (target: < 1 s)");
+    println!("dse_perf bench OK");
+}

@@ -1,0 +1,46 @@
+//! Ablation: the paper's greedy Algorithm 1 vs stochastic DSE baselines
+//! (random search, simulated annealing) — solution quality and search cost.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::device::Device;
+use autows::dse::{run_with_strategy, DseConfig, Strategy};
+use autows::ir::Quant;
+use autows::models;
+
+fn main() {
+    println!("=== Ablation: DSE strategy comparison ===\n");
+    let cfg = DseConfig::default();
+
+    for (model, q, dev) in [
+        ("toy", Quant::W8A8, Device::zcu102()),
+        ("resnet18", Quant::W4A5, Device::zcu102()),
+    ] {
+        let net = models::by_name(model, q).unwrap();
+        println!("--- {model}-{q} on {} ---", dev.name);
+        let mut rows = Vec::new();
+        for (label, strat, iters) in [
+            ("greedy(Alg.1)", Strategy::Greedy, 5usize),
+            ("random-50", Strategy::Random { samples: 50, seed: 7 }, 3),
+            ("random-200", Strategy::Random { samples: 200, seed: 7 }, 2),
+            ("anneal-500", Strategy::Anneal { iters: 500, t0: 0.5, seed: 7 }, 2),
+            ("anneal-2000", Strategy::Anneal { iters: 2000, t0: 0.5, seed: 7 }, 2),
+        ] {
+            let name = format!("dse_strategies/{model}/{label}");
+            let (_, result) =
+                harness::bench(&name, iters, || run_with_strategy(&net, &dev, &cfg, strat));
+            if let Some(r) = result {
+                rows.push((label, r.throughput, r.latency_ms));
+            }
+        }
+        println!("\nstrategy         fps        latency(ms)");
+        for (label, fps, lat) in &rows {
+            println!("{label:<14} {fps:>9.1} {lat:>12.3}");
+        }
+        // sanity: every strategy found a feasible design
+        assert!(rows.len() >= 4, "all strategies should find feasible designs");
+        println!();
+    }
+    println!("dse_strategies bench OK");
+}

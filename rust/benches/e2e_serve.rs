@@ -1,0 +1,70 @@
+//! End-to-end serving benchmark: PJRT numerics + coordinator batching,
+//! reporting request throughput and latency percentiles (the e2e driver of
+//! DESIGN.md's experiment index).
+//!
+//! Skips gracefully when `make artifacts` has not been run.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use autows::coordinator::{BatchPolicy, PjrtEngine, Server};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::runtime::Runtime;
+
+fn main() {
+    let artifact = format!("{}/artifacts/toy_cnn_b8.hlo.txt", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&artifact).exists() {
+        println!("SKIP e2e_serve: {artifact} missing — run `make artifacts`");
+        return;
+    }
+
+    println!("=== End-to-end serving (toy CNN, PJRT + AutoWS schedule) ===\n");
+    let net = models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let design = dse::run(&net, &dev, &DseConfig::default()).unwrap().design;
+
+    let server = Server::start_with(
+        move || {
+            let rt = Runtime::cpu()?;
+            let model = rt.load_hlo_text(&artifact)?;
+            Ok(Box::new(PjrtEngine::new(model, design, dev, (3, 32, 32), 8)) as _)
+        },
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+    )
+    .expect("engine boot");
+
+    const REQUESTS: usize = 256;
+    let (stats, ()) = harness::bench("e2e/serve-256-requests", 5, || {
+        let receivers: Vec<_> = (0..REQUESTS)
+            .map(|i| {
+                let input: Vec<f32> =
+                    (0..3 * 32 * 32).map(|j| ((i * 31 + j) % 255) as f32 / 255.0).collect();
+                server.submit(input).unwrap()
+            })
+            .collect();
+        for rx in receivers {
+            rx.recv().unwrap().unwrap();
+        }
+    });
+
+    let m = server.metrics();
+    println!(
+        "\n{} requests total: throughput {:.0} req/s (wall {:.1} ms/round), \
+         p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}, simulated accel {:.1} ms",
+        m.requests,
+        REQUESTS as f64 / stats.median.as_secs_f64(),
+        stats.median.as_secs_f64() * 1e3,
+        m.p50_ms,
+        m.p99_ms,
+        m.mean_batch,
+        m.sim_accel_s * 1e3
+    );
+    assert!(m.mean_batch > 1.5, "batching must engage under load");
+    server.shutdown();
+    println!("e2e_serve bench OK");
+}

@@ -1,0 +1,27 @@
+//! Regenerates paper Fig. 5 (two-layer DMA write/read scheduling,
+//! imbalanced vs balanced burst numbers) and times the simulations.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::sim::{fig5_scenario, simulate, SimConfig};
+
+fn main() {
+    println!("=== Fig. 5: DMA scheduling, imbalanced vs balanced ===\n");
+    let cfg = SimConfig { batch: 8, ..Default::default() };
+
+    let (_, stall_imb) = harness::bench("fig5/imbalanced", 50, || {
+        let (d, dev) = fig5_scenario(false);
+        simulate(&d, &dev, &cfg).total_stall_s
+    });
+    let (_, stall_bal) = harness::bench("fig5/balanced", 50, || {
+        let (d, dev) = fig5_scenario(true);
+        simulate(&d, &dev, &cfg).total_stall_s
+    });
+
+    println!("\nimbalanced (a): total stalls {:.2} us", stall_imb * 1e6);
+    println!("balanced   (b): total stalls {:.2} us", stall_bal * 1e6);
+    println!("\n{}", autows::report::fig5());
+    assert!(stall_bal < stall_imb, "write burst balancing must remove stalls");
+    println!("fig5 bench OK");
+}

@@ -1,0 +1,39 @@
+//! Regenerates paper Fig. 6 (resnet18-ZCU102 memory/performance trade-off)
+//! and times the per-point DSE.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::device::Device;
+use autows::dse::mem_sweep;
+use autows::ir::Quant;
+use autows::models;
+
+fn main() {
+    println!("=== Fig. 6: resnet18-ZCU102 A_mem sweep ===\n");
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+
+    // time one representative point
+    harness::bench("fig6/one-point", 5, || mem_sweep(&net, &dev, &[1.0]));
+
+    // full sweep (printed as the figure's series)
+    let scales: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
+    let (_, pts) = harness::bench("fig6/full-sweep-19pts", 2, || mem_sweep(&net, &dev, &scales));
+
+    println!("\nA_mem   AutoWS fps   vanilla fps   off-chip%");
+    for p in &pts {
+        let fmt = |v: Option<f64>| v.map_or("     X".into(), |x| format!("{x:>6.1}"));
+        println!(
+            "{:>5.2}   {:>10}   {:>11}   {:>6.1}",
+            p.mem_scale,
+            fmt(p.autows_fps),
+            fmt(p.vanilla_fps),
+            p.autows_offchip_frac * 100.0
+        );
+    }
+    // the figure's regions
+    assert!(pts.first().unwrap().vanilla_fps.is_none(), "region 1: vanilla infeasible");
+    assert!(pts.iter().any(|p| p.vanilla_fps.is_some()), "region 2/3: vanilla appears");
+    println!("\nfig6 bench OK");
+}

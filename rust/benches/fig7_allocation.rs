@@ -1,0 +1,31 @@
+//! Regenerates paper Fig. 7 (resnet18-ZCU102 per-layer on/off-chip weight
+//! allocation with the ΔB criterion) and times the DSE design point.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::report;
+
+fn main() {
+    println!("=== Fig. 7: per-layer weight allocation (design d1) ===\n");
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let (_, result) =
+        harness::bench("fig7/dse-design-point", 5, || dse::run(&net, &dev, &DseConfig::default()));
+    let r = result.expect("resnet18 fits zcu102 with streaming");
+
+    println!("\n{}", report::fig7());
+
+    let streaming = r.design.streaming_layers();
+    println!(
+        "{} of {} weight layers partially off-chip (paper: 5 of 21)",
+        streaming.len(),
+        net.weight_layers().len()
+    );
+    assert!(!streaming.is_empty());
+    println!("fig7 bench OK");
+}

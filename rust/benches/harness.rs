@@ -1,0 +1,56 @@
+//! Minimal self-contained benchmark harness (criterion is unavailable in
+//! this offline build; the statistics mirror its headline output).
+//!
+//! Used by every bench target via `#[path = "harness.rs"] mod harness;`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: per-iteration timing statistics.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} iters={:<4} mean={:>12?} median={:>12?} min={:>12?} max={:>12?}",
+            self.name, self.iters, self.mean, self.median, self.min, self.max
+        );
+    }
+}
+
+/// Run `f` repeatedly: a warm-up pass, then up to `max_iters` timed passes
+/// or ~2 s of wall-clock, whichever comes first. Returns the value of the
+/// last call so the caller can print/verify the regenerated table.
+pub fn bench<T>(name: &str, max_iters: usize, mut f: impl FnMut() -> T) -> (BenchStats, T) {
+    let mut out = f(); // warm-up
+    let mut samples = Vec::with_capacity(max_iters);
+    let budget = Duration::from_secs(2);
+    let start = Instant::now();
+    for _ in 0..max_iters.max(1) {
+        let t0 = Instant::now();
+        out = f();
+        samples.push(t0.elapsed());
+        if start.elapsed() > budget && samples.len() >= 3 {
+            break;
+        }
+    }
+    samples.sort();
+    let sum: Duration = samples.iter().sum();
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: sum / samples.len() as u32,
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    };
+    stats.print();
+    (stats, out)
+}

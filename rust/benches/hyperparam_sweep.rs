@@ -1,0 +1,47 @@
+//! Ablation: DSE hyperparameters φ (unroll step) and μ (eviction block
+//! depth) — the §IV-A exploration-time vs solution-quality trade-off.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::device::Device;
+use autows::dse::phi_mu_sweep;
+use autows::ir::Quant;
+use autows::models;
+
+fn main() {
+    println!("=== Ablation: φ/μ hyperparameter sweep (resnet18-ZCU102) ===\n");
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+
+    let phis = [1u32, 2, 4, 8];
+    let mus = [128u64, 512, 2048];
+    let (_, pts) =
+        harness::bench("hyperparam/phi-mu-grid-12pts", 2, || phi_mu_sweep(&net, &dev, &phis, &mus));
+
+    println!("\n  φ     μ   iterations      fps   latency(ms)");
+    for p in &pts {
+        println!(
+            "{:>3} {:>5} {:>12} {:>8.1} {:>12.3}",
+            p.phi, p.mu, p.iterations, p.throughput, p.latency_ms
+        );
+    }
+
+    // the paper's claim: larger step sizes explore faster (fewer
+    // iterations) at equal or lower solution quality
+    let fine = pts.iter().find(|p| p.phi == 1 && p.mu == 512).unwrap();
+    let coarse = pts.iter().find(|p| p.phi == 8 && p.mu == 512).unwrap();
+    assert!(
+        coarse.iterations <= fine.iterations,
+        "coarse φ must explore fewer iterations: {} vs {}",
+        coarse.iterations,
+        fine.iterations
+    );
+    assert!(
+        fine.throughput >= coarse.throughput * 0.95,
+        "fine φ must not lose quality: {} vs {}",
+        fine.throughput,
+        coarse.throughput
+    );
+    println!("\nhyperparam_sweep bench OK");
+}

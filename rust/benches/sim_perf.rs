@@ -1,0 +1,31 @@
+//! Performance benchmark of the event simulator (the §Perf L3 target:
+//! >= 10M fragment-iteration events per second).
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::sim::{simulate, SimConfig};
+
+fn main() {
+    println!("=== Simulator performance (L3 hot path #2) ===\n");
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let design = dse::run(&net, &dev, &DseConfig::default()).unwrap().design;
+
+    let mut rate = 0.0;
+    for batch in [1u64, 8, 64] {
+        let cfg = SimConfig { batch, ..Default::default() };
+        let (stats, events) =
+            harness::bench(&format!("sim/resnet18-zcu102-b{batch}"), 30, || {
+                simulate(&design, &dev, &cfg).events
+            });
+        rate = events as f64 / stats.median.as_secs_f64();
+        println!("        -> {events} events, {:.2} M events/s", rate / 1e6);
+    }
+    println!("\nlast rate: {:.2} M events/s (target: >= 10 M/s)", rate / 1e6);
+    println!("sim_perf bench OK");
+}

@@ -1,0 +1,39 @@
+//! Regenerates paper Table II (latency across networks/devices/architectures)
+//! and times each cell's full pipeline: DSE + burst schedule + simulation.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::ir::Quant;
+use autows::report;
+
+fn main() {
+    println!("=== Table II: latency across networks and devices ===\n");
+    let mut cells = Vec::new();
+    for (net, dev, q) in report::table2_grid() {
+        let label = format!("table2/{net}-{dev}-{}", q.label());
+        let (_, cell) = harness::bench(&label, 5, || report::table2_cell(net, dev, q));
+        cells.push(cell);
+    }
+    println!("\nnetwork       device    quant   layer-seq   vanilla    AutoWS");
+    for c in &cells {
+        let fmt = |v: Option<f64>| v.map_or("X".into(), |x| format!("{x:.1}"));
+        println!(
+            "{:<12} {:<9} {:<7} {:>9.1} {:>9} {:>9}",
+            c.network,
+            c.device,
+            c.quant,
+            c.sequential_ms,
+            fmt(c.vanilla_ms),
+            fmt(c.autows_ms)
+        );
+    }
+    // paper-shape assertions (same checks as the test suite, kept here so a
+    // bench run also validates the regenerated table)
+    let get = |n: &str, d: &str| cells.iter().find(|c| c.network == n && c.device == d).unwrap();
+    assert!(get("resnet18", "zcu102").autows_ms.unwrap() < get("resnet18", "zcu102").sequential_ms);
+    assert!(get("resnet50", "u50").autows_ms.unwrap() < get("resnet50", "u50").sequential_ms);
+    assert!(get("mobilenetv2", "zedboard").vanilla_ms.is_none());
+    let _ = Quant::W4A4;
+    println!("\ntable2 bench OK");
+}

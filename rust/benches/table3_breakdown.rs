@@ -1,0 +1,16 @@
+//! Regenerates paper Table III (resnet18-ZCU102 memory resource breakdown)
+//! and times the two design-point DSE runs.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::report;
+
+fn main() {
+    println!("=== Table III: resnet18-ZCU102 memory breakdown ===\n");
+    let (_, table) = harness::bench("table3/breakdown", 5, report::table3);
+    println!("\n{table}");
+    // the headline claim: AutoWS fits in 100% while vanilla needs >100%
+    assert!(table.contains("%"));
+    println!("table3 bench OK");
+}

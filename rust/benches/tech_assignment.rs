@@ -1,0 +1,72 @@
+//! Ablation: memory technology assignment (URAM / LUTRAM / FINN-style
+//! overclocking) vs the all-BRAM baseline, across the paper's device grid.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::ce::{assign_memory_tech, TechOptions};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+
+fn main() {
+    println!("=== Ablation: memory technology assignment ===\n");
+
+    println!("network      device   baseBRAM  BRAM  URAM  +LUTs");
+    for (model, q, dev) in [
+        ("resnet18", Quant::W4A5, Device::zcu102()),
+        ("resnet50", Quant::W8A8, Device::u50()),
+        ("resnet50", Quant::W8A8, Device::u250()),
+        ("mobilenetv2", Quant::W4A4, Device::zc706()),
+    ] {
+        let net = models::by_name(model, q).unwrap();
+        let Some(r) = dse::run(&net, &dev, &DseConfig::default()) else {
+            println!("{model:<12} {:<8} INFEASIBLE", dev.name);
+            continue;
+        };
+        let name = format!("tech_assignment/{model}-{}", dev.name);
+        let (_, plan) = harness::bench(&name, 10, || {
+            assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev))
+        });
+        println!(
+            "{model:<12} {:<8} {:>8} {:>5} {:>5} {:>6}",
+            dev.name, plan.baseline_bram, plan.bram, plan.uram, plan.extra_luts
+        );
+        // invariants: never exceed pools, never cost extra BRAM
+        assert!(plan.bram <= plan.baseline_bram);
+        assert!(plan.uram <= dev.uram);
+        if dev.uram == 0 {
+            assert_eq!(plan.uram, 0);
+        }
+    }
+
+    // ablation: each option disabled in turn, on the U50 (URAM-rich) case
+    let net = models::resnet50(Quant::W8A8);
+    let dev = Device::u50();
+    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    println!("\nU50 option ablation (resnet50-W8A8):");
+    for (label, opts) in [
+        ("all options", TechOptions::for_device(&dev)),
+        ("no URAM", TechOptions { use_uram: false, ..TechOptions::for_device(&dev) }),
+        ("no LUTRAM", TechOptions { use_lutram: false, ..TechOptions::for_device(&dev) }),
+        (
+            "no overclock",
+            TechOptions { max_overclock: 1, ..TechOptions::for_device(&dev) },
+        ),
+        (
+            "BRAM only",
+            TechOptions { use_uram: false, use_lutram: false, max_overclock: 1, ..Default::default() },
+        ),
+    ] {
+        let plan = assign_memory_tech(&r.design, &dev, &opts);
+        println!(
+            "  {label:<14} BRAM {:>5}  URAM {:>4}  +LUTs {:>6}",
+            plan.bram, plan.uram, plan.extra_luts
+        );
+        if label == "BRAM only" {
+            assert_eq!(plan.bram, plan.baseline_bram);
+        }
+    }
+    println!("\ntech_assignment bench OK");
+}

@@ -1,0 +1,38 @@
+//! Regenerates paper §V-D (YOLOv5n-COCO on ZCU102: AutoWS vs Vitis AI vs
+//! vanilla layer-pipelined) and times the full evaluation.
+
+#[path = "harness.rs"]
+mod harness;
+
+use autows::baseline::{self, sequential_latency_ms};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::sim::{simulate, SimConfig};
+
+fn main() {
+    println!("=== §V-D: YOLOv5n object detection on ZCU102 ===\n");
+    let net = models::yolov5n(Quant::W8A8);
+    let dev = Device::zcu102();
+
+    let (_, seq) = harness::bench("yolo/sequential", 20, || sequential_latency_ms(&net, &dev));
+    let (_, autows) = harness::bench("yolo/autows-dse+sim", 5, || {
+        dse::run(&net, &dev, &DseConfig::default())
+            .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms)
+    });
+    let (_, vanilla) = harness::bench("yolo/vanilla-dse+sim", 5, || {
+        baseline::vanilla(&net, &dev)
+            .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms)
+    });
+
+    let a = autows.expect("autows feasible");
+    println!("\nlayer-sequential (Vitis-AI-like): {seq:.1} ms   (paper: 13.7)");
+    match vanilla {
+        Some(v) => println!("vanilla layer-pipelined:          {v:.1} ms   (paper: 9.5)"),
+        None => println!("vanilla layer-pipelined:          X"),
+    }
+    println!("AutoWS (this work):               {a:.1} ms   (paper: 8.7)");
+    assert!(a < seq, "AutoWS must beat the sequential baseline");
+    println!("\nyolo bench OK");
+}

@@ -1,0 +1,36 @@
+//! Comparison architectures of paper Table II.
+//!
+//! - [`vanilla`]: the "vanilla layer-pipelined" baseline — fpgaConvNet-style
+//!   designs with all weights on-chip (infeasible when they do not fit).
+//! - [`sequential`]: the "layer-sequential" baseline — a single
+//!   time-multiplexed compute engine (Vitis-AI-DPU-like) with all weights
+//!   and activations off-chip, tiled and double-buffered.
+
+pub mod sequential;
+
+pub use sequential::{sequential_latency_ms, SequentialModel, SequentialResult};
+
+use crate::device::Device;
+use crate::dse::{self, DseConfig, DseResult};
+use crate::ir::Network;
+
+/// Run the vanilla layer-pipelined baseline: Algorithm 1 with eviction
+/// disabled. `None` == the "X" cells of Table II.
+pub fn vanilla(network: &Network, device: &Device) -> Option<DseResult> {
+    dse::run(network, device, &DseConfig::vanilla())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn vanilla_is_dse_without_streaming() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let r = vanilla(&net, &dev).unwrap();
+        assert!(!r.design.any_streaming());
+    }
+}

@@ -1,0 +1,156 @@
+//! Layer-sequential baseline — a single Compute Engine executing the
+//! network layer by layer with time multiplexing (paper §I, §II; the
+//! Vitis AI / DnnWeaver / Angel-Eye architecture class).
+//!
+//! Both weights and activations live off-chip; tiling plus double buffering
+//! overlap data movement with compute, so each layer costs
+//! `max(compute, transfer)` plus a fixed per-layer dispatch overhead.
+
+use crate::device::Device;
+use crate::ir::{Network, Quant};
+
+/// Calibration constants for the sequential engine.
+#[derive(Debug, Clone, Copy)]
+pub struct SequentialModel {
+    /// Fraction of the device's DSPs provisioned for the engine's MAC array
+    /// (general-purpose overlays never claim the full fabric).
+    pub dsp_share: f64,
+    /// Average utilization of the MAC array across layer shapes (tiling
+    /// edge effects, depthwise under-utilization, ...).
+    pub mac_utilization: f64,
+    /// Fraction of peak off-chip bandwidth sustained in practice.
+    pub bandwidth_eff: f64,
+    /// Per-layer dispatch/configuration overhead in microseconds.
+    pub dispatch_us: f64,
+}
+
+impl Default for SequentialModel {
+    fn default() -> Self {
+        SequentialModel {
+            dsp_share: 0.5,
+            mac_utilization: 1.0, // folded into quant_efficiency
+            bandwidth_eff: 0.7,
+            dispatch_us: 15.0,
+        }
+    }
+}
+
+/// Average MAC-array efficiency of the engine class cited for each quant
+/// level in paper Table II: the W4 designs ([11] Mix&Match, [12] FILM-QNN)
+/// are academic bit-level accelerators running well below the DSP roofline,
+/// while the W8 figures come from the production Vitis AI DPU [1].
+/// Calibrated so the layer-sequential column of Table II lands on the cited
+/// numbers (see EXPERIMENTS.md).
+fn quant_efficiency(q: Quant) -> f64 {
+    let m = q.w_bits.max(q.a_bits);
+    match m {
+        0..=5 => 0.125,
+        6..=8 => 0.35,
+        _ => 0.30,
+    }
+}
+
+/// MACs per DSP slice per cycle for a quantization: DSP48 packing of
+/// narrow multiplies (the inverse of the area model's `dsp_per_mac`).
+pub fn macs_per_dsp(q: Quant) -> f64 {
+    let m = q.w_bits.max(q.a_bits);
+    match m {
+        0..=5 => 4.0,
+        6..=8 => 2.0,
+        9..=18 => 1.0,
+        _ => 0.2,
+    }
+}
+
+/// Per-layer and total latency of the sequential baseline.
+#[derive(Debug, Clone)]
+pub struct SequentialResult {
+    pub latency_ms: f64,
+    /// Per-layer (compute_ms, transfer_ms) breakdown.
+    pub per_layer: Vec<(f64, f64)>,
+    /// Fraction of layers that were compute-bound.
+    pub compute_bound_frac: f64,
+}
+
+/// Evaluate the sequential baseline for `network` on `device`.
+pub fn sequential(network: &Network, device: &Device, model: &SequentialModel) -> SequentialResult {
+    let clk = device.clk_comp_mhz * 1e6;
+    let bw = device.bandwidth_bps * model.bandwidth_eff;
+
+    let mut per_layer = Vec::with_capacity(network.layers.len());
+    let mut total_s = 0.0;
+    let mut compute_bound = 0usize;
+
+    for l in &network.layers {
+        let macs_per_cycle = device.dsp as f64
+            * model.dsp_share
+            * macs_per_dsp(l.quant)
+            * model.mac_utilization
+            * quant_efficiency(l.quant);
+        let compute_s = l.macs() as f64 / (macs_per_cycle * clk);
+        let bits = l.weight_bits()
+            + l.input_count() * l.quant.a_bits as u64
+            + l.output_count() * l.quant.a_bits as u64;
+        let transfer_s = bits as f64 / bw;
+        // double buffering: compute and transfer overlap
+        let layer_s = compute_s.max(transfer_s) + model.dispatch_us * 1e-6;
+        per_layer.push((compute_s * 1e3, transfer_s * 1e3));
+        if compute_s >= transfer_s {
+            compute_bound += 1;
+        }
+        total_s += layer_s;
+    }
+
+    SequentialResult {
+        latency_ms: total_s * 1e3,
+        compute_bound_frac: compute_bound as f64 / network.layers.len().max(1) as f64,
+        per_layer,
+    }
+}
+
+/// Convenience: just the latency.
+pub fn sequential_latency_ms(network: &Network, device: &Device) -> f64 {
+    sequential(network, device, &SequentialModel::default()).latency_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn sequential_always_feasible() {
+        // the architecture's defining property: works on any device
+        for dev in Device::all() {
+            let net = models::resnet50(Quant::W8A8);
+            let r = sequential(&net, &dev, &SequentialModel::default());
+            assert!(r.latency_ms.is_finite() && r.latency_ms > 0.0, "{}", dev.name);
+        }
+    }
+
+    #[test]
+    fn bigger_device_is_faster() {
+        let net = models::resnet18(Quant::W4A4);
+        let small = sequential_latency_ms(&net, &Device::zedboard());
+        let large = sequential_latency_ms(&net, &Device::u250());
+        assert!(large < small / 5.0, "zedboard {small} vs u250 {large}");
+    }
+
+    #[test]
+    fn quant_efficiency_reflects_cited_engine_classes() {
+        // Calibration check against the cited numbers: resnet18-W4A4 on
+        // ZC706 is ~40 ms in [11]; resnet18-W8A8 on U50 is ~3.0 ms in [1].
+        let zc706 = sequential_latency_ms(&models::resnet18(Quant::W4A4), &Device::zc706());
+        assert!((25.0..60.0).contains(&zc706), "{zc706}");
+        let u50 = sequential_latency_ms(&models::resnet18(Quant::W8A8), &Device::u50());
+        assert!((1.5..5.0).contains(&u50), "{u50}");
+    }
+
+    #[test]
+    fn zedboard_mobilenet_order_of_magnitude() {
+        // paper Table II cites 8.3 ms (W4A4 [11]); our substrate should land
+        // in the same decade.
+        let ms = sequential_latency_ms(&models::mobilenet_v2(Quant::W4A4), &Device::zedboard());
+        assert!((5.0..80.0).contains(&ms), "{ms} ms");
+    }
+}

@@ -1,0 +1,55 @@
+//! Off-chip bandwidth model `β(V)` — paper Eq. 5.
+
+use super::memory::Fragmentation;
+
+/// Average off-chip bandwidth required by one CE in bits/second:
+///
+/// ```text
+/// β(V) = M_wid · clk_comp · u_off / (u_on + u_off)
+/// ```
+///
+/// The product of the first two terms is the PE array's weight-word consume
+/// rate in bits/s; the scaling term is the fraction of those words that must
+/// come from off-chip. The dual-port shared buffer lets the DMA write while
+/// the PEs read either region, so the *average* rate is what matters
+/// (paper §III-C); the burst-level schedule is handled in
+/// [`crate::schedule`].
+pub fn beta_bps(m_wid_bits: u64, clk_comp_mhz: f64, frag: &Fragmentation) -> f64 {
+    m_wid_bits as f64 * clk_comp_mhz * 1e6 * frag.off_chip_ratio()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_on_chip_needs_no_bandwidth() {
+        let f = Fragmentation::all_on_chip(4096);
+        assert_eq!(beta_bps(64, 200.0, &f), 0.0);
+    }
+
+    #[test]
+    fn all_off_chip_needs_full_word_rate() {
+        let f = Fragmentation::new(4096, 4096, 4);
+        let b = beta_bps(64, 200.0, &f);
+        assert!((b - 64.0 * 200e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn eq5_half_streamed() {
+        let f = Fragmentation::new(1024, 512, 2);
+        let b = beta_bps(32, 100.0, &f);
+        assert!((b - 32.0 * 100e6 * 0.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn bandwidth_monotone_in_offchip_share() {
+        let mut last = -1.0;
+        for off in [0u64, 128, 256, 512, 768, 1024] {
+            let f = Fragmentation::new(1024, off, 4);
+            let b = beta_bps(48, 250.0, &f);
+            assert!(b >= last, "β must be monotone in evicted share");
+            last = b;
+        }
+    }
+}

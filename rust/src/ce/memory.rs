@@ -1,0 +1,166 @@
+//! Weights-memory fragmentation — paper §III-B, Fig. 3, Eq. 1–2.
+
+use crate::ir::Layer;
+
+/// Required weights-memory depth in words — paper Eq. 1:
+/// `M_dep = f_t · c_t · k_t²` where `f_t = f/f_p`, `c_t = c/c_p`,
+/// `k_t² = k²/k_p` (we fold the paper's `k_p²` into the single factor `kp`
+/// unrolling over kernel positions).
+pub fn m_dep(layer: &Layer, kp: u32, cp: u32, fp: u32) -> u64 {
+    if !layer.has_weights() {
+        return 0;
+    }
+    let k2 = (layer.kernel() as u64).pow(2);
+    let f_t = (layer.c_out as u64).div_ceil(fp as u64);
+    let c_t = (layer.c_per_group() as u64).div_ceil(cp as u64);
+    let k_t = k2.div_ceil(kp as u64);
+    f_t * c_t * k_t
+}
+
+/// Memory word width in bits — paper Eq. 1: `M_wid = f_p · c_p · k_p² · L_W`.
+pub fn m_wid_bits(layer: &Layer, kp: u32, cp: u32, fp: u32) -> u64 {
+    if !layer.has_weights() {
+        return 0;
+    }
+    kp as u64 * cp as u64 * fp as u64 * layer.quant.w_bits as u64
+}
+
+/// Fragmentation of the weights memory into `n` static/dynamic fragment
+/// pairs (paper Fig. 3, Eq. 2):
+///
+/// ```text
+/// M_on_dep  = u_on  · n      (static, stays on-chip)
+/// M_off_dep = u_off · n      (dynamic, streamed through the shared buffer)
+/// M_dep     = M_on_dep + M_off_dep
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fragmentation {
+    /// Number of fragment pairs `n` (≥ 1 for weight layers).
+    pub n: u32,
+    /// Words per on-chip fragment `u_on`.
+    pub u_on: u64,
+    /// Words per off-chip fragment `u_off`.
+    pub u_off: u64,
+}
+
+impl Fragmentation {
+    /// Everything static on-chip: one fragment, `u_off = 0`.
+    pub fn all_on_chip(m_dep: u64) -> Fragmentation {
+        Fragmentation { n: 1, u_on: m_dep, u_off: 0 }
+    }
+
+    /// Build a fragmentation covering `m_dep` total words with `m_off` of
+    /// them dynamic, split over `n` fragments. Per-fragment depths are
+    /// rounded up so that `n · (u_on + u_off) ≥ m_dep` always holds (the
+    /// pad words are dead addresses the counters skip over).
+    pub fn new(m_dep: u64, m_off: u64, n: u32) -> Fragmentation {
+        assert!(n >= 1, "fragment count must be >= 1");
+        let m_off = m_off.min(m_dep);
+        let u = m_dep.div_ceil(n as u64); // total depth per fragment pair
+        let u_off = m_off.div_ceil(n as u64).min(u);
+        Fragmentation { n, u_on: u - u_off, u_off }
+    }
+
+    /// `M_on_dep = u_on · n`.
+    pub fn m_on_dep(&self) -> u64 {
+        self.u_on * self.n as u64
+    }
+
+    /// `M_off_dep = u_off · n`.
+    pub fn m_off_dep(&self) -> u64 {
+        self.u_off * self.n as u64
+    }
+
+    /// `M_dep = M_on_dep + M_off_dep`.
+    pub fn m_dep(&self) -> u64 {
+        self.m_on_dep() + self.m_off_dep()
+    }
+
+    /// Fraction of the weight words that are dynamic (streamed), the
+    /// `u_off / (u_on + u_off)` scaling term of paper Eq. 5.
+    pub fn off_chip_ratio(&self) -> f64 {
+        if self.u_on + self.u_off == 0 {
+            return 0.0;
+        }
+        self.u_off as f64 / (self.u_on + self.u_off) as f64
+    }
+
+    /// True when any portion of the weights is streamed from off-chip.
+    pub fn is_streaming(&self) -> bool {
+        self.u_off > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Quant;
+
+    #[test]
+    fn eq1_depth_width_product_conserves_bits() {
+        let l = Layer::conv("c", 64, 128, 14, 14, 3, 1, 1, Quant::W8A8);
+        for (kp, cp, fp) in [(1, 1, 1), (9, 4, 16), (3, 64, 128)] {
+            let bits = m_dep(&l, kp, cp, fp) * m_wid_bits(&l, kp, cp, fp);
+            assert_eq!(bits, l.weight_bits(), "kp={kp} cp={cp} fp={fp}");
+        }
+    }
+
+    #[test]
+    fn depthwise_uses_group_depth() {
+        let l = Layer::depthwise("dw", 96, 28, 28, 3, 1, 1, Quant::W8A8);
+        // c_per_group = 1, so depth = (f/fp) * 1 * k2/kp
+        assert_eq!(m_dep(&l, 1, 1, 1), 96 * 9);
+        assert_eq!(m_dep(&l, 9, 1, 96), 1);
+    }
+
+    #[test]
+    fn non_weight_layer_has_no_memory() {
+        let l = Layer {
+            name: "add".into(),
+            op: crate::ir::OpKind::EltwiseAdd,
+            c_in: 64,
+            c_out: 64,
+            h_in: 14,
+            w_in: 14,
+            quant: Quant::W8A8,
+            skip_from: Some(0),
+        };
+        assert_eq!(m_dep(&l, 1, 1, 1), 0);
+        assert_eq!(m_wid_bits(&l, 1, 1, 1), 0);
+    }
+
+    #[test]
+    fn eq2_fragmentation_partition() {
+        let f = Fragmentation::new(1000, 400, 4);
+        assert_eq!(f.n, 4);
+        assert_eq!(f.u_on + f.u_off, 250);
+        assert_eq!(f.u_off, 100);
+        assert_eq!(f.m_dep(), 1000);
+        assert_eq!(f.m_off_dep(), 400);
+        assert!((f.off_chip_ratio() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fragmentation_rounds_up_with_padding() {
+        let f = Fragmentation::new(1000, 300, 7);
+        // covers at least the requested words
+        assert!(f.m_dep() >= 1000);
+        assert!(f.m_off_dep() >= 300);
+        assert!(f.is_streaming());
+    }
+
+    #[test]
+    fn all_off_chip_allowed() {
+        let f = Fragmentation::new(512, 512, 2);
+        assert_eq!(f.u_on, 0);
+        assert_eq!(f.m_off_dep(), 512);
+        assert!((f.off_chip_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn off_request_capped_at_total() {
+        let f = Fragmentation::new(100, 5000, 1);
+        assert_eq!(f.m_off_dep(), 100);
+        assert_eq!(f.u_on, 0);
+    }
+}

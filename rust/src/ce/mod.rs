@@ -1,0 +1,241 @@
+//! Compute Engine (CE) template — paper §III.
+//!
+//! One CE per layer. The configuration vector `V` (paper Eq. 4) is
+//! [`CeConfig`]: unroll factors `k_p, c_p, f_p` controlling compute
+//! parallelism, and fragmentation parameters `n, u_on, u_off` controlling the
+//! weights memory structure (Fig. 3). [`CeModel`] binds a config to a layer
+//! and evaluates the analytic models: area `a(V)`, off-chip bandwidth `β(V)`,
+//! and throughput `θ(V)`.
+
+mod area;
+mod bandwidth;
+mod memory;
+mod perf;
+mod resource;
+
+pub use area::{bram_blocks, Area, BramBreakdown};
+pub use memory::Fragmentation;
+pub use perf::fill_cycles;
+pub use resource::{
+    assign_memory_tech, bram_blocks_overclocked, lutram_luts, uram_blocks, MemTech, TechChoice,
+    TechOptions, TechPlan,
+};
+
+use crate::ir::Layer;
+
+/// The tunable variables `V` of one CE (paper Eq. 4).
+///
+/// `k_p` here unrolls over the `k²` kernel positions (the paper's `k_p²`
+/// written as a single factor), `c_p` over input channels, `f_p` over output
+/// filters. `n, u_on, u_off` define the weights-memory fragmentation
+/// (Eq. 2): `n` fragment pairs, each `u_on` words static on-chip and `u_off`
+/// words dynamic (reloaded from off-chip through the shared buffer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CeConfig {
+    pub kp: u32,
+    pub cp: u32,
+    pub fp: u32,
+    pub frag: Fragmentation,
+}
+
+impl CeConfig {
+    /// Minimal configuration: no parallelism, all weights on-chip in a
+    /// single fragment (the DSE INITIALIZE state, Algorithm 1).
+    pub fn initial(layer: &Layer) -> CeConfig {
+        CeConfig {
+            kp: 1,
+            cp: 1,
+            fp: 1,
+            frag: Fragmentation::all_on_chip(memory::m_dep(layer, 1, 1, 1)),
+        }
+    }
+
+    /// Total compute parallelism (MACs per cycle).
+    pub fn parallelism(&self) -> u64 {
+        self.kp as u64 * self.cp as u64 * self.fp as u64
+    }
+}
+
+/// A CE config bound to its layer plus the compute-clock: evaluates the
+/// analytic models of paper §III-C.
+#[derive(Debug, Clone)]
+pub struct CeModel {
+    pub layer: Layer,
+    pub cfg: CeConfig,
+    pub clk_comp_mhz: f64,
+}
+
+impl CeModel {
+    pub fn new(layer: &Layer, cfg: CeConfig, clk_comp_mhz: f64) -> CeModel {
+        CeModel { layer: layer.clone(), cfg, clk_comp_mhz }
+    }
+
+    /// On-chip memory depth required without fragmentation — paper Eq. 1
+    /// `M_dep = f_t · c_t · k_t²` (words).
+    pub fn m_dep(&self) -> u64 {
+        memory::m_dep(&self.layer, self.cfg.kp, self.cfg.cp, self.cfg.fp)
+    }
+
+    /// Memory word width — paper Eq. 1 `M_wid = f_p · c_p · k_p² · L_W` (bits).
+    pub fn m_wid_bits(&self) -> u64 {
+        memory::m_wid_bits(&self.layer, self.cfg.kp, self.cfg.cp, self.cfg.fp)
+    }
+
+    /// Cycles to process one inference sample through this CE.
+    pub fn cycles_per_sample(&self) -> u64 {
+        perf::cycles_per_sample(&self.layer, &self.cfg)
+    }
+
+    /// Throughput `θ(V)` in samples/second (paper Eq. 4).
+    pub fn throughput(&self) -> f64 {
+        self.clk_comp_mhz * 1e6 / self.cycles_per_sample() as f64
+    }
+
+    /// Average off-chip bandwidth `β(V)` in bits/second (paper Eq. 5).
+    /// Zero when all weights are static on-chip.
+    pub fn beta_bps(&self) -> f64 {
+        bandwidth::beta_bps(self.m_wid_bits(), self.clk_comp_mhz, &self.cfg.frag)
+    }
+
+    /// Area `a(V)` (paper Eq. 4): DSP/LUT/FF/BRAM, with the BRAM usage broken
+    /// down into the Table III categories.
+    pub fn area(&self) -> Area {
+        area::area(&self.layer, &self.cfg, self.m_wid_bits())
+    }
+
+    /// Weight-reuse repetition count `r = b·ĥ·ŵ·n` (paper Eq. 3): how many
+    /// times the PE array cycles through the fragment sequence per batch of
+    /// `b` samples.
+    pub fn repeats(&self, batch: u64) -> u64 {
+        batch
+            * self.layer.h_out() as u64
+            * self.layer.w_out() as u64
+            * self.cfg.frag.n as u64
+    }
+}
+
+// --- borrow-based hot-path evaluation -------------------------------------
+//
+// `CeModel::new` clones its `Layer` (with its `String` name); fine for API
+// ergonomics, measurably wasteful inside the greedy DSE loops that evaluate
+// thousands of candidates (§Perf). These free functions evaluate the same
+// analytic models against a borrowed layer.
+
+/// `M_dep` (Eq. 1) without constructing a [`CeModel`].
+#[inline]
+pub fn eval_m_dep(layer: &Layer, cfg: &CeConfig) -> u64 {
+    memory::m_dep(layer, cfg.kp, cfg.cp, cfg.fp)
+}
+
+/// `M_wid` in bits (Eq. 1) without constructing a [`CeModel`].
+#[inline]
+pub fn eval_m_wid_bits(layer: &Layer, cfg: &CeConfig) -> u64 {
+    memory::m_wid_bits(layer, cfg.kp, cfg.cp, cfg.fp)
+}
+
+/// Cycles per sample without constructing a [`CeModel`].
+#[inline]
+pub fn eval_cycles(layer: &Layer, cfg: &CeConfig) -> u64 {
+    perf::cycles_per_sample(layer, cfg)
+}
+
+/// Area `a(V)` without constructing a [`CeModel`].
+#[inline]
+pub fn eval_area(layer: &Layer, cfg: &CeConfig) -> Area {
+    area::area(layer, cfg, eval_m_wid_bits(layer, cfg))
+}
+
+/// Bandwidth `β(V)` in bits/s (Eq. 5) without constructing a [`CeModel`].
+#[inline]
+pub fn eval_beta(layer: &Layer, cfg: &CeConfig, clk_comp_mhz: f64) -> f64 {
+    bandwidth::beta_bps(eval_m_wid_bits(layer, cfg), clk_comp_mhz, &cfg.frag)
+}
+
+/// Divisors of `x` in ascending order — the legal unroll values for a
+/// dimension of size `x`.
+pub fn divisors(x: u32) -> Vec<u32> {
+    let mut d: Vec<u32> = (1..=x).filter(|v| x % v == 0).collect();
+    d.sort_unstable();
+    d
+}
+
+/// Smallest legal unroll value strictly greater than `current + step - 1`,
+/// i.e. advance `current` by at least `step` within the divisors of `x`
+/// (Algorithm 1 INCREMENT_UNROLL with hyperparameter φ = `step`).
+pub fn next_unroll(x: u32, current: u32, step: u32) -> Option<u32> {
+    divisors(x).into_iter().find(|&d| d >= current + step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Layer, Quant};
+
+    fn conv() -> Layer {
+        Layer::conv("c", 64, 128, 28, 28, 3, 1, 1, Quant::W4A5)
+    }
+
+    #[test]
+    fn initial_config_is_serial_all_onchip() {
+        let l = conv();
+        let cfg = CeConfig::initial(&l);
+        assert_eq!((cfg.kp, cfg.cp, cfg.fp), (1, 1, 1));
+        assert_eq!(cfg.frag.m_off_dep(), 0);
+        assert_eq!(cfg.frag.m_dep(), 64 * 128 * 9);
+    }
+
+    #[test]
+    fn eq1_memory_geometry() {
+        let l = conv();
+        let m = CeModel::new(&l, CeConfig::initial(&l), 200.0);
+        // f_t*c_t*k_t^2 with all unrolls 1 = f*c*k^2
+        assert_eq!(m.m_dep(), 128 * 64 * 9);
+        assert_eq!(m.m_wid_bits(), 4); // 1*1*1*L_W
+    }
+
+    #[test]
+    fn unrolling_shrinks_depth_widens_words() {
+        let l = conv();
+        let mut cfg = CeConfig::initial(&l);
+        cfg.kp = 9;
+        cfg.cp = 8;
+        cfg.fp = 4;
+        cfg.frag = Fragmentation::all_on_chip(memory::m_dep(&l, 9, 8, 4));
+        let m = CeModel::new(&l, cfg, 200.0);
+        assert_eq!(m.m_dep(), (128 / 4) * (64 / 8) * 1);
+        assert_eq!(m.m_wid_bits(), 9 * 8 * 4 * 4);
+        // total bits conserved
+        assert_eq!(m.m_dep() * m.m_wid_bits(), 128 * 64 * 9 * 4);
+    }
+
+    #[test]
+    fn throughput_scales_with_parallelism() {
+        let l = conv();
+        let slow = CeModel::new(&l, CeConfig::initial(&l), 200.0);
+        let mut cfg = CeConfig::initial(&l);
+        cfg.cp = 8;
+        cfg.frag = Fragmentation::all_on_chip(memory::m_dep(&l, 1, 8, 1));
+        let fast = CeModel::new(&l, cfg, 200.0);
+        assert!((fast.throughput() / slow.throughput() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq3_repeats() {
+        let l = conv();
+        let mut cfg = CeConfig::initial(&l);
+        cfg.frag = Fragmentation::new(cfg.frag.m_dep(), cfg.frag.m_dep() / 2, 4);
+        let m = CeModel::new(&l, cfg, 200.0);
+        assert_eq!(m.repeats(1), 28 * 28 * 4);
+        assert_eq!(m.repeats(8), 8 * 28 * 28 * 4);
+    }
+
+    #[test]
+    fn divisor_helpers() {
+        assert_eq!(divisors(9), vec![1, 3, 9]);
+        assert_eq!(next_unroll(64, 1, 1), Some(2));
+        assert_eq!(next_unroll(64, 16, 4), Some(32));
+        assert_eq!(next_unroll(64, 64, 1), None);
+        // step lands between divisors: round up to next divisor
+        assert_eq!(next_unroll(9, 1, 2), Some(3));
+    }
+}

@@ -1,0 +1,136 @@
+//! Throughput model `θ(V)` — paper §III-C.
+//!
+//! The analytic model is cycle-accurate for the stall-free case (the DMA
+//! scheduler's write-burst balancing makes the stall-free assumption hold;
+//! the event simulator in [`crate::sim`] validates it and quantifies stalls
+//! when it does not).
+
+use super::{memory, CeConfig};
+use crate::ir::{Layer, OpKind};
+
+/// Cycles for one inference sample to traverse this CE.
+///
+/// For weight layers the PE array reads one memory word per cycle and each
+/// output pixel consumes the full memory depth, so
+/// `cycles = ĥ · ŵ · M_dep` (batch = 1). The CE can additionally be bound by
+/// its input or output stream ports (width `c_p` / `f_p` words per cycle).
+/// Non-weight layers are stream-bound.
+pub fn cycles_per_sample(layer: &Layer, cfg: &CeConfig) -> u64 {
+    let pixels_out = layer.h_out() as u64 * layer.w_out() as u64;
+    match layer.op {
+        OpKind::Conv { .. } | OpKind::Fc => {
+            let compute = pixels_out * memory::m_dep(layer, cfg.kp, cfg.cp, cfg.fp);
+            let input = stream_cycles(layer.input_count(), input_parallel(layer, cfg));
+            let output = stream_cycles(layer.output_count(), cfg.fp);
+            compute.max(input).max(output).max(1)
+        }
+        OpKind::Pool { kernel, .. } => {
+            // window reduction: k^2/kp values folded per output value
+            let k2 = (kernel as u64).pow(2);
+            let compute = pixels_out
+                * (layer.c_in as u64).div_ceil(cfg.cp as u64)
+                * k2.div_ceil(cfg.kp as u64);
+            compute.max(stream_cycles(layer.input_count(), cfg.cp)).max(1)
+        }
+        OpKind::GlobalAvgPool | OpKind::Relu => {
+            stream_cycles(layer.input_count(), cfg.cp).max(1)
+        }
+        OpKind::EltwiseAdd => {
+            // two input streams consumed in lockstep
+            stream_cycles(layer.input_count(), cfg.cp).max(1)
+        }
+    }
+}
+
+fn stream_cycles(values: u64, width: u32) -> u64 {
+    values.div_ceil(width as u64)
+}
+
+/// Input channels consumed per cycle. A dense convolution forks its `c_p`
+/// input channels to all filters; a grouped/depthwise convolution's filter
+/// unroll `f_p` additionally spans `f_p·groups/f` groups, each with its own
+/// input channels (for depthwise, `f_p` filters == `f_p` input channels).
+fn input_parallel(layer: &Layer, cfg: &CeConfig) -> u32 {
+    match layer.op {
+        OpKind::Conv { groups, .. } if groups > 1 => {
+            let groups_in_parallel =
+                ((cfg.fp as u64 * groups as u64) / layer.c_out.max(1) as u64).max(1);
+            (cfg.cp as u64 * groups_in_parallel).min(layer.c_in as u64) as u32
+        }
+        _ => cfg.cp,
+    }
+}
+
+/// Pipeline-fill latency contribution of this CE in cycles: the delay before
+/// its first output emerges once its first input arrives. For windowed ops
+/// this is `(k-1)` input rows plus `k` pixels; for reductions it is the full
+/// reduction; for streaming ops a single cycle.
+pub fn fill_cycles(layer: &Layer, cfg: &CeConfig) -> u64 {
+    match layer.op {
+        OpKind::Conv { kernel, .. } | OpKind::Pool { kernel, .. } => {
+            let row = layer.w_in as u64 * (layer.c_in as u64).div_ceil(cfg.cp as u64);
+            (kernel as u64 - 1) * row
+                + kernel as u64
+                + memory::m_dep(layer, cfg.kp, cfg.cp, cfg.fp)
+        }
+        OpKind::Fc => memory::m_dep(layer, cfg.kp, cfg.cp, cfg.fp),
+        OpKind::GlobalAvgPool => stream_cycles(layer.input_count(), cfg.cp),
+        OpKind::EltwiseAdd | OpKind::Relu => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ce::Fragmentation;
+    use crate::ir::{PoolKind, Quant};
+
+    fn cfg(kp: u32, cp: u32, fp: u32) -> CeConfig {
+        CeConfig { kp, cp, fp, frag: Fragmentation::all_on_chip(0) }
+    }
+
+    #[test]
+    fn serial_conv_cycles_equal_macs() {
+        let l = Layer::conv("c", 16, 32, 8, 8, 3, 1, 1, Quant::W8A8);
+        // serial: one MAC per cycle
+        assert_eq!(cycles_per_sample(&l, &cfg(1, 1, 1)), l.macs());
+    }
+
+    #[test]
+    fn full_unroll_is_stream_bound() {
+        let l = Layer::conv("c", 16, 32, 8, 8, 3, 1, 1, Quant::W8A8);
+        let c = cycles_per_sample(&l, &cfg(9, 16, 32));
+        // compute would be h*w = 64 cycles; input stream is 8*8*16/16 = 64
+        assert_eq!(c, 64);
+    }
+
+    #[test]
+    fn fc_cycles() {
+        let l = Layer::fc("fc", 512, 1000, Quant::W4A4);
+        assert_eq!(cycles_per_sample(&l, &cfg(1, 1, 1)), 512_000);
+        assert_eq!(cycles_per_sample(&l, &cfg(1, 8, 10)), 6400);
+    }
+
+    #[test]
+    fn pool_cycles() {
+        let l = Layer {
+            name: "p".into(),
+            op: OpKind::Pool { kernel: 2, stride: 2, pad: 0, kind: PoolKind::Max },
+            c_in: 64,
+            c_out: 64,
+            h_in: 8,
+            w_in: 8,
+            quant: Quant::W8A8,
+            skip_from: None,
+        };
+        // 16 output pixels * 64 channels * 4 window values
+        assert_eq!(cycles_per_sample(&l, &cfg(1, 1, 1)), 16 * 64 * 4);
+    }
+
+    #[test]
+    fn fill_is_much_smaller_than_body_for_large_maps() {
+        let l = Layer::conv("c", 64, 64, 56, 56, 3, 1, 1, Quant::W8A8);
+        let c = cfg(1, 4, 4);
+        assert!(fill_cycles(&l, &c) * 10 < cycles_per_sample(&l, &c));
+    }
+}

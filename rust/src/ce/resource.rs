@@ -1,0 +1,342 @@
+//! Memory resource-type assignment and BRAM overclocking.
+//!
+//! The baseline area model implements every weight memory in BRAM36 blocks.
+//! The toolflows the paper builds on expose more freedom:
+//!
+//! - **fpgaConvNet [3] / hls4ml [4]** choose the storage primitive per layer
+//!   (BRAM vs distributed LUTRAM); DNNExplorer [10] folds that choice into
+//!   the DSE. UltraScale+ parts add URAM (288 Kib, 72-bit fixed width).
+//! - **FINN [2]** observed that wide-and-shallow weight memories leave BRAM
+//!   capacity stranded and recovered it by *overclocking*: run the BRAM at
+//!   `ω·clk_comp` and serve the PE array through a `1:ω` gearbox, so a port
+//!   of width `M_wid/ω` sustains the same words-per-compute-cycle.
+//!
+//! This module implements both as a post-DSE assignment pass
+//! ([`assign_memory_tech`]): each weight memory is placed in the technology
+//! with the lowest *scarcity-weighted* cost on the target device. The pass
+//! never changes timing — every technology option provides one full memory
+//! word per compute cycle — so θ, β and the burst schedule are untouched;
+//! only the area vector changes.
+
+use super::area::{bram_blocks, Area};
+use crate::device::Device;
+use crate::dse::Design;
+
+/// URAM288 geometry: fixed 72-bit ports, 4096 words deep.
+pub const URAM_WIDTH: u64 = 72;
+/// URAM288 depth at the fixed width.
+pub const URAM_DEPTH: u64 = 4096;
+/// Effective LUTRAM storage density: bits of distributed RAM per LUT
+/// consumed. A SLICEM LUT6 stores 64 bits but address decode, replication
+/// for read ports, and placement overhead put the practical figure near 32.
+pub const LUTRAM_BITS_PER_LUT: u64 = 32;
+
+/// Storage technology for one layer's static weight region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemTech {
+    /// BRAM36 blocks at the native width modes (the baseline model).
+    Bram,
+    /// BRAM36 blocks overclocked by the given gearbox ratio ω ≥ 2 (FINN).
+    BramOverclocked(u32),
+    /// URAM288 blocks (only on devices that have URAM).
+    Uram,
+    /// Distributed LUTRAM (costs LUTs instead of memory blocks).
+    Lutram,
+}
+
+impl std::fmt::Display for MemTech {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemTech::Bram => write!(f, "bram"),
+            MemTech::BramOverclocked(w) => write!(f, "bram@{w}x"),
+            MemTech::Uram => write!(f, "uram"),
+            MemTech::Lutram => write!(f, "lutram"),
+        }
+    }
+}
+
+/// URAM288 blocks for a `width x depth` memory. URAM ports are fixed at 72
+/// bits, so wide words always need parallel columns.
+pub fn uram_blocks(width_bits: u64, depth: u64) -> u32 {
+    if width_bits == 0 || depth == 0 {
+        return 0;
+    }
+    (width_bits.div_ceil(URAM_WIDTH) * depth.div_ceil(URAM_DEPTH)) as u32
+}
+
+/// LUTs consumed by a LUTRAM implementation of a `width x depth` memory.
+pub fn lutram_luts(width_bits: u64, depth: u64) -> u32 {
+    ((width_bits * depth).div_ceil(LUTRAM_BITS_PER_LUT)) as u32
+}
+
+/// BRAM36 blocks when overclocked by `omega`: the port narrows to
+/// `ceil(width/ω)` and the depth stretches to `depth·ω` — same bits, better
+/// packing for wide-and-shallow geometries (FINN's recovery trick).
+pub fn bram_blocks_overclocked(width_bits: u64, depth: u64, omega: u32) -> u32 {
+    if omega <= 1 {
+        return bram_blocks(width_bits, depth);
+    }
+    bram_blocks(width_bits.div_ceil(omega as u64), depth * omega as u64)
+}
+
+/// Gearbox LUT overhead of an ω:1 overclocked memory interface (the
+/// serializer/deserializer between the two clock domains).
+fn gearbox_luts(width_bits: u64, omega: u32) -> u32 {
+    if omega <= 1 {
+        0
+    } else {
+        (width_bits as u32) * 2 + 64 * omega
+    }
+}
+
+/// Options of the assignment pass.
+#[derive(Debug, Clone, Copy)]
+pub struct TechOptions {
+    /// Allow URAM placement (ignored on devices with no URAM).
+    pub use_uram: bool,
+    /// Allow LUTRAM placement for small memories.
+    pub use_lutram: bool,
+    /// Maximum overclocking ratio ω (1 = disabled). Bounded by how much
+    /// faster than `clk_comp` the fabric BRAM can run; FINN uses up to ~2.5x,
+    /// we cap at the device's `clk_dma/clk_comp` ratio rounded down.
+    pub max_overclock: u32,
+    /// Memories above this bit count are not eligible for LUTRAM (routing
+    /// pressure makes huge distributed RAMs impractical).
+    pub lutram_bits_cap: u64,
+}
+
+impl Default for TechOptions {
+    fn default() -> Self {
+        TechOptions { use_uram: true, use_lutram: true, max_overclock: 2, lutram_bits_cap: 1 << 16 }
+    }
+}
+
+impl TechOptions {
+    /// Clamp the overclock ratio to the device's clock headroom.
+    pub fn for_device(dev: &Device) -> TechOptions {
+        let headroom = (dev.clk_dma_mhz / dev.clk_comp_mhz).floor().max(1.0) as u32;
+        TechOptions { max_overclock: headroom.min(4), ..Default::default() }
+    }
+}
+
+/// Technology choice for one layer's static weight region.
+#[derive(Debug, Clone, Copy)]
+pub struct TechChoice {
+    pub layer: usize,
+    pub tech: MemTech,
+    /// BRAM36 blocks consumed (0 for URAM/LUTRAM placements).
+    pub bram: u32,
+    /// URAM blocks consumed.
+    pub uram: u32,
+    /// Extra LUTs consumed (LUTRAM storage or overclock gearbox).
+    pub luts: u32,
+}
+
+/// Result of the assignment pass over a whole design.
+#[derive(Debug, Clone)]
+pub struct TechPlan {
+    pub choices: Vec<TechChoice>,
+    /// BRAM36 blocks the baseline (all-BRAM) implementation would use for
+    /// the same static regions.
+    pub baseline_bram: u32,
+    /// Totals after assignment.
+    pub bram: u32,
+    pub uram: u32,
+    pub extra_luts: u32,
+}
+
+impl TechPlan {
+    /// BRAM36-equivalents saved versus the all-BRAM baseline (URAM spending
+    /// is converted at the device's 8:1 equivalence).
+    pub fn bram_saved(&self) -> i64 {
+        self.baseline_bram as i64 - self.bram as i64 - self.uram as i64 * 8
+    }
+
+    /// Total area delta to apply on top of a design's baseline area.
+    pub fn apply(&self, mut area: Area) -> Area {
+        let saved = self.baseline_bram - self.bram; // blocks moved off BRAM
+        area.bram.wt_mem -= saved.min(area.bram.wt_mem);
+        area.lut += self.extra_luts;
+        area
+    }
+}
+
+/// Assign a storage technology to every weight layer's *static* region.
+///
+/// Greedy scarcity-weighted choice: for each memory, each candidate
+/// technology is priced as `resource_used / resource_available` summed over
+/// the resources it touches, and the cheapest feasible candidate wins.
+/// Running totals guarantee the plan never over-commits URAM or LUTs.
+pub fn assign_memory_tech(design: &Design, device: &Device, opts: &TechOptions) -> TechPlan {
+    let mut choices = Vec::new();
+    let mut baseline_bram = 0u32;
+    let (mut used_bram, mut used_uram, mut used_luts) = (0u32, 0u32, 0u32);
+    // LUT headroom beyond what the design's compute already uses.
+    let lut_budget = device.lut.saturating_sub(design.total_area().lut);
+    let uram_budget = if opts.use_uram { device.uram } else { 0 };
+
+    // Biggest memories first: they dominate and should get first pick of the
+    // scarce technologies.
+    let mut order: Vec<usize> = (0..design.len())
+        .filter(|&i| design.network.layers[i].has_weights())
+        .collect();
+    let geom = |i: usize| {
+        let m = crate::ce::CeModel::new(
+            &design.network.layers[i],
+            design.cfgs[i],
+            design.clk_comp_mhz,
+        );
+        (m.m_wid_bits(), design.cfgs[i].frag.m_on_dep())
+    };
+    order.sort_by_key(|&i| {
+        let (w, d) = geom(i);
+        std::cmp::Reverse(w * d)
+    });
+
+    for i in order {
+        let (width, depth) = geom(i);
+        let base = bram_blocks(width, depth);
+        baseline_bram += base;
+        if base == 0 {
+            continue; // fully-evicted or zero-size static region
+        }
+
+        // candidate list: (tech, bram, uram, luts)
+        let mut cands: Vec<(MemTech, u32, u32, u32)> = vec![(MemTech::Bram, base, 0, 0)];
+        for omega in 2..=opts.max_overclock {
+            let b = bram_blocks_overclocked(width, depth, omega);
+            if b < base {
+                cands.push((MemTech::BramOverclocked(omega), b, 0, gearbox_luts(width, omega)));
+            }
+        }
+        if uram_budget > 0 {
+            cands.push((MemTech::Uram, 0, uram_blocks(width, depth), 0));
+        }
+        let bits = width * depth;
+        if opts.use_lutram && bits <= opts.lutram_bits_cap {
+            cands.push((MemTech::Lutram, 0, 0, lutram_luts(width, depth)));
+        }
+
+        // Scarcity-weighted cost: each resource is priced against its *own*
+        // pool, so a device with idle URAM (or LUT headroom) sees those as
+        // cheap relative to contended BRAM. Infeasible candidates (pool
+        // already committed) are skipped.
+        let bram_pool = device.bram36.max(1) as f64;
+        let uram_pool = uram_budget.max(1) as f64;
+        let lut_pool = lut_budget.max(1) as f64;
+        let best = cands
+            .into_iter()
+            .filter(|&(_, _, u, l)| used_uram + u <= uram_budget && used_luts + l <= lut_budget)
+            .min_by(|a, b| {
+                let cost = |c: &(MemTech, u32, u32, u32)| {
+                    c.1 as f64 / bram_pool + c.2 as f64 / uram_pool + c.3 as f64 / lut_pool
+                };
+                cost(a).partial_cmp(&cost(b)).unwrap()
+            })
+            .unwrap_or((MemTech::Bram, base, 0, 0));
+
+        used_bram += best.1;
+        used_uram += best.2;
+        used_luts += best.3;
+        choices.push(TechChoice { layer: i, tech: best.0, bram: best.1, uram: best.2, luts: best.3 });
+    }
+
+    TechPlan { choices, baseline_bram, bram: used_bram, uram: used_uram, extra_luts: used_luts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{self, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn uram_geometry() {
+        assert_eq!(uram_blocks(72, 4096), 1);
+        assert_eq!(uram_blocks(73, 4096), 2);
+        assert_eq!(uram_blocks(72, 4097), 2);
+        assert_eq!(uram_blocks(0, 100), 0);
+    }
+
+    #[test]
+    fn overclock_recovers_wide_shallow_waste() {
+        // 144 bits x 256 words: plain = 2 columns x 1 = 2 blocks at half
+        // depth utilization; 2x overclock = 72 bits x 512 = exactly 1 block.
+        assert_eq!(bram_blocks(144, 256), 2);
+        assert_eq!(bram_blocks_overclocked(144, 256, 2), 1);
+        // ω=1 falls back to the plain model
+        assert_eq!(bram_blocks_overclocked(144, 256, 1), 2);
+    }
+
+    #[test]
+    fn overclock_never_helps_deep_narrow() {
+        // 8 bits x 32768: already capacity-bound, ω only makes it deeper.
+        assert!(bram_blocks_overclocked(8, 32768, 2) >= bram_blocks(8, 32768));
+    }
+
+    #[test]
+    fn lutram_density() {
+        assert_eq!(lutram_luts(8, 128), 32); // 1024 bits / 32
+        assert_eq!(lutram_luts(0, 10), 0);
+    }
+
+    #[test]
+    fn plan_on_uram_device_moves_big_memories_to_uram() {
+        let net = models::resnet50(Quant::W8A8);
+        let dev = Device::u50();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let plan = assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev));
+        assert!(plan.uram > 0, "U50 plans should use URAM");
+        assert!(plan.uram <= dev.uram);
+        assert!(plan.bram_saved() != 0 || plan.uram > 0);
+    }
+
+    #[test]
+    fn plan_without_uram_uses_lutram_or_overclock_only() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102(); // no URAM
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let plan = assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev));
+        assert_eq!(plan.uram, 0);
+        assert!(plan.bram <= plan.baseline_bram, "assignment must never cost extra BRAM");
+        for c in &plan.choices {
+            assert_ne!(c.tech, MemTech::Uram);
+        }
+    }
+
+    #[test]
+    fn plan_respects_lut_budget() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let plan = assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev));
+        let total_lut = r.design.total_area().lut + plan.extra_luts;
+        assert!(total_lut <= dev.lut, "extra LUTs {} blow the device", plan.extra_luts);
+    }
+
+    #[test]
+    fn disabled_options_fall_back_to_bram() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::u250();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let opts = TechOptions { use_uram: false, use_lutram: false, max_overclock: 1, ..Default::default() };
+        let plan = assign_memory_tech(&r.design, &dev, &opts);
+        assert_eq!(plan.bram, plan.baseline_bram);
+        assert_eq!(plan.uram, 0);
+        assert_eq!(plan.extra_luts, 0);
+        assert!(plan.choices.iter().all(|c| c.tech == MemTech::Bram));
+    }
+
+    #[test]
+    fn apply_updates_area_vector() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let plan = assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev));
+        let before = r.design.total_area();
+        let after = plan.apply(before);
+        assert!(after.bram.total() <= before.bram.total());
+        assert!(after.lut >= before.lut);
+    }
+}

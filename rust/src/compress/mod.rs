@@ -1,0 +1,321 @@
+//! Weight pruning and encoding co-design — the paper's stated future work
+//! (§VI: "explore software-hardware co-design, such as weight encoding and
+//! pruning methods, to further enhance performance").
+//!
+//! The memory-management bottleneck AutoWS attacks is *weight bits*: fewer
+//! stored/streamed bits mean fewer BRAMs for the static regions and less
+//! bandwidth for the dynamic ones. This module models magnitude pruning plus
+//! a stream-decodable encoding of the pruned weights and feeds the result
+//! back through the unchanged DSE:
+//!
+//! 1. [`bits_per_weight`] — analytic storage cost of one weight under an
+//!    [`Encoding`] at a given sparsity.
+//! 2. [`compress_network`] — rewrite each layer's effective weight bitwidth
+//!    (`quant.w_bits`, rounded *up*) so every downstream model — Eq. 1
+//!    geometry, area, Eq. 5 bandwidth, the burst schedule — observes the
+//!    compressed footprint with zero special-casing.
+//! 3. [`CompressionReport`] — per-layer ratios, decoder area overhead, and a
+//!    *synthetic* accuracy-degradation proxy for sweep-style studies (we
+//!    have no trained weights; the proxy is a documented stand-in that makes
+//!    the co-design trade-off curve well-defined, see DESIGN.md
+//!    §Substitutions).
+
+use crate::ir::Network;
+
+/// Stream-decodable weight encodings.
+///
+/// All three are decodable at one weight per cycle with a small LUT decoder
+/// between the weights memory and the PE array, which is what keeps the CE
+/// timing model unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// No encoding: `L_W` bits per weight regardless of sparsity.
+    Dense,
+    /// Nonzero bitmap + packed nonzero values: `1 + (1−s)·L_W` bits/weight.
+    Bitmap,
+    /// Zero-run-length coding: each nonzero stores its value plus the length
+    /// of the preceding zero run.
+    Rle,
+    /// Entropy-coded nonzeros over the bitmap: models a canonical Huffman
+    /// code over the quantized value distribution (≈1.5 bits below raw for
+    /// typical bell-shaped weight histograms, floored at 2 bits).
+    Entropy,
+}
+
+impl std::fmt::Display for Encoding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Encoding::Dense => "dense",
+            Encoding::Bitmap => "bitmap",
+            Encoding::Rle => "rle",
+            Encoding::Entropy => "entropy",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Expected storage bits per weight for bitwidth `l_w` at Bernoulli
+/// sparsity `s` (fraction of zero weights) under `enc`.
+pub fn bits_per_weight(l_w: u32, s: f64, enc: Encoding) -> f64 {
+    let s = s.clamp(0.0, 0.999);
+    let nz = 1.0 - s;
+    match enc {
+        Encoding::Dense => l_w as f64,
+        Encoding::Bitmap => 1.0 + nz * l_w as f64,
+        Encoding::Rle => {
+            // Each nonzero carries its value plus a run-length field sized
+            // for the expected zero-run (geometric with mean s/(1−s)),
+            // plus 2 bits of field framing.
+            let mean_run = s / nz;
+            let run_bits = (mean_run + 1.0).log2().ceil().max(1.0) + 2.0;
+            nz * (l_w as f64 + run_bits)
+        }
+        Encoding::Entropy => {
+            // bitmap + entropy-coded nonzeros
+            let coded = ((l_w as f64) - 1.5).max(2.0);
+            1.0 + nz * coded
+        }
+    }
+}
+
+/// Pick the cheapest encoding at this bitwidth/sparsity point.
+pub fn best_encoding(l_w: u32, s: f64) -> Encoding {
+    [Encoding::Dense, Encoding::Bitmap, Encoding::Rle, Encoding::Entropy]
+        .into_iter()
+        .min_by(|a, b| {
+            bits_per_weight(l_w, s, *a)
+                .partial_cmp(&bits_per_weight(l_w, s, *b))
+                .unwrap()
+        })
+        .unwrap()
+}
+
+/// Decoder LUT cost per CE: field extraction, run-length counter, and (for
+/// entropy codes) a canonical-Huffman table walker, all scaled by the
+/// memory word parallelism (one decoder lane per packed weight).
+pub fn decoder_luts(enc: Encoding, lanes: u32) -> u32 {
+    let per_lane = match enc {
+        Encoding::Dense => 0,
+        Encoding::Bitmap => 24,
+        Encoding::Rle => 56,
+        Encoding::Entropy => 120,
+    };
+    per_lane * lanes.max(1)
+}
+
+/// Compression configuration: a uniform target sparsity and an encoding
+/// policy (fixed or best-per-layer).
+#[derive(Debug, Clone, Copy)]
+pub struct CompressionSpec {
+    /// Target fraction of zero weights after magnitude pruning.
+    pub sparsity: f64,
+    /// `None` = choose [`best_encoding`] per layer.
+    pub encoding: Option<Encoding>,
+}
+
+impl CompressionSpec {
+    pub fn pruned(sparsity: f64) -> CompressionSpec {
+        CompressionSpec { sparsity, encoding: None }
+    }
+}
+
+/// Per-layer outcome of the compression pass.
+#[derive(Debug, Clone)]
+pub struct LayerCompression {
+    pub layer: usize,
+    pub encoding: Encoding,
+    /// Effective bits/weight actually realized after integer rounding.
+    pub eff_bits: u32,
+    /// Analytic (un-rounded) bits/weight.
+    pub ideal_bits: f64,
+    pub decoder_luts: u32,
+}
+
+/// Whole-network compression report.
+#[derive(Debug, Clone)]
+pub struct CompressionReport {
+    pub layers: Vec<LayerCompression>,
+    pub weight_bits_before: u64,
+    pub weight_bits_after: u64,
+    pub decoder_luts: u32,
+    /// Synthetic top-1 accuracy degradation proxy in percentage points —
+    /// quadratic in sparsity, weighted by each layer's parameter share
+    /// (layers holding more parameters tolerate pruning better, the standard
+    /// magnitude-pruning observation). NOT a measurement; see module docs.
+    pub accuracy_drop_proxy: f64,
+}
+
+impl CompressionReport {
+    /// Overall compression ratio (≤ 1.0).
+    pub fn ratio(&self) -> f64 {
+        self.weight_bits_after as f64 / self.weight_bits_before.max(1) as f64
+    }
+}
+
+/// Apply `spec` to a network: returns the rewritten network (effective
+/// `w_bits` per layer, rounded up) plus the report.
+///
+/// Rounding up makes every downstream estimate conservative: the real
+/// encoded stream would be marginally smaller than what the DSE plans for.
+pub fn compress_network(net: &Network, spec: &CompressionSpec) -> (Network, CompressionReport) {
+    assert!((0.0..1.0).contains(&spec.sparsity), "sparsity {} out of [0,1)", spec.sparsity);
+    let mut out = net.clone();
+    out.name = format!("{}-p{:02.0}", net.name, spec.sparsity * 100.0);
+    let mut layers = Vec::new();
+    let (mut before, mut after) = (0u64, 0u64);
+    let mut total_decoder = 0u32;
+    let total_params: u64 = net.layers.iter().map(|l| l.weight_count()).sum();
+    let mut drop = 0.0;
+
+    for (i, l) in net.layers.iter().enumerate() {
+        if !l.has_weights() {
+            continue;
+        }
+        let l_w = l.quant.w_bits;
+        let enc = spec.encoding.unwrap_or_else(|| best_encoding(l_w, spec.sparsity));
+        let ideal = bits_per_weight(l_w, spec.sparsity, enc);
+        // never exceed the uncompressed bitwidth
+        let eff = (ideal.ceil() as u32).clamp(1, l_w);
+        out.layers[i].quant.w_bits = eff;
+        let dec = decoder_luts(enc, 1);
+        total_decoder += dec;
+        before += l.weight_count() * l_w as u64;
+        after += l.weight_count() * eff as u64;
+        layers.push(LayerCompression {
+            layer: i,
+            encoding: enc,
+            eff_bits: eff,
+            ideal_bits: ideal,
+            decoder_luts: dec,
+        });
+        // parameter-share-weighted quadratic proxy: smaller layers are more
+        // sensitive (depthwise/first layers), so weight by 1/share.
+        let share = l.weight_count() as f64 / total_params.max(1) as f64;
+        let sensitivity = (1.0 - share).max(0.1);
+        drop += 12.0 * spec.sparsity * spec.sparsity * sensitivity * share;
+    }
+
+    (
+        out,
+        CompressionReport {
+            layers,
+            weight_bits_before: before,
+            weight_bits_after: after,
+            decoder_luts: total_decoder,
+            accuracy_drop_proxy: drop,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::dse::{self, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn dense_is_flat_in_sparsity() {
+        assert_eq!(bits_per_weight(8, 0.0, Encoding::Dense), 8.0);
+        assert_eq!(bits_per_weight(8, 0.9, Encoding::Dense), 8.0);
+    }
+
+    #[test]
+    fn bitmap_crossover() {
+        // at s=0: bitmap costs 1 extra bit; at high s it wins
+        assert!(bits_per_weight(8, 0.0, Encoding::Bitmap) > 8.0);
+        assert!(bits_per_weight(8, 0.8, Encoding::Bitmap) < 3.0);
+    }
+
+    #[test]
+    fn monotone_decreasing_in_sparsity() {
+        for enc in [Encoding::Bitmap, Encoding::Rle, Encoding::Entropy] {
+            let mut last = f64::INFINITY;
+            for step in 0..9 {
+                let s = step as f64 / 10.0;
+                let b = bits_per_weight(4, s, enc);
+                assert!(b <= last + 1e-9, "{enc}: {b} at s={s} after {last}");
+                last = b;
+            }
+        }
+    }
+
+    #[test]
+    fn best_encoding_matches_cost_structure() {
+        // Very narrow weights leave nothing for entropy coding to save:
+        // dense wins at zero sparsity.
+        assert_eq!(best_encoding(2, 0.0), Encoding::Dense);
+        // Wide weights benefit from entropy coding even when dense.
+        assert_eq!(best_encoding(8, 0.0), Encoding::Entropy);
+        // High sparsity always beats dense.
+        assert_ne!(best_encoding(8, 0.8), Encoding::Dense);
+        assert_ne!(best_encoding(2, 0.8), Encoding::Dense);
+    }
+
+    #[test]
+    fn compress_shrinks_weight_bits() {
+        let net = models::resnet18(Quant::W8A8);
+        let (cnet, rep) = compress_network(&net, &CompressionSpec::pruned(0.6));
+        assert!(rep.ratio() < 0.75, "ratio {}", rep.ratio());
+        assert!(rep.weight_bits_after < rep.weight_bits_before);
+        assert_eq!(cnet.stats().params, net.stats().params, "pruning keeps geometry");
+        assert!(cnet.stats().weight_bits < net.stats().weight_bits);
+    }
+
+    #[test]
+    fn zero_sparsity_with_dense_is_identity() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let spec = CompressionSpec { sparsity: 0.0, encoding: Some(Encoding::Dense) };
+        let (cnet, rep) = compress_network(&net, &spec);
+        assert_eq!(rep.ratio(), 1.0);
+        assert_eq!(cnet.stats().weight_bits, net.stats().weight_bits);
+        assert_eq!(rep.decoder_luts, 0);
+    }
+
+    #[test]
+    fn effective_bits_never_exceed_original() {
+        let net = models::mobilenet_v2(Quant::W4A4);
+        for s in [0.0, 0.1, 0.3, 0.5, 0.7, 0.9] {
+            let (_, rep) = compress_network(&net, &CompressionSpec::pruned(s));
+            for lc in &rep.layers {
+                assert!(lc.eff_bits <= 4, "s={s}: {lc:?}");
+                assert!(lc.eff_bits >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_proxy_grows_with_sparsity() {
+        let net = models::resnet18(Quant::W8A8);
+        let mut last = -1.0;
+        for s in [0.0, 0.3, 0.6, 0.9] {
+            let (_, rep) = compress_network(&net, &CompressionSpec::pruned(s));
+            assert!(rep.accuracy_drop_proxy >= last);
+            last = rep.accuracy_drop_proxy;
+        }
+        assert!(last < 15.0, "proxy stays in plausible range: {last}");
+    }
+
+    #[test]
+    fn compression_unlocks_smaller_devices() {
+        // ResNet18 W8A8 does not fit a ZC706 vanilla; at 70% sparsity the
+        // compressed model should need substantially less on-chip memory.
+        let net = models::resnet18(Quant::W8A8);
+        let dev = Device::zc706();
+        let base = dse::run(&net, &dev, &DseConfig::default()).map(|r| r.throughput);
+        let (cnet, _) = compress_network(&net, &CompressionSpec::pruned(0.7));
+        let comp = dse::run(&cnet, &dev, &DseConfig::default()).map(|r| r.throughput);
+        let c = comp.expect("compressed model must be feasible");
+        if let Some(b) = base {
+            assert!(c >= b * 0.95, "compression must not hurt: {c} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decoder_cost_scales_with_encoding_complexity() {
+        assert_eq!(decoder_luts(Encoding::Dense, 4), 0);
+        assert!(decoder_luts(Encoding::Entropy, 4) > decoder_luts(Encoding::Rle, 4));
+        assert!(decoder_luts(Encoding::Rle, 4) > decoder_luts(Encoding::Bitmap, 4));
+    }
+}

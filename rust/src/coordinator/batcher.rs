@@ -1,0 +1,128 @@
+//! Dynamic batching policy.
+//!
+//! The layer-wise pipelined accelerator amortizes its pipeline fill across a
+//! batch (paper Eq. 3: weights are reused over the `b` dimension), so the
+//! coordinator collects up to `max_batch` requests, but never waits longer
+//! than `max_wait` once at least one request is pending.
+
+use std::time::Duration;
+
+/// Batching policy parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pure batching state machine (time injected for testability).
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    /// Monotonic deadline (seconds) by which the current batch must flush.
+    deadline: Option<f64>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: Vec::with_capacity(policy.max_batch), deadline: None }
+    }
+
+    /// Add a request at monotonic time `now` (seconds). Returns a full batch
+    /// if this push filled it.
+    pub fn push(&mut self, item: T, now: f64) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.deadline = Some(now + self.policy.max_wait.as_secs_f64());
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.policy.max_batch {
+            self.deadline = None;
+            return Some(std::mem::take(&mut self.pending));
+        }
+        None
+    }
+
+    /// Flush if the deadline has passed. Returns the partial batch.
+    pub fn poll(&mut self, now: f64) -> Option<Vec<T>> {
+        match self.deadline {
+            Some(d) if now >= d && !self.pending.is_empty() => {
+                self.deadline = None;
+                Some(std::mem::take(&mut self.pending))
+            }
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (shutdown path).
+    pub fn drain(&mut self) -> Option<Vec<T>> {
+        self.deadline = None;
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Time until the current deadline, if any (for the server's sleep).
+    pub fn time_to_deadline(&self, now: f64) -> Option<Duration> {
+        self.deadline.map(|d| Duration::from_secs_f64((d - now).max(0.0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = Batcher::new(policy(3, 100));
+        assert!(b.push(1, 0.0).is_none());
+        assert!(b.push(2, 0.001).is_none());
+        let batch = b.push(3, 0.002).expect("third push fills the batch");
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let mut b = Batcher::new(policy(8, 2));
+        b.push("a", 0.0);
+        assert!(b.poll(0.001).is_none(), "before deadline");
+        let batch = b.poll(0.003).expect("after deadline");
+        assert_eq!(batch, vec!["a"]);
+    }
+
+    #[test]
+    fn deadline_resets_per_batch() {
+        let mut b = Batcher::new(policy(8, 2));
+        b.push(1, 0.0);
+        b.poll(0.01).unwrap();
+        assert!(b.poll(0.02).is_none(), "no pending, no flush");
+        b.push(2, 0.05);
+        assert!(b.poll(0.051).is_none());
+        assert_eq!(b.poll(0.06).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut b = Batcher::new(policy(8, 2));
+        b.push(1, 0.0);
+        b.push(2, 0.0);
+        assert_eq!(b.drain().unwrap(), vec![1, 2]);
+        assert!(b.drain().is_none());
+    }
+}

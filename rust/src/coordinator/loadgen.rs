@@ -1,0 +1,210 @@
+//! Open-loop load generation for serving experiments.
+//!
+//! Closed-loop drivers (fire N requests, wait for all) measure saturation
+//! throughput but hide queueing behaviour. An *open-loop* generator emits
+//! requests at a fixed offered rate regardless of completions — the regime
+//! where latency-vs-load curves (and the knee where the accelerator
+//! saturates) become visible. Arrivals are Poisson: exponential
+//! inter-arrival gaps from a deterministic PRNG, so every run and every CI
+//! failure replays identically.
+
+use std::time::{Duration, Instant};
+
+use crate::util::XorShift64;
+
+/// A deterministic Poisson arrival schedule.
+#[derive(Debug, Clone)]
+pub struct ArrivalSchedule {
+    /// Offsets from t=0 at which each request should be issued, sorted.
+    pub offsets: Vec<Duration>,
+    /// The offered rate the schedule was built for (requests/second).
+    pub rate_rps: f64,
+}
+
+impl ArrivalSchedule {
+    /// Build `n` Poisson arrivals at `rate_rps`, seeded deterministically.
+    pub fn poisson(n: usize, rate_rps: f64, seed: u64) -> ArrivalSchedule {
+        assert!(rate_rps > 0.0, "rate must be positive");
+        let mut rng = XorShift64::new(seed);
+        let mut t = 0.0_f64;
+        let mut offsets = Vec::with_capacity(n);
+        for _ in 0..n {
+            // inverse-CDF exponential gap; clamp the unit sample away from 0
+            let u = rng.unit().max(1e-12);
+            t += -u.ln() / rate_rps;
+            offsets.push(Duration::from_secs_f64(t));
+        }
+        ArrivalSchedule { offsets, rate_rps }
+    }
+
+    /// Uniform (constant-gap) arrivals — the burst-free reference.
+    pub fn uniform(n: usize, rate_rps: f64) -> ArrivalSchedule {
+        assert!(rate_rps > 0.0, "rate must be positive");
+        let gap = 1.0 / rate_rps;
+        ArrivalSchedule {
+            offsets: (1..=n).map(|i| Duration::from_secs_f64(i as f64 * gap)).collect(),
+            rate_rps,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Empirical rate of the schedule (n / span) — tests Poisson correctness.
+    pub fn empirical_rate(&self) -> f64 {
+        match self.offsets.last() {
+            None => 0.0,
+            Some(last) => self.offsets.len() as f64 / last.as_secs_f64().max(1e-12),
+        }
+    }
+}
+
+/// Outcome of one open-loop run.
+#[derive(Debug, Clone)]
+pub struct LoadResult {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// Requests rejected by admission control.
+    pub rejected: usize,
+    pub completed: usize,
+}
+
+/// Drive `submit` open-loop along `schedule`, then wait for all responses.
+///
+/// `submit` is called at (or as close as the clock allows to) each arrival
+/// offset and returns a completion receiver or an admission error. Latency
+/// comes from each [`Response::total`] — stamped by the worker at
+/// completion, so draining the receivers after the submission loop does not
+/// inflate early requests (the receivers buffer completed responses).
+pub fn run_open_loop<S>(schedule: &ArrivalSchedule, mut submit: S) -> LoadResult
+where
+    S: FnMut() -> anyhow::Result<std::sync::mpsc::Receiver<anyhow::Result<crate::coordinator::Response>>>,
+{
+    let start = Instant::now();
+    let mut pending: Vec<std::sync::mpsc::Receiver<_>> = Vec::new();
+    let mut rejected = 0usize;
+
+    for &offset in &schedule.offsets {
+        if let Some(sleep) = offset.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match submit() {
+            Ok(rx) => pending.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(pending.len());
+    for rx in pending {
+        if let Ok(Ok(resp)) = rx.recv() {
+            latencies_ms.push(resp.total.as_secs_f64() * 1e3);
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if latencies_ms.is_empty() {
+            return 0.0;
+        }
+        latencies_ms[((latencies_ms.len() as f64 - 1.0) * p).round() as usize]
+    };
+    let completed = latencies_ms.len();
+    LoadResult {
+        offered_rps: schedule.rate_rps,
+        achieved_rps: completed as f64 / wall.max(1e-12),
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        p99_ms: pct(0.99),
+        mean_ms: if completed == 0 {
+            0.0
+        } else {
+            latencies_ms.iter().sum::<f64>() / completed as f64
+        },
+        rejected,
+        completed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_schedule_hits_target_rate() {
+        let s = ArrivalSchedule::poisson(2000, 500.0, 42);
+        assert_eq!(s.len(), 2000);
+        let rate = s.empirical_rate();
+        assert!((400.0..600.0).contains(&rate), "empirical rate {rate}");
+        // sorted offsets
+        for w in s.offsets.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed() {
+        let a = ArrivalSchedule::poisson(100, 50.0, 1);
+        let b = ArrivalSchedule::poisson(100, 50.0, 1);
+        assert_eq!(a.offsets, b.offsets);
+        let c = ArrivalSchedule::poisson(100, 50.0, 2);
+        assert_ne!(a.offsets, c.offsets);
+    }
+
+    #[test]
+    fn poisson_gaps_are_bursty_uniform_gaps_are_not() {
+        let p = ArrivalSchedule::poisson(1000, 100.0, 3);
+        let u = ArrivalSchedule::uniform(1000, 100.0);
+        let cv = |s: &ArrivalSchedule| {
+            let gaps: Vec<f64> = s
+                .offsets
+                .windows(2)
+                .map(|w| (w[1] - w[0]).as_secs_f64())
+                .collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var.sqrt() / mean
+        };
+        // exponential gaps: coefficient of variation ≈ 1; uniform: 0
+        assert!(cv(&p) > 0.8, "poisson cv {}", cv(&p));
+        assert!(cv(&u) < 1e-9, "uniform cv {}", cv(&u));
+    }
+
+    #[test]
+    fn open_loop_against_live_server() {
+        use crate::coordinator::{BatchPolicy, Server, SimOnlyEngine};
+        use crate::device::Device;
+        use crate::dse::{self, DseConfig};
+        use crate::ir::Quant;
+
+        let net = crate::models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let engine = SimOnlyEngine {
+            design: r.design,
+            device: dev,
+            input_len: 3 * 32 * 32,
+            output_len: 10,
+        };
+        let server = Server::start(
+            engine,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        let schedule = ArrivalSchedule::poisson(64, 2000.0, 11);
+        let res = run_open_loop(&schedule, || server.submit(vec![0.5; 3 * 32 * 32]));
+        assert_eq!(res.completed, 64);
+        assert_eq!(res.rejected, 0);
+        assert!(res.p50_ms <= res.p95_ms && res.p95_ms <= res.p99_ms);
+        assert!(res.achieved_rps > 0.0);
+        server.shutdown();
+    }
+}

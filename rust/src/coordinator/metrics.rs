@@ -1,0 +1,108 @@
+//! Serving metrics: latency distribution, throughput, batch sizes.
+
+use std::time::Duration;
+
+/// Online metrics accumulator (plain struct; the server wraps it in a lock).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    batches: u64,
+    batch_items: u64,
+    sim_accel_s: f64,
+    started_at: Option<std::time::Instant>,
+}
+
+/// A point-in-time summary.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub throughput_rps: f64,
+    /// Total *simulated accelerator* time spent, seconds.
+    pub sim_accel_s: f64,
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, latencies: &[Duration], sim_accel: Duration) {
+        if self.started_at.is_none() {
+            self.started_at = Some(std::time::Instant::now());
+        }
+        self.batches += 1;
+        self.batch_items += latencies.len() as u64;
+        self.sim_accel_s += sim_accel.as_secs_f64();
+        self.latencies_us.extend(latencies.iter().map(|d| d.as_micros() as u64));
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_unstable();
+        let pct = |p: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+            sorted[idx] as f64 / 1e3
+        };
+        let mean = if sorted.is_empty() {
+            0.0
+        } else {
+            sorted.iter().sum::<u64>() as f64 / sorted.len() as f64 / 1e3
+        };
+        let elapsed = self.started_at.map_or(0.0, |t| t.elapsed().as_secs_f64());
+        MetricsSnapshot {
+            requests: self.batch_items,
+            batches: self.batches,
+            mean_batch: if self.batches == 0 {
+                0.0
+            } else {
+                self.batch_items as f64 / self.batches as f64
+            },
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            mean_ms: mean,
+            throughput_rps: if elapsed > 0.0 { self.batch_items as f64 / elapsed } else { 0.0 },
+            sim_accel_s: self.sim_accel_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99_ms, 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::default();
+        let lats: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        m.record_batch(&lats, Duration::from_millis(5));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms);
+        assert!((s.p50_ms - 50.0).abs() < 2.0, "{}", s.p50_ms);
+        assert!((s.p99_ms - 100.0).abs() < 2.0, "{}", s.p99_ms);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::default();
+        m.record_batch(&[Duration::from_millis(1); 4], Duration::ZERO);
+        m.record_batch(&[Duration::from_millis(1); 2], Duration::ZERO);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 3.0).abs() < 1e-9);
+    }
+}

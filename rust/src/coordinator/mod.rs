@@ -1,0 +1,26 @@
+//! Serving coordinator — the Layer-3 request path.
+//!
+//! The accelerator's static schedule (from the DSE) fixes the batch timing;
+//! the coordinator's job is the classic serving loop around it: queue
+//! incoming requests, form batches, dispatch each batch to the engine
+//! (PJRT numerics + simulated accelerator clock), and report metrics.
+//!
+//! Everything here is synchronous-core with an async facade: the batching
+//! policy and metrics are plain testable structs; [`Server`] wires them to
+//! tokio channels.
+
+mod batcher;
+mod loadgen;
+mod metrics;
+mod priority;
+mod registry;
+mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use loadgen::{run_open_loop, ArrivalSchedule, LoadResult};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use priority::{Priority, PriorityBatcher};
+pub use registry::{ModelEntry, ModelRegistry};
+pub use server::{
+    Engine, PjrtEngine, Request, Response, Server, ServerOptions, SimOnlyEngine,
+};

@@ -1,0 +1,164 @@
+//! Priority-aware dynamic batching.
+//!
+//! Two service classes: `High` (latency-sensitive, e.g. interactive
+//! requests) and `Normal` (throughput traffic). Batches are formed
+//! high-first, and the flush deadline follows the oldest *high* item when
+//! one is pending — so a stream of bulk traffic can never starve the
+//! interactive class, while a lone bulk request still flushes within its own
+//! deadline.
+
+use std::time::Duration;
+
+use super::BatchPolicy;
+
+/// Service class of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Normal,
+    High,
+}
+
+/// Priority batching state machine (time injected, like [`super::Batcher`]).
+#[derive(Debug)]
+pub struct PriorityBatcher<T> {
+    policy: BatchPolicy,
+    /// Deadline multiplier for the high class (fraction of `max_wait`).
+    high_wait_frac: f64,
+    high: Vec<T>,
+    normal: Vec<T>,
+    deadline: Option<f64>,
+}
+
+impl<T> PriorityBatcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        PriorityBatcher { policy, high_wait_frac: 0.25, high: Vec::new(), normal: Vec::new(), deadline: None }
+    }
+
+    fn total_pending(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    fn form_batch(&mut self) -> Vec<T> {
+        self.deadline = None;
+        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        // high first, then backfill with normal traffic
+        while batch.len() < self.policy.max_batch && !self.high.is_empty() {
+            batch.push(self.high.remove(0));
+        }
+        while batch.len() < self.policy.max_batch && !self.normal.is_empty() {
+            batch.push(self.normal.remove(0));
+        }
+        // items left over keep accumulating under a fresh deadline set by
+        // the next push/poll cycle
+        batch
+    }
+
+    /// Add a request at monotonic `now` (seconds). Returns a full batch.
+    pub fn push(&mut self, item: T, prio: Priority, now: f64) -> Option<Vec<T>> {
+        let wait = match prio {
+            Priority::High => self.policy.max_wait.as_secs_f64() * self.high_wait_frac,
+            Priority::Normal => self.policy.max_wait.as_secs_f64(),
+        };
+        let item_deadline = now + wait;
+        // the batch deadline is the *earliest* pending deadline
+        self.deadline = Some(match self.deadline {
+            Some(d) if self.total_pending() > 0 => d.min(item_deadline),
+            _ => item_deadline,
+        });
+        match prio {
+            Priority::High => self.high.push(item),
+            Priority::Normal => self.normal.push(item),
+        }
+        if self.total_pending() >= self.policy.max_batch {
+            return Some(self.form_batch());
+        }
+        None
+    }
+
+    /// Flush if the earliest deadline has passed.
+    pub fn poll(&mut self, now: f64) -> Option<Vec<T>> {
+        match self.deadline {
+            Some(d) if now >= d && self.total_pending() > 0 => Some(self.form_batch()),
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (shutdown path). May return more than one batch's
+    /// worth; the caller splits if needed.
+    pub fn drain(&mut self) -> Option<Vec<T>> {
+        self.deadline = None;
+        if self.total_pending() == 0 {
+            return None;
+        }
+        let mut out = std::mem::take(&mut self.high);
+        out.append(&mut self.normal);
+        Some(out)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.total_pending()
+    }
+
+    pub fn time_to_deadline(&self, now: f64) -> Option<Duration> {
+        self.deadline.map(|d| Duration::from_secs_f64((d - now).max(0.0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn high_items_lead_the_batch() {
+        let mut b = PriorityBatcher::new(policy(3, 100));
+        assert!(b.push("n1", Priority::Normal, 0.0).is_none());
+        assert!(b.push("n2", Priority::Normal, 0.001).is_none());
+        let batch = b.push("h1", Priority::High, 0.002).unwrap();
+        assert_eq!(batch, vec!["h1", "n1", "n2"]);
+    }
+
+    #[test]
+    fn high_deadline_is_tighter() {
+        let mut b = PriorityBatcher::new(policy(8, 100)); // normal: 100ms, high: 25ms
+        b.push(1, Priority::Normal, 0.0);
+        // normal-only pending: no flush at 30ms
+        assert!(b.poll(0.030).is_none());
+        b.push(2, Priority::High, 0.030); // high deadline = 55ms
+        assert!(b.poll(0.050).is_none());
+        let batch = b.poll(0.056).expect("high deadline flushes early");
+        assert_eq!(batch, vec![2, 1]);
+    }
+
+    #[test]
+    fn normal_traffic_cannot_starve_high() {
+        let mut b = PriorityBatcher::new(policy(2, 10));
+        b.push("h", Priority::High, 0.0);
+        // a flood of normal traffic fills batches; high goes out in the first
+        let batch = b.push("n1", Priority::Normal, 0.001).unwrap();
+        assert_eq!(batch[0], "h");
+    }
+
+    #[test]
+    fn overflow_stays_pending() {
+        let mut b = PriorityBatcher::new(policy(2, 10));
+        b.push(1, Priority::Normal, 0.0);
+        let full = b.push(2, Priority::Normal, 0.0).unwrap();
+        assert_eq!(full.len(), 2);
+        b.push(3, Priority::Normal, 0.001);
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.drain().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn deadline_tracks_earliest() {
+        let mut b = PriorityBatcher::new(policy(8, 100));
+        b.push(1, Priority::Normal, 0.0); // deadline 0.1
+        b.push(2, Priority::Normal, 0.05); // own deadline 0.15, batch keeps 0.1
+        let d = b.time_to_deadline(0.06).unwrap();
+        assert!((d.as_secs_f64() - 0.04).abs() < 1e-9, "{d:?}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Multi-model registry: route requests to per-model serving loops.
+//!
+//! A deployment typically hosts several accelerator designs at once (e.g.
+//! one per model variant or quantization). The registry owns one [`Server`]
+//! per entry — each with its own worker thread, engine, batcher and metrics
+//! — and routes by model name, mirroring the model-registry pattern of
+//! serving frameworks (vLLM router, Triton).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::{BatchPolicy, Engine, MetricsSnapshot, Priority, Response, Server, ServerOptions};
+
+/// Static description of one served model.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    /// Flattened input length the engine expects.
+    pub input_len: usize,
+    pub policy: BatchPolicy,
+    pub options: ServerOptions,
+}
+
+/// A set of named serving loops.
+pub struct ModelRegistry {
+    servers: HashMap<String, (ModelEntry, Server)>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry { servers: HashMap::new() }
+    }
+
+    /// Register a model with an engine factory (constructed on the model's
+    /// worker thread — required for PJRT engines). Errors if the name is
+    /// taken or the factory fails.
+    pub fn register<F>(&mut self, entry: ModelEntry, factory: F) -> Result<()>
+    where
+        F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+    {
+        if self.servers.contains_key(&entry.name) {
+            return Err(anyhow!("model `{}` already registered", entry.name));
+        }
+        let server = Server::start_with_opts(factory, entry.policy, entry.options)?;
+        self.servers.insert(entry.name.clone(), (entry, server));
+        Ok(())
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.servers.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn entry(&self, model: &str) -> Option<&ModelEntry> {
+        self.servers.get(model).map(|(e, _)| e)
+    }
+
+    /// Blocking inference against a named model.
+    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<Response> {
+        self.infer_with(model, input, Priority::Normal)
+    }
+
+    /// Blocking inference with an explicit service class.
+    pub fn infer_with(&self, model: &str, input: Vec<f32>, prio: Priority) -> Result<Response> {
+        let (entry, server) =
+            self.servers.get(model).ok_or_else(|| anyhow!("unknown model `{model}`"))?;
+        if input.len() != entry.input_len {
+            return Err(anyhow!(
+                "model `{model}` expects input length {}, got {}",
+                entry.input_len,
+                input.len()
+            ));
+        }
+        let rx = server.submit_with(input, prio)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped request"))?
+    }
+
+    /// Async submit against a named model.
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        prio: Priority,
+    ) -> Result<std::sync::mpsc::Receiver<Result<Response>>> {
+        let (entry, server) =
+            self.servers.get(model).ok_or_else(|| anyhow!("unknown model `{model}`"))?;
+        if input.len() != entry.input_len {
+            return Err(anyhow!(
+                "model `{model}` expects input length {}, got {}",
+                entry.input_len,
+                input.len()
+            ));
+        }
+        server.submit_with(input, prio)
+    }
+
+    /// Per-model metrics.
+    pub fn metrics(&self, model: &str) -> Option<MetricsSnapshot> {
+        self.servers.get(model).map(|(_, s)| s.metrics())
+    }
+
+    /// Shut down every serving loop, flushing pending requests.
+    pub fn shutdown(self) {
+        for (_, (_, server)) in self.servers {
+            server.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SimOnlyEngine;
+    use crate::device::Device;
+    use crate::dse::{self, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+    use std::time::Duration;
+
+    fn engine_for(model: &str, q: Quant, out_len: usize) -> SimOnlyEngine {
+        let net = models::by_name(model, q).unwrap();
+        let dev = Device::u250();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let input_len = {
+            let (c, h, w) = net.input_shape;
+            (c * h * w) as usize
+        };
+        SimOnlyEngine { design: r.design, device: dev, input_len, output_len: out_len }
+    }
+
+    fn entry(name: &str, input_len: usize) -> ModelEntry {
+        ModelEntry {
+            name: name.into(),
+            input_len,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            options: ServerOptions::default(),
+        }
+    }
+
+    #[test]
+    fn routes_to_the_right_model() {
+        let mut reg = ModelRegistry::new();
+        let toy = engine_for("toy", Quant::W8A8, 10);
+        let toy_len = toy.input_len;
+        reg.register(entry("toy", toy_len), move || Ok(Box::new(toy) as _)).unwrap();
+        let resp = reg.infer("toy", vec![1.0; toy_len]).unwrap();
+        assert_eq!(resp.output.len(), 10);
+        assert!(reg.infer("nonexistent", vec![0.0; 4]).is_err());
+        assert_eq!(reg.models(), vec!["toy"]);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_input_length() {
+        let mut reg = ModelRegistry::new();
+        let toy = engine_for("toy", Quant::W8A8, 10);
+        let toy_len = toy.input_len;
+        reg.register(entry("toy", toy_len), move || Ok(Box::new(toy) as _)).unwrap();
+        let err = reg.infer("toy", vec![0.0; 7]).unwrap_err();
+        assert!(err.to_string().contains("expects input length"), "{err}");
+        reg.shutdown();
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut reg = ModelRegistry::new();
+        let a = engine_for("toy", Quant::W8A8, 10);
+        let len = a.input_len;
+        reg.register(entry("toy", len), move || Ok(Box::new(a) as _)).unwrap();
+        let b = engine_for("toy", Quant::W8A8, 10);
+        let err = reg.register(entry("toy", len), move || Ok(Box::new(b) as _)).unwrap_err();
+        assert!(err.to_string().contains("already registered"));
+        reg.shutdown();
+    }
+
+    #[test]
+    fn independent_metrics_per_model() {
+        let mut reg = ModelRegistry::new();
+        let a = engine_for("toy", Quant::W8A8, 10);
+        let la = a.input_len;
+        reg.register(entry("toy-a", la), move || Ok(Box::new(a) as _)).unwrap();
+        let b = engine_for("toy", Quant::W8A8, 10);
+        reg.register(entry("toy-b", la), move || Ok(Box::new(b) as _)).unwrap();
+        for _ in 0..3 {
+            reg.infer("toy-a", vec![0.0; la]).unwrap();
+        }
+        reg.infer("toy-b", vec![0.0; la]).unwrap();
+        assert_eq!(reg.metrics("toy-a").unwrap().requests, 3);
+        assert_eq!(reg.metrics("toy-b").unwrap().requests, 1);
+        assert!(reg.metrics("missing").is_none());
+        reg.shutdown();
+    }
+}

@@ -1,0 +1,504 @@
+//! The serving loop: a dedicated worker thread around the batcher + engine.
+//!
+//! (This build is fully offline/self-contained, so the front-end is a plain
+//! thread + channel rather than an async executor; the coordinator logic —
+//! batching, dispatch, metrics — is identical.)
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{BatchPolicy, Metrics, MetricsSnapshot, Priority, PriorityBatcher};
+use crate::device::Device;
+use crate::dse::Design;
+use crate::runtime::{LoadedModel, Tensor};
+use crate::sim::{simulate, SimConfig};
+
+/// An inference request entering the coordinator.
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub priority: Priority,
+    pub submitted: Instant,
+    reply: mpsc::Sender<Result<Response>>,
+}
+
+/// Server-level options beyond the batching policy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerOptions {
+    /// Admission control: maximum in-flight (queued + executing) requests.
+    /// `0` disables the cap. Overloaded submits fail fast with a "queue
+    /// full" error instead of growing the queue without bound.
+    pub queue_cap: usize,
+}
+
+/// The reply to a request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// Wall-clock from submit to reply.
+    pub total: Duration,
+    /// Simulated accelerator time for the batch this request rode in.
+    pub accel: Duration,
+    /// Batch size this request was served with.
+    pub batch: usize,
+}
+
+/// What the coordinator dispatches batches to.
+///
+/// NOT `Send`: PJRT handles are thread-affine (`Rc` internals), so the
+/// engine lives entirely on the worker thread — construct it there via
+/// [`Server::start_with`].
+pub trait Engine: 'static {
+    /// Run the numerics for a batch of flattened inputs; one output per input.
+    fn infer(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+    /// Expected flattened input length.
+    fn input_len(&self) -> usize;
+    /// Simulated accelerator wall-clock for a batch of this size.
+    fn accel_batch_time(&mut self, batch: usize) -> Duration;
+}
+
+/// Engine backed by a PJRT executable for numerics and the event simulator
+/// for accelerator timing.
+pub struct PjrtEngine {
+    model: LoadedModel,
+    design: Design,
+    device: Device,
+    /// (channels, height, width) of one sample.
+    pub input_shape: (usize, usize, usize),
+    /// Batch size the artifact was lowered with: smaller batches are padded.
+    pub artifact_batch: usize,
+    accel_cache: std::collections::HashMap<usize, Duration>,
+}
+
+impl PjrtEngine {
+    pub fn new(
+        model: LoadedModel,
+        design: Design,
+        device: Device,
+        input_shape: (usize, usize, usize),
+        artifact_batch: usize,
+    ) -> PjrtEngine {
+        PjrtEngine {
+            model,
+            design,
+            device,
+            input_shape,
+            artifact_batch,
+            accel_cache: std::collections::HashMap::new(),
+        }
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn infer(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if batch.len() > self.artifact_batch {
+            bail!("batch {} exceeds artifact batch {}", batch.len(), self.artifact_batch);
+        }
+        let (c, h, w) = self.input_shape;
+        let sample = c * h * w;
+        // pad to the artifact's static batch shape
+        let mut data = Vec::with_capacity(self.artifact_batch * sample);
+        for b in batch {
+            if b.len() != sample {
+                bail!("input len {} != {}", b.len(), sample);
+            }
+            data.extend_from_slice(b);
+        }
+        data.resize(self.artifact_batch * sample, 0.0);
+        let t = Tensor::new(data, vec![self.artifact_batch as i64, c as i64, h as i64, w as i64])?;
+        let outs = self.model.run(&[t])?;
+        let logits = &outs[0];
+        let per = logits.data.len() / self.artifact_batch;
+        Ok(batch
+            .iter()
+            .enumerate()
+            .map(|(i, _)| logits.data[i * per..(i + 1) * per].to_vec())
+            .collect())
+    }
+
+    fn input_len(&self) -> usize {
+        let (c, h, w) = self.input_shape;
+        c * h * w
+    }
+
+    fn accel_batch_time(&mut self, batch: usize) -> Duration {
+        if let Some(d) = self.accel_cache.get(&batch) {
+            return *d;
+        }
+        let sim = simulate(
+            &self.design,
+            &self.device,
+            &SimConfig { batch: batch as u64, ..Default::default() },
+        );
+        let d = Duration::from_secs_f64(sim.makespan_s);
+        self.accel_cache.insert(batch, d);
+        d
+    }
+}
+
+/// Timing-only engine (no PJRT): echoes a checksum vector. Used by tests and
+/// benches where the numerics are irrelevant.
+pub struct SimOnlyEngine {
+    pub design: Design,
+    pub device: Device,
+    pub input_len: usize,
+    pub output_len: usize,
+}
+
+impl Engine for SimOnlyEngine {
+    fn infer(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(batch
+            .iter()
+            .map(|b| {
+                let s: f32 = b.iter().sum();
+                vec![s; self.output_len]
+            })
+            .collect())
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn accel_batch_time(&mut self, batch: usize) -> Duration {
+        let sim = simulate(
+            &self.design,
+            &self.device,
+            &SimConfig { batch: batch as u64, ..Default::default() },
+        );
+        Duration::from_secs_f64(sim.makespan_s)
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Server {
+    tx: Option<mpsc::Sender<Request>>,
+    metrics: Arc<Mutex<Metrics>>,
+    next_id: AtomicU64,
+    worker: Option<std::thread::JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+    queue_cap: usize,
+}
+
+impl Server {
+    /// Spawn the serving loop with a `Send` engine.
+    pub fn start<E: Engine + Send>(engine: E, policy: BatchPolicy) -> Server {
+        Self::start_with(move || Ok(Box::new(engine) as Box<dyn Engine>), policy)
+            .expect("infallible factory")
+    }
+
+    /// [`Server::start_with`] with default options.
+    pub fn start_with<F>(factory: F, policy: BatchPolicy) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+    {
+        Self::start_with_opts(factory, policy, ServerOptions::default())
+    }
+
+    /// Spawn the serving loop, constructing the engine *on* the worker
+    /// thread (required for PJRT engines, whose handles are thread-affine).
+    /// Blocks until the engine is ready; factory errors are returned here.
+    pub fn start_with_opts<F>(
+        factory: F,
+        policy: BatchPolicy,
+        opts: ServerOptions,
+    ) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics_worker = metrics.clone();
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let in_flight_worker = in_flight.clone();
+
+        let worker = std::thread::spawn(move || {
+            let mut engine = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let epoch = Instant::now();
+            let now = |e: &Instant| e.elapsed().as_secs_f64();
+            let mut batcher: PriorityBatcher<Request> = PriorityBatcher::new(policy);
+            loop {
+                let wait =
+                    batcher.time_to_deadline(now(&epoch)).unwrap_or(Duration::from_secs(3600));
+                match rx.recv_timeout(wait) {
+                    Ok(r) => {
+                        let prio = r.priority;
+                        if let Some(batch) = batcher.push(r, prio, now(&epoch)) {
+                            process(&mut engine, batch, &metrics_worker, &in_flight_worker);
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if let Some(batch) = batcher.poll(now(&epoch)) {
+                            process(&mut engine, batch, &metrics_worker, &in_flight_worker);
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        while let Some(batch) = batcher.drain() {
+                            process(&mut engine, batch, &metrics_worker, &in_flight_worker);
+                        }
+                        break;
+                    }
+                }
+            }
+        });
+
+        ready_rx.recv().map_err(|_| anyhow!("engine factory panicked"))??;
+        Ok(Server {
+            tx: Some(tx),
+            metrics,
+            next_id: AtomicU64::new(0),
+            worker: Some(worker),
+            in_flight,
+            queue_cap: opts.queue_cap,
+        })
+    }
+
+    /// Submit one input and block until its response arrives.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(input)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped request"))?
+    }
+
+    /// Submit one input at normal priority; returns the channel the response
+    /// will arrive on (lets callers issue many requests concurrently).
+    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.submit_with(input, Priority::Normal)
+    }
+
+    /// Submit with an explicit service class. Fails fast with a "queue full"
+    /// error when admission control is enabled and the in-flight count is at
+    /// the cap.
+    pub fn submit_with(
+        &self,
+        input: Vec<f32>,
+        priority: Priority,
+    ) -> Result<mpsc::Receiver<Result<Response>>> {
+        if self.queue_cap > 0 {
+            // optimistic reservation; backed out on send failure
+            let prev = self.in_flight.fetch_add(1, Ordering::AcqRel);
+            if prev >= self.queue_cap {
+                self.in_flight.fetch_sub(1, Ordering::AcqRel);
+                bail!("queue full: {} in flight (cap {})", prev, self.queue_cap);
+            }
+        } else {
+            self.in_flight.fetch_add(1, Ordering::AcqRel);
+        }
+        let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("coordinator stopped"))
+            .and_then(|tx| {
+                tx.send(Request { id, input, priority, submitted: Instant::now(), reply })
+                    .map_err(|_| anyhow!("coordinator stopped"))
+            })
+            .inspect_err(|_| {
+                self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            })?;
+        Ok(rx)
+    }
+
+    /// Requests currently queued or executing.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Graceful shutdown: close the queue (flushing pending requests), then
+    /// join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn process(
+    engine: &mut Box<dyn Engine>,
+    batch: Vec<Request>,
+    metrics: &Arc<Mutex<Metrics>>,
+    in_flight: &Arc<AtomicUsize>,
+) {
+    let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+    let accel = engine.accel_batch_time(batch.len());
+    let result = engine.infer(&inputs);
+    let done = Instant::now();
+    let latencies: Vec<Duration> = batch.iter().map(|r| done - r.submitted).collect();
+    metrics.lock().unwrap().record_batch(&latencies, accel);
+    in_flight.fetch_sub(batch.len(), Ordering::AcqRel);
+    let n = batch.len();
+    match result {
+        Ok(outputs) => {
+            for (req, (out, lat)) in
+                batch.into_iter().zip(outputs.into_iter().zip(latencies.into_iter()))
+            {
+                let _ = req.reply.send(Ok(Response {
+                    id: req.id,
+                    output: out,
+                    total: lat,
+                    accel,
+                    batch: n,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:?}");
+            for req in batch {
+                let _ = req.reply.send(Err(anyhow!("batch failed: {msg}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{self, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    fn sim_engine() -> SimOnlyEngine {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        SimOnlyEngine { design: r.design, device: dev, input_len: 3 * 32 * 32, output_len: 10 }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = Server::start(sim_engine(), BatchPolicy::default());
+        let resp = server.infer(vec![0.5; 3 * 32 * 32]).unwrap();
+        assert_eq!(resp.output.len(), 10);
+        assert!(resp.accel > Duration::ZERO);
+        let m = server.metrics();
+        assert_eq!(m.requests, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let server = Server::start(
+            sim_engine(),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
+        );
+        let receivers: Vec<_> =
+            (0..8).map(|i| server.submit(vec![i as f32; 3 * 32 * 32]).unwrap()).collect();
+        let mut max_batch = 0;
+        for rx in receivers {
+            let r = rx.recv().unwrap().unwrap();
+            max_batch = max_batch.max(r.batch);
+        }
+        assert!(max_batch >= 2, "some batching must occur, saw max {max_batch}");
+        let m = server.metrics();
+        assert_eq!(m.requests, 8);
+        assert!(m.batches <= 7);
+        server.shutdown();
+    }
+
+    #[test]
+    fn sim_engine_checksum_numerics() {
+        let server = Server::start(sim_engine(), BatchPolicy::default());
+        let input = vec![1.0f32; 3 * 32 * 32];
+        let resp = server.infer(input).unwrap();
+        assert!((resp.output[0] - 3072.0).abs() < 1e-3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn admission_control_rejects_overload() {
+        let server = Server::start_with_opts(
+            {
+                let e = sim_engine();
+                move || Ok(Box::new(e) as _)
+            },
+            // huge wait so requests pile up in the queue
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(5) },
+            ServerOptions { queue_cap: 4 },
+        )
+        .unwrap();
+        let mut pending = Vec::new();
+        let mut rejected = 0;
+        for _ in 0..8 {
+            match server.submit(vec![0.0; 3 * 32 * 32]) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => {
+                    assert!(e.to_string().contains("queue full"), "{e}");
+                    rejected += 1;
+                }
+            }
+        }
+        assert_eq!(pending.len(), 4);
+        assert_eq!(rejected, 4);
+        assert_eq!(server.in_flight(), 4);
+        server.shutdown(); // flush: all accepted requests complete
+        for rx in pending {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn high_priority_rides_first_in_batch() {
+        let server = Server::start(
+            sim_engine(),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) },
+        );
+        // 3 normal + 1 high fill one batch of 4; all complete
+        let n: Vec<_> =
+            (0..3).map(|_| server.submit(vec![0.0; 3 * 32 * 32]).unwrap()).collect();
+        let h = server.submit_with(vec![1.0; 3 * 32 * 32], Priority::High).unwrap();
+        let hr = h.recv().unwrap().unwrap();
+        assert_eq!(hr.batch, 4, "high request rode the shared batch");
+        for rx in n {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn in_flight_returns_to_zero() {
+        let server = Server::start(sim_engine(), BatchPolicy::default());
+        for _ in 0..5 {
+            server.infer(vec![0.0; 3 * 32 * 32]).unwrap();
+        }
+        assert_eq!(server.in_flight(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let server = Server::start(
+            sim_engine(),
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(10) },
+        );
+        let rx = server.submit(vec![0.0; 3 * 32 * 32]).unwrap();
+        server.shutdown(); // must flush rather than drop the pending request
+        assert!(rx.recv().unwrap().is_ok());
+    }
+}

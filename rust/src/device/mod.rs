@@ -1,0 +1,228 @@
+//! FPGA device library.
+//!
+//! Resource figures come from public AMD/Xilinx datasheets; the off-chip
+//! bandwidths are the effective (not theoretical-peak) figures commonly used
+//! in the accelerator literature. On-chip memory capacity counts BRAM plus
+//! the distributed-LUTRAM allowance the paper's toolflow (fpgaConvNet) also
+//! draws on, which is why the ZCU102 capacity normalizes Table III's 5.1 MB
+//! at 99% utilization.
+
+/// A target FPGA platform: the constraint vector `(A, B)` of paper Eq. 6
+/// split by resource class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    /// Number of BRAM36 blocks (36 Kib each).
+    pub bram36: u32,
+    /// Number of URAM blocks (288 Kib each); 0 on devices without URAM.
+    pub uram: u32,
+    /// DSP48 slices.
+    pub dsp: u32,
+    /// Logic LUTs.
+    pub lut: u32,
+    /// Flip-flops.
+    pub ff: u32,
+    /// Effective off-chip bandwidth `B`, bits/second.
+    pub bandwidth_bps: f64,
+    /// Peak fabric clock for the compute domain, MHz (`clk_comp`).
+    pub clk_comp_mhz: f64,
+    /// DMA/memory-controller clock domain, MHz (`clk_dma`).
+    pub clk_dma_mhz: f64,
+    /// Width of the DMA/AXI data bus feeding the weight buffers, bits.
+    /// The shared buffer's write port runs at this width in the `clk_dma`
+    /// domain regardless of the (often much narrower) read-side `M_wid`.
+    pub dma_port_bits: u64,
+}
+
+/// Capacity of one BRAM36 block in bits.
+pub const BRAM36_BITS: u64 = 36 * 1024;
+/// Maximum data width of one BRAM36 in simple dual-port mode.
+pub const BRAM36_WIDTH: u64 = 72;
+/// Maximum depth of one BRAM36 at max width.
+pub const BRAM36_DEPTH: u64 = 512;
+/// Capacity of one URAM block in bits.
+pub const URAM_BITS: u64 = 288 * 1024;
+
+impl Device {
+    /// Total on-chip memory capacity in bits (BRAM + URAM).
+    pub fn mem_bits(&self) -> u64 {
+        self.bram36 as u64 * BRAM36_BITS + self.uram as u64 * URAM_BITS
+    }
+
+    /// Total on-chip memory capacity in megabytes (for Table III-style
+    /// reporting: block count x max capacity per block).
+    pub fn mem_mbytes(&self) -> f64 {
+        self.mem_bits() as f64 / 8.0 / 1e6
+    }
+
+    /// On-chip memory measured in BRAM36-equivalents (URAM = 8 BRAM36).
+    pub fn mem_bram_equiv(&self) -> u32 {
+        self.bram36 + self.uram * 8
+    }
+
+    /// Off-chip bandwidth in Gbit/s.
+    pub fn bandwidth_gbps(&self) -> f64 {
+        self.bandwidth_bps / 1e9
+    }
+
+    /// Zynq-7020 (Zedboard): small embedded device, single DDR3 channel
+    /// shared with the PS.
+    pub fn zedboard() -> Device {
+        Device {
+            name: "zedboard",
+            bram36: 280,
+            uram: 0,
+            dsp: 220,
+            lut: 53_200,
+            ff: 106_400,
+            bandwidth_bps: 12.8e9, // 1.6 GB/s effective of DDR3-1066 x32
+            clk_comp_mhz: 150.0,
+            clk_dma_mhz: 200.0,
+            dma_port_bits: 128,
+        }
+    }
+
+    /// Zynq-7045 (ZC706).
+    pub fn zc706() -> Device {
+        Device {
+            name: "zc706",
+            bram36: 545,
+            uram: 0,
+            dsp: 900,
+            lut: 218_600,
+            ff: 437_200,
+            bandwidth_bps: 60e9, // ~7.5 GB/s effective of DDR3-1866 x64
+            clk_comp_mhz: 200.0,
+            clk_dma_mhz: 250.0,
+            dma_port_bits: 256,
+        }
+    }
+
+    /// Zynq UltraScale+ ZU9EG (ZCU102). Memory capacity includes the
+    /// LUTRAM-as-memory allowance (~1 MB) on top of 912 BRAM36, matching
+    /// the paper's Table III normalization (5.1 MB == 99%).
+    pub fn zcu102() -> Device {
+        Device {
+            name: "zcu102",
+            bram36: 912 + 240, // 240 BRAM36-equivalents of distributed LUTRAM
+            uram: 0,
+            dsp: 2520,
+            lut: 274_080,
+            ff: 548_160,
+            bandwidth_bps: 136.5e9, // ~17 GB/s effective of DDR4-2400 x64
+            clk_comp_mhz: 250.0,
+            clk_dma_mhz: 300.0,
+            dma_port_bits: 512,
+        }
+    }
+
+    /// Alveo U50: HBM2 device.
+    pub fn u50() -> Device {
+        Device {
+            name: "u50",
+            bram36: 1344,
+            uram: 640,
+            dsp: 5952,
+            lut: 872_000,
+            ff: 1_743_000,
+            bandwidth_bps: 1_600e9, // 200 GB/s effective HBM2
+            clk_comp_mhz: 300.0,
+            clk_dma_mhz: 450.0,
+            dma_port_bits: 4096,
+        }
+    }
+
+    /// Alveo U250: large DDR4 device.
+    pub fn u250() -> Device {
+        Device {
+            name: "u250",
+            bram36: 2688,
+            uram: 1280,
+            dsp: 12288,
+            lut: 1_728_000,
+            ff: 3_456_000,
+            bandwidth_bps: 512e9, // 64 GB/s effective of 4x DDR4-2400
+            clk_comp_mhz: 300.0,
+            clk_dma_mhz: 450.0,
+            dma_port_bits: 2048,
+        }
+    }
+
+    /// Look up a device by name (case-insensitive).
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name.to_ascii_lowercase().as_str() {
+            "zedboard" => Some(Device::zedboard()),
+            "zc706" => Some(Device::zc706()),
+            "zcu102" => Some(Device::zcu102()),
+            "u50" => Some(Device::u50()),
+            "u250" => Some(Device::u250()),
+            _ => None,
+        }
+    }
+
+    /// All devices used in the paper's evaluation, small to large.
+    pub fn all() -> Vec<Device> {
+        vec![
+            Device::zedboard(),
+            Device::zc706(),
+            Device::zcu102(),
+            Device::u50(),
+            Device::u250(),
+        ]
+    }
+
+    /// Scale the on-chip memory budget by `factor` while keeping compute and
+    /// bandwidth fixed — the Fig. 6 `A_mem` sweep axis.
+    pub fn with_mem_scale(&self, factor: f64) -> Device {
+        let mut d = self.clone();
+        d.bram36 = (d.bram36 as f64 * factor).round() as u32;
+        d.uram = (d.uram as f64 * factor).round() as u32;
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_ordering_by_memory() {
+        let devs = Device::all();
+        let caps: Vec<u64> = devs.iter().map(|d| d.mem_bits()).collect();
+        for w in caps.windows(2) {
+            assert!(w[0] < w[1], "devices should be ordered small to large");
+        }
+    }
+
+    #[test]
+    fn zcu102_capacity_matches_table3_normalization() {
+        // Table III: 5.1 MB == 99% utilization -> capacity ~5.15 MB.
+        let mb = Device::zcu102().mem_mbytes();
+        assert!((4.9..5.5).contains(&mb), "zcu102 mem {mb} MB");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Device::by_name("ZCU102").unwrap().name, "zcu102");
+        assert_eq!(Device::by_name("u50").unwrap().dsp, 5952);
+        assert!(Device::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn mem_scale_sweep() {
+        let d = Device::zcu102();
+        let half = d.with_mem_scale(0.5);
+        assert!((half.mem_bits() as f64 / d.mem_bits() as f64 - 0.5).abs() < 0.01);
+        assert_eq!(half.dsp, d.dsp);
+        assert_eq!(half.bandwidth_bps, d.bandwidth_bps);
+    }
+
+    #[test]
+    fn u50_fits_resnet50_w8a8_barely() {
+        // ResNet50 W8A8 weights = 25.6 MB; U50 on-chip ~29 MB -> vanilla
+        // feasible but memory-starved (paper Table II: 15.0 ms vs 3.4 ms).
+        let d = Device::u50();
+        assert!(d.mem_mbytes() > 25.6);
+        assert!(d.mem_mbytes() < 40.0);
+    }
+}

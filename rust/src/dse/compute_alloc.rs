@@ -1,0 +1,141 @@
+//! Greedy compute allocation — Algorithm 1 procedures INCREMENT_UNROLL and
+//! ALLOCATE_COMPUTE.
+
+use super::{allocate_memory, Design, DseConfig};
+use crate::ce::next_unroll;
+use crate::device::Device;
+use crate::ir::OpKind;
+
+/// INCREMENT_UNROLL: advance the first unsaturated unroll dimension of layer
+/// `l` — priority order `k², f, c` as in Algorithm 1 — by at least `φ`
+/// (rounded up to the next divisor). Returns `false` when the layer is fully
+/// unrolled (its CE cannot be made faster).
+pub fn increment_unroll(design: &mut Design, l: usize, phi: u32) -> bool {
+    let layer = design.network.layers[l].clone();
+    let k2 = layer.kernel() * layer.kernel();
+    let cfg = &mut design.cfgs[l];
+
+    // (dimension size, current value) in Algorithm 1's priority order.
+    let dims: Vec<(u32, u32, u8)> = match layer.op {
+        OpKind::Conv { .. } => vec![
+            (k2, cfg.kp, 0),
+            (layer.c_out, cfg.fp, 1),
+            (layer.c_per_group(), cfg.cp, 2),
+        ],
+        OpKind::Fc => vec![(layer.c_out, cfg.fp, 1), (layer.c_in, cfg.cp, 2)],
+        OpKind::Pool { .. } => vec![(k2, cfg.kp, 0), (layer.c_in, cfg.cp, 2)],
+        _ => vec![(layer.c_in, cfg.cp, 2)],
+    };
+
+    for (size, current, which) in dims {
+        if current < size {
+            if let Some(next) = next_unroll(size, current, phi) {
+                match which {
+                    0 => cfg.kp = next,
+                    1 => cfg.fp = next,
+                    _ => cfg.cp = next,
+                }
+                // geometry changed: re-derive the fragmentation from the
+                // invariant evicted-bits, keeping the current burst count.
+                let n = design.cfgs[l].frag.n;
+                design.set_fragmentation(l, n);
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// ALLOCATE_COMPUTE: repeatedly unroll the slowest CE, re-running memory
+/// allocation after each step; stop when the area budget, the bandwidth
+/// budget, or full unrolling of the bottleneck is reached. Returns the
+/// number of accepted increments.
+pub fn allocate_compute(design: &mut Design, device: &Device, cfg: &DseConfig) -> usize {
+    let mut accepted = 0;
+    loop {
+        let l = design.slowest();
+        let mut trial = design.clone();
+        let s1 = increment_unroll(&mut trial, l, cfg.phi);
+        if !s1 {
+            break; // bottleneck CE saturated: θ cannot improve further
+        }
+        let s2 = allocate_memory(&mut trial, device, cfg);
+        if !s2 || !trial.total_area().fits(device)
+            || trial.total_bandwidth() > device.bandwidth_bps * cfg.bw_margin
+        {
+            break; // area or bandwidth limit reached
+        }
+        *design = trial;
+        accepted += 1;
+    }
+    accepted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Quant;
+    use crate::models;
+
+    fn setup() -> (Design, Device) {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        (Design::initialize(&net, &dev), dev)
+    }
+
+    #[test]
+    fn increment_follows_priority_order() {
+        let (mut d, _) = setup();
+        // conv layer: k² first
+        assert!(increment_unroll(&mut d, 0, 1));
+        assert!(d.cfgs[0].kp > 1);
+        assert_eq!(d.cfgs[0].fp, 1);
+        assert_eq!(d.cfgs[0].cp, 1);
+    }
+
+    #[test]
+    fn increment_saturates_k_then_moves_to_f() {
+        let (mut d, _) = setup();
+        // saturate k² (divisors of 9: 1,3,9 -> two increments)
+        assert!(increment_unroll(&mut d, 0, 1));
+        assert!(increment_unroll(&mut d, 0, 1));
+        assert_eq!(d.cfgs[0].kp, 9);
+        assert!(increment_unroll(&mut d, 0, 1));
+        assert!(d.cfgs[0].fp > 1, "after k² saturates, f is next");
+    }
+
+    #[test]
+    fn increment_eventually_saturates() {
+        let (mut d, _) = setup();
+        let mut steps = 0;
+        while increment_unroll(&mut d, 4, 8) {
+            steps += 1;
+            assert!(steps < 1000, "must terminate");
+        }
+        // fc layer fully unrolled
+        assert_eq!(d.cfgs[4].fp, 10);
+        assert_eq!(d.cfgs[4].cp, 64);
+    }
+
+    #[test]
+    fn allocate_compute_improves_throughput() {
+        let (mut d, dev) = setup();
+        let before = d.min_throughput();
+        let iters = allocate_compute(&mut d, &dev, &DseConfig::default());
+        assert!(iters > 0);
+        assert!(d.min_throughput() > before * 10.0, "toy net on zcu102 should unroll a lot");
+        assert!(d.total_area().fits(&dev));
+    }
+
+    #[test]
+    fn allocate_compute_respects_small_device() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zedboard();
+        let cfg = DseConfig::default();
+        let mut d = Design::initialize(&net, &dev);
+        assert!(allocate_memory(&mut d, &dev, &cfg));
+        allocate_compute(&mut d, &dev, &cfg);
+        assert!(d.total_area().fits(&dev));
+        assert!(d.total_bandwidth() <= dev.bandwidth_bps * 1.0001);
+    }
+}

@@ -1,0 +1,181 @@
+//! Greedy Design Space Exploration — paper §IV-A, Algorithm 1.
+//!
+//! The optimization problem (Eq. 6):
+//!
+//! ```text
+//! max  min_l θ_l   s.t.   β_io + Σ_l s_l·β_l ≤ B,   Σ_l a_l ≤ A
+//! ```
+//!
+//! solved greedily in two interleaved phases:
+//! - **compute allocation** ([`compute_alloc`]): repeatedly unroll the
+//!   slowest CE by step `φ`;
+//! - **memory allocation** ([`memory_alloc`]): whenever on-chip memory
+//!   exceeds the budget, evict depth-`μ` blocks to off-chip from the layer
+//!   with minimal bandwidth impact ΔB, re-balancing write bursts (Eq. 10).
+
+mod ablation;
+mod compute_alloc;
+mod design;
+mod exhaustive;
+mod memory_alloc;
+mod search;
+mod serialize;
+mod sweep;
+
+pub use ablation::{balanced_and_unbalanced, phi_mu_sweep, unbalanced_variant, HyperPoint};
+pub use compute_alloc::{allocate_compute, increment_unroll};
+pub use design::Design;
+pub use exhaustive::{exhaustive_memory, ExhaustiveResult};
+pub use memory_alloc::{
+    allocate_memory, delta_bandwidth, delta_bandwidth_by, increment_offchip,
+    increment_offchip_by, r_target, rebalance_all, write_burst_balance,
+};
+pub use search::{anneal, random_search, run_with_strategy, Strategy};
+pub use serialize::{parse_design, serialize_design, DesignFormatError};
+pub use sweep::{mem_sweep, SweepPoint};
+
+use crate::device::Device;
+use crate::ir::Network;
+
+/// DSE hyperparameters (paper: `φ` unroll step, `μ` eviction block depth)
+/// plus the run mode.
+#[derive(Debug, Clone, Copy)]
+pub struct DseConfig {
+    /// Unroll step size `φ` (Algorithm 1 INCREMENT_UNROLL).
+    pub phi: u32,
+    /// Eviction block depth `μ` in words (Algorithm 1 INCREMENT_OFFCHIP).
+    pub mu: u64,
+    /// Batch size `b` used for weight-reuse accounting (Eq. 3).
+    pub batch: u64,
+    /// When false, ALLOCATE_MEMORY is forbidden from evicting — this is the
+    /// "vanilla layer-pipelined" baseline (fpgaConvNet): the design is
+    /// infeasible if the weights do not fit on-chip.
+    pub allow_streaming: bool,
+    /// Fraction of the device bandwidth `B` the DSE may plan against.
+    /// Saturating B to 100% leaves the burst schedule no phase slack, so
+    /// transient Read-After-Write stalls appear; a small margin keeps the
+    /// deterministic schedule stall-free (validated by the simulator).
+    pub bw_margin: f64,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig { phi: 1, mu: 512, batch: 1, allow_streaming: true, bw_margin: 0.90 }
+    }
+}
+
+impl DseConfig {
+    pub fn vanilla() -> Self {
+        DseConfig { allow_streaming: false, ..Default::default() }
+    }
+}
+
+/// Outcome of a DSE run.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub design: Design,
+    /// Pipeline throughput `min_l θ_l` in samples/s.
+    pub throughput: f64,
+    /// Analytic single-sample latency in milliseconds.
+    pub latency_ms: f64,
+    /// Total area.
+    pub area: crate::ce::Area,
+    /// Total off-chip bandwidth demand `β_io + Σ s_l β_l` (bits/s).
+    pub bandwidth_bps: f64,
+    /// Number of greedy iterations executed (compute increments).
+    pub iterations: usize,
+}
+
+/// Run Algorithm 1 end-to-end for `network` on `device`.
+///
+/// Returns `None` when no feasible design exists: for the vanilla baseline
+/// this is the "X" of paper Table II (weights do not fit on-chip); with
+/// streaming enabled it only happens if even the fully-evicted serial design
+/// exceeds the device (pathological).
+pub fn run(network: &Network, device: &Device, cfg: &DseConfig) -> Option<DseResult> {
+    // INITIALIZE(D): unroll factors 1, all weights on-chip.
+    let mut design = Design::initialize(network, device);
+
+    // Make the initial design memory-feasible before any compute allocation.
+    if !allocate_memory(&mut design, device, cfg) {
+        return None;
+    }
+    if !design.total_area().fits(device) {
+        return None;
+    }
+
+    // ALLOCATE_COMPUTE (which re-runs ALLOCATE_MEMORY after every unroll).
+    let iterations = allocate_compute(&mut design, device, cfg);
+
+    let throughput = design.min_throughput();
+    Some(DseResult {
+        throughput,
+        latency_ms: design.latency_ms(1),
+        area: design.total_area(),
+        bandwidth_bps: design.total_bandwidth(),
+        iterations,
+        design,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn toy_on_large_device_is_compute_bound_all_onchip() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::u250();
+        let r = run(&net, &dev, &DseConfig::default()).unwrap();
+        // plenty of memory: the greedy DSE keeps everything on-chip
+        assert!(!r.design.any_streaming(), "no eviction needed on U250");
+        assert!(r.throughput > 1000.0, "θ = {}", r.throughput);
+    }
+
+    #[test]
+    fn vanilla_equals_autows_on_large_device() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::u250();
+        let a = run(&net, &dev, &DseConfig::default()).unwrap();
+        let v = run(&net, &dev, &DseConfig::vanilla()).unwrap();
+        let ratio = a.throughput / v.throughput;
+        assert!((0.8..1.25).contains(&ratio), "AutoWS {} vs vanilla {}", a.throughput, v.throughput);
+    }
+
+    #[test]
+    fn vanilla_infeasible_where_autows_feasible() {
+        // ResNet18 W4A5 weights ~5.9 MB vs Zedboard 1.2 MB on-chip.
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zedboard();
+        assert!(run(&net, &dev, &DseConfig::vanilla()).is_none(), "vanilla must not fit");
+        let a = run(&net, &dev, &DseConfig::default()).expect("AutoWS must fit");
+        assert!(a.design.any_streaming());
+        assert!(a.throughput > 0.0);
+    }
+
+    #[test]
+    fn feasible_design_respects_constraints() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = run(&net, &dev, &DseConfig::default()).unwrap();
+        assert!(r.area.fits(&dev), "area {:?}", r.area);
+        assert!(
+            r.bandwidth_bps <= dev.bandwidth_bps * 1.0001,
+            "bw {} > {}",
+            r.bandwidth_bps,
+            dev.bandwidth_bps
+        );
+    }
+
+    #[test]
+    fn more_memory_never_hurts() {
+        let net = models::resnet18(Quant::W4A5);
+        let small = Device::zcu102().with_mem_scale(0.6);
+        let large = Device::zcu102();
+        let ts = run(&net, &small, &DseConfig::default()).unwrap().throughput;
+        let tl = run(&net, &large, &DseConfig::default()).unwrap().throughput;
+        assert!(tl >= ts * 0.95, "θ(small)={ts} θ(large)={tl}");
+    }
+}

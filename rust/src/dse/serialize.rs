@@ -1,0 +1,278 @@
+//! Design checkpoint format (`.design` files).
+//!
+//! A DSE run on a large network is the expensive step of the toolflow; this
+//! serializer lets `autows dse --save out.design` persist the result and
+//! `autows simulate --design out.design` (or any downstream tool) reload it
+//! without re-searching. Text format, line-oriented, self-describing:
+//!
+//! ```text
+//! # AutoWS design checkpoint v1
+//! design <network-name> <device-name> clk=<mhz>
+//! quant <label>
+//! layer <idx> kp=<u32> cp=<u32> fp=<u32> n=<u32> u_on=<u64> u_off=<u64> off_bits=<u64>
+//! ...
+//! end
+//! ```
+//!
+//! Every layer gets a `layer` line (non-weight CEs carry throughput-shaping
+//! unroll factors too); the network itself is rebuilt from the zoo (or a
+//! `.net` file) by name, so a checkpoint stays valid as long as the model
+//! builder produces the same layer sequence — which the loader verifies
+//! layer-by-layer (index range + `m_dep` geometry coverage).
+
+use super::Design;
+use crate::ce::Fragmentation;
+use crate::device::Device;
+use crate::ir::Network;
+
+/// Serialization error (line number + message).
+#[derive(Debug, Clone)]
+pub struct DesignFormatError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for DesignFormatError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "design checkpoint line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for DesignFormatError {}
+
+fn err(line: usize, message: impl Into<String>) -> DesignFormatError {
+    DesignFormatError { line, message: message.into() }
+}
+
+/// Serialize a design (paired with the device it was explored for).
+pub fn serialize_design(design: &Design, device: &Device) -> String {
+    let mut out = String::from("# AutoWS design checkpoint v1\n");
+    out.push_str(&format!(
+        "design {} {} clk={}\n",
+        design.network.name, device.name, design.clk_comp_mhz
+    ));
+    out.push_str(&format!("quant {}\n", design.network.quant.label().to_ascii_lowercase()));
+    // every layer: non-weight CEs (pools, eltwise) carry unroll factors
+    // that shape the pipeline's throughput too
+    for i in 0..design.len() {
+        let c = &design.cfgs[i];
+        out.push_str(&format!(
+            "layer {i} kp={} cp={} fp={} n={} u_on={} u_off={} off_bits={}\n",
+            c.kp, c.cp, c.fp, c.frag.n, c.frag.u_on, c.frag.u_off, design.off_bits[i]
+        ));
+    }
+    out.push_str("end\n");
+    out
+}
+
+/// Parse one `key=value` token as an integer.
+fn kv(tok: &str, key: &str, line: usize) -> Result<u64, DesignFormatError> {
+    let v = tok
+        .strip_prefix(key)
+        .and_then(|r| r.strip_prefix('='))
+        .ok_or_else(|| err(line, format!("expected `{key}=<int>`, got `{tok}`")))?;
+    v.parse().map_err(|_| err(line, format!("{key}: cannot parse `{v}`")))
+}
+
+/// Reload a checkpoint against a freshly-built `network` and `device`.
+///
+/// The (network, device) pair must match what the checkpoint records — the
+/// loader cross-checks names, layer indices and memory geometry so a stale
+/// checkpoint fails loudly instead of simulating garbage.
+pub fn parse_design(
+    text: &str,
+    network: &Network,
+    device: &Device,
+) -> Result<Design, DesignFormatError> {
+    let mut design = Design::initialize(network, device);
+    let mut seen_header = false;
+    let mut seen_end = false;
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if seen_end {
+            return Err(err(line_no, "content after `end`"));
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks[0] {
+            "design" => {
+                if toks.len() < 3 {
+                    return Err(err(line_no, "usage: design <network> <device> clk=<mhz>"));
+                }
+                if toks[1] != network.name {
+                    return Err(err(
+                        line_no,
+                        format!("checkpoint is for `{}`, not `{}`", toks[1], network.name),
+                    ));
+                }
+                if toks[2] != device.name {
+                    return Err(err(
+                        line_no,
+                        format!("checkpoint is for device `{}`, not `{}`", toks[2], device.name),
+                    ));
+                }
+                seen_header = true;
+            }
+            "quant" => {
+                let label = toks.get(1).copied().unwrap_or("");
+                let expect = network.quant.label().to_ascii_lowercase();
+                if label != expect {
+                    return Err(err(
+                        line_no,
+                        format!("checkpoint quant `{label}` != network quant `{expect}`"),
+                    ));
+                }
+            }
+            "layer" => {
+                if !seen_header {
+                    return Err(err(line_no, "`layer` before `design` header"));
+                }
+                if toks.len() != 9 {
+                    return Err(err(line_no, "layer line needs 8 fields"));
+                }
+                let i = toks[1]
+                    .parse::<usize>()
+                    .map_err(|_| err(line_no, "bad layer index"))?;
+                if i >= network.layers.len() {
+                    return Err(err(line_no, format!("layer {i} out of range")));
+                }
+                let kp = kv(toks[2], "kp", line_no)? as u32;
+                let cp = kv(toks[3], "cp", line_no)? as u32;
+                let fp = kv(toks[4], "fp", line_no)? as u32;
+                let n = kv(toks[5], "n", line_no)? as u32;
+                let u_on = kv(toks[6], "u_on", line_no)?;
+                let u_off = kv(toks[7], "u_off", line_no)?;
+                let off_bits = kv(toks[8], "off_bits", line_no)?;
+                if kp == 0 || cp == 0 || fp == 0 || n == 0 {
+                    return Err(err(line_no, "unroll factors and n must be positive"));
+                }
+                if !network.layers[i].has_weights() && (u_off > 0 || off_bits > 0) {
+                    return Err(err(
+                        line_no,
+                        format!("layer {i} carries no weights but records eviction"),
+                    ));
+                }
+                design.cfgs[i].kp = kp;
+                design.cfgs[i].cp = cp;
+                design.cfgs[i].fp = fp;
+                design.cfgs[i].frag = Fragmentation { n, u_on, u_off };
+                design.off_bits[i] = off_bits;
+                // geometry cross-check: the recorded fragmentation must
+                // cover this layer's memory depth at these unrolls
+                let m_dep = crate::ce::CeModel::new(
+                    &network.layers[i],
+                    design.cfgs[i],
+                    design.clk_comp_mhz,
+                )
+                .m_dep();
+                if design.cfgs[i].frag.m_dep() < m_dep {
+                    return Err(err(
+                        line_no,
+                        format!(
+                            "layer {i}: fragmentation covers {} words, memory needs {m_dep}",
+                            design.cfgs[i].frag.m_dep()
+                        ),
+                    ));
+                }
+                design.refresh(i);
+            }
+            "end" => seen_end = true,
+            other => return Err(err(line_no, format!("unknown record `{other}`"))),
+        }
+    }
+    if !seen_header {
+        return Err(err(text.lines().count().max(1), "missing `design` header"));
+    }
+    if !seen_end {
+        return Err(err(text.lines().count().max(1), "missing `end` (truncated file?)"));
+    }
+    Ok(design)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{self, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    fn designed() -> (Design, Device, Network) {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        (r.design, dev, net)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let (d, dev, net) = designed();
+        let text = serialize_design(&d, &dev);
+        let back = parse_design(&text, &net, &dev).unwrap();
+        assert_eq!(d.cfgs, back.cfgs);
+        assert_eq!(d.off_bits, back.off_bits);
+        assert_eq!(d.min_throughput(), back.min_throughput());
+        assert_eq!(d.total_area(), back.total_area());
+        assert!((d.total_bandwidth() - back.total_bandwidth()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wrong_network_rejected() {
+        let (d, dev, _) = designed();
+        let text = serialize_design(&d, &dev);
+        let other = models::toy_cnn(Quant::W4A5);
+        let e = parse_design(&text, &other, &dev).unwrap_err();
+        assert!(e.message.contains("checkpoint is for"), "{e}");
+    }
+
+    #[test]
+    fn wrong_device_rejected() {
+        let (d, dev, net) = designed();
+        let text = serialize_design(&d, &dev);
+        let e = parse_design(&text, &net, &Device::u50()).unwrap_err();
+        assert!(e.message.contains("device"), "{e}");
+    }
+
+    #[test]
+    fn wrong_quant_rejected() {
+        let (d, dev, _) = designed();
+        let text = serialize_design(&d, &dev);
+        let net8 = models::resnet18(Quant::W8A8);
+        let e = parse_design(&text, &net8, &dev).unwrap_err();
+        assert!(e.message.contains("quant"), "{e}");
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let (d, dev, net) = designed();
+        let text = serialize_design(&d, &dev);
+        let cut = &text[..text.len() - 5];
+        let e = parse_design(cut, &net, &dev).unwrap_err();
+        assert!(e.message.contains("truncated") || e.message.contains("end"), "{e}");
+    }
+
+    #[test]
+    fn corrupted_geometry_rejected() {
+        let (d, dev, net) = designed();
+        let text = serialize_design(&d, &dev).replace("u_on=", "u_on=0 # was: u_on=");
+        // zeroing u_on shrinks coverage below m_dep for on-chip layers
+        assert!(parse_design(&text, &net, &dev).is_err());
+    }
+
+    #[test]
+    fn garbage_never_panics() {
+        let (_, dev, net) = designed();
+        for bad in [
+            "",
+            "design resnet18 zcu102 clk=250",
+            "layer 0 kp=1 cp=1 fp=1 n=1 u_on=5 u_off=0 off_bits=0",
+            "design resnet18 zcu102 clk=250\nlayer 999 kp=1 cp=1 fp=1 n=1 u_on=5 u_off=0 off_bits=0\nend",
+            "design resnet18 zcu102 clk=250\nblorp\nend",
+        ] {
+            assert!(parse_design(bad, &net, &dev).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Parameter-sweep harness for paper Fig. 6: vary the on-chip memory budget
+//! `A_mem` while keeping compute (LUT/DSP) and off-chip bandwidth fixed, and
+//! record AutoWS vs vanilla throughput at each point.
+
+use super::{run, DseConfig};
+use crate::device::Device;
+use crate::ir::Network;
+
+/// One point of the Fig. 6 sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// On-chip memory budget normalized to the reference device (the x-axis
+    /// of Fig. 6).
+    pub mem_scale: f64,
+    /// AutoWS throughput (frames/s); `None` if infeasible.
+    pub autows_fps: Option<f64>,
+    /// Vanilla layer-pipelined throughput (frames/s); `None` if infeasible —
+    /// the region left of the feasibility wall in Fig. 6.
+    pub vanilla_fps: Option<f64>,
+    /// Fraction of weight bits held off-chip in the AutoWS design.
+    pub autows_offchip_frac: f64,
+}
+
+/// Run the Fig. 6 sweep: `scales` are multiples of the device's on-chip
+/// memory (e.g. 0.25 ..= 2.0), with LUT/DSP/bandwidth pinned to the
+/// reference device.
+pub fn mem_sweep(network: &Network, device: &Device, scales: &[f64]) -> Vec<SweepPoint> {
+    scales
+        .iter()
+        .map(|&s| {
+            let dev = device.with_mem_scale(s);
+            let autows = run(network, &dev, &DseConfig::default());
+            let vanilla = run(network, &dev, &DseConfig::vanilla());
+            let frac = autows.as_ref().map_or(0.0, |r| {
+                let total: u64 = network.layers.iter().map(|l| l.weight_bits()).sum();
+                let off: f64 = r
+                    .design
+                    .cfgs
+                    .iter()
+                    .zip(&network.layers)
+                    .map(|(c, l)| {
+                        if l.has_weights() {
+                            c.frag.off_chip_ratio() * l.weight_bits() as f64
+                        } else {
+                            0.0
+                        }
+                    })
+                    .sum();
+                off / total as f64
+            });
+            SweepPoint {
+                mem_scale: s,
+                autows_fps: autows.map(|r| r.throughput),
+                vanilla_fps: vanilla.map(|r| r.throughput),
+                autows_offchip_frac: frac,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Quant;
+    use crate::models;
+
+    /// The three regions of Fig. 6 on a coarse grid: below the wall vanilla
+    /// is infeasible while AutoWS still delivers; above it they converge.
+    #[test]
+    fn fig6_regions_exist() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let pts = mem_sweep(&net, &dev, &[0.4, 0.8, 1.6]);
+
+        // smallest budget: vanilla infeasible, AutoWS feasible
+        assert!(pts[0].vanilla_fps.is_none(), "vanilla should not fit at 0.4x");
+        assert!(pts[0].autows_fps.is_some(), "AutoWS must fit at 0.4x");
+
+        // AutoWS throughput is monotone (non-decreasing) in memory budget
+        let fps: Vec<f64> = pts.iter().map(|p| p.autows_fps.unwrap()).collect();
+        assert!(fps[0] <= fps[2] * 1.05, "{fps:?}");
+
+        // largest budget: both feasible and close (compute-bound region)
+        if let (Some(a), Some(v)) = (pts[2].autows_fps, pts[2].vanilla_fps) {
+            assert!(a >= v * 0.8, "AutoWS {a} should not trail vanilla {v} by much");
+        }
+
+        // off-chip share shrinks as memory grows
+        assert!(pts[0].autows_offchip_frac >= pts[2].autows_offchip_frac);
+    }
+}

@@ -1,0 +1,168 @@
+//! Network: an ordered chain of layers forming the accelerator pipeline.
+
+use super::{Layer, Quant};
+
+/// A DNN model `D`: the ordered set of layers `l ∈ D`, each mapped to one
+/// Compute Engine (paper §IV).
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Input image channels/spatial for `β_io` accounting.
+    pub input_shape: (u32, u32, u32),
+    /// Default quantization (individual layers may override).
+    pub quant: Quant,
+}
+
+/// Aggregate statistics of a network (paper Table I columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkStats {
+    pub params: u64,
+    pub macs: u64,
+    pub weight_layers: usize,
+    pub total_layers: usize,
+    pub weight_bits: u64,
+    pub activation_peak: u64,
+}
+
+impl Network {
+    pub fn new(name: impl Into<String>, input_shape: (u32, u32, u32), quant: Quant) -> Self {
+        Network { name: name.into(), layers: Vec::new(), input_shape, quant }
+    }
+
+    /// Append a layer, checking shape continuity against the previous layer.
+    /// Panics on a shape mismatch — model builders are static code, so a
+    /// mismatch is a bug, not an input error.
+    pub fn push(&mut self, layer: Layer) {
+        if let Some(prev) = self.layers.last() {
+            assert_eq!(
+                (layer.c_in, layer.h_in, layer.w_in),
+                (prev.c_out, prev.h_out(), prev.w_out()),
+                "shape mismatch appending layer `{}` after `{}`",
+                layer.name,
+                prev.name
+            );
+        } else {
+            assert_eq!(
+                (layer.c_in, layer.h_in, layer.w_in),
+                self.input_shape,
+                "first layer `{}` does not match network input shape",
+                layer.name
+            );
+        }
+        self.layers.push(layer);
+    }
+
+    /// Append without shape checking — used for branch-merge points where the
+    /// chain order intentionally differs from dataflow order (downsample
+    /// convs on residual skip paths).
+    pub fn push_unchecked(&mut self, layer: Layer) {
+        self.layers.push(layer);
+    }
+
+    /// Indices of weight-carrying layers (the ones with a weights memory).
+    pub fn weight_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.has_weights())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Paper Table I statistics.
+    pub fn stats(&self) -> NetworkStats {
+        NetworkStats {
+            params: self.layers.iter().map(|l| l.weight_count()).sum(),
+            macs: self.layers.iter().map(|l| l.macs()).sum(),
+            weight_layers: self.layers.iter().filter(|l| l.has_weights()).count(),
+            total_layers: self.layers.len(),
+            weight_bits: self.layers.iter().map(|l| l.weight_bits()).sum(),
+            activation_peak: self
+                .layers
+                .iter()
+                .map(|l| l.input_count() * l.quant.a_bits as u64)
+                .max()
+                .unwrap_or(0),
+        }
+    }
+
+    /// Bandwidth cost `β_io` (bits/s) for streaming the network input into
+    /// the first CE and the prediction out of the last CE, at a given
+    /// end-to-end throughput (samples/s). Paper §IV-A, Fig. 1.
+    pub fn beta_io(&self, throughput: f64) -> f64 {
+        let first = &self.layers[0];
+        let last = self.layers.last().unwrap();
+        let in_bits = first.input_count() * first.quant.a_bits as u64;
+        let out_bits = last.output_count() * last.quant.a_bits as u64;
+        (in_bits + out_bits) as f64 * throughput
+    }
+
+    /// Re-quantize every layer of the network.
+    pub fn with_quant(mut self, quant: Quant) -> Self {
+        self.quant = quant;
+        for l in &mut self.layers {
+            l.quant = quant;
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::OpKind;
+
+    fn tiny() -> Network {
+        let mut n = Network::new("tiny", (3, 8, 8), Quant::W8A8);
+        n.push(Layer::conv("c1", 3, 16, 8, 8, 3, 1, 1, Quant::W8A8));
+        n.push(Layer::conv("c2", 16, 32, 8, 8, 3, 2, 1, Quant::W8A8));
+        n.push(Layer {
+            name: "gap".into(),
+            op: OpKind::GlobalAvgPool,
+            c_in: 32,
+            c_out: 32,
+            h_in: 4,
+            w_in: 4,
+            quant: Quant::W8A8,
+            skip_from: None,
+        });
+        n.push(Layer::fc("fc", 32, 10, Quant::W8A8));
+        n
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let n = tiny();
+        let s = n.stats();
+        assert_eq!(s.weight_layers, 3);
+        assert_eq!(s.total_layers, 4);
+        assert_eq!(s.params, 3 * 16 * 9 + 16 * 32 * 9 + 32 * 10);
+        assert!(s.macs > s.params as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn push_rejects_shape_mismatch() {
+        let mut n = Network::new("bad", (3, 8, 8), Quant::W8A8);
+        n.push(Layer::conv("c1", 3, 16, 8, 8, 3, 1, 1, Quant::W8A8));
+        n.push(Layer::conv("c2", 99, 32, 8, 8, 3, 1, 1, Quant::W8A8));
+    }
+
+    #[test]
+    fn beta_io_scales_with_throughput() {
+        let n = tiny();
+        let b1 = n.beta_io(1.0);
+        let b2 = n.beta_io(100.0);
+        assert!((b2 / b1 - 100.0).abs() < 1e-9);
+        // input 3*8*8*8 bits + output 10*8 bits
+        assert_eq!(b1 as u64, 3 * 8 * 8 * 8 + 10 * 8);
+    }
+
+    #[test]
+    fn requantize() {
+        let n = tiny().with_quant(Quant::W4A4);
+        assert!(n.layers.iter().all(|l| l.quant == Quant::W4A4));
+        assert_eq!(n.stats().weight_bits, n.stats().params * 4);
+    }
+}

@@ -1,0 +1,283 @@
+//! Layer definition: one pipeline stage, mapped onto one Compute Engine.
+
+use super::Quant;
+
+/// The kind of pooling performed by a [`OpKind::Pool`] layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Operation performed by a layer.
+///
+/// Weight-carrying operations (`Conv`, `Fc`) get a fragmented weights memory
+/// in their CE (paper Fig. 3); the rest are pure streaming operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// 2-D convolution. `groups == c_in` expresses a depthwise convolution
+    /// (MobileNetV2); `groups == 1` a dense convolution.
+    Conv {
+        kernel: u32,
+        stride: u32,
+        pad: u32,
+        groups: u32,
+    },
+    /// Fully connected layer; generalizes to Conv with `k = h = w = 1`
+    /// (paper §III-B).
+    Fc,
+    /// Spatial pooling window.
+    Pool {
+        kernel: u32,
+        stride: u32,
+        pad: u32,
+        kind: PoolKind,
+    },
+    /// Global average pool: reduces spatial dims to 1x1.
+    GlobalAvgPool,
+    /// Elementwise addition of the main path and a skip path (residual).
+    EltwiseAdd,
+    /// Standalone activation (usually fused into the producing CE; kept for
+    /// graphs imported from frameworks that materialize it).
+    Relu,
+}
+
+/// One layer of the network == one Compute Engine of the accelerator.
+///
+/// Dimension symbols follow paper Fig. 2: `c` input channels, `f` output
+/// filters, `k` kernel size, input spatial `h x w`, output spatial
+/// `h_out x w_out` (the paper's ĥ, ŵ).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub op: OpKind,
+    /// Input channels `c`.
+    pub c_in: u32,
+    /// Output filters `f`.
+    pub c_out: u32,
+    /// Input spatial height `h`.
+    pub h_in: u32,
+    /// Input spatial width `w`.
+    pub w_in: u32,
+    /// Quantization of this layer's weights/activations.
+    pub quant: Quant,
+    /// For `EltwiseAdd`: index of the layer whose output feeds the skip path.
+    pub skip_from: Option<usize>,
+}
+
+impl Layer {
+    /// Convenience constructor for a dense convolution.
+    pub fn conv(
+        name: impl Into<String>,
+        c_in: u32,
+        c_out: u32,
+        h_in: u32,
+        w_in: u32,
+        kernel: u32,
+        stride: u32,
+        pad: u32,
+        quant: Quant,
+    ) -> Self {
+        Layer {
+            name: name.into(),
+            op: OpKind::Conv { kernel, stride, pad, groups: 1 },
+            c_in,
+            c_out,
+            h_in,
+            w_in,
+            quant,
+            skip_from: None,
+        }
+    }
+
+    /// Convenience constructor for a depthwise convolution (`groups == c`).
+    pub fn depthwise(
+        name: impl Into<String>,
+        c: u32,
+        h_in: u32,
+        w_in: u32,
+        kernel: u32,
+        stride: u32,
+        pad: u32,
+        quant: Quant,
+    ) -> Self {
+        Layer {
+            name: name.into(),
+            op: OpKind::Conv { kernel, stride, pad, groups: c },
+            c_in: c,
+            c_out: c,
+            h_in,
+            w_in,
+            quant,
+            skip_from: None,
+        }
+    }
+
+    /// Convenience constructor for a fully connected layer.
+    pub fn fc(name: impl Into<String>, c_in: u32, c_out: u32, quant: Quant) -> Self {
+        Layer {
+            name: name.into(),
+            op: OpKind::Fc,
+            c_in,
+            c_out,
+            h_in: 1,
+            w_in: 1,
+            quant,
+            skip_from: None,
+        }
+    }
+
+    /// Kernel size `k` of this layer (1 for pointwise ops and FC).
+    pub fn kernel(&self) -> u32 {
+        match self.op {
+            OpKind::Conv { kernel, .. } => kernel,
+            OpKind::Pool { kernel, .. } => kernel,
+            _ => 1,
+        }
+    }
+
+    /// Output spatial height ĥ.
+    pub fn h_out(&self) -> u32 {
+        match self.op {
+            OpKind::Conv { kernel, stride, pad, .. } | OpKind::Pool { kernel, stride, pad, .. } => {
+                (self.h_in + 2 * pad - kernel) / stride + 1
+            }
+            OpKind::GlobalAvgPool | OpKind::Fc => 1,
+            OpKind::EltwiseAdd | OpKind::Relu => self.h_in,
+        }
+    }
+
+    /// Output spatial width ŵ.
+    pub fn w_out(&self) -> u32 {
+        match self.op {
+            OpKind::Conv { kernel, stride, pad, .. } | OpKind::Pool { kernel, stride, pad, .. } => {
+                (self.w_in + 2 * pad - kernel) / stride + 1
+            }
+            OpKind::GlobalAvgPool | OpKind::Fc => 1,
+            OpKind::EltwiseAdd | OpKind::Relu => self.w_in,
+        }
+    }
+
+    /// Whether the CE for this layer carries a weights memory.
+    pub fn has_weights(&self) -> bool {
+        matches!(self.op, OpKind::Conv { .. } | OpKind::Fc)
+    }
+
+    /// Number of weight parameters.
+    pub fn weight_count(&self) -> u64 {
+        match self.op {
+            OpKind::Conv { kernel, groups, .. } => {
+                (self.c_out as u64) * (self.c_in as u64 / groups as u64) * (kernel as u64).pow(2)
+            }
+            OpKind::Fc => self.c_out as u64 * self.c_in as u64,
+            _ => 0,
+        }
+    }
+
+    /// Total weight storage in bits (`weight_count * L_W`).
+    pub fn weight_bits(&self) -> u64 {
+        self.weight_count() * self.quant.w_bits as u64
+    }
+
+    /// Multiply-accumulate operations per inference sample.
+    pub fn macs(&self) -> u64 {
+        match self.op {
+            OpKind::Conv { .. } => {
+                self.weight_count() * self.h_out() as u64 * self.w_out() as u64
+            }
+            OpKind::Fc => self.weight_count(),
+            _ => 0,
+        }
+    }
+
+    /// Number of input activation values consumed per inference sample.
+    pub fn input_count(&self) -> u64 {
+        self.c_in as u64 * self.h_in as u64 * self.w_in as u64
+    }
+
+    /// Number of output activation values produced per inference sample.
+    pub fn output_count(&self) -> u64 {
+        self.c_out as u64 * self.h_out() as u64 * self.w_out() as u64
+    }
+
+    /// Effective channel depth per filter seen by the weights memory —
+    /// for grouped conv this is `c / groups`.
+    pub fn c_per_group(&self) -> u32 {
+        match self.op {
+            OpKind::Conv { groups, .. } => self.c_in / groups,
+            _ => self.c_in,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_shape() {
+        let l = Layer::conv("c1", 3, 64, 224, 224, 7, 2, 3, Quant::W8A8);
+        assert_eq!(l.h_out(), 112);
+        assert_eq!(l.w_out(), 112);
+        assert_eq!(l.weight_count(), 64 * 3 * 49);
+        assert_eq!(l.macs(), 64 * 3 * 49 * 112 * 112);
+    }
+
+    #[test]
+    fn same_pad_conv_preserves_shape() {
+        let l = Layer::conv("c", 64, 64, 56, 56, 3, 1, 1, Quant::W4A4);
+        assert_eq!(l.h_out(), 56);
+        assert_eq!(l.w_out(), 56);
+    }
+
+    #[test]
+    fn depthwise_weights_and_macs() {
+        let l = Layer::depthwise("dw", 32, 112, 112, 3, 1, 1, Quant::W8A8);
+        assert_eq!(l.weight_count(), 32 * 9);
+        assert_eq!(l.macs(), 32 * 9 * 112 * 112);
+        assert_eq!(l.c_per_group(), 1);
+    }
+
+    #[test]
+    fn fc_generalizes_conv() {
+        let l = Layer::fc("fc", 512, 1000, Quant::W4A5);
+        assert_eq!(l.kernel(), 1);
+        assert_eq!(l.h_out(), 1);
+        assert_eq!(l.weight_count(), 512_000);
+        assert_eq!(l.macs(), 512_000);
+        assert_eq!(l.weight_bits(), 512_000 * 4);
+    }
+
+    #[test]
+    fn pool_has_no_weights() {
+        let l = Layer {
+            name: "p".into(),
+            op: OpKind::Pool { kernel: 3, stride: 2, pad: 1, kind: PoolKind::Max },
+            c_in: 64,
+            c_out: 64,
+            h_in: 112,
+            w_in: 112,
+            quant: Quant::W8A8,
+            skip_from: None,
+        };
+        assert!(!l.has_weights());
+        assert_eq!(l.weight_count(), 0);
+        assert_eq!(l.h_out(), 56);
+    }
+
+    #[test]
+    fn eltwise_passthrough_shape() {
+        let l = Layer {
+            name: "add".into(),
+            op: OpKind::EltwiseAdd,
+            c_in: 256,
+            c_out: 256,
+            h_in: 14,
+            w_in: 14,
+            quant: Quant::W8A8,
+            skip_from: Some(3),
+        };
+        assert_eq!(l.h_out(), 14);
+        assert_eq!(l.output_count(), 256 * 14 * 14);
+    }
+}

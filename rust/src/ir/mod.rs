@@ -1,0 +1,60 @@
+//! DNN graph intermediate representation.
+//!
+//! A [`Network`] is an ordered chain of [`Layer`]s — the layer-wise pipelined
+//! architecture maps each layer to one Compute Engine, connected by FIFOs
+//! (paper §IV). Residual connections are represented by [`OpKind::EltwiseAdd`]
+//! layers carrying a `skip_from` back-reference; on hardware the skip path is
+//! a bypass FIFO and does not change the chain timing model.
+
+mod graph;
+mod layer;
+pub mod textfmt;
+
+pub use graph::{Network, NetworkStats};
+pub use layer::{Layer, OpKind, PoolKind};
+pub use textfmt::{parse_network, serialize_network, NetParseError};
+
+/// Quantization scheme: weights and activations bitwidths (paper Table I/II:
+/// W4A4, W4A5, W8A8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Quant {
+    /// Weights bitwidth `L_W`.
+    pub w_bits: u32,
+    /// Activations bitwidth `L_A`.
+    pub a_bits: u32,
+}
+
+impl Quant {
+    pub const W4A4: Quant = Quant { w_bits: 4, a_bits: 4 };
+    pub const W4A5: Quant = Quant { w_bits: 4, a_bits: 5 };
+    pub const W8A8: Quant = Quant { w_bits: 8, a_bits: 8 };
+    pub const F32: Quant = Quant { w_bits: 32, a_bits: 32 };
+
+    pub fn label(&self) -> String {
+        format!("W{}A{}", self.w_bits, self.a_bits)
+    }
+
+    /// Parse a quantization label (`w4a4`, `W8A8`, `f32`, ...). Arbitrary
+    /// `w<N>a<M>` pairs are accepted so custom schemes can be configured.
+    pub fn parse(s: &str) -> Option<Quant> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "f32" | "fp32" | "float32" => return Some(Quant::F32),
+            _ => {}
+        }
+        let rest = lower.strip_prefix('w')?;
+        let (w, a) = rest.split_once('a')?;
+        let w_bits: u32 = w.parse().ok()?;
+        let a_bits: u32 = a.parse().ok()?;
+        if w_bits == 0 || a_bits == 0 || w_bits > 32 || a_bits > 32 {
+            return None;
+        }
+        Some(Quant { w_bits, a_bits })
+    }
+}
+
+impl std::fmt::Display for Quant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}

@@ -1,0 +1,504 @@
+//! Textual network description format (`.net` files).
+//!
+//! Lets users hand an arbitrary chain-structured DNN to the toolflow without
+//! writing a Rust builder — the launcher's `model.file` config option.
+//!
+//! ```text
+//! # AutoWS network description
+//! network mynet
+//! input 3 32 32
+//! quant w8a8
+//!
+//! conv name=c1 out=16 k=3 s=1 p=1
+//! relu
+//! pool k=2 s=2 kind=max
+//! depthwise k=3 s=1 p=1
+//! conv out=32 k=1                 # pointwise
+//! eltwise skip=3                  # residual add, skip path from layer 3
+//! globalavgpool
+//! fc out=10 quant=w4a5            # per-layer quant override
+//! ```
+//!
+//! Input channel/spatial dimensions of every layer are inferred by chaining
+//! from the previous layer, so only the operator's own parameters appear.
+//! The serializer emits the same format; `parse(serialize(n)) == n`.
+
+use super::{Layer, Network, OpKind, PoolKind, Quant};
+
+/// A `.net` parse failure with its 1-based line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for NetParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for NetParseError {}
+
+fn err(line: usize, message: impl Into<String>) -> NetParseError {
+    NetParseError { line, message: message.into() }
+}
+
+/// Key=value attributes of one layer line.
+struct Attrs<'a> {
+    line: usize,
+    pairs: Vec<(&'a str, &'a str)>,
+    used: Vec<bool>,
+}
+
+impl<'a> Attrs<'a> {
+    fn parse(tokens: &[&'a str], line: usize) -> Result<Attrs<'a>, NetParseError> {
+        let mut pairs = Vec::new();
+        for t in tokens {
+            let (k, v) = t
+                .split_once('=')
+                .ok_or_else(|| err(line, format!("expected key=value, got `{t}`")))?;
+            pairs.push((k, v));
+        }
+        let used = vec![false; pairs.len()];
+        Ok(Attrs { line, pairs, used })
+    }
+
+    fn get(&mut self, key: &str) -> Option<&'a str> {
+        for (i, (k, v)) in self.pairs.iter().enumerate() {
+            if *k == key {
+                self.used[i] = true;
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    fn num(&mut self, key: &str) -> Result<Option<u32>, NetParseError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| err(self.line, format!("{key}: cannot parse `{v}`"))),
+        }
+    }
+
+    fn num_or(&mut self, key: &str, default: u32) -> Result<u32, NetParseError> {
+        Ok(self.num(key)?.unwrap_or(default))
+    }
+
+    fn require(&mut self, key: &str) -> Result<u32, NetParseError> {
+        self.num(key)?.ok_or_else(|| err(self.line, format!("missing required `{key}=`")))
+    }
+
+    /// Error on unconsumed attributes — a typo'd key silently ignored would
+    /// produce a wrong accelerator.
+    fn finish(self) -> Result<(), NetParseError> {
+        for (i, (k, _)) in self.pairs.iter().enumerate() {
+            if !self.used[i] {
+                return Err(err(self.line, format!("unknown attribute `{k}`")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a `.net` description. `default_quant` applies to layers without a
+/// per-layer `quant=` override and is itself overridden by a `quant` header.
+pub fn parse_network(text: &str, default_quant: Quant) -> Result<Network, NetParseError> {
+    let mut name = String::from("custom");
+    let mut input: Option<(u32, u32, u32)> = None;
+    let mut net_quant = default_quant;
+    let mut net: Option<Network> = None;
+    let mut counts = std::collections::HashMap::<&'static str, u32>::new();
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        let op = tokens[0].to_ascii_lowercase();
+
+        // --- headers (before the first layer) ---
+        match op.as_str() {
+            "network" => {
+                if net.is_some() {
+                    return Err(err(line_no, "`network` header must precede layers"));
+                }
+                name = tokens.get(1).unwrap_or(&"custom").to_string();
+                continue;
+            }
+            "input" => {
+                if tokens.len() != 4 {
+                    return Err(err(line_no, "usage: input <channels> <height> <width>"));
+                }
+                let dims: Result<Vec<u32>, _> = tokens[1..4].iter().map(|t| t.parse()).collect();
+                let d = dims.map_err(|_| err(line_no, "input dims must be integers"))?;
+                if d.iter().any(|&x| x == 0) {
+                    return Err(err(line_no, "input dims must be positive"));
+                }
+                input = Some((d[0], d[1], d[2]));
+                continue;
+            }
+            "quant" => {
+                if net.is_some() {
+                    return Err(err(line_no, "`quant` header must precede layers"));
+                }
+                let label = tokens.get(1).ok_or_else(|| err(line_no, "usage: quant <label>"))?;
+                net_quant = Quant::parse(label)
+                    .ok_or_else(|| err(line_no, format!("bad quant label `{label}`")))?;
+                continue;
+            }
+            _ => {}
+        }
+
+        // --- layer lines ---
+        let input_shape =
+            input.ok_or_else(|| err(line_no, "`input` header required before layers"))?;
+        let net_ref = net.get_or_insert_with(|| Network::new(name.clone(), input_shape, net_quant));
+        let (c_in, h_in, w_in) = match net_ref.layers.last() {
+            Some(prev) => (prev.c_out, prev.h_out(), prev.w_out()),
+            None => input_shape,
+        };
+
+        let mut attrs = Attrs::parse(&tokens[1..], line_no)?;
+        let quant = match attrs.get("quant") {
+            None => net_quant,
+            Some(q) => Quant::parse(q)
+                .ok_or_else(|| err(line_no, format!("bad quant label `{q}`")))?,
+        };
+        let auto_name = |counts: &mut std::collections::HashMap<&'static str, u32>,
+                         kind: &'static str| {
+            let c = counts.entry(kind).or_insert(0);
+            *c += 1;
+            format!("{kind}{c}")
+        };
+
+        let layer = match op.as_str() {
+            "conv" => {
+                let out = attrs.require("out")?;
+                let k = attrs.num_or("k", 1)?;
+                let s = attrs.num_or("s", 1)?;
+                let p = attrs.num_or("p", 0)?;
+                let g = attrs.num_or("groups", 1)?;
+                if k == 0 || s == 0 || g == 0 {
+                    return Err(err(line_no, "k, s, groups must be positive"));
+                }
+                if c_in % g != 0 || out % g != 0 {
+                    return Err(err(line_no, format!("groups={g} does not divide c={c_in}/f={out}")));
+                }
+                let name = attrs
+                    .get("name")
+                    .map(String::from)
+                    .unwrap_or_else(|| auto_name(&mut counts, "conv"));
+                Layer {
+                    name,
+                    op: OpKind::Conv { kernel: k, stride: s, pad: p, groups: g },
+                    c_in,
+                    c_out: out,
+                    h_in,
+                    w_in,
+                    quant,
+                    skip_from: None,
+                }
+            }
+            "depthwise" => {
+                let k = attrs.num_or("k", 3)?;
+                let s = attrs.num_or("s", 1)?;
+                let p = attrs.num_or("p", (k - 1) / 2)?;
+                let name = attrs
+                    .get("name")
+                    .map(String::from)
+                    .unwrap_or_else(|| auto_name(&mut counts, "dw"));
+                let mut l = Layer::depthwise(name, c_in, h_in, w_in, k, s, p, quant);
+                l.quant = quant;
+                l
+            }
+            "fc" => {
+                let out = attrs.require("out")?;
+                let name = attrs
+                    .get("name")
+                    .map(String::from)
+                    .unwrap_or_else(|| auto_name(&mut counts, "fc"));
+                // Spatial input is implicitly flattened (c·h·w features), the
+                // same convention the zoo builders use (VGG16's fc6).
+                Layer::fc(name, c_in * h_in * w_in, out, quant)
+            }
+            "pool" => {
+                let k = attrs.require("k")?;
+                let s = attrs.num_or("s", k)?;
+                let p = attrs.num_or("p", 0)?;
+                let kind = match attrs.get("kind").unwrap_or("max") {
+                    "max" => PoolKind::Max,
+                    "avg" => PoolKind::Avg,
+                    other => return Err(err(line_no, format!("bad pool kind `{other}`"))),
+                };
+                let name = attrs
+                    .get("name")
+                    .map(String::from)
+                    .unwrap_or_else(|| auto_name(&mut counts, "pool"));
+                Layer {
+                    name,
+                    op: OpKind::Pool { kernel: k, stride: s, pad: p, kind },
+                    c_in,
+                    c_out: c_in,
+                    h_in,
+                    w_in,
+                    quant,
+                    skip_from: None,
+                }
+            }
+            "globalavgpool" | "gap" => Layer {
+                name: attrs
+                    .get("name")
+                    .map(String::from)
+                    .unwrap_or_else(|| auto_name(&mut counts, "gap")),
+                op: OpKind::GlobalAvgPool,
+                c_in,
+                c_out: c_in,
+                h_in,
+                w_in,
+                quant,
+                skip_from: None,
+            },
+            "relu" => Layer {
+                name: attrs
+                    .get("name")
+                    .map(String::from)
+                    .unwrap_or_else(|| auto_name(&mut counts, "relu")),
+                op: OpKind::Relu,
+                c_in,
+                c_out: c_in,
+                h_in,
+                w_in,
+                quant,
+                skip_from: None,
+            },
+            "eltwise" => {
+                let skip = attrs.require("skip")? as usize;
+                let cur = net_ref.layers.len();
+                if skip >= cur {
+                    return Err(err(
+                        line_no,
+                        format!("eltwise skip={skip} must reference an earlier layer (< {cur})"),
+                    ));
+                }
+                let src = &net_ref.layers[skip];
+                if (src.c_out, src.h_out(), src.w_out()) != (c_in, h_in, w_in) {
+                    return Err(err(
+                        line_no,
+                        format!(
+                            "eltwise skip={skip} shape {}x{}x{} does not match main path {}x{}x{}",
+                            src.c_out,
+                            src.h_out(),
+                            src.w_out(),
+                            c_in,
+                            h_in,
+                            w_in
+                        ),
+                    ));
+                }
+                Layer {
+                    name: attrs
+                        .get("name")
+                        .map(String::from)
+                        .unwrap_or_else(|| auto_name(&mut counts, "add")),
+                    op: OpKind::EltwiseAdd,
+                    c_in,
+                    c_out: c_in,
+                    h_in,
+                    w_in,
+                    quant,
+                    skip_from: Some(skip),
+                }
+            }
+            other => return Err(err(line_no, format!("unknown operator `{other}`"))),
+        };
+        attrs.finish()?;
+        // Shapes are chained from the previous layer above, so continuity
+        // holds by construction; `push_unchecked` also covers the fc-flatten
+        // case where c_in is intentionally c·h·w.
+        net_ref.push_unchecked(layer);
+    }
+
+    let net = net.ok_or_else(|| err(text.lines().count().max(1), "no layers in description"))?;
+    Ok(net)
+}
+
+/// Serialize a network to the `.net` format parsed by [`parse_network`].
+pub fn serialize_network(net: &Network) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("network {}\n", net.name));
+    let (c, h, w) = net.input_shape;
+    out.push_str(&format!("input {c} {h} {w}\n"));
+    out.push_str(&format!("quant {}\n\n", net.quant.label().to_ascii_lowercase()));
+    for l in &net.layers {
+        let quant_sfx = if l.quant == net.quant {
+            String::new()
+        } else {
+            format!(" quant={}", l.quant.label().to_ascii_lowercase())
+        };
+        let line = match l.op {
+            OpKind::Conv { kernel, stride, pad, groups } if groups == l.c_in && l.c_in == l.c_out => {
+                format!("depthwise name={} k={kernel} s={stride} p={pad}", l.name)
+            }
+            OpKind::Conv { kernel, stride, pad, groups } => {
+                let g = if groups > 1 { format!(" groups={groups}") } else { String::new() };
+                format!("conv name={} out={} k={kernel} s={stride} p={pad}{g}", l.name, l.c_out)
+            }
+            OpKind::Fc => format!("fc name={} out={}", l.name, l.c_out),
+            OpKind::Pool { kernel, stride, pad, kind } => {
+                let kind = match kind {
+                    PoolKind::Max => "max",
+                    PoolKind::Avg => "avg",
+                };
+                format!("pool name={} k={kernel} s={stride} p={pad} kind={kind}", l.name)
+            }
+            OpKind::GlobalAvgPool => format!("globalavgpool name={}", l.name),
+            OpKind::Relu => format!("relu name={}", l.name),
+            OpKind::EltwiseAdd => {
+                format!("eltwise name={} skip={}", l.name, l.skip_from.unwrap_or(0))
+            }
+        };
+        out.push_str(&line);
+        out.push_str(&quant_sfx);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    const SAMPLE: &str = "
+# a small residual CNN
+network sample
+input 3 32 32
+quant w8a8
+
+conv name=stem out=16 k=3 s=1 p=1
+relu
+conv out=16 k=3 s=1 p=1
+eltwise skip=1
+pool k=2 s=2 kind=max
+depthwise k=3
+conv out=32 k=1
+globalavgpool
+fc out=10 quant=w4a5
+";
+
+    #[test]
+    fn parse_sample() {
+        let n = parse_network(SAMPLE, Quant::W8A8).unwrap();
+        assert_eq!(n.name, "sample");
+        assert_eq!(n.input_shape, (3, 32, 32));
+        assert_eq!(n.layers.len(), 9);
+        assert_eq!(n.layers[0].name, "stem");
+        assert_eq!(n.layers[3].skip_from, Some(1));
+        // shapes chained correctly: pool halves 32 -> 16
+        assert_eq!(n.layers[4].h_out(), 16);
+        // depthwise inherits channels
+        assert_eq!(n.layers[5].c_out, 16);
+        // per-layer quant override
+        assert_eq!(n.layers[8].quant, Quant::W4A5);
+        assert_eq!(n.layers[0].quant, Quant::W8A8);
+    }
+
+    #[test]
+    fn roundtrip_sample() {
+        let n = parse_network(SAMPLE, Quant::W8A8).unwrap();
+        let text = serialize_network(&n);
+        let n2 = parse_network(&text, Quant::W8A8).unwrap();
+        assert_eq!(n.layers.len(), n2.layers.len());
+        for (a, b) in n.layers.iter().zip(&n2.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.op, b.op);
+            assert_eq!((a.c_in, a.c_out, a.h_in, a.w_in), (b.c_in, b.c_out, b.h_in, b.w_in));
+            assert_eq!(a.quant, b.quant);
+            assert_eq!(a.skip_from, b.skip_from);
+        }
+        assert_eq!(n.stats(), n2.stats());
+    }
+
+    #[test]
+    fn roundtrip_zoo_chain_models() {
+        // Chain-only zoo models survive serialize -> parse with equal stats.
+        for name in ["toy", "vgg16"] {
+            let n = models::by_name(name, Quant::W8A8).unwrap();
+            let n2 = parse_network(&serialize_network(&n), Quant::W8A8)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(n.stats(), n2.stats(), "{name}");
+        }
+    }
+
+    #[test]
+    fn missing_input_header() {
+        let e = parse_network("conv out=8 k=3", Quant::W8A8).unwrap_err();
+        assert!(e.message.contains("input"), "{e}");
+    }
+
+    #[test]
+    fn unknown_operator() {
+        let e = parse_network("input 3 8 8\nflurb out=2", Quant::W8A8).unwrap_err();
+        assert!(e.message.contains("unknown operator"), "{e}");
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn unknown_attribute_rejected() {
+        let e = parse_network("input 3 8 8\nconv out=8 k=3 blorp=2", Quant::W8A8).unwrap_err();
+        assert!(e.message.contains("unknown attribute"), "{e}");
+    }
+
+    #[test]
+    fn fc_flattens_spatial_input() {
+        let n = parse_network("input 3 8 8\nfc out=10", Quant::W8A8).unwrap();
+        assert_eq!(n.layers[0].c_in, 3 * 8 * 8);
+        assert_eq!(n.layers[0].weight_count(), 3 * 8 * 8 * 10);
+    }
+
+    #[test]
+    fn eltwise_shape_mismatch() {
+        let e = parse_network(
+            "input 3 8 8\nconv out=4 k=3 s=1 p=1\nconv out=8 k=3 s=1 p=1\neltwise skip=0",
+            Quant::W8A8,
+        )
+        .unwrap_err();
+        assert!(e.message.contains("does not match"), "{e}");
+    }
+
+    #[test]
+    fn eltwise_forward_reference_rejected() {
+        let e = parse_network(
+            "input 3 8 8\nconv out=3 k=3 p=1\neltwise skip=5",
+            Quant::W8A8,
+        )
+        .unwrap_err();
+        assert!(e.message.contains("earlier layer"), "{e}");
+    }
+
+    #[test]
+    fn groups_must_divide() {
+        let e = parse_network("input 3 8 8\nconv out=8 k=3 groups=2", Quant::W8A8).unwrap_err();
+        assert!(e.message.contains("groups"), "{e}");
+    }
+
+    #[test]
+    fn empty_description() {
+        assert!(parse_network("", Quant::W8A8).is_err());
+        assert!(parse_network("# only comments\n", Quant::W8A8).is_err());
+    }
+
+    #[test]
+    fn quant_header_applies() {
+        let n = parse_network("network q\ninput 3 8 8\nquant w4a4\nconv out=4 k=3 p=1", Quant::W8A8)
+            .unwrap();
+        assert_eq!(n.quant, Quant::W4A4);
+        assert_eq!(n.layers[0].quant, Quant::W4A4);
+    }
+}

@@ -1,0 +1,44 @@
+//! # AutoWS — Automated Weights Streaming for Layer-wise Pipelined DNN Accelerators
+//!
+//! Reproduction of Yu & Bouganis, *"AutoWS: Automate Weights Streaming in
+//! Layer-wise Pipelined DNN Accelerators"* (2023).
+//!
+//! The crate is organized bottom-up:
+//!
+//! - [`ir`] — DNN graph intermediate representation (layers, shapes, bitwidths).
+//! - [`models`] — model zoo builders (MobileNetV2, ResNet18/50, YOLOv5n, VGG16).
+//! - [`device`] — FPGA device library (Zedboard, ZC706, ZCU102, U50, U250).
+//! - [`ce`] — the Compute Engine template: fragmented weights memory (paper
+//!   Eq. 1–3), analytic throughput/area/bandwidth models (Eq. 4–5).
+//! - [`dse`] — the greedy Design Space Exploration (paper Algorithm 1).
+//! - [`schedule`] — the deterministic DMA burst scheduler (Eq. 8–10, Fig. 5).
+//! - [`sim`] — cycle-accurate event-driven simulator of the pipelined
+//!   accelerator (CEs + FIFOs + time-multiplexed DMA + two clock domains).
+//! - [`baseline`] — comparison architectures: vanilla layer-pipelined
+//!   (all weights on-chip) and layer-sequential (single tiled CE).
+//! - [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts and
+//!   executes the actual DNN numerics (Python never on the request path).
+//! - [`coordinator`] — serving loop: request batching, schedule-aware
+//!   dispatch, metrics.
+//! - [`report`] — regenerates every table and figure of the paper's
+//!   evaluation section.
+
+pub mod baseline;
+pub mod ce;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod dse;
+pub mod ir;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod util;
+
+pub use ce::{CeConfig, CeModel};
+pub use device::Device;
+pub use dse::{DseConfig, DseResult};
+pub use ir::{Layer, Network, OpKind};

@@ -1,0 +1,106 @@
+//! AlexNet (Krizhevsky et al., 2012) for 224x224 ImageNet input.
+//!
+//! The FC-dominated extreme of the zoo: 58M of its 61M parameters live in
+//! three fully-connected layers. For the AutoWS DSE this is the
+//! best-case workload for weight streaming — FC weights are used exactly
+//! once per sample (no spatial reuse, `ĥ = ŵ = 1`), so evicting them costs
+//! the minimum possible bandwidth per byte saved. The paper's Eq. 5
+//! predicts FC layers are the first to stream; this model makes that
+//! behaviour dominant and easy to test.
+
+use crate::ir::{Layer, Network, OpKind, PoolKind, Quant};
+
+fn maxpool(name: &str, c: u32, h: u32, w: u32, q: Quant) -> Layer {
+    Layer {
+        name: name.into(),
+        op: OpKind::Pool { kernel: 3, stride: 2, pad: 0, kind: PoolKind::Max },
+        c_in: c,
+        c_out: c,
+        h_in: h,
+        w_in: w,
+        quant: q,
+        skip_from: None,
+    }
+}
+
+/// AlexNet: 5 convs + 3 pools + 3 FC.
+pub fn alexnet(q: Quant) -> Network {
+    let mut n = Network::new("alexnet", (3, 224, 224), q);
+    n.push(Layer::conv("conv1", 3, 64, 224, 224, 11, 4, 2, q)); // 55x55
+    n.push(maxpool("pool1", 64, 55, 55, q)); // 27x27
+    n.push(Layer::conv("conv2", 64, 192, 27, 27, 5, 1, 2, q));
+    n.push(maxpool("pool2", 192, 27, 27, q)); // 13x13
+    n.push(Layer::conv("conv3", 192, 384, 13, 13, 3, 1, 1, q));
+    n.push(Layer::conv("conv4", 384, 256, 13, 13, 3, 1, 1, q));
+    n.push(Layer::conv("conv5", 256, 256, 13, 13, 3, 1, 1, q));
+    n.push(maxpool("pool5", 256, 13, 13, q)); // 6x6
+    // flatten 256*6*6 -> fc chain
+    n.push_unchecked(Layer::fc("fc6", 256 * 6 * 6, 4096, q));
+    n.push(Layer::fc("fc7", 4096, 4096, q));
+    n.push(Layer::fc("fc8", 4096, 1000, q));
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_about_61m() {
+        let p = alexnet(Quant::W8A8).stats().params;
+        // torchvision alexnet (weights only, no biases): ~61.1M - 10.6k bias
+        assert!((60_000_000..61_500_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn fc_dominates_params() {
+        let n = alexnet(Quant::W8A8);
+        let fc: u64 = n
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("fc"))
+            .map(|l| l.weight_count())
+            .sum();
+        assert!(fc * 10 > n.stats().params * 9, "FC holds >90% of params");
+    }
+
+    #[test]
+    fn dse_streams_fc_first() {
+        // On a memory-tight device the greedy ΔB rule must evict the FC
+        // layers before any conv: FC has zero spatial reuse, so Eq. 5 gives
+        // it the lowest bandwidth cost per evicted block.
+        use crate::device::Device;
+        use crate::dse::{self, DseConfig};
+        let n = alexnet(Quant::W4A4);
+        let dev = Device::zcu102();
+        let r = dse::run(&n, &dev, &DseConfig::default()).expect("feasible with streaming");
+        let design = &r.design;
+        let streamed: Vec<&str> = design
+            .streaming_layers()
+            .into_iter()
+            .map(|i| design.network.layers[i].name.as_str())
+            .collect();
+        assert!(
+            streamed.iter().any(|s| s.starts_with("fc")),
+            "some FC layer must stream: {streamed:?}"
+        );
+        // fc6 (the 37M-param giant) must be the most-evicted layer
+        let fc6 = design
+            .network
+            .layers
+            .iter()
+            .position(|l| l.name == "fc6")
+            .unwrap();
+        assert!(
+            design.cfgs[fc6].frag.off_chip_ratio() > 0.5,
+            "fc6 should be mostly off-chip, got {:.0}%",
+            design.cfgs[fc6].frag.off_chip_ratio() * 100.0
+        );
+    }
+
+    #[test]
+    fn macs_about_0_7g() {
+        let m = alexnet(Quant::W8A8).stats().macs;
+        assert!((650_000_000..780_000_000).contains(&m), "{m}");
+    }
+}

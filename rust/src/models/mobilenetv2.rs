@@ -1,0 +1,110 @@
+//! MobileNetV2 (Sandler et al., 2018) for 224x224 ImageNet input.
+
+use crate::ir::{Layer, Network, OpKind, Quant};
+
+/// Inverted-residual block configuration table `(t, c, n, s)` from the paper.
+const BLOCKS: [(u32, u32, u32, u32); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+/// MobileNetV2: stem conv + 17 inverted residual blocks + 1x1 head + fc.
+/// ~3.5M parameters (paper Table I).
+pub fn mobilenet_v2(q: Quant) -> Network {
+    let mut n = Network::new("mobilenetv2", (3, 224, 224), q);
+    n.push(Layer::conv("stem", 3, 32, 224, 224, 3, 2, 1, q));
+
+    let mut c_in = 32u32;
+    let mut hw = 112u32;
+    let mut bi = 0;
+    for &(t, c, blocks, s) in BLOCKS.iter() {
+        for b in 0..blocks {
+            let stride = if b == 0 { s } else { 1 };
+            let hidden = c_in * t;
+            let residual = stride == 1 && c_in == c;
+            let block_in = n.layers.len() - 1;
+            if t != 1 {
+                n.push(Layer::conv(
+                    format!("block{bi}.expand"),
+                    c_in, hidden, hw, hw, 1, 1, 0, q,
+                ));
+            }
+            n.push(Layer::depthwise(
+                format!("block{bi}.dw"),
+                hidden, hw, hw, 3, stride, 1, q,
+            ));
+            let hw_out = if stride == 2 { hw / 2 } else { hw };
+            n.push(Layer::conv(
+                format!("block{bi}.project"),
+                hidden, c, hw_out, hw_out, 1, 1, 0, q,
+            ));
+            if residual {
+                n.push_unchecked(Layer {
+                    name: format!("block{bi}.add"),
+                    op: OpKind::EltwiseAdd,
+                    c_in: c,
+                    c_out: c,
+                    h_in: hw_out,
+                    w_in: hw_out,
+                    quant: q,
+                    skip_from: Some(block_in),
+                });
+            }
+            c_in = c;
+            hw = hw_out;
+            bi += 1;
+        }
+    }
+
+    n.push(Layer::conv("head", 320, 1280, 7, 7, 1, 1, 0, q));
+    n.push(Layer {
+        name: "avgpool".into(),
+        op: OpKind::GlobalAvgPool,
+        c_in: 1280,
+        c_out: 1280,
+        h_in: 7,
+        w_in: 7,
+        quant: q,
+        skip_from: None,
+    });
+    n.push(Layer::fc("classifier", 1280, 1000, q));
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seventeen_blocks() {
+        let n = mobilenet_v2(Quant::W4A4);
+        let dw = n.layers.iter().filter(|l| {
+            matches!(l.op, OpKind::Conv { groups, .. } if groups > 1)
+        }).count();
+        assert_eq!(dw, 17, "one depthwise conv per inverted-residual block");
+    }
+
+    #[test]
+    fn params_close_to_3_5m() {
+        let p = mobilenet_v2(Quant::W8A8).stats().params;
+        assert!((3_300_000..3_700_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn macs_close_to_0_3g() {
+        let m = mobilenet_v2(Quant::W8A8).stats().macs;
+        assert!((270_000_000..340_000_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn final_spatial_is_7x7() {
+        let n = mobilenet_v2(Quant::W8A8);
+        let head = n.layers.iter().find(|l| l.name == "head").unwrap();
+        assert_eq!((head.h_in, head.w_in), (7, 7));
+    }
+}

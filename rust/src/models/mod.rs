@@ -1,0 +1,122 @@
+//! Model zoo: builders for the networks in the paper's evaluation
+//! (Table I: MobileNetV2, ResNet18, ResNet50; §V-D: YOLOv5n) plus VGG16 and
+//! the toy CNN used by the end-to-end PJRT serving example.
+//!
+//! All builders produce the layer chain in pipeline order. Residual
+//! downsample convolutions and merge points are appended with
+//! `push_unchecked` because their dataflow input is a skip FIFO, not the
+//! previous chain element.
+
+mod alexnet;
+mod mobilenetv2;
+mod resnet;
+mod squeezenet;
+mod toy;
+mod vgg;
+mod yolov5;
+
+pub use alexnet::alexnet;
+pub use mobilenetv2::mobilenet_v2;
+pub use resnet::{resnet18, resnet34, resnet50};
+pub use squeezenet::squeezenet;
+pub use toy::toy_cnn;
+pub use vgg::vgg16;
+pub use yolov5::yolov5n;
+
+use crate::ir::{Network, Quant};
+
+/// Look up a model by name with the default 224x224 ImageNet input
+/// (640x640 for YOLOv5n, 32x32 for the toy CNN).
+pub fn by_name(name: &str, quant: Quant) -> Option<Network> {
+    match name.to_ascii_lowercase().as_str() {
+        "mobilenetv2" | "mobilenet_v2" => Some(mobilenet_v2(quant)),
+        "resnet18" => Some(resnet18(quant)),
+        "resnet34" => Some(resnet34(quant)),
+        "resnet50" => Some(resnet50(quant)),
+        "squeezenet" => Some(squeezenet(quant)),
+        "alexnet" => Some(alexnet(quant)),
+        "yolov5n" => Some(yolov5n(quant)),
+        "vgg16" => Some(vgg16(quant)),
+        "toy" | "toy_cnn" => Some(toy_cnn(quant)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table I: params within 5% of the published counts.
+    #[test]
+    fn table1_param_counts() {
+        let cases = [
+            ("mobilenetv2", 3.5e6),
+            ("resnet18", 11.7e6),
+            ("resnet50", 25.6e6),
+        ];
+        for (name, expect) in cases {
+            let n = by_name(name, Quant::W8A8).unwrap();
+            let p = n.stats().params as f64;
+            let err = (p - expect).abs() / expect;
+            assert!(err < 0.05, "{name}: {p} params vs paper {expect} ({:.1}% off)", err * 100.0);
+        }
+    }
+
+    /// Paper Table I: MACs within 15% of the published counts
+    /// (0.3G / 1.8G / 4.1G).
+    #[test]
+    fn table1_mac_counts() {
+        let cases = [
+            ("mobilenetv2", 0.3e9),
+            ("resnet18", 1.8e9),
+            ("resnet50", 4.1e9),
+        ];
+        for (name, expect) in cases {
+            let n = by_name(name, Quant::W8A8).unwrap();
+            let m = n.stats().macs as f64;
+            let err = (m - expect).abs() / expect;
+            assert!(err < 0.15, "{name}: {m} MACs vs paper {expect} ({:.1}% off)", err * 100.0);
+        }
+    }
+
+    /// Paper Fig. 7 shows 21 weight layers for ResNet18.
+    #[test]
+    fn resnet18_has_21_weight_layers() {
+        let n = resnet18(Quant::W4A5);
+        assert_eq!(n.stats().weight_layers, 21);
+    }
+
+    #[test]
+    fn yolov5n_param_count() {
+        let n = yolov5n(Quant::W8A8);
+        let p = n.stats().params as f64;
+        assert!((1.5e6..2.3e6).contains(&p), "yolov5n params {p} (expected ~1.9M)");
+    }
+
+    #[test]
+    fn all_models_have_consistent_stats() {
+        for name in [
+            "mobilenetv2",
+            "resnet18",
+            "resnet34",
+            "resnet50",
+            "squeezenet",
+            "alexnet",
+            "yolov5n",
+            "vgg16",
+            "toy",
+        ] {
+            let n = by_name(name, Quant::W8A8).unwrap();
+            let s = n.stats();
+            assert!(s.params > 0, "{name}");
+            assert!(s.macs >= s.params, "{name}: macs {} < params {}", s.macs, s.params);
+            assert_eq!(s.weight_bits, s.params * 8, "{name}");
+            assert!(s.weight_layers <= s.total_layers, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(by_name("alexnet9000", Quant::W8A8).is_none());
+    }
+}

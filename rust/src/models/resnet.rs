@@ -1,0 +1,198 @@
+//! ResNet-18 / ResNet-50 (He et al., 2016) for 224x224 ImageNet input.
+
+use crate::ir::{Layer, Network, OpKind, PoolKind, Quant};
+
+fn maxpool(c: u32, h: u32, w: u32, q: Quant) -> Layer {
+    Layer {
+        name: "maxpool".into(),
+        op: OpKind::Pool { kernel: 3, stride: 2, pad: 1, kind: PoolKind::Max },
+        c_in: c,
+        c_out: c,
+        h_in: h,
+        w_in: w,
+        quant: q,
+        skip_from: None,
+    }
+}
+
+fn gap(c: u32, h: u32, w: u32, q: Quant) -> Layer {
+    Layer {
+        name: "avgpool".into(),
+        op: OpKind::GlobalAvgPool,
+        c_in: c,
+        c_out: c,
+        h_in: h,
+        w_in: w,
+        quant: q,
+        skip_from: None,
+    }
+}
+
+fn add(c: u32, h: u32, w: u32, skip: usize, q: Quant) -> Layer {
+    Layer {
+        name: "add".into(),
+        op: OpKind::EltwiseAdd,
+        c_in: c,
+        c_out: c,
+        h_in: h,
+        w_in: w,
+        quant: q,
+        skip_from: Some(skip),
+    }
+}
+
+/// Basic-block ResNet skeleton shared by ResNet-18 (`blocks = [2,2,2,2]`)
+/// and ResNet-34 (`blocks = [3,4,6,3]`).
+fn basic_resnet(name: &str, blocks: [u32; 4], q: Quant) -> Network {
+    let mut n = Network::new(name, (3, 224, 224), q);
+    n.push(Layer::conv("conv1", 3, 64, 224, 224, 7, 2, 3, q));
+    n.push(maxpool(64, 112, 112, q));
+
+    let stages: [(u32, u32, u32); 4] =
+        [(64, 56, 1), (128, 56, 2), (256, 28, 2), (512, 14, 2)];
+    let mut c_in = 64u32;
+    for (si, &(c, h_in, stride0)) in stages.iter().enumerate() {
+        for b in 0..blocks[si] {
+            let stride = if b == 0 { stride0 } else { 1 };
+            let h = if b == 0 { h_in } else { h_in / stride0 };
+            let h_out = h / stride;
+            let block_in = n.layers.len() - 1;
+            n.push(Layer::conv(
+                format!("layer{}.{}.conv1", si + 1, b),
+                c_in, c, h, h, 3, stride, 1, q,
+            ));
+            n.push(Layer::conv(
+                format!("layer{}.{}.conv2", si + 1, b),
+                c, c, h_out, h_out, 3, 1, 1, q,
+            ));
+            if b == 0 && (stride0 != 1 || c_in != c) {
+                // downsample on the skip path: input is the block input
+                n.push_unchecked(Layer::conv(
+                    format!("layer{}.{}.downsample", si + 1, b),
+                    c_in, c, h, h, 1, stride0, 0, q,
+                ));
+            }
+            n.push_unchecked(add(c, h_out, h_out, block_in, q));
+            c_in = c;
+        }
+    }
+    n.push(gap(512, 7, 7, q));
+    n.push(Layer::fc("fc", 512, 1000, q));
+    n
+}
+
+/// ResNet-18: conv1 + 4 stages x 2 basic blocks + fc.
+/// 21 weight layers (1 stem + 16 block convs + 3 downsample + 1 fc),
+/// 11.7M parameters — matches paper Table I and Fig. 7.
+pub fn resnet18(q: Quant) -> Network {
+    basic_resnet("resnet18", [2, 2, 2, 2], q)
+}
+
+/// ResNet-34: the [3,4,6,3] basic-block variant (21.8M parameters) — not in
+/// the paper\'s grid, included to exercise the toolflow between the 18/50
+/// memory points.
+pub fn resnet34(q: Quant) -> Network {
+    basic_resnet("resnet34", [3, 4, 6, 3], q)
+}
+
+/// ResNet-50: conv1 + bottleneck stages [3,4,6,3] + fc. 25.6M parameters.
+pub fn resnet50(q: Quant) -> Network {
+    let mut n = Network::new("resnet50", (3, 224, 224), q);
+    n.push(Layer::conv("conv1", 3, 64, 224, 224, 7, 2, 3, q));
+    n.push(maxpool(64, 112, 112, q));
+
+    let stages: [(u32, u32, u32, u32); 4] = [
+        // (base width, blocks, input spatial, first stride)
+        (64, 3, 56, 1),
+        (128, 4, 56, 2),
+        (256, 6, 28, 2),
+        (512, 3, 14, 2),
+    ];
+    let mut c_in = 64u32;
+    for (si, &(width, blocks, h_in, stride0)) in stages.iter().enumerate() {
+        let c_out = width * 4;
+        for b in 0..blocks {
+            let stride = if b == 0 { stride0 } else { 1 };
+            let h = if b == 0 { h_in } else { h_in / stride0 };
+            let h_out = h / stride;
+            let block_in = n.layers.len() - 1;
+            n.push(Layer::conv(
+                format!("layer{}.{}.conv1", si + 1, b),
+                c_in, width, h, h, 1, 1, 0, q,
+            ));
+            n.push(Layer::conv(
+                format!("layer{}.{}.conv2", si + 1, b),
+                width, width, h, h, 3, stride, 1, q,
+            ));
+            n.push(Layer::conv(
+                format!("layer{}.{}.conv3", si + 1, b),
+                width, c_out, h_out, h_out, 1, 1, 0, q,
+            ));
+            if b == 0 {
+                n.push_unchecked(Layer::conv(
+                    format!("layer{}.{}.downsample", si + 1, b),
+                    c_in, c_out, h, h, 1, stride, 0, q,
+                ));
+            }
+            n.push_unchecked(add(c_out, h_out, h_out, block_in, q));
+            c_in = c_out;
+        }
+    }
+    n.push(gap(2048, 7, 7, q));
+    n.push(Layer::fc("fc", 2048, 1000, q));
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_exact_params() {
+        // torchvision resnet18 conv+fc params (no BN): 11_679_912... we count
+        // conv + fc weights without biases/BN: 11,671,488 + fc 512,000 =
+        // known value ~11.68M.
+        let n = resnet18(Quant::W8A8);
+        let p = n.stats().params;
+        assert!((11_400_000..12_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn resnet34_params_and_layers() {
+        let n = resnet34(Quant::W8A8);
+        let p = n.stats().params;
+        // torchvision resnet34 conv+fc (no BN/bias): ~21.8M
+        assert!((21_000_000..22_300_000).contains(&p), "{p}");
+        // 1 stem + 32 block convs + 3 downsample + 1 fc = 37
+        assert_eq!(n.stats().weight_layers, 37);
+    }
+
+    #[test]
+    fn resnet50_exact_params() {
+        let n = resnet50(Quant::W8A8);
+        let p = n.stats().params;
+        assert!((25_000_000..26_200_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn resnet18_macs_about_1_8g() {
+        let m = resnet18(Quant::W8A8).stats().macs;
+        assert!((1_700_000_000..1_950_000_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn resnet50_weight_layer_count() {
+        // 1 stem + 48 block convs + 4 downsample + 1 fc = 54
+        assert_eq!(resnet50(Quant::W8A8).stats().weight_layers, 54);
+    }
+
+    #[test]
+    fn eltwise_adds_reference_earlier_layers() {
+        let n = resnet18(Quant::W8A8);
+        for (i, l) in n.layers.iter().enumerate() {
+            if let Some(s) = l.skip_from {
+                assert!(s < i, "skip_from must point backwards");
+            }
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! SqueezeNet 1.1 (Iandola et al., 2016) for 224x224 ImageNet input.
+//!
+//! Small-parameter architecture (~1.2M params) built from *fire modules*
+//! (squeeze 1x1 → parallel expand 1x1 / expand 3x3 → concat). Included in
+//! the zoo as the extreme low-parameter point: on every paper device the
+//! weights fit on-chip, so it isolates the activation-dominant regime of
+//! the pipelined architecture.
+//!
+//! Chain mapping: the two expand branches run as consecutive CEs with the
+//! concat realised as a channel-interleaving FIFO merge, which is timing-
+//! neutral in the chain model; the expand-3x3 CE carries the branch merge
+//! (`skip_from` on an EltwiseAdd is not used — concat changes channel
+//! count, so the merge point is modeled as the wider following layer).
+
+use crate::ir::{Layer, Network, OpKind, PoolKind, Quant};
+
+fn maxpool(name: &str, c: u32, h: u32, w: u32, q: Quant) -> Layer {
+    Layer {
+        name: name.into(),
+        op: OpKind::Pool { kernel: 3, stride: 2, pad: 0, kind: PoolKind::Max },
+        c_in: c,
+        c_out: c,
+        h_in: h,
+        w_in: w,
+        quant: q,
+        skip_from: None,
+    }
+}
+
+/// One fire module: squeeze s1x1, then expand e1x1 and e3x3 whose outputs
+/// concatenate to `e1 + e3` channels.
+fn fire(n: &mut Network, name: &str, c_in: u32, s: u32, e1: u32, e3: u32, hw: u32, q: Quant) -> u32 {
+    n.push(Layer::conv(format!("{name}.squeeze"), c_in, s, hw, hw, 1, 1, 0, q));
+    // expand branches: chained CEs, concat = interleaved FIFO merge
+    n.push(Layer::conv(format!("{name}.expand1x1"), s, e1, hw, hw, 1, 1, 0, q));
+    n.push_unchecked(Layer::conv(format!("{name}.expand3x3"), s, e3, hw, hw, 3, 1, 1, q));
+    // the next consumer sees e1+e3 channels; record the merge as a
+    // zero-weight passthrough so chain shapes stay consistent
+    n.push_unchecked(Layer {
+        name: format!("{name}.concat"),
+        op: OpKind::Relu, // pure streaming op: concat costs no compute
+        c_in: e1 + e3,
+        c_out: e1 + e3,
+        h_in: hw,
+        w_in: hw,
+        quant: q,
+        skip_from: None,
+    });
+    e1 + e3
+}
+
+/// SqueezeNet 1.1 (the efficient revision: stride-2 stem, earlier pools).
+pub fn squeezenet(q: Quant) -> Network {
+    let mut n = Network::new("squeezenet", (3, 224, 224), q);
+    n.push(Layer::conv("conv1", 3, 64, 224, 224, 3, 2, 0, q)); // 111x111
+    n.push(maxpool("pool1", 64, 111, 111, q)); // 55x55
+
+    let mut c = fire(&mut n, "fire2", 64, 16, 64, 64, 55, q);
+    c = fire(&mut n, "fire3", c, 16, 64, 64, 55, q);
+    n.push(maxpool("pool3", c, 55, 55, q)); // 27x27
+
+    c = fire(&mut n, "fire4", c, 32, 128, 128, 27, q);
+    c = fire(&mut n, "fire5", c, 32, 128, 128, 27, q);
+    n.push(maxpool("pool5", c, 27, 27, q)); // 13x13
+
+    c = fire(&mut n, "fire6", c, 48, 192, 192, 13, q);
+    c = fire(&mut n, "fire7", c, 48, 192, 192, 13, q);
+    c = fire(&mut n, "fire8", c, 64, 256, 256, 13, q);
+    c = fire(&mut n, "fire9", c, 64, 256, 256, 13, q);
+
+    // classifier: conv10 1x1 to 1000 classes + GAP
+    n.push(Layer::conv("conv10", c, 1000, 13, 13, 1, 1, 0, q));
+    n.push(Layer {
+        name: "avgpool".into(),
+        op: OpKind::GlobalAvgPool,
+        c_in: 1000,
+        c_out: 1000,
+        h_in: 13,
+        w_in: 13,
+        quant: q,
+        skip_from: None,
+    });
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_about_1_2m() {
+        let p = squeezenet(Quant::W8A8).stats().params;
+        // reference squeezenet1_1: 1,235,496 params
+        assert!((1_150_000..1_300_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn macs_in_published_range() {
+        let m = squeezenet(Quant::W8A8).stats().macs;
+        // squeezenet1_1 ≈ 0.35 GMACs
+        assert!((280_000_000..420_000_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn fire_modules_count() {
+        let n = squeezenet(Quant::W8A8);
+        let squeezes =
+            n.layers.iter().filter(|l| l.name.ends_with(".squeeze")).count();
+        assert_eq!(squeezes, 8, "fire2..fire9");
+        // 8 fires x 3 convs + conv1 + conv10 = 26 weight layers
+        assert_eq!(n.stats().weight_layers, 26);
+    }
+
+    #[test]
+    fn fits_on_chip_from_zc706_up() {
+        // the zoo's raison d'être for this model: ~1.2 MB of W8 weights fit
+        // every device from the ZC706 up without streaming (on the Zedboard
+        // the W8 variant leaves no BRAM headroom for FIFOs — W4 fits).
+        use crate::device::Device;
+        use crate::dse::{self, DseConfig};
+        let n = squeezenet(Quant::W8A8);
+        for dev in Device::all().into_iter().filter(|d| d.name != "zedboard") {
+            let r = dse::run(&n, &dev, &DseConfig::vanilla());
+            assert!(r.is_some(), "squeezenet vanilla must fit {}", dev.name);
+        }
+        let w4 = squeezenet(Quant::W4A4);
+        assert!(
+            dse::run(&w4, &Device::zedboard(), &DseConfig::vanilla()).is_some(),
+            "W4 squeezenet must fit the zedboard on-chip"
+        );
+    }
+}

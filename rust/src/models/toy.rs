@@ -1,0 +1,48 @@
+//! Toy CNN used by the end-to-end serving example: its architecture mirrors
+//! `python/compile/model.py` exactly, so the Rust-side schedule (this IR run
+//! through the DSE + simulator) and the PJRT-side numerics (the AOT-lowered
+//! JAX model) describe the same network.
+//!
+//! KEEP IN SYNC with `python/compile/model.py::ToyCnnSpec`.
+
+use crate::ir::{Layer, Network, OpKind, Quant};
+
+/// 4-layer CNN for 32x32x3 input (CIFAR-like): three 3x3 convolutions, a
+/// global average pool, and a 10-way classifier. ~93k parameters.
+pub fn toy_cnn(q: Quant) -> Network {
+    let mut n = Network::new("toy_cnn", (3, 32, 32), q);
+    n.push(Layer::conv("conv1", 3, 16, 32, 32, 3, 1, 1, q));
+    n.push(Layer::conv("conv2", 16, 32, 32, 32, 3, 2, 1, q));
+    n.push(Layer::conv("conv3", 32, 64, 16, 16, 3, 2, 1, q));
+    n.push(Layer {
+        name: "gap".into(),
+        op: OpKind::GlobalAvgPool,
+        c_in: 64,
+        c_out: 64,
+        h_in: 8,
+        w_in: 8,
+        quant: q,
+        skip_from: None,
+    });
+    n.push(Layer::fc("fc", 64, 10, q));
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_chain() {
+        let n = toy_cnn(Quant::W8A8);
+        assert_eq!(n.layers.len(), 5);
+        assert_eq!(n.layers.last().unwrap().c_out, 10);
+    }
+
+    #[test]
+    fn param_count_stable() {
+        // conv1 3*16*9 + conv2 16*32*9 + conv3 32*64*9 + fc 64*10
+        let expect = 432 + 4608 + 18432 + 640;
+        assert_eq!(toy_cnn(Quant::W8A8).stats().params, expect);
+    }
+}

@@ -1,0 +1,72 @@
+//! VGG-16 (Simonyan & Zisserman, 2015) — not in the paper's tables, but a
+//! classic stress case for weights streaming: 89% of its 138M parameters sit
+//! in the first FC layer, making it the extreme the fragmentation scheme was
+//! designed for.
+
+use crate::ir::{Layer, Network, OpKind, PoolKind, Quant};
+
+fn pool(c: u32, hw: u32, q: Quant) -> Layer {
+    Layer {
+        name: format!("pool{hw}"),
+        op: OpKind::Pool { kernel: 2, stride: 2, pad: 0, kind: PoolKind::Max },
+        c_in: c,
+        c_out: c,
+        h_in: hw,
+        w_in: hw,
+        quant: q,
+        skip_from: None,
+    }
+}
+
+/// VGG-16: 13 conv layers + 3 FC layers. ~138M parameters.
+pub fn vgg16(q: Quant) -> Network {
+    let mut n = Network::new("vgg16", (3, 224, 224), q);
+    let cfg: [(u32, u32, u32); 5] = [
+        // (channels, convs in group, input spatial)
+        (64, 2, 224),
+        (128, 2, 112),
+        (256, 3, 56),
+        (512, 3, 28),
+        (512, 3, 14),
+    ];
+    let mut c_in = 3u32;
+    for (gi, &(c, convs, hw)) in cfg.iter().enumerate() {
+        for ci in 0..convs {
+            n.push(Layer::conv(
+                format!("conv{}_{}", gi + 1, ci + 1),
+                c_in, c, hw, hw, 3, 1, 1, q,
+            ));
+            c_in = c;
+        }
+        n.push(pool(c, hw, q));
+    }
+    // flatten 512*7*7 -> fc chain
+    n.push_unchecked(Layer::fc("fc6", 512 * 7 * 7, 4096, q));
+    n.push(Layer::fc("fc7", 4096, 4096, q));
+    n.push(Layer::fc("fc8", 4096, 1000, q));
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_are_138m() {
+        let p = vgg16(Quant::W8A8).stats().params;
+        assert!((136_000_000..140_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn fc6_dominates() {
+        let n = vgg16(Quant::W8A8);
+        let fc6 = n.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert_eq!(fc6.weight_count(), 512 * 49 * 4096);
+        assert!(fc6.weight_count() * 10 > n.stats().params * 7);
+    }
+
+    #[test]
+    fn sixteen_weight_layers() {
+        assert_eq!(vgg16(Quant::W8A8).stats().weight_layers, 16);
+    }
+}

@@ -1,0 +1,142 @@
+//! YOLOv5n (v6.0 architecture, 640x640 COCO input) — paper §V-D.
+//!
+//! The CSP bottlenecks and PAN head are expanded into their constituent
+//! convolutions in pipeline order. Channel-concatenation merge points are
+//! modeled as stream-merge (EltwiseAdd-kind) stages — on hardware both are a
+//! bypass FIFO plus a merge node, and neither carries weights, so the
+//! DSE/scheduling behaviour is identical. Total ~1.9M parameters.
+
+use crate::ir::{Layer, Network, OpKind, PoolKind, Quant};
+
+fn merge(name: &str, c_in: u32, c_out: u32, hw: u32, skip: usize, q: Quant) -> Layer {
+    Layer {
+        name: name.into(),
+        op: OpKind::EltwiseAdd,
+        c_in,
+        c_out,
+        h_in: hw,
+        w_in: hw,
+        quant: q,
+        skip_from: Some(skip),
+    }
+}
+
+/// One C3 block: cv1/cv2 1x1 halves, `n` bottlenecks (1x1 + 3x3), cv3 1x1.
+fn c3(net: &mut Network, name: &str, c: u32, hw: u32, n_bn: u32, shortcut: bool, q: Quant) {
+    let h = c / 2;
+    let entry = net.layers.len() - 1;
+    net.push_unchecked(Layer::conv(format!("{name}.cv1"), c, h, hw, hw, 1, 1, 0, q));
+    for b in 0..n_bn {
+        let bin = net.layers.len() - 1;
+        net.push_unchecked(Layer::conv(format!("{name}.m{b}.cv1"), h, h, hw, hw, 1, 1, 0, q));
+        net.push_unchecked(Layer::conv(format!("{name}.m{b}.cv2"), h, h, hw, hw, 3, 1, 1, q));
+        if shortcut {
+            net.push_unchecked(merge(&format!("{name}.m{b}.add"), h, h, hw, bin, q));
+        }
+    }
+    // cv2 runs on the block input in parallel with the bottleneck chain
+    net.push_unchecked(Layer::conv(format!("{name}.cv2"), c, h, hw, hw, 1, 1, 0, q));
+    net.push_unchecked(merge(&format!("{name}.cat"), h, c, hw, entry, q));
+    net.push_unchecked(Layer::conv(format!("{name}.cv3"), c, c, hw, hw, 1, 1, 0, q));
+}
+
+/// YOLOv5n: depth multiple 0.33, width multiple 0.25 of YOLOv5l.
+pub fn yolov5n(q: Quant) -> Network {
+    let mut n = Network::new("yolov5n", (3, 640, 640), q);
+
+    // --- backbone ---
+    n.push(Layer::conv("stem", 3, 16, 640, 640, 6, 2, 2, q)); // P1 320
+    n.push(Layer::conv("conv1", 16, 32, 320, 320, 3, 2, 1, q)); // P2 160
+    c3(&mut n, "c3_1", 32, 160, 1, true, q);
+    n.push_unchecked(Layer::conv("conv2", 32, 64, 160, 160, 3, 2, 1, q)); // P3 80
+    c3(&mut n, "c3_2", 64, 80, 2, true, q);
+    let p3 = n.layers.len() - 1;
+    n.push_unchecked(Layer::conv("conv3", 64, 128, 80, 80, 3, 2, 1, q)); // P4 40
+    c3(&mut n, "c3_3", 128, 40, 3, true, q);
+    let p4 = n.layers.len() - 1;
+    n.push_unchecked(Layer::conv("conv4", 128, 256, 40, 40, 3, 2, 1, q)); // P5 20
+    c3(&mut n, "c3_4", 256, 20, 1, true, q);
+    // SPPF: cv1, 3x maxpool5, cv2
+    n.push_unchecked(Layer::conv("sppf.cv1", 256, 128, 20, 20, 1, 1, 0, q));
+    for i in 0..3 {
+        n.push_unchecked(Layer {
+            name: format!("sppf.pool{i}"),
+            op: OpKind::Pool { kernel: 5, stride: 1, pad: 2, kind: PoolKind::Max },
+            c_in: 128,
+            c_out: 128,
+            h_in: 20,
+            w_in: 20,
+            quant: q,
+            skip_from: None,
+        });
+    }
+    n.push_unchecked(Layer::conv("sppf.cv2", 512, 256, 20, 20, 1, 1, 0, q));
+
+    // --- PAN head ---
+    n.push_unchecked(Layer::conv("head.conv1", 256, 128, 20, 20, 1, 1, 0, q));
+    let h_p5 = n.layers.len() - 1;
+    // upsample to 40, concat with P4
+    n.push_unchecked(merge("head.cat1", 128, 256, 40, p4, q));
+    c3(&mut n, "head.c3_1", 256, 40, 1, false, q);
+    n.push_unchecked(Layer::conv("head.conv2", 256, 64, 40, 40, 1, 1, 0, q));
+    let h_p4 = n.layers.len() - 1;
+    // upsample to 80, concat with P3
+    n.push_unchecked(merge("head.cat2", 64, 128, 80, p3, q));
+    c3(&mut n, "head.c3_2", 128, 80, 1, false, q);
+    let out_p3 = n.layers.len() - 1;
+    // down path
+    n.push_unchecked(Layer::conv("head.conv3", 128, 64, 80, 80, 3, 2, 1, q));
+    n.push_unchecked(merge("head.cat3", 64, 128, 40, h_p4, q));
+    c3(&mut n, "head.c3_3", 128, 40, 1, false, q);
+    let out_p4 = n.layers.len() - 1;
+    n.push_unchecked(Layer::conv("head.conv4", 128, 128, 40, 40, 3, 2, 1, q));
+    n.push_unchecked(merge("head.cat4", 128, 256, 20, h_p5, q));
+    c3(&mut n, "head.c3_4", 256, 20, 1, false, q);
+
+    // --- detect convs: 3 scales x (nc+5)*3 = 255 outputs ---
+    n.push_unchecked(Layer::conv("detect.p5", 256, 255, 20, 20, 1, 1, 0, q));
+    n.push_unchecked(Layer::conv("detect.p4", 128, 255, 40, 40, 1, 1, 0, q));
+    let _ = out_p4;
+    n.push_unchecked(Layer::conv("detect.p3", 128, 255, 80, 80, 1, 1, 0, q));
+    let _ = out_p3;
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_near_1_9m() {
+        let p = yolov5n(Quant::W8A8).stats().params;
+        assert!((1_500_000..2_300_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn macs_near_2_2g() {
+        // YOLOv5n @640: ~4.5 GFLOPs => ~2.2 GMACs. Our chain expansion of the
+        // CSP blocks lands slightly above (stream-merge stages double-count
+        // some half-width paths); same decade is what matters for the DSE.
+        let m = yolov5n(Quant::W8A8).stats().macs;
+        assert!((1_600_000_000..3_300_000_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn three_detect_heads() {
+        let n = yolov5n(Quant::W8A8);
+        let det: Vec<_> =
+            n.layers.iter().filter(|l| l.name.starts_with("detect.")).collect();
+        assert_eq!(det.len(), 3);
+        assert!(det.iter().all(|l| l.c_out == 255));
+    }
+
+    #[test]
+    fn merges_reference_backwards() {
+        let n = yolov5n(Quant::W8A8);
+        for (i, l) in n.layers.iter().enumerate() {
+            if let Some(s) = l.skip_from {
+                assert!(s < i, "layer {i} `{}` skips forward", l.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,452 @@
+//! Regenerates every table and figure of the paper's evaluation section as
+//! text output (the bench harnesses wrap these same functions), plus the
+//! extension studies (memory technology assignment, pruning/encoding
+//! co-design, DSE strategy comparison).
+
+mod plot;
+
+pub use plot::{line_chart, stacked_bars};
+
+use crate::baseline::{self, sequential_latency_ms};
+use crate::device::Device;
+use crate::dse::{self, delta_bandwidth, mem_sweep, DseConfig};
+use crate::ir::Quant;
+use crate::models;
+use crate::sim::{fig5_scenario, render_gantt, simulate, SimConfig};
+
+/// Table I: characteristics of the evaluated models.
+pub fn table1() -> String {
+    let mut out = String::from(
+        "Table I: Characteristics of evaluated models\n\
+         network       params       MACs    weight-layers\n",
+    );
+    for name in ["mobilenetv2", "resnet18", "resnet50"] {
+        let n = models::by_name(name, Quant::W8A8).unwrap();
+        let s = n.stats();
+        out.push_str(&format!(
+            "{:<12} {:>7.1}M {:>9.1}G {:>12}\n",
+            name,
+            s.params as f64 / 1e6,
+            s.macs as f64 / 1e9,
+            s.weight_layers
+        ));
+    }
+    out
+}
+
+/// One Table II cell: latency in ms of the three architectures for
+/// `(network, quant)` on `device`. `None` == "X" (does not fit).
+#[derive(Debug, Clone)]
+pub struct Table2Cell {
+    pub network: String,
+    pub device: String,
+    pub quant: String,
+    pub sequential_ms: f64,
+    pub vanilla_ms: Option<f64>,
+    pub autows_ms: Option<f64>,
+}
+
+/// Evaluate one Table II cell (simulated latencies for the pipelined
+/// architectures, analytic for layer-sequential).
+pub fn table2_cell(network: &str, device: &str, quant: Quant) -> Table2Cell {
+    let net = models::by_name(network, quant).unwrap();
+    let dev = Device::by_name(device).unwrap();
+    let seq = sequential_latency_ms(&net, &dev);
+    let vanilla = baseline::vanilla(&net, &dev)
+        .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
+    let autows = dse::run(&net, &dev, &DseConfig::default())
+        .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
+    Table2Cell {
+        network: network.into(),
+        device: device.into(),
+        quant: quant.label(),
+        sequential_ms: seq,
+        vanilla_ms: vanilla,
+        autows_ms: autows,
+    }
+}
+
+/// The (network, device, quant) grid of paper Table II.
+pub fn table2_grid() -> Vec<(&'static str, &'static str, Quant)> {
+    vec![
+        ("mobilenetv2", "zedboard", Quant::W4A4),
+        ("mobilenetv2", "zc706", Quant::W4A4),
+        ("mobilenetv2", "zcu102", Quant::W4A5),
+        ("resnet18", "zc706", Quant::W4A4),
+        ("resnet18", "zcu102", Quant::W4A5),
+        ("resnet18", "u50", Quant::W8A8),
+        ("resnet50", "zcu102", Quant::W4A5),
+        ("resnet50", "u50", Quant::W8A8),
+        ("resnet50", "u250", Quant::W8A8),
+    ]
+}
+
+/// Full Table II.
+pub fn table2() -> String {
+    let mut out = String::from(
+        "Table II: Latency (ms) across networks and devices\n\
+         network       device    quant   layer-seq   vanilla    AutoWS\n",
+    );
+    for (net, dev, q) in table2_grid() {
+        let c = table2_cell(net, dev, q);
+        let fmt = |v: Option<f64>| v.map_or("X".to_string(), |x| format!("{x:.1}"));
+        out.push_str(&format!(
+            "{:<12} {:<9} {:<7} {:>9.1} {:>9} {:>9}\n",
+            c.network,
+            c.device,
+            c.quant,
+            c.sequential_ms,
+            fmt(c.vanilla_ms),
+            fmt(c.autows_ms),
+        ));
+    }
+    out
+}
+
+/// Table III row: memory/bandwidth breakdown for a design point.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub label: String,
+    pub bw_act_gbps: f64,
+    pub bw_wt_gbps: f64,
+    pub bw_total_util: f64,
+    pub bram_act_fifo_mb: f64,
+    pub bram_wt_buff_mb: f64,
+    pub bram_wt_mem_mb: f64,
+    pub bram_total_mb: f64,
+    pub bram_util: f64,
+    pub dsp: u32,
+    pub fps: f64,
+}
+
+fn table3_row(label: &str, r: &dse::DseResult, dev: &Device) -> Table3Row {
+    let a = r.area;
+    let bits_per_block = crate::device::BRAM36_BITS as f64 / 8.0 / 1e6;
+    Table3Row {
+        label: label.into(),
+        bw_act_gbps: r.design.io_bandwidth() / 1e9,
+        bw_wt_gbps: r.design.total_weight_bandwidth() / 1e9,
+        bw_total_util: r.bandwidth_bps / dev.bandwidth_bps,
+        bram_act_fifo_mb: a.bram.act_fifo as f64 * bits_per_block,
+        bram_wt_buff_mb: a.bram.wt_buff as f64 * bits_per_block,
+        bram_wt_mem_mb: a.bram.wt_mem as f64 * bits_per_block,
+        bram_total_mb: a.bram.mbytes(),
+        bram_util: a.mem_utilization(dev),
+        dsp: a.dsp,
+        fps: r.throughput,
+    }
+}
+
+/// Table III: resnet18-ZCU102 resource breakdown, design points d0 (vanilla,
+/// evaluated on an enlarged device so it exists) and d1 (AutoWS on the real
+/// device).
+pub fn table3() -> String {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    // d0: vanilla — on zcu102 it needs ~172% of the memory, so evaluate it
+    // on a 2x-memory virtual device and report utilization vs the REAL one
+    // (exactly what the paper's "172%" denotes).
+    let big = dev.with_mem_scale(2.0);
+    let d0 = baseline::vanilla(&net, &big).expect("vanilla fits on 2x device");
+    let d1 = dse::run(&net, &dev, &DseConfig::default()).expect("autows fits");
+    let rows =
+        vec![table3_row("Vanilla (d0)", &d0, &dev), table3_row("AutoWS  (d1)", &d1, &dev)];
+    let mut out = String::from(
+        "Table III: resnet18-ZCU102 memory resource breakdown\n\
+         design        BW act  BW wt  BW util | act_fifo wt_buff  wt_mem   total (util) |   DSP     FPS\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<13} {:>6.2} {:>6.2} {:>7.0}% | {:>7.1} {:>7.1} {:>7.1} {:>7.1} ({:>3.0}%) | {:>5} {:>7.1}\n",
+            r.label,
+            r.bw_act_gbps,
+            r.bw_wt_gbps,
+            r.bw_total_util * 100.0,
+            r.bram_act_fifo_mb,
+            r.bram_wt_buff_mb,
+            r.bram_wt_mem_mb,
+            r.bram_total_mb,
+            r.bram_util * 100.0,
+            r.dsp,
+            r.fps
+        ));
+    }
+    out
+}
+
+/// Fig. 5: two-layer DMA schedule, imbalanced vs balanced — ASCII timeline
+/// plus stall totals.
+pub fn fig5() -> String {
+    let mut out = String::from("Fig. 5: two-layer write/read scheduling\n");
+    for (balanced, label) in [(false, "(a) imbalanced burst numbers"), (true, "(b) balanced burst numbers")] {
+        let (d, dev) = fig5_scenario(balanced);
+        let sim = simulate(&d, &dev, &SimConfig { batch: 2, trace: true, max_trace_events: 64 });
+        out.push_str(&format!(
+            "\n{label}: r_l1={} r_l2={} stalls={:.2}us makespan={:.2}us\n",
+            d.repeats(0, 2),
+            d.repeats(1, 2),
+            sim.total_stall_s * 1e6,
+            sim.makespan_s * 1e6
+        ));
+        for t in sim.traces.iter().take(24) {
+            out.push_str(&format!(
+                "  l{} {:<10} {:>8.2} -> {:>8.2} us\n",
+                t.layer + 1,
+                format!("{:?}", t.kind),
+                t.start * 1e6,
+                t.end * 1e6
+            ));
+        }
+    }
+    out
+}
+
+/// Fig. 6: resnet18-ZCU102 memory/performance trade-off sweep.
+pub fn fig6() -> String {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let scales: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
+    let pts = mem_sweep(&net, &dev, &scales);
+    let mut out = String::from(
+        "Fig. 6: resnet18-ZCU102 memory vs performance (A_mem normalized)\n\
+         A_mem   AutoWS fps   vanilla fps   off-chip frac\n",
+    );
+    for p in pts {
+        let fmt = |v: Option<f64>| v.map_or("     X".to_string(), |x| format!("{x:>6.1}"));
+        out.push_str(&format!(
+            "{:>5.2}   {:>10}   {:>11}   {:>6.1}%\n",
+            p.mem_scale,
+            fmt(p.autows_fps),
+            fmt(p.vanilla_fps),
+            p.autows_offchip_frac * 100.0
+        ));
+    }
+    out
+}
+
+/// Fig. 7: per-layer on/off-chip allocation of the AutoWS resnet18-ZCU102
+/// design point, with the ΔB criterion per layer.
+pub fn fig7() -> String {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let cfg = DseConfig::default();
+    let mut out = String::from(
+        "Fig. 7: resnet18-ZCU102 per-layer weight allocation (design d1)\n\
+         idx  layer                     on-chip KB  off-chip KB   ΔB (Mbps)\n",
+    );
+    let mut wi = 0;
+    for (i, l) in r.design.network.layers.iter().enumerate() {
+        if !l.has_weights() {
+            continue;
+        }
+        wi += 1;
+        let frag = r.design.cfgs[i].frag;
+        let total_bits = l.weight_bits() as f64;
+        let off_bits = total_bits * frag.off_chip_ratio();
+        let db = delta_bandwidth(&r.design, i, &cfg);
+        out.push_str(&format!(
+            "{:>3}  {:<24} {:>10.1} {:>12.1} {:>11.1}\n",
+            wi,
+            l.name,
+            (total_bits - off_bits) / 8.0 / 1e3,
+            off_bits / 8.0 / 1e3,
+            db / 1e6
+        ));
+    }
+    out
+}
+
+/// Fig. 5 as an ASCII Gantt chart (the rendered counterpart of [`fig5`]).
+pub fn fig5_gantt() -> String {
+    let mut out = String::from("Fig. 5 (rendered): two-layer DMA schedule\n");
+    for (balanced, label) in
+        [(false, "(a) imbalanced burst numbers"), (true, "(b) balanced burst numbers")]
+    {
+        let (d, dev) = fig5_scenario(balanced);
+        let sim = simulate(&d, &dev, &SimConfig { batch: 2, trace: true, max_trace_events: 256 });
+        out.push_str(&format!("\n{label} — stalls {:.2} us:\n", sim.total_stall_s * 1e6));
+        out.push_str(&render_gantt(&sim.traces, 96));
+    }
+    out
+}
+
+/// Fig. 6 as an ASCII line chart (AutoWS vs vanilla fps over `A_mem`).
+pub fn fig6_chart() -> String {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let scales: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
+    let pts = mem_sweep(&net, &dev, &scales);
+    let autows: Vec<(f64, Option<f64>)> =
+        pts.iter().map(|p| (p.mem_scale, p.autows_fps)).collect();
+    let vanilla: Vec<(f64, Option<f64>)> =
+        pts.iter().map(|p| (p.mem_scale, p.vanilla_fps)).collect();
+    line_chart(
+        "Fig. 6 (rendered): resnet18-ZCU102 throughput vs A_mem budget",
+        &[("AutoWS", autows), ("vanilla", vanilla)],
+        72,
+        16,
+    )
+}
+
+/// Fig. 7 as stacked bars (per-layer on/off-chip weight kilobytes).
+pub fn fig7_chart() -> String {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let rows: Vec<(String, f64, f64)> = r
+        .design
+        .network
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.has_weights())
+        .map(|(i, l)| {
+            let frag = r.design.cfgs[i].frag;
+            let total_kb = l.weight_bits() as f64 / 8.0 / 1e3;
+            let off = total_kb * frag.off_chip_ratio();
+            (l.name.clone(), total_kb - off, off)
+        })
+        .collect();
+    stacked_bars(
+        "Fig. 7 (rendered): resnet18-ZCU102 per-layer weight allocation",
+        &rows,
+        48,
+        "KB",
+    )
+}
+
+/// Extension study: memory technology assignment (URAM/LUTRAM/overclock) on
+/// the paper's device grid.
+pub fn tech() -> String {
+    use crate::ce::{assign_memory_tech, TechOptions};
+    let mut out = String::from(
+        "Extension: memory technology assignment (fpgaConvNet/hls4ml/FINN idioms)\n\
+         network      device   baseline-BRAM  after-BRAM  URAM  +LUTs   saved(BRAM36-eq)\n",
+    );
+    for (model, q, dev) in [
+        ("resnet18", Quant::W4A5, Device::zcu102()),
+        ("resnet50", Quant::W8A8, Device::u50()),
+        ("mobilenetv2", Quant::W4A4, Device::zc706()),
+    ] {
+        let net = models::by_name(model, q).unwrap();
+        let Some(r) = dse::run(&net, &dev, &DseConfig::default()) else {
+            continue;
+        };
+        let plan = assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev));
+        out.push_str(&format!(
+            "{:<12} {:<8} {:>13} {:>11} {:>5} {:>6} {:>12}\n",
+            model,
+            dev.name,
+            plan.baseline_bram,
+            plan.bram,
+            plan.uram,
+            plan.extra_luts,
+            plan.bram_saved()
+        ));
+    }
+    out
+}
+
+/// Extension study: pruning + encoding co-design sweep (paper §VI future
+/// work) — latency/feasibility vs sparsity on a memory-tight pair.
+pub fn compress() -> String {
+    use crate::compress::{compress_network, CompressionSpec};
+    let net = models::resnet18(Quant::W8A8);
+    let dev = Device::zc706();
+    let mut out = String::from(
+        "Extension: pruning + encoding co-design (resnet18-W8A8 on ZC706)\n\
+         sparsity  ratio  enc-luts  acc-proxy   AutoWS fps   vanilla fps\n",
+    );
+    for s in [0.0, 0.2, 0.4, 0.6, 0.8] {
+        let (cnet, rep) = compress_network(&net, &CompressionSpec::pruned(s));
+        let fps = dse::run(&cnet, &dev, &DseConfig::default()).map(|r| r.throughput);
+        let vfps = dse::run(&cnet, &dev, &DseConfig::vanilla()).map(|r| r.throughput);
+        let fmt = |v: Option<f64>| v.map_or("      X".into(), |x| format!("{x:>7.1}"));
+        out.push_str(&format!(
+            "{:>8.1} {:>6.2} {:>9} {:>8.1}pp {:>12} {:>13}\n",
+            s,
+            rep.ratio(),
+            rep.decoder_luts,
+            rep.accuracy_drop_proxy,
+            fmt(fps),
+            fmt(vfps)
+        ));
+    }
+    out
+}
+
+/// Extension study: greedy (paper Algorithm 1) vs random search vs
+/// simulated annealing on solution quality.
+pub fn strategies() -> String {
+    use crate::dse::{run_with_strategy, Strategy};
+    let net = models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let cfg = DseConfig::default();
+    let mut out = String::from(
+        "Extension: DSE strategy comparison (toy CNN on ZCU102)\n\
+         strategy                 fps      latency(ms)\n",
+    );
+    for (label, s) in [
+        ("greedy (Algorithm 1)", Strategy::Greedy),
+        ("random x200", Strategy::Random { samples: 200, seed: 7 }),
+        ("anneal x2000", Strategy::Anneal { iters: 2000, t0: 0.5, seed: 7 }),
+    ] {
+        match run_with_strategy(&net, &dev, &cfg, s) {
+            None => out.push_str(&format!("{label:<24} INFEASIBLE\n")),
+            Some(r) => out.push_str(&format!(
+                "{label:<24} {:>8.1} {:>12.3}\n",
+                r.throughput, r.latency_ms
+            )),
+        }
+    }
+    out
+}
+
+/// §V-D: YOLOv5n object detection on ZCU102.
+pub fn yolo() -> String {
+    let net = models::yolov5n(Quant::W8A8);
+    let dev = Device::zcu102();
+    let seq = sequential_latency_ms(&net, &dev);
+    let fmt = |v: Option<f64>| v.map_or("X".to_string(), |x| format!("{x:.1} ms"));
+    let vanilla = baseline::vanilla(&net, &dev)
+        .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
+    let autows = dse::run(&net, &dev, &DseConfig::default())
+        .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
+    format!(
+        "§V-D: YOLOv5n-COCO on ZCU102\n\
+         layer-sequential (Vitis-AI-like): {seq:.1} ms\n\
+         vanilla layer-pipelined:          {}\n\
+         AutoWS (this work):               {}\n",
+        fmt(vanilla),
+        fmt(autows)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_models() {
+        let t = table1();
+        assert!(t.contains("mobilenetv2") && t.contains("resnet50"));
+        assert!(t.contains("11.7M") || t.contains("11.6M"), "{t}");
+    }
+
+    #[test]
+    fn table2_cell_small_device_shape() {
+        // resnet18-W4A5 on zedboard: vanilla X, AutoWS feasible
+        let c = table2_cell("resnet18", "zedboard", Quant::W4A5);
+        assert!(c.vanilla_ms.is_none());
+        assert!(c.autows_ms.is_some());
+        assert!(c.sequential_ms > 0.0);
+    }
+
+    #[test]
+    fn fig5_report_shows_stall_reduction() {
+        let f = fig5();
+        assert!(f.contains("imbalanced"));
+        assert!(f.contains("balanced"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Minimal ASCII plotting for figure regeneration (offline build: no
+//! plotting crates). Line charts for sweeps (Fig. 6) and horizontal
+//! stacked bars for per-layer allocations (Fig. 7).
+
+/// Render one or more `(label, points)` series as an ASCII line chart.
+/// Points are `(x, y)`; `None` y-values (infeasible points) leave gaps.
+/// Each series draws with its own glyph (`*`, `o`, `+`, `x`).
+pub fn line_chart(
+    title: &str,
+    series: &[(&str, Vec<(f64, Option<f64>)>)],
+    width: usize,
+    height: usize,
+) -> String {
+    const GLYPHS: [char; 4] = ['*', 'o', '+', 'x'];
+    let width = width.max(16);
+    let height = height.max(4);
+
+    let xs: Vec<f64> = series.iter().flat_map(|(_, pts)| pts.iter().map(|p| p.0)).collect();
+    let ys: Vec<f64> =
+        series.iter().flat_map(|(_, pts)| pts.iter().filter_map(|p| p.1)).collect();
+    if xs.is_empty() || ys.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (x0, x1) = (xs.iter().cloned().fold(f64::INFINITY, f64::min), xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max));
+    let (y0, y1) = (0.0_f64.min(ys.iter().cloned().fold(f64::INFINITY, f64::min)), ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max));
+    let xspan = (x1 - x0).max(1e-12);
+    let yspan = (y1 - y0).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in pts {
+            let Some(y) = y else { continue };
+            let col = (((x - x0) / xspan) * (width as f64 - 1.0)).round() as usize;
+            let row = (((y - y0) / yspan) * (height as f64 - 1.0)).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            grid[row][col.min(width - 1)] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (label, _))| format!("{}={}", GLYPHS[i % GLYPHS.len()], label))
+        .collect();
+    out.push_str(&format!("  legend: {}\n", legend.join("  ")));
+    for (i, row) in grid.iter().enumerate() {
+        let y_label = if i == 0 {
+            format!("{y1:>8.1}")
+        } else if i == height - 1 {
+            format!("{y0:>8.1}")
+        } else {
+            " ".repeat(8)
+        };
+        out.push_str(&format!("{y_label} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{:>8}  {:<w$.2}{:>r$.2}\n",
+        "",
+        x0,
+        x1,
+        w = width / 2,
+        r = width - width / 2
+    ));
+    out
+}
+
+/// Render a two-part horizontal stacked bar chart: each row shows
+/// `left` (e.g. on-chip KB, glyph `#`) then `right` (off-chip KB, glyph
+/// `~`), scaled jointly so the longest total bar spans `width` chars.
+pub fn stacked_bars(
+    title: &str,
+    rows: &[(String, f64, f64)],
+    width: usize,
+    unit: &str,
+) -> String {
+    let width = width.max(16);
+    let max_total =
+        rows.iter().map(|(_, a, b)| a + b).fold(0.0_f64, f64::max).max(1e-12);
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    out.push_str(&format!("  (#=on-chip  ~=off-chip, bar = {max_total:.1} {unit} max)\n"));
+    let name_w = rows.iter().map(|(n, _, _)| n.len()).max().unwrap_or(8).min(26);
+    for (name, a, b) in rows {
+        let la = ((a / max_total) * width as f64).round() as usize;
+        let lb = ((b / max_total) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {:<name_w$} |{}{}{}  {:.1}+{:.1}\n",
+            &name[..name.len().min(name_w)],
+            "#".repeat(la),
+            "~".repeat(lb),
+            " ".repeat(width.saturating_sub(la + lb)),
+            a,
+            b,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders_extremes() {
+        let pts: Vec<(f64, Option<f64>)> =
+            (0..10).map(|i| (i as f64, Some(i as f64 * 2.0))).collect();
+        let c = line_chart("test", &[("up", pts)], 40, 8);
+        assert!(c.contains("test"));
+        assert!(c.contains("18.0")); // y max label
+        assert!(c.contains('*'));
+        assert_eq!(c.lines().count(), 2 + 8 + 1);
+    }
+
+    #[test]
+    fn line_chart_gaps_for_infeasible() {
+        let pts = vec![(0.0, None), (1.0, Some(5.0))];
+        let c = line_chart("gaps", &[("s", pts)], 20, 4);
+        // only one plotted point in the grid (exclude the legend line)
+        let grid_stars: usize =
+            c.lines().filter(|l| l.contains('|')).map(|l| l.matches('*').count()).sum();
+        assert_eq!(grid_stars, 1);
+    }
+
+    #[test]
+    fn line_chart_multi_series_glyphs() {
+        let a: Vec<_> = (0..5).map(|i| (i as f64, Some(1.0))).collect();
+        let b: Vec<_> = (0..5).map(|i| (i as f64, Some(2.0))).collect();
+        let c = line_chart("two", &[("a", a), ("b", b)], 30, 6);
+        assert!(c.contains('*') && c.contains('o'));
+        assert!(c.contains("*=a") && c.contains("o=b"));
+    }
+
+    #[test]
+    fn empty_chart_degrades() {
+        let c = line_chart("none", &[("s", vec![])], 30, 6);
+        assert!(c.contains("no data"));
+    }
+
+    #[test]
+    fn stacked_bars_scale_jointly() {
+        let rows = vec![
+            ("layer1".to_string(), 10.0, 0.0),
+            ("layer2".to_string(), 5.0, 5.0),
+            ("layer3".to_string(), 0.0, 20.0),
+        ];
+        let c = stacked_bars("alloc", &rows, 20, "KB");
+        assert!(c.contains("layer3"));
+        // layer3 is all off-chip: 20 tildes at full width
+        let l3 = c.lines().find(|l| l.contains("layer3")).unwrap();
+        assert_eq!(l3.matches('~').count(), 20);
+        assert_eq!(l3.matches('#').count(), 0);
+        let l1 = c.lines().find(|l| l.contains("layer1")).unwrap();
+        assert_eq!(l1.matches('#').count(), 10);
+    }
+}

@@ -1,0 +1,117 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the DNN's *numerics* run — everything else in the
+//! crate reasons about the accelerator's *timing*. Python is involved only
+//! at artifact-build time (`make artifacts`); the request path is pure Rust.
+//!
+//! Interchange format is HLO **text**, not a serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! bundled XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids
+//! and round-trips cleanly (see /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A PJRT client; loads executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled model variant, ready to execute.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human-readable source path, for diagnostics.
+    pub source: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))
+            .context("is `make artifacts` up to date?")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(LoadedModel { exe, source: path.display().to_string() })
+    }
+}
+
+/// A dense f32 tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> Result<Tensor> {
+        let expect: i64 = dims.iter().product();
+        if expect as usize != data.len() {
+            return Err(anyhow!("tensor data {} != dims {:?}", data.len(), dims));
+        }
+        Ok(Tensor { data, dims })
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::vec1(&self.data)
+            .reshape(&self.dims)
+            .map_err(|e| anyhow!("reshape {:?}: {e:?}", self.dims))
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs; returns all outputs (the artifacts are
+    /// lowered with `return_tuple=True`, so the single device-result is a
+    /// tuple literal we decompose).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.source))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                Tensor::new(data, dims)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::new(vec![1.0; 6], vec![2, 3]).is_ok());
+        assert!(Tensor::new(vec![1.0; 5], vec![2, 3]).is_err());
+    }
+
+    // PJRT round-trip tests live in rust/tests/ — they require the
+    // artifacts built by `make artifacts`.
+}

@@ -1,0 +1,183 @@
+//! Burst timing — paper Eq. 8 and Eq. 9.
+
+use crate::device::Device;
+use crate::dse::Design;
+
+/// Timing of one streaming layer's write/read pattern.
+#[derive(Debug, Clone)]
+pub struct BurstEntry {
+    /// Layer index in the network chain.
+    pub layer: usize,
+    /// Write-burst duration `t_wr = M_wid·u_off / (B − β_io)` in seconds
+    /// (Eq. 8), additionally capped by the buffer write port
+    /// (`M_wid · clk_dma`) — the second clock domain.
+    pub t_wr: f64,
+    /// Read-interval duration `t_rd = (u_on + u_off) / (s_l · clk_comp)` in
+    /// seconds (Eq. 9).
+    pub t_rd: f64,
+    /// Static-region portion of the read interval, seconds.
+    pub t_rd_static: f64,
+    /// Buffer portion of the read interval, seconds.
+    pub t_rd_buffer: f64,
+    /// Repeat count `r_l = b·ĥ·ŵ·n` (Eq. 3).
+    pub r: u64,
+    /// Pipeline start offset of this CE (seconds): its first read begins
+    /// later than upstream CEs by the pipeline depth (Fig. 5, bottom-left).
+    pub start_offset: f64,
+}
+
+/// The complete DMA schedule of a design on a device.
+#[derive(Debug, Clone)]
+pub struct BurstSchedule {
+    pub entries: Vec<BurstEntry>,
+    /// Effective DMA bandwidth available to weights: `B − β_io` (bits/s).
+    pub weight_bandwidth_bps: f64,
+    /// Batch size the repeat counts were computed for.
+    pub batch: u64,
+}
+
+impl BurstSchedule {
+    /// Build the schedule for every streaming layer of `design`.
+    pub fn from_design(design: &Design, device: &Device, batch: u64) -> BurstSchedule {
+        let beta_io = design.io_bandwidth();
+        let bw = (device.bandwidth_bps - beta_io).max(1.0);
+        let clk = design.clk_comp_mhz * 1e6;
+        let clk_dma = device.clk_dma_mhz * 1e6;
+
+        let mut offset = 0.0;
+        let mut offsets = vec![0.0; design.len()];
+        for i in 0..design.len() {
+            offsets[i] = offset;
+            // downstream CEs start after this CE's fill delay
+            offset += crate::ce::fill_cycles(&design.network.layers[i], &design.cfgs[i]) as f64
+                / clk;
+        }
+
+        // One batch takes `b · cycles_max` compute cycles; each streaming
+        // layer cycles through its fragments `r` times in that span, so its
+        // read window is `b·cycles_max / (r·clk)`. For a compute-bound CE
+        // this equals Eq. 9's `(u_on+u_off)/(s_l·clk_comp)` exactly; for a
+        // stream-bound CE it correctly dilates the window to the rate the
+        // weights are actually consumed at.
+        let cycles_max = design.cycles_of(design.slowest()) as f64;
+
+        let entries = design
+            .streaming_layers()
+            .into_iter()
+            .map(|i| {
+                let frag = design.cfgs[i].frag;
+                let m_wid = crate::ce::CeModel::new(
+                    &design.network.layers[i],
+                    design.cfgs[i],
+                    design.clk_comp_mhz,
+                )
+                .m_wid_bits();
+                let r = design.repeats(i, batch);
+                // Eq. 8, capped by the buffer's write-port rate (the DMA bus
+                // width in the clk_dma domain — the write side of the
+                // dual-port buffer is wider than the read-side M_wid).
+                let write_rate = bw.min(device.dma_port_bits as f64 * clk_dma);
+                let t_wr = m_wid as f64 * frag.u_off as f64 / write_rate;
+                // Eq. 9: the window, split pro-rata into its two phases.
+                let t_rd = cycles_max * batch as f64 / (r as f64 * clk);
+                let off_frac = frag.off_chip_ratio();
+                BurstEntry {
+                    layer: i,
+                    t_wr,
+                    t_rd,
+                    t_rd_static: t_rd * (1.0 - off_frac),
+                    t_rd_buffer: t_rd * off_frac,
+                    r,
+                    start_offset: offsets[i],
+                }
+            })
+            .collect();
+
+        BurstSchedule { entries, weight_bandwidth_bps: bw, batch }
+    }
+
+    /// Stall-free condition: within one read interval, the DMA must fit one
+    /// write burst of *every* streaming layer (they share the port). With
+    /// balanced bursts all `t_rd` are equal, so this is
+    /// `Σ_l t_wr_l ≤ min_l t_rd_l`.
+    pub fn schedulable(&self) -> bool {
+        if self.entries.is_empty() {
+            return true;
+        }
+        let total_wr: f64 = self.entries.iter().map(|e| e.t_wr).sum();
+        let min_rd = self.entries.iter().map(|e| e.t_rd).fold(f64::INFINITY, f64::min);
+        total_wr <= min_rd * 1.0001
+    }
+
+    /// DMA port utilization: busy fraction over one balanced window.
+    pub fn dma_utilization(&self) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        let total_wr: f64 = self.entries.iter().map(|e| e.t_wr).sum();
+        let min_rd = self.entries.iter().map(|e| e.t_rd).fold(f64::INFINITY, f64::min);
+        total_wr / min_rd
+    }
+
+    /// Are the burst counts balanced (Eq. 10): all `r_l` equal?
+    pub fn balanced(&self) -> bool {
+        self.entries.windows(2).all(|w| w[0].r == w[1].r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{self, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    fn streamed_design() -> (Design, Device) {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        (r.design, dev)
+    }
+
+    #[test]
+    fn dse_output_is_balanced_and_schedulable() {
+        let (d, dev) = streamed_design();
+        let s = BurstSchedule::from_design(&d, &dev, 1);
+        assert!(!s.entries.is_empty(), "zcu102/resnet18-W4A5 should stream some layers");
+        assert!(s.balanced(), "write burst balancing must hold (Eq. 10)");
+        assert!(s.schedulable(), "DSE designs must be stall-free");
+        assert!(s.dma_utilization() <= 1.0001);
+    }
+
+    #[test]
+    fn eq8_eq9_dimensional_sanity() {
+        let (d, dev) = streamed_design();
+        let s = BurstSchedule::from_design(&d, &dev, 1);
+        for e in &s.entries {
+            assert!(e.t_wr > 0.0 && e.t_wr < 1.0, "burst {} s", e.t_wr);
+            assert!(e.t_rd > 0.0 && e.t_rd < 1.0);
+            assert!((e.t_rd_static + e.t_rd_buffer - e.t_rd).abs() < 1e-12);
+            assert!(e.r > 0);
+        }
+    }
+
+    #[test]
+    fn offsets_increase_along_pipeline() {
+        let (d, dev) = streamed_design();
+        let s = BurstSchedule::from_design(&d, &dev, 1);
+        for w in s.entries.windows(2) {
+            assert!(w[0].start_offset <= w[1].start_offset);
+        }
+    }
+
+    #[test]
+    fn empty_schedule_for_all_onchip_design() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::u250();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let s = BurstSchedule::from_design(&r.design, &dev, 1);
+        assert!(s.entries.is_empty());
+        assert!(s.schedulable());
+        assert_eq!(s.dma_utilization(), 0.0);
+    }
+}

@@ -1,0 +1,251 @@
+//! The discrete-event engine.
+//!
+//! Shared resource: the DMA port (demux-routed, FIFO in request-arrival
+//! order, which for balanced designs degenerates to the paper's static
+//! round-robin sequence). Per streaming CE, fragment iteration `j`:
+//!
+//! ```text
+//! read_j  = [static phase] then [buffer phase]
+//!           the buffer phase *chases* write_j: the per-address
+//!           Read-After-Write check (paper §III-B) lets the PE read words
+//!           the DMA has already written, so the phase finishes at
+//!           max(static_end + t_rd_buffer, write_j end)
+//! write_j = DMA burst of t_wr seconds; requires the shared buffer free,
+//!           i.e. read_{j-1}'s buffer phase complete
+//! ```
+//!
+//! Stall := extra time the buffer phase takes beyond its unconstrained
+//! duration because the write had not finished.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::trace::{TraceEvent, TraceKind};
+use crate::device::Device;
+use crate::dse::Design;
+use crate::schedule::BurstSchedule;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub batch: u64,
+    /// Record per-event traces (Fig. 5 rendering); off for latency runs.
+    pub trace: bool,
+    pub max_trace_events: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { batch: 1, trace: false, max_trace_events: 4096 }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Wall-clock of the batch through the accelerator, seconds.
+    pub makespan_s: f64,
+    /// Single-sample latency estimate in ms (fill + steady drain + stalls).
+    pub latency_ms: f64,
+    /// Total stall time summed over streaming CEs, seconds.
+    pub total_stall_s: f64,
+    /// Stall per layer index.
+    pub per_layer_stall_s: Vec<f64>,
+    /// Of each layer's stall, the part attributable to DMA-port contention:
+    /// the write burst could not start when requested because another
+    /// layer's burst held the port. The remainder is intrinsic
+    /// Read-After-Write wait (the burst itself was too slow for the window).
+    pub per_layer_contention_s: Vec<f64>,
+    /// Fraction of the makespan the DMA port was busy.
+    pub dma_busy_frac: f64,
+    /// Number of fragment-iteration events processed.
+    pub events: u64,
+    /// Optional event trace.
+    pub traces: Vec<TraceEvent>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Request {
+    time: f64,
+    layer_slot: usize, // index into the schedule entries
+    iteration: u64,
+}
+
+impl Eq for Request {}
+impl Ord for Request {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by (time, layer): reversed for BinaryHeap
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.layer_slot.cmp(&self.layer_slot))
+    }
+}
+impl PartialOrd for Request {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Run the simulation of `design` on `device`.
+pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult {
+    let schedule = BurstSchedule::from_design(design, device, cfg.batch);
+    let clk = design.clk_comp_mhz * 1e6;
+
+    // Ideal (stall-free) pipeline time: fill + batch drains of bottleneck.
+    let fill: f64 = (0..design.len())
+        .map(|i| crate::ce::fill_cycles(&design.network.layers[i], &design.cfgs[i]) as f64 / clk)
+        .sum();
+    let bottleneck_period = design.cycles_of(design.slowest()) as f64 / clk;
+    let ideal_finish = fill + cfg.batch as f64 * bottleneck_period;
+
+    let mut per_layer_stall = vec![0.0; design.len()];
+    let mut per_layer_contention = vec![0.0; design.len()];
+    let mut traces = Vec::new();
+
+    if schedule.entries.is_empty() {
+        return SimResult {
+            makespan_s: ideal_finish,
+            latency_ms: ideal_finish * 1e3,
+            total_stall_s: 0.0,
+            per_layer_stall_s: per_layer_stall,
+            per_layer_contention_s: per_layer_contention,
+            dma_busy_frac: 0.0,
+            events: 0,
+            traces,
+        };
+    }
+
+    // Per streaming CE: cursor of its sequential read chain.
+    let n_slots = schedule.entries.len();
+    let mut prev_read_end: Vec<f64> = schedule.entries.iter().map(|e| e.start_offset).collect();
+    let mut heap: BinaryHeap<Request> = BinaryHeap::with_capacity(n_slots * 2);
+    for (slot, e) in schedule.entries.iter().enumerate() {
+        // first write requested when the CE's window opens
+        heap.push(Request { time: e.start_offset.max(0.0), layer_slot: slot, iteration: 0 });
+    }
+
+    let mut dma_free = 0.0_f64;
+    let mut dma_busy = 0.0_f64;
+    let mut events = 0_u64;
+    let mut max_read_end = 0.0_f64;
+
+    while let Some(req) = heap.pop() {
+        let e = &schedule.entries[req.layer_slot];
+        // DMA burst (write side, clk_dma domain folded into t_wr)
+        let w_start = req.time.max(dma_free);
+        let w_end = w_start + e.t_wr;
+        dma_free = w_end;
+        dma_busy += e.t_wr;
+
+        // CE read iteration (compute-clock domain). The buffer phase chases
+        // the write pointer (fine-grained RAW): it cannot finish before the
+        // write finishes, but overlaps it word-by-word.
+        let s_start = prev_read_end[req.layer_slot];
+        let s_end = s_start + e.t_rd_static;
+        let unconstrained_end = s_end + e.t_rd_buffer;
+        let r_end = unconstrained_end.max(w_end);
+        let stall = r_end - unconstrained_end;
+        let b_start = s_end;
+        prev_read_end[req.layer_slot] = r_end;
+        per_layer_stall[e.layer] += stall;
+        // Attribution: had the port been free at request time the write
+        // would have ended at `req.time + t_wr`; any stall beyond that point
+        // is queueing behind other layers' bursts (contention), the rest is
+        // the burst itself outrunning the read window (intrinsic RAW wait).
+        if stall > 0.0 {
+            let uncontended_end = req.time + e.t_wr;
+            let intrinsic = (uncontended_end - unconstrained_end).max(0.0).min(stall);
+            per_layer_contention[e.layer] += stall - intrinsic;
+        }
+        max_read_end = max_read_end.max(r_end);
+        events += 1;
+
+        if cfg.trace && traces.len() + 4 <= cfg.max_trace_events {
+            traces.push(TraceEvent { layer: e.layer, kind: TraceKind::WriteBurst, start: w_start, end: w_end });
+            traces.push(TraceEvent { layer: e.layer, kind: TraceKind::ReadStatic, start: s_start, end: s_end });
+            if stall > 0.0 {
+                traces.push(TraceEvent { layer: e.layer, kind: TraceKind::Stall, start: s_end, end: b_start });
+            }
+            traces.push(TraceEvent { layer: e.layer, kind: TraceKind::ReadBuffer, start: b_start, end: r_end });
+        }
+
+        if req.iteration + 1 < e.r {
+            // buffer freed once its read phase completes
+            heap.push(Request { time: r_end, layer_slot: req.layer_slot, iteration: req.iteration + 1 });
+        }
+    }
+
+    let makespan = ideal_finish.max(max_read_end);
+    let total_stall: f64 = per_layer_stall.iter().sum();
+    SimResult {
+        makespan_s: makespan,
+        latency_ms: makespan * 1e3,
+        total_stall_s: total_stall,
+        per_layer_stall_s: per_layer_stall,
+        per_layer_contention_s: per_layer_contention,
+        dma_busy_frac: if makespan > 0.0 { dma_busy / makespan } else { 0.0 },
+        events,
+        traces,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{self, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn all_onchip_design_matches_analytic_exactly() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::u250();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let sim = simulate(&r.design, &dev, &SimConfig::default());
+        assert_eq!(sim.total_stall_s, 0.0);
+        assert_eq!(sim.events, 0);
+        let rel = (sim.latency_ms - r.latency_ms).abs() / r.latency_ms;
+        assert!(rel < 1e-9, "sim {} vs analytic {}", sim.latency_ms, r.latency_ms);
+    }
+
+    #[test]
+    fn balanced_streaming_design_is_nearly_stall_free() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        assert!(r.design.any_streaming());
+        let sim = simulate(&r.design, &dev, &SimConfig::default());
+        // stalls below 10% of makespan: write-burst balancing works
+        assert!(
+            sim.total_stall_s < 0.10 * sim.makespan_s,
+            "stalls {} vs makespan {}",
+            sim.total_stall_s,
+            sim.makespan_s
+        );
+        // sim latency close to analytic prediction
+        let rel = (sim.latency_ms - r.latency_ms).abs() / r.latency_ms;
+        assert!(rel < 0.25, "sim {} vs analytic {} ms", sim.latency_ms, r.latency_ms);
+    }
+
+    #[test]
+    fn batch_scales_makespan_linearly() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let s1 = simulate(&r.design, &dev, &SimConfig { batch: 1, ..Default::default() });
+        let s8 = simulate(&r.design, &dev, &SimConfig { batch: 8, ..Default::default() });
+        let ratio = s8.makespan_s / s1.makespan_s;
+        assert!((4.0..9.0).contains(&ratio), "batch-8 / batch-1 = {ratio}");
+    }
+
+    #[test]
+    fn dma_busy_fraction_is_sane() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let sim = simulate(&r.design, &dev, &SimConfig::default());
+        assert!((0.0..=1.0).contains(&sim.dma_busy_frac), "{}", sim.dma_busy_frac);
+    }
+}

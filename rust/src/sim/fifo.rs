@@ -1,0 +1,153 @@
+//! Inter-CE FIFO sizing analysis.
+//!
+//! The layer-wise pipeline connects CEs with handshaked FIFOs (paper §IV-A:
+//! "CEs are interconnected using FIFOs to accommodate variations in
+//! processing rates and data port width"). The area model charges a fixed
+//! 256-word FIFO per link; this module computes the *required* depth from
+//! the producer/consumer rate patterns so that a design can be checked for
+//! backpressure risk — and the fixed allowance validated — without running
+//! the cycle simulator.
+//!
+//! Model: within one output row, a producer emits `ŵ·f` values over its row
+//! period and the consumer drains at its own steady rate. Windowed consumers
+//! (conv/pool with `k > 1`) additionally hold back `(k−1)` rows in their
+//! line buffers before producing anything, which the *line buffer* (not the
+//! FIFO) absorbs; the FIFO only has to cover the short-term rate mismatch
+//! plus the consumer's per-window dead time. The dominant term is the
+//! classic rate-mismatch bound:
+//!
+//! ```text
+//! depth ≥ burst · max(0, 1 − drain_rate / fill_rate) + slack
+//! ```
+
+use crate::dse::Design;
+
+/// Sizing of one inter-CE link (producer layer `from` → consumer `from+1`).
+#[derive(Debug, Clone)]
+pub struct FifoSizing {
+    /// Producer layer index.
+    pub from: usize,
+    /// Required depth in words of the producer's output stream.
+    pub required_depth: u64,
+    /// Producer's steady output rate, values per compute cycle.
+    pub fill_rate: f64,
+    /// Consumer's steady intake rate, values per compute cycle.
+    pub drain_rate: f64,
+    /// Whether the fixed 256-word allowance of the area model covers it.
+    pub within_allowance: bool,
+}
+
+/// The fixed per-link FIFO allowance charged by the area model.
+pub const FIFO_ALLOWANCE: u64 = 256;
+
+/// Compute required FIFO depths for every adjacent CE pair of a design.
+pub fn fifo_depths(design: &Design) -> Vec<FifoSizing> {
+    let n = design.len();
+    let mut out = Vec::with_capacity(n.saturating_sub(1));
+    for i in 0..n.saturating_sub(1) {
+        let prod = &design.network.layers[i];
+        let cons = &design.network.layers[i + 1];
+
+        // Steady rates in values per cycle (bottleneck-scaled: every CE
+        // actually runs at the pipeline rate, so scale by the slowdown).
+        let prod_cycles = design.cycles_of(i) as f64;
+        let cons_cycles = design.cycles_of(i + 1) as f64;
+        let pipeline_cycles = prod_cycles.max(cons_cycles);
+        let fill_rate = prod.output_count() as f64 / pipeline_cycles;
+        let drain_rate = cons.input_count() as f64 / pipeline_cycles;
+
+        // Burst granularity: one output row of the producer. Consumers with
+        // k>1 windows drain rows through their line buffers; the FIFO sees
+        // at most a row of skew.
+        let burst = (prod.w_out() as u64 * prod.c_out as u64).max(1);
+
+        let mismatch = if fill_rate > drain_rate && fill_rate > 0.0 {
+            (burst as f64 * (1.0 - drain_rate / fill_rate)).ceil() as u64
+        } else {
+            0
+        };
+        // handshake slack: a few words of pipeline registering either side
+        let required = mismatch + 8;
+        out.push(FifoSizing {
+            from: i,
+            required_depth: required,
+            fill_rate,
+            drain_rate,
+            within_allowance: required <= FIFO_ALLOWANCE,
+        });
+    }
+    out
+}
+
+/// Worst-case link of a design (largest required depth).
+pub fn worst_link(design: &Design) -> Option<FifoSizing> {
+    fifo_depths(design)
+        .into_iter()
+        .max_by(|a, b| a.required_depth.cmp(&b.required_depth))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::dse::{self, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    fn designed(model: &str, q: Quant, dev: &Device) -> Design {
+        let net = models::by_name(model, q).unwrap();
+        dse::run(&net, dev, &DseConfig::default()).unwrap().design
+    }
+
+    #[test]
+    fn every_link_has_positive_depth() {
+        let d = designed("resnet18", Quant::W4A5, &Device::zcu102());
+        let sizes = fifo_depths(&d);
+        assert_eq!(sizes.len(), d.len() - 1);
+        for s in &sizes {
+            assert!(s.required_depth >= 8, "{s:?}");
+            assert!(s.fill_rate >= 0.0 && s.drain_rate >= 0.0);
+        }
+    }
+
+    #[test]
+    fn dse_designs_fit_the_allowance() {
+        // The greedy DSE balances processing rates, so required depths stay
+        // within the area model's fixed 256-word FIFO on the paper's
+        // evaluated pairs.
+        for (m, q, dev) in [
+            ("resnet18", Quant::W4A5, Device::zcu102()),
+            ("mobilenetv2", Quant::W4A4, Device::zc706()),
+            ("toy", Quant::W8A8, Device::zcu102()),
+        ] {
+            let d = designed(m, q, &dev);
+            let worst = worst_link(&d).unwrap();
+            assert!(
+                worst.within_allowance,
+                "{m}: link {} needs {} words",
+                worst.from,
+                worst.required_depth
+            );
+        }
+    }
+
+    #[test]
+    fn rate_matched_links_need_only_slack() {
+        let d = designed("toy", Quant::W8A8, &Device::u250());
+        for s in fifo_depths(&d) {
+            if s.drain_rate >= s.fill_rate {
+                assert_eq!(s.required_depth, 8, "{s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_design_rates_are_tiny() {
+        // All-serial CEs process ~1 value/cycle at the bottleneck rate scale.
+        let net = models::toy_cnn(Quant::W8A8);
+        let d = Design::initialize(&net, &Device::zcu102());
+        for s in fifo_depths(&d) {
+            assert!(s.fill_rate <= 1.5, "{s:?}");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Event-driven simulator of the pipelined accelerator — validates the
+//! analytic models and quantifies the DMA stalls the write-burst balancing
+//! strategy eliminates (paper Fig. 5).
+//!
+//! Granularity: one event per weight-fragment iteration (not per cycle) —
+//! within an iteration the CE behaviour is exactly periodic, so this loses
+//! no timing information while keeping ResNet-scale simulations in the
+//! microsecond range. Two clock domains are modeled: reads advance in
+//! `clk_comp` time scaled by the slow-down factor `s_l`; DMA write bursts
+//! advance at the effective off-chip rate capped by the buffer write port in
+//! `clk_dma` (Eq. 8).
+
+mod engine;
+mod fifo;
+mod trace;
+
+pub use engine::{simulate, SimConfig, SimResult};
+pub use fifo::{fifo_depths, worst_link, FifoSizing, FIFO_ALLOWANCE};
+pub use trace::{fig5_scenario, render_gantt, to_csv, TraceEvent, TraceKind};

@@ -1,0 +1,243 @@
+//! Trace events and the Fig. 5 two-layer scenario builder.
+
+use crate::ce::CeModel;
+use crate::device::Device;
+use crate::dse::Design;
+use crate::ir::{Layer, Network, Quant};
+
+/// Kind of a traced interval (the bars of Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// DMA writing a fragment into the shared buffer.
+    WriteBurst,
+    /// PE array reading the static on-chip region.
+    ReadStatic,
+    /// PE array reading the shared buffer.
+    ReadBuffer,
+    /// PE array stalled on the Read-After-Write check.
+    Stall,
+}
+
+/// One traced interval.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub layer: usize,
+    pub kind: TraceKind,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl TraceKind {
+    /// Stable label for CSV export and rendering.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceKind::WriteBurst => "write",
+            TraceKind::ReadStatic => "read_static",
+            TraceKind::ReadBuffer => "read_buffer",
+            TraceKind::Stall => "stall",
+        }
+    }
+
+    /// One-character glyph for the Gantt rendering.
+    fn glyph(&self) -> char {
+        match self {
+            TraceKind::WriteBurst => 'W',
+            TraceKind::ReadStatic => 's',
+            TraceKind::ReadBuffer => 'b',
+            TraceKind::Stall => 'X',
+        }
+    }
+}
+
+/// Export traces as CSV (`layer,kind,start_us,end_us`) for external
+/// waveform/plotting tools.
+pub fn to_csv(traces: &[TraceEvent]) -> String {
+    let mut out = String::from("layer,kind,start_us,end_us\n");
+    for t in traces {
+        out.push_str(&format!(
+            "{},{},{:.4},{:.4}\n",
+            t.layer,
+            t.kind.label(),
+            t.start * 1e6,
+            t.end * 1e6
+        ));
+    }
+    out
+}
+
+/// Render a Fig. 5-style ASCII Gantt chart: two rows per layer (DMA write
+/// channel and CE read channel), `width` characters across the trace span.
+pub fn render_gantt(traces: &[TraceEvent], width: usize) -> String {
+    if traces.is_empty() {
+        return String::from("(no trace events)\n");
+    }
+    let width = width.max(16);
+    let t0 = traces.iter().map(|t| t.start).fold(f64::INFINITY, f64::min);
+    let t1 = traces.iter().map(|t| t.end).fold(0.0_f64, f64::max);
+    let span = (t1 - t0).max(1e-12);
+    let mut layers: Vec<usize> = traces.iter().map(|t| t.layer).collect();
+    layers.sort_unstable();
+    layers.dedup();
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "time span {:.2} us  (W=write burst, s=static read, b=buffer read, X=stall)\n",
+        span * 1e6
+    ));
+    for &layer in &layers {
+        for write_channel in [true, false] {
+            let mut row = vec![' '; width];
+            for t in traces.iter().filter(|t| t.layer == layer) {
+                if (t.kind == TraceKind::WriteBurst) != write_channel {
+                    continue;
+                }
+                let a = (((t.start - t0) / span) * (width as f64 - 1.0)) as usize;
+                let b = (((t.end - t0) / span) * (width as f64 - 1.0)) as usize;
+                for cell in row.iter_mut().take(b.min(width - 1) + 1).skip(a) {
+                    *cell = t.kind.glyph();
+                }
+            }
+            let label = if write_channel { "dma wr" } else { "ce rd" };
+            out.push_str(&format!("l{layer} {label:>7} |{}|\n", row.iter().collect::<String>()));
+        }
+    }
+    out
+}
+
+/// Build the two-layer write/read scheduling example of paper Fig. 5.
+///
+/// Layer `l1` produces a 4x-larger output map than `l2`, so with naive
+/// fragmentation (`n = 1` everywhere) `r_l1 = 4·r_l2` — the imbalanced case
+/// of Fig. 5(a) where `l2`'s big bursts stall `l1`. With
+/// `balanced = true`, `l2` gets `n = 4` so that `r_l1 = r_l2` (Fig. 5(b)).
+/// Both layers stream half of their weights.
+pub fn fig5_scenario(balanced: bool) -> (Design, Device) {
+    let q = Quant::W8A8;
+    let mut net = Network::new("fig5", (8, 16, 16), q);
+    net.push(Layer::conv("l1", 8, 16, 16, 16, 3, 2, 1, q)); // out 8x8 = 64 px
+    net.push(Layer::conv("l2", 16, 32, 8, 8, 3, 2, 1, q)); // out 4x4 = 16 px
+
+    let dev = Device {
+        name: "fig5-dev",
+        bram36: 64,
+        uram: 0,
+        dsp: 128,
+        lut: 100_000,
+        ff: 200_000,
+        bandwidth_bps: 32e9,
+        clk_comp_mhz: 100.0,
+        clk_dma_mhz: 200.0,
+        dma_port_bits: 512,
+    };
+
+    let mut d = Design::initialize(&net, &dev);
+    // modest parallelism so reads take a realistic number of cycles
+    for i in 0..2 {
+        d.cfgs[i].kp = 9;
+        d.cfgs[i].cp = 2;
+        d.cfgs[i].fp = 2;
+    }
+    // Evict 1/4 of l1 and 1/2 of l2. Imbalanced (n = 1 everywhere), l2's
+    // single write burst is longer than an entire l1 read window, so it
+    // inevitably delays l1's small bursts past their slack — the Fig. 5(a)
+    // stalls. Balanced (n = 4 for l2, Eq. 10), l2's bursts shrink to
+    // window-sized pieces that interleave with l1's without contention.
+    for (i, frac) in [(0usize, 4u64), (1, 2)] {
+        let m = CeModel::new(&d.network.layers[i], d.cfgs[i], d.clk_comp_mhz);
+        let m_dep = m.m_dep();
+        d.off_bits[i] = (m_dep / frac) * m.m_wid_bits();
+        let n = if i == 1 && balanced { 4 } else { 1 };
+        d.set_fragmentation(i, n);
+    }
+    (d, dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, SimConfig};
+
+    #[test]
+    fn fig5_scenario_has_expected_repeat_ratio() {
+        let (imb, _) = fig5_scenario(false);
+        let r1 = imb.repeats(0, 1);
+        let r2 = imb.repeats(1, 1);
+        assert_eq!(r1, 4 * r2, "imbalanced: r_l1 = 4·r_l2 ({r1} vs {r2})");
+
+        let (bal, _) = fig5_scenario(true);
+        assert_eq!(bal.repeats(0, 1), bal.repeats(1, 1), "balanced: equal r");
+    }
+
+    /// The paper's Fig. 5 claim: balancing the burst counts removes the
+    /// stalls the imbalanced schedule suffers.
+    #[test]
+    fn balancing_removes_stalls() {
+        let (imb, dev) = fig5_scenario(false);
+        let (bal, _) = fig5_scenario(true);
+        let cfg = SimConfig { batch: 4, ..Default::default() };
+        let s_imb = simulate(&imb, &dev, &cfg);
+        let s_bal = simulate(&bal, &dev, &cfg);
+        assert!(
+            s_bal.total_stall_s < s_imb.total_stall_s,
+            "balanced stalls {} must be below imbalanced {}",
+            s_bal.total_stall_s,
+            s_imb.total_stall_s
+        );
+        assert!(s_bal.makespan_s <= s_imb.makespan_s * 1.001);
+    }
+
+    #[test]
+    fn traces_are_well_formed() {
+        let (d, dev) = fig5_scenario(true);
+        let s = simulate(&d, &dev, &SimConfig { batch: 1, trace: true, max_trace_events: 512 });
+        assert!(!s.traces.is_empty());
+        for t in &s.traces {
+            assert!(t.end >= t.start, "{t:?}");
+            assert!(t.layer < 2);
+        }
+    }
+
+    #[test]
+    fn csv_export_has_header_and_rows() {
+        let (d, dev) = fig5_scenario(true);
+        let s = simulate(&d, &dev, &SimConfig { batch: 1, trace: true, max_trace_events: 64 });
+        let csv = to_csv(&s.traces);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "layer,kind,start_us,end_us");
+        assert_eq!(lines.len(), s.traces.len() + 1);
+        for l in &lines[1..] {
+            assert_eq!(l.split(',').count(), 4, "{l}");
+        }
+    }
+
+    #[test]
+    fn gantt_renders_both_channels() {
+        let (d, dev) = fig5_scenario(false);
+        let s = simulate(&d, &dev, &SimConfig { batch: 2, trace: true, max_trace_events: 512 });
+        let g = render_gantt(&s.traces, 100);
+        assert!(g.contains("dma wr"));
+        assert!(g.contains("ce rd"));
+        assert!(g.contains('W'), "write bursts visible:\n{g}");
+        assert!(g.contains('s') || g.contains('b'), "reads visible:\n{g}");
+        // imbalanced scenario shows stalls
+        assert!(g.contains('X'), "stalls visible in imbalanced trace:\n{g}");
+        assert_eq!(render_gantt(&[], 80), "(no trace events)\n");
+    }
+
+    #[test]
+    fn stall_attribution_partitions_total() {
+        let (d, dev) = fig5_scenario(false);
+        let s = simulate(&d, &dev, &SimConfig { batch: 4, ..Default::default() });
+        assert!(s.total_stall_s > 0.0, "imbalanced scenario must stall");
+        for (i, (&stall, &cont)) in
+            s.per_layer_stall_s.iter().zip(&s.per_layer_contention_s).enumerate()
+        {
+            assert!(cont >= 0.0, "layer {i}");
+            assert!(cont <= stall + 1e-12, "layer {i}: contention {cont} > stall {stall}");
+        }
+        // Fig. 5(a)'s mechanism: l1's stalls are DMA contention (waiting for
+        // l2's oversized burst), not intrinsic RAW.
+        let contention: f64 = s.per_layer_contention_s.iter().sum();
+        assert!(contention > 0.0, "imbalance must manifest as port contention");
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained utilities (this build is fully offline: no `rand`,
+//! no external helpers).
+
+mod rng;
+
+pub use rng::XorShift64;

@@ -1,0 +1,190 @@
+//! Cross-module integration: DSE -> burst schedule -> simulator, across the
+//! paper's full (model, device, quant) grid, checking the qualitative claims
+//! of the evaluation section hold end-to-end.
+
+use autows::baseline::{self, sequential_latency_ms};
+use autows::device::Device;
+use autows::dse::{self, mem_sweep, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::schedule::{demux_sequence, BurstSchedule};
+use autows::sim::{simulate, SimConfig};
+
+/// Table II, row resnet18: the three-architecture ordering per device class.
+#[test]
+fn table2_resnet18_orderings() {
+    let q = Quant::W4A5;
+    let net = models::resnet18(q);
+
+    // small device (zc706-class): vanilla infeasible, AutoWS feasible
+    let zc706 = Device::zc706();
+    assert!(baseline::vanilla(&net, &zc706).is_none());
+    let autows = dse::run(&net, &zc706, &DseConfig::default()).unwrap();
+    assert!(autows.throughput > 0.0);
+
+    // mid device (zcu102): vanilla infeasible, AutoWS beats sequential
+    let zcu102 = Device::zcu102();
+    assert!(baseline::vanilla(&net, &zcu102).is_none());
+    let a = dse::run(&net, &zcu102, &DseConfig::default()).unwrap();
+    let a_ms = simulate(&a.design, &zcu102, &SimConfig::default()).latency_ms;
+    let s_ms = sequential_latency_ms(&net, &zcu102);
+    assert!(a_ms < s_ms, "AutoWS {a_ms} must beat sequential {s_ms} on zcu102");
+
+    // large device (u50, W8A8): vanilla ~= AutoWS, both beat sequential
+    let u50 = Device::u50();
+    let net8 = models::resnet18(Quant::W8A8);
+    let v = baseline::vanilla(&net8, &u50).expect("vanilla fits u50");
+    let a = dse::run(&net8, &u50, &DseConfig::default()).unwrap();
+    let ratio = a.throughput / v.throughput;
+    assert!((0.8..1.3).contains(&ratio), "large device: AutoWS ≈ vanilla ({ratio})");
+    let s = sequential_latency_ms(&net8, &u50);
+    assert!(1e3 / a.throughput < s, "pipelined must beat sequential on u50");
+}
+
+/// Table II, resnet50-U50: the paper's flagship result — AutoWS turns a
+/// 15 ms-class vanilla design into one beating the sequential baseline.
+#[test]
+fn table2_resnet50_u50_headline() {
+    let net = models::resnet50(Quant::W8A8);
+    let dev = Device::u50();
+    let v = baseline::vanilla(&net, &dev).expect("vanilla fits (memory-starved)");
+    let a = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let s = sequential_latency_ms(&net, &dev);
+    let v_ms = 1e3 / v.throughput;
+    let a_ms = simulate(&a.design, &dev, &SimConfig::default()).latency_ms;
+    assert!(a_ms < v_ms, "AutoWS {a_ms} must beat memory-starved vanilla {v_ms}");
+    assert!(a_ms < s, "AutoWS {a_ms} must beat sequential {s}");
+    assert!(v_ms > s, "vanilla should lose to sequential when memory-starved");
+}
+
+/// Fig. 6's three regions on the real sweep axis.
+#[test]
+fn fig6_three_regions() {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let pts = mem_sweep(&net, &dev, &[0.5, 1.0, 1.5, 2.0]);
+
+    // region 1: vanilla infeasible, AutoWS delivers
+    assert!(pts[0].vanilla_fps.is_none());
+    assert!(pts[0].autows_fps.is_some());
+    // region 2/3 boundary: vanilla appears once memory suffices
+    let vanilla_appears = pts.iter().filter(|p| p.vanilla_fps.is_some()).count();
+    assert!(vanilla_appears >= 1, "vanilla must become feasible at 2x memory");
+    // region 3: convergence
+    let last = &pts[3];
+    if let (Some(a), Some(v)) = (last.autows_fps, last.vanilla_fps) {
+        assert!((a / v - 1.0).abs() < 0.35, "converged region: {a} vs {v}");
+    }
+    // AutoWS monotone non-decreasing with memory (tolerance for greedy noise)
+    for w in pts.windows(2) {
+        let (a, b) = (w[0].autows_fps.unwrap(), w[1].autows_fps.unwrap());
+        assert!(b >= a * 0.9, "{a} -> {b}");
+    }
+}
+
+/// Fig. 7: the eviction set prefers layers with small output maps (late
+/// layers) — minimal ΔB.
+#[test]
+fn fig7_eviction_prefers_small_output_maps() {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let streaming = r.design.streaming_layers();
+    assert!(!streaming.is_empty());
+    let avg_pixels_streaming: f64 = streaming
+        .iter()
+        .map(|&i| {
+            let l = &net.layers[i];
+            (l.h_out() * l.w_out()) as f64
+        })
+        .sum::<f64>()
+        / streaming.len() as f64;
+    let weight_layers = net.weight_layers();
+    let avg_pixels_all: f64 = weight_layers
+        .iter()
+        .map(|&i| (net.layers[i].h_out() * net.layers[i].w_out()) as f64)
+        .sum::<f64>()
+        / weight_layers.len() as f64;
+    assert!(
+        avg_pixels_streaming < avg_pixels_all,
+        "streamed layers should have smaller maps: {avg_pixels_streaming} vs {avg_pixels_all}"
+    );
+}
+
+/// The DMA demux sequence of a DSE design is deterministic, contiguous and
+/// schedulable (paper §IV-B).
+#[test]
+fn dma_demux_sequence_is_deterministic_and_schedulable() {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let s1 = BurstSchedule::from_design(&r.design, &dev, 1);
+    let s2 = BurstSchedule::from_design(&r.design, &dev, 1);
+    let d1 = demux_sequence(&s1);
+    let d2 = demux_sequence(&s2);
+    assert_eq!(d1.len(), d2.len());
+    for (a, b) in d1.iter().zip(&d2) {
+        assert_eq!(a.layer, b.layer);
+        assert!((a.offset - b.offset).abs() < 1e-15);
+    }
+    assert!(s1.schedulable());
+    assert!(s1.balanced());
+}
+
+/// Simulated latency of DSE designs tracks the analytic model within 25%
+/// on every feasible Table II cell (validates the models the DSE trusts).
+#[test]
+fn sim_validates_analytic_model_across_grid() {
+    for (model, device, q) in [
+        ("mobilenetv2", "zcu102", Quant::W4A5),
+        ("resnet18", "zcu102", Quant::W4A5),
+        ("resnet18", "u50", Quant::W8A8),
+        ("resnet50", "u250", Quant::W8A8),
+    ] {
+        let net = models::by_name(model, q).unwrap();
+        let dev = Device::by_name(device).unwrap();
+        let Some(r) = dse::run(&net, &dev, &DseConfig::default()) else { continue };
+        let sim = simulate(&r.design, &dev, &SimConfig::default());
+        let rel = (sim.latency_ms - r.latency_ms) / r.latency_ms;
+        assert!(
+            (-0.001..0.25).contains(&rel),
+            "{model}/{device}: sim {} vs analytic {} ({:+.1}%)",
+            sim.latency_ms,
+            r.latency_ms,
+            rel * 100.0
+        );
+    }
+}
+
+/// Hyperparameters φ and μ trade exploration time for quality (paper §IV-A):
+/// coarser steps must not crash and should stay within 2x of the fine result.
+#[test]
+fn hyperparameter_coarseness_tradeoff() {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let fine = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let coarse = dse::run(
+        &net,
+        &dev,
+        &DseConfig { phi: 8, mu: 4096, ..Default::default() },
+    )
+    .unwrap();
+    assert!(coarse.iterations <= fine.iterations);
+    assert!(
+        coarse.throughput >= fine.throughput * 0.4,
+        "coarse {} vs fine {}",
+        coarse.throughput,
+        fine.throughput
+    );
+}
+
+/// YOLOv5n §V-D: pipelined beats the sequential (Vitis-AI-class) baseline.
+#[test]
+fn yolo_pipelined_beats_sequential() {
+    let net = models::yolov5n(Quant::W8A8);
+    let dev = Device::zcu102();
+    let s = sequential_latency_ms(&net, &dev);
+    let a = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let a_ms = simulate(&a.design, &dev, &SimConfig::default()).latency_ms;
+    assert!(a_ms < s, "AutoWS {a_ms} must beat sequential {s} (paper: 8.7 vs 13.7)");
+}

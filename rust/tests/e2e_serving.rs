@@ -1,0 +1,93 @@
+//! End-to-end integration: DSE schedule + PJRT numerics + coordinator
+//! batching, exercised together the way `autows serve` wires them.
+
+use std::time::Duration;
+
+use autows::coordinator::{BatchPolicy, PjrtEngine, Server};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::runtime::Runtime;
+
+fn artifact(name: &str) -> Option<String> {
+    let path = format!("{}/artifacts/{}", env!("CARGO_MANIFEST_DIR"), name);
+    if std::path::Path::new(&path).exists() {
+        Some(path)
+    } else {
+        eprintln!("SKIP: {path} missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn serve_batched_requests_through_pjrt() {
+    let Some(path) = artifact("toy_cnn_b8.hlo.txt") else { return };
+
+    let net = models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let plan = dse::run(&net, &dev, &DseConfig::default()).expect("toy cnn fits zcu102");
+    let design = plan.design;
+
+    let server = Server::start_with(
+        move || {
+            let rt = Runtime::cpu()?;
+            let model = rt.load_hlo_text(&path)?;
+            Ok(Box::new(PjrtEngine::new(model, design, dev, (3, 32, 32), 8)) as _)
+        },
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+    )
+    .expect("engine boot");
+
+    // 32 concurrent requests with distinct deterministic inputs
+    let receivers: Vec<_> = (0..32)
+        .map(|i| {
+            let input: Vec<f32> =
+                (0..3 * 32 * 32).map(|j| ((i * 131 + j * 7) % 255) as f32 / 255.0 - 0.5).collect();
+            server.submit(input).unwrap()
+        })
+        .collect();
+
+    let mut batched = 0;
+    for rx in receivers {
+        let resp = rx.recv().unwrap().expect("inference ok");
+        assert_eq!(resp.output.len(), 10);
+        assert!(resp.output.iter().all(|v| v.is_finite()));
+        assert!(resp.accel > Duration::ZERO, "simulated accelerator time present");
+        if resp.batch > 1 {
+            batched += 1;
+        }
+    }
+    assert!(batched > 0, "at least some requests must ride shared batches");
+
+    let m = server.metrics();
+    assert_eq!(m.requests, 32);
+    assert!(m.batches < 32, "batching reduced executable invocations");
+    assert!(m.sim_accel_s > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn identical_inputs_get_identical_outputs_across_batches() {
+    let Some(path) = artifact("toy_cnn_b8.hlo.txt") else { return };
+    let net = models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let design = dse::run(&net, &dev, &DseConfig::default()).unwrap().design;
+
+    let server = Server::start_with(
+        move || {
+            let rt = Runtime::cpu()?;
+            let model = rt.load_hlo_text(&path)?;
+            Ok(Box::new(PjrtEngine::new(model, design, dev, (3, 32, 32), 8)) as _)
+        },
+        // max_batch 1: every request runs alone
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+
+    let input: Vec<f32> = (0..3 * 32 * 32).map(|j| (j % 29) as f32 / 29.0).collect();
+    let a = server.infer(input.clone()).unwrap();
+    let b = server.infer(input).unwrap();
+    assert_eq!(a.output, b.output, "padding/batching must not perturb numerics");
+    server.shutdown();
+}

@@ -1,0 +1,174 @@
+//! Integration tests over the extension subsystems: the config launcher
+//! path, `.net` model files, the multi-model registry, compression
+//! co-design end-to-end, and failure injection on each input surface.
+
+use std::time::Duration;
+
+use autows::compress::{compress_network, CompressionSpec};
+use autows::config::{ModelSource, RunSpec};
+use autows::coordinator::{
+    BatchPolicy, ModelEntry, ModelRegistry, Priority, ServerOptions, SimOnlyEngine,
+};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::{parse_network, Quant};
+use autows::sim::{simulate, SimConfig};
+
+/// Full launcher path: config text -> spec -> network -> DSE -> simulator.
+#[test]
+fn config_to_simulation_pipeline() {
+    let spec = RunSpec::from_str(
+        r#"
+title = "integration"
+[model]
+name  = "resnet18"
+quant = "w4a5"
+[device]
+name = "zcu102"
+[dse]
+phi = 2
+mu  = 1024
+[sim]
+batch = 4
+"#,
+    )
+    .unwrap();
+    let net = spec.build_network().unwrap();
+    let r = dse::run(&net, &spec.device, &spec.dse).expect("feasible");
+    let sim = simulate(&r.design, &spec.device, &SimConfig { batch: spec.sim_batch, ..Default::default() });
+    assert!(sim.makespan_s > 0.0);
+    assert!(sim.total_stall_s <= 0.1 * sim.makespan_s, "balanced schedule");
+}
+
+/// The shipped example `.net` file must parse and deploy on the smallest
+/// device (that is its documented purpose).
+#[test]
+fn shipped_net_file_deploys_on_zedboard() {
+    let path = format!("{}/nets/residual_tiny.net", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).expect("nets/residual_tiny.net shipped");
+    let net = parse_network(&text, Quant::W8A8).unwrap();
+    assert_eq!(net.name, "residual_tiny");
+    let r = dse::run(&net, &Device::zedboard(), &DseConfig::default()).expect("fits zedboard");
+    assert!(r.throughput > 100.0, "tiny net should be fast: {}", r.throughput);
+}
+
+/// Config `model.file` resolves through the same path.
+#[test]
+fn config_with_net_file_source() {
+    let path = format!("{}/nets/residual_tiny.net", env!("CARGO_MANIFEST_DIR"));
+    let cfg = format!("[model]\nfile = \"{path}\"\nquant = \"w8a8\"");
+    let spec = RunSpec::from_str(&cfg).unwrap();
+    assert_eq!(spec.model, ModelSource::File(path));
+    let net = spec.build_network().unwrap();
+    assert_eq!(net.stats().weight_layers, 8);
+}
+
+/// Missing model file is an error, not a panic.
+#[test]
+fn config_with_missing_net_file_errors() {
+    let spec =
+        RunSpec::from_str("[model]\nfile = \"/nonexistent/x.net\"").unwrap();
+    let err = spec.build_network().unwrap_err();
+    assert!(err.to_string().contains("cannot read"), "{err}");
+}
+
+/// Registry serving two models concurrently with priorities and admission
+/// control — the multi-tenant coordinator scenario.
+#[test]
+fn registry_multi_model_serving() {
+    let mut reg = ModelRegistry::new();
+    for (alias, model) in [("small", "toy"), ("big", "resnet18")] {
+        let net = autows::models::by_name(model, Quant::W8A8).unwrap();
+        let dev = Device::u250();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let (c, h, w) = net.input_shape;
+        let input_len = (c * h * w) as usize;
+        let engine =
+            SimOnlyEngine { design: r.design, device: dev, input_len, output_len: 10 };
+        reg.register(
+            ModelEntry {
+                name: alias.into(),
+                input_len,
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                options: ServerOptions { queue_cap: 64 },
+            },
+            move || Ok(Box::new(engine) as _),
+        )
+        .unwrap();
+    }
+    assert_eq!(reg.models(), vec!["big", "small"]);
+
+    let small_len = reg.entry("small").unwrap().input_len;
+    let big_len = reg.entry("big").unwrap().input_len;
+    assert_ne!(small_len, big_len);
+
+    // interleave traffic across both models and priorities
+    let mut rxs = Vec::new();
+    for i in 0..12 {
+        let (model, len) = if i % 3 == 0 { ("big", big_len) } else { ("small", small_len) };
+        let prio = if i % 4 == 0 { Priority::High } else { Priority::Normal };
+        rxs.push(reg.submit(model, vec![0.25; len], prio).unwrap());
+    }
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    assert_eq!(reg.metrics("big").unwrap().requests, 4);
+    assert_eq!(reg.metrics("small").unwrap().requests, 8);
+    reg.shutdown();
+}
+
+/// Compression co-design end-to-end: a model/device pair where the vanilla
+/// pipeline cannot fit gains feasibility (or throughput) from pruning.
+#[test]
+fn compression_extends_device_reach() {
+    let net = autows::models::resnet50(Quant::W8A8);
+    let dev = Device::zcu102();
+    // dense W8A8 resnet50 on zcu102: vanilla cannot fit (paper Table II: X
+    // territory — 25.6 MB of weights vs ~5 MB on-chip)
+    assert!(dse::run(&net, &dev, &DseConfig::vanilla()).is_none());
+
+    let dense = dse::run(&net, &dev, &DseConfig::default());
+    let (pruned, rep) = compress_network(&net, &CompressionSpec::pruned(0.7));
+    assert!(rep.ratio() < 0.5);
+    let compressed = dse::run(&pruned, &dev, &DseConfig::default())
+        .expect("pruned resnet50 must fit zcu102 with streaming");
+    if let Some(d) = dense {
+        assert!(
+            compressed.throughput >= d.throughput,
+            "pruning must help the bandwidth-bound case: {} vs {}",
+            compressed.throughput,
+            d.throughput
+        );
+    }
+}
+
+/// Failure injection: zero-bandwidth device makes streaming designs
+/// infeasible but leaves all-on-chip designs alone.
+#[test]
+fn bandwidth_starved_device_fails_cleanly() {
+    let mut dev = Device::zcu102();
+    dev.bandwidth_bps = 1e3; // effectively none
+    // toy fits on-chip: still feasible (needs no weight streaming, and β_io
+    // is the only bandwidth user — which the paper charges against B too,
+    // so even this can fail; accept either, but no panic)
+    let toy = autows::models::toy_cnn(Quant::W8A8);
+    let _ = dse::run(&toy, &dev, &DseConfig::default());
+    // resnet18-W4A5 needs streaming on zcu102: must be infeasible
+    let net = autows::models::resnet18(Quant::W4A5);
+    assert!(dse::run(&net, &dev, &DseConfig::default()).is_none());
+}
+
+/// Gantt + CSV trace exports hold together on a real streamed design.
+#[test]
+fn trace_exports_on_real_design() {
+    use autows::sim::{render_gantt, to_csv};
+    let net = autows::models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let sim = simulate(&r.design, &dev, &SimConfig { batch: 1, trace: true, max_trace_events: 256 });
+    assert!(!sim.traces.is_empty(), "streamed design must trace");
+    let csv = to_csv(&sim.traces);
+    assert!(csv.lines().count() > 10);
+    let gantt = render_gantt(&sim.traces, 80);
+    assert!(gantt.contains("dma wr"));
+}

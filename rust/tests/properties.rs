@@ -1,0 +1,366 @@
+//! Property-based tests over randomly generated layers, configurations and
+//! designs (self-contained xorshift generator — this build is offline).
+//!
+//! Each property encodes an invariant of the paper's model:
+//!   P1  Eq. 1: depth x width always conserves the layer's weight bits.
+//!   P2  Eq. 2: fragmentation covers the memory and never loses words.
+//!   P3  Eq. 5: β is monotone in the evicted share and bounded by the
+//!       full word rate.
+//!   P4  Eq. 10: after any eviction sequence, repeat counts stay balanced.
+//!   P5  throughput never decreases when an unroll factor grows.
+//!   P6  the DSE result always satisfies both Eq. 6 constraints.
+//!   P7  the simulator never beats the analytic stall-free bound.
+
+use autows::ce::{divisors, next_unroll, CeConfig, CeModel, Fragmentation};
+use autows::device::Device;
+use autows::dse::{self, increment_offchip, Design, DseConfig};
+use autows::ir::{Layer, Quant};
+use autows::sim::{simulate, SimConfig};
+
+/// xorshift64* PRNG, deterministic per test.
+struct Rng(u64);
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[(self.next() % xs.len() as u64) as usize]
+    }
+}
+
+fn random_conv(rng: &mut Rng) -> Layer {
+    let quant = rng.pick(&[Quant::W4A4, Quant::W4A5, Quant::W8A8]);
+    let c_in = rng.range(1, 64) as u32;
+    let c_out = rng.range(1, 128) as u32;
+    let hw = rng.pick(&[8u32, 14, 16, 28, 32, 56]);
+    let k = rng.pick(&[1u32, 3, 5, 7]);
+    let stride = rng.pick(&[1u32, 2]);
+    let pad = k / 2;
+    Layer::conv("c", c_in, c_out, hw, hw, k, stride, pad, quant)
+}
+
+fn random_cfg(rng: &mut Rng, layer: &Layer) -> CeConfig {
+    let k2 = layer.kernel() * layer.kernel();
+    let kp = rng.pick(&divisors(k2));
+    let cp = rng.pick(&divisors(layer.c_per_group()));
+    let fp = rng.pick(&divisors(layer.c_out));
+    let mut cfg = CeConfig { kp, cp, fp, frag: Fragmentation::all_on_chip(0) };
+    let m_dep = CeModel::new(layer, cfg, 200.0).m_dep();
+    let off = rng.range(0, m_dep);
+    let n = rng.range(1, m_dep.min(64)) as u32;
+    cfg.frag =
+        if off == 0 { Fragmentation::all_on_chip(m_dep) } else { Fragmentation::new(m_dep, off, n) };
+    cfg
+}
+
+#[test]
+fn p1_eq1_bit_conservation() {
+    let mut rng = Rng::new(101);
+    for _ in 0..500 {
+        let l = random_conv(&mut rng);
+        let cfg = random_cfg(&mut rng, &l);
+        let m = CeModel::new(&l, cfg, 200.0);
+        let bits = m.m_dep() * m.m_wid_bits();
+        assert!(bits >= l.weight_bits(), "{l:?} {cfg:?}");
+        // exact whenever the unrolls divide their dimensions (they do, by
+        // construction from divisors())
+        assert_eq!(bits, l.weight_bits(), "{l:?} {cfg:?}");
+    }
+}
+
+#[test]
+fn p2_fragmentation_covers_memory() {
+    let mut rng = Rng::new(202);
+    for _ in 0..2000 {
+        let m_dep = rng.range(1, 1 << 20);
+        let off = rng.range(0, m_dep);
+        let n = rng.range(1, 256) as u32;
+        let f = Fragmentation::new(m_dep, off, n);
+        assert!(f.m_dep() >= m_dep, "covers all words");
+        assert!(f.m_off_dep() >= off.min(m_dep) || f.u_on == 0, "covers evicted words");
+        assert!(f.m_dep() - m_dep < 2 * n as u64, "padding bounded by fragments");
+        assert!((0.0..=1.0).contains(&f.off_chip_ratio()));
+    }
+}
+
+#[test]
+fn p3_beta_monotone_and_bounded() {
+    let mut rng = Rng::new(303);
+    for _ in 0..300 {
+        let l = random_conv(&mut rng);
+        let cfg0 = random_cfg(&mut rng, &l);
+        let m_dep = CeModel::new(&l, cfg0, 200.0).m_dep();
+        let full_rate = CeModel::new(&l, cfg0, 200.0).m_wid_bits() as f64 * 200e6;
+        let mut last = -1.0;
+        for step in 0..=4 {
+            let off = m_dep * step / 4;
+            let mut cfg = cfg0;
+            cfg.frag = if off == 0 {
+                Fragmentation::all_on_chip(m_dep)
+            } else {
+                Fragmentation::new(m_dep, off, (m_dep.min(4)).max(1) as u32)
+            };
+            let beta = CeModel::new(&l, cfg, 200.0).beta_bps();
+            assert!(beta >= last - 1e-6, "β must grow with eviction");
+            assert!(beta <= full_rate * 1.0001, "β bounded by word rate");
+            last = beta;
+        }
+    }
+}
+
+#[test]
+fn p4_burst_balance_after_random_evictions() {
+    let mut rng = Rng::new(404);
+    for trial in 0..15 {
+        let net = autows::models::by_name(
+            ["resnet18", "mobilenetv2", "toy"][trial % 3],
+            Quant::W4A5,
+        )
+        .unwrap();
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let mut d = Design::initialize(&net, &dev);
+        let weight_layers = net.weight_layers();
+        for _ in 0..rng.range(2, 12) {
+            let l = rng.pick(&weight_layers);
+            increment_offchip(&mut d, l, &cfg);
+        }
+        // every streaming layer hits the common repeat target unless its
+        // fragment count is physically capped at the memory depth (a layer
+        // cannot have more fragments than words)
+        let target = autows::dse::r_target(&d, 1);
+        for i in d.streaming_layers() {
+            let r = d.repeats(i, 1);
+            let m_dep = autows::ce::CeModel::new(
+                &d.network.layers[i],
+                d.cfgs[i],
+                d.clk_comp_mhz,
+            )
+            .m_dep();
+            let capped = d.cfgs[i].frag.n as u64 >= m_dep;
+            assert!(
+                r >= target || capped,
+                "layer {i}: r={r} < target {target} without depth cap"
+            );
+        }
+    }
+}
+
+#[test]
+fn p5_throughput_monotone_in_unroll() {
+    let mut rng = Rng::new(505);
+    for _ in 0..300 {
+        let l = random_conv(&mut rng);
+        let cfg = random_cfg(&mut rng, &l);
+        let base = CeModel::new(&l, cfg, 200.0).throughput();
+        let k2 = l.kernel() * l.kernel();
+        let grow: [Option<CeConfig>; 3] = [
+            next_unroll(k2, cfg.kp, 1).map(|v| CeConfig { kp: v, ..cfg }),
+            next_unroll(l.c_out, cfg.fp, 1).map(|v| CeConfig { fp: v, ..cfg }),
+            next_unroll(l.c_per_group(), cfg.cp, 1).map(|v| CeConfig { cp: v, ..cfg }),
+        ];
+        for c2 in grow.into_iter().flatten() {
+            let t = CeModel::new(&l, c2, 200.0).throughput();
+            assert!(t >= base * 0.999, "unroll slowed CE: {l:?} {cfg:?} -> {c2:?}");
+        }
+    }
+}
+
+#[test]
+fn p6_dse_respects_constraints_everywhere() {
+    for model in ["toy", "resnet18", "mobilenetv2"] {
+        for dev in Device::all() {
+            let net = autows::models::by_name(model, Quant::W4A5).unwrap();
+            if let Some(r) = dse::run(&net, &dev, &DseConfig::default()) {
+                assert!(r.area.fits(&dev), "{model} on {}", dev.name);
+                assert!(
+                    r.bandwidth_bps <= dev.bandwidth_bps * 1.0001,
+                    "{model} on {} uses {} of {}",
+                    dev.name,
+                    r.bandwidth_bps,
+                    dev.bandwidth_bps
+                );
+                assert!(r.throughput > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn p7_sim_never_beats_analytic_bound() {
+    for (model, devf) in [
+        ("toy", Device::zcu102 as fn() -> Device),
+        ("resnet18", Device::zcu102),
+        ("mobilenetv2", Device::zc706),
+        ("resnet18", Device::u50),
+    ] {
+        let net = autows::models::by_name(model, Quant::W4A5).unwrap();
+        let dev = devf();
+        let Some(r) = dse::run(&net, &dev, &DseConfig::default()) else { continue };
+        let sim = simulate(&r.design, &dev, &SimConfig::default());
+        assert!(
+            sim.latency_ms >= r.latency_ms * 0.999,
+            "{model}/{}: sim {} < analytic {}",
+            dev.name,
+            sim.latency_ms,
+            r.latency_ms
+        );
+    }
+}
+
+//   P8  compression: effective bits bounded, ratio monotone in sparsity.
+//   P9  tech assignment never over-commits any resource pool.
+//   P10 .net serializer/parser round-trip preserves network stats.
+//   P11 FIFO sizing: positive depths, rate-matched links need only slack.
+//   P12 config parser: arbitrary byte soup never panics, only errors.
+
+#[test]
+fn p8_compression_bounded_and_monotone() {
+    use autows::compress::{compress_network, CompressionSpec};
+    for model in ["toy", "resnet18", "mobilenetv2", "vgg16"] {
+        for q in [Quant::W4A4, Quant::W8A8] {
+            let net = autows::models::by_name(model, q).unwrap();
+            let mut last_ratio = f64::INFINITY;
+            for step in 0..8 {
+                let s = step as f64 / 8.0;
+                let (cnet, rep) = compress_network(&net, &CompressionSpec::pruned(s));
+                assert!(rep.ratio() <= last_ratio + 1e-9, "{model}-{q} s={s}");
+                last_ratio = rep.ratio();
+                for (l, cl) in net.layers.iter().zip(&cnet.layers) {
+                    if l.has_weights() {
+                        assert!(cl.quant.w_bits >= 1 && cl.quant.w_bits <= l.quant.w_bits);
+                    } else {
+                        assert_eq!(cl.quant.w_bits, l.quant.w_bits);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn p9_tech_plan_never_overcommits() {
+    use autows::ce::{assign_memory_tech, TechOptions};
+    for model in ["toy", "resnet18", "resnet50", "mobilenetv2"] {
+        for dev in Device::all() {
+            let net = autows::models::by_name(model, Quant::W8A8).unwrap();
+            let Some(r) = dse::run(&net, &dev, &DseConfig::default()) else { continue };
+            let plan = assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev));
+            assert!(plan.uram <= dev.uram, "{model}/{}", dev.name);
+            assert!(plan.bram <= plan.baseline_bram, "{model}/{}", dev.name);
+            assert!(
+                r.design.total_area().lut + plan.extra_luts <= dev.lut,
+                "{model}/{}: LUT overflow",
+                dev.name
+            );
+            // plan covers exactly the weight layers with a static region
+            for c in &plan.choices {
+                assert!(r.design.network.layers[c.layer].has_weights());
+            }
+        }
+    }
+}
+
+#[test]
+fn p10_textfmt_roundtrip_random_chains() {
+    use autows::ir::{parse_network, serialize_network, Network};
+    let mut rng = Rng::new(606);
+    for trial in 0..40 {
+        // random chain: convs/pools/relu/depthwise, valid by construction
+        let mut net = Network::new(format!("rand{trial}"), (3, 32, 32), Quant::W8A8);
+        let (mut c, mut hw) = (3u32, 32u32);
+        let n_layers = rng.range(1, 8);
+        for i in 0..n_layers {
+            match rng.range(0, 3) {
+                0 => {
+                    let out = rng.pick(&[4u32, 8, 16, 24]);
+                    let k = rng.pick(&[1u32, 3]);
+                    net.push(Layer::conv(
+                        format!("c{i}"),
+                        c,
+                        out,
+                        hw,
+                        hw,
+                        k,
+                        1,
+                        k / 2,
+                        Quant::W8A8,
+                    ));
+                    c = out;
+                }
+                1 if hw >= 4 => {
+                    net.push(Layer {
+                        name: format!("p{i}"),
+                        op: autows::ir::OpKind::Pool {
+                            kernel: 2,
+                            stride: 2,
+                            pad: 0,
+                            kind: autows::ir::PoolKind::Max,
+                        },
+                        c_in: c,
+                        c_out: c,
+                        h_in: hw,
+                        w_in: hw,
+                        quant: Quant::W8A8,
+                        skip_from: None,
+                    });
+                    hw /= 2;
+                }
+                _ => {
+                    net.push(Layer::depthwise(format!("d{i}"), c, hw, hw, 3, 1, 1, Quant::W8A8));
+                }
+            }
+        }
+        let text = serialize_network(&net);
+        let back = parse_network(&text, Quant::W8A8)
+            .unwrap_or_else(|e| panic!("trial {trial}: {e}\n{text}"));
+        assert_eq!(net.stats(), back.stats(), "trial {trial}\n{text}");
+    }
+}
+
+#[test]
+fn p11_fifo_sizing_sane_everywhere() {
+    use autows::sim::fifo_depths;
+    for model in ["toy", "resnet18", "mobilenetv2"] {
+        for dev in [Device::zcu102(), Device::u250()] {
+            let net = autows::models::by_name(model, Quant::W8A8).unwrap();
+            let Some(r) = dse::run(&net, &dev, &DseConfig::default()) else { continue };
+            for s in fifo_depths(&r.design) {
+                assert!(s.required_depth >= 8, "{model}/{}: {s:?}", dev.name);
+                assert!(s.fill_rate.is_finite() && s.drain_rate.is_finite());
+                if s.drain_rate >= s.fill_rate {
+                    assert_eq!(s.required_depth, 8, "{model}/{}: {s:?}", dev.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn p12_config_parser_never_panics() {
+    use autows::config::RunSpec;
+    let mut rng = Rng::new(707);
+    let tokens = [
+        "[model]", "[dse]", "[junk]", "name", "=", "\"toy\"", "phi", "0", "1",
+        "2.5", "true", "[", "]", "#x", "\"unterminated", "mu", "\n", "quant",
+    ];
+    for _ in 0..300 {
+        let n = rng.range(1, 20);
+        let mut text = String::new();
+        for _ in 0..n {
+            text.push_str(tokens[(rng.next() % tokens.len() as u64) as usize]);
+            text.push(if rng.next() % 3 == 0 { '\n' } else { ' ' });
+        }
+        // must never panic — Ok or Err are both acceptable
+        let _ = RunSpec::from_str(&text);
+    }
+}

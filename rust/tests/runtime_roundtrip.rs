@@ -1,0 +1,128 @@
+//! Integration: python-AOT HLO-text artifacts -> PJRT load -> execute, with
+//! numerics checked against values computed independently in Rust.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use autows::runtime::{Runtime, Tensor};
+
+fn artifact(name: &str) -> Option<String> {
+    let path = format!("{}/artifacts/{}", env!("CARGO_MANIFEST_DIR"), name);
+    if std::path::Path::new(&path).exists() {
+        Some(path)
+    } else {
+        eprintln!("SKIP: {path} missing — run `make artifacts`");
+        None
+    }
+}
+
+/// Tiny deterministic PRNG (xorshift*) so the test needs no rand crate.
+struct Rng(u64);
+impl Rng {
+    fn next_f32(&mut self) -> f32 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        ((self.0 >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+    }
+}
+
+#[test]
+fn stream_matmul_artifact_matches_rust_reference() {
+    let Some(path) = artifact("stream_matmul.hlo.txt") else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let model = rt.load_hlo_text(&path).expect("load artifact");
+
+    // deterministic inputs
+    let mut rng = Rng(0x12345678);
+    let x: Vec<f32> = (0..8 * 64).map(|_| (rng.next_f32() * 4.0).round()).collect();
+    let w: Vec<f32> = (0..64 * 32).map(|_| (rng.next_f32() * 4.0).round()).collect();
+
+    let out = model
+        .run(&[
+            Tensor::new(x.clone(), vec![8, 64]).unwrap(),
+            Tensor::new(w.clone(), vec![64, 32]).unwrap(),
+        ])
+        .expect("execute");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, vec![8, 32]);
+
+    // rust-side reference matmul — integer values, must be exact
+    for i in 0..8 {
+        for j in 0..32 {
+            let want: f32 = (0..64).map(|l| x[i * 64 + l] * w[l * 32 + j]).sum();
+            let got = out[0].data[i * 32 + j];
+            assert_eq!(got, want, "mismatch at ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn toy_cnn_artifacts_load_and_execute() {
+    let Some(p1) = artifact("toy_cnn_b1.hlo.txt") else { return };
+    let Some(p8) = artifact("toy_cnn_b8.hlo.txt") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let m1 = rt.load_hlo_text(&p1).unwrap();
+    let m8 = rt.load_hlo_text(&p8).unwrap();
+
+    let mut rng = Rng(42);
+    let img: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32()).collect();
+
+    let o1 = m1.run(&[Tensor::new(img.clone(), vec![1, 3, 32, 32]).unwrap()]).unwrap();
+    assert_eq!(o1[0].dims, vec![1, 10]);
+    assert!(o1[0].data.iter().all(|v| v.is_finite()));
+
+    // batch-8 artifact with the same image in slot 0 must agree on slot 0
+    let mut batch = img.clone();
+    batch.resize(8 * 3 * 32 * 32, 0.0);
+    let o8 = m8.run(&[Tensor::new(batch, vec![8, 3, 32, 32]).unwrap()]).unwrap();
+    assert_eq!(o8[0].dims, vec![8, 10]);
+    for j in 0..10 {
+        let d = (o8[0].data[j] - o1[0].data[j]).abs();
+        assert!(d < 1e-4, "slot-0 logit {j}: b8 {} vs b1 {}", o8[0].data[j], o1[0].data[j]);
+    }
+}
+
+#[test]
+fn toy_cnn_is_deterministic_across_runs() {
+    let Some(p1) = artifact("toy_cnn_b1.hlo.txt") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let m = rt.load_hlo_text(&p1).unwrap();
+    let img: Vec<f32> = (0..3 * 32 * 32).map(|i| (i % 17) as f32 / 17.0).collect();
+    let t = Tensor::new(img, vec![1, 3, 32, 32]).unwrap();
+    let a = m.run(std::slice::from_ref(&t)).unwrap();
+    let b = m.run(std::slice::from_ref(&t)).unwrap();
+    assert_eq!(a[0].data, b[0].data);
+}
+
+#[test]
+fn mobile_block_artifact_loads_and_preserves_residual() {
+    let Some(p) = artifact("mobile_block_b4.hlo.txt") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let m = rt.load_hlo_text(&p).unwrap();
+
+    let mut rng = Rng(0xBEEF);
+    let x: Vec<f32> = (0..4 * 16 * 14 * 14).map(|_| rng.next_f32()).collect();
+    let out = m.run(&[Tensor::new(x.clone(), vec![4, 16, 14, 14]).unwrap()]).unwrap();
+    assert_eq!(out[0].dims, vec![4, 16, 14, 14]);
+    assert!(out[0].data.iter().all(|v| v.is_finite()));
+
+    // The block is quantized-input + residual branch: its output must be
+    // correlated with (close in scale to) the input, not a runaway value.
+    let in_rms = (x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32).sqrt();
+    let out_rms =
+        (out[0].data.iter().map(|v| v * v).sum::<f32>() / out[0].data.len() as f32).sqrt();
+    assert!(
+        out_rms > 0.1 * in_rms && out_rms < 10.0 * in_rms,
+        "residual block output scale off: in {in_rms} out {out_rms}"
+    );
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let rt = Runtime::cpu().unwrap();
+    let Err(err) = rt.load_hlo_text("/nonexistent/foo.hlo.txt") else {
+        panic!("loading a missing artifact must fail");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("artifacts"), "helpful message expected, got: {msg}");
+}
