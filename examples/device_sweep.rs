@@ -1,16 +1,30 @@
 //! Sweep every model over every device (the full Table II grid plus the
 //! cells the paper leaves out) — useful for scoping a deployment.
 //!
+//! The grid cells are independent, so they are fanned across cores with
+//! `autows::dse::parallel_cases`; rows print in the same order as the
+//! sequential sweep.
+//!
 //! ```sh
 //! cargo run --release --example device_sweep [w4a4|w4a5|w8a8]
 //! ```
 
 use autows::baseline::{self, sequential_latency_ms};
 use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::{self, parallel_cases, DseConfig};
 use autows::ir::Quant;
 use autows::models;
 use autows::sim::{simulate, SimConfig};
+
+struct Row {
+    model: &'static str,
+    device: String,
+    seq_ms: f64,
+    vanilla_ms: Option<f64>,
+    autows_ms: Option<f64>,
+    offchip_pct: f64,
+    dma_pct: f64,
+}
 
 fn main() {
     let quant = match std::env::args().nth(1).as_deref() {
@@ -23,42 +37,63 @@ fn main() {
         "{:<13}{:<11}{:>10}{:>10}{:>10}{:>9}{:>8}",
         "network", "device", "seq ms", "van ms", "AutoWS", "off-ch%", "DMA%"
     );
-    for model in ["mobilenetv2", "resnet18", "resnet50", "yolov5n"] {
+
+    let models_list = ["mobilenetv2", "resnet18", "resnet50", "yolov5n"];
+    let cases: Vec<(&'static str, Device)> = models_list
+        .iter()
+        .flat_map(|&m| Device::all().into_iter().map(move |d| (m, d)))
+        .collect();
+
+    let rows: Vec<Row> = parallel_cases(&cases, |_, &(model, ref dev)| {
         let net = models::by_name(model, quant).unwrap();
-        for dev in Device::all() {
-            let seq = sequential_latency_ms(&net, &dev);
-            let van = baseline::vanilla(&net, &dev)
-                .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
-            let (autows, off, dma) = match dse::run(&net, &dev, &DseConfig::default()) {
-                None => (None, 0.0, 0.0),
-                Some(r) => {
-                    let sim = simulate(&r.design, &dev, &SimConfig::default());
-                    let total: u64 = net.layers.iter().map(|l| l.weight_bits()).sum();
-                    let off: f64 = r
-                        .design
-                        .cfgs
-                        .iter()
-                        .zip(&net.layers)
-                        .map(|(c, l)| c.frag.off_chip_ratio() * l.weight_bits() as f64)
-                        .sum::<f64>()
-                        / total as f64;
-                    let sched =
-                        autows::schedule::BurstSchedule::from_design(&r.design, &dev, 1);
-                    (Some(sim.latency_ms), off * 100.0, sched.dma_utilization() * 100.0)
-                }
-            };
-            let fmt = |v: Option<f64>| v.map_or("X".into(), |x| format!("{x:.1}"));
-            println!(
-                "{:<13}{:<11}{:>10.1}{:>10}{:>10}{:>8.1}%{:>7.0}%",
-                model,
-                dev.name,
-                seq,
-                fmt(van),
-                fmt(autows),
-                off,
-                dma
-            );
+        let seq_ms = sequential_latency_ms(&net, dev);
+        let vanilla_ms = baseline::vanilla(&net, dev)
+            .map(|r| simulate(&r.design, dev, &SimConfig::default()).latency_ms);
+        let (autows_ms, offchip_pct, dma_pct) = match dse::run(&net, dev, &DseConfig::default()) {
+            None => (None, 0.0, 0.0),
+            Some(r) => {
+                let sim = simulate(&r.design, dev, &SimConfig::default());
+                let total: u64 = net.layers.iter().map(|l| l.weight_bits()).sum();
+                let off: f64 = r
+                    .design
+                    .cfgs
+                    .iter()
+                    .zip(&net.layers)
+                    .map(|(c, l)| c.frag.off_chip_ratio() * l.weight_bits() as f64)
+                    .sum::<f64>()
+                    / total as f64;
+                let sched = autows::schedule::BurstSchedule::from_design(&r.design, dev, 1);
+                (Some(sim.latency_ms), off * 100.0, sched.dma_utilization() * 100.0)
+            }
+        };
+        Row {
+            model,
+            device: dev.name.to_string(),
+            seq_ms,
+            vanilla_ms,
+            autows_ms,
+            offchip_pct,
+            dma_pct,
         }
-        println!();
+    });
+
+    let fmt = |v: Option<f64>| v.map_or("X".into(), |x| format!("{x:.1}"));
+    let mut last_model = "";
+    for row in &rows {
+        if !last_model.is_empty() && row.model != last_model {
+            println!();
+        }
+        last_model = row.model;
+        println!(
+            "{:<13}{:<11}{:>10.1}{:>10}{:>10}{:>8.1}%{:>7.0}%",
+            row.model,
+            row.device,
+            row.seq_ms,
+            fmt(row.vanilla_ms),
+            fmt(row.autows_ms),
+            row.offchip_pct,
+            row.dma_pct
+        );
     }
+    println!();
 }

@@ -1,5 +1,16 @@
 //! Performance benchmark of the DSE itself (the §Perf L3 target: a full
 //! ResNet50/U250 exploration in under one second).
+//!
+//! Modes:
+//!
+//! ```text
+//! dse_perf                         time the incremental engine per case
+//! dse_perf --compare               also time the pre-refactor reference
+//!                                  engine ("before") and check that both
+//!                                  return identical design metrics
+//! dse_perf --warm                  additionally time the warm-start mode
+//! dse_perf --json <path>           write the results as JSON (BENCH_dse.json)
+//! ```
 
 #[path = "harness.rs"]
 mod harness;
@@ -9,7 +20,81 @@ use autows::dse::{self, DseConfig};
 use autows::ir::Quant;
 use autows::models;
 
+struct CaseReport {
+    name: String,
+    after_median_s: f64,
+    before_median_s: Option<f64>,
+    warm_median_s: Option<f64>,
+    equal_metrics: Option<bool>,
+    throughput_fps: f64,
+    bandwidth_bps: f64,
+    bram_blocks: u32,
+    iterations: usize,
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(path: &str, reports: &[CaseReport], worst_after_s: f64) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"dse_perf\",\n");
+    out.push_str("  \"unit\": \"seconds\",\n");
+    out.push_str(&format!("  \"worst_after_median_s\": {},\n", json_f64(worst_after_s)));
+    out.push_str("  \"cases\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"name\": \"{}\",\n", r.name));
+        out.push_str(&format!("      \"after_median_s\": {},\n", json_f64(r.after_median_s)));
+        out.push_str(&format!(
+            "      \"before_median_s\": {},\n",
+            r.before_median_s.map_or("null".into(), json_f64)
+        ));
+        out.push_str(&format!(
+            "      \"speedup\": {},\n",
+            r.before_median_s
+                .map_or("null".into(), |b| json_f64(b / r.after_median_s.max(1e-12)))
+        ));
+        out.push_str(&format!(
+            "      \"warm_median_s\": {},\n",
+            r.warm_median_s.map_or("null".into(), json_f64)
+        ));
+        out.push_str(&format!(
+            "      \"equal_metrics\": {},\n",
+            r.equal_metrics.map_or("null".into(), |e| e.to_string())
+        ));
+        out.push_str(&format!("      \"throughput_fps\": {},\n", json_f64(r.throughput_fps)));
+        out.push_str(&format!("      \"bandwidth_bps\": {},\n", json_f64(r.bandwidth_bps)));
+        out.push_str(&format!("      \"bram_blocks\": {},\n", r.bram_blocks));
+        out.push_str(&format!("      \"iterations\": {}\n", r.iterations));
+        out.push_str(if i + 1 == reports.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(path, out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("cannot write {path}: {e}"),
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let compare = args.iter().any(|a| a == "--compare");
+    let warm = args.iter().any(|a| a == "--warm");
+    let json_path = match args.iter().position(|a| a == "--json") {
+        None => None,
+        Some(i) => match args.get(i + 1) {
+            Some(p) if !p.starts_with("--") => Some(p.clone()),
+            _ => {
+                eprintln!("error: --json requires an output path");
+                std::process::exit(2);
+            }
+        },
+    };
+
     println!("=== DSE performance (L3 hot path #1) ===\n");
     let cases = [
         ("toy/zcu102", models::toy_cnn(Quant::W8A8), Device::zcu102()),
@@ -20,16 +105,70 @@ fn main() {
         ("mobilenetv2/zc706", models::mobilenet_v2(Quant::W4A4), Device::zc706()),
         ("yolov5n/zcu102", models::yolov5n(Quant::W8A8), Device::zcu102()),
     ];
+    let cfg = DseConfig::default();
+
     let mut worst = std::time::Duration::ZERO;
+    let mut reports = Vec::new();
     for (name, net, dev) in cases {
         let (stats, r) = harness::bench(&format!("dse/{name}"), 10, || {
-            dse::run(&net, &dev, &DseConfig::default())
+            dse::run(&net, &dev, &cfg)
         });
         if let Some(r) = &r {
             println!("        -> θ={:.1} fps in {} iterations", r.throughput, r.iterations);
         }
         worst = worst.max(stats.median);
+
+        let mut report = CaseReport {
+            name: name.to_string(),
+            after_median_s: stats.median.as_secs_f64(),
+            before_median_s: None,
+            warm_median_s: None,
+            equal_metrics: None,
+            throughput_fps: r.as_ref().map_or(0.0, |r| r.throughput),
+            bandwidth_bps: r.as_ref().map_or(0.0, |r| r.bandwidth_bps),
+            bram_blocks: r.as_ref().map_or(0, |r| r.area.bram.total()),
+            iterations: r.as_ref().map_or(0, |r| r.iterations),
+        };
+
+        if compare {
+            let (ref_stats, ref_r) = harness::bench(&format!("dse-ref/{name}"), 10, || {
+                dse::reference::run(&net, &dev, &cfg)
+            });
+            report.before_median_s = Some(ref_stats.median.as_secs_f64());
+            let equal = match (&r, &ref_r) {
+                (Some(a), Some(b)) => {
+                    a.design.cfgs == b.design.cfgs
+                        && a.design.off_bits == b.design.off_bits
+                        && a.throughput == b.throughput
+                        && a.area == b.area
+                        && a.bandwidth_bps == b.bandwidth_bps
+                }
+                (None, None) => true,
+                _ => false,
+            };
+            report.equal_metrics = Some(equal);
+            let speedup = ref_stats.median.as_secs_f64() / stats.median.as_secs_f64().max(1e-12);
+            println!(
+                "        -> before {:?} / after {:?} = {:.1}x speedup, identical results: {}",
+                ref_stats.median, stats.median, speedup, equal
+            );
+            assert!(equal, "{name}: incremental and reference engines must agree");
+        }
+
+        if warm {
+            let warm_cfg = DseConfig::warm();
+            let (warm_stats, _) = harness::bench(&format!("dse-warm/{name}"), 10, || {
+                dse::run(&net, &dev, &warm_cfg)
+            });
+            report.warm_median_s = Some(warm_stats.median.as_secs_f64());
+        }
+        reports.push(report);
     }
+
     println!("\nworst-case median DSE time: {worst:?} (target: < 1 s)");
+    if let Some(path) = json_path {
+        let worst_s = worst.as_secs_f64();
+        write_json(&path, &reports, worst_s);
+    }
     println!("dse_perf bench OK");
 }

@@ -1,5 +1,7 @@
 //! Regenerates paper Fig. 6 (resnet18-ZCU102 memory/performance trade-off)
-//! and times the per-point DSE.
+//! and times the per-point DSE. The sweep itself fans its points across
+//! cores via `dse::parallel_cases` (inside `mem_sweep`), so the full-sweep
+//! timing reflects the multi-core driver.
 
 #[path = "harness.rs"]
 mod harness;

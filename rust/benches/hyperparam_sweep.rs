@@ -1,5 +1,7 @@
 //! Ablation: DSE hyperparameters φ (unroll step) and μ (eviction block
 //! depth) — the §IV-A exploration-time vs solution-quality trade-off.
+//! The grid is fanned across cores via `dse::parallel_cases` (inside
+//! `phi_mu_sweep`); each cell is an independent DSE run.
 
 #[path = "harness.rs"]
 mod harness;

@@ -49,6 +49,19 @@ impl std::ops::Add for BramBreakdown {
     }
 }
 
+/// Componentwise difference. Only valid when `o` is a component of `self`
+/// (e.g. removing one CE's contribution from a running total).
+impl std::ops::Sub for BramBreakdown {
+    type Output = BramBreakdown;
+    fn sub(self, o: BramBreakdown) -> BramBreakdown {
+        BramBreakdown {
+            wt_mem: self.wt_mem - o.wt_mem,
+            wt_buff: self.wt_buff - o.wt_buff,
+            act_fifo: self.act_fifo - o.act_fifo,
+        }
+    }
+}
+
 /// Area vector of one CE (or a sum over CEs).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Area {
@@ -66,6 +79,21 @@ impl std::ops::Add for Area {
             lut: self.lut + o.lut,
             ff: self.ff + o.ff,
             bram: self.bram + o.bram,
+        }
+    }
+}
+
+/// Componentwise difference. Only valid when `o` is a component of `self`
+/// (e.g. removing one CE's contribution from a running total) — used by the
+/// incremental aggregate maintenance in [`crate::dse::Design`].
+impl std::ops::Sub for Area {
+    type Output = Area;
+    fn sub(self, o: Area) -> Area {
+        Area {
+            dsp: self.dsp - o.dsp,
+            lut: self.lut - o.lut,
+            ff: self.ff - o.ff,
+            bram: self.bram - o.bram,
         }
     }
 }

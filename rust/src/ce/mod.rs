@@ -159,11 +159,30 @@ pub fn divisors(x: u32) -> Vec<u32> {
     d
 }
 
+/// Memoized [`divisors`] (§Perf): the DSE's proposal loops re-derive the
+/// legal unroll set of the same handful of dimension sizes thousands of
+/// times per run. The sets are tiny and the distinct sizes per process are
+/// bounded by the model zoo's layer shapes, so entries are leaked into
+/// `'static` slices once and shared lock-free afterwards.
+pub fn divisors_cached(x: u32) -> &'static [u32] {
+    use std::collections::HashMap;
+    use std::sync::{OnceLock, RwLock};
+    static CACHE: OnceLock<RwLock<HashMap<u32, &'static [u32]>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
+    if let Some(&hit) = cache.read().unwrap().get(&x) {
+        return hit;
+    }
+    let slice: &'static [u32] = Box::leak(divisors(x).into_boxed_slice());
+    let mut w = cache.write().unwrap();
+    // a racing thread may have inserted meanwhile; keep the first entry
+    *w.entry(x).or_insert(slice)
+}
+
 /// Smallest legal unroll value strictly greater than `current + step - 1`,
 /// i.e. advance `current` by at least `step` within the divisors of `x`
 /// (Algorithm 1 INCREMENT_UNROLL with hyperparameter φ = `step`).
 pub fn next_unroll(x: u32, current: u32, step: u32) -> Option<u32> {
-    divisors(x).into_iter().find(|&d| d >= current + step)
+    divisors_cached(x).iter().copied().find(|&d| d >= current + step)
 }
 
 #[cfg(test)]
@@ -227,6 +246,15 @@ mod tests {
         let m = CeModel::new(&l, cfg, 200.0);
         assert_eq!(m.repeats(1), 28 * 28 * 4);
         assert_eq!(m.repeats(8), 8 * 28 * 28 * 4);
+    }
+
+    #[test]
+    fn divisors_cache_matches_fresh_computation() {
+        for x in [1u32, 2, 9, 10, 64, 128, 1000, 2048] {
+            assert_eq!(divisors_cached(x), divisors(x).as_slice());
+            // second lookup hits the cache and returns the same slice
+            assert_eq!(divisors_cached(x), divisors(x).as_slice());
+        }
     }
 
     #[test]

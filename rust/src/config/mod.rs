@@ -164,6 +164,7 @@ impl RunSpec {
             batch: doc.int_or("dse", "batch", 1).max(1) as u64,
             allow_streaming: !doc.bool_or("dse", "vanilla", false),
             bw_margin,
+            warm_start: doc.bool_or("dse", "warm_start", false),
         };
 
         // [sim]

@@ -1,7 +1,7 @@
 //! Greedy compute allocation — Algorithm 1 procedures INCREMENT_UNROLL and
 //! ALLOCATE_COMPUTE.
 
-use super::{allocate_memory, Design, DseConfig};
+use super::{allocate_memory, allocate_memory_warm, Design, DseConfig};
 use crate::ce::next_unroll;
 use crate::device::Device;
 use crate::ir::OpKind;
@@ -11,29 +11,46 @@ use crate::ir::OpKind;
 /// (rounded up to the next divisor). Returns `false` when the layer is fully
 /// unrolled (its CE cannot be made faster).
 pub fn increment_unroll(design: &mut Design, l: usize, phi: u32) -> bool {
-    let layer = design.network.layers[l].clone();
-    let k2 = layer.kernel() * layer.kernel();
-    let cfg = &mut design.cfgs[l];
-
     // (dimension size, current value) in Algorithm 1's priority order.
-    let dims: Vec<(u32, u32, u8)> = match layer.op {
-        OpKind::Conv { .. } => vec![
-            (k2, cfg.kp, 0),
-            (layer.c_out, cfg.fp, 1),
-            (layer.c_per_group(), cfg.cp, 2),
-        ],
-        OpKind::Fc => vec![(layer.c_out, cfg.fp, 1), (layer.c_in, cfg.cp, 2)],
-        OpKind::Pool { .. } => vec![(k2, cfg.kp, 0), (layer.c_in, cfg.cp, 2)],
-        _ => vec![(layer.c_in, cfg.cp, 2)],
+    let mut dims = [(0u32, 0u32, 0u8); 3];
+    let ndims = {
+        let layer = &design.network.layers[l];
+        let cfg = &design.cfgs[l];
+        let k2 = layer.kernel() * layer.kernel();
+        match layer.op {
+            OpKind::Conv { .. } => {
+                dims = [
+                    (k2, cfg.kp, 0),
+                    (layer.c_out, cfg.fp, 1),
+                    (layer.c_per_group(), cfg.cp, 2),
+                ];
+                3
+            }
+            OpKind::Fc => {
+                dims[0] = (layer.c_out, cfg.fp, 1);
+                dims[1] = (layer.c_in, cfg.cp, 2);
+                2
+            }
+            OpKind::Pool { .. } => {
+                dims[0] = (k2, cfg.kp, 0);
+                dims[1] = (layer.c_in, cfg.cp, 2);
+                2
+            }
+            _ => {
+                dims[0] = (layer.c_in, cfg.cp, 2);
+                1
+            }
+        }
     };
 
-    for (size, current, which) in dims {
+    for &(size, current, which) in &dims[..ndims] {
         if current < size {
             if let Some(next) = next_unroll(size, current, phi) {
+                design.record_layer(l);
                 match which {
-                    0 => cfg.kp = next,
-                    1 => cfg.fp = next,
-                    _ => cfg.cp = next,
+                    0 => design.cfgs[l].kp = next,
+                    1 => design.cfgs[l].fp = next,
+                    _ => design.cfgs[l].cp = next,
                 }
                 // geometry changed: re-derive the fragmentation from the
                 // invariant evicted-bits, keeping the current burst count.
@@ -50,22 +67,34 @@ pub fn increment_unroll(design: &mut Design, l: usize, phi: u32) -> bool {
 /// allocation after each step; stop when the area budget, the bandwidth
 /// budget, or full unrolling of the bottleneck is reached. Returns the
 /// number of accepted increments.
+///
+/// §Perf: each proposal used to deep-clone the whole `Design`; it now runs
+/// as an undo-log trial ([`Design::begin_trial`]) that snapshots only the
+/// layers the proposal touches and rolls back bit-exactly on rejection.
+/// With [`DseConfig::warm_start`] the memory re-fit also keeps the previous
+/// eviction state instead of re-deriving it from scratch.
 pub fn allocate_compute(design: &mut Design, device: &Device, cfg: &DseConfig) -> usize {
     let mut accepted = 0;
     loop {
         let l = design.slowest();
-        let mut trial = design.clone();
-        let s1 = increment_unroll(&mut trial, l, cfg.phi);
-        if !s1 {
+        design.begin_trial();
+        if !increment_unroll(design, l, cfg.phi) {
+            design.rollback_trial();
             break; // bottleneck CE saturated: θ cannot improve further
         }
-        let s2 = allocate_memory(&mut trial, device, cfg);
-        if !s2 || !trial.total_area().fits(device)
-            || trial.total_bandwidth() > device.bandwidth_bps * cfg.bw_margin
+        let fitted = if cfg.warm_start {
+            allocate_memory_warm(design, device, cfg)
+        } else {
+            allocate_memory(design, device, cfg)
+        };
+        if !fitted
+            || !design.total_area().fits(device)
+            || design.total_bandwidth() > device.bandwidth_bps * cfg.bw_margin
         {
+            design.rollback_trial();
             break; // area or bandwidth limit reached
         }
-        *design = trial;
+        design.commit_trial();
         accepted += 1;
     }
     accepted
@@ -125,6 +154,8 @@ mod tests {
         assert!(iters > 0);
         assert!(d.min_throughput() > before * 10.0, "toy net on zcu102 should unroll a lot");
         assert!(d.total_area().fits(&dev));
+        assert!(!d.trial_open(), "trial must be closed after the loop");
+        d.assert_aggregates_consistent();
     }
 
     #[test]
@@ -137,5 +168,26 @@ mod tests {
         allocate_compute(&mut d, &dev, &cfg);
         assert!(d.total_area().fits(&dev));
         assert!(d.total_bandwidth() <= dev.bandwidth_bps * 1.0001);
+        d.assert_aggregates_consistent();
+    }
+
+    #[test]
+    fn warm_start_matches_cold_when_nothing_streams() {
+        // Toy CNN on U250 never needs eviction, so the warm memory path is
+        // step-for-step identical to the cold one.
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::u250();
+        let cfg_cold = DseConfig::default();
+        let cfg_warm = DseConfig { warm_start: true, ..Default::default() };
+        let mut cold = Design::initialize(&net, &dev);
+        let mut warm = Design::initialize(&net, &dev);
+        assert!(allocate_memory(&mut cold, &dev, &cfg_cold));
+        assert!(allocate_memory_warm(&mut warm, &dev, &cfg_warm));
+        let ic = allocate_compute(&mut cold, &dev, &cfg_cold);
+        let iw = allocate_compute(&mut warm, &dev, &cfg_warm);
+        assert_eq!(ic, iw);
+        assert_eq!(cold.cfgs, warm.cfgs);
+        assert_eq!(cold.off_bits, warm.off_bits);
+        assert!(!cold.any_streaming());
     }
 }

@@ -1,18 +1,50 @@
 //! Mutable design state shared by the DSE phases: one [`CeConfig`] per
-//! layer, with cached per-layer model evaluations so the greedy loops stay
-//! cheap (the caches are refreshed only for mutated layers).
+//! layer, with cached per-layer model evaluations *and* running aggregates so
+//! the greedy loops stay cheap.
+//!
+//! §Perf: the DSE inner loop queries `total_area`/`mem_blocks`/
+//! `total_bandwidth`/`latency_ms` after every proposal. The seed recomputed
+//! each as an O(L) reduction; they are now O(1) reads of aggregates that
+//! [`Design::refresh`] maintains incrementally (replace layer `i`'s old
+//! contribution with its new one). Trials are likewise no longer
+//! clone-evaluate-swap: [`Design::begin_trial`] opens an undo log that
+//! snapshots each layer on first touch, and [`Design::rollback_trial`]
+//! restores the exact (bit-identical) pre-trial state.
 
 use crate::ce::{self, Area, CeConfig, Fragmentation};
 use crate::device::Device;
 use crate::ir::Network;
 
+/// Per-layer snapshot taken on first mutation inside a trial.
+#[derive(Debug, Clone)]
+struct LayerSnap {
+    cfg: CeConfig,
+    off_bits: u64,
+    cycles: u64,
+    fill: u64,
+    area: Area,
+    beta: f64,
+    wterm: f64,
+}
+
+/// Undo log of one open trial: global aggregate snapshot plus first-touch
+/// per-layer snapshots.
+#[derive(Debug, Clone)]
+struct TrialLog {
+    slowest_cache: usize,
+    area_total: Area,
+    fill_total: u64,
+    wsum: f64,
+    streaming_count: usize,
+    layers: Vec<(usize, LayerSnap)>,
+}
+
 /// A complete accelerator design: the network plus a CE configuration per
 /// layer, evaluated against the analytic models.
 ///
-/// The network is behind an `Arc`: the greedy DSE clones the design once
-/// per trial iteration, and deep-copying 50+ layers of `String`-named
-/// metadata dominated the clone cost (§Perf: 147 ms → 86 ms on
-/// resnet50-zcu102 from this + the borrow-based model evaluation).
+/// The network is behind an `Arc`: cloning a design (still used for "best so
+/// far" bookkeeping in the stochastic strategies) must not deep-copy 50+
+/// layers of `String`-named metadata (§Perf).
 #[derive(Debug, Clone)]
 pub struct Design {
     pub network: std::sync::Arc<Network>,
@@ -27,6 +59,12 @@ pub struct Design {
     fills: Vec<u64>,
     areas: Vec<Area>,
     betas: Vec<f64>,
+    /// Per-layer `cycles_l · β_l` — the numerator terms of the Eq. 6
+    /// bandwidth sum (see [`Design::total_weight_bandwidth`]).
+    wterms: Vec<f64>,
+    /// Per-layer streaming flag mirror of `cfgs[i].frag.is_streaming()`,
+    /// kept so `streaming_count` can be maintained in O(1).
+    streaming: Vec<bool>,
     /// Cached index of the slowest layer (§Perf: `slowest()` was O(L) and
     /// sat inside `slowdown()`, making every `total_bandwidth()` O(L²) —
     /// the DSE inner loop's dominant term on 50+-layer networks).
@@ -35,6 +73,23 @@ pub struct Design {
     /// repeat target (`r_target = batch · max_pixels`), hoisted out of the
     /// per-candidate burst-balance loops (§Perf).
     max_pixels: u64,
+    // --- running aggregates (O(1) queries; §Perf) ---
+    /// `Σ_l a_l` — total area over all CEs.
+    area_total: Area,
+    /// `Σ_l fill_l` — total pipeline-fill cycles.
+    fill_total: u64,
+    /// `Σ_l cycles_l · β_l`. Dividing by the bottleneck's cycle count gives
+    /// `Σ_l s_l β_l` exactly (the common `1/cycles_max` factor of every
+    /// slowdown is hoisted out of the sum).
+    wsum: f64,
+    /// Number of layers currently streaming weights from off-chip.
+    streaming_count: usize,
+    // --- trial/undo machinery ---
+    /// Open undo log, if a trial is in progress.
+    txn: Option<TrialLog>,
+    /// Persistent first-touch scratch (all `false` outside trials), kept on
+    /// the design so trials allocate nothing in steady state.
+    touched: Vec<bool>,
 }
 
 impl Design {
@@ -50,6 +105,8 @@ impl Design {
             fills: vec![0; n],
             areas: vec![Area::default(); n],
             betas: vec![0.0; n],
+            wterms: vec![0.0; n],
+            streaming: vec![false; n],
             slowest_cache: 0,
             max_pixels: network
                 .layers
@@ -57,6 +114,12 @@ impl Design {
                 .map(|l| l.h_out() as u64 * l.w_out() as u64)
                 .max()
                 .unwrap_or(1),
+            area_total: Area::default(),
+            fill_total: 0,
+            wsum: 0.0,
+            streaming_count: 0,
+            txn: None,
+            touched: vec![false; n],
         };
         for i in 0..n {
             d.refresh(i);
@@ -77,24 +140,151 @@ impl Design {
         self.cfgs.is_empty()
     }
 
-    /// Recompute the cached model outputs for layer `i`. Must be called
-    /// after any mutation of `cfgs[i]` or `off_bits[i]`.
+    // --- trial transactions -------------------------------------------------
+
+    /// Open an undo log: every layer mutation until [`Design::commit_trial`]
+    /// or [`Design::rollback_trial`] snapshots its pre-trial state on first
+    /// touch. Replaces the clone-evaluate-swap pattern of the greedy and
+    /// stochastic searches (§Perf: a full `Design` clone per proposal was
+    /// the second-largest cost of `allocate_compute` after the eviction
+    /// rescans). Trials do not nest.
+    pub fn begin_trial(&mut self) {
+        debug_assert!(self.txn.is_none(), "trials do not nest");
+        self.txn = Some(TrialLog {
+            slowest_cache: self.slowest_cache,
+            area_total: self.area_total,
+            fill_total: self.fill_total,
+            wsum: self.wsum,
+            streaming_count: self.streaming_count,
+            layers: Vec::new(),
+        });
+    }
+
+    /// Keep the trial's mutations and close the log.
+    pub fn commit_trial(&mut self) {
+        if let Some(txn) = self.txn.take() {
+            for (i, _) in &txn.layers {
+                self.touched[*i] = false;
+            }
+        }
+    }
+
+    /// Restore the exact pre-trial state (bit-identical: snapshots are
+    /// restored, not reverse-applied, so even the floating-point aggregates
+    /// come back unchanged) and close the log.
+    pub fn rollback_trial(&mut self) {
+        let Some(txn) = self.txn.take() else { return };
+        for (i, s) in txn.layers.into_iter().rev() {
+            self.touched[i] = false;
+            self.cfgs[i] = s.cfg;
+            self.off_bits[i] = s.off_bits;
+            self.cycles[i] = s.cycles;
+            self.fills[i] = s.fill;
+            self.areas[i] = s.area;
+            self.betas[i] = s.beta;
+            self.wterms[i] = s.wterm;
+            self.streaming[i] = s.cfg.frag.is_streaming();
+        }
+        self.slowest_cache = txn.slowest_cache;
+        self.area_total = txn.area_total;
+        self.fill_total = txn.fill_total;
+        self.wsum = txn.wsum;
+        self.streaming_count = txn.streaming_count;
+    }
+
+    /// Is a trial currently open?
+    pub fn trial_open(&self) -> bool {
+        self.txn.is_some()
+    }
+
+    /// Clone the current state as a standalone design, discarding any open
+    /// trial bookkeeping in the copy (the original's trial stays open). Used
+    /// to capture "best so far" mid-search.
+    pub fn snapshot(&self) -> Design {
+        let mut d = self.clone();
+        d.txn = None;
+        for t in &mut d.touched {
+            *t = false;
+        }
+        d
+    }
+
+    /// Record layer `i`'s pre-mutation state in the open trial log (no-op
+    /// outside a trial). Must be called *before* the first mutation of
+    /// `cfgs[i]` / `off_bits[i]` in a trial; [`Design::set_fragmentation`]
+    /// does so itself, direct field writers (unroll moves) call this first.
+    pub(crate) fn record_layer(&mut self, i: usize) {
+        let Some(txn) = self.txn.as_mut() else { return };
+        if self.touched[i] {
+            return;
+        }
+        self.touched[i] = true;
+        txn.layers.push((
+            i,
+            LayerSnap {
+                cfg: self.cfgs[i],
+                off_bits: self.off_bits[i],
+                cycles: self.cycles[i],
+                fill: self.fills[i],
+                area: self.areas[i],
+                beta: self.betas[i],
+                wterm: self.wterms[i],
+            },
+        ));
+    }
+
+    // --- per-layer refresh --------------------------------------------------
+
+    /// Recompute the cached model outputs for layer `i` and fold the change
+    /// into the running aggregates. Must be called after any mutation of
+    /// `cfgs[i]` or `off_bits[i]`.
     pub fn refresh(&mut self, i: usize) {
         let layer = &self.network.layers[i];
         let cfg = &self.cfgs[i];
-        let old = self.cycles[i];
-        self.cycles[i] = ce::eval_cycles(layer, cfg);
-        self.fills[i] = ce::fill_cycles(layer, cfg);
-        self.areas[i] = ce::eval_area(layer, cfg);
-        self.betas[i] = ce::eval_beta(layer, cfg, self.clk_comp_mhz);
+        let old_cycles = self.cycles[i];
+        let new_cycles = ce::eval_cycles(layer, cfg);
+        let new_fill = ce::fill_cycles(layer, cfg);
+        let new_area = ce::eval_area(layer, cfg);
+        let new_beta = ce::eval_beta(layer, cfg, self.clk_comp_mhz);
+        let new_wterm = new_cycles as f64 * new_beta;
+        // replace layer i's contribution in each aggregate; skip the float
+        // update entirely when the term is unchanged (the common case for
+        // unroll moves on non-streaming layers, where both terms are 0.0) so
+        // rounding residue only accumulates while eviction state changes
+        self.fill_total = self.fill_total - self.fills[i] + new_fill;
+        self.area_total = self.area_total - self.areas[i] + new_area;
+        if new_wterm.to_bits() != self.wterms[i].to_bits() {
+            self.wsum = self.wsum - self.wterms[i] + new_wterm;
+        }
+        let now_streaming = cfg.frag.is_streaming();
+        if self.streaming[i] != now_streaming {
+            self.streaming[i] = now_streaming;
+            if now_streaming {
+                self.streaming_count += 1;
+            } else {
+                self.streaming_count -= 1;
+            }
+        }
+        self.cycles[i] = new_cycles;
+        self.fills[i] = new_fill;
+        self.areas[i] = new_area;
+        self.betas[i] = new_beta;
+        self.wterms[i] = new_wterm;
+        // Pin the running float sum back to exact zero whenever the
+        // streaming set empties: every term is exactly 0.0 then, and this
+        // discards the ± rounding residue of long add/remove histories so
+        // `total_weight_bandwidth()` is exactly 0 for all-on-chip designs.
+        if self.streaming_count == 0 {
+            self.wsum = 0.0;
+        }
         // maintain the slowest-layer cache: O(1) unless the reigning
         // bottleneck itself just got faster, which forces a rescan
         if i == self.slowest_cache {
-            if self.cycles[i] < old {
+            if new_cycles < old_cycles {
                 self.slowest_cache =
                     (0..self.len()).max_by_key(|&j| self.cycles[j]).unwrap_or(0);
             }
-        } else if self.cycles[i] > self.cycles[self.slowest_cache] {
+        } else if new_cycles > self.cycles[self.slowest_cache] {
             self.slowest_cache = i;
         }
     }
@@ -102,6 +292,7 @@ impl Design {
     /// Re-derive layer `i`'s fragmentation from its evicted bits and a
     /// fragment count `n`, then refresh caches.
     pub fn set_fragmentation(&mut self, i: usize, n: u32) {
+        self.record_layer(i);
         let layer = &self.network.layers[i];
         let cfg = &self.cfgs[i];
         let m_dep = ce::eval_m_dep(layer, cfg);
@@ -114,6 +305,8 @@ impl Design {
         };
         self.refresh(i);
     }
+
+    // --- queries ------------------------------------------------------------
 
     /// Per-layer throughput θ_l in samples/s.
     pub fn throughput(&self, i: usize) -> f64 {
@@ -142,9 +335,11 @@ impl Design {
         self.slowdown(i) * self.betas[i]
     }
 
-    /// Total weight-streaming bandwidth `Σ_l s_l β_l`.
+    /// Total weight-streaming bandwidth `Σ_l s_l β_l`. O(1): the cached
+    /// `Σ_l cycles_l·β_l` divided by the bottleneck's cycle count (every
+    /// slowdown shares the same `1/cycles_max` factor).
     pub fn total_weight_bandwidth(&self) -> f64 {
-        (0..self.len()).map(|i| self.weight_bandwidth(i)).sum()
+        self.wsum / self.cycles[self.slowest_cache] as f64
     }
 
     /// Activation I/O bandwidth `β_io` at the current pipeline rate.
@@ -152,39 +347,52 @@ impl Design {
         self.network.beta_io(self.min_throughput())
     }
 
-    /// Constraint left-hand side of Eq. 6: `β_io + Σ s_l β_l`.
+    /// Constraint left-hand side of Eq. 6: `β_io + Σ s_l β_l`. O(1).
     pub fn total_bandwidth(&self) -> f64 {
         self.io_bandwidth() + self.total_weight_bandwidth()
     }
 
-    /// Total area over all CEs.
+    /// Total area over all CEs. O(1): running aggregate.
     pub fn total_area(&self) -> Area {
-        self.areas.iter().copied().sum()
+        self.area_total
     }
 
     /// Total BRAM blocks consumed by weight memories + buffers + FIFOs —
-    /// the quantity checked against the `A_mem` budget.
+    /// the quantity checked against the `A_mem` budget. O(1).
     pub fn mem_blocks(&self) -> u32 {
-        self.areas.iter().map(|a| a.bram.total()).sum()
+        self.area_total.bram.total()
     }
 
     /// Analytic single-batch latency in milliseconds: pipeline fill of every
-    /// stage plus `batch` drains of the bottleneck stage.
+    /// stage plus `batch` drains of the bottleneck stage. O(1).
     pub fn latency_ms(&self, batch: u64) -> f64 {
-        let fill: u64 = self.fills.iter().sum();
         let bottleneck = self.cycles[self.slowest()];
-        (fill + batch * bottleneck) as f64 / (self.clk_comp_mhz * 1e6) * 1e3
+        (self.fill_total + batch * bottleneck) as f64 / (self.clk_comp_mhz * 1e6) * 1e3
     }
 
-    /// Does any layer stream weights from off-chip?
+    /// Does any layer stream weights from off-chip? O(1).
     pub fn any_streaming(&self) -> bool {
-        self.cfgs.iter().any(|c| c.frag.is_streaming())
+        self.streaming_count > 0
+    }
+
+    /// Number of layers currently streaming. O(1).
+    pub fn streaming_count(&self) -> usize {
+        self.streaming_count
     }
 
     /// Indices of layers currently streaming (for burst balancing and the
     /// DMA schedule).
     pub fn streaming_layers(&self) -> Vec<usize> {
-        (0..self.len()).filter(|&i| self.cfgs[i].frag.is_streaming()).collect()
+        self.streaming_layer_iter().collect()
+    }
+
+    /// Allocation-free variant of [`Design::streaming_layers`] for hot
+    /// loops (§Perf: `rebalance_all` allocated a `Vec` per eviction).
+    pub fn streaming_layer_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.streaming
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &s)| if s { Some(i) } else { None })
     }
 
     /// Weight-reuse repetition count `r_l = b·ĥ·ŵ·n` (Eq. 3).
@@ -204,6 +412,35 @@ impl Design {
     pub fn cycles_of(&self, i: usize) -> u64 {
         self.cycles[i]
     }
+
+    /// Debug/test oracle: recompute every aggregate from scratch and check
+    /// it against the running caches. Integer aggregates must match exactly;
+    /// the floating-point bandwidth sum within accumulation tolerance.
+    pub fn assert_aggregates_consistent(&self) {
+        let area: Area = self.areas.iter().copied().sum();
+        assert_eq!(area, self.area_total, "area aggregate drifted");
+        let fill: u64 = self.fills.iter().sum();
+        assert_eq!(fill, self.fill_total, "fill aggregate drifted");
+        let streaming = self.cfgs.iter().filter(|c| c.frag.is_streaming()).count();
+        assert_eq!(streaming, self.streaming_count, "streaming count drifted");
+        let wsum: f64 = (0..self.len()).map(|i| self.cycles[i] as f64 * self.betas[i]).sum();
+        // The running sum accumulates one rounding step per replace; bound
+        // the residue relative to the largest term ever plausibly involved
+        // (the fresh sum is a lower bound on that scale within one eviction
+        // phase; resets pin the cache back to exact zero).
+        let tol = 1e-6 * wsum.abs().max(1.0);
+        assert!(
+            (wsum - self.wsum).abs() <= tol,
+            "bandwidth aggregate drifted: cached {} vs fresh {}",
+            self.wsum,
+            wsum
+        );
+        let slowest_cycles = self.cycles.iter().copied().max().unwrap_or(0);
+        assert_eq!(
+            self.cycles[self.slowest_cache], slowest_cycles,
+            "slowest-layer cache drifted"
+        );
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +459,7 @@ mod tests {
         assert!(!d.any_streaming());
         assert_eq!(d.total_weight_bandwidth(), 0.0);
         assert!(d.total_bandwidth() > 0.0, "io bandwidth is never zero");
+        d.assert_aggregates_consistent();
     }
 
     #[test]
@@ -251,6 +489,7 @@ mod tests {
         let bits_after = d.cfgs[2].frag.m_off_dep() as f64 * wid2 as f64;
         let rel = (bits_after - bits_before).abs() / bits_before;
         assert!(rel < 0.05, "evicted bits drifted {rel}");
+        d.assert_aggregates_consistent();
     }
 
     #[test]
@@ -261,5 +500,82 @@ mod tests {
         d.cfgs[s].cp = d.network.layers[s].c_per_group().min(4).max(1);
         d.set_fragmentation(s, 1);
         assert!(d.latency_ms(1) < before);
+    }
+
+    #[test]
+    fn aggregates_track_arbitrary_mutations() {
+        let mut d = design();
+        for i in 0..d.len() {
+            if d.network.layers[i].c_per_group() > 1 {
+                d.cfgs[i].cp = 2;
+            }
+            d.set_fragmentation(i, 1);
+            d.assert_aggregates_consistent();
+        }
+        // compare against a recomputed total
+        let fresh: Area = (0..d.len()).map(|i| d.area_of(i)).sum();
+        assert_eq!(fresh, d.total_area());
+    }
+
+    #[test]
+    fn rollback_restores_bit_identical_state() {
+        let mut d = design();
+        let wid = ce::CeModel::new(&d.network.layers[2], d.cfgs[2], d.clk_comp_mhz).m_wid_bits();
+        d.off_bits[2] = 64 * wid;
+        d.set_fragmentation(2, 2);
+        let area0 = d.total_area();
+        let bw0 = d.total_bandwidth();
+        let theta0 = d.min_throughput();
+        let cfgs0 = d.cfgs.clone();
+        let off0 = d.off_bits.clone();
+
+        d.begin_trial();
+        // mutate several layers through the sanctioned entry points
+        for i in 0..d.len() {
+            d.record_layer(i);
+            if d.network.layers[i].c_out > 1 {
+                d.cfgs[i].fp = d.network.layers[i].c_out.min(2);
+            }
+            d.set_fragmentation(i, 3);
+        }
+        assert!(d.trial_open());
+        d.rollback_trial();
+
+        assert_eq!(d.cfgs, cfgs0);
+        assert_eq!(d.off_bits, off0);
+        assert_eq!(d.total_area(), area0);
+        assert!(d.total_bandwidth() == bw0, "bandwidth must restore bit-exactly");
+        assert!(d.min_throughput() == theta0);
+        d.assert_aggregates_consistent();
+    }
+
+    #[test]
+    fn commit_keeps_trial_mutations() {
+        let mut d = design();
+        let before = d.min_throughput();
+        d.begin_trial();
+        let s = d.slowest();
+        d.record_layer(s);
+        d.cfgs[s].cp = d.network.layers[s].c_per_group().min(4).max(1);
+        d.set_fragmentation(s, 1);
+        d.commit_trial();
+        assert!(d.min_throughput() > before);
+        assert!(!d.trial_open());
+        d.assert_aggregates_consistent();
+    }
+
+    #[test]
+    fn snapshot_mid_trial_is_standalone() {
+        let mut d = design();
+        d.begin_trial();
+        let s = d.slowest();
+        d.record_layer(s);
+        d.cfgs[s].cp = d.network.layers[s].c_per_group().min(4).max(1);
+        d.set_fragmentation(s, 1);
+        let snap = d.snapshot();
+        d.rollback_trial();
+        assert!(!snap.trial_open());
+        assert!(snap.min_throughput() > d.min_throughput());
+        snap.assert_aggregates_consistent();
     }
 }

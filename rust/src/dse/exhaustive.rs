@@ -34,6 +34,7 @@ fn apply_level(design: &mut Design, l: usize, lvl: u32, levels: u32, cfg: &DseCo
     let m_dep = model.m_dep();
     let m_wid = model.m_wid_bits();
     let off_words = m_dep * lvl as u64 / levels as u64;
+    design.record_layer(l);
     design.off_bits[l] = off_words * m_wid;
     let n = if off_words == 0 { 1 } else { write_burst_balance(design, l, cfg.batch) };
     design.set_fragmentation(l, n);

@@ -1,8 +1,19 @@
 //! Greedy memory allocation — Algorithm 1 procedures ALLOCATE_MEMORY,
 //! DELTA_BANDWIDTH, WRITE_BURST_BALANCE, INCREMENT_OFFCHIP.
+//!
+//! §Perf: the eviction loop is incremental. Selection runs on a lazily
+//! invalidated min-ΔB binary heap instead of an O(L) rescan per eviction —
+//! valid because a layer's ΔB key depends only on its *own* eviction state
+//! (cycles are unaffected by eviction and the Eq. 10 repeat target is a
+//! network constant), so keys go stale only for the layer just evicted.
+//! Generation stamps drop stale entries on pop; the heap pops the same
+//! (min ΔB, min index) candidate the linear scan would have picked.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 use super::{Design, DseConfig};
-use crate::ce::{eval_m_dep, eval_m_wid_bits};
+use crate::ce::{self, eval_m_dep, eval_m_wid_bits, Fragmentation};
 use crate::device::Device;
 
 /// The common repeat target `r` (Eq. 10): the maximum `b·ĥ·ŵ` over *all*
@@ -10,14 +21,12 @@ use crate::device::Device;
 /// layer's baseline `n = 1`). Using the global maximum keeps the target
 /// stable as the streaming set grows, and gives the finest-output-map layer
 /// `n = 1` while coarser layers get proportionally more fragments.
+///
+/// §Perf: `max_l ĥ_l·ŵ_l` is a network constant cached by
+/// [`Design::max_pixels`] — this used to re-reduce over all layers on every
+/// burst-balance call, making each eviction's candidate scan O(L²).
 pub fn r_target(design: &Design, batch: u64) -> u64 {
-    design
-        .network
-        .layers
-        .iter()
-        .map(|l| batch * l.h_out() as u64 * l.w_out() as u64)
-        .max()
-        .unwrap_or(1)
+    batch * design.max_pixels()
 }
 
 /// WRITE_BURST_BALANCE (Algorithm 1, Eq. 10): pick the fragment count `n_l`
@@ -46,21 +55,47 @@ pub fn increment_offchip(design: &mut Design, l: usize, cfg: &DseConfig) {
 /// ALLOCATE_MEMORY evicts geometrically larger chunks while far over
 /// budget, then falls back to `μ`-granularity for the tail).
 pub fn increment_offchip_by(design: &mut Design, l: usize, cfg: &DseConfig, words: u64) {
+    increment_offchip_tracked(design, l, cfg, words, None);
+}
+
+/// [`increment_offchip_by`] that additionally reports which *other* layers
+/// had their burst count rebalanced — the eviction heap must re-key those.
+fn increment_offchip_tracked(
+    design: &mut Design,
+    l: usize,
+    cfg: &DseConfig,
+    words: u64,
+    rebalanced: Option<&mut Vec<usize>>,
+) {
+    design.record_layer(l);
     let m_wid = eval_m_wid_bits(&design.network.layers[l], &design.cfgs[l]);
     let cur = design.cfgs[l].frag.m_off_dep();
     design.off_bits[l] = (cur + words) * m_wid;
     let n = write_burst_balance(design, l, cfg.batch);
     design.set_fragmentation(l, n);
-    rebalance_all(design, cfg);
+    rebalance_tracked(design, cfg, rebalanced);
 }
 
 /// Enforce Eq. 10 across every streaming layer by re-deriving each fragment
 /// count from the common repeat target.
 pub fn rebalance_all(design: &mut Design, cfg: &DseConfig) {
-    for i in design.streaming_layers() {
+    rebalance_tracked(design, cfg, None);
+}
+
+/// [`rebalance_all`] without the per-eviction `Vec` allocation (§Perf): an
+/// index scan over the streaming flags, optionally collecting the layers
+/// whose fragment count actually changed.
+fn rebalance_tracked(design: &mut Design, cfg: &DseConfig, mut changed: Option<&mut Vec<usize>>) {
+    for i in 0..design.len() {
+        if !design.cfgs[i].frag.is_streaming() {
+            continue;
+        }
         let n = write_burst_balance(design, i, cfg.batch);
         if n != design.cfgs[i].frag.n {
             design.set_fragmentation(i, n);
+            if let Some(out) = changed.as_deref_mut() {
+                out.push(i);
+            }
         }
     }
 }
@@ -95,7 +130,120 @@ pub fn delta_bandwidth_by(design: &Design, l: usize, cfg: &DseConfig, words: u64
     let u_off = requested.div_ceil(n).min(u);
     let new_off = (u_off * n).min(m_dep);
     let d_ratio = (new_off as f64 - old_off as f64) / m_dep as f64;
-    design.slowdown(l) * m_wid as f64 * design.clk_comp_mhz * 1e6 * d_ratio
+    bandwidth_delta(design.slowdown(l), m_wid, design.clk_comp_mhz, d_ratio)
+}
+
+/// The Eq. 5 closed form shared by eviction (forward ΔB) and the warm-start
+/// un-evict ranking (reverse ΔB): `s_l · M_wid · clk_comp · Δratio`.
+fn bandwidth_delta(slowdown: f64, m_wid_bits: u64, clk_comp_mhz: f64, d_ratio: f64) -> f64 {
+    slowdown * m_wid_bits as f64 * clk_comp_mhz * 1e6 * d_ratio
+}
+
+/// Min-heap entry for the greedy eviction candidate set: orders by
+/// (ΔB ascending, layer index ascending) so the pop order is identical to
+/// the linear scan's first-minimal-index selection. `gen` invalidates
+/// entries lazily: when a layer is evicted (or rebalanced) its generation
+/// advances and a fresh entry is pushed; stale entries are dropped on pop.
+struct MinDeltaB {
+    key: f64,
+    layer: usize,
+    gen: u32,
+}
+
+impl PartialEq for MinDeltaB {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+impl Eq for MinDeltaB {}
+impl PartialOrd for MinDeltaB {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for MinDeltaB {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want min ΔB (then min index)
+        o.key.total_cmp(&self.key).then_with(|| o.layer.cmp(&self.layer))
+    }
+}
+
+/// Is layer `i` an eviction candidate (weight layer with words still
+/// on-chip)?
+fn evictable(design: &Design, i: usize) -> bool {
+    design.network.layers[i].has_weights() && design.cfgs[i].frag.m_on_dep() > 0
+}
+
+/// The eviction core shared by the cold and warm allocation paths: evict
+/// min-ΔB blocks until on-chip memory fits the budget. Returns `false` when
+/// the bandwidth constraint would be violated or everything evictable is
+/// already off-chip.
+fn evict_until_fit(design: &mut Design, device: &Device, cfg: &DseConfig) -> bool {
+    let budget = device.mem_bram_equiv();
+    if design.mem_blocks() <= budget {
+        return true;
+    }
+    if !cfg.allow_streaming {
+        return false; // vanilla: weights must fit on-chip
+    }
+
+    // Lazily invalidated min-ΔB heap over the candidate layers (§Perf:
+    // replaces the per-eviction O(L) rescan — and the O(L) `r_target`
+    // reduction it ran per candidate).
+    let mut gen = vec![0u32; design.len()];
+    let mut heap: BinaryHeap<MinDeltaB> = BinaryHeap::with_capacity(design.len());
+    for i in 0..design.len() {
+        if evictable(design, i) {
+            heap.push(MinDeltaB { key: delta_bandwidth(design, i, cfg), layer: i, gen: 0 });
+        }
+    }
+
+    let mut rebalanced: Vec<usize> = Vec::new();
+    while design.mem_blocks() > budget {
+        // pop the freshest minimal-ΔB candidate; stale generations drop out
+        let l = loop {
+            match heap.pop() {
+                None => return false, // everything already evicted and still over budget
+                Some(e) if e.gen == gen[e.layer] => break e.layer,
+                Some(_) => continue,
+            }
+        };
+        // Adaptive quantum: aim to close ~1/4 of the deficit through this
+        // layer, but never less than μ.
+        let deficit_blocks = design.mem_blocks().saturating_sub(budget) as u64;
+        let m_wid = eval_m_wid_bits(&design.network.layers[l], &design.cfgs[l]).max(1);
+        let words =
+            cfg.mu.max(deficit_blocks * crate::device::BRAM36_BITS / (4 * m_wid));
+        let db = delta_bandwidth_by(design, l, cfg, words);
+        if design.total_bandwidth() + db > device.bandwidth_bps * cfg.bw_margin {
+            return false; // bandwidth limit (Algorithm 1)
+        }
+        rebalanced.clear();
+        increment_offchip_tracked(design, l, cfg, words, Some(&mut rebalanced));
+        // re-key the evicted layer (its ΔB moved)
+        gen[l] = gen[l].wrapping_add(1);
+        if evictable(design, l) {
+            heap.push(MinDeltaB { key: delta_bandwidth(design, l, cfg), layer: l, gen: gen[l] });
+        }
+        // Burst rebalancing cannot change other layers mid-loop (the Eq. 10
+        // target is geometry-derived, and geometry is fixed here), but if it
+        // ever does, re-key those layers too rather than diverge.
+        for idx in 0..rebalanced.len() {
+            let j = rebalanced[idx];
+            if j == l {
+                continue;
+            }
+            gen[j] = gen[j].wrapping_add(1);
+            if evictable(design, j) {
+                heap.push(MinDeltaB {
+                    key: delta_bandwidth(design, j, cfg),
+                    layer: j,
+                    gen: gen[j],
+                });
+            }
+        }
+    }
+    true
 }
 
 /// ALLOCATE_MEMORY: starting from the all-on-chip state (Algorithm 1
@@ -110,47 +258,120 @@ pub fn delta_bandwidth_by(design: &Design, l: usize, cfg: &DseConfig, words: u64
 /// greedy ΔB ordering is still applied per chunk); the final approach to the
 /// budget uses the fine `μ` granularity of the paper.
 pub fn allocate_memory(design: &mut Design, device: &Device, cfg: &DseConfig) -> bool {
-    let budget = device.mem_bram_equiv();
     // Fresh start: all weights back on-chip for the current geometry.
     for i in 0..design.len() {
         if design.off_bits[i] != 0 || design.cfgs[i].frag.is_streaming() {
+            design.record_layer(i);
             design.off_bits[i] = 0;
             design.set_fragmentation(i, 1);
         }
     }
-    while design.mem_blocks() > budget {
-        if !cfg.allow_streaming {
-            return false; // vanilla: weights must fit on-chip
-        }
-        // candidate layers: weight layers with something left on-chip
-        let mut best: Option<(usize, f64)> = None;
-        for i in 0..design.len() {
-            if !design.network.layers[i].has_weights()
-                || design.cfgs[i].frag.m_on_dep() == 0
-            {
-                continue;
-            }
-            let db = delta_bandwidth(design, i, cfg);
-            if best.is_none_or(|(_, b)| db < b) {
-                best = Some((i, db));
-            }
-        }
-        let Some((l, _)) = best else {
-            return false; // everything already evicted and still over budget
-        };
-        // Adaptive quantum: aim to close ~1/4 of the deficit through this
-        // layer, but never less than μ.
-        let deficit_blocks = design.mem_blocks().saturating_sub(budget) as u64;
+    evict_until_fit(design, device, cfg)
+}
+
+/// Warm-start ALLOCATE_MEMORY (§Perf): instead of resetting every layer to
+/// on-chip and re-deriving the whole eviction set after a single-layer
+/// unroll, keep the previous eviction state (the evicted *bits* are the
+/// geometry-independent invariant) and repair it incrementally:
+///
+/// - over budget  → continue greedy min-ΔB eviction from where we are;
+/// - under budget → greedily *un-evict*, pulling back the `μ`-block with the
+///   largest ΔB (the mirror image of the eviction criterion, i.e. the
+///   marginal Fig. 7 logic run in reverse) while the result still fits.
+///
+/// When the design never streams, this is step-for-step identical to the
+/// cold path (the reset is vacuous and both run the same eviction core), so
+/// compute-bound workloads get bit-identical designs. On eviction-heavy
+/// workloads the repaired eviction set is a greedy approximation of the
+/// re-derived one: same budget and bandwidth guarantees, but chunk-rounding
+/// may differ — which is why it is opt-in via [`DseConfig::warm_start`] and
+/// cross-checked against the cold path in `tests/dse_equivalence.rs`.
+pub fn allocate_memory_warm(design: &mut Design, device: &Device, cfg: &DseConfig) -> bool {
+    if !cfg.allow_streaming {
+        // vanilla has no eviction state to warm-start
+        return allocate_memory(design, device, cfg);
+    }
+    let budget = device.mem_bram_equiv();
+    if design.mem_blocks() > budget {
+        return evict_until_fit(design, device, cfg);
+    }
+    // Under budget: drain evictions while they fit back on-chip.
+    loop {
+        let Some((l, new_off_words)) = best_unevict_candidate(design, cfg) else { break };
         let m_wid = eval_m_wid_bits(&design.network.layers[l], &design.cfgs[l]).max(1);
-        let words =
-            cfg.mu.max(deficit_blocks * crate::device::BRAM36_BITS / (4 * m_wid));
-        let db = delta_bandwidth_by(design, l, cfg, words);
-        if design.total_bandwidth() + db > device.bandwidth_bps * cfg.bw_margin {
-            return false; // bandwidth limit (Algorithm 1)
+        // predict the memory effect without mutating (no nested trial logs)
+        let predicted = predict_blocks_at(design, l, new_off_words * m_wid, cfg);
+        let after = design.mem_blocks() - design.area_of(l).bram.total() + predicted;
+        if after > budget {
+            break; // pulling this block back would overflow on-chip memory
         }
-        increment_offchip_by(design, l, cfg, words);
+        let before_off = design.cfgs[l].frag.m_off_dep();
+        design.record_layer(l);
+        design.off_bits[l] = new_off_words * m_wid;
+        let n = if new_off_words == 0 { 1 } else { write_burst_balance(design, l, cfg.batch) };
+        design.set_fragmentation(l, n);
+        rebalance_tracked(design, cfg, None);
+        if design.cfgs[l].frag.m_off_dep() >= before_off {
+            // fragment re-padding swallowed the pull-back (cannot happen
+            // while unrolls only grow, where n never increases); stop rather
+            // than spin
+            break;
+        }
     }
     true
+}
+
+/// Un-eviction target for layer `i`: pull back at least `μ` words, in whole
+/// rows of the fragment grid (`n` words per row) so the re-derived
+/// fragmentation shrinks strictly and the drain loop terminates even when
+/// `μ < n`. Returns the new off-chip word count.
+fn unevict_target(design: &Design, i: usize, cfg: &DseConfig) -> u64 {
+    let n = design.cfgs[i].frag.n.max(1) as u64;
+    let u_off = design.cfgs[i].frag.u_off;
+    let rows = cfg.mu.div_ceil(n).max(1);
+    u_off.saturating_sub(rows) * n
+}
+
+/// The streaming layer whose trailing eviction rows cost the most bandwidth
+/// — the first to pull back on-chip when memory frees up — together with
+/// its un-eviction target.
+fn best_unevict_candidate(design: &Design, cfg: &DseConfig) -> Option<(usize, u64)> {
+    let mut best: Option<(usize, u64, f64)> = None;
+    for i in design.streaming_layer_iter() {
+        let layer = &design.network.layers[i];
+        let m_dep = eval_m_dep(layer, &design.cfgs[i]);
+        let m_wid = eval_m_wid_bits(layer, &design.cfgs[i]);
+        if m_dep == 0 || m_wid == 0 {
+            continue;
+        }
+        let old_off = design.cfgs[i].frag.m_off_dep().min(m_dep);
+        let new_off = unevict_target(design, i, cfg).min(old_off);
+        let d_ratio = (old_off - new_off) as f64 / m_dep as f64;
+        let saved = bandwidth_delta(design.slowdown(i), m_wid, design.clk_comp_mhz, d_ratio);
+        if best.is_none_or(|(_, _, b)| saved > b) {
+            best = Some((i, new_off, saved));
+        }
+    }
+    best.map(|(i, new_off, _)| (i, new_off))
+}
+
+/// BRAM blocks layer `l` would occupy with its evicted bits set to
+/// `off_bits_new` (pure prediction — mirrors [`Design::set_fragmentation`]
+/// without mutating).
+fn predict_blocks_at(design: &Design, l: usize, off_bits_new: u64, cfg: &DseConfig) -> u32 {
+    let layer = &design.network.layers[l];
+    let cfg_l = &design.cfgs[l];
+    let m_dep = eval_m_dep(layer, cfg_l);
+    let m_wid = eval_m_wid_bits(layer, cfg_l);
+    let m_off = if m_wid == 0 { 0 } else { off_bits_new.div_ceil(m_wid).min(m_dep) };
+    let mut probe = *cfg_l;
+    probe.frag = if m_off == 0 {
+        Fragmentation::all_on_chip(m_dep)
+    } else {
+        let n = write_burst_balance(design, l, cfg.batch).max(1);
+        Fragmentation::new(m_dep, m_off, n)
+    };
+    ce::eval_area(layer, &probe).bram.total()
 }
 
 #[cfg(test)]
@@ -171,6 +392,21 @@ mod tests {
         let (d, _, cfg) = setup();
         let wl = d.network.weight_layers();
         assert_eq!(write_burst_balance(&d, wl[0], cfg.batch), 1);
+    }
+
+    #[test]
+    fn r_target_matches_fresh_reduction() {
+        let (d, _, _) = setup();
+        for batch in [1u64, 4, 16] {
+            let fresh = d
+                .network
+                .layers
+                .iter()
+                .map(|l| batch * l.h_out() as u64 * l.w_out() as u64)
+                .max()
+                .unwrap_or(1);
+            assert_eq!(r_target(&d, batch), fresh);
+        }
     }
 
     #[test]
@@ -230,6 +466,7 @@ mod tests {
         assert!(allocate_memory(&mut d, &dev, &cfg));
         assert!(d.mem_blocks() <= dev.mem_bram_equiv());
         assert!(d.any_streaming());
+        d.assert_aggregates_consistent();
     }
 
     #[test]
@@ -252,5 +489,44 @@ mod tests {
         assert!(!evicted.is_empty());
         // every evicted layer has weights
         assert!(evicted.iter().all(|&i| d.network.layers[i].has_weights()));
+    }
+
+    #[test]
+    fn warm_allocation_from_scratch_matches_cold() {
+        // With no prior eviction state the warm path must run the exact same
+        // eviction core as the cold path.
+        let (d, dev, cfg) = setup();
+        let mut cold = d.clone();
+        let mut warm = d.clone();
+        assert!(allocate_memory(&mut cold, &dev, &cfg));
+        assert!(allocate_memory_warm(&mut warm, &dev, &cfg));
+        assert_eq!(cold.off_bits, warm.off_bits);
+        assert_eq!(cold.cfgs, warm.cfgs);
+        assert!(cold.total_bandwidth() == warm.total_bandwidth());
+    }
+
+    #[test]
+    fn warm_allocation_drains_when_memory_frees_up() {
+        // Evict on a tight device, then hand the design a huge budget: the
+        // warm path must pull the weights back on-chip.
+        let (mut d, dev, cfg) = setup();
+        assert!(allocate_memory(&mut d, &dev, &cfg));
+        assert!(d.any_streaming());
+        let big = dev.with_mem_scale(20.0);
+        assert!(allocate_memory_warm(&mut d, &big, &cfg));
+        assert!(!d.any_streaming(), "ample memory must drain the eviction set");
+        assert_eq!(d.off_bits.iter().filter(|&&b| b != 0).count(), 0);
+        d.assert_aggregates_consistent();
+    }
+
+    #[test]
+    fn warm_allocation_stays_feasible_on_tight_budget() {
+        let (mut d, dev, cfg) = setup();
+        assert!(allocate_memory(&mut d, &dev, &cfg));
+        // shrink memory further: warm path must evict more, not reset
+        let tight = dev.with_mem_scale(0.8);
+        assert!(allocate_memory_warm(&mut d, &tight, &cfg));
+        assert!(d.mem_blocks() <= tight.mem_bram_equiv());
+        d.assert_aggregates_consistent();
     }
 }

@@ -12,12 +12,20 @@
 //! - **memory allocation** ([`memory_alloc`]): whenever on-chip memory
 //!   exceeds the budget, evict depth-`μ` blocks to off-chip from the layer
 //!   with minimal bandwidth impact ΔB, re-balancing write bursts (Eq. 10).
+//!
+//! §Perf: the evaluation engine is incremental — O(1) aggregate queries and
+//! undo-log trials on [`Design`], a lazily invalidated min-ΔB heap in the
+//! eviction loop, and optionally ([`DseConfig::warm_start`]) memory re-fits
+//! that keep the previous eviction state. [`reference`] preserves the
+//! pre-refactor recompute-from-scratch engine as the equivalence oracle and
+//! the "before" side of `benches/dse_perf.rs`.
 
 mod ablation;
 mod compute_alloc;
 mod design;
 mod exhaustive;
 mod memory_alloc;
+pub mod reference;
 mod search;
 mod serialize;
 mod sweep;
@@ -27,12 +35,12 @@ pub use compute_alloc::{allocate_compute, increment_unroll};
 pub use design::Design;
 pub use exhaustive::{exhaustive_memory, ExhaustiveResult};
 pub use memory_alloc::{
-    allocate_memory, delta_bandwidth, delta_bandwidth_by, increment_offchip,
-    increment_offchip_by, r_target, rebalance_all, write_burst_balance,
+    allocate_memory, allocate_memory_warm, delta_bandwidth, delta_bandwidth_by,
+    increment_offchip, increment_offchip_by, r_target, rebalance_all, write_burst_balance,
 };
 pub use search::{anneal, random_search, run_with_strategy, Strategy};
 pub use serialize::{parse_design, serialize_design, DesignFormatError};
-pub use sweep::{mem_sweep, SweepPoint};
+pub use sweep::{mem_sweep, parallel_cases, SweepPoint};
 
 use crate::device::Device;
 use crate::ir::Network;
@@ -56,17 +64,37 @@ pub struct DseConfig {
     /// transient Read-After-Write stalls appear; a small margin keeps the
     /// deterministic schedule stall-free (validated by the simulator).
     pub bw_margin: f64,
+    /// When true, the memory re-fit after each unroll warm-starts from the
+    /// previous eviction state ([`allocate_memory_warm`]) instead of
+    /// resetting every layer to on-chip and re-deriving the whole eviction
+    /// set. Identical results on workloads that never stream; on
+    /// eviction-heavy workloads the repaired eviction set is a greedy
+    /// approximation of the re-derived one (same budget/bandwidth
+    /// guarantees, chunk rounding may differ), which is why this is opt-in.
+    pub warm_start: bool,
 }
 
 impl Default for DseConfig {
     fn default() -> Self {
-        DseConfig { phi: 1, mu: 512, batch: 1, allow_streaming: true, bw_margin: 0.90 }
+        DseConfig {
+            phi: 1,
+            mu: 512,
+            batch: 1,
+            allow_streaming: true,
+            bw_margin: 0.90,
+            warm_start: false,
+        }
     }
 }
 
 impl DseConfig {
     pub fn vanilla() -> Self {
         DseConfig { allow_streaming: false, ..Default::default() }
+    }
+
+    /// Default configuration with warm-started memory re-fits.
+    pub fn warm() -> Self {
+        DseConfig { warm_start: true, ..Default::default() }
     }
 }
 
@@ -97,6 +125,7 @@ pub fn run(network: &Network, device: &Device, cfg: &DseConfig) -> Option<DseRes
     let mut design = Design::initialize(network, device);
 
     // Make the initial design memory-feasible before any compute allocation.
+    // (Nothing streams yet, so the warm and cold paths coincide here.)
     if !allocate_memory(&mut design, device, cfg) {
         return None;
     }
@@ -177,5 +206,16 @@ mod tests {
         let ts = run(&net, &small, &DseConfig::default()).unwrap().throughput;
         let tl = run(&net, &large, &DseConfig::default()).unwrap().throughput;
         assert!(tl >= ts * 0.95, "θ(small)={ts} θ(large)={tl}");
+    }
+
+    #[test]
+    fn warm_start_stays_feasible_on_streaming_workload() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = run(&net, &dev, &DseConfig::warm()).expect("warm-start run must be feasible");
+        assert!(r.area.fits(&dev));
+        assert!(r.bandwidth_bps <= dev.bandwidth_bps * 1.0001);
+        assert!(r.throughput > 0.0);
+        r.design.assert_aggregates_consistent();
     }
 }

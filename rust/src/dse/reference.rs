@@ -1,0 +1,185 @@
+//! Pre-refactor reference engine — the equivalence oracle for the
+//! incremental DSE.
+//!
+//! This module preserves the recompute-from-scratch shape of the original
+//! Algorithm 1 implementation:
+//!
+//! - eviction candidates selected by a linear O(L) min-ΔB rescan per
+//!   eviction, with the Eq. 10 repeat target re-reduced over all layers per
+//!   candidate (the O(L²) term the heap removed);
+//! - one full `Design` clone per compute-allocation trial instead of an
+//!   undo-log trial.
+//!
+//! Feasibility thresholds intentionally read the same `Design` aggregate
+//! queries as the incremental engine (identical floating-point expressions),
+//! so both engines make bit-identical decisions and
+//! `tests/dse_equivalence.rs` can assert exact equality of the resulting
+//! designs. `benches/dse_perf.rs --compare` times this module as the
+//! "before" column of `BENCH_dse.json`.
+
+use super::{delta_bandwidth_by, increment_offchip_by, increment_unroll, Design, DseConfig,
+            DseResult};
+use crate::ce::{eval_m_dep, eval_m_wid_bits};
+use crate::device::Device;
+use crate::ir::Network;
+
+/// The Eq. 10 repeat target computed the pre-refactor way: a fresh reduction
+/// over every layer. Bit-identical to [`super::r_target`] (both are exact
+/// integer maxima); this one just pays O(L) per call.
+pub fn r_target_scan(design: &Design, batch: u64) -> u64 {
+    design
+        .network
+        .layers
+        .iter()
+        .map(|l| batch * l.h_out() as u64 * l.w_out() as u64)
+        .max()
+        .unwrap_or(1)
+}
+
+/// WRITE_BURST_BALANCE with the O(L) repeat-target reduction.
+fn write_burst_balance_scan(design: &Design, l: usize, batch: u64) -> u32 {
+    let layer = &design.network.layers[l];
+    let pixels = batch * layer.h_out() as u64 * layer.w_out() as u64;
+    let n = r_target_scan(design, batch).div_ceil(pixels);
+    let m_dep = eval_m_dep(layer, &design.cfgs[l]);
+    n.clamp(1, m_dep.max(1)) as u32
+}
+
+/// DELTA_BANDWIDTH with the scan-based burst balance. Same closed form and
+/// same inputs as [`super::delta_bandwidth`], hence bit-identical values.
+fn delta_bandwidth_scan(design: &Design, l: usize, cfg: &DseConfig) -> f64 {
+    let layer = &design.network.layers[l];
+    let m_dep = eval_m_dep(layer, &design.cfgs[l]);
+    let m_wid = eval_m_wid_bits(layer, &design.cfgs[l]);
+    if m_dep == 0 || m_wid == 0 {
+        return f64::INFINITY;
+    }
+    let old_off = design.cfgs[l].frag.m_off_dep().min(m_dep);
+    let n = write_burst_balance_scan(design, l, cfg.batch) as u64;
+    let requested = (old_off + cfg.mu).min(m_dep);
+    let u = m_dep.div_ceil(n);
+    let u_off = requested.div_ceil(n).min(u);
+    let new_off = (u_off * n).min(m_dep);
+    let d_ratio = (new_off as f64 - old_off as f64) / m_dep as f64;
+    design.slowdown(l) * m_wid as f64 * design.clk_comp_mhz * 1e6 * d_ratio
+}
+
+/// ALLOCATE_MEMORY, pre-refactor shape: full reset to on-chip, then a linear
+/// min-ΔB rescan per eviction.
+pub fn allocate_memory(design: &mut Design, device: &Device, cfg: &DseConfig) -> bool {
+    let budget = device.mem_bram_equiv();
+    // Fresh start: all weights back on-chip for the current geometry.
+    for i in 0..design.len() {
+        if design.off_bits[i] != 0 || design.cfgs[i].frag.is_streaming() {
+            design.record_layer(i);
+            design.off_bits[i] = 0;
+            design.set_fragmentation(i, 1);
+        }
+    }
+    while design.mem_blocks() > budget {
+        if !cfg.allow_streaming {
+            return false; // vanilla: weights must fit on-chip
+        }
+        // candidate layers: weight layers with something left on-chip
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..design.len() {
+            if !design.network.layers[i].has_weights()
+                || design.cfgs[i].frag.m_on_dep() == 0
+            {
+                continue;
+            }
+            let db = delta_bandwidth_scan(design, i, cfg);
+            if best.is_none_or(|(_, b)| db < b) {
+                best = Some((i, db));
+            }
+        }
+        let Some((l, _)) = best else {
+            return false; // everything already evicted and still over budget
+        };
+        // Adaptive quantum: aim to close ~1/4 of the deficit through this
+        // layer, but never less than μ.
+        let deficit_blocks = design.mem_blocks().saturating_sub(budget) as u64;
+        let m_wid = eval_m_wid_bits(&design.network.layers[l], &design.cfgs[l]).max(1);
+        let words =
+            cfg.mu.max(deficit_blocks * crate::device::BRAM36_BITS / (4 * m_wid));
+        let db = delta_bandwidth_by(design, l, cfg, words);
+        if design.total_bandwidth() + db > device.bandwidth_bps * cfg.bw_margin {
+            return false; // bandwidth limit (Algorithm 1)
+        }
+        increment_offchip_by(design, l, cfg, words);
+    }
+    true
+}
+
+/// ALLOCATE_COMPUTE, pre-refactor shape: one full `Design` clone per trial.
+pub fn allocate_compute(design: &mut Design, device: &Device, cfg: &DseConfig) -> usize {
+    let mut accepted = 0;
+    loop {
+        let l = design.slowest();
+        let mut trial = design.clone();
+        if !increment_unroll(&mut trial, l, cfg.phi) {
+            break; // bottleneck CE saturated
+        }
+        let fitted = allocate_memory(&mut trial, device, cfg);
+        if !fitted
+            || !trial.total_area().fits(device)
+            || trial.total_bandwidth() > device.bandwidth_bps * cfg.bw_margin
+        {
+            break; // area or bandwidth limit reached
+        }
+        *design = trial;
+        accepted += 1;
+    }
+    accepted
+}
+
+/// Algorithm 1 end-to-end with the pre-refactor engine.
+pub fn run(network: &Network, device: &Device, cfg: &DseConfig) -> Option<DseResult> {
+    let mut design = Design::initialize(network, device);
+    if !allocate_memory(&mut design, device, cfg) {
+        return None;
+    }
+    if !design.total_area().fits(device) {
+        return None;
+    }
+    let iterations = allocate_compute(&mut design, device, cfg);
+    let throughput = design.min_throughput();
+    Some(DseResult {
+        throughput,
+        latency_ms: design.latency_ms(1),
+        area: design.total_area(),
+        bandwidth_bps: design.total_bandwidth(),
+        iterations,
+        design,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse;
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn scan_delta_matches_heap_key() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let d = Design::initialize(&net, &dev);
+        let cfg = DseConfig::default();
+        for &i in &net.weight_layers() {
+            let scan = delta_bandwidth_scan(&d, i, &cfg);
+            let fast = dse::delta_bandwidth(&d, i, &cfg);
+            assert!(scan == fast, "layer {i}: scan {scan} vs incremental {fast}");
+        }
+    }
+
+    #[test]
+    fn reference_engine_is_feasible_end_to_end() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let r = run(&net, &dev, &DseConfig::default()).expect("feasible");
+        assert!(r.area.fits(&dev));
+        assert!(r.throughput > 0.0);
+    }
+}

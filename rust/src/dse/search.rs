@@ -7,9 +7,13 @@
 //! paper's own `ALLOCATE_MEMORY` — the memory sub-problem is what the greedy
 //! ΔB criterion already solves near-optimally (see `exhaustive.rs`), so the
 //! interesting search space is the unroll assignment.
+//!
+//! §Perf: proposals run as undo-log trials on a single working design
+//! (bit-exact rollback) instead of cloning the full `Design` per sample,
+//! and the legal-unroll sets come from the memoized divisor cache.
 
 use super::{allocate_memory, run as greedy_run, Design, DseConfig, DseResult};
-use crate::ce::divisors;
+use crate::ce::divisors_cached;
 use crate::device::Device;
 use crate::ir::Network;
 use crate::util::XorShift64;
@@ -66,24 +70,31 @@ fn result_from(design: Design) -> DseResult {
     }
 }
 
-/// Legal unroll values of layer `l` in each dimension.
-fn dims_of(design: &Design, l: usize) -> Vec<(u8, Vec<u32>)> {
+/// Legal unroll values of layer `l` in each dimension, as (dimension tag,
+/// divisor slice) pairs in a fixed-capacity buffer (no per-call allocation;
+/// the divisor sets come from the memoized cache).
+fn dims_of(design: &Design, l: usize) -> ([(u8, &'static [u32]); 3], usize) {
     let layer = &design.network.layers[l];
     let k2 = layer.kernel() * layer.kernel();
-    let mut dims = Vec::new();
+    let mut dims: [(u8, &'static [u32]); 3] = [(0, &[]); 3];
+    let mut n = 0;
     if k2 > 1 {
-        dims.push((0u8, divisors(k2)));
+        dims[n] = (0u8, divisors_cached(k2));
+        n += 1;
     }
     if layer.has_weights() && layer.c_out > 1 {
-        dims.push((1, divisors(layer.c_out)));
+        dims[n] = (1, divisors_cached(layer.c_out));
+        n += 1;
     }
     if layer.c_per_group() > 1 {
-        dims.push((2, divisors(layer.c_per_group())));
+        dims[n] = (2, divisors_cached(layer.c_per_group()));
+        n += 1;
     }
-    dims
+    (dims, n)
 }
 
 fn set_dim(design: &mut Design, l: usize, which: u8, value: u32) {
+    design.record_layer(l);
     match which {
         0 => design.cfgs[l].kp = value,
         1 => design.cfgs[l].fp = value,
@@ -105,26 +116,29 @@ pub fn random_search(
     seed: u64,
 ) -> Option<DseResult> {
     let mut rng = XorShift64::new(seed);
-    let base = Design::initialize(network, device);
+    let mut work = Design::initialize(network, device);
     let mut best: Option<Design> = None;
     let mut best_theta = 0.0;
 
     for _ in 0..samples {
-        let mut cand = base.clone();
-        for l in 0..cand.len() {
-            for (which, vals) in dims_of(&cand, l) {
+        work.begin_trial();
+        for l in 0..work.len() {
+            let (dims, ndims) = dims_of(&work, l);
+            for &(which, vals) in &dims[..ndims] {
                 // squared-uniform index biases toward the small end
                 let u = rng.unit();
                 let idx = ((u * u) * vals.len() as f64) as usize;
-                set_dim(&mut cand, l, which, vals[idx.min(vals.len() - 1)]);
+                set_dim(&mut work, l, which, vals[idx.min(vals.len() - 1)]);
             }
         }
-        if let Some(theta) = evaluate(&mut cand, device, cfg) {
+        if let Some(theta) = evaluate(&mut work, device, cfg) {
             if theta > best_theta {
                 best_theta = theta;
-                best = Some(cand);
+                best = Some(work.snapshot());
             }
         }
+        // every sample starts from the pristine all-serial design
+        work.rollback_trial();
     }
     best.map(result_from)
 }
@@ -153,11 +167,11 @@ pub fn anneal(
         let temp = t0 * (t_end / t0).powf(frac);
 
         let l = rng.below(cur.len());
-        let dims = dims_of(&cur, l);
-        if dims.is_empty() {
+        let (dims, ndims) = dims_of(&cur, l);
+        if ndims == 0 {
             continue;
         }
-        let (which, vals) = rng.choose(&dims);
+        let (which, vals) = dims[rng.below(ndims)];
         let cur_val = match which {
             0 => cur.cfgs[l].kp,
             1 => cur.cfgs[l].fp,
@@ -170,20 +184,23 @@ pub fn anneal(
             continue;
         }
 
-        let mut cand = cur.clone();
-        set_dim(&mut cand, l, *which, vals[next_pos]);
-        let Some(theta) = evaluate(&mut cand, device, cfg) else {
+        cur.begin_trial();
+        set_dim(&mut cur, l, which, vals[next_pos]);
+        let Some(theta) = evaluate(&mut cur, device, cfg) else {
+            cur.rollback_trial();
             continue; // infeasible proposal
         };
         // Metropolis on relative throughput change
         let delta = (theta / cur_theta).ln();
         if delta >= 0.0 || rng.unit() < (delta / temp).exp() {
-            cur = cand;
+            cur.commit_trial();
             cur_theta = theta;
             if cur_theta > best_theta {
                 best_theta = cur_theta;
                 best = cur.clone();
             }
+        } else {
+            cur.rollback_trial();
         }
     }
     Some(result_from(best))
@@ -205,6 +222,7 @@ mod tests {
         let r = random_search(&net, &dev, &cfg, 50, 1).expect("some feasible sample");
         assert!(r.area.fits(&dev));
         assert!(r.throughput > 0.0);
+        r.design.assert_aggregates_consistent();
     }
 
     #[test]
@@ -230,6 +248,7 @@ mod tests {
             r.throughput
         );
         assert!(r.area.fits(&dev));
+        r.design.assert_aggregates_consistent();
     }
 
     #[test]

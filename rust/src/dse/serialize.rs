@@ -216,7 +216,10 @@ mod tests {
         assert_eq!(d.off_bits, back.off_bits);
         assert_eq!(d.min_throughput(), back.min_throughput());
         assert_eq!(d.total_area(), back.total_area());
-        assert!((d.total_bandwidth() - back.total_bandwidth()).abs() < 1e-6);
+        // relative: `d` carries the rounding residue of its incremental
+        // bandwidth aggregate, `back` was rebuilt in one clean pass
+        let rel = (d.total_bandwidth() - back.total_bandwidth()).abs() / d.total_bandwidth();
+        assert!(rel < 1e-9, "bandwidth round-trip drift {rel}");
     }
 
     #[test]

@@ -1,10 +1,59 @@
-//! Parameter-sweep harness for paper Fig. 6: vary the on-chip memory budget
-//! `A_mem` while keeping compute (LUT/DSP) and off-chip bandwidth fixed, and
-//! record AutoWS vs vanilla throughput at each point.
+//! Parameter-sweep harnesses: the Fig. 6 memory sweep plus the generic
+//! multi-core sweep driver the figure/hyperparameter/device grids run on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
 
 use super::{run, DseConfig};
 use crate::device::Device;
 use crate::ir::Network;
+
+/// Fan independent sweep cases across the machine's cores with
+/// `std::thread::scope` (§Perf: a (model × device × hyperparameter) grid is
+/// embarrassingly parallel, and each DSE case is compute-bound).
+///
+/// Work-stealing over an atomic index keeps long cases from serializing the
+/// tail; results come back in input order regardless of completion order, so
+/// callers observe exactly the sequential semantics. `f` receives
+/// `(case index, &case)`. Panics in `f` propagate to the caller.
+pub fn parallel_cases<T, R, F>(cases: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = cases.len();
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n);
+    if workers <= 1 {
+        return cases.iter().enumerate().map(|(i, c)| f(i, c)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // the receiver outlives the scope; send cannot fail unless
+                // the main thread already panicked
+                let _ = tx.send((i, f(i, &cases[i])));
+            });
+        }
+    });
+    drop(tx);
+
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|r| r.expect("every case produces a result")).collect()
+}
 
 /// One point of the Fig. 6 sweep.
 #[derive(Debug, Clone)]
@@ -23,39 +72,38 @@ pub struct SweepPoint {
 
 /// Run the Fig. 6 sweep: `scales` are multiples of the device's on-chip
 /// memory (e.g. 0.25 ..= 2.0), with LUT/DSP/bandwidth pinned to the
-/// reference device.
+/// reference device. Points are explored in parallel via
+/// [`parallel_cases`]; every point is an independent DSE pair, so the
+/// results are identical to the sequential sweep.
 pub fn mem_sweep(network: &Network, device: &Device, scales: &[f64]) -> Vec<SweepPoint> {
-    scales
-        .iter()
-        .map(|&s| {
-            let dev = device.with_mem_scale(s);
-            let autows = run(network, &dev, &DseConfig::default());
-            let vanilla = run(network, &dev, &DseConfig::vanilla());
-            let frac = autows.as_ref().map_or(0.0, |r| {
-                let total: u64 = network.layers.iter().map(|l| l.weight_bits()).sum();
-                let off: f64 = r
-                    .design
-                    .cfgs
-                    .iter()
-                    .zip(&network.layers)
-                    .map(|(c, l)| {
-                        if l.has_weights() {
-                            c.frag.off_chip_ratio() * l.weight_bits() as f64
-                        } else {
-                            0.0
-                        }
-                    })
-                    .sum();
-                off / total as f64
-            });
-            SweepPoint {
-                mem_scale: s,
-                autows_fps: autows.map(|r| r.throughput),
-                vanilla_fps: vanilla.map(|r| r.throughput),
-                autows_offchip_frac: frac,
-            }
-        })
-        .collect()
+    parallel_cases(scales, |_, &s| {
+        let dev = device.with_mem_scale(s);
+        let autows = run(network, &dev, &DseConfig::default());
+        let vanilla = run(network, &dev, &DseConfig::vanilla());
+        let frac = autows.as_ref().map_or(0.0, |r| {
+            let total: u64 = network.layers.iter().map(|l| l.weight_bits()).sum();
+            let off: f64 = r
+                .design
+                .cfgs
+                .iter()
+                .zip(&network.layers)
+                .map(|(c, l)| {
+                    if l.has_weights() {
+                        c.frag.off_chip_ratio() * l.weight_bits() as f64
+                    } else {
+                        0.0
+                    }
+                })
+                .sum();
+            off / total as f64
+        });
+        SweepPoint {
+            mem_scale: s,
+            autows_fps: autows.map(|r| r.throughput),
+            vanilla_fps: vanilla.map(|r| r.throughput),
+            autows_offchip_frac: frac,
+        }
+    })
 }
 
 #[cfg(test)]
@@ -87,5 +135,41 @@ mod tests {
 
         // off-chip share shrinks as memory grows
         assert!(pts[0].autows_offchip_frac >= pts[2].autows_offchip_frac);
+    }
+
+    #[test]
+    fn parallel_cases_preserves_order_and_coverage() {
+        let cases: Vec<u64> = (0..37).collect();
+        let out = parallel_cases(&cases, |i, &c| {
+            assert_eq!(i as u64, c);
+            c * c
+        });
+        assert_eq!(out.len(), cases.len());
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn parallel_cases_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_cases(&empty, |_, &c| c).is_empty());
+        assert_eq!(parallel_cases(&[7u32], |_, &c| c + 1), vec![8]);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let scales = [0.6, 1.0, 1.4];
+        let par = mem_sweep(&net, &dev, &scales);
+        // sequential reference
+        let seq: Vec<Option<f64>> = scales
+            .iter()
+            .map(|&s| run(&net, &dev.with_mem_scale(s), &DseConfig::default()).map(|r| r.throughput))
+            .collect();
+        for (p, s) in par.iter().zip(&seq) {
+            assert_eq!(p.autows_fps, *s, "parallel and sequential sweeps must agree");
+        }
     }
 }

@@ -147,6 +147,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
         phi: args.get_num("phi", 1u32)?,
         mu: args.get_num("mu", 512u64)?,
         allow_streaming: !vanilla,
+        warm_start: args.has("warm"),
         ..Default::default()
     };
     let net = models::by_name(&model, q).ok_or_else(|| anyhow!("unknown model {model}"))?;

@@ -9,23 +9,34 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
 //! bundled XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids
 //! and round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! The real client requires the `xla` bindings, which are not vendored in
+//! this offline build; it is gated behind the `pjrt` cargo feature. Without
+//! the feature the same API is served by a stub whose `load_hlo_text` fails
+//! with an actionable message — the serving stack, tests and benches all
+//! skip gracefully when artifacts (or PJRT itself) are unavailable.
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 /// A PJRT client; loads executables.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
 /// One compiled model variant, ready to execute.
 pub struct LoadedModel {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     /// Human-readable source path, for diagnostics.
     pub source: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
@@ -52,6 +63,36 @@ impl Runtime {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub client: creation always succeeds so callers can construct the
+    /// serving stack; loading an artifact is where the missing backend (or a
+    /// missing artifact) is reported.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {})
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Fails with an actionable message: a missing artifact is reported the
+    /// same way the real client reports it; an existing artifact cannot be
+    /// executed without the `pjrt` feature.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(anyhow!("parse {}: no such artifact", path.display())
+                .context("is `make artifacts` up to date?"));
+        }
+        Err(anyhow!(
+            "cannot execute {}: built without the `pjrt` feature (artifacts load only \
+             with the xla bindings available)",
+            path.display()
+        ))
+    }
+}
+
 /// A dense f32 tensor crossing the runtime boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -68,6 +109,7 @@ impl Tensor {
         Ok(Tensor { data, dims })
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         xla::Literal::vec1(&self.data)
             .reshape(&self.dims)
@@ -75,6 +117,7 @@ impl Tensor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedModel {
     /// Execute with f32 inputs; returns all outputs (the artifacts are
     /// lowered with `return_tuple=True`, so the single device-result is a
@@ -102,6 +145,16 @@ impl LoadedModel {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl LoadedModel {
+    /// Unreachable in practice: the stub `Runtime` never hands out a
+    /// `LoadedModel`. Kept so downstream engine code typechecks identically
+    /// with and without the feature.
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Err(anyhow!("cannot execute {}: built without the `pjrt` feature", self.source))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +163,16 @@ mod tests {
     fn tensor_shape_validation() {
         assert!(Tensor::new(vec![1.0; 6], vec![2, 3]).is_ok());
         assert!(Tensor::new(vec![1.0; 5], vec![2, 3]).is_err());
+    }
+
+    #[test]
+    fn stub_or_real_client_reports_missing_artifacts() {
+        // With the `pjrt` feature this exercises the real client's error
+        // path; without it, the stub's. Either way the message must point at
+        // `make artifacts` (asserted again in tests/runtime_roundtrip.rs).
+        let Ok(rt) = Runtime::cpu() else { return };
+        let err = rt.load_hlo_text("/nonexistent/foo.hlo.txt").unwrap_err();
+        assert!(format!("{err:#}").contains("artifacts"), "{err:#}");
     }
 
     // PJRT round-trip tests live in rust/tests/ — they require the

@@ -1,0 +1,225 @@
+//! Equivalence guard for the incremental DSE evaluation engine.
+//!
+//! Three layers of protection:
+//!
+//! 1. **Engine equivalence** — the incremental engine (O(1) aggregates,
+//!    min-ΔB heap, undo-log trials) must produce *identical* designs to the
+//!    preserved pre-refactor recompute engine (`dse::reference`) on every
+//!    `dse_perf` case: same per-layer configs and evicted bits, hence the
+//!    same throughput, area and bandwidth.
+//! 2. **Aggregate replay** — randomized `increment_unroll` /
+//!    `increment_offchip` / rollback sequences leave the cached aggregates
+//!    bit-identical to a fresh `Design::initialize` replaying only the
+//!    committed operations, and consistent with an O(L) recomputation.
+//! 3. **Warm-start safety** — the opt-in warm-start path matches the cold
+//!    path exactly on workloads that never stream, and preserves all Eq. 6
+//!    feasibility guarantees where eviction states may legitimately differ.
+
+use autows::device::Device;
+use autows::dse::{self, increment_offchip, increment_unroll, Design, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+
+/// xorshift64* PRNG, deterministic per test (no rand crate in this build).
+struct Rng(u64);
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+fn assert_designs_identical(a: &Design, b: &Design, label: &str) {
+    assert_eq!(a.cfgs, b.cfgs, "{label}: per-layer configs diverged");
+    assert_eq!(a.off_bits, b.off_bits, "{label}: evicted bits diverged");
+    assert!(
+        a.min_throughput() == b.min_throughput(),
+        "{label}: throughput {} vs {}",
+        a.min_throughput(),
+        b.min_throughput()
+    );
+    assert_eq!(a.total_area(), b.total_area(), "{label}: area diverged");
+    assert!(
+        a.total_bandwidth() == b.total_bandwidth(),
+        "{label}: bandwidth {} vs {}",
+        a.total_bandwidth(),
+        b.total_bandwidth()
+    );
+}
+
+/// The `benches/dse_perf.rs` case list (the acceptance grid).
+fn perf_cases() -> Vec<(&'static str, autows::ir::Network, Device)> {
+    vec![
+        ("toy/zcu102", models::toy_cnn(Quant::W8A8), Device::zcu102()),
+        ("resnet18/zcu102", models::resnet18(Quant::W4A5), Device::zcu102()),
+        ("resnet18/zedboard", models::resnet18(Quant::W4A5), Device::zedboard()),
+        ("resnet50/u250", models::resnet50(Quant::W8A8), Device::u250()),
+        ("resnet50/zcu102", models::resnet50(Quant::W4A5), Device::zcu102()),
+        ("mobilenetv2/zc706", models::mobilenet_v2(Quant::W4A4), Device::zc706()),
+        ("yolov5n/zcu102", models::yolov5n(Quant::W8A8), Device::zcu102()),
+    ]
+}
+
+#[test]
+fn incremental_engine_matches_reference_on_perf_grid() {
+    let cfg = DseConfig::default();
+    // fan the (slow) reference runs across cores; each case is independent
+    let cases = perf_cases();
+    let pairs = dse::parallel_cases(&cases, |_, (name, net, dev)| {
+        let fast = dse::run(net, dev, &cfg);
+        let slow = dse::reference::run(net, dev, &cfg);
+        (*name, fast, slow)
+    });
+    for (name, fast, slow) in pairs {
+        match (fast, slow) {
+            (Some(f), Some(s)) => {
+                assert_designs_identical(&f.design, &s.design, name);
+                assert_eq!(f.iterations, s.iterations, "{name}: iteration counts diverged");
+                f.design.assert_aggregates_consistent();
+            }
+            (None, None) => {}
+            (f, s) => panic!(
+                "{name}: feasibility diverged (incremental {:?} vs reference {:?})",
+                f.map(|r| r.throughput),
+                s.map(|r| r.throughput)
+            ),
+        }
+    }
+}
+
+#[test]
+fn incremental_engine_matches_reference_for_vanilla_and_coarse_hyperparams() {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    for cfg in [
+        DseConfig::vanilla(),
+        DseConfig { phi: 4, mu: 2048, ..Default::default() },
+        DseConfig { batch: 8, ..Default::default() },
+    ] {
+        let fast = dse::run(&net, &dev, &cfg);
+        let slow = dse::reference::run(&net, &dev, &cfg);
+        match (fast, slow) {
+            (Some(f), Some(s)) => assert_designs_identical(&f.design, &s.design, "resnet18"),
+            (None, None) => {}
+            _ => panic!("feasibility diverged for {cfg:?}"),
+        }
+    }
+}
+
+/// Apply a random committed mutation through the sanctioned entry points.
+fn random_op(design: &mut Design, rng: &mut Rng, cfg: &DseConfig) {
+    let weight_layers = design.network.weight_layers();
+    match rng.below(3) {
+        0 => {
+            let l = rng.below(design.len());
+            let phi = [1u32, 2, 4][rng.below(3)];
+            increment_unroll(design, l, phi);
+        }
+        1 => {
+            let l = weight_layers[rng.below(weight_layers.len())];
+            increment_offchip(design, l, cfg);
+        }
+        _ => {
+            let l = design.slowest();
+            increment_unroll(design, l, 1);
+        }
+    }
+}
+
+#[test]
+fn aggregates_bit_match_fresh_replay_under_random_trials_and_rollbacks() {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let cfg = DseConfig::default();
+
+    for seed in 1..=5u64 {
+        let mut rng = Rng(seed);
+        let mut live = Design::initialize(&net, &dev);
+        // record of committed op seeds so the replay draws the same ops
+        let mut committed: Vec<u64> = Vec::new();
+
+        for step in 0..60 {
+            let op_seed = rng.next();
+            if step % 3 == 2 {
+                // speculative trial: mutate a few times, then roll back
+                live.begin_trial();
+                let mut trial_rng = Rng(op_seed);
+                for _ in 0..1 + trial_rng.below(3) {
+                    random_op(&mut live, &mut trial_rng, &cfg);
+                }
+                live.rollback_trial();
+            } else {
+                let mut op_rng = Rng(op_seed);
+                random_op(&mut live, &mut op_rng, &cfg);
+                committed.push(op_seed);
+            }
+            live.assert_aggregates_consistent();
+        }
+
+        // fresh design replaying only the committed operations
+        let mut replay = Design::initialize(&net, &dev);
+        for &op_seed in &committed {
+            let mut op_rng = Rng(op_seed);
+            random_op(&mut replay, &mut op_rng, &cfg);
+        }
+
+        assert_eq!(live.cfgs, replay.cfgs, "seed {seed}: configs diverged");
+        assert_eq!(live.off_bits, replay.off_bits, "seed {seed}: off_bits diverged");
+        // cached aggregates must be bit-identical to the replay's — rolled
+        // back trials may leave no trace, not even floating-point residue
+        assert!(live.total_bandwidth() == replay.total_bandwidth(), "seed {seed}: bandwidth");
+        assert!(live.min_throughput() == replay.min_throughput(), "seed {seed}: throughput");
+        assert_eq!(live.total_area(), replay.total_area(), "seed {seed}: area");
+        assert_eq!(live.mem_blocks(), replay.mem_blocks(), "seed {seed}: mem blocks");
+        assert_eq!(live.latency_ms(1), replay.latency_ms(1), "seed {seed}: latency");
+    }
+}
+
+#[test]
+fn warm_start_matches_cold_on_non_streaming_grid() {
+    // Cases whose cold-path result keeps every weight on-chip: the warm
+    // memory path is then step-for-step identical to the cold path.
+    for (name, net, dev) in
+        [("toy/u250", models::toy_cnn(Quant::W8A8), Device::u250())]
+    {
+        let cold = dse::run(&net, &dev, &DseConfig::default()).expect("feasible");
+        assert!(
+            !cold.design.any_streaming(),
+            "{name}: precondition — cold result must be all on-chip"
+        );
+        let warm = dse::run(&net, &dev, &DseConfig::warm()).expect("feasible");
+        assert_designs_identical(&cold.design, &warm.design, name);
+        assert_eq!(cold.iterations, warm.iterations, "{name}");
+    }
+}
+
+#[test]
+fn warm_start_respects_constraints_on_streaming_grid() {
+    // Where eviction states may legitimately differ from the cold path, the
+    // warm-started DSE must still satisfy every Eq. 6 constraint and stay
+    // within the device budget.
+    for (name, net, dev) in [
+        ("resnet18/zcu102", models::resnet18(Quant::W4A5), Device::zcu102()),
+        ("resnet18/zedboard", models::resnet18(Quant::W4A5), Device::zedboard()),
+        ("mobilenetv2/zc706", models::mobilenet_v2(Quant::W4A4), Device::zc706()),
+    ] {
+        let Some(r) = dse::run(&net, &dev, &DseConfig::warm()) else {
+            panic!("{name}: warm-start run must be feasible");
+        };
+        assert!(r.area.fits(&dev), "{name}: area");
+        assert!(
+            r.bandwidth_bps <= dev.bandwidth_bps * 1.0001,
+            "{name}: bandwidth {} over {}",
+            r.bandwidth_bps,
+            dev.bandwidth_bps
+        );
+        assert!(r.design.mem_blocks() <= dev.mem_bram_equiv(), "{name}: memory budget");
+        assert!(r.throughput > 0.0, "{name}");
+        r.design.assert_aggregates_consistent();
+    }
+}

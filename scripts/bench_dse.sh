@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Build release and record the DSE + simulator performance trajectory.
+#
+# Writes BENCH_dse.json at the repo root: per-case before/after medians of
+# the DSE engines (reference recompute vs incremental), equality of their
+# results, plus the warm-start timing column. Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+
+# DSE hot path: before/after comparison + JSON artifact at the repo root.
+# (Absolute path: cargo runs bench binaries with cwd set to the package
+# root, so a bare filename would land in rust/.)
+cargo bench --bench dse_perf -- --compare --warm --json "$PWD/BENCH_dse.json"
+
+# Simulator hot path (kept in the same report cadence; its own assertions
+# print to stdout).
+cargo bench --bench sim_perf
+
+echo
+echo "BENCH_dse.json:"
+cat BENCH_dse.json
