@@ -6,29 +6,29 @@
 //! 3. run the AutoWS DSE and compare against the vanilla baseline,
 //! 4. validate the streaming schedule in the cycle-accurate simulator.
 //!
+//! All through `autows::pipeline`: `Deployment::for_net_file` ingests the
+//! description, `.explore()` runs Algorithm 1, `.schedule()` derives the
+//! burst schedule.
+//!
 //! ```sh
 //! cargo run --release --example custom_network [path/to/model.net] [device]
 //! ```
 
-use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::{parse_network, serialize_network, Quant};
-use autows::schedule::BurstSchedule;
-use autows::sim::{simulate, SimConfig};
+use autows::pipeline::Deployment;
+use autows::sim::SimConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), autows::Error> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let path = args.first().map(String::as_str).unwrap_or("nets/residual_tiny.net");
     let device = args.get(1).map(String::as_str).unwrap_or("zedboard");
 
-    let text = std::fs::read_to_string(path)?;
-    let net = parse_network(&text, Quant::W8A8).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-    let dev = Device::by_name(device).ok_or_else(|| anyhow::anyhow!("unknown device {device}"))?;
-
-    let s = net.stats();
+    let plan = Deployment::for_net_file(path).quant(Quant::W8A8).on_device(device)?;
+    let s = plan.network().stats();
     println!(
         "{}: {} layers ({} with weights), {:.2}K params, {:.2}M MACs",
-        net.name,
+        plan.network().name,
         s.total_layers,
         s.weight_layers,
         s.params as f64 / 1e3,
@@ -36,23 +36,29 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Round-trip sanity: the serializer regenerates an equivalent description.
-    let reparsed = parse_network(&serialize_network(&net), Quant::W8A8).expect("round-trip");
+    let reparsed =
+        parse_network(&serialize_network(plan.network()), Quant::W8A8).expect("round-trip");
     assert_eq!(reparsed.stats(), s, "serializer must preserve the model");
 
     for (label, cfg) in [("AutoWS", DseConfig::default()), ("vanilla", DseConfig::vanilla())] {
-        match dse::run(&net, &dev, &cfg) {
-            None => println!("{label:>8}: INFEASIBLE on {}", dev.name),
-            Some(r) => {
-                let sim = simulate(&r.design, &dev, &SimConfig::default());
-                let sched = BurstSchedule::from_design(&r.design, &dev, 1);
+        match plan.clone().explore(&cfg) {
+            Err(e) if e.is_infeasible() => {
+                println!("{label:>8}: INFEASIBLE on {}", plan.device().name)
+            }
+            Err(e) => return Err(e),
+            Ok(explored) => {
+                let r = explored.result().clone();
+                let mem = r.area.mem_utilization(explored.device());
+                let sched = explored.schedule();
+                let sim = sched.simulate(&SimConfig::default());
                 println!(
                     "{label:>8}: θ={:>9.1} fps  latency={:.3} ms  mem {:>3.0}%  \
                      {} streaming layers (balanced={})  sim stalls {:.1} us",
                     r.throughput,
                     r.latency_ms,
-                    r.area.mem_utilization(&dev) * 100.0,
-                    sched.entries.len(),
-                    sched.balanced(),
+                    mem * 100.0,
+                    sched.burst_schedule().entries.len(),
+                    sched.burst_schedule().balanced(),
                     sim.total_stall_s * 1e6,
                 );
             }

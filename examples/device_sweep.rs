@@ -2,7 +2,8 @@
 //! cells the paper leaves out) — useful for scoping a deployment.
 //!
 //! The grid cells are independent, so they are fanned across cores with
-//! `autows::dse::parallel_cases`; rows print in the same order as the
+//! `autows::pipeline::sweep::parallel_plans`; every cell explores through
+//! the shared design cache, and rows print in the same order as the
 //! sequential sweep.
 //!
 //! ```sh
@@ -11,13 +12,13 @@
 
 use autows::baseline::{self, sequential_latency_ms};
 use autows::device::Device;
-use autows::dse::{self, parallel_cases, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::{sweep::parallel_plans, Deployment, Planned};
 use autows::sim::{simulate, SimConfig};
 
 struct Row {
-    model: &'static str,
+    model: String,
     device: String,
     seq_ms: f64,
     vanilla_ms: Option<f64>,
@@ -26,7 +27,7 @@ struct Row {
     dma_pct: f64,
 }
 
-fn main() {
+fn main() -> Result<(), autows::Error> {
     let quant = match std::env::args().nth(1).as_deref() {
         Some("w4a4") => Quant::W4A4,
         Some("w8a8") => Quant::W8A8,
@@ -38,36 +39,35 @@ fn main() {
         "network", "device", "seq ms", "van ms", "AutoWS", "off-ch%", "DMA%"
     );
 
-    let models_list = ["mobilenetv2", "resnet18", "resnet50", "yolov5n"];
-    let cases: Vec<(&'static str, Device)> = models_list
-        .iter()
-        .flat_map(|&m| Device::all().into_iter().map(move |d| (m, d)))
-        .collect();
+    // resolve the whole grid up front: name typos fail here, not mid-sweep
+    let mut plans: Vec<Planned> = Vec::new();
+    for model in ["mobilenetv2", "resnet18", "resnet50", "yolov5n"] {
+        for dev in Device::all() {
+            plans.push(Deployment::for_model(model).quant(quant).on_device(dev)?);
+        }
+    }
 
-    let rows: Vec<Row> = parallel_cases(&cases, |_, &(model, ref dev)| {
-        let net = models::by_name(model, quant).unwrap();
-        let seq_ms = sequential_latency_ms(&net, dev);
-        let vanilla_ms = baseline::vanilla(&net, dev)
+    let rows: Vec<Row> = parallel_plans(&plans, |_, plan| {
+        let (net, dev) = (plan.network(), plan.device());
+        let seq_ms = sequential_latency_ms(net, dev);
+        let vanilla_ms = baseline::vanilla(net, dev)
             .map(|r| simulate(&r.design, dev, &SimConfig::default()).latency_ms);
-        let (autows_ms, offchip_pct, dma_pct) = match dse::run(&net, dev, &DseConfig::default()) {
-            None => (None, 0.0, 0.0),
-            Some(r) => {
-                let sim = simulate(&r.design, dev, &SimConfig::default());
-                let total: u64 = net.layers.iter().map(|l| l.weight_bits()).sum();
-                let off: f64 = r
-                    .design
-                    .cfgs
-                    .iter()
-                    .zip(&net.layers)
-                    .map(|(c, l)| c.frag.off_chip_ratio() * l.weight_bits() as f64)
-                    .sum::<f64>()
-                    / total as f64;
-                let sched = autows::schedule::BurstSchedule::from_design(&r.design, dev, 1);
-                (Some(sim.latency_ms), off * 100.0, sched.dma_utilization() * 100.0)
-            }
-        };
+        let (autows_ms, offchip_pct, dma_pct) =
+            match plan.clone().explore(&DseConfig::default()) {
+                Err(_) => (None, 0.0, 0.0),
+                Ok(explored) => {
+                    let off = explored.design().offchip_weight_frac();
+                    let sched = explored.schedule();
+                    let sim = sched.simulate(&SimConfig::default());
+                    (
+                        Some(sim.latency_ms),
+                        off * 100.0,
+                        sched.burst_schedule().dma_utilization() * 100.0,
+                    )
+                }
+            };
         Row {
-            model,
+            model: net.name.clone(),
             device: dev.name.to_string(),
             seq_ms,
             vanilla_ms,
@@ -78,12 +78,12 @@ fn main() {
     });
 
     let fmt = |v: Option<f64>| v.map_or("X".into(), |x| format!("{x:.1}"));
-    let mut last_model = "";
+    let mut last_model = String::new();
     for row in &rows {
         if !last_model.is_empty() && row.model != last_model {
             println!();
         }
-        last_model = row.model;
+        last_model = row.model.clone();
         println!(
             "{:<13}{:<11}{:>10.1}{:>10}{:>10}{:>8.1}%{:>7.0}%",
             row.model,
@@ -96,4 +96,5 @@ fn main() {
         );
     }
     println!();
+    Ok(())
 }

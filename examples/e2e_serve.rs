@@ -3,7 +3,8 @@
 //!
 //!   L1 Pallas weight-streaming kernel (inside the AOT artifact)
 //!   L2 JAX quantized forward, lowered once to HLO text
-//!   L3 Rust: DSE schedule + PJRT numerics + coordinator batching
+//!   L3 Rust: `autows::pipeline` DSE + schedule + PJRT numerics +
+//!      coordinator batching
 //!
 //! — proving all three layers compose. Reports latency/throughput; the run
 //! is recorded in EXPERIMENTS.md.
@@ -14,44 +15,37 @@
 
 use std::time::{Duration, Instant};
 
-use autows::coordinator::{BatchPolicy, PjrtEngine, Server};
-use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::coordinator::{BatchPolicy, ServerOptions};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
-use autows::runtime::Runtime;
-use autows::schedule::BurstSchedule;
+use autows::pipeline::{Deployment, EngineSpec};
+use autows::Error;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Error> {
     let artifact = format!("{}/artifacts/toy_cnn_b8.hlo.txt", env!("CARGO_MANIFEST_DIR"));
-    anyhow::ensure!(
-        std::path::Path::new(&artifact).exists(),
-        "{artifact} missing — run `make artifacts` first"
-    );
+    if !std::path::Path::new(&artifact).exists() {
+        return Err(Error::Serve(format!("{artifact} missing — run `make artifacts` first")));
+    }
 
-    // ---- L3 schedule: the accelerator design for the same network ----
-    let net = models::toy_cnn(Quant::W8A8);
-    let dev = Device::zcu102();
-    let plan = dse::run(&net, &dev, &DseConfig::default()).expect("toy CNN fits zcu102");
-    let sched = BurstSchedule::from_design(&plan.design, &dev, 8);
+    // ---- L3 pipeline: model → DSE → burst schedule → serving engine ----
+    let scheduled = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_device("zcu102")?
+        .explore(&DseConfig::default())?
+        .schedule_for_batch(8)
+        .with_engine(EngineSpec::Pjrt { artifact, input_shape: (3, 32, 32), artifact_batch: 8 });
     println!(
         "accelerator plan on {}: {:.0} fps, {} streaming layers (balanced={})",
-        dev.name,
-        plan.throughput,
-        sched.entries.len(),
-        sched.balanced()
+        scheduled.device().name,
+        scheduled.result().throughput,
+        scheduled.burst_schedule().entries.len(),
+        scheduled.burst_schedule().balanced()
     );
 
     // ---- serving loop: PJRT numerics + simulated accelerator clock ----
-    let design = plan.design;
-    let server = Server::start_with(
-        move || {
-            let rt = Runtime::cpu()?;
-            println!("PJRT platform: {}", rt.platform());
-            let model = rt.load_hlo_text(&artifact)?;
-            Ok(Box::new(PjrtEngine::new(model, design, dev, (3, 32, 32), 8)) as _)
-        },
+    let server = scheduled.serve(
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        ServerOptions::default(),
     )?;
 
     const REQUESTS: usize = 512;
@@ -61,12 +55,15 @@ fn main() -> anyhow::Result<()> {
             // deterministic synthetic "image"
             let input: Vec<f32> =
                 (0..3 * 32 * 32).map(|j| ((i * 131 + j * 7) % 255) as f32 / 255.0 - 0.5).collect();
-            server.submit(input).unwrap()
+            server.submit(input).expect("submit")
         })
         .collect();
     let mut predictions = vec![0usize; 10];
     for rx in receivers {
-        let resp = rx.recv()??;
+        let resp = rx
+            .recv()
+            .map_err(|_| Error::Serve("coordinator dropped request".into()))?
+            .map_err(|e| Error::Serve(e.to_string()))?;
         let argmax = resp
             .output
             .iter()

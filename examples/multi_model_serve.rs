@@ -1,11 +1,11 @@
 //! Multi-model serving under open-loop load: the deployment scenario.
 //!
-//! Two accelerator designs (toy CNN + SqueezeNet) are registered in the
-//! model registry, each with its own DSE schedule, batcher and admission
-//! cap. A deterministic Poisson load generator sweeps the offered rate and
-//! prints the latency-vs-load curve per model — the knee where the
-//! (simulated) accelerator saturates is the serving-side counterpart of the
-//! paper's throughput numbers.
+//! Two accelerator designs (toy CNN + SqueezeNet) are explored through the
+//! `autows::pipeline` chain and registered in the model registry, each with
+//! its own DSE schedule, batcher and admission cap. A deterministic Poisson
+//! load generator sweeps the offered rate and prints the latency-vs-load
+//! curve per model — the knee where the (simulated) accelerator saturates
+//! is the serving-side counterpart of the paper's throughput numbers.
 //!
 //! ```sh
 //! cargo run --release --example multi_model_serve
@@ -17,32 +17,33 @@ use autows::coordinator::{
     run_open_loop, ArrivalSchedule, BatchPolicy, ModelEntry, ModelRegistry, Priority,
     ServerOptions, SimOnlyEngine,
 };
-use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::Deployment;
+use autows::Error;
 
-fn main() -> anyhow::Result<()> {
-    let dev = Device::zcu102();
+fn main() -> Result<(), Error> {
     let mut reg = ModelRegistry::new();
 
     for (alias, model, q) in
         [("toy-w8", "toy", Quant::W8A8), ("squeezenet-w8", "squeezenet", Quant::W8A8)]
     {
-        let net = models::by_name(model, q).unwrap();
-        let r = dse::run(&net, &dev, &DseConfig::default())
-            .ok_or_else(|| anyhow::anyhow!("{model} infeasible on {}", dev.name))?;
+        let explored = Deployment::for_model(model)
+            .quant(q)
+            .on_device("zcu102")?
+            .explore(&DseConfig::default())?;
+        let r = explored.result();
         println!(
             "{alias}: θ={:.0} fps, {} streaming layers, mem {:.0}%",
             r.throughput,
-            r.design.streaming_layers().len(),
-            r.area.mem_utilization(&dev) * 100.0
+            r.design.streaming_count(),
+            r.area.mem_utilization(explored.device()) * 100.0
         );
-        let (c, h, w) = net.input_shape;
+        let (c, h, w) = explored.design().network.input_shape;
         let input_len = (c * h * w) as usize;
         let engine = SimOnlyEngine {
-            design: r.design,
-            device: dev.clone(),
+            design: explored.design().clone(),
+            device: explored.device().clone(),
             input_len,
             output_len: 10,
         };
@@ -54,7 +55,8 @@ fn main() -> anyhow::Result<()> {
                 options: ServerOptions { queue_cap: 256 },
             },
             move || Ok(Box::new(engine) as _),
-        )?;
+        )
+        .map_err(|e| Error::Serve(e.to_string()))?;
     }
 
     println!("\nopen-loop latency vs offered load (64 Poisson arrivals per point):");

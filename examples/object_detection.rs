@@ -1,21 +1,21 @@
 //! The paper's §V-D workload: YOLOv5n object detection on ZCU102, with the
 //! per-layer design dump showing where the PAN head's weights end up.
+//! The AutoWS design point comes from the `autows::pipeline` chain.
 //!
 //! ```sh
 //! cargo run --release --example object_detection
 //! ```
 
 use autows::baseline::{self, sequential_latency_ms};
-use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::Deployment;
 use autows::sim::{simulate, SimConfig};
 
-fn main() {
-    let net = models::yolov5n(Quant::W8A8);
-    let dev = Device::zcu102();
-    let s = net.stats();
+fn main() -> Result<(), autows::Error> {
+    let plan =
+        Deployment::for_model("yolov5n").quant(Quant::W8A8).on_device("zcu102")?;
+    let s = plan.network().stats();
     println!(
         "YOLOv5n @640x640 W8A8: {:.2}M params, {:.1}G MACs, {} layers ({} with weights)\n",
         s.params as f64 / 1e6,
@@ -24,11 +24,11 @@ fn main() {
         s.weight_layers
     );
 
-    let seq = sequential_latency_ms(&net, &dev);
-    let vanilla = baseline::vanilla(&net, &dev)
-        .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
-    let autows = dse::run(&net, &dev, &DseConfig::default()).expect("feasible");
-    let a_ms = simulate(&autows.design, &dev, &SimConfig::default()).latency_ms;
+    let seq = sequential_latency_ms(plan.network(), plan.device());
+    let vanilla = baseline::vanilla(plan.network(), plan.device())
+        .map(|r| simulate(&r.design, plan.device(), &SimConfig::default()).latency_ms);
+    let autows = plan.explore(&DseConfig::default())?.schedule();
+    let a_ms = autows.simulate(&SimConfig::default()).latency_ms;
 
     println!("layer-sequential (Vitis-AI-like): {seq:>6.1} ms   (paper: 13.7 ms)");
     match vanilla {
@@ -38,26 +38,27 @@ fn main() {
     println!("AutoWS (this work):               {a_ms:>6.1} ms   (paper:  8.7 ms)\n");
 
     // top-10 largest CEs of the AutoWS design
-    let mut layers: Vec<_> = autows
-        .design
+    let design = autows.design();
+    let mut layers: Vec<_> = design
         .network
         .layers
         .iter()
         .enumerate()
         .filter(|(_, l)| l.has_weights())
         .collect();
-    layers.sort_by_key(|(i, _)| std::cmp::Reverse(autows.design.area_of(*i).bram.total()));
+    layers.sort_by_key(|(i, _)| std::cmp::Reverse(design.area_of(*i).bram.total()));
     println!("largest CEs by BRAM:");
     for (i, l) in layers.into_iter().take(10) {
-        let c = &autows.design.cfgs[i];
+        let c = &design.cfgs[i];
         println!(
             "  {:<16} {:>4} BRAM  kp={:<2} cp={:<3} fp={:<3} off-chip {:>3.0}%",
             l.name,
-            autows.design.area_of(i).bram.total(),
+            design.area_of(i).bram.total(),
             c.kp,
             c.cp,
             c.fp,
             c.frag.off_chip_ratio() * 100.0
         );
     }
+    Ok(())
 }

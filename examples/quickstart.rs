@@ -1,53 +1,29 @@
-//! Quickstart: map a DNN onto an FPGA with AutoWS in ~20 lines.
+//! Quickstart: map a DNN onto an FPGA with the `autows::pipeline` staged
+//! builder — model → device → DSE → schedule → simulate, in ~10 lines.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
-use autows::schedule::BurstSchedule;
-use autows::sim::{simulate, SimConfig};
+use autows::pipeline::Deployment;
+use autows::sim::SimConfig;
 
-fn main() {
-    // 1. pick a network and a target device
-    let network = models::resnet18(Quant::W4A5);
-    let device = Device::zcu102();
-    println!(
-        "{}: {:.1}M params, {:.1}G MACs -> {} ({:.1} MB on-chip, {:.0} Gbps)",
-        network.name,
-        network.stats().params as f64 / 1e6,
-        network.stats().macs as f64 / 1e9,
-        device.name,
-        device.mem_mbytes(),
-        device.bandwidth_gbps()
-    );
+fn main() -> Result<(), autows::Error> {
+    // model → device → DSE (paper Algorithm 1) → burst schedule (Eq. 8-10);
+    // each stage is a distinct type, so skipping one is a compile error.
+    let scheduled = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device("zcu102")?
+        .explore(&DseConfig::default())?
+        .schedule();
 
-    // 2. run the greedy DSE (paper Algorithm 1)
-    let result = dse::run(&network, &device, &DseConfig::default())
-        .expect("AutoWS always finds a feasible design when streaming is allowed");
-    println!(
-        "design: {:.1} fps, {:.2} ms latency, {} DSPs, {} BRAMs ({:.0}% of device memory)",
-        result.throughput,
-        result.latency_ms,
-        result.area.dsp,
-        result.area.bram.total(),
-        result.area.mem_utilization(&device) * 100.0
-    );
+    // the deployment report: DSE metrics, schedule health, per-layer table
+    print!("{}", scheduled.report());
 
-    // 3. inspect the weight-streaming schedule (paper §IV-B)
-    let schedule = BurstSchedule::from_design(&result.design, &device, 1);
-    println!(
-        "streaming {} layers, write bursts balanced: {}, DMA utilization {:.0}%",
-        schedule.entries.len(),
-        schedule.balanced(),
-        schedule.dma_utilization() * 100.0
-    );
-
-    // 4. validate with the cycle-accurate simulator
-    let sim = simulate(&result.design, &device, &SimConfig::default());
+    // validate with the cycle-accurate simulator
+    let sim = scheduled.simulate(&SimConfig::default());
     println!(
         "simulated: {:.2} ms ({} DMA events, {:.1} us stalled, DMA busy {:.0}%)",
         sim.latency_ms,
@@ -55,4 +31,5 @@ fn main() {
         sim.total_stall_s * 1e6,
         sim.dma_busy_frac * 100.0
     );
+    Ok(())
 }

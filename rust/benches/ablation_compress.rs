@@ -7,9 +7,10 @@ mod harness;
 
 use autows::compress::{bits_per_weight, compress_network, CompressionSpec, Encoding};
 use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
 use autows::models;
+use autows::pipeline::Planned;
 
 fn main() {
     println!("=== Ablation: pruning + encoding co-design ===\n");
@@ -36,13 +37,14 @@ fn main() {
         let mut rows = Vec::new();
         for s in [0.0, 0.2, 0.4, 0.6, 0.8] {
             let (cnet, rep) = compress_network(&net, &CompressionSpec::pruned(s));
-            let r = dse::run(&cnet, &dev, &cfg);
+            // cached pipeline explore: repeat rounds hit the design cache
+            let r = Planned::from_parts(cnet, dev.clone()).explore(&cfg).ok();
             rows.push((
                 s,
                 rep.ratio(),
                 rep.accuracy_drop_proxy,
-                r.as_ref().map(|r| r.throughput),
-                r.as_ref().map(|r| r.latency_ms),
+                r.as_ref().map(|e| e.result().throughput),
+                r.as_ref().map(|e| e.result().latency_ms),
             ));
         }
         rows

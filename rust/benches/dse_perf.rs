@@ -1,6 +1,12 @@
 //! Performance benchmark of the DSE itself (the §Perf L3 target: a full
 //! ResNet50/U250 exploration in under one second).
 //!
+//! Model/device resolution goes through `autows::pipeline`
+//! (`Deployment` → `Planned`); the timed region is the bare engine call
+//! `dse::run` — symmetric with the `dse::reference::run` baseline and free
+//! of cache effects or per-iteration clones (`tests/pipeline_api.rs` pins
+//! that the pipeline's `.explore()` is bit-identical to this path).
+//!
 //! Modes:
 //!
 //! ```text
@@ -18,7 +24,7 @@ mod harness;
 use autows::device::Device;
 use autows::dse::{self, DseConfig};
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::Deployment;
 
 struct CaseReport {
     name: String,
@@ -97,19 +103,25 @@ fn main() {
 
     println!("=== DSE performance (L3 hot path #1) ===\n");
     let cases = [
-        ("toy/zcu102", models::toy_cnn(Quant::W8A8), Device::zcu102()),
-        ("resnet18/zcu102", models::resnet18(Quant::W4A5), Device::zcu102()),
-        ("resnet18/zedboard", models::resnet18(Quant::W4A5), Device::zedboard()),
-        ("resnet50/u250", models::resnet50(Quant::W8A8), Device::u250()),
-        ("resnet50/zcu102", models::resnet50(Quant::W4A5), Device::zcu102()),
-        ("mobilenetv2/zc706", models::mobilenet_v2(Quant::W4A4), Device::zc706()),
-        ("yolov5n/zcu102", models::yolov5n(Quant::W8A8), Device::zcu102()),
+        ("toy/zcu102", "toy", Quant::W8A8, Device::zcu102()),
+        ("resnet18/zcu102", "resnet18", Quant::W4A5, Device::zcu102()),
+        ("resnet18/zedboard", "resnet18", Quant::W4A5, Device::zedboard()),
+        ("resnet50/u250", "resnet50", Quant::W8A8, Device::u250()),
+        ("resnet50/zcu102", "resnet50", Quant::W4A5, Device::zcu102()),
+        ("mobilenetv2/zc706", "mobilenetv2", Quant::W4A4, Device::zc706()),
+        ("yolov5n/zcu102", "yolov5n", Quant::W8A8, Device::zcu102()),
     ];
     let cfg = DseConfig::default();
 
     let mut worst = std::time::Duration::ZERO;
     let mut reports = Vec::new();
-    for (name, net, dev) in cases {
+    for (name, model, quant, dev) in cases {
+        let net = Deployment::for_model(model)
+            .quant(quant)
+            .on_device(dev.clone())
+            .expect("zoo model on library device")
+            .network()
+            .clone();
         let (stats, r) = harness::bench(&format!("dse/{name}"), 10, || {
             dse::run(&net, &dev, &cfg)
         });

@@ -1,6 +1,7 @@
 //! End-to-end serving benchmark: PJRT numerics + coordinator batching,
 //! reporting request throughput and latency percentiles (the e2e driver of
-//! DESIGN.md's experiment index).
+//! DESIGN.md's experiment index). Runs on the `autows::pipeline` chain —
+//! model → DSE → schedule → serve — with the PJRT engine spec.
 //!
 //! Skips gracefully when `make artifacts` has not been run.
 
@@ -9,12 +10,10 @@ mod harness;
 
 use std::time::Duration;
 
-use autows::coordinator::{BatchPolicy, PjrtEngine, Server};
-use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::coordinator::{BatchPolicy, ServerOptions};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
-use autows::runtime::Runtime;
+use autows::pipeline::{drive_synthetic, Deployment, EngineSpec};
 
 fn main() {
     let artifact = format!("{}/artifacts/toy_cnn_b8.hlo.txt", env!("CARGO_MANIFEST_DIR"));
@@ -24,32 +23,25 @@ fn main() {
     }
 
     println!("=== End-to-end serving (toy CNN, PJRT + AutoWS schedule) ===\n");
-    let net = models::toy_cnn(Quant::W8A8);
-    let dev = Device::zcu102();
-    let design = dse::run(&net, &dev, &DseConfig::default()).unwrap().design;
-
-    let server = Server::start_with(
-        move || {
-            let rt = Runtime::cpu()?;
-            let model = rt.load_hlo_text(&artifact)?;
-            Ok(Box::new(PjrtEngine::new(model, design, dev, (3, 32, 32), 8)) as _)
-        },
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-    )
-    .expect("engine boot");
+    let scheduled = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_device("zcu102")
+        .expect("zcu102 in the device library")
+        .explore(&DseConfig::default())
+        .expect("toy CNN fits zcu102")
+        .schedule_for_batch(8)
+        .with_engine(EngineSpec::Pjrt { artifact, input_shape: (3, 32, 32), artifact_batch: 8 });
+    let input_len = scheduled.input_len();
+    let server = scheduled
+        .serve(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            ServerOptions::default(),
+        )
+        .expect("engine boot");
 
     const REQUESTS: usize = 256;
     let (stats, ()) = harness::bench("e2e/serve-256-requests", 5, || {
-        let receivers: Vec<_> = (0..REQUESTS)
-            .map(|i| {
-                let input: Vec<f32> =
-                    (0..3 * 32 * 32).map(|j| ((i * 31 + j) % 255) as f32 / 255.0).collect();
-                server.submit(input).unwrap()
-            })
-            .collect();
-        for rx in receivers {
-            rx.recv().unwrap().unwrap();
-        }
+        drive_synthetic(&server, REQUESTS, input_len).expect("all requests served");
     });
 
     let m = server.metrics();

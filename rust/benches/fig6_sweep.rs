@@ -1,27 +1,29 @@
 //! Regenerates paper Fig. 6 (resnet18-ZCU102 memory/performance trade-off)
-//! and times the per-point DSE. The sweep itself fans its points across
-//! cores via `dse::parallel_cases` (inside `mem_sweep`), so the full-sweep
-//! timing reflects the multi-core driver.
+//! through the pipeline's cache-aware sweep (`pipeline::sweep::mem_sweep`):
+//! points fan across cores via `dse::parallel_cases` and share the global
+//! design cache, so repeat timings measure the cached user-facing path
+//! (first pass pays the DSE, later passes hit the cache).
 
 #[path = "harness.rs"]
 mod harness;
 
 use autows::device::Device;
-use autows::dse::mem_sweep;
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::{sweep::mem_sweep, Deployment};
 
 fn main() {
     println!("=== Fig. 6: resnet18-ZCU102 A_mem sweep ===\n");
-    let net = models::resnet18(Quant::W4A5);
-    let dev = Device::zcu102();
+    let plan = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device(Device::zcu102())
+        .expect("resnet18 on zcu102 resolves");
 
     // time one representative point
-    harness::bench("fig6/one-point", 5, || mem_sweep(&net, &dev, &[1.0]));
+    harness::bench("fig6/one-point", 5, || mem_sweep(&plan, &[1.0]));
 
     // full sweep (printed as the figure's series)
     let scales: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
-    let (_, pts) = harness::bench("fig6/full-sweep-19pts", 2, || mem_sweep(&net, &dev, &scales));
+    let (_, pts) = harness::bench("fig6/full-sweep-19pts", 2, || mem_sweep(&plan, &scales));
 
     println!("\nA_mem   AutoWS fps   vanilla fps   off-chip%");
     for p in &pts {

@@ -5,22 +5,27 @@
 mod harness;
 
 use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::Deployment;
 use autows::report;
 
 fn main() {
     println!("=== Fig. 7: per-layer weight allocation (design d1) ===\n");
-    let net = models::resnet18(Quant::W4A5);
-    let dev = Device::zcu102();
-    let (_, result) =
-        harness::bench("fig7/dse-design-point", 5, || dse::run(&net, &dev, &DseConfig::default()));
+    let plan = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device(Device::zcu102())
+        .expect("resnet18 on zcu102 resolves");
+    let net = plan.network().clone();
+    let (_, result) = harness::bench("fig7/dse-design-point", 5, || {
+        // uncached: this bench times the DSE design point
+        plan.clone().explore_uncached(&DseConfig::default()).ok()
+    });
     let r = result.expect("resnet18 fits zcu102 with streaming");
 
     println!("\n{}", report::fig7());
 
-    let streaming = r.design.streaming_layers();
+    let streaming = r.design().streaming_layers();
     println!(
         "{} of {} weight layers partially off-chip (paper: 5 of 21)",
         streaming.len(),

@@ -1,25 +1,28 @@
 //! Ablation: DSE hyperparameters φ (unroll step) and μ (eviction block
 //! depth) — the §IV-A exploration-time vs solution-quality trade-off.
-//! The grid is fanned across cores via `dse::parallel_cases` (inside
-//! `phi_mu_sweep`); each cell is an independent DSE run.
+//! Runs through the pipeline's cache-aware grid
+//! (`pipeline::sweep::phi_mu_sweep`): cells fan across cores via
+//! `dse::parallel_cases` and share the global design cache.
 
 #[path = "harness.rs"]
 mod harness;
 
 use autows::device::Device;
-use autows::dse::phi_mu_sweep;
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::{sweep::phi_mu_sweep, Deployment};
 
 fn main() {
     println!("=== Ablation: φ/μ hyperparameter sweep (resnet18-ZCU102) ===\n");
-    let net = models::resnet18(Quant::W4A5);
-    let dev = Device::zcu102();
+    let plan = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device(Device::zcu102())
+        .expect("resnet18 on zcu102 resolves");
 
     let phis = [1u32, 2, 4, 8];
     let mus = [128u64, 512, 2048];
-    let (_, pts) =
-        harness::bench("hyperparam/phi-mu-grid-12pts", 2, || phi_mu_sweep(&net, &dev, &phis, &mus));
+    let (_, pts) = harness::bench("hyperparam/phi-mu-grid-12pts", 2, || {
+        phi_mu_sweep(&plan, &phis, &mus)
+    });
 
     println!("\n  φ     μ   iterations      fps   latency(ms)");
     for p in &pts {

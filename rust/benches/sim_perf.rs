@@ -5,16 +5,22 @@
 mod harness;
 
 use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::Deployment;
 use autows::sim::{simulate, SimConfig};
 
 fn main() {
     println!("=== Simulator performance (L3 hot path #2) ===\n");
-    let net = models::resnet18(Quant::W4A5);
     let dev = Device::zcu102();
-    let design = dse::run(&net, &dev, &DseConfig::default()).unwrap().design;
+    let design = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device(dev.clone())
+        .unwrap()
+        .explore(&DseConfig::default())
+        .expect("resnet18 fits zcu102")
+        .design()
+        .clone();
 
     let mut rate = 0.0;
     for batch in [1u64, 8, 64] {

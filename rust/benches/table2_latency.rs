@@ -1,5 +1,9 @@
 //! Regenerates paper Table II (latency across networks/devices/architectures)
 //! and times each cell's full pipeline: DSE + burst schedule + simulation.
+//! Cells run through `report::table2_cell`, which is backed by
+//! `autows::pipeline` — the repeat timings therefore measure the cached
+//! user-facing path (the first pass pays the DSE, later passes hit the
+//! design cache).
 
 #[path = "harness.rs"]
 mod harness;

@@ -6,9 +6,9 @@ mod harness;
 
 use autows::ce::{assign_memory_tech, TechOptions};
 use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::Deployment;
 
 fn main() {
     println!("=== Ablation: memory technology assignment ===\n");
@@ -20,14 +20,18 @@ fn main() {
         ("resnet50", Quant::W8A8, Device::u250()),
         ("mobilenetv2", Quant::W4A4, Device::zc706()),
     ] {
-        let net = models::by_name(model, q).unwrap();
-        let Some(r) = dse::run(&net, &dev, &DseConfig::default()) else {
+        let Ok(r) = Deployment::for_model(model)
+            .quant(q)
+            .on_device(dev.clone())
+            .expect("zoo model on library device")
+            .explore(&DseConfig::default())
+        else {
             println!("{model:<12} {:<8} INFEASIBLE", dev.name);
             continue;
         };
         let name = format!("tech_assignment/{model}-{}", dev.name);
         let (_, plan) = harness::bench(&name, 10, || {
-            assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev))
+            assign_memory_tech(r.design(), &dev, &TechOptions::for_device(&dev))
         });
         println!(
             "{model:<12} {:<8} {:>8} {:>5} {:>5} {:>6}",
@@ -42,9 +46,13 @@ fn main() {
     }
 
     // ablation: each option disabled in turn, on the U50 (URAM-rich) case
-    let net = models::resnet50(Quant::W8A8);
     let dev = Device::u50();
-    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let r = Deployment::for_model("resnet50")
+        .quant(Quant::W8A8)
+        .on_device(dev.clone())
+        .unwrap()
+        .explore(&DseConfig::default())
+        .expect("resnet50 fits u50");
     println!("\nU50 option ablation (resnet50-W8A8):");
     for (label, opts) in [
         ("all options", TechOptions::for_device(&dev)),
@@ -59,7 +67,7 @@ fn main() {
             TechOptions { use_uram: false, use_lutram: false, max_overclock: 1, ..Default::default() },
         ),
     ] {
-        let plan = assign_memory_tech(&r.design, &dev, &opts);
+        let plan = assign_memory_tech(r.design(), &dev, &opts);
         println!(
             "  {label:<14} BRAM {:>5}  URAM {:>4}  +LUTs {:>6}",
             plan.bram, plan.uram, plan.extra_luts

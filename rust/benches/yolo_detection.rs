@@ -6,20 +6,27 @@ mod harness;
 
 use autows::baseline::{self, sequential_latency_ms};
 use autows::device::Device;
-use autows::dse::{self, DseConfig};
+use autows::dse::DseConfig;
 use autows::ir::Quant;
-use autows::models;
+use autows::pipeline::Deployment;
 use autows::sim::{simulate, SimConfig};
 
 fn main() {
     println!("=== §V-D: YOLOv5n object detection on ZCU102 ===\n");
-    let net = models::yolov5n(Quant::W8A8);
     let dev = Device::zcu102();
+    let plan = Deployment::for_model("yolov5n")
+        .quant(Quant::W8A8)
+        .on_device(dev.clone())
+        .expect("yolov5n on zcu102 resolves");
+    let net = plan.network().clone();
 
     let (_, seq) = harness::bench("yolo/sequential", 20, || sequential_latency_ms(&net, &dev));
     let (_, autows) = harness::bench("yolo/autows-dse+sim", 5, || {
-        dse::run(&net, &dev, &DseConfig::default())
-            .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms)
+        // uncached: this bench times the DSE itself
+        plan.clone()
+            .explore_uncached(&DseConfig::default())
+            .ok()
+            .map(|e| e.schedule().simulate(&SimConfig::default()).latency_ms)
     });
     let (_, vanilla) = harness::bench("yolo/vanilla-dse+sim", 5, || {
         baseline::vanilla(&net, &dev)

@@ -98,30 +98,50 @@ fn invalid(msg: impl Into<String>) -> ConfigError {
     ConfigError::Invalid(msg.into())
 }
 
+/// Known keys per section: a typo'd key silently falling back to its
+/// default is the worst failure mode a config system can have, so anything
+/// not listed here is rejected with the expected alternatives.
+const KNOWN_KEYS: [(&str, &[&str]); 6] = [
+    ("", &["title"]),
+    ("model", &["name", "file", "quant"]),
+    ("device", &["name", "mem_scale", "mem_sweep"]),
+    ("dse", &["phi", "mu", "batch", "vanilla", "bw_margin", "warm_start"]),
+    ("sim", &["batch"]),
+    ("serve", &["artifact", "requests", "max_batch", "max_wait_ms"]),
+];
+
 impl RunSpec {
     /// Parse and validate a run spec from config text.
     pub fn from_str(text: &str) -> Result<RunSpec, ConfigError> {
         let doc = Document::parse(text)?;
 
-        // Reject unknown sections early: a typo'd `[dze]` silently falling
-        // back to defaults is the worst failure mode a config system can have.
-        const KNOWN: [&str; 6] = ["", "model", "device", "dse", "sim", "serve"];
+        // Reject unknown sections and keys early (a typo'd `[dze]` or
+        // `phy = 2` must not silently run with defaults).
         for s in doc.sections() {
-            if !KNOWN.contains(&s) {
+            let Some((_, keys)) = KNOWN_KEYS.iter().find(|(name, _)| *name == s) else {
                 return Err(invalid(format!("unknown section `[{s}]`")));
+            };
+            for k in doc.keys(s) {
+                if !keys.contains(&k) {
+                    let path = if s.is_empty() { k.to_string() } else { format!("{s}.{k}") };
+                    return Err(invalid(format!(
+                        "unknown key `{path}` (expected one of: {})",
+                        keys.join(", ")
+                    )));
+                }
             }
         }
 
-        let title = doc.str_or("", "title", "untitled run").to_string();
+        let title = doc.try_str_or("", "title", "untitled run").map_err(invalid)?.to_string();
 
         // [model]
         let model = match (doc.get("model", "name"), doc.get("model", "file")) {
-            (Some(v), None) => {
-                let name = v.as_str().ok_or_else(|| invalid("model.name must be a string"))?;
+            (Some(_), None) => {
+                let name = doc.try_str_or("model", "name", "").map_err(invalid)?;
                 ModelSource::Zoo(name.to_string())
             }
-            (None, Some(v)) => {
-                let path = v.as_str().ok_or_else(|| invalid("model.file must be a string"))?;
+            (None, Some(_)) => {
+                let path = doc.try_str_or("model", "file", "").map_err(invalid)?;
                 ModelSource::File(path.to_string())
             }
             (Some(_), Some(_)) => {
@@ -129,15 +149,15 @@ impl RunSpec {
             }
             (None, None) => return Err(invalid("missing [model] name or file")),
         };
-        let quant_label = doc.str_or("model", "quant", "w8a8");
+        let quant_label = doc.try_str_or("model", "quant", "w8a8").map_err(invalid)?;
         let quant = Quant::parse(quant_label)
             .ok_or_else(|| invalid(format!("bad model.quant `{quant_label}`")))?;
 
         // [device]
-        let dev_name = doc.str_or("device", "name", "zcu102");
+        let dev_name = doc.try_str_or("device", "name", "zcu102").map_err(invalid)?;
         let mut device = Device::by_name(dev_name)
             .ok_or_else(|| invalid(format!("unknown device `{dev_name}`")))?;
-        let mem_scale = doc.float_or("device", "mem_scale", 1.0);
+        let mem_scale = doc.try_float_or("device", "mem_scale", 1.0).map_err(invalid)?;
         if !(0.01..=10.0).contains(&mem_scale) {
             return Err(invalid(format!("device.mem_scale {mem_scale} out of range (0.01..10)")));
         }
@@ -146,9 +166,9 @@ impl RunSpec {
         }
 
         // [dse]
-        let phi = doc.int_or("dse", "phi", 1);
-        let mu = doc.int_or("dse", "mu", 512);
-        let bw_margin = doc.float_or("dse", "bw_margin", 0.90);
+        let phi = doc.try_int_or("dse", "phi", 1).map_err(invalid)?;
+        let mu = doc.try_int_or("dse", "mu", 512).map_err(invalid)?;
+        let bw_margin = doc.try_float_or("dse", "bw_margin", 0.90).map_err(invalid)?;
         if phi < 1 || phi > 1024 {
             return Err(invalid(format!("dse.phi {phi} out of range (1..1024)")));
         }
@@ -158,24 +178,25 @@ impl RunSpec {
         if !(0.1..=1.0).contains(&bw_margin) {
             return Err(invalid(format!("dse.bw_margin {bw_margin} out of range (0.1..1.0)")));
         }
-        let dse = DseConfig {
-            phi: phi as u32,
-            mu: mu as u64,
-            batch: doc.int_or("dse", "batch", 1).max(1) as u64,
-            allow_streaming: !doc.bool_or("dse", "vanilla", false),
-            bw_margin,
-            warm_start: doc.bool_or("dse", "warm_start", false),
-        };
+        let dse = DseConfig::default()
+            .with_phi(phi as u32)
+            .with_mu(mu as u64)
+            .with_batch(doc.try_int_or("dse", "batch", 1).map_err(invalid)?.max(1) as u64)
+            .with_streaming(!doc.try_bool_or("dse", "vanilla", false).map_err(invalid)?)
+            .with_bw_margin(bw_margin)
+            .with_warm_start(doc.try_bool_or("dse", "warm_start", false).map_err(invalid)?);
 
         // [sim]
-        let sim_batch = doc.int_or("sim", "batch", 1).max(1) as u64;
+        let sim_batch = doc.try_int_or("sim", "batch", 1).map_err(invalid)?.max(1) as u64;
 
         // [serve]
         let serve = if doc.has_section("serve") {
-            let artifact = doc.str_or("serve", "artifact", "artifacts/toy_cnn_b8.hlo.txt");
-            let requests = doc.int_or("serve", "requests", 64);
-            let max_batch = doc.int_or("serve", "max_batch", 8);
-            let max_wait_ms = doc.int_or("serve", "max_wait_ms", 2);
+            let artifact = doc
+                .try_str_or("serve", "artifact", "artifacts/toy_cnn_b8.hlo.txt")
+                .map_err(invalid)?;
+            let requests = doc.try_int_or("serve", "requests", 64).map_err(invalid)?;
+            let max_batch = doc.try_int_or("serve", "max_batch", 8).map_err(invalid)?;
+            let max_wait_ms = doc.try_int_or("serve", "max_wait_ms", 2).map_err(invalid)?;
             if requests < 1 || max_batch < 1 || max_wait_ms < 0 {
                 return Err(invalid("serve: requests/max_batch must be >= 1, max_wait_ms >= 0"));
             }
@@ -230,6 +251,110 @@ impl RunSpec {
                     .map_err(|e| invalid(format!("{path}: {e}")))
             }
         }
+    }
+
+    /// Resolve the spec's model and (budget-scaled) device into a pipeline
+    /// [`Planned`](crate::pipeline::Planned) stage.
+    pub fn plan(&self) -> Result<crate::pipeline::Planned, crate::Error> {
+        let dep = match &self.model {
+            ModelSource::Zoo(name) => crate::pipeline::Deployment::for_model(name),
+            ModelSource::File(path) => crate::pipeline::Deployment::for_net_file(path),
+        };
+        dep.quant(self.quant).on_device(self.device.clone())
+    }
+
+    /// Execute the full run this spec describes — DSE, simulation, the
+    /// optional memory sweep, the optional serving session — printing the
+    /// launcher's progress report to stdout. This is `autows run`.
+    pub fn execute(&self) -> Result<(), crate::Error> {
+        use crate::coordinator::{BatchPolicy, ServerOptions};
+        use crate::pipeline::{self, EngineSpec};
+        use crate::sim::SimConfig;
+
+        let plan = self.plan()?;
+        println!("== {} ==", self.title);
+        let s = plan.network().stats();
+        println!(
+            "model {} ({}): {} layers, {:.2}M params, {:.2}G MACs on {}",
+            plan.network().name,
+            self.quant,
+            s.total_layers,
+            s.params as f64 / 1e6,
+            s.macs as f64 / 1e9,
+            self.device.name
+        );
+
+        // DSE (through the design cache; sweep/serve below reuse the entry)
+        let explored = match plan.clone().explore(&self.dse) {
+            Err(e) if e.is_infeasible() => {
+                println!("DSE: INFEASIBLE (vanilla={})", !self.dse.allow_streaming);
+                return Ok(());
+            }
+            other => other?,
+        };
+        let r = explored.result();
+        println!(
+            "DSE: θ={:.1} fps, latency={:.2} ms, mem {:.0}%, bw {:.2}/{:.2} Gbps, {} streaming layers",
+            r.throughput,
+            r.latency_ms,
+            r.area.mem_utilization(&self.device) * 100.0,
+            r.bandwidth_bps / 1e9,
+            self.device.bandwidth_gbps(),
+            r.design.streaming_count()
+        );
+
+        // Simulation
+        let scheduled = explored.schedule_for_batch(self.sim_batch);
+        let sim = scheduled.simulate(&SimConfig { batch: self.sim_batch, ..Default::default() });
+        println!(
+            "sim (batch={}): makespan={:.3} ms, stalls={:.1} us, DMA busy {:.0}%",
+            self.sim_batch,
+            sim.makespan_s * 1e3,
+            sim.total_stall_s * 1e6,
+            sim.dma_busy_frac * 100.0
+        );
+
+        // Optional memory sweep (cache-aware, fanned across cores)
+        if !self.mem_sweep.is_empty() {
+            println!("mem sweep (A_mem scale -> fps):");
+            for (scale, fps) in pipeline::sweep::mem_sweep_points(&plan, &self.mem_sweep, &self.dse)
+            {
+                match fps {
+                    None => println!("  {scale:>5.2}x  infeasible"),
+                    Some(fps) => println!("  {scale:>5.2}x  {fps:.1} fps"),
+                }
+            }
+        }
+
+        // Optional serving session
+        if let Some(serve) = &self.serve {
+            println!("serving {} requests (max batch {}):", serve.requests, serve.max_batch);
+            // the bundled artifacts are lowered for the toy CNN's 3x32x32
+            // input; the engine pads/validates against this shape
+            let (c, h, w) = (3usize, 32, 32);
+            let server = scheduled
+                .clone()
+                .with_engine(EngineSpec::Pjrt {
+                    artifact: serve.artifact.clone(),
+                    input_shape: (c, h, w),
+                    artifact_batch: serve.max_batch,
+                })
+                .serve(
+                    BatchPolicy {
+                        max_batch: serve.max_batch,
+                        max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
+                    },
+                    ServerOptions::default(),
+                )?;
+            crate::pipeline::drive_synthetic(&server, serve.requests, c * h * w)?;
+            let m = server.metrics();
+            println!(
+                "  throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+                m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
+            );
+            server.shutdown();
+        }
+        Ok(())
     }
 }
 
@@ -318,6 +443,40 @@ max_batch = 4
     fn custom_quant_pairs_accepted() {
         let s = RunSpec::from_str("[model]\nname = \"toy\"\nquant = \"w2a8\"").unwrap();
         assert_eq!(s.quant, Quant { w_bits: 2, a_bits: 8 });
+    }
+
+    #[test]
+    fn wrong_type_names_key_and_expected_type() {
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[dse]\nphi = \"two\"").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("`dse.phi`"), "{msg}");
+        assert!(msg.contains("expected integer"), "{msg}");
+        assert!(msg.contains("string"), "{msg}");
+
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[dse]\nvanilla = 1").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("`dse.vanilla`") && msg.contains("expected boolean"), "{msg}");
+
+        let e = RunSpec::from_str("[model]\nname = 3").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("`model.name`") && msg.contains("expected string"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_key_rejected_with_alternatives() {
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[dse]\nphy = 2").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("unknown key `dse.phy`"), "{msg}");
+        assert!(msg.contains("phi"), "alternatives must be listed: {msg}");
+    }
+
+    #[test]
+    fn plan_resolves_model_and_device() {
+        let s = RunSpec::from_str("[model]\nname = \"toy\"\n[device]\nname = \"zedboard\"")
+            .unwrap();
+        let plan = s.plan().unwrap();
+        assert_eq!(plan.network().name, "toy_cnn");
+        assert_eq!(plan.device().name, "zedboard");
     }
 
     #[test]

@@ -30,6 +30,17 @@ pub enum Value {
 }
 
 impl Value {
+    /// Human-readable type name for error messages.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+            Value::Array(_) => "array",
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -201,11 +212,54 @@ impl Document {
         self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
     }
 
-    /// Typed accessor that errors (instead of defaulting) when the key exists
-    /// with the wrong type — silent fallback on a typo'd type is how config
-    /// bugs hide.
-    pub fn require_type_consistency(&self) -> Result<(), String> {
-        Ok(()) // types are enforced at parse time; kept for API symmetry
+    // --- checked typed accessors ------------------------------------------
+    //
+    // Like the `*_or` family, but a key that exists with the WRONG type is
+    // an error naming the key, the expected type and what was found —
+    // silent fallback to the default on a typo'd type is how config bugs
+    // hide.
+
+    fn expect<'a, T>(
+        &'a self,
+        section: &str,
+        key: &str,
+        want: &str,
+        convert: impl Fn(&'a Value) -> Option<T>,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => convert(v).ok_or_else(|| {
+                let path = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                format!("`{path}`: expected {want}, found {} {v}", v.type_name())
+            }),
+        }
+    }
+
+    pub fn try_str_or<'a>(
+        &'a self,
+        section: &str,
+        key: &str,
+        default: &'a str,
+    ) -> Result<&'a str, String> {
+        self.expect(section, key, "string", Value::as_str, default)
+    }
+
+    pub fn try_int_or(&self, section: &str, key: &str, default: i64) -> Result<i64, String> {
+        self.expect(section, key, "integer", Value::as_int, default)
+    }
+
+    /// Integer literals are accepted as floats (`mu = 512` is a valid float).
+    pub fn try_float_or(&self, section: &str, key: &str, default: f64) -> Result<f64, String> {
+        self.expect(section, key, "number", Value::as_float, default)
+    }
+
+    pub fn try_bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool, String> {
+        self.expect(section, key, "boolean", Value::as_bool, default)
     }
 }
 

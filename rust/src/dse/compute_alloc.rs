@@ -178,7 +178,7 @@ mod tests {
         let net = models::toy_cnn(Quant::W8A8);
         let dev = Device::u250();
         let cfg_cold = DseConfig::default();
-        let cfg_warm = DseConfig { warm_start: true, ..Default::default() };
+        let cfg_warm = DseConfig::warm();
         let mut cold = Design::initialize(&net, &dev);
         let mut warm = Design::initialize(&net, &dev);
         assert!(allocate_memory(&mut cold, &dev, &cfg_cold));

@@ -395,6 +395,29 @@ impl Design {
             .filter_map(|(i, &s)| if s { Some(i) } else { None })
     }
 
+    /// Fraction of the network's weight bits held off-chip (the y2-axis of
+    /// Fig. 6), derived from the per-layer fragmentation geometry.
+    pub fn offchip_weight_frac(&self) -> f64 {
+        let total: u64 = self.network.layers.iter().map(|l| l.weight_bits()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let off: f64 = self
+            .network
+            .layers
+            .iter()
+            .zip(&self.cfgs)
+            .map(|(l, c)| {
+                if l.has_weights() {
+                    c.frag.off_chip_ratio() * l.weight_bits() as f64
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        off / total as f64
+    }
+
     /// Weight-reuse repetition count `r_l = b·ĥ·ŵ·n` (Eq. 3).
     pub fn repeats(&self, i: usize, batch: u64) -> u64 {
         let l = &self.network.layers[i];

@@ -89,12 +89,51 @@ impl Default for DseConfig {
 
 impl DseConfig {
     pub fn vanilla() -> Self {
-        DseConfig { allow_streaming: false, ..Default::default() }
+        DseConfig::default().with_streaming(false)
     }
 
     /// Default configuration with warm-started memory re-fits.
     pub fn warm() -> Self {
-        DseConfig { warm_start: true, ..Default::default() }
+        DseConfig::default().with_warm_start(true)
+    }
+
+    // Builder-style setters (the config is `Copy`, so these chain freely):
+    // `DseConfig::default().with_phi(2).with_mu(256)`.
+
+    /// Set the unroll step size `φ`.
+    pub fn with_phi(mut self, phi: u32) -> Self {
+        self.phi = phi;
+        self
+    }
+
+    /// Set the eviction block depth `µ` (words).
+    pub fn with_mu(mut self, mu: u64) -> Self {
+        self.mu = mu;
+        self
+    }
+
+    /// Set the batch size `b` used for weight-reuse accounting (Eq. 3).
+    pub fn with_batch(mut self, batch: u64) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Allow (AutoWS) or forbid (vanilla baseline) weight streaming.
+    pub fn with_streaming(mut self, allow: bool) -> Self {
+        self.allow_streaming = allow;
+        self
+    }
+
+    /// Set the planning fraction of the device bandwidth.
+    pub fn with_bw_margin(mut self, margin: f64) -> Self {
+        self.bw_margin = margin;
+        self
+    }
+
+    /// Enable/disable warm-started memory re-fits.
+    pub fn with_warm_start(mut self, warm: bool) -> Self {
+        self.warm_start = warm;
+        self
     }
 }
 

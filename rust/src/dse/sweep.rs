@@ -4,7 +4,6 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
-use super::{run, DseConfig};
 use crate::device::Device;
 use crate::ir::Network;
 
@@ -72,43 +71,21 @@ pub struct SweepPoint {
 
 /// Run the Fig. 6 sweep: `scales` are multiples of the device's on-chip
 /// memory (e.g. 0.25 ..= 2.0), with LUT/DSP/bandwidth pinned to the
-/// reference device. Points are explored in parallel via
-/// [`parallel_cases`]; every point is an independent DSE pair, so the
-/// results are identical to the sequential sweep.
+/// reference device. Convenience wrapper over
+/// [`crate::pipeline::sweep::mem_sweep`] — points fan across cores via
+/// [`parallel_cases`] and share the pipeline design cache; results are
+/// identical to the sequential uncached sweep (DSE is deterministic).
 pub fn mem_sweep(network: &Network, device: &Device, scales: &[f64]) -> Vec<SweepPoint> {
-    parallel_cases(scales, |_, &s| {
-        let dev = device.with_mem_scale(s);
-        let autows = run(network, &dev, &DseConfig::default());
-        let vanilla = run(network, &dev, &DseConfig::vanilla());
-        let frac = autows.as_ref().map_or(0.0, |r| {
-            let total: u64 = network.layers.iter().map(|l| l.weight_bits()).sum();
-            let off: f64 = r
-                .design
-                .cfgs
-                .iter()
-                .zip(&network.layers)
-                .map(|(c, l)| {
-                    if l.has_weights() {
-                        c.frag.off_chip_ratio() * l.weight_bits() as f64
-                    } else {
-                        0.0
-                    }
-                })
-                .sum();
-            off / total as f64
-        });
-        SweepPoint {
-            mem_scale: s,
-            autows_fps: autows.map(|r| r.throughput),
-            vanilla_fps: vanilla.map(|r| r.throughput),
-            autows_offchip_frac: frac,
-        }
-    })
+    crate::pipeline::sweep::mem_sweep(
+        &crate::pipeline::Planned::from_parts(network.clone(), device.clone()),
+        scales,
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dse::{run, DseConfig};
     use crate::ir::Quant;
     use crate::models;
 

@@ -1,0 +1,83 @@
+//! Crate-level error type for the public API surface.
+//!
+//! The pipeline ([`crate::pipeline`]), the launcher config
+//! ([`crate::config`]) and the CLI all report failures through this enum
+//! instead of stringly `anyhow!` errors, so callers can match on the
+//! failure class (an infeasible design point is routine in a sweep; an
+//! unknown device name is a caller bug).
+
+use std::fmt;
+
+use crate::config::ConfigError;
+
+/// Everything that can go wrong between naming a model and serving it.
+#[derive(Debug)]
+pub enum Error {
+    /// Model name not in the zoo ([`crate::models::by_name`]).
+    UnknownModel(String),
+    /// Device name not in the library ([`crate::device::Device::by_name`]).
+    UnknownDevice(String),
+    /// Quantization label that [`crate::ir::Quant::parse`] rejects.
+    UnknownQuant(String),
+    /// Filesystem failure with the offending path.
+    Io { path: String, source: std::io::Error },
+    /// `.net` description parse failure with the offending path.
+    NetParse { path: String, source: crate::ir::NetParseError },
+    /// Design-checkpoint parse failure ([`crate::dse::parse_design`]).
+    DesignFormat(String),
+    /// Run-configuration failure (TOML parse or semantic validation).
+    Config(ConfigError),
+    /// The DSE found no feasible design for this (model, device) pair.
+    /// Routine for vanilla baselines on small devices (paper Table II "X").
+    Infeasible { model: String, device: String, vanilla: bool },
+    /// Serving-stack failure (engine boot, artifact load, submit/recv).
+    Serve(String),
+    /// CLI usage error (unknown command/flag, unparsable value).
+    Usage(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::UnknownModel(name) => write!(f, "unknown model `{name}`"),
+            Error::UnknownDevice(name) => write!(f, "unknown device `{name}`"),
+            Error::UnknownQuant(label) => {
+                write!(f, "unknown quantization `{label}` (w4a4|w4a5|w8a8|f32|w<N>a<M>)")
+            }
+            Error::Io { path, source } => write!(f, "`{path}`: {source}"),
+            Error::NetParse { path, source } => write!(f, "{path}: {source}"),
+            Error::DesignFormat(msg) => write!(f, "design checkpoint: {msg}"),
+            Error::Config(e) => write!(f, "{e}"),
+            Error::Infeasible { model, device, vanilla } => {
+                write!(f, "no feasible design for {model} on {device} (vanilla={vanilla})")
+            }
+            Error::Serve(msg) => write!(f, "serving: {msg}"),
+            Error::Usage(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            Error::NetParse { source, .. } => Some(source),
+            Error::Config(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ConfigError> for Error {
+    fn from(e: ConfigError) -> Self {
+        Error::Config(e)
+    }
+}
+
+impl Error {
+    /// True when the failure is a routine infeasibility (sweeps skip these
+    /// points rather than aborting).
+    pub fn is_infeasible(&self) -> bool {
+        matches!(self, Error::Infeasible { .. })
+    }
+}

@@ -3,7 +3,39 @@
 //! Reproduction of Yu & Bouganis, *"AutoWS: Automate Weights Streaming in
 //! Layer-wise Pipelined DNN Accelerators"* (2023).
 //!
-//! The crate is organized bottom-up:
+//! ## Quickstart: the deployment pipeline
+//!
+//! The front door is [`pipeline`] — one typed, staged builder from model
+//! name to served requests. Each stage returns a distinct type, so an
+//! out-of-order pipeline is a compile error; exploration is memoized in a
+//! process-wide content-keyed design cache, so sweeps and repeated serve
+//! runs skip redundant DSE work:
+//!
+//! ```no_run
+//! use autows::coordinator::{BatchPolicy, ServerOptions};
+//! use autows::dse::DseConfig;
+//! use autows::ir::Quant;
+//! use autows::pipeline::Deployment;
+//!
+//! fn main() -> Result<(), autows::Error> {
+//!     let scheduled = Deployment::for_model("resnet18")   // model ingest
+//!         .quant(Quant::W4A5)                             // quantization
+//!         .on_device("zcu102")?                           // -> Planned
+//!         .explore(&DseConfig::default())?                // -> Explored (Algorithm 1, cached)
+//!         .schedule();                                    // -> Scheduled (Eq. 8-10)
+//!     print!("{}", scheduled.report());                   // terminal: report
+//!     let server = scheduled.serve(BatchPolicy::default(), ServerOptions::default())?;
+//!     server.infer(vec![0.5; scheduled.input_len()]).expect("served"); // terminal: serve
+//!     server.shutdown();
+//!     Ok(())
+//! }
+//! ```
+//!
+//! Failures surface as the crate-level [`Error`] enum (unknown model/device,
+//! infeasible design point, config or serving problems) — match on the
+//! class instead of string-probing.
+//!
+//! ## Layers (bottom-up)
 //!
 //! - [`ir`] — DNN graph intermediate representation (layers, shapes, bitwidths).
 //! - [`models`] — model zoo builders (MobileNetV2, ResNet18/50, YOLOv5n, VGG16).
@@ -20,8 +52,13 @@
 //!   executes the actual DNN numerics (Python never on the request path).
 //! - [`coordinator`] — serving loop: request batching, schedule-aware
 //!   dispatch, metrics.
+//! - [`pipeline`] — the staged deployment builder tying all of the above
+//!   together, with the content-keyed design cache and cache-aware sweeps.
+//! - [`config`] — `autows run` launcher specs ([`config::RunSpec`]) parsed
+//!   from a TOML subset, executed through the pipeline.
 //! - [`report`] — regenerates every table and figure of the paper's
-//!   evaluation section.
+//!   evaluation section (also pipeline-backed, so figures sharing design
+//!   points share the cache).
 
 pub mod baseline;
 pub mod ce;
@@ -30,8 +67,10 @@ pub mod config;
 pub mod coordinator;
 pub mod device;
 pub mod dse;
+mod error;
 pub mod ir;
 pub mod models;
+pub mod pipeline;
 pub mod report;
 pub mod runtime;
 pub mod schedule;
@@ -41,4 +80,6 @@ pub mod util;
 pub use ce::{CeConfig, CeModel};
 pub use device::Device;
 pub use dse::{DseConfig, DseResult};
+pub use error::Error;
 pub use ir::{Layer, Network, OpKind};
+pub use pipeline::Deployment;

@@ -1,58 +1,89 @@
-//! AutoWS command-line interface (self-contained arg parsing — this build
-//! is fully offline).
+//! AutoWS command-line interface — a thin shell over [`autows::pipeline`]
+//! (self-contained arg parsing; this build is fully offline).
 //!
 //! ```text
 //! autows report <table1|tech|compress|strategies|table2|table3|fig5|fig6|fig7|yolo|all>
 //! autows dse      [--model M] [--device D] [--quant Q] [--vanilla] [--phi N] [--mu N]
 //! autows simulate [--model M] [--device D] [--quant Q] [--batch N]
 //! autows serve    [--artifact PATH] [--requests N] [--max-batch N] [--device D]
+//! autows run      --config configs/resnet18_zcu102.toml
 //! ```
 
-use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
 
 use autows::config::RunSpec;
-use autows::coordinator::{BatchPolicy, PjrtEngine, Server};
-use autows::device::Device;
+use autows::coordinator::{BatchPolicy, ServerOptions};
 use autows::dse::{self, DseConfig};
 use autows::ir::Quant;
-use autows::runtime::Runtime;
-use autows::schedule::BurstSchedule;
-use autows::sim::{simulate, SimConfig};
-use autows::{models, report};
+use autows::pipeline::{drive_synthetic, Deployment, EngineSpec};
+use autows::report;
+use autows::sim::SimConfig;
+use autows::Error;
 
-/// Minimal `--key value` / `--flag` parser.
+/// One recognized flag: its name and whether it consumes a value.
+struct FlagSpec {
+    name: &'static str,
+    takes_value: bool,
+}
+
+const fn val(name: &'static str) -> FlagSpec {
+    FlagSpec { name, takes_value: true }
+}
+
+const fn bool_flag(name: &'static str) -> FlagSpec {
+    FlagSpec { name, takes_value: false }
+}
+
+/// Strict `--key value` / `--flag` parser: flags not in `spec` are usage
+/// errors (a typo'd `--modle` must not silently run with defaults).
 struct Args {
     positional: Vec<String>,
-    flags: std::collections::HashMap<String, String>,
+    flags: HashMap<String, String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Args {
+    fn parse(cmd: &str, argv: &[String], spec: &[FlagSpec]) -> Result<Args, Error> {
         let mut positional = Vec::new();
-        let mut flags = std::collections::HashMap::new();
-        let mut it = argv.iter().peekable();
+        let mut flags = HashMap::new();
+        let mut it = argv.iter();
         while let Some(a) = it.next() {
-            if let Some(key) = a.strip_prefix("--") {
-                let val = match it.peek() {
-                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
-                    _ => "true".to_string(),
-                };
-                flags.insert(key.to_string(), val);
-            } else {
+            let Some(key) = a.strip_prefix("--") else {
                 positional.push(a.clone());
-            }
+                continue;
+            };
+            let Some(f) = spec.iter().find(|f| f.name == key) else {
+                let known: Vec<String> =
+                    spec.iter().map(|f| format!("--{}", f.name)).collect();
+                return Err(Error::Usage(format!(
+                    "unknown flag `--{key}` for `autows {cmd}` (recognized: {})\n{USAGE}",
+                    if known.is_empty() { "none".to_string() } else { known.join(" ") }
+                )));
+            };
+            let value = if f.takes_value {
+                // a following `--flag` is not a value — refuse instead of
+                // silently swallowing the next flag
+                match it.next() {
+                    Some(v) if !v.starts_with("--") => v.clone(),
+                    _ => return Err(Error::Usage(format!("--{key} requires a value"))),
+                }
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), value);
         }
-        Args { positional, flags }
+        Ok(Args { positional, flags })
     }
 
     fn get(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
-    fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+    fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, Error> {
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: cannot parse `{v}`")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{key}: cannot parse `{v}`"))),
         }
     }
 
@@ -61,46 +92,70 @@ impl Args {
     }
 }
 
-fn parse_quant(s: &str) -> Result<Quant> {
-    match s.to_ascii_lowercase().as_str() {
-        "w4a4" => Ok(Quant::W4A4),
-        "w4a5" => Ok(Quant::W4A5),
-        "w8a8" => Ok(Quant::W8A8),
-        "f32" => Ok(Quant::F32),
-        _ => bail!("unknown quantization `{s}` (w4a4|w4a5|w8a8|f32)"),
-    }
+fn parse_quant(s: &str) -> Result<Quant, Error> {
+    Quant::parse(s).ok_or_else(|| Error::UnknownQuant(s.to_string()))
 }
 
 const USAGE: &str = "usage: autows <report|dse|simulate|serve|run> [options]
   report <table1|tech|compress|strategies|table2|table3|fig5|fig6|fig7|yolo|all>
   dse      --model resnet18 --device zcu102 --quant w4a5 [--vanilla] [--phi 1] [--mu 512]
-  simulate --model resnet18 --device zcu102 --quant w4a5 [--batch 1]
+           [--warm] [--save PATH] [--tech]
+  simulate --model resnet18 --device zcu102 --quant w4a5 [--batch 1] [--design PATH]
   serve    --artifact artifacts/toy_cnn_b8.hlo.txt [--requests 64] [--max-batch 8] [--device zcu102]
   run      --config configs/resnet18_zcu102.toml   # full pipeline from a config file";
 
-fn main() -> Result<()> {
+fn main() {
+    if let Err(e) = run_cli() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run_cli() -> Result<(), Error> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         println!("{USAGE}");
         return Ok(());
     }
     let cmd = argv[0].clone();
-    let args = Args::parse(&argv[1..]);
+    let rest = &argv[1..];
     match cmd.as_str() {
-        "report" => cmd_report(&args),
-        "dse" => cmd_dse(&args),
-        "simulate" => cmd_simulate(&args),
-        "serve" => cmd_serve(&args),
-        "run" => cmd_run(&args),
+        "report" => cmd_report(&Args::parse("report", rest, &[])?),
+        "dse" => cmd_dse(&Args::parse(
+            "dse",
+            rest,
+            &[
+                val("model"),
+                val("device"),
+                val("quant"),
+                val("phi"),
+                val("mu"),
+                val("save"),
+                bool_flag("vanilla"),
+                bool_flag("warm"),
+                bool_flag("tech"),
+            ],
+        )?),
+        "simulate" => cmd_simulate(&Args::parse(
+            "simulate",
+            rest,
+            &[val("model"), val("device"), val("quant"), val("batch"), val("design")],
+        )?),
+        "serve" => cmd_serve(&Args::parse(
+            "serve",
+            rest,
+            &[val("artifact"), val("requests"), val("max-batch"), val("device")],
+        )?),
+        "run" => cmd_run(&Args::parse("run", rest, &[val("config")])?),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
         }
-        other => bail!("unknown command `{other}`\n{USAGE}"),
+        other => Err(Error::Usage(format!("unknown command `{other}`\n{USAGE}"))),
     }
 }
 
-fn cmd_report(args: &Args) -> Result<()> {
+fn cmd_report(args: &Args) -> Result<(), Error> {
     let which = args.positional.first().map(String::as_str).unwrap_or("all");
     let out = match which {
         "table1" => report::table1(),
@@ -132,114 +187,84 @@ fn cmd_report(args: &Args) -> Result<()> {
             report::strategies(),
         ]
         .join("\n"),
-        other => bail!("unknown report `{other}`"),
+        other => return Err(Error::Usage(format!("unknown report `{other}`"))),
     };
     println!("{out}");
     Ok(())
 }
 
-fn cmd_dse(args: &Args) -> Result<()> {
+fn cmd_dse(args: &Args) -> Result<(), Error> {
     let model = args.get("model", "resnet18");
     let device = args.get("device", "zcu102");
-    let q = parse_quant(&args.get("quant", "w4a5"))?;
-    let vanilla = args.has("vanilla");
-    let cfg = DseConfig {
-        phi: args.get_num("phi", 1u32)?,
-        mu: args.get_num("mu", 512u64)?,
-        allow_streaming: !vanilla,
-        warm_start: args.has("warm"),
-        ..Default::default()
+    let quant = parse_quant(&args.get("quant", "w4a5"))?;
+    let cfg = DseConfig::default()
+        .with_phi(args.get_num("phi", 1u32)?)
+        .with_mu(args.get_num("mu", 512u64)?)
+        .with_streaming(!args.has("vanilla"))
+        .with_warm_start(args.has("warm"));
+
+    let plan = Deployment::for_model(&model).quant(quant).on_device(device.as_str())?;
+    let scheduled = match plan.explore(&cfg) {
+        Err(e) if e.is_infeasible() => {
+            println!("INFEASIBLE: {model} does not fit {device} (vanilla={})", args.has("vanilla"));
+            return Ok(());
+        }
+        other => other?.schedule(),
     };
-    let net = models::by_name(&model, q).ok_or_else(|| anyhow!("unknown model {model}"))?;
-    let dev = Device::by_name(&device).ok_or_else(|| anyhow!("unknown device {device}"))?;
-    match dse::run(&net, &dev, &cfg) {
-        None => println!("INFEASIBLE: {model} does not fit {device} (vanilla={vanilla})"),
-        Some(r) => {
-            println!(
-                "{model}-{q} on {device}: θ={:.1} fps, latency={:.2} ms, iterations={}",
-                r.throughput, r.latency_ms, r.iterations
-            );
-            println!(
-                "area: dsp={} lut={} bram={} ({:.0}% mem)  bandwidth={:.2}/{:.2} Gbps",
-                r.area.dsp,
-                r.area.lut,
-                r.area.bram.total(),
-                r.area.mem_utilization(&dev) * 100.0,
-                r.bandwidth_bps / 1e9,
-                dev.bandwidth_gbps()
-            );
-            if let Some(path) = args.flags.get("save") {
-                std::fs::write(path, dse::serialize_design(&r.design, &dev))?;
-                println!("design checkpoint written to {path}");
-            }
-            let sched = BurstSchedule::from_design(&r.design, &dev, 1);
-            println!(
-                "streaming layers: {} (balanced={}, DMA util {:.0}%)",
-                sched.entries.len(),
-                sched.balanced(),
-                sched.dma_utilization() * 100.0
-            );
-            for (i, l) in r.design.network.layers.iter().enumerate() {
-                if !l.has_weights() {
-                    continue;
-                }
-                let c = &r.design.cfgs[i];
+    print!("{}", scheduled.report());
+    if let Some(path) = args.flags.get("save") {
+        let text = dse::serialize_design(scheduled.design(), scheduled.device());
+        std::fs::write(path, text)
+            .map_err(|source| Error::Io { path: path.clone(), source })?;
+        println!("design checkpoint written to {path}");
+    }
+    if args.has("tech") {
+        use autows::ce::{assign_memory_tech, MemTech, TechOptions};
+        let dev = scheduled.device();
+        let plan = assign_memory_tech(scheduled.design(), dev, &TechOptions::for_device(dev));
+        println!(
+            "memory tech plan: {} BRAM (baseline {}), {} URAM, +{} LUTs, saved {} BRAM36-equiv",
+            plan.bram, plan.baseline_bram, plan.uram, plan.extra_luts, plan.bram_saved()
+        );
+        for c in &plan.choices {
+            if c.tech != MemTech::Bram {
                 println!(
-                    "  {:<24} kp={:<2} cp={:<3} fp={:<3} n={:<3} u_on={:<6} u_off={:<6} off={:.0}%",
-                    l.name,
-                    c.kp,
-                    c.cp,
-                    c.fp,
-                    c.frag.n,
-                    c.frag.u_on,
-                    c.frag.u_off,
-                    c.frag.off_chip_ratio() * 100.0
+                    "  {:<24} -> {} (bram={} uram={} luts={})",
+                    scheduled.design().network.layers[c.layer].name,
+                    c.tech,
+                    c.bram,
+                    c.uram,
+                    c.luts
                 );
-            }
-            if args.has("tech") {
-                use autows::ce::{assign_memory_tech, TechOptions};
-                let plan = assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev));
-                println!(
-                    "memory tech plan: {} BRAM (baseline {}), {} URAM, +{} LUTs, saved {} BRAM36-equiv",
-                    plan.bram, plan.baseline_bram, plan.uram, plan.extra_luts, plan.bram_saved()
-                );
-                for c in &plan.choices {
-                    if c.tech != autows::ce::MemTech::Bram {
-                        println!(
-                            "  {:<24} -> {} (bram={} uram={} luts={})",
-                            r.design.network.layers[c.layer].name, c.tech, c.bram, c.uram, c.luts
-                        );
-                    }
-                }
             }
         }
     }
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> Result<()> {
+fn cmd_simulate(args: &Args) -> Result<(), Error> {
     let model = args.get("model", "resnet18");
     let device = args.get("device", "zcu102");
-    let q = parse_quant(&args.get("quant", "w4a5"))?;
+    let quant = parse_quant(&args.get("quant", "w4a5"))?;
     let batch: u64 = args.get_num("batch", 1u64)?;
-    let net = models::by_name(&model, q).ok_or_else(|| anyhow!("unknown model {model}"))?;
-    let dev = Device::by_name(&device).ok_or_else(|| anyhow!("unknown device {device}"))?;
-    // either reload a DSE checkpoint or re-run the search
-    let design = match args.flags.get("design") {
+
+    let plan = Deployment::for_model(&model).quant(quant).on_device(device.as_str())?;
+    // either reload a DSE checkpoint or re-run the search (cached)
+    let explored = match args.flags.get("design") {
         Some(path) => {
-            let text = std::fs::read_to_string(path)?;
-            dse::parse_design(&text, &net, &dev).map_err(|e| anyhow!("{e}"))?
+            let text = std::fs::read_to_string(path)
+                .map_err(|source| Error::Io { path: path.clone(), source })?;
+            let design = dse::parse_design(&text, plan.network(), plan.device())
+                .map_err(|e| Error::DesignFormat(e.to_string()))?;
+            plan.adopt_design(design)
         }
-        None => {
-            dse::run(&net, &dev, &DseConfig::default())
-                .ok_or_else(|| anyhow!("no feasible design"))?
-                .design
-        }
+        None => plan.explore(&DseConfig::default())?,
     };
-    let analytic_ms = design.latency_ms(1);
-    let sim = simulate(&design, &dev, &SimConfig { batch, ..Default::default() });
+    let scheduled = explored.schedule_for_batch(batch);
+    let analytic_ms = scheduled.design().latency_ms(1);
+    let sim = scheduled.simulate(&SimConfig { batch, ..Default::default() });
     println!(
-        "{model}-{q} on {device} batch={batch}: makespan={:.3} ms, stalls={:.1} us, \
+        "{model}-{quant} on {device} batch={batch}: makespan={:.3} ms, stalls={:.1} us, \
          DMA busy {:.0}%, {} events (analytic latency {:.3} ms)",
         sim.makespan_s * 1e3,
         sim.total_stall_s * 1e6,
@@ -250,136 +275,37 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `autows run --config <file>`: the launcher. Resolves the model and device
-/// from the config, runs the DSE, validates the design in the cycle-accurate
-/// simulator, optionally sweeps the memory budget and runs a serving session.
-fn cmd_run(args: &Args) -> Result<()> {
+/// `autows run --config <file>`: the launcher — the whole pipeline from a
+/// reproducible config artifact ([`RunSpec::execute`]).
+fn cmd_run(args: &Args) -> Result<(), Error> {
     let path = args.get("config", "configs/resnet18_zcu102.toml");
-    let spec = RunSpec::from_file(&path).map_err(|e| anyhow!("{e}"))?;
-    let net = spec.build_network().map_err(|e| anyhow!("{e}"))?;
-    println!("== {} ==", spec.title);
-    let s = net.stats();
-    println!(
-        "model {} ({}): {} layers, {:.2}M params, {:.2}G MACs on {}",
-        net.name,
-        spec.quant,
-        s.total_layers,
-        s.params as f64 / 1e6,
-        s.macs as f64 / 1e9,
-        spec.device.name
-    );
-
-    // DSE
-    let r = match dse::run(&net, &spec.device, &spec.dse) {
-        None => {
-            println!("DSE: INFEASIBLE (vanilla={})", !spec.dse.allow_streaming);
-            return Ok(());
-        }
-        Some(r) => r,
-    };
-    println!(
-        "DSE: θ={:.1} fps, latency={:.2} ms, mem {:.0}%, bw {:.2}/{:.2} Gbps, {} streaming layers",
-        r.throughput,
-        r.latency_ms,
-        r.area.mem_utilization(&spec.device) * 100.0,
-        r.bandwidth_bps / 1e9,
-        spec.device.bandwidth_gbps(),
-        r.design.streaming_layers().len()
-    );
-
-    // Simulation
-    let sim = simulate(&r.design, &spec.device, &SimConfig { batch: spec.sim_batch, ..Default::default() });
-    println!(
-        "sim (batch={}): makespan={:.3} ms, stalls={:.1} us, DMA busy {:.0}%",
-        spec.sim_batch,
-        sim.makespan_s * 1e3,
-        sim.total_stall_s * 1e6,
-        sim.dma_busy_frac * 100.0
-    );
-
-    // Optional memory sweep
-    if !spec.mem_sweep.is_empty() {
-        println!("mem sweep (A_mem scale -> fps):");
-        for &scale in &spec.mem_sweep {
-            let dev = spec.device.with_mem_scale(scale);
-            match dse::run(&net, &dev, &spec.dse) {
-                None => println!("  {scale:>5.2}x  infeasible"),
-                Some(p) => println!("  {scale:>5.2}x  {:.1} fps", p.throughput),
-            }
-        }
-    }
-
-    // Optional serving session
-    if let Some(serve) = &spec.serve {
-        println!("serving {} requests (max batch {}):", serve.requests, serve.max_batch);
-        let design = r.design.clone();
-        let dev = spec.device.clone();
-        let artifact = serve.artifact.clone();
-        let max_batch = serve.max_batch;
-        let server = Server::start_with(
-            move || {
-                let rt = Runtime::cpu()?;
-                let model = rt.load_hlo_text(&artifact)?;
-                Ok(Box::new(PjrtEngine::new(model, design, dev, (3, 32, 32), max_batch)) as _)
-            },
-            BatchPolicy {
-                max_batch: serve.max_batch,
-                max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
-            },
-        )?;
-        let receivers: Vec<_> = (0..serve.requests)
-            .map(|i| {
-                let input: Vec<f32> =
-                    (0..3 * 32 * 32).map(|j| ((i * 31 + j) % 255) as f32 / 255.0).collect();
-                server.submit(input)
-            })
-            .collect::<Result<_>>()?;
-        for rx in receivers {
-            rx.recv()??;
-        }
-        let m = server.metrics();
-        println!(
-            "  throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
-            m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
-        );
-        server.shutdown();
-    }
-    Ok(())
+    let spec = RunSpec::from_file(&path)?;
+    spec.execute()
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+fn cmd_serve(args: &Args) -> Result<(), Error> {
     let artifact = args.get("artifact", "artifacts/toy_cnn_b8.hlo.txt");
     let requests: usize = args.get_num("requests", 64usize)?;
     let max_batch: usize = args.get_num("max-batch", 8usize)?;
     let device = args.get("device", "zcu102");
 
-    let q = Quant::W8A8;
-    let net = models::toy_cnn(q);
-    let dev = Device::by_name(&device).ok_or_else(|| anyhow!("unknown device {device}"))?;
-    let plan = dse::run(&net, &dev, &DseConfig::default()).ok_or_else(|| anyhow!("infeasible"))?;
-
-    // PJRT handles are thread-affine: construct the engine on the worker.
-    let design = plan.design;
-    let server = Server::start_with(
-        move || {
-            let rt = Runtime::cpu()?;
-            println!("PJRT platform: {}", rt.platform());
-            let model = rt.load_hlo_text(&artifact)?;
-            Ok(Box::new(PjrtEngine::new(model, design, dev, (3, 32, 32), max_batch)) as _)
-        },
+    let scheduled = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_device(device.as_str())?
+        .explore(&DseConfig::default())?
+        .schedule_for_batch(max_batch as u64)
+        .with_engine(EngineSpec::Pjrt {
+            artifact,
+            input_shape: (3, 32, 32),
+            artifact_batch: max_batch,
+        });
+    let server = scheduled.serve(
         BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
+        ServerOptions::default(),
     )?;
+
     let t0 = std::time::Instant::now();
-    let receivers: Vec<_> = (0..requests)
-        .map(|i| {
-            let input: Vec<f32> =
-                (0..3 * 32 * 32).map(|j| ((i * 31 + j) % 255) as f32 / 255.0).collect();
-            server.submit(input)
-        })
-        .collect::<Result<_>>()?;
-    for rx in receivers {
-        rx.recv()??;
-    }
+    drive_synthetic(&server, requests, scheduled.input_len())?;
     let elapsed = t0.elapsed();
     let m = server.metrics();
     println!(

@@ -1,0 +1,198 @@
+//! Content-keyed in-memory design cache.
+//!
+//! A DSE run is a pure function of `(network, device, DseConfig)`, so its
+//! result can be memoized. The cache key is **content-derived**, not
+//! identity-derived: the network is keyed by its canonical `.net`
+//! serialization (name, input shape, quantization, every layer), the device
+//! by all of its resource/clock/bandwidth fields (so `with_mem_scale`
+//! variants key separately), and the config by every hyperparameter
+//! (`φ`, `µ`, batch, streaming flag, bandwidth margin bits, warm start).
+//! Two lookups with equal content hit the same entry no matter how the
+//! values were constructed; any content difference — a scaled memory
+//! budget, a different quantization, one changed layer — misses.
+//!
+//! Infeasible outcomes are cached too (`None`), so a sweep that probes the
+//! same infeasible point twice pays for it once.
+//!
+//! Concurrency: the map is behind a `Mutex`, but the DSE itself runs
+//! *outside* the lock so parallel sweeps ([`crate::dse::parallel_cases`])
+//! never serialize on the cache. Two workers racing on the same fresh key
+//! may both compute it — identical results, one insert wins — which is
+//! benign and keeps the hot path contention-free.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::device::Device;
+use crate::dse::{self, DseConfig, DseResult};
+use crate::ir::Network;
+
+/// Snapshot of the cache counters (the eval counters the cache-hit tests
+/// assert on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache (no DSE work performed).
+    pub hits: u64,
+    /// Lookups that ran the DSE.
+    pub misses: u64,
+    /// Distinct design points currently stored.
+    pub entries: usize,
+}
+
+/// Memoization table for DSE outcomes, keyed by design-point content.
+#[derive(Debug, Default)]
+pub struct DesignCache {
+    map: Mutex<HashMap<String, Option<DseResult>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl DesignCache {
+    pub fn new() -> DesignCache {
+        DesignCache::default()
+    }
+
+    /// The canonical content key of a design point. Stored verbatim (not
+    /// hashed down to 64 bits) so equal keys are *guaranteed* equal content.
+    pub fn key(network: &Network, device: &Device, cfg: &DseConfig) -> String {
+        let mut k = String::with_capacity(1024);
+        // network content: canonical .net serialization covers name, input
+        // shape, quantization (global + per-layer overrides) and every layer
+        k.push_str(&crate::ir::serialize_network(network));
+        // device content: every field that feeds the analytic models
+        let _ = write!(
+            k,
+            "|dev={}:{}:{}:{}:{}:{}:{:x}:{:x}:{:x}:{}",
+            device.name,
+            device.bram36,
+            device.uram,
+            device.dsp,
+            device.lut,
+            device.ff,
+            device.bandwidth_bps.to_bits(),
+            device.clk_comp_mhz.to_bits(),
+            device.clk_dma_mhz.to_bits(),
+            device.dma_port_bits,
+        );
+        // every DSE hyperparameter (float via bit pattern: exact)
+        let _ = write!(
+            k,
+            "|cfg=phi{}:mu{}:b{}:s{}:bw{:x}:w{}",
+            cfg.phi,
+            cfg.mu,
+            cfg.batch,
+            cfg.allow_streaming,
+            cfg.bw_margin.to_bits(),
+            cfg.warm_start,
+        );
+        k
+    }
+
+    /// Return the cached outcome for this design point, running the DSE on a
+    /// miss. The boolean is `true` when the result came from the cache.
+    pub fn explore(
+        &self,
+        network: &Network,
+        device: &Device,
+        cfg: &DseConfig,
+    ) -> (Option<DseResult>, bool) {
+        let key = Self::key(network, device, cfg);
+        if let Some(found) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (found.clone(), true);
+        }
+        // run outside the lock: DSE work must not serialize parallel sweeps
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let result = dse::run(network, device, cfg);
+        self.map.lock().unwrap().entry(key).or_insert_with(|| result.clone());
+        (result, false)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len(),
+        }
+    }
+
+    /// Drop every entry (counters are kept — they are cumulative).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The process-wide design cache every [`super::Planned::explore`] and
+/// pipeline sweep shares. Lives for the whole process: repeated serve runs,
+/// sweeps revisiting a point, and reports regenerating the same design all
+/// skip the redundant DSE.
+pub fn design_cache() -> &'static DesignCache {
+    static CACHE: OnceLock<DesignCache> = OnceLock::new();
+    CACHE.get_or_init(DesignCache::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn key_separates_content() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let base = DesignCache::key(&net, &dev, &cfg);
+        // same content -> same key
+        assert_eq!(base, DesignCache::key(&net.clone(), &dev.clone(), &cfg));
+        // any content difference -> different key
+        assert_ne!(base, DesignCache::key(&models::toy_cnn(Quant::W4A4), &dev, &cfg));
+        assert_ne!(base, DesignCache::key(&net, &dev.with_mem_scale(0.5), &cfg));
+        assert_ne!(base, DesignCache::key(&net, &Device::u250(), &cfg));
+        assert_ne!(base, DesignCache::key(&net, &dev, &cfg.with_phi(2)));
+        assert_ne!(base, DesignCache::key(&net, &dev, &cfg.with_mu(256)));
+        assert_ne!(base, DesignCache::key(&net, &dev, &cfg.with_batch(8)));
+        assert_ne!(base, DesignCache::key(&net, &dev, &DseConfig::vanilla()));
+        assert_ne!(base, DesignCache::key(&net, &dev, &DseConfig::warm()));
+        assert_ne!(base, DesignCache::key(&net, &dev, &cfg.with_bw_margin(0.8)));
+    }
+
+    #[test]
+    fn hit_returns_identical_result_without_rerun() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let cache = DesignCache::new();
+        let (a, cached_a) = cache.explore(&net, &dev, &cfg);
+        let (b, cached_b) = cache.explore(&net, &dev, &cfg);
+        assert!(!cached_a && cached_b);
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.design.cfgs, b.design.cfgs);
+        assert_eq!(a.design.off_bits, b.design.off_bits);
+        assert_eq!(a.throughput, b.throughput);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn infeasible_outcomes_are_cached() {
+        // resnet18 W4A5 does not fit zedboard without streaming
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zedboard();
+        let cache = DesignCache::new();
+        let (r1, c1) = cache.explore(&net, &dev, &DseConfig::vanilla());
+        let (r2, c2) = cache.explore(&net, &dev, &DseConfig::vanilla());
+        assert!(r1.is_none() && r2.is_none());
+        assert!(!c1 && c2, "second probe of the infeasible point must hit");
+    }
+}

@@ -1,0 +1,80 @@
+//! One typed, staged pipeline from model name to served requests — the
+//! crate's front door.
+//!
+//! AutoWS's promise is that the whole flow is automated: model ingest, the
+//! greedy DSE (paper Algorithm 1), deterministic burst scheduling
+//! (Eq. 8–10), simulation and serving. This module packages that flow as a
+//! staged builder where **each stage is a distinct type**, so the compiler
+//! enforces the ordering:
+//!
+//! ```text
+//! Deployment::for_model("resnet18")   // stage 0: pick the model
+//!     .quant(Quant::W4A5)             //          quantization
+//!     .on_device("zcu102")?           // stage 1: Planned (model+device resolved)
+//!     .explore(&DseConfig::default())? // stage 2: Explored (DSE ran / cache hit)
+//!     .schedule()                     // stage 3: Scheduled (burst schedule derived)
+//!     // terminals: .simulate(..) / .report() / .serve(policy, opts)
+//! ```
+//!
+//! Exploration goes through a process-wide **content-keyed design cache**
+//! ([`design_cache`], see [`cache`] for the key semantics): sweeps and
+//! repeated serve runs on the same (network, device, config) content skip
+//! the redundant DSE and get bit-identical results.
+//!
+//! Skipping a stage is a *compile* error — `Planned` simply has no
+//! `schedule` method:
+//!
+//! ```compile_fail
+//! use autows::pipeline::Deployment;
+//! // ERROR: cannot schedule before exploring (no `schedule` on `Planned`)
+//! let s = autows::pipeline::Deployment::for_model("resnet18")
+//!     .on_device("zcu102")
+//!     .unwrap()
+//!     .schedule();
+//! ```
+//!
+//! and so is simulating before scheduling:
+//!
+//! ```compile_fail
+//! use autows::dse::DseConfig;
+//! use autows::pipeline::Deployment;
+//! use autows::sim::SimConfig;
+//! // ERROR: no `simulate` on `Explored` — derive the schedule first
+//! let sim = Deployment::for_model("toy")
+//!     .on_device("zcu102")
+//!     .unwrap()
+//!     .explore(&DseConfig::default())
+//!     .unwrap()
+//!     .simulate(&SimConfig::default());
+//! ```
+//!
+//! The full chain, end to end:
+//!
+//! ```no_run
+//! use autows::coordinator::{BatchPolicy, ServerOptions};
+//! use autows::dse::DseConfig;
+//! use autows::ir::Quant;
+//! use autows::pipeline::Deployment;
+//!
+//! fn main() -> Result<(), autows::Error> {
+//!     let scheduled = Deployment::for_model("resnet18")
+//!         .quant(Quant::W4A5)
+//!         .on_device("zcu102")?
+//!         .explore(&DseConfig::default())?
+//!         .schedule();
+//!     print!("{}", scheduled.report());
+//!     let server = scheduled.serve(BatchPolicy::default(), ServerOptions::default())?;
+//!     let reply = server.infer(vec![0.5; scheduled.input_len()]);
+//!     server.shutdown();
+//!     reply.map(|_| ()).map_err(|e| autows::Error::Serve(e.to_string()))
+//! }
+//! ```
+
+pub mod cache;
+mod serve;
+mod stages;
+pub mod sweep;
+
+pub use cache::{design_cache, CacheStats, DesignCache};
+pub use serve::{drive_synthetic, EngineSpec};
+pub use stages::{Deployment, Explored, IntoDevice, Planned, Scheduled};

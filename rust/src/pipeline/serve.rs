@@ -1,0 +1,112 @@
+//! Terminal serving stage: turn a [`Scheduled`](super::Scheduled) design
+//! into a running [`Server`] and drive it.
+
+use crate::coordinator::{BatchPolicy, PjrtEngine, Server, ServerOptions, SimOnlyEngine};
+use crate::error::Error;
+use crate::runtime::Runtime;
+
+use super::stages::Scheduled;
+
+/// Which inference engine backs the server.
+#[derive(Debug, Clone)]
+pub enum EngineSpec {
+    /// Timing-only engine: checksum numerics + simulated accelerator clock.
+    /// The input length is derived from the network's input shape.
+    SimOnly {
+        /// Output vector length per request.
+        output_len: usize,
+    },
+    /// PJRT numerics from an AOT-compiled HLO-text artifact + simulated
+    /// accelerator clock (requires the `pjrt` feature to actually execute).
+    Pjrt {
+        /// Path to the HLO-text artifact.
+        artifact: String,
+        /// (channels, height, width) of one sample.
+        input_shape: (usize, usize, usize),
+        /// Batch size the artifact was lowered with (smaller batches pad).
+        artifact_batch: usize,
+    },
+}
+
+impl Default for EngineSpec {
+    fn default() -> Self {
+        EngineSpec::SimOnly { output_len: 10 }
+    }
+}
+
+impl Scheduled {
+    /// Replace the engine the terminal [`Scheduled::serve`] stage boots
+    /// (default: [`EngineSpec::SimOnly`]).
+    pub fn with_engine(mut self, engine: EngineSpec) -> Scheduled {
+        self.engine = engine;
+        self
+    }
+
+    /// Flattened per-sample input length of the deployed network.
+    pub fn input_len(&self) -> usize {
+        let (c, h, w) = self.result.design.network.input_shape;
+        (c as usize) * (h as usize) * (w as usize)
+    }
+
+    /// Boot the serving loop for this design: the engine (per
+    /// [`Scheduled::with_engine`]) is constructed on the worker thread, the
+    /// batcher runs `policy`, and admission control follows `opts`.
+    pub fn serve(&self, policy: BatchPolicy, opts: ServerOptions) -> Result<Server, Error> {
+        let design = self.result.design.clone();
+        let device = self.device.clone();
+        match &self.engine {
+            EngineSpec::SimOnly { output_len } => {
+                let engine = SimOnlyEngine {
+                    design,
+                    device,
+                    input_len: self.input_len(),
+                    output_len: *output_len,
+                };
+                Server::start_with_opts(move || Ok(Box::new(engine) as _), policy, opts)
+                    .map_err(|e| Error::Serve(e.to_string()))
+            }
+            EngineSpec::Pjrt { artifact, input_shape, artifact_batch } => {
+                let artifact = artifact.clone();
+                let input_shape = *input_shape;
+                let artifact_batch = *artifact_batch;
+                // PJRT handles are thread-affine: construct on the worker.
+                Server::start_with_opts(
+                    move || {
+                        let rt = Runtime::cpu()?;
+                        let model = rt.load_hlo_text(&artifact)?;
+                        Ok(Box::new(PjrtEngine::new(
+                            model,
+                            design,
+                            device,
+                            input_shape,
+                            artifact_batch,
+                        )) as _)
+                    },
+                    policy,
+                    opts,
+                )
+                .map_err(|e| Error::Serve(e.to_string()))
+            }
+        }
+    }
+}
+
+/// Submit `requests` deterministic synthetic inputs and wait for every
+/// response — the shared driver of the CLI serve command, `RunSpec`
+/// serving sections and the e2e bench.
+pub fn drive_synthetic(server: &Server, requests: usize, input_len: usize) -> Result<(), Error> {
+    let receivers: Result<Vec<_>, _> = (0..requests)
+        .map(|i| {
+            let input: Vec<f32> =
+                (0..input_len).map(|j| ((i * 31 + j) % 255) as f32 / 255.0).collect();
+            server.submit(input)
+        })
+        .collect();
+    let receivers = receivers.map_err(|e| Error::Serve(e.to_string()))?;
+    for rx in receivers {
+        rx.recv()
+            .map_err(|_| Error::Serve("coordinator dropped request".to_string()))?
+            .map_err(|e| Error::Serve(e.to_string()))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,339 @@
+//! The staged builder: `Deployment` → `Planned` → `Explored` → `Scheduled`.
+//!
+//! Each stage is a distinct type exposing only the operations that are valid
+//! at that point, so an out-of-order pipeline (scheduling before the DSE,
+//! simulating before scheduling) is a *compile* error, not a runtime panic.
+
+use crate::device::Device;
+use crate::dse::{self, Design, DseConfig, DseResult};
+use crate::error::Error;
+use crate::ir::{Network, Quant};
+use crate::models;
+use crate::schedule::BurstSchedule;
+use crate::sim::{simulate, SimConfig, SimResult};
+
+use super::cache::{design_cache, DesignCache};
+use super::serve::EngineSpec;
+
+/// Where the model comes from.
+#[derive(Debug, Clone)]
+enum ModelSpec {
+    /// Zoo builder by name ([`models::by_name`]).
+    Zoo(String),
+    /// `.net` description file ([`crate::ir::parse_network`]).
+    File(String),
+    /// A network built by the caller (its own quantization is kept;
+    /// [`Deployment::quant`] has no effect on this variant).
+    Network(Network),
+}
+
+/// Stage 0 — model selection. Created by [`Deployment::for_model`] /
+/// [`Deployment::for_net_file`] / [`Deployment::for_network`]; advanced by
+/// [`Deployment::on_device`], which resolves model and device eagerly so
+/// lookup failures surface at one defined point.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    source: ModelSpec,
+    quant: Quant,
+}
+
+/// Accepted by [`Deployment::on_device`]: a device library name or an
+/// already-built (possibly budget-scaled) [`Device`].
+pub trait IntoDevice {
+    fn resolve(self) -> Result<Device, Error>;
+}
+
+impl IntoDevice for Device {
+    fn resolve(self) -> Result<Device, Error> {
+        Ok(self)
+    }
+}
+
+impl IntoDevice for &Device {
+    fn resolve(self) -> Result<Device, Error> {
+        Ok(self.clone())
+    }
+}
+
+impl IntoDevice for &str {
+    fn resolve(self) -> Result<Device, Error> {
+        Device::by_name(self).ok_or_else(|| Error::UnknownDevice(self.to_string()))
+    }
+}
+
+impl IntoDevice for &String {
+    fn resolve(self) -> Result<Device, Error> {
+        self.as_str().resolve()
+    }
+}
+
+impl IntoDevice for String {
+    fn resolve(self) -> Result<Device, Error> {
+        self.as_str().resolve()
+    }
+}
+
+impl Deployment {
+    /// Deploy a zoo model by name (resolved at [`Deployment::on_device`]).
+    pub fn for_model(name: impl Into<String>) -> Deployment {
+        Deployment { source: ModelSpec::Zoo(name.into()), quant: Quant::W8A8 }
+    }
+
+    /// Deploy a custom network from a `.net` description file.
+    pub fn for_net_file(path: impl Into<String>) -> Deployment {
+        Deployment { source: ModelSpec::File(path.into()), quant: Quant::W8A8 }
+    }
+
+    /// Deploy an already-built network (keeps the network's own
+    /// quantization).
+    pub fn for_network(network: Network) -> Deployment {
+        let quant = network.quant;
+        Deployment { source: ModelSpec::Network(network), quant }
+    }
+
+    /// Quantization to build the model with (default `w8a8`). Ignored for
+    /// [`Deployment::for_network`] — a built network carries its own.
+    pub fn quant(mut self, quant: Quant) -> Deployment {
+        self.quant = quant;
+        self
+    }
+
+    /// Parse-and-set quantization from a label (`"w4a5"`, `"w8a8"`, …).
+    pub fn quant_label(self, label: &str) -> Result<Deployment, Error> {
+        let q = Quant::parse(label).ok_or_else(|| Error::UnknownQuant(label.to_string()))?;
+        Ok(self.quant(q))
+    }
+
+    /// Resolve model and device into a [`Planned`] deployment.
+    pub fn on_device(self, device: impl IntoDevice) -> Result<Planned, Error> {
+        let device = device.resolve()?;
+        let network = match self.source {
+            ModelSpec::Zoo(name) => models::by_name(&name, self.quant)
+                .ok_or_else(|| Error::UnknownModel(name))?,
+            ModelSpec::File(path) => {
+                let text = std::fs::read_to_string(&path)
+                    .map_err(|source| Error::Io { path: path.clone(), source })?;
+                crate::ir::parse_network(&text, self.quant)
+                    .map_err(|source| Error::NetParse { path, source })?
+            }
+            ModelSpec::Network(net) => net,
+        };
+        Ok(Planned { network, device })
+    }
+}
+
+/// Stage 1 — a model resolved against a device, ready to explore.
+#[derive(Debug, Clone)]
+pub struct Planned {
+    network: Network,
+    device: Device,
+}
+
+impl Planned {
+    /// Build a plan directly from parts (the entry point library code uses
+    /// when it already holds a [`Network`] and [`Device`]).
+    pub fn from_parts(network: Network, device: Device) -> Planned {
+        Planned { network, device }
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.network
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    /// The same plan against a memory-scaled variant of the device
+    /// (Fig. 6-style budget sweeps).
+    pub fn with_mem_scale(&self, scale: f64) -> Planned {
+        Planned { network: self.network.clone(), device: self.device.with_mem_scale(scale) }
+    }
+
+    /// Run the greedy DSE (paper Algorithm 1) through the process-wide
+    /// [design cache](design_cache): a revisited design point returns the
+    /// memoized result without re-running the search.
+    pub fn explore(self, cfg: &DseConfig) -> Result<Explored, Error> {
+        self.explore_in(design_cache(), cfg)
+    }
+
+    /// [`Planned::explore`] with [`DseConfig::default`].
+    pub fn explore_default(self) -> Result<Explored, Error> {
+        self.explore(&DseConfig::default())
+    }
+
+    /// [`Planned::explore`] against a caller-owned cache (tests, isolated
+    /// sweeps).
+    pub fn explore_in(self, cache: &DesignCache, cfg: &DseConfig) -> Result<Explored, Error> {
+        let (result, cached) = cache.explore(&self.network, &self.device, cfg);
+        match result {
+            Some(result) => {
+                Ok(Explored { result, device: self.device, cfg: *cfg, cached })
+            }
+            None => Err(Error::Infeasible {
+                model: self.network.name.clone(),
+                device: self.device.name.to_string(),
+                vanilla: !cfg.allow_streaming,
+            }),
+        }
+    }
+
+    /// Run the DSE bypassing the cache (benchmarks timing the search
+    /// itself, equivalence oracles).
+    pub fn explore_uncached(self, cfg: &DseConfig) -> Result<Explored, Error> {
+        match dse::run(&self.network, &self.device, cfg) {
+            Some(result) => {
+                Ok(Explored { result, device: self.device, cfg: *cfg, cached: false })
+            }
+            None => Err(Error::Infeasible {
+                model: self.network.name.clone(),
+                device: self.device.name.to_string(),
+                vanilla: !cfg.allow_streaming,
+            }),
+        }
+    }
+
+    /// Adopt a design produced elsewhere (a deserialized checkpoint from
+    /// [`dse::parse_design`]) as this plan's exploration outcome, deriving
+    /// the summary metrics from the analytic models.
+    pub fn adopt_design(self, design: Design) -> Explored {
+        let result = DseResult {
+            throughput: design.min_throughput(),
+            latency_ms: design.latency_ms(1),
+            area: design.total_area(),
+            bandwidth_bps: design.total_bandwidth(),
+            iterations: 0,
+            design,
+        };
+        Explored { result, device: self.device, cfg: DseConfig::default(), cached: false }
+    }
+}
+
+/// Stage 2 — a feasible design point with its DSE metrics.
+#[derive(Debug, Clone)]
+pub struct Explored {
+    result: DseResult,
+    device: Device,
+    cfg: DseConfig,
+    cached: bool,
+}
+
+impl Explored {
+    pub fn result(&self) -> &DseResult {
+        &self.result
+    }
+
+    pub fn design(&self) -> &Design {
+        &self.result.design
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    pub fn config(&self) -> &DseConfig {
+        &self.cfg
+    }
+
+    /// `true` when the design came from the design cache (no DSE ran).
+    pub fn was_cached(&self) -> bool {
+        self.cached
+    }
+
+    /// Derive the deterministic DMA burst schedule (paper Eq. 8–10) for the
+    /// batch size the DSE planned for, producing the terminal stage.
+    pub fn schedule(self) -> Scheduled {
+        let batch = self.cfg.batch;
+        self.schedule_for_batch(batch)
+    }
+
+    /// [`Explored::schedule`] for an explicit serving batch size.
+    pub fn schedule_for_batch(self, batch: u64) -> Scheduled {
+        let schedule = BurstSchedule::from_design(&self.result.design, &self.device, batch);
+        let engine = EngineSpec::default();
+        Scheduled { result: self.result, device: self.device, schedule, engine }
+    }
+}
+
+/// Stage 3 — design + burst schedule: the terminal artifact. Simulate it,
+/// render a report, or serve requests on it.
+#[derive(Debug, Clone)]
+pub struct Scheduled {
+    pub(super) result: DseResult,
+    pub(super) device: Device,
+    pub(super) schedule: BurstSchedule,
+    pub(super) engine: EngineSpec,
+}
+
+impl Scheduled {
+    pub fn result(&self) -> &DseResult {
+        &self.result
+    }
+
+    pub fn design(&self) -> &Design {
+        &self.result.design
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    pub fn burst_schedule(&self) -> &BurstSchedule {
+        &self.schedule
+    }
+
+    /// Validate the design in the cycle-accurate event simulator.
+    pub fn simulate(&self, cfg: &SimConfig) -> SimResult {
+        simulate(&self.result.design, &self.device, cfg)
+    }
+
+    /// Human-readable deployment report: DSE metrics, schedule health and
+    /// the per-layer configuration table (what `autows dse` prints).
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let r = &self.result;
+        let net = &r.design.network;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}-{} on {}: θ={:.1} fps, latency={:.2} ms, iterations={}",
+            net.name, net.quant, self.device.name, r.throughput, r.latency_ms, r.iterations
+        );
+        let _ = writeln!(
+            out,
+            "area: dsp={} lut={} bram={} ({:.0}% mem)  bandwidth={:.2}/{:.2} Gbps",
+            r.area.dsp,
+            r.area.lut,
+            r.area.bram.total(),
+            r.area.mem_utilization(&self.device) * 100.0,
+            r.bandwidth_bps / 1e9,
+            self.device.bandwidth_gbps()
+        );
+        let _ = writeln!(
+            out,
+            "streaming layers: {} (balanced={}, DMA util {:.0}%)",
+            self.schedule.entries.len(),
+            self.schedule.balanced(),
+            self.schedule.dma_utilization() * 100.0
+        );
+        for (i, l) in net.layers.iter().enumerate() {
+            if !l.has_weights() {
+                continue;
+            }
+            let c = &r.design.cfgs[i];
+            let _ = writeln!(
+                out,
+                "  {:<24} kp={:<2} cp={:<3} fp={:<3} n={:<3} u_on={:<6} u_off={:<6} off={:.0}%",
+                l.name,
+                c.kp,
+                c.cp,
+                c.fp,
+                c.frag.n,
+                c.frag.u_on,
+                c.frag.u_off,
+                c.frag.off_chip_ratio() * 100.0
+            );
+        }
+        out
+    }
+}

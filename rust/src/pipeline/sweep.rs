@@ -1,0 +1,143 @@
+//! Cache-aware parameter sweeps: the pipeline-level entry points to
+//! [`crate::dse::parallel_cases`]. Every point is explored through the
+//! process-wide [design cache](super::design_cache), so re-running a sweep
+//! (or overlapping sweeps — a Fig. 6 grid and a report regenerating the
+//! same points) skips the redundant DSE work while returning results
+//! identical to the uncached path.
+
+use crate::dse::{parallel_cases, DseConfig, HyperPoint, SweepPoint};
+
+use super::stages::Planned;
+
+/// Fan `f` over plans across the machine's cores, in input order — the
+/// pipeline-aware twin of [`parallel_cases`]. Closures that call
+/// [`Planned::explore`] share the global design cache across workers (the
+/// cache never serializes them: the DSE runs outside its lock).
+pub fn parallel_plans<R, F>(plans: &[Planned], f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &Planned) -> R + Sync,
+{
+    parallel_cases(plans, f)
+}
+
+/// The Fig. 6 memory sweep for `plan`'s (network, device) pair: each scale
+/// probes AutoWS and the vanilla baseline at that on-chip budget.
+pub fn mem_sweep(plan: &Planned, scales: &[f64]) -> Vec<SweepPoint> {
+    let autows_cfg = DseConfig::default();
+    let vanilla_cfg = DseConfig::vanilla();
+    parallel_cases(scales, |_, &s| {
+        let scaled = plan.with_mem_scale(s);
+        let autows = scaled.clone().explore(&autows_cfg).ok();
+        let vanilla = scaled.explore(&vanilla_cfg).ok();
+        SweepPoint {
+            mem_scale: s,
+            autows_offchip_frac: autows
+                .as_ref()
+                .map_or(0.0, |e| e.design().offchip_weight_frac()),
+            autows_fps: autows.map(|e| e.result().throughput),
+            vanilla_fps: vanilla.map(|e| e.result().throughput),
+        }
+    })
+}
+
+/// Memory sweep of a single configuration (no vanilla baseline): per scale,
+/// the achieved throughput or `None` when infeasible. The launcher's
+/// `device.mem_sweep` config option runs on this.
+pub fn mem_sweep_points(plan: &Planned, scales: &[f64], cfg: &DseConfig) -> Vec<(f64, Option<f64>)> {
+    parallel_cases(scales, |_, &s| {
+        let fps = plan.with_mem_scale(s).explore(cfg).ok().map(|e| e.result().throughput);
+        (s, fps)
+    })
+}
+
+/// The φ/µ hyperparameter grid (§IV-A exploration-cost vs quality trade-off)
+/// for `plan`'s (network, device) pair; infeasible cells are dropped.
+pub fn phi_mu_sweep(plan: &Planned, phis: &[u32], mus: &[u64]) -> Vec<HyperPoint> {
+    let grid: Vec<(u32, u64)> =
+        phis.iter().flat_map(|&phi| mus.iter().map(move |&mu| (phi, mu))).collect();
+    parallel_cases(&grid, |_, &(phi, mu)| {
+        let cfg = DseConfig::default().with_phi(phi).with_mu(mu);
+        plan.clone().explore(&cfg).ok().map(|e| {
+            let r = e.result();
+            HyperPoint {
+                phi,
+                mu,
+                iterations: r.iterations,
+                throughput: r.throughput,
+                latency_ms: r.latency_ms,
+            }
+        })
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::dse;
+    use crate::ir::Quant;
+    use crate::models;
+    use crate::pipeline::Deployment;
+
+    fn resnet18_plan() -> Planned {
+        Deployment::for_model("resnet18")
+            .quant(Quant::W4A5)
+            .on_device(Device::zcu102())
+            .unwrap()
+    }
+
+    /// The cached pipeline sweep returns exactly what the direct per-point
+    /// DSE returns.
+    #[test]
+    fn cached_sweep_matches_direct_runs() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let plan = Planned::from_parts(net.clone(), dev.clone());
+        let scales = [0.6, 1.0, 1.4];
+        let pts = mem_sweep(&plan, &scales);
+        for (p, &s) in pts.iter().zip(&scales) {
+            let direct = dse::run(&net, &dev.with_mem_scale(s), &DseConfig::default())
+                .map(|r| r.throughput);
+            assert_eq!(p.autows_fps, direct, "scale {s}");
+        }
+        // second pass: identical results straight from the cache
+        let again = mem_sweep(&plan, &scales);
+        for (a, b) in pts.iter().zip(&again) {
+            assert_eq!(a.autows_fps, b.autows_fps);
+            assert_eq!(a.vanilla_fps, b.vanilla_fps);
+        }
+    }
+
+    /// The three regions of Fig. 6 on a coarse grid (pipeline path).
+    #[test]
+    fn fig6_regions_exist() {
+        let pts = mem_sweep(&resnet18_plan(), &[0.4, 0.8, 1.6]);
+        assert!(pts[0].vanilla_fps.is_none(), "vanilla should not fit at 0.4x");
+        assert!(pts[0].autows_fps.is_some(), "AutoWS must fit at 0.4x");
+        let fps: Vec<f64> = pts.iter().map(|p| p.autows_fps.unwrap()).collect();
+        assert!(fps[0] <= fps[2] * 1.05, "{fps:?}");
+        assert!(pts[0].autows_offchip_frac >= pts[2].autows_offchip_frac);
+    }
+
+    #[test]
+    fn phi_mu_grid_covers_feasible_cells() {
+        let pts = phi_mu_sweep(&resnet18_plan(), &[1, 8], &[512]);
+        assert_eq!(pts.len(), 2);
+        let fine = pts.iter().find(|p| p.phi == 1).unwrap();
+        let coarse = pts.iter().find(|p| p.phi == 8).unwrap();
+        assert!(coarse.iterations <= fine.iterations);
+    }
+
+    #[test]
+    fn mem_sweep_points_respects_config() {
+        let plan = Planned::from_parts(models::toy_cnn(Quant::W8A8), Device::zcu102());
+        let pts = mem_sweep_points(&plan, &[1.0], &DseConfig::default().with_phi(2));
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].0, 1.0);
+        assert!(pts[0].1.is_some());
+    }
+}

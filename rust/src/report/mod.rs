@@ -9,10 +9,28 @@ pub use plot::{line_chart, stacked_bars};
 
 use crate::baseline::{self, sequential_latency_ms};
 use crate::device::Device;
-use crate::dse::{self, delta_bandwidth, mem_sweep, DseConfig};
-use crate::ir::Quant;
+use crate::dse::{self, delta_bandwidth, DseConfig};
+use crate::ir::{Network, Quant};
 use crate::models;
+use crate::pipeline::{sweep::mem_sweep, Deployment, Explored, Planned};
 use crate::sim::{fig5_scenario, render_gantt, simulate, SimConfig};
+
+/// Explore a zoo model on a device through the pipeline's design cache:
+/// figures that revisit the same design point (Fig. 6 / Fig. 7 / Table III
+/// all use resnet18-ZCU102) share one DSE run. `None` == infeasible.
+fn explore(model: &str, quant: Quant, dev: &Device) -> Option<Explored> {
+    Deployment::for_model(model)
+        .quant(quant)
+        .on_device(dev.clone())
+        .ok()?
+        .explore_default()
+        .ok()
+}
+
+/// [`explore`] for an already-built network (compressed variants).
+fn explore_net(net: Network, dev: &Device, cfg: &DseConfig) -> Option<Explored> {
+    Planned::from_parts(net, dev.clone()).explore(cfg).ok()
+}
 
 /// Table I: characteristics of the evaluated models.
 pub fn table1() -> String {
@@ -51,11 +69,14 @@ pub struct Table2Cell {
 pub fn table2_cell(network: &str, device: &str, quant: Quant) -> Table2Cell {
     let net = models::by_name(network, quant).unwrap();
     let dev = Device::by_name(device).unwrap();
-    let seq = sequential_latency_ms(&net, &dev);
-    let vanilla = baseline::vanilla(&net, &dev)
+    let plan = Planned::from_parts(net, dev.clone());
+    let seq = sequential_latency_ms(plan.network(), &dev);
+    let vanilla = baseline::vanilla(plan.network(), &dev)
         .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
-    let autows = dse::run(&net, &dev, &DseConfig::default())
-        .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
+    let autows = plan
+        .explore_default()
+        .ok()
+        .map(|e| e.schedule().simulate(&SimConfig::default()).latency_ms);
     Table2Cell {
         network: network.into(),
         device: device.into(),
@@ -148,9 +169,9 @@ pub fn table3() -> String {
     // (exactly what the paper's "172%" denotes).
     let big = dev.with_mem_scale(2.0);
     let d0 = baseline::vanilla(&net, &big).expect("vanilla fits on 2x device");
-    let d1 = dse::run(&net, &dev, &DseConfig::default()).expect("autows fits");
+    let d1 = explore("resnet18", Quant::W4A5, &dev).expect("autows fits");
     let rows =
-        vec![table3_row("Vanilla (d0)", &d0, &dev), table3_row("AutoWS  (d1)", &d1, &dev)];
+        vec![table3_row("Vanilla (d0)", &d0, &dev), table3_row("AutoWS  (d1)", d1.result(), &dev)];
     let mut out = String::from(
         "Table III: resnet18-ZCU102 memory resource breakdown\n\
          design        BW act  BW wt  BW util | act_fifo wt_buff  wt_mem   total (util) |   DSP     FPS\n",
@@ -203,10 +224,9 @@ pub fn fig5() -> String {
 
 /// Fig. 6: resnet18-ZCU102 memory/performance trade-off sweep.
 pub fn fig6() -> String {
-    let net = models::resnet18(Quant::W4A5);
-    let dev = Device::zcu102();
+    let plan = Planned::from_parts(models::resnet18(Quant::W4A5), Device::zcu102());
     let scales: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
-    let pts = mem_sweep(&net, &dev, &scales);
+    let pts = mem_sweep(&plan, &scales);
     let mut out = String::from(
         "Fig. 6: resnet18-ZCU102 memory vs performance (A_mem normalized)\n\
          A_mem   AutoWS fps   vanilla fps   off-chip frac\n",
@@ -227,24 +247,23 @@ pub fn fig6() -> String {
 /// Fig. 7: per-layer on/off-chip allocation of the AutoWS resnet18-ZCU102
 /// design point, with the ΔB criterion per layer.
 pub fn fig7() -> String {
-    let net = models::resnet18(Quant::W4A5);
     let dev = Device::zcu102();
-    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    let e = explore("resnet18", Quant::W4A5, &dev).unwrap();
     let cfg = DseConfig::default();
     let mut out = String::from(
         "Fig. 7: resnet18-ZCU102 per-layer weight allocation (design d1)\n\
          idx  layer                     on-chip KB  off-chip KB   ΔB (Mbps)\n",
     );
     let mut wi = 0;
-    for (i, l) in r.design.network.layers.iter().enumerate() {
+    for (i, l) in e.design().network.layers.iter().enumerate() {
         if !l.has_weights() {
             continue;
         }
         wi += 1;
-        let frag = r.design.cfgs[i].frag;
+        let frag = e.design().cfgs[i].frag;
         let total_bits = l.weight_bits() as f64;
         let off_bits = total_bits * frag.off_chip_ratio();
-        let db = delta_bandwidth(&r.design, i, &cfg);
+        let db = delta_bandwidth(e.design(), i, &cfg);
         out.push_str(&format!(
             "{:>3}  {:<24} {:>10.1} {:>12.1} {:>11.1}\n",
             wi,
@@ -273,10 +292,9 @@ pub fn fig5_gantt() -> String {
 
 /// Fig. 6 as an ASCII line chart (AutoWS vs vanilla fps over `A_mem`).
 pub fn fig6_chart() -> String {
-    let net = models::resnet18(Quant::W4A5);
-    let dev = Device::zcu102();
+    let plan = Planned::from_parts(models::resnet18(Quant::W4A5), Device::zcu102());
     let scales: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
-    let pts = mem_sweep(&net, &dev, &scales);
+    let pts = mem_sweep(&plan, &scales);
     let autows: Vec<(f64, Option<f64>)> =
         pts.iter().map(|p| (p.mem_scale, p.autows_fps)).collect();
     let vanilla: Vec<(f64, Option<f64>)> =
@@ -291,18 +309,17 @@ pub fn fig6_chart() -> String {
 
 /// Fig. 7 as stacked bars (per-layer on/off-chip weight kilobytes).
 pub fn fig7_chart() -> String {
-    let net = models::resnet18(Quant::W4A5);
     let dev = Device::zcu102();
-    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
-    let rows: Vec<(String, f64, f64)> = r
-        .design
+    let e = explore("resnet18", Quant::W4A5, &dev).unwrap();
+    let rows: Vec<(String, f64, f64)> = e
+        .design()
         .network
         .layers
         .iter()
         .enumerate()
         .filter(|(_, l)| l.has_weights())
         .map(|(i, l)| {
-            let frag = r.design.cfgs[i].frag;
+            let frag = e.design().cfgs[i].frag;
             let total_kb = l.weight_bits() as f64 / 8.0 / 1e3;
             let off = total_kb * frag.off_chip_ratio();
             (l.name.clone(), total_kb - off, off)
@@ -329,11 +346,10 @@ pub fn tech() -> String {
         ("resnet50", Quant::W8A8, Device::u50()),
         ("mobilenetv2", Quant::W4A4, Device::zc706()),
     ] {
-        let net = models::by_name(model, q).unwrap();
-        let Some(r) = dse::run(&net, &dev, &DseConfig::default()) else {
+        let Some(e) = explore(model, q, &dev) else {
             continue;
         };
-        let plan = assign_memory_tech(&r.design, &dev, &TechOptions::for_device(&dev));
+        let plan = assign_memory_tech(e.design(), &dev, &TechOptions::for_device(&dev));
         out.push_str(&format!(
             "{:<12} {:<8} {:>13} {:>11} {:>5} {:>6} {:>12}\n",
             model,
@@ -360,8 +376,10 @@ pub fn compress() -> String {
     );
     for s in [0.0, 0.2, 0.4, 0.6, 0.8] {
         let (cnet, rep) = compress_network(&net, &CompressionSpec::pruned(s));
-        let fps = dse::run(&cnet, &dev, &DseConfig::default()).map(|r| r.throughput);
-        let vfps = dse::run(&cnet, &dev, &DseConfig::vanilla()).map(|r| r.throughput);
+        let fps = explore_net(cnet.clone(), &dev, &DseConfig::default())
+            .map(|e| e.result().throughput);
+        let vfps =
+            explore_net(cnet, &dev, &DseConfig::vanilla()).map(|e| e.result().throughput);
         let fmt = |v: Option<f64>| v.map_or("      X".into(), |x| format!("{x:>7.1}"));
         out.push_str(&format!(
             "{:>8.1} {:>6.2} {:>9} {:>8.1}pp {:>12} {:>13}\n",
@@ -411,8 +429,8 @@ pub fn yolo() -> String {
     let fmt = |v: Option<f64>| v.map_or("X".to_string(), |x| format!("{x:.1} ms"));
     let vanilla = baseline::vanilla(&net, &dev)
         .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
-    let autows = dse::run(&net, &dev, &DseConfig::default())
-        .map(|r| simulate(&r.design, &dev, &SimConfig::default()).latency_ms);
+    let autows = explore("yolov5n", Quant::W8A8, &dev)
+        .map(|e| e.schedule().simulate(&SimConfig::default()).latency_ms);
     format!(
         "§V-D: YOLOv5n-COCO on ZCU102\n\
          layer-sequential (Vitis-AI-like): {seq:.1} ms\n\

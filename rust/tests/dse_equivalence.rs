@@ -98,8 +98,8 @@ fn incremental_engine_matches_reference_for_vanilla_and_coarse_hyperparams() {
     let dev = Device::zcu102();
     for cfg in [
         DseConfig::vanilla(),
-        DseConfig { phi: 4, mu: 2048, ..Default::default() },
-        DseConfig { batch: 8, ..Default::default() },
+        DseConfig::default().with_phi(4).with_mu(2048),
+        DseConfig::default().with_batch(8),
     ] {
         let fast = dse::run(&net, &dev, &cfg);
         let slow = dse::reference::run(&net, &dev, &cfg);

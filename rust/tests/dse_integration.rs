@@ -166,7 +166,7 @@ fn hyperparameter_coarseness_tradeoff() {
     let coarse = dse::run(
         &net,
         &dev,
-        &DseConfig { phi: 8, mu: 4096, ..Default::default() },
+        &DseConfig::default().with_phi(8).with_mu(4096),
     )
     .unwrap();
     assert!(coarse.iterations <= fine.iterations);

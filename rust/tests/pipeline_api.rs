@@ -1,0 +1,183 @@
+//! Integration tests of `autows::pipeline`: the golden equivalence against
+//! the direct `dse::run` path, the design-cache hit semantics, the staged
+//! error surface, and the terminal stages. (The stage-*ordering* guarantees
+//! are compile-time and covered by the `compile_fail` doc-tests on
+//! `autows::pipeline`.)
+
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::pipeline::{Deployment, DesignCache};
+use autows::sim::SimConfig;
+use autows::{models, Error};
+
+/// Golden: the pipeline's resnet18/zcu102/w4a5 design is bit-identical to
+/// the direct `dse::run` result — the builder adds no semantic drift.
+#[test]
+fn golden_resnet18_zcu102_matches_direct_dse() {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let cfg = DseConfig::default();
+    let direct = dse::run(&net, &dev, &cfg).expect("direct path feasible");
+
+    let explored = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device("zcu102")
+        .expect("model and device resolve")
+        .explore_uncached(&cfg)
+        .expect("pipeline path feasible");
+    let r = explored.result();
+
+    assert_eq!(r.design.cfgs, direct.design.cfgs, "per-layer configs must be identical");
+    assert_eq!(r.design.off_bits, direct.design.off_bits, "evicted bits must be identical");
+    assert_eq!(r.throughput, direct.throughput, "bit-identical throughput");
+    assert_eq!(r.latency_ms, direct.latency_ms, "bit-identical latency");
+    assert_eq!(r.area, direct.area, "identical area");
+    assert_eq!(r.bandwidth_bps, direct.bandwidth_bps, "bit-identical bandwidth");
+    assert_eq!(r.iterations, direct.iterations, "same greedy iteration count");
+}
+
+/// The cached explore path returns the same design as the uncached one.
+#[test]
+fn cached_explore_equals_uncached() {
+    let cfg = DseConfig::default().with_phi(2);
+    let plan = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_device("zcu102")
+        .unwrap();
+    let cached = plan.clone().explore(&cfg).unwrap();
+    let uncached = plan.explore_uncached(&cfg).unwrap();
+    assert_eq!(cached.design().cfgs, uncached.design().cfgs);
+    assert_eq!(cached.result().throughput, uncached.result().throughput);
+}
+
+/// Cache-hit semantics: a second `.explore()` with an identical key does no
+/// DSE work — asserted via the cache's eval counters.
+#[test]
+fn second_explore_hits_cache_without_dse_work() {
+    let cache = DesignCache::new();
+    let cfg = DseConfig::default();
+    let plan = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_device("zcu102")
+        .unwrap();
+
+    let first = plan.clone().explore_in(&cache, &cfg).unwrap();
+    assert!(!first.was_cached(), "first explore must run the DSE");
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.entries), (0, 1, 1));
+
+    let second = plan.clone().explore_in(&cache, &cfg).unwrap();
+    assert!(second.was_cached(), "identical key must hit");
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses), (1, 1), "no second DSE run");
+    assert_eq!(s.entries, 1, "no duplicate entry");
+    assert_eq!(second.design().cfgs, first.design().cfgs, "hit returns the same design");
+    assert_eq!(second.result().throughput, first.result().throughput);
+
+    // any key ingredient change misses: φ, µ, batch, device budget, quant
+    let third = plan.clone().explore_in(&cache, &cfg.with_mu(256)).unwrap();
+    assert!(!third.was_cached(), "different µ is a different design point");
+    assert_eq!(cache.stats().misses, 2);
+}
+
+/// Infeasible design points are routine errors, matchable and cached.
+#[test]
+fn infeasible_is_typed_and_cached() {
+    let cache = DesignCache::new();
+    let plan = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device("zedboard")
+        .unwrap();
+    let e = plan.clone().explore_in(&cache, &DseConfig::vanilla()).unwrap_err();
+    assert!(e.is_infeasible(), "{e}");
+    assert!(e.to_string().contains("resnet18") && e.to_string().contains("zedboard"), "{e}");
+    // the infeasible outcome is memoized too
+    let _ = plan.explore_in(&cache, &DseConfig::vanilla()).unwrap_err();
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses), (1, 1));
+}
+
+/// Stage-0 lookup failures surface as typed errors at `.on_device()`.
+#[test]
+fn unknown_names_are_typed_errors() {
+    let e = Deployment::for_model("resnet18").on_device("zcu9000").unwrap_err();
+    assert!(matches!(e, Error::UnknownDevice(_)), "{e}");
+
+    let e = Deployment::for_model("resnet9000").on_device("zcu102").unwrap_err();
+    assert!(matches!(e, Error::UnknownModel(_)), "{e}");
+
+    let e = Deployment::for_model("toy").quant_label("w3b7").unwrap_err();
+    assert!(matches!(e, Error::UnknownQuant(_)), "{e}");
+
+    let e = Deployment::for_net_file("nets/does_not_exist.net")
+        .on_device("zcu102")
+        .unwrap_err();
+    assert!(matches!(e, Error::Io { .. }), "{e}");
+}
+
+/// The terminal stages work end to end on a small design: schedule metrics
+/// are consistent and the simulator validates the schedule.
+#[test]
+fn schedule_and_simulate_terminals() {
+    let scheduled = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device("zedboard")
+        .unwrap()
+        .explore(&DseConfig::default())
+        .unwrap()
+        .schedule();
+    assert!(
+        !scheduled.burst_schedule().entries.is_empty(),
+        "resnet18 on zedboard must stream"
+    );
+    assert!(scheduled.burst_schedule().schedulable(), "burst schedule must be stall-free");
+
+    let report = scheduled.report();
+    assert!(report.contains("resnet18"), "{report}");
+    assert!(report.contains("streaming layers"), "{report}");
+
+    let sim = scheduled.simulate(&SimConfig::default());
+    assert!(sim.makespan_s > 0.0);
+    let analytic = scheduled.design().latency_ms(1);
+    assert!(
+        sim.latency_ms >= analytic * 0.999,
+        "the simulator must not beat the analytic stall-free bound: \
+         sim {} vs analytic {analytic}",
+        sim.latency_ms
+    );
+}
+
+/// A checkpoint round-trip through `adopt_design` preserves the design.
+#[test]
+fn adopt_design_roundtrip() {
+    let plan = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_device("zcu102")
+        .unwrap();
+    let explored = plan.clone().explore(&DseConfig::default()).unwrap();
+    let text = dse::serialize_design(explored.design(), plan.device());
+    let design = dse::parse_design(&text, plan.network(), plan.device()).unwrap();
+    let adopted = plan.adopt_design(design);
+    assert_eq!(adopted.design().cfgs, explored.design().cfgs);
+    assert_eq!(adopted.result().throughput, explored.result().throughput);
+}
+
+/// Serving terminal: the SimOnly engine serves real requests from a
+/// pipeline-built design.
+#[test]
+fn serve_terminal_sim_only() {
+    use autows::coordinator::{BatchPolicy, ServerOptions};
+    let scheduled = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_device("zcu102")
+        .unwrap()
+        .explore(&DseConfig::default())
+        .unwrap()
+        .schedule();
+    let server = scheduled.serve(BatchPolicy::default(), ServerOptions::default()).unwrap();
+    let resp = server.infer(vec![0.5; scheduled.input_len()]).unwrap();
+    assert_eq!(resp.output.len(), 10);
+    assert!(resp.accel > std::time::Duration::ZERO);
+    server.shutdown();
+}

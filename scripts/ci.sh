@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: build, test, lint, smoke-run the launcher, then record
+# the DSE/simulator performance trajectory (BENCH_dse.json via
+# scripts/bench_dse.sh). Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== build (release) =="
+cargo build --release
+
+echo "== tests =="
+cargo test -q
+
+echo "== clippy =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy unavailable in this toolchain; skipped"
+fi
+
+echo "== smoke: autows run =="
+cargo run --release --bin autows -- run --config configs/resnet18_zcu102.toml
+
+echo "== perf trajectory (BENCH_dse.json) =="
+./scripts/bench_dse.sh
+
+echo "CI OK"
