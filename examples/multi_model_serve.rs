@@ -47,6 +47,7 @@ fn main() -> Result<(), Error> {
             input_len,
             output_len: 10,
         };
+        // registry failures are typed `autows::Error` now — `?` just works
         reg.register(
             ModelEntry {
                 name: alias.into(),
@@ -55,8 +56,7 @@ fn main() -> Result<(), Error> {
                 options: ServerOptions { queue_cap: 256 },
             },
             move || Ok(Box::new(engine) as _),
-        )
-        .map_err(|e| Error::Serve(e.to_string()))?;
+        )?;
     }
 
     println!("\nopen-loop latency vs offered load (64 Poisson arrivals per point):");

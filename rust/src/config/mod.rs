@@ -10,7 +10,7 @@
 //! quant = "w4a5"
 //!
 //! [device]
-//! name      = "zcu102"
+//! name      = "zcu102"     # or  devices = ["zcu102", "zcu102"]  (sharded)
 //! mem_scale = 1.0          # optional Fig. 6-style budget scaling
 //!
 //! [dse]
@@ -51,7 +51,10 @@ pub struct RunSpec {
     pub title: String,
     pub model: ModelSource,
     pub quant: Quant,
-    pub device: Device,
+    /// Device chain. One entry for a single-device run; more for a sharded
+    /// deployment (`[device] devices = [...]`), in chain order. The primary
+    /// (single-device) target is [`RunSpec::device`].
+    pub devices: Vec<Device>,
     pub dse: DseConfig,
     /// Batch size for the simulation step.
     pub sim_batch: u64,
@@ -104,7 +107,7 @@ fn invalid(msg: impl Into<String>) -> ConfigError {
 const KNOWN_KEYS: [(&str, &[&str]); 6] = [
     ("", &["title"]),
     ("model", &["name", "file", "quant"]),
-    ("device", &["name", "mem_scale", "mem_sweep"]),
+    ("device", &["name", "devices", "mem_scale", "mem_sweep"]),
     ("dse", &["phi", "mu", "batch", "vanilla", "bw_margin", "warm_start"]),
     ("sim", &["batch"]),
     ("serve", &["artifact", "requests", "max_batch", "max_wait_ms"]),
@@ -153,16 +156,44 @@ impl RunSpec {
         let quant = Quant::parse(quant_label)
             .ok_or_else(|| invalid(format!("bad model.quant `{quant_label}`")))?;
 
-        // [device]
-        let dev_name = doc.try_str_or("device", "name", "zcu102").map_err(invalid)?;
-        let mut device = Device::by_name(dev_name)
-            .ok_or_else(|| invalid(format!("unknown device `{dev_name}`")))?;
+        // [device] — either a single `name` or a `devices` chain
+        let mut devices = match doc.get("device", "devices") {
+            None => {
+                let dev_name = doc.try_str_or("device", "name", "zcu102").map_err(invalid)?;
+                vec![Device::by_name(dev_name)
+                    .ok_or_else(|| invalid(format!("unknown device `{dev_name}`")))?]
+            }
+            Some(v) => {
+                if doc.get("device", "name").is_some() {
+                    return Err(invalid("device: give either `name` or `devices`, not both"));
+                }
+                let arr = v
+                    .as_array()
+                    .ok_or_else(|| invalid("device.devices must be an array of names"))?;
+                if arr.is_empty() {
+                    return Err(invalid("device.devices must not be empty"));
+                }
+                let mut out = Vec::with_capacity(arr.len());
+                for item in arr {
+                    let name = item
+                        .as_str()
+                        .ok_or_else(|| invalid("device.devices entries must be strings"))?;
+                    out.push(
+                        Device::by_name(name)
+                            .ok_or_else(|| invalid(format!("unknown device `{name}`")))?,
+                    );
+                }
+                out
+            }
+        };
         let mem_scale = doc.try_float_or("device", "mem_scale", 1.0).map_err(invalid)?;
         if !(0.01..=10.0).contains(&mem_scale) {
             return Err(invalid(format!("device.mem_scale {mem_scale} out of range (0.01..10)")));
         }
         if (mem_scale - 1.0).abs() > 1e-12 {
-            device = device.with_mem_scale(mem_scale);
+            for d in &mut devices {
+                *d = d.with_mem_scale(mem_scale);
+            }
         }
 
         // [dse]
@@ -190,6 +221,14 @@ impl RunSpec {
         let sim_batch = doc.try_int_or("sim", "batch", 1).map_err(invalid)?.max(1) as u64;
 
         // [serve]
+        // The PJRT artifact path is single-device; a sharded run serves the
+        // sim-only chain, so an explicit artifact there is a spec error
+        // (mirrors the CLI's --artifact/--devices rejection).
+        if devices.len() > 1 && doc.get("serve", "artifact").is_some() {
+            return Err(invalid(
+                "serve.artifact is single-device; sharded runs serve the sim-only chain (drop the key)",
+            ));
+        }
         let serve = if doc.has_section("serve") {
             let artifact = doc
                 .try_str_or("serve", "artifact", "artifacts/toy_cnn_b8.hlo.txt")
@@ -229,7 +268,18 @@ impl RunSpec {
             }
         };
 
-        Ok(RunSpec { title, model, quant, device, dse, sim_batch, serve, mem_sweep })
+        Ok(RunSpec { title, model, quant, devices, dse, sim_batch, serve, mem_sweep })
+    }
+
+    /// The primary device — the single-device pipeline target
+    /// (`devices[0]`; sharded specs use the whole [`RunSpec::devices`]).
+    pub fn device(&self) -> &Device {
+        &self.devices[0]
+    }
+
+    /// Is this spec a sharded (multi-device) deployment?
+    pub fn is_sharded(&self) -> bool {
+        self.devices.len() > 1
     }
 
     /// Load a spec from a file path.
@@ -253,14 +303,24 @@ impl RunSpec {
         }
     }
 
+    fn deployment(&self) -> crate::pipeline::Deployment {
+        match &self.model {
+            ModelSource::Zoo(name) => crate::pipeline::Deployment::for_model(name),
+            ModelSource::File(path) => crate::pipeline::Deployment::for_net_file(path),
+        }
+        .quant(self.quant)
+    }
+
     /// Resolve the spec's model and (budget-scaled) device into a pipeline
     /// [`Planned`](crate::pipeline::Planned) stage.
     pub fn plan(&self) -> Result<crate::pipeline::Planned, crate::Error> {
-        let dep = match &self.model {
-            ModelSource::Zoo(name) => crate::pipeline::Deployment::for_model(name),
-            ModelSource::File(path) => crate::pipeline::Deployment::for_net_file(path),
-        };
-        dep.quant(self.quant).on_device(self.device.clone())
+        self.deployment().on_device(self.device().clone())
+    }
+
+    /// Resolve the spec's model and device chain into a pipeline
+    /// [`PartitionedPlanned`](crate::pipeline::PartitionedPlanned) stage.
+    pub fn plan_sharded(&self) -> Result<crate::pipeline::PartitionedPlanned, crate::Error> {
+        self.deployment().on_devices(&self.devices)
     }
 
     /// Execute the full run this spec describes — DSE, simulation, the
@@ -270,6 +330,10 @@ impl RunSpec {
         use crate::coordinator::{BatchPolicy, ServerOptions};
         use crate::pipeline::{self, EngineSpec};
         use crate::sim::SimConfig;
+
+        if self.is_sharded() {
+            return self.execute_sharded();
+        }
 
         let plan = self.plan()?;
         println!("== {} ==", self.title);
@@ -281,7 +345,7 @@ impl RunSpec {
             s.total_layers,
             s.params as f64 / 1e6,
             s.macs as f64 / 1e9,
-            self.device.name
+            self.device().name
         );
 
         // DSE (through the design cache; sweep/serve below reuse the entry)
@@ -297,9 +361,9 @@ impl RunSpec {
             "DSE: θ={:.1} fps, latency={:.2} ms, mem {:.0}%, bw {:.2}/{:.2} Gbps, {} streaming layers",
             r.throughput,
             r.latency_ms,
-            r.area.mem_utilization(&self.device) * 100.0,
+            r.area.mem_utilization(self.device()) * 100.0,
             r.bandwidth_bps / 1e9,
-            self.device.bandwidth_gbps(),
+            self.device().bandwidth_gbps(),
             r.design.streaming_count()
         );
 
@@ -356,6 +420,77 @@ impl RunSpec {
         }
         Ok(())
     }
+
+    /// The sharded launcher path: cut search + per-partition DSE, the
+    /// partitioned report, the chain simulation and (optionally) the chained
+    /// serving session. `mem_sweep` is single-device-only and skipped here.
+    fn execute_sharded(&self) -> Result<(), crate::Error> {
+        use crate::coordinator::{BatchPolicy, ServerOptions};
+        use crate::sim::SimConfig;
+
+        let plan = self.plan_sharded()?;
+        println!("== {} ==", self.title);
+        let s = plan.network().stats();
+        let chain: Vec<&str> = self.devices.iter().map(|d| d.name).collect();
+        println!(
+            "model {} ({}): {} layers, {:.2}M params, {:.2}G MACs sharded across [{}]",
+            plan.network().name,
+            self.quant,
+            s.total_layers,
+            s.params as f64 / 1e6,
+            s.macs as f64 / 1e9,
+            chain.join(", ")
+        );
+
+        let explored = match plan.explore(&self.dse) {
+            Err(e) if e.is_infeasible() => {
+                println!("DSE: INFEASIBLE on every cut (vanilla={})", !self.dse.allow_streaming);
+                return Ok(());
+            }
+            other => other?,
+        };
+        let scheduled = explored.schedule_for_batch(self.sim_batch);
+        print!("{}", scheduled.report());
+
+        let sim = scheduled.simulate(&SimConfig { batch: self.sim_batch, ..Default::default() });
+        println!(
+            "sim (batch={}): makespan={:.3} ms, stalls={:.1} us, steady period={:.2} us, \
+             bottleneck={:?}",
+            self.sim_batch,
+            sim.makespan_s * 1e3,
+            sim.total_stall_s * 1e6,
+            sim.steady_period_s * 1e6,
+            sim.bottleneck
+        );
+
+        if !self.mem_sweep.is_empty() {
+            println!("mem sweep: skipped (single-device only)");
+        }
+
+        if let Some(serve) = &self.serve {
+            println!(
+                "serving {} requests through the {}-partition chain (max batch {}):",
+                serve.requests,
+                self.devices.len(),
+                serve.max_batch
+            );
+            let server = scheduled.serve(
+                BatchPolicy {
+                    max_batch: serve.max_batch,
+                    max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
+                },
+                ServerOptions::default(),
+            )?;
+            crate::pipeline::drive_synthetic(&server, serve.requests, scheduled.input_len())?;
+            let m = server.metrics();
+            println!(
+                "  throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+                m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
+            );
+            server.shutdown();
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -389,9 +524,9 @@ max_batch = 4
         assert_eq!(s.title, "resnet18 on zcu102");
         assert_eq!(s.model, ModelSource::Zoo("resnet18".into()));
         assert_eq!(s.quant, Quant::W4A5);
-        assert_eq!(s.device.name, "zcu102");
+        assert_eq!(s.device().name, "zcu102");
         // mem_scale applied
-        assert!(s.device.mem_bits() < Device::zcu102().mem_bits());
+        assert!(s.device().mem_bits() < Device::zcu102().mem_bits());
         assert_eq!(s.dse.phi, 2);
         assert_eq!(s.dse.mu, 256);
         assert!(s.dse.allow_streaming);
@@ -406,12 +541,66 @@ max_batch = 4
     fn minimal_spec_uses_defaults() {
         let s = RunSpec::from_str("[model]\nname = \"toy\"").unwrap();
         assert_eq!(s.quant, Quant::W8A8);
-        assert_eq!(s.device.name, "zcu102");
+        assert_eq!(s.device().name, "zcu102");
         assert_eq!(s.dse.phi, 1);
         assert!(s.serve.is_none());
         assert!(s.mem_sweep.is_empty());
         let net = s.build_network().unwrap();
         assert_eq!(net.name, "toy_cnn");
+    }
+
+    #[test]
+    fn device_chain_parses_and_scales() {
+        let s = RunSpec::from_str(
+            "[model]\nname = \"resnet50\"\n[device]\ndevices = [\"zcu102\", \"zcu102\"]\nmem_scale = 0.5",
+        )
+        .unwrap();
+        assert!(s.is_sharded());
+        assert_eq!(s.devices.len(), 2);
+        assert_eq!(s.device().name, "zcu102");
+        // mem_scale applies to every device in the chain
+        for d in &s.devices {
+            assert!(d.mem_bits() < Device::zcu102().mem_bits());
+        }
+        let plan = s.plan_sharded().unwrap();
+        assert_eq!(plan.devices().len(), 2);
+    }
+
+    #[test]
+    fn device_chain_conflicts_and_errors() {
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[device]\nname = \"zcu102\"\ndevices = [\"zcu102\"]",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("not both"), "{e}");
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[device]\ndevices = []").unwrap_err();
+        assert!(e.to_string().contains("not be empty"), "{e}");
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[device]\ndevices = [\"nope\"]")
+            .unwrap_err();
+        assert!(e.to_string().contains("unknown device"), "{e}");
+        // PJRT artifact serving is single-device; sharded specs must not
+        // silently fall back to checksum numerics
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[device]\ndevices = [\"zcu102\", \"zcu102\"]\n\
+             [serve]\nartifact = \"x.hlo.txt\"",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("single-device"), "{e}");
+        // a sharded [serve] without an artifact is fine (sim-only chain)
+        let s = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[device]\ndevices = [\"zcu102\", \"zcu102\"]\n\
+             [serve]\nrequests = 8",
+        )
+        .unwrap();
+        assert!(s.serve.is_some());
+    }
+
+    #[test]
+    fn single_device_spec_is_not_sharded() {
+        let s = RunSpec::from_str("[model]\nname = \"toy\"").unwrap();
+        assert!(!s.is_sharded());
+        assert_eq!(s.devices.len(), 1);
+        assert_eq!(&s.devices[0], s.device());
     }
 
     #[test]

@@ -8,6 +8,12 @@
 use std::time::Duration;
 
 /// Batching policy parameters.
+///
+/// Edge cases (guaranteed by [`Batcher`] and [`super::PriorityBatcher`]):
+/// - `max_wait == 0` means "never hold a request": every push flushes the
+///   pending batch immediately — no deadline, no extra `poll` needed.
+/// - `max_batch == 1` degenerates to unbatched serving: every push returns
+///   its item as a complete batch and no deadline is ever armed.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     pub max_batch: usize,
@@ -35,15 +41,18 @@ impl<T> Batcher<T> {
     }
 
     /// Add a request at monotonic time `now` (seconds). Returns a full batch
-    /// if this push filled it.
+    /// if this push filled it — or the pending batch immediately when the
+    /// policy's `max_wait` is zero (zero wait must never require a `poll`).
     pub fn push(&mut self, item: T, now: f64) -> Option<Vec<T>> {
-        if self.pending.is_empty() {
-            self.deadline = Some(now + self.policy.max_wait.as_secs_f64());
-        }
         self.pending.push(item);
-        if self.pending.len() >= self.policy.max_batch {
+        if self.pending.len() >= self.policy.max_batch || self.policy.max_wait.is_zero() {
             self.deadline = None;
             return Some(std::mem::take(&mut self.pending));
+        }
+        // arm the deadline only for a batch that actually waits — a
+        // max_batch == 1 policy flushes above and never reaches this
+        if self.pending.len() == 1 {
+            self.deadline = Some(now + self.policy.max_wait.as_secs_f64());
         }
         None
     }
@@ -115,6 +124,26 @@ mod tests {
         b.push(2, 0.05);
         assert!(b.poll(0.051).is_none());
         assert_eq!(b.poll(0.06).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn zero_wait_flushes_on_every_push() {
+        let mut b = Batcher::new(policy(8, 0));
+        let batch = b.push(1, 0.0).expect("max_wait == 0 must flush immediately");
+        assert_eq!(batch, vec![1]);
+        assert_eq!(b.pending(), 0);
+        assert!(b.time_to_deadline(0.0).is_none(), "no deadline may be armed");
+        // and again: the state machine fully resets
+        assert_eq!(b.push(2, 1.0).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn unit_batch_never_arms_a_deadline() {
+        let mut b = Batcher::new(policy(1, 100));
+        let batch = b.push("only", 0.0).expect("max_batch == 1 flushes every push");
+        assert_eq!(batch, vec!["only"]);
+        assert!(b.time_to_deadline(0.0).is_none(), "max_batch == 1 must never set a deadline");
+        assert!(b.poll(1000.0).is_none());
     }
 
     #[test]

@@ -1,0 +1,99 @@
+//! Chained engine: serve a sharded deployment behind one
+//! [`Server`](super::Server).
+//!
+//! A partitioned design is still one model — requests enter partition 0 and
+//! predictions leave the last partition — so the coordinator keeps its
+//! single queue, batcher and metrics and only the engine changes: accel
+//! timing comes from the partitioned simulator
+//! ([`crate::sim::simulate_partitioned`]), which accounts for every
+//! partition's DMA schedule and the inter-device links.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::server::Engine;
+use crate::device::Device;
+use crate::dse::Design;
+use crate::sim::{simulate_partitioned, SimConfig};
+
+/// Timing-only engine for a chain of partitions (the sharded counterpart of
+/// [`super::SimOnlyEngine`]): checksum numerics + the partitioned
+/// simulator's accelerator clock.
+pub struct ChainedEngine {
+    /// `(design, device)` per partition, in chain order.
+    pub stages: Vec<(Design, Device)>,
+    /// Flattened input length of the whole network (partition 0's input).
+    pub input_len: usize,
+    /// Output vector length per request.
+    pub output_len: usize,
+    accel_cache: HashMap<usize, Duration>,
+}
+
+impl ChainedEngine {
+    pub fn new(stages: Vec<(Design, Device)>, input_len: usize, output_len: usize) -> Self {
+        assert!(!stages.is_empty(), "a chain needs at least one partition");
+        ChainedEngine { stages, input_len, output_len, accel_cache: HashMap::new() }
+    }
+}
+
+impl Engine for ChainedEngine {
+    fn infer(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(batch
+            .iter()
+            .map(|b| {
+                let s: f32 = b.iter().sum();
+                vec![s; self.output_len]
+            })
+            .collect())
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn accel_batch_time(&mut self, batch: usize) -> Duration {
+        if let Some(d) = self.accel_cache.get(&batch) {
+            return *d;
+        }
+        let refs: Vec<(&Design, &Device)> =
+            self.stages.iter().map(|(d, dev)| (d, dev)).collect();
+        let sim = simulate_partitioned(
+            &refs,
+            &SimConfig { batch: batch as u64, ..Default::default() },
+        );
+        let d = Duration::from_secs_f64(sim.makespan_s);
+        self.accel_cache.insert(batch, d);
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchPolicy, Server};
+    use crate::dse::{partition, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn chain_engine_serves_behind_one_server() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let devs = [Device::zcu102(), Device::zcu102()];
+        let p = partition::partition(&net, &devs, &DseConfig::default()).unwrap();
+        let stages: Vec<(Design, Device)> = p
+            .parts
+            .iter()
+            .map(|part| (part.result.design.clone(), part.device.clone()))
+            .collect();
+        let input_len = 3 * 32 * 32;
+        let engine = ChainedEngine::new(stages, input_len, 10);
+        let server = Server::start(engine, BatchPolicy::default());
+        let resp = server.infer(vec![0.5; input_len]).unwrap();
+        assert_eq!(resp.output.len(), 10);
+        assert!(resp.accel > Duration::ZERO);
+        assert_eq!(server.metrics().requests, 1, "batching/metrics unchanged");
+        server.shutdown();
+    }
+}

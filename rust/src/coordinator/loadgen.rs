@@ -85,9 +85,9 @@ pub struct LoadResult {
 /// comes from each [`Response::total`] — stamped by the worker at
 /// completion, so draining the receivers after the submission loop does not
 /// inflate early requests (the receivers buffer completed responses).
-pub fn run_open_loop<S>(schedule: &ArrivalSchedule, mut submit: S) -> LoadResult
+pub fn run_open_loop<S, E>(schedule: &ArrivalSchedule, mut submit: S) -> LoadResult
 where
-    S: FnMut() -> anyhow::Result<std::sync::mpsc::Receiver<anyhow::Result<crate::coordinator::Response>>>,
+    S: FnMut() -> Result<std::sync::mpsc::Receiver<anyhow::Result<crate::coordinator::Response>>, E>,
 {
     let start = Instant::now();
     let mut pending: Vec<std::sync::mpsc::Receiver<_>> = Vec::new();

@@ -10,6 +10,7 @@
 //! tokio channels.
 
 mod batcher;
+mod chain;
 mod loadgen;
 mod metrics;
 mod priority;
@@ -17,6 +18,7 @@ mod registry;
 mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use chain::ChainedEngine;
 pub use loadgen::{run_open_loop, ArrivalSchedule, LoadResult};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use priority::{Priority, PriorityBatcher};

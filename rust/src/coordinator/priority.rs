@@ -53,8 +53,19 @@ impl<T> PriorityBatcher<T> {
         batch
     }
 
-    /// Add a request at monotonic `now` (seconds). Returns a full batch.
+    /// Add a request at monotonic `now` (seconds). Returns a full batch —
+    /// or the pending batch immediately under a zero-wait policy (the
+    /// [`BatchPolicy`] edge-case contract: `max_wait == 0` never holds a
+    /// request, `max_batch == 1` never arms a deadline).
     pub fn push(&mut self, item: T, prio: Priority, now: f64) -> Option<Vec<T>> {
+        let had_pending = self.total_pending() > 0;
+        match prio {
+            Priority::High => self.high.push(item),
+            Priority::Normal => self.normal.push(item),
+        }
+        if self.total_pending() >= self.policy.max_batch || self.policy.max_wait.is_zero() {
+            return Some(self.form_batch());
+        }
         let wait = match prio {
             Priority::High => self.policy.max_wait.as_secs_f64() * self.high_wait_frac,
             Priority::Normal => self.policy.max_wait.as_secs_f64(),
@@ -62,16 +73,9 @@ impl<T> PriorityBatcher<T> {
         let item_deadline = now + wait;
         // the batch deadline is the *earliest* pending deadline
         self.deadline = Some(match self.deadline {
-            Some(d) if self.total_pending() > 0 => d.min(item_deadline),
+            Some(d) if had_pending => d.min(item_deadline),
             _ => item_deadline,
         });
-        match prio {
-            Priority::High => self.high.push(item),
-            Priority::Normal => self.normal.push(item),
-        }
-        if self.total_pending() >= self.policy.max_batch {
-            return Some(self.form_batch());
-        }
         None
     }
 
@@ -151,6 +155,17 @@ mod tests {
         b.push(3, Priority::Normal, 0.001);
         assert_eq!(b.pending(), 1);
         assert_eq!(b.drain().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn zero_wait_and_unit_batch_edge_cases() {
+        let mut b = PriorityBatcher::new(policy(8, 0));
+        assert_eq!(b.push(1, Priority::Normal, 0.0).unwrap(), vec![1]);
+        assert!(b.time_to_deadline(0.0).is_none());
+
+        let mut b = PriorityBatcher::new(policy(1, 100));
+        assert_eq!(b.push("h", Priority::High, 0.0).unwrap(), vec!["h"]);
+        assert!(b.time_to_deadline(0.0).is_none(), "unit batch never arms a deadline");
     }
 
     #[test]

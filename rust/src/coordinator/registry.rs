@@ -5,12 +5,18 @@
 //! per entry — each with its own worker thread, engine, batcher and metrics
 //! — and routes by model name, mirroring the model-registry pattern of
 //! serving frameworks (vLLM router, Triton).
+//!
+//! Failures surface as the typed [`crate::Error`] enum — an unknown model
+//! is [`Error::UnknownModel`], a name collision [`Error::DuplicateModel`],
+//! a malformed request [`Error::InputLength`] — so callers match on the
+//! class instead of string-probing, same as the pipeline surface.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use super::{BatchPolicy, Engine, MetricsSnapshot, Priority, Response, Server, ServerOptions};
+use crate::error::Error;
 
 /// Static description of one served model.
 #[derive(Debug, Clone)]
@@ -39,16 +45,17 @@ impl ModelRegistry {
     }
 
     /// Register a model with an engine factory (constructed on the model's
-    /// worker thread — required for PJRT engines). Errors if the name is
-    /// taken or the factory fails.
-    pub fn register<F>(&mut self, entry: ModelEntry, factory: F) -> Result<()>
+    /// worker thread — required for PJRT engines). A taken name is
+    /// [`Error::DuplicateModel`]; a factory failure is [`Error::Serve`].
+    pub fn register<F>(&mut self, entry: ModelEntry, factory: F) -> Result<(), Error>
     where
         F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
     {
         if self.servers.contains_key(&entry.name) {
-            return Err(anyhow!("model `{}` already registered", entry.name));
+            return Err(Error::DuplicateModel(entry.name));
         }
-        let server = Server::start_with_opts(factory, entry.policy, entry.options)?;
+        let server = Server::start_with_opts(factory, entry.policy, entry.options)
+            .map_err(|e| Error::Serve(e.to_string()))?;
         self.servers.insert(entry.name.clone(), (entry, server));
         Ok(())
     }
@@ -64,43 +71,51 @@ impl ModelRegistry {
         self.servers.get(model).map(|(e, _)| e)
     }
 
+    /// Validate the route and payload shape for `model`.
+    fn lookup(&self, model: &str, input_len: usize) -> Result<&(ModelEntry, Server), Error> {
+        let found = self
+            .servers
+            .get(model)
+            .ok_or_else(|| Error::UnknownModel(model.to_string()))?;
+        if input_len != found.0.input_len {
+            return Err(Error::InputLength {
+                model: model.to_string(),
+                expected: found.0.input_len,
+                got: input_len,
+            });
+        }
+        Ok(found)
+    }
+
     /// Blocking inference against a named model.
-    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<Response> {
+    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<Response, Error> {
         self.infer_with(model, input, Priority::Normal)
     }
 
     /// Blocking inference with an explicit service class.
-    pub fn infer_with(&self, model: &str, input: Vec<f32>, prio: Priority) -> Result<Response> {
-        let (entry, server) =
-            self.servers.get(model).ok_or_else(|| anyhow!("unknown model `{model}`"))?;
-        if input.len() != entry.input_len {
-            return Err(anyhow!(
-                "model `{model}` expects input length {}, got {}",
-                entry.input_len,
-                input.len()
-            ));
-        }
-        let rx = server.submit_with(input, prio)?;
-        rx.recv().map_err(|_| anyhow!("coordinator dropped request"))?
+    pub fn infer_with(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        prio: Priority,
+    ) -> Result<Response, Error> {
+        let (_, server) = self.lookup(model, input.len())?;
+        let rx = server.submit_with(input, prio).map_err(|e| Error::Serve(e.to_string()))?;
+        rx.recv()
+            .map_err(|_| Error::Serve("coordinator dropped request".to_string()))?
+            .map_err(|e| Error::Serve(e.to_string()))
     }
 
-    /// Async submit against a named model.
+    /// Async submit against a named model. The receiver yields the worker's
+    /// raw response result.
     pub fn submit(
         &self,
         model: &str,
         input: Vec<f32>,
         prio: Priority,
-    ) -> Result<std::sync::mpsc::Receiver<Result<Response>>> {
-        let (entry, server) =
-            self.servers.get(model).ok_or_else(|| anyhow!("unknown model `{model}`"))?;
-        if input.len() != entry.input_len {
-            return Err(anyhow!(
-                "model `{model}` expects input length {}, got {}",
-                entry.input_len,
-                input.len()
-            ));
-        }
-        server.submit_with(input, prio)
+    ) -> Result<std::sync::mpsc::Receiver<Result<Response>>, Error> {
+        let (_, server) = self.lookup(model, input.len())?;
+        server.submit_with(input, prio).map_err(|e| Error::Serve(e.to_string()))
     }
 
     /// Per-model metrics.
@@ -154,7 +169,8 @@ mod tests {
         reg.register(entry("toy", toy_len), move || Ok(Box::new(toy) as _)).unwrap();
         let resp = reg.infer("toy", vec![1.0; toy_len]).unwrap();
         assert_eq!(resp.output.len(), 10);
-        assert!(reg.infer("nonexistent", vec![0.0; 4]).is_err());
+        let err = reg.infer("nonexistent", vec![0.0; 4]).unwrap_err();
+        assert!(matches!(err, Error::UnknownModel(ref m) if m == "nonexistent"), "{err}");
         assert_eq!(reg.models(), vec!["toy"]);
         reg.shutdown();
     }
@@ -166,6 +182,11 @@ mod tests {
         let toy_len = toy.input_len;
         reg.register(entry("toy", toy_len), move || Ok(Box::new(toy) as _)).unwrap();
         let err = reg.infer("toy", vec![0.0; 7]).unwrap_err();
+        assert!(
+            matches!(err, Error::InputLength { expected, got, .. }
+                if expected == toy_len && got == 7),
+            "{err}"
+        );
         assert!(err.to_string().contains("expects input length"), "{err}");
         reg.shutdown();
     }
@@ -178,6 +199,7 @@ mod tests {
         reg.register(entry("toy", len), move || Ok(Box::new(a) as _)).unwrap();
         let b = engine_for("toy", Quant::W8A8, 10);
         let err = reg.register(entry("toy", len), move || Ok(Box::new(b) as _)).unwrap_err();
+        assert!(matches!(err, Error::DuplicateModel(ref m) if m == "toy"), "{err}");
         assert!(err.to_string().contains("already registered"));
         reg.shutdown();
     }
@@ -197,6 +219,17 @@ mod tests {
         assert_eq!(reg.metrics("toy-a").unwrap().requests, 3);
         assert_eq!(reg.metrics("toy-b").unwrap().requests, 1);
         assert!(reg.metrics("missing").is_none());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn engine_factory_failure_is_a_serve_error() {
+        let mut reg = ModelRegistry::new();
+        let err = reg
+            .register(entry("broken", 4), || anyhow::bail!("no such artifact"))
+            .unwrap_err();
+        assert!(matches!(err, Error::Serve(_)), "{err}");
+        assert!(reg.models().is_empty());
         reg.shutdown();
     }
 }

@@ -32,6 +32,14 @@ pub struct Device {
     /// The shared buffer's write port runs at this width in the `clk_dma`
     /// domain regardless of the (often much narrower) read-side `M_wid`.
     pub dma_port_bits: u64,
+    /// Effective bandwidth of the device's inter-device streaming link
+    /// (serial transceivers / network ports used to chain partitions of a
+    /// sharded deployment), bits/second. The link between two devices runs
+    /// at the slower endpoint's rate.
+    pub link_bandwidth_bps: f64,
+    /// One-way latency of the inter-device link (serialization + transport),
+    /// seconds.
+    pub link_latency_s: f64,
 }
 
 /// Capacity of one BRAM36 block in bits.
@@ -65,6 +73,11 @@ impl Device {
         self.bandwidth_bps / 1e9
     }
 
+    /// Inter-device link bandwidth in Gbit/s.
+    pub fn link_gbps(&self) -> f64 {
+        self.link_bandwidth_bps / 1e9
+    }
+
     /// Zynq-7020 (Zedboard): small embedded device, single DDR3 channel
     /// shared with the PS.
     pub fn zedboard() -> Device {
@@ -79,6 +92,8 @@ impl Device {
             clk_comp_mhz: 150.0,
             clk_dma_mhz: 200.0,
             dma_port_bits: 128,
+            link_bandwidth_bps: 8e9, // 1 GbE x8 aggregation via PS
+            link_latency_s: 2e-6,
         }
     }
 
@@ -95,6 +110,8 @@ impl Device {
             clk_comp_mhz: 200.0,
             clk_dma_mhz: 250.0,
             dma_port_bits: 256,
+            link_bandwidth_bps: 40e9, // 4x GTX lanes (Aurora)
+            link_latency_s: 1.5e-6,
         }
     }
 
@@ -113,6 +130,8 @@ impl Device {
             clk_comp_mhz: 250.0,
             clk_dma_mhz: 300.0,
             dma_port_bits: 512,
+            link_bandwidth_bps: 80e9, // 4x SFP+ cages over GTH (Aurora)
+            link_latency_s: 1e-6,
         }
     }
 
@@ -129,6 +148,8 @@ impl Device {
             clk_comp_mhz: 300.0,
             clk_dma_mhz: 450.0,
             dma_port_bits: 4096,
+            link_bandwidth_bps: 100e9, // 1x QSFP28 (100 GbE)
+            link_latency_s: 0.8e-6,
         }
     }
 
@@ -145,6 +166,8 @@ impl Device {
             clk_comp_mhz: 300.0,
             clk_dma_mhz: 450.0,
             dma_port_bits: 2048,
+            link_bandwidth_bps: 200e9, // 2x QSFP28 (100 GbE each)
+            link_latency_s: 0.8e-6,
         }
     }
 
@@ -206,6 +229,17 @@ mod tests {
         assert_eq!(Device::by_name("ZCU102").unwrap().name, "zcu102");
         assert_eq!(Device::by_name("u50").unwrap().dsp, 5952);
         assert!(Device::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn link_parameters_are_sane() {
+        for d in Device::all() {
+            assert!(d.link_bandwidth_bps > 0.0, "{}", d.name);
+            assert!(d.link_latency_s > 0.0 && d.link_latency_s < 1e-3, "{}", d.name);
+            // the chain link is never faster than the DDR/HBM interface on
+            // the big boards and stays in the same order of magnitude
+            assert!(d.link_bandwidth_bps <= d.bandwidth_bps * 2.0, "{}", d.name);
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@ mod compute_alloc;
 mod design;
 mod exhaustive;
 mod memory_alloc;
+pub mod partition;
 pub mod reference;
 mod search;
 mod serialize;
@@ -38,6 +39,7 @@ pub use memory_alloc::{
     allocate_memory, allocate_memory_warm, delta_bandwidth, delta_bandwidth_by,
     increment_offchip, increment_offchip_by, r_target, rebalance_all, write_burst_balance,
 };
+pub use partition::{PartitionPlan, PartitionedResult};
 pub use search::{anneal, random_search, run_with_strategy, Strategy};
 pub use serialize::{parse_design, serialize_design, DesignFormatError};
 pub use sweep::{mem_sweep, parallel_cases, SweepPoint};

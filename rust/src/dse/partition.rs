@@ -1,0 +1,538 @@
+//! Multi-device partitioning: shard one layer-wise pipeline across a chain
+//! of devices connected by streaming links.
+//!
+//! A partition is a **contiguous** layer range — the inter-device link is a
+//! FIFO carrying the boundary activations, exactly like the on-chip FIFOs
+//! between CEs, so the chain stays a pipeline end to end. Cut points are
+//! restricted to positions no residual skip edge crosses (a skip FIFO
+//! cannot span devices), which for the ResNet-style models means block
+//! boundaries.
+//!
+//! The search balances a max-stage-latency objective: every candidate cut
+//! vector runs the per-partition greedy DSE (paper Algorithm 1, the
+//! incremental [`super::Design`] engine) and the winner maximizes the
+//! chain's steady-state throughput
+//!
+//! ```text
+//! θ_chain = min( min_p θ_p ,  min_links  link_bw / boundary_bits )
+//! ```
+//!
+//! with total BRAM as the tie-break. Candidate partitions fan across cores
+//! via [`super::parallel_cases`]; every evaluated `(range, device)` pair is
+//! memoized inside one search so overlapping cut vectors share DSE runs.
+//!
+//! The single-device deployment is the trivial 1-partition case: the whole
+//! network, unrenamed, through the unchanged `dse::run` — bit-identical to
+//! the non-partitioned path (enforced by `tests/partitioned_deploy.rs`).
+
+use std::collections::HashMap;
+
+use super::{parallel_cases, run, DseConfig, DseResult};
+use crate::device::Device;
+use crate::ir::Network;
+
+/// Cap on the number of cut vectors a search evaluates; beyond it the valid
+/// cut list is thinned evenly (deterministically) to keep the search
+/// tractable on deep networks with many devices.
+const MAX_COMBOS: u128 = 1024;
+
+/// One stage of a sharded deployment: a contiguous layer range mapped onto
+/// one device, with its DSE outcome.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// Layer range `[lo, hi)` in the original network's indexing.
+    pub lo: usize,
+    pub hi: usize,
+    pub device: Device,
+    pub result: DseResult,
+}
+
+impl PartitionPlan {
+    /// Number of layers in this partition.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// Outcome of a partitioned DSE: one [`PartitionPlan`] per device plus the
+/// chain-level metrics.
+#[derive(Debug, Clone)]
+pub struct PartitionedResult {
+    /// One plan per device, in chain order.
+    pub parts: Vec<PartitionPlan>,
+    /// Interior cut points (empty for the 1-partition case).
+    pub cuts: Vec<usize>,
+    /// Steady-state chain throughput in samples/s: the slowest of the
+    /// per-partition bottlenecks and the per-link rate caps.
+    pub throughput: f64,
+    /// Activation bits crossing each inter-device boundary, per sample.
+    pub boundary_bits: Vec<u64>,
+}
+
+impl PartitionedResult {
+    /// Analytic single-sample latency through the whole chain, ms: each
+    /// partition's fill + one bottleneck drain, plus each link's transport
+    /// latency and per-sample transfer time. Devices come from the plans
+    /// themselves, so the figure can never be computed against a mismatched
+    /// device list.
+    pub fn latency_ms(&self) -> f64 {
+        let mut total = 0.0;
+        for (i, p) in self.parts.iter().enumerate() {
+            total += p.result.design.latency_ms(1);
+            if i + 1 < self.parts.len() {
+                let (tx, rx) = (&p.device, &self.parts[i + 1].device);
+                let bw = link_bandwidth(tx, rx);
+                let lat = link_latency(tx, rx);
+                total += (self.boundary_bits[i] as f64 / bw + lat) * 1e3;
+            }
+        }
+        total
+    }
+}
+
+/// Activation bits per sample a layer's output stream carries — THE
+/// boundary-traffic formula (the DSE objective, the report and the
+/// simulator all derive link load from this one definition).
+pub fn layer_boundary_bits(layer: &crate::ir::Layer) -> u64 {
+    layer.output_count() * layer.quant.a_bits as u64
+}
+
+/// Activation bits per sample crossing a cut at position `cut` (the output
+/// of layer `cut - 1`).
+pub fn boundary_bits(network: &Network, cut: usize) -> u64 {
+    layer_boundary_bits(&network.layers[cut - 1])
+}
+
+/// The link between two chained devices runs at the slower endpoint's rate.
+pub fn link_bandwidth(tx: &Device, rx: &Device) -> f64 {
+    tx.link_bandwidth_bps.min(rx.link_bandwidth_bps).max(1.0)
+}
+
+/// One-way hop latency between two chained devices (the slower endpoint's
+/// serialization dominates).
+pub fn link_latency(tx: &Device, rx: &Device) -> f64 {
+    tx.link_latency_s.max(rx.link_latency_s)
+}
+
+/// Cut positions (`1..L`) that no residual skip edge crosses: a cut at `c`
+/// is valid iff no layer at index `j >= c` references `skip_from < c`.
+pub fn valid_cuts(network: &Network) -> Vec<usize> {
+    let l = network.layers.len();
+    let mut cuts = Vec::new();
+    'pos: for c in 1..l {
+        for layer in &network.layers[c..] {
+            if matches!(layer.skip_from, Some(s) if s < c) {
+                continue 'pos;
+            }
+        }
+        cuts.push(c);
+    }
+    cuts
+}
+
+/// Extract the `[lo, hi)` layer range as a standalone network. The full
+/// range returns the network unchanged (name included), so the 1-partition
+/// case is content-identical to the original. Skip back-references are
+/// rebased; a range that severs one is a caller bug and panics.
+pub fn subnetwork(network: &Network, lo: usize, hi: usize) -> Network {
+    assert!(lo < hi && hi <= network.layers.len(), "bad partition range {lo}..{hi}");
+    if lo == 0 && hi == network.layers.len() {
+        return network.clone();
+    }
+    let first = &network.layers[lo];
+    let mut sub = Network::new(
+        format!("{}.l{}-{}", network.name, lo, hi),
+        (first.c_in, first.h_in, first.w_in),
+        network.quant,
+    );
+    for layer in &network.layers[lo..hi] {
+        let mut l = layer.clone();
+        l.skip_from = l.skip_from.map(|s| {
+            assert!(s >= lo, "partition {lo}..{hi} severs a skip edge from layer {s}");
+            s - lo
+        });
+        sub.push_unchecked(l);
+    }
+    sub
+}
+
+/// `n choose r` with saturation (only compared against [`MAX_COMBOS`]).
+fn choose(n: usize, r: usize) -> u128 {
+    if r > n {
+        return 0;
+    }
+    let mut acc: u128 = 1;
+    for i in 0..r {
+        acc = acc.saturating_mul((n - i) as u128) / (i as u128 + 1);
+        if acc > MAX_COMBOS * 1024 {
+            return u128::MAX;
+        }
+    }
+    acc
+}
+
+/// Thin `cuts` evenly to the largest prefix size whose `choose(.., r)` stays
+/// under [`MAX_COMBOS`]; deterministic, keeps first and last candidates.
+fn thin_cuts(cuts: &[usize], r: usize) -> Vec<usize> {
+    let mut target = cuts.len();
+    while target > r && choose(target, r) > MAX_COMBOS {
+        target -= 1;
+    }
+    if target >= cuts.len() {
+        return cuts.to_vec();
+    }
+    (0..target)
+        .map(|i| cuts[i * (cuts.len() - 1) / (target - 1).max(1)])
+        .collect()
+}
+
+/// All ascending `r`-combinations of `cuts` (bounded by [`thin_cuts`]).
+fn combinations(cuts: &[usize], r: usize) -> Vec<Vec<usize>> {
+    fn rec(cuts: &[usize], r: usize, start: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if cur.len() == r {
+            out.push(cur.clone());
+            return;
+        }
+        let need = r - cur.len();
+        for i in start..=cuts.len().saturating_sub(need) {
+            cur.push(cuts[i]);
+            rec(cuts, r, i + 1, cur, out);
+            cur.pop();
+        }
+    }
+    if cuts.len() < r {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    rec(cuts, r, 0, &mut Vec::new(), &mut out);
+    out
+}
+
+/// Layer ranges of one cut vector: `[0, c1), [c1, c2), …, [c_last, L)`.
+fn ranges(cuts: &[usize], total: usize) -> Vec<(usize, usize)> {
+    let mut bounds = Vec::with_capacity(cuts.len() + 2);
+    bounds.push(0);
+    bounds.extend_from_slice(cuts);
+    bounds.push(total);
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+/// Chain throughput of a feasible cut vector given its per-partition
+/// results: the slowest partition bottleneck, further capped by every
+/// inter-device link's sustainable sample rate.
+fn chain_throughput(network: &Network, devices: &[Device], cuts: &[usize], thetas: &[f64]) -> f64 {
+    let mut theta = f64::INFINITY;
+    for &t in thetas {
+        theta = theta.min(t);
+    }
+    for (i, &c) in cuts.iter().enumerate() {
+        let bits = boundary_bits(network, c) as f64;
+        let cap = link_bandwidth(&devices[i], &devices[i + 1]) / bits;
+        theta = theta.min(cap);
+    }
+    theta
+}
+
+/// Check an explicit cut vector's shape and legality against a network and
+/// a device count; the error string names the problem. Callers that accept
+/// user-pinned cuts surface this as a usage error *before* any DSE runs or
+/// cache writes — a malformed vector is an argument bug, not infeasibility.
+pub fn validate_cuts(
+    network: &Network,
+    device_count: usize,
+    cuts: &[usize],
+) -> Result<(), String> {
+    let l = network.layers.len();
+    if device_count == 0 {
+        return Err("the device chain is empty".to_string());
+    }
+    if cuts.len() + 1 != device_count {
+        return Err(format!(
+            "{} cut(s) given for {} device(s); a chain of k devices needs k-1 cuts",
+            cuts.len(),
+            device_count
+        ));
+    }
+    if !cuts.windows(2).all(|w| w[0] < w[1]) {
+        return Err(format!("cuts {cuts:?} must be strictly ascending"));
+    }
+    if let Some(&c) = cuts.iter().find(|&&c| c == 0 || c >= l) {
+        return Err(format!("cut {c} out of range (1..{l})"));
+    }
+    let legal = valid_cuts(network);
+    if let Some(&c) = cuts.iter().find(|&&c| !legal.contains(&c)) {
+        return Err(format!(
+            "cut {c} severs a residual skip edge (legal cuts: {legal:?})"
+        ));
+    }
+    Ok(())
+}
+
+/// Evaluate an explicit cut vector: one DSE per partition (in parallel).
+/// Returns `None` when the vector is malformed (see [`validate_cuts`]) or
+/// any partition is infeasible on its device.
+pub fn partition_with_cuts(
+    network: &Network,
+    devices: &[Device],
+    cuts: &[usize],
+    cfg: &DseConfig,
+) -> Option<PartitionedResult> {
+    let l = network.layers.len();
+    if validate_cuts(network, devices.len(), cuts).is_err() {
+        return None;
+    }
+    let rs = ranges(cuts, l);
+    let cases: Vec<(usize, usize, usize)> =
+        rs.iter().enumerate().map(|(d, &(lo, hi))| (lo, hi, d)).collect();
+    let evals = parallel_cases(&cases, |_, &(lo, hi, d)| {
+        run(&subnetwork(network, lo, hi), &devices[d], cfg)
+    });
+    let mut parts = Vec::with_capacity(rs.len());
+    let mut thetas = Vec::with_capacity(rs.len());
+    for ((&(lo, hi), dev), result) in rs.iter().zip(devices).zip(evals) {
+        let result = result?;
+        thetas.push(result.throughput);
+        parts.push(PartitionPlan { lo, hi, device: dev.clone(), result });
+    }
+    let throughput = chain_throughput(network, devices, cuts, &thetas);
+    let boundary = cuts.iter().map(|&c| boundary_bits(network, c)).collect();
+    Some(PartitionedResult {
+        parts,
+        cuts: cuts.to_vec(),
+        throughput,
+        boundary_bits: boundary,
+    })
+}
+
+/// Search the contiguous cut space for the best sharding of `network`
+/// across `devices` (in chain order) and run the per-partition DSE.
+///
+/// Returns `None` when no cut vector yields a feasible design on every
+/// device — the partitioned analogue of an infeasible design point.
+pub fn partition(
+    network: &Network,
+    devices: &[Device],
+    cfg: &DseConfig,
+) -> Option<PartitionedResult> {
+    let l = network.layers.len();
+    let k = devices.len();
+    if k == 0 || l == 0 {
+        return None;
+    }
+    if k == 1 {
+        // Trivial 1-partition case: the unchanged single-device DSE.
+        let result = run(network, &devices[0], cfg)?;
+        let throughput = result.throughput;
+        return Some(PartitionedResult {
+            parts: vec![PartitionPlan { lo: 0, hi: l, device: devices[0].clone(), result }],
+            cuts: Vec::new(),
+            throughput,
+            boundary_bits: Vec::new(),
+        });
+    }
+
+    let legal = valid_cuts(network);
+    if legal.len() < k - 1 {
+        return None;
+    }
+    let candidates = thin_cuts(&legal, k - 1);
+    let combos = combinations(&candidates, k - 1);
+
+    // Devices with identical content share DSE work: canonicalize each
+    // device index to the first index holding equal content.
+    let canon: Vec<usize> = devices
+        .iter()
+        .map(|d| devices.iter().position(|e| e == d).unwrap_or(0))
+        .collect();
+
+    // Every distinct (range, device-content) evaluation needed, in a
+    // deterministic order, fanned across cores.
+    let mut needed: Vec<(usize, usize, usize)> = Vec::new();
+    {
+        let mut seen = std::collections::HashSet::new();
+        for combo in &combos {
+            for (d, &(lo, hi)) in ranges(combo, l).iter().enumerate() {
+                let key = (lo, hi, canon[d]);
+                if seen.insert(key) {
+                    needed.push(key);
+                }
+            }
+        }
+    }
+    let results = parallel_cases(&needed, |_, &(lo, hi, d)| {
+        run(&subnetwork(network, lo, hi), &devices[d], cfg)
+    });
+    let memo: HashMap<(usize, usize, usize), Option<DseResult>> =
+        needed.into_iter().zip(results).collect();
+
+    // Scan the cut vectors: maximize chain throughput, tie-break on total
+    // BRAM (prefer the cheaper balanced layout), then first combo wins.
+    let mut best: Option<(f64, u32, &Vec<usize>)> = None;
+    'combo: for combo in &combos {
+        let mut thetas = Vec::with_capacity(k);
+        let mut bram = 0u32;
+        for (d, &(lo, hi)) in ranges(combo, l).iter().enumerate() {
+            match &memo[&(lo, hi, canon[d])] {
+                Some(r) => {
+                    thetas.push(r.throughput);
+                    bram += r.area.bram.total();
+                }
+                None => continue 'combo,
+            }
+        }
+        let theta = chain_throughput(network, devices, combo, &thetas);
+        let better = match &best {
+            None => true,
+            Some((bt, bb, _)) => theta > *bt || (theta == *bt && bram < *bb),
+        };
+        if better {
+            best = Some((theta, bram, combo));
+        }
+    }
+    let (throughput, _, cuts) = best?;
+    let cuts = cuts.clone();
+
+    let parts = ranges(&cuts, l)
+        .iter()
+        .enumerate()
+        .map(|(d, &(lo, hi))| PartitionPlan {
+            lo,
+            hi,
+            device: devices[d].clone(),
+            result: memo[&(lo, hi, canon[d])].clone().expect("best combo is feasible"),
+        })
+        .collect();
+    let boundary = cuts.iter().map(|&c| boundary_bits(network, c)).collect();
+    Some(PartitionedResult { parts, cuts, throughput, boundary_bits: boundary })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn valid_cuts_respect_skip_edges() {
+        let net = models::resnet18(Quant::W4A5);
+        let cuts = valid_cuts(&net);
+        assert!(!cuts.is_empty(), "resnet18 has block-boundary cuts");
+        for &c in &cuts {
+            for (j, l) in net.layers.iter().enumerate().skip(c) {
+                if let Some(s) = l.skip_from {
+                    assert!(s >= c, "cut {c} severs skip {s}->{j}");
+                }
+            }
+        }
+        // a chain with no skips can cut anywhere
+        let toy = models::toy_cnn(Quant::W8A8);
+        assert_eq!(valid_cuts(&toy).len(), toy.layers.len() - 1);
+    }
+
+    #[test]
+    fn subnetwork_full_range_is_identity() {
+        let net = models::resnet18(Quant::W4A5);
+        let sub = subnetwork(&net, 0, net.layers.len());
+        assert_eq!(sub.name, net.name);
+        assert_eq!(sub.layers.len(), net.layers.len());
+        assert_eq!(
+            crate::ir::serialize_network(&sub),
+            crate::ir::serialize_network(&net),
+            "full-range subnetwork must be content-identical"
+        );
+    }
+
+    #[test]
+    fn subnetwork_rebases_skips_and_shapes() {
+        let net = models::resnet18(Quant::W4A5);
+        let cuts = valid_cuts(&net);
+        let mid = cuts[cuts.len() / 2];
+        let tail = subnetwork(&net, mid, net.layers.len());
+        assert_eq!(tail.input_shape.0, net.layers[mid].c_in);
+        for (j, l) in tail.layers.iter().enumerate() {
+            if let Some(s) = l.skip_from {
+                assert!(s < j, "rebased skip must stay backwards");
+            }
+        }
+        // partition stats add up to the whole
+        let head = subnetwork(&net, 0, mid);
+        assert_eq!(
+            head.stats().params + tail.stats().params,
+            net.stats().params,
+            "partitions must cover every weight exactly once"
+        );
+    }
+
+    #[test]
+    fn one_partition_matches_direct_dse() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let direct = run(&net, &dev, &cfg).unwrap();
+        let p = partition(&net, std::slice::from_ref(&dev), &cfg).unwrap();
+        assert_eq!(p.parts.len(), 1);
+        assert!(p.cuts.is_empty());
+        assert_eq!(p.parts[0].result.design.cfgs, direct.design.cfgs);
+        assert_eq!(p.parts[0].result.design.off_bits, direct.design.off_bits);
+        assert_eq!(p.throughput, direct.throughput);
+    }
+
+    #[test]
+    fn two_way_split_is_feasible_and_balanced() {
+        let net = models::resnet18(Quant::W4A5);
+        let devs = [Device::zcu102(), Device::zcu102()];
+        let cfg = DseConfig::default();
+        let p = partition(&net, &devs, &cfg).expect("resnet18 shards across 2x zcu102");
+        assert_eq!(p.parts.len(), 2);
+        assert_eq!(p.cuts.len(), 1);
+        assert_eq!(p.parts[0].hi, p.parts[1].lo);
+        assert_eq!(p.parts[0].lo, 0);
+        assert_eq!(p.parts[1].hi, net.layers.len());
+        // chain throughput is the min over stages and is at least as good as
+        // the unsharded deployment (each partition has strictly more budget)
+        let single = run(&net, &devs[0], &cfg).unwrap();
+        assert!(
+            p.throughput >= single.throughput * 0.85,
+            "sharded {} vs single {}",
+            p.throughput,
+            single.throughput
+        );
+        for part in &p.parts {
+            assert!(part.result.area.fits(&part.device));
+        }
+    }
+
+    #[test]
+    fn explicit_cuts_reject_bad_vectors() {
+        let net = models::resnet18(Quant::W4A5);
+        let devs = [Device::zcu102(), Device::zcu102()];
+        let cfg = DseConfig::default();
+        // wrong arity
+        assert!(partition_with_cuts(&net, &devs, &[], &cfg).is_none());
+        // out of range
+        assert!(partition_with_cuts(&net, &devs, &[net.layers.len()], &cfg).is_none());
+        // severing a skip edge (position 3 is inside the first block)
+        assert!(partition_with_cuts(&net, &devs, &[3], &cfg).is_none());
+        // a legal cut works
+        let legal = valid_cuts(&net);
+        let p = partition_with_cuts(&net, &devs, &legal[legal.len() / 2..][..1], &cfg);
+        assert!(p.is_some());
+    }
+
+    #[test]
+    fn combinatorics_helpers() {
+        assert_eq!(choose(5, 2), 10);
+        assert_eq!(choose(3, 5), 0);
+        let combos = combinations(&[1, 2, 3, 4], 2);
+        assert_eq!(combos.len(), 6);
+        assert_eq!(combos[0], vec![1, 2]);
+        assert_eq!(ranges(&[2, 5], 9), vec![(0, 2), (2, 5), (5, 9)]);
+        let thin = thin_cuts(&(1..100).collect::<Vec<_>>(), 3);
+        assert!(choose(thin.len(), 3) <= MAX_COMBOS);
+        assert!(thin.first() == Some(&1));
+    }
+}

@@ -13,8 +13,13 @@ use crate::config::ConfigError;
 /// Everything that can go wrong between naming a model and serving it.
 #[derive(Debug)]
 pub enum Error {
-    /// Model name not in the zoo ([`crate::models::by_name`]).
+    /// Model name not in the zoo ([`crate::models::by_name`]) or not in a
+    /// serving registry ([`crate::coordinator::ModelRegistry`]).
     UnknownModel(String),
+    /// Registering a model name the registry already serves.
+    DuplicateModel(String),
+    /// A request's flattened input length does not match the model's.
+    InputLength { model: String, expected: usize, got: usize },
     /// Device name not in the library ([`crate::device::Device::by_name`]).
     UnknownDevice(String),
     /// Quantization label that [`crate::ir::Quant::parse`] rejects.
@@ -40,6 +45,10 @@ impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Error::UnknownModel(name) => write!(f, "unknown model `{name}`"),
+            Error::DuplicateModel(name) => write!(f, "model `{name}` already registered"),
+            Error::InputLength { model, expected, got } => {
+                write!(f, "model `{model}` expects input length {expected}, got {got}")
+            }
             Error::UnknownDevice(name) => write!(f, "unknown device `{name}`"),
             Error::UnknownQuant(label) => {
                 write!(f, "unknown quantization `{label}` (w4a4|w4a5|w8a8|f32|w<N>a<M>)")

@@ -35,6 +35,13 @@
 //! infeasible design point, config or serving problems) — match on the
 //! class instead of string-probing.
 //!
+//! **Sharded deployments** swap `on_device` for
+//! `on_devices(&["zcu102", "zcu102"])`: the network is partitioned across a
+//! chain of devices joined by streaming links (cut-point search in
+//! [`dse::partition`]), each partition gets its own DMA burst schedule, the
+//! partitioned simulator models the links, and the chain serves behind one
+//! coordinator — see [`pipeline`] for the staged walk-through.
+//!
 //! ## Layers (bottom-up)
 //!
 //! - [`ir`] — DNN graph intermediate representation (layers, shapes, bitwidths).

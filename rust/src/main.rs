@@ -96,13 +96,36 @@ fn parse_quant(s: &str) -> Result<Quant, Error> {
     Quant::parse(s).ok_or_else(|| Error::UnknownQuant(s.to_string()))
 }
 
+/// Parse `--devices d1,d2,...` into a device chain for a sharded
+/// deployment. Rejects combining with `--device`.
+fn parse_device_chain(args: &Args) -> Result<Option<Vec<String>>, Error> {
+    let Some(list) = args.flags.get("devices") else {
+        return Ok(None);
+    };
+    if args.has("device") {
+        return Err(Error::Usage("give either --device or --devices, not both".to_string()));
+    }
+    let names: Vec<String> = list
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        return Err(Error::Usage("--devices: empty device list".to_string()));
+    }
+    Ok(Some(names))
+}
+
 const USAGE: &str = "usage: autows <report|dse|simulate|serve|run> [options]
   report <table1|tech|compress|strategies|table2|table3|fig5|fig6|fig7|yolo|all>
   dse      --model resnet18 --device zcu102 --quant w4a5 [--vanilla] [--phi 1] [--mu 512]
            [--warm] [--save PATH] [--tech]
   simulate --model resnet18 --device zcu102 --quant w4a5 [--batch 1] [--design PATH]
   serve    --artifact artifacts/toy_cnn_b8.hlo.txt [--requests 64] [--max-batch 8] [--device zcu102]
-  run      --config configs/resnet18_zcu102.toml   # full pipeline from a config file";
+  run      --config configs/resnet18_zcu102.toml   # full pipeline from a config file
+
+  dse/simulate/serve also accept --devices d1,d2,... to shard the model
+  across a chain of devices (e.g. --devices zcu102,zcu102).";
 
 fn main() {
     if let Err(e) = run_cli() {
@@ -127,6 +150,7 @@ fn run_cli() -> Result<(), Error> {
             &[
                 val("model"),
                 val("device"),
+                val("devices"),
                 val("quant"),
                 val("phi"),
                 val("mu"),
@@ -139,12 +163,25 @@ fn run_cli() -> Result<(), Error> {
         "simulate" => cmd_simulate(&Args::parse(
             "simulate",
             rest,
-            &[val("model"), val("device"), val("quant"), val("batch"), val("design")],
+            &[
+                val("model"),
+                val("device"),
+                val("devices"),
+                val("quant"),
+                val("batch"),
+                val("design"),
+            ],
         )?),
         "serve" => cmd_serve(&Args::parse(
             "serve",
             rest,
-            &[val("artifact"), val("requests"), val("max-batch"), val("device")],
+            &[
+                val("artifact"),
+                val("requests"),
+                val("max-batch"),
+                val("device"),
+                val("devices"),
+            ],
         )?),
         "run" => cmd_run(&Args::parse("run", rest, &[val("config")])?),
         "help" | "--help" | "-h" => {
@@ -203,6 +240,27 @@ fn cmd_dse(args: &Args) -> Result<(), Error> {
         .with_streaming(!args.has("vanilla"))
         .with_warm_start(args.has("warm"));
 
+    if let Some(chain) = parse_device_chain(args)? {
+        if args.has("save") || args.has("tech") {
+            return Err(Error::Usage(
+                "--save and --tech are single-device options (not valid with --devices)"
+                    .to_string(),
+            ));
+        }
+        let plan = Deployment::for_model(&model).quant(quant).on_devices(&chain)?;
+        match plan.explore(&cfg) {
+            Err(e) if e.is_infeasible() => {
+                println!(
+                    "INFEASIBLE: {model} does not shard across [{}] (vanilla={})",
+                    chain.join(", "),
+                    args.has("vanilla")
+                );
+            }
+            other => print!("{}", other?.schedule().report()),
+        }
+        return Ok(());
+    }
+
     let plan = Deployment::for_model(&model).quant(quant).on_device(device.as_str())?;
     let scheduled = match plan.explore(&cfg) {
         Err(e) if e.is_infeasible() => {
@@ -248,6 +306,31 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
     let quant = parse_quant(&args.get("quant", "w4a5"))?;
     let batch: u64 = args.get_num("batch", 1u64)?;
 
+    if let Some(chain) = parse_device_chain(args)? {
+        if args.has("design") {
+            return Err(Error::Usage(
+                "--design checkpoints are single-device (not valid with --devices)".to_string(),
+            ));
+        }
+        let scheduled = Deployment::for_model(&model)
+            .quant(quant)
+            .on_devices(&chain)?
+            .explore(&DseConfig::default())?
+            .schedule_for_batch(batch);
+        let sim = scheduled.simulate(&SimConfig { batch, ..Default::default() });
+        println!(
+            "{model}-{quant} sharded across [{}] batch={batch}: makespan={:.3} ms, \
+             stalls={:.1} us, steady period={:.2} us, bottleneck={:?}, {} events",
+            chain.join(", "),
+            sim.makespan_s * 1e3,
+            sim.total_stall_s * 1e6,
+            sim.steady_period_s * 1e6,
+            sim.bottleneck,
+            sim.events()
+        );
+        return Ok(());
+    }
+
     let plan = Deployment::for_model(&model).quant(quant).on_device(device.as_str())?;
     // either reload a DSE checkpoint or re-run the search (cached)
     let explored = match args.flags.get("design") {
@@ -288,6 +371,40 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
     let requests: usize = args.get_num("requests", 64usize)?;
     let max_batch: usize = args.get_num("max-batch", 8usize)?;
     let device = args.get("device", "zcu102");
+
+    if let Some(chain) = parse_device_chain(args)? {
+        if args.has("artifact") {
+            return Err(Error::Usage(
+                "--artifact serving is single-device; --devices serves the sim-only chain"
+                    .to_string(),
+            ));
+        }
+        let scheduled = Deployment::for_model("toy")
+            .quant(Quant::W8A8)
+            .on_devices(&chain)?
+            .explore(&DseConfig::default())?
+            .schedule_for_batch(max_batch as u64);
+        let server = scheduled.serve(
+            BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
+            ServerOptions::default(),
+        )?;
+        let t0 = std::time::Instant::now();
+        drive_synthetic(&server, requests, scheduled.input_len())?;
+        let elapsed = t0.elapsed();
+        let m = server.metrics();
+        println!(
+            "{requests} requests through the {}-partition chain in {:.1} ms: \
+             throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+            chain.len(),
+            elapsed.as_secs_f64() * 1e3,
+            m.throughput_rps,
+            m.p50_ms,
+            m.p99_ms,
+            m.mean_batch
+        );
+        server.shutdown();
+        return Ok(());
+    }
 
     let scheduled = Deployment::for_model("toy")
         .quant(Quant::W8A8)

@@ -26,7 +26,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use crate::device::Device;
-use crate::dse::{self, DseConfig, DseResult};
+use crate::dse::{self, partition, DseConfig, DseResult, PartitionedResult};
 use crate::ir::Network;
 
 /// Snapshot of the cache counters (the eval counters the cache-hit tests
@@ -42,9 +42,14 @@ pub struct CacheStats {
 }
 
 /// Memoization table for DSE outcomes, keyed by design-point content.
+/// Single-device and partitioned (multi-device) outcomes live in separate
+/// maps under disjoint key schemas — a 1-partition deployment and the
+/// plain single-device deployment of the same content never collide, and a
+/// cached infeasible on one partition layout cannot leak to another.
 #[derive(Debug, Default)]
 pub struct DesignCache {
     map: Mutex<HashMap<String, Option<DseResult>>>,
+    parts: Mutex<HashMap<String, Option<PartitionedResult>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -54,17 +59,12 @@ impl DesignCache {
         DesignCache::default()
     }
 
-    /// The canonical content key of a design point. Stored verbatim (not
-    /// hashed down to 64 bits) so equal keys are *guaranteed* equal content.
-    pub fn key(network: &Network, device: &Device, cfg: &DseConfig) -> String {
-        let mut k = String::with_capacity(1024);
-        // network content: canonical .net serialization covers name, input
-        // shape, quantization (global + per-layer overrides) and every layer
-        k.push_str(&crate::ir::serialize_network(network));
-        // device content: every field that feeds the analytic models
+    /// Append every [`Device`] field that feeds the analytic models (and the
+    /// link model) to a key.
+    fn push_device(k: &mut String, device: &Device) {
         let _ = write!(
             k,
-            "|dev={}:{}:{}:{}:{}:{}:{:x}:{:x}:{:x}:{}",
+            "|dev={}:{}:{}:{}:{}:{}:{:x}:{:x}:{:x}:{}:{:x}:{:x}",
             device.name,
             device.bram36,
             device.uram,
@@ -75,8 +75,13 @@ impl DesignCache {
             device.clk_comp_mhz.to_bits(),
             device.clk_dma_mhz.to_bits(),
             device.dma_port_bits,
+            device.link_bandwidth_bps.to_bits(),
+            device.link_latency_s.to_bits(),
         );
-        // every DSE hyperparameter (float via bit pattern: exact)
+    }
+
+    /// Append every DSE hyperparameter (floats via bit pattern: exact).
+    fn push_cfg(k: &mut String, cfg: &DseConfig) {
         let _ = write!(
             k,
             "|cfg=phi{}:mu{}:b{}:s{}:bw{:x}:w{}",
@@ -87,6 +92,48 @@ impl DesignCache {
             cfg.bw_margin.to_bits(),
             cfg.warm_start,
         );
+    }
+
+    /// The canonical content key of a design point. Stored verbatim (not
+    /// hashed down to 64 bits) so equal keys are *guaranteed* equal content.
+    pub fn key(network: &Network, device: &Device, cfg: &DseConfig) -> String {
+        let mut k = String::with_capacity(1024);
+        // network content: canonical .net serialization covers name, input
+        // shape, quantization (global + per-layer overrides) and every layer
+        k.push_str(&crate::ir::serialize_network(network));
+        Self::push_device(&mut k, device);
+        Self::push_cfg(&mut k, cfg);
+        k
+    }
+
+    /// Content key of a partitioned design point: the network plus the
+    /// **whole device list** (count and order matter — a chain of two
+    /// `zcu102`s is a different design point from one, even though every
+    /// device field matches) and, when the caller pins the cut vector, the
+    /// cuts themselves. Single- and multi-device keys never collide: they
+    /// live in separate maps with different schemas.
+    pub fn multi_key(
+        network: &Network,
+        devices: &[Device],
+        cuts: Option<&[usize]>,
+        cfg: &DseConfig,
+    ) -> String {
+        let mut k = String::with_capacity(1024);
+        k.push_str(&crate::ir::serialize_network(network));
+        let _ = write!(k, "|ndev={}", devices.len());
+        for device in devices {
+            Self::push_device(&mut k, device);
+        }
+        match cuts {
+            None => k.push_str("|cut=auto"),
+            Some(cuts) => {
+                k.push_str("|cut=");
+                for c in cuts {
+                    let _ = write!(k, "{c},");
+                }
+            }
+        }
+        Self::push_cfg(&mut k, cfg);
         k
     }
 
@@ -110,21 +157,47 @@ impl DesignCache {
         (result, false)
     }
 
+    /// Return the cached partitioned outcome for this multi-device design
+    /// point, running the cut search + per-partition DSE on a miss. The
+    /// boolean is `true` when the result came from the cache.
+    pub fn explore_partitioned(
+        &self,
+        network: &Network,
+        devices: &[Device],
+        cuts: Option<&[usize]>,
+        cfg: &DseConfig,
+    ) -> (Option<PartitionedResult>, bool) {
+        let key = Self::multi_key(network, devices, cuts, cfg);
+        if let Some(found) = self.parts.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (found.clone(), true);
+        }
+        // run outside the lock, like the single-device path
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let result = match cuts {
+            None => partition::partition(network, devices, cfg),
+            Some(cuts) => partition::partition_with_cuts(network, devices, cuts, cfg),
+        };
+        self.parts.lock().unwrap().entry(key).or_insert_with(|| result.clone());
+        (result, false)
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.map.lock().unwrap().len(),
+            entries: self.map.lock().unwrap().len() + self.parts.lock().unwrap().len(),
         }
     }
 
     /// Drop every entry (counters are kept — they are cumulative).
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
+        self.parts.lock().unwrap().clear();
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.map.lock().unwrap().len() + self.parts.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -182,6 +255,46 @@ mod tests {
         assert_eq!(a.throughput, b.throughput);
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn multi_key_separates_device_count_and_cuts() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let one = DesignCache::multi_key(&net, std::slice::from_ref(&dev), None, &cfg);
+        let two = DesignCache::multi_key(&net, &[dev.clone(), dev.clone()], None, &cfg);
+        // same device fields, different count -> different design points
+        assert_ne!(one, two);
+        // the single-device key schema never collides with the 1-partition one
+        assert_ne!(one, DesignCache::key(&net, &dev, &cfg));
+        // an explicit cut is a different point from the searched cut
+        let pinned = DesignCache::multi_key(&net, &[dev.clone(), dev.clone()], Some(&[2]), &cfg);
+        assert_ne!(two, pinned);
+        // link parameters are part of the content
+        let mut fat = dev.clone();
+        fat.link_bandwidth_bps *= 2.0;
+        let fat_key = DesignCache::multi_key(&net, &[dev.clone(), fat], None, &cfg);
+        assert_ne!(two, fat_key);
+    }
+
+    #[test]
+    fn partitioned_outcomes_are_cached_per_layout() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let cache = DesignCache::new();
+        let (a, ca) = cache.explore_partitioned(&net, &[dev.clone(), dev.clone()], None, &cfg);
+        let (b, cb) = cache.explore_partitioned(&net, &[dev.clone(), dev.clone()], None, &cfg);
+        assert!(!ca && cb, "second lookup of the same layout must hit");
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.cuts, b.cuts);
+        assert_eq!(a.throughput, b.throughput);
+        // a different layout is a different entry, not a hit
+        let (c, cc) = cache.explore_partitioned(&net, std::slice::from_ref(&dev), None, &cfg);
+        assert!(!cc);
+        assert_eq!(c.unwrap().parts.len(), 1);
+        assert_eq!(cache.stats().entries, 2);
     }
 
     #[test]

@@ -21,6 +21,29 @@
 //! repeated serve runs on the same (network, device, config) content skip
 //! the redundant DSE and get bit-identical results.
 //!
+//! **Sharded deployments** take the same staircase with `on_devices`: the
+//! network is split across a chain of devices (contiguous layer ranges, cut
+//! points searched to balance the pipeline — see
+//! [`crate::dse::partition`]), each partition gets its own DMA burst
+//! schedule, and the terminals simulate/report/serve the whole chain. A
+//! one-element device list is bit-identical to `on_device`:
+//!
+//! ```no_run
+//! use autows::dse::DseConfig;
+//! use autows::ir::Quant;
+//! use autows::pipeline::Deployment;
+//!
+//! fn main() -> Result<(), autows::Error> {
+//!     let sharded = Deployment::for_model("resnet50")
+//!         .quant(Quant::W4A5)
+//!         .on_devices(&["zcu102", "zcu102"])?   // -> PartitionedPlanned
+//!         .explore(&DseConfig::default())?      // -> PartitionedExplored (cut search)
+//!         .schedule();                          // -> PartitionedScheduled
+//!     print!("{}", sharded.report());           // per-partition table + link utilization
+//!     Ok(())
+//! }
+//! ```
+//!
 //! Skipping a stage is a *compile* error — `Planned` simply has no
 //! `schedule` method:
 //!
@@ -71,10 +94,12 @@
 //! ```
 
 pub mod cache;
+mod partitioned;
 mod serve;
 mod stages;
 pub mod sweep;
 
 pub use cache::{design_cache, CacheStats, DesignCache};
+pub use partitioned::{PartitionedExplored, PartitionedPlanned, PartitionedScheduled};
 pub use serve::{drive_synthetic, EngineSpec};
 pub use stages::{Deployment, Explored, IntoDevice, Planned, Scheduled};

@@ -1,0 +1,326 @@
+//! The partitioned (sharded) deployment stages: `PartitionedPlanned` →
+//! `PartitionedExplored` → `PartitionedScheduled`.
+//!
+//! Mirrors the single-device staged builder one-to-one —
+//! [`Deployment::on_devices`](super::Deployment::on_devices) instead of
+//! `on_device`, then `explore` (cut-point search + per-partition DSE,
+//! through the design cache), then `schedule` (one burst schedule per
+//! partition's DMA port), then the terminals `simulate` / `report` /
+//! `serve` (a chain of per-partition engines behind one [`Server`]).
+//!
+//! The 1-partition case is the trivial degenerate chain and is bit-identical
+//! to the single-device path (enforced by `tests/partitioned_deploy.rs`).
+
+use crate::coordinator::{BatchPolicy, ChainedEngine, Server, ServerOptions};
+use crate::device::Device;
+use crate::dse::{partition, DseConfig, PartitionPlan, PartitionedResult};
+use crate::error::Error;
+use crate::ir::Network;
+use crate::schedule::{BurstSchedule, LinkSpec};
+use crate::sim::{simulate_partitioned, PartitionedSimResult, SimConfig};
+
+use super::cache::{design_cache, DesignCache};
+
+/// Stage 1 (multi-device) — a model resolved against a device chain, ready
+/// for the cut-point search.
+#[derive(Debug, Clone)]
+pub struct PartitionedPlanned {
+    network: Network,
+    devices: Vec<Device>,
+    /// Pinned interior cut points; `None` lets `.explore()` search.
+    cuts: Option<Vec<usize>>,
+}
+
+impl PartitionedPlanned {
+    /// Build a partitioned plan directly from parts.
+    pub fn from_parts(network: Network, devices: Vec<Device>) -> PartitionedPlanned {
+        assert!(!devices.is_empty(), "a deployment needs at least one device");
+        PartitionedPlanned { network, devices, cuts: None }
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.network
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    /// Pin the cut vector instead of searching (`cuts.len()` must be
+    /// `devices.len() - 1`; every cut must be legal per
+    /// [`partition::valid_cuts`], or exploration reports infeasible).
+    pub fn with_cuts(mut self, cuts: Vec<usize>) -> PartitionedPlanned {
+        self.cuts = Some(cuts);
+        self
+    }
+
+    /// The same plan with every device's memory budget scaled (the sharded
+    /// analogue of [`super::Planned::with_mem_scale`]).
+    pub fn with_mem_scale(&self, scale: f64) -> PartitionedPlanned {
+        PartitionedPlanned {
+            network: self.network.clone(),
+            devices: self.devices.iter().map(|d| d.with_mem_scale(scale)).collect(),
+            cuts: self.cuts.clone(),
+        }
+    }
+
+    fn infeasible(&self, cfg: &DseConfig) -> Error {
+        let chain: Vec<&str> = self.devices.iter().map(|d| d.name).collect();
+        Error::Infeasible {
+            model: self.network.name.clone(),
+            device: chain.join("+"),
+            vanilla: !cfg.allow_streaming,
+        }
+    }
+
+    /// A malformed pinned cut vector is an argument bug, reported as
+    /// [`Error::Usage`] *before* any DSE runs or cache writes — it must not
+    /// masquerade as (and be cached as) an infeasible design point.
+    fn check_pinned_cuts(&self) -> Result<(), Error> {
+        if let Some(cuts) = &self.cuts {
+            partition::validate_cuts(&self.network, self.devices.len(), cuts)
+                .map_err(|why| Error::Usage(format!("with_cuts: {why}")))?;
+        }
+        Ok(())
+    }
+
+    /// Run the cut-point search and per-partition DSE through the
+    /// process-wide [design cache](design_cache).
+    pub fn explore(self, cfg: &DseConfig) -> Result<PartitionedExplored, Error> {
+        self.explore_in(design_cache(), cfg)
+    }
+
+    /// [`PartitionedPlanned::explore`] with [`DseConfig::default`].
+    pub fn explore_default(self) -> Result<PartitionedExplored, Error> {
+        self.explore(&DseConfig::default())
+    }
+
+    /// [`PartitionedPlanned::explore`] against a caller-owned cache.
+    pub fn explore_in(
+        self,
+        cache: &DesignCache,
+        cfg: &DseConfig,
+    ) -> Result<PartitionedExplored, Error> {
+        self.check_pinned_cuts()?;
+        let (outcome, cached) =
+            cache.explore_partitioned(&self.network, &self.devices, self.cuts.as_deref(), cfg);
+        match outcome {
+            Some(outcome) => Ok(PartitionedExplored {
+                outcome,
+                devices: self.devices,
+                cfg: *cfg,
+                cached,
+            }),
+            None => Err(self.infeasible(cfg)),
+        }
+    }
+
+    /// Run the search bypassing the cache (benchmarks, equivalence oracles).
+    pub fn explore_uncached(self, cfg: &DseConfig) -> Result<PartitionedExplored, Error> {
+        self.check_pinned_cuts()?;
+        let outcome = match &self.cuts {
+            None => partition::partition(&self.network, &self.devices, cfg),
+            Some(cuts) => {
+                partition::partition_with_cuts(&self.network, &self.devices, cuts, cfg)
+            }
+        };
+        match outcome {
+            Some(outcome) => Ok(PartitionedExplored {
+                outcome,
+                devices: self.devices,
+                cfg: *cfg,
+                cached: false,
+            }),
+            None => Err(self.infeasible(cfg)),
+        }
+    }
+}
+
+/// Stage 2 (multi-device) — a feasible sharding with per-partition designs.
+#[derive(Debug, Clone)]
+pub struct PartitionedExplored {
+    outcome: PartitionedResult,
+    devices: Vec<Device>,
+    cfg: DseConfig,
+    cached: bool,
+}
+
+impl PartitionedExplored {
+    pub fn result(&self) -> &PartitionedResult {
+        &self.outcome
+    }
+
+    pub fn partitions(&self) -> &[PartitionPlan] {
+        &self.outcome.parts
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    pub fn config(&self) -> &DseConfig {
+        &self.cfg
+    }
+
+    /// `true` when the sharding came from the design cache (no search ran).
+    pub fn was_cached(&self) -> bool {
+        self.cached
+    }
+
+    /// Derive each partition's DMA burst schedule for the batch size the
+    /// DSE planned for.
+    pub fn schedule(self) -> PartitionedScheduled {
+        let batch = self.cfg.batch;
+        self.schedule_for_batch(batch)
+    }
+
+    /// [`PartitionedExplored::schedule`] for an explicit serving batch size.
+    pub fn schedule_for_batch(self, batch: u64) -> PartitionedScheduled {
+        let schedules = self
+            .outcome
+            .parts
+            .iter()
+            .map(|p| BurstSchedule::from_design(&p.result.design, &p.device, batch))
+            .collect();
+        PartitionedScheduled {
+            outcome: self.outcome,
+            devices: self.devices,
+            schedules,
+            output_len: 10,
+        }
+    }
+}
+
+/// Stage 3 (multi-device) — per-partition designs + burst schedules: the
+/// terminal sharded artifact. Simulate it, render a report, or serve it as
+/// a chain behind one [`Server`].
+#[derive(Debug, Clone)]
+pub struct PartitionedScheduled {
+    outcome: PartitionedResult,
+    devices: Vec<Device>,
+    schedules: Vec<BurstSchedule>,
+    output_len: usize,
+}
+
+impl PartitionedScheduled {
+    pub fn result(&self) -> &PartitionedResult {
+        &self.outcome
+    }
+
+    pub fn partitions(&self) -> &[PartitionPlan] {
+        &self.outcome.parts
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    /// One burst schedule per partition's DMA port, in chain order.
+    pub fn burst_schedules(&self) -> &[BurstSchedule] {
+        &self.schedules
+    }
+
+    /// `(design, device)` per partition, in chain order — the simulator's
+    /// and link model's view of this deployment.
+    fn stage_refs(&self) -> Vec<(&crate::dse::Design, &Device)> {
+        self.outcome.parts.iter().map(|p| (&p.result.design, &p.device)).collect()
+    }
+
+    /// The inter-device links, in chain order (empty for one partition).
+    pub fn links(&self) -> Vec<LinkSpec> {
+        LinkSpec::chain(&self.stage_refs())
+    }
+
+    /// Output vector length of the served checksum engine (default 10).
+    pub fn with_output_len(mut self, output_len: usize) -> PartitionedScheduled {
+        self.output_len = output_len;
+        self
+    }
+
+    /// Flattened per-sample input length of the deployed network
+    /// (partition 0's input).
+    pub fn input_len(&self) -> usize {
+        let (c, h, w) = self.outcome.parts[0].result.design.network.input_shape;
+        (c as usize) * (h as usize) * (w as usize)
+    }
+
+    /// Validate the chain in the partitioned simulator: per-partition event
+    /// simulation plus the link model.
+    pub fn simulate(&self, cfg: &SimConfig) -> PartitionedSimResult {
+        simulate_partitioned(&self.stage_refs(), cfg)
+    }
+
+    /// Human-readable sharded deployment report: chain metrics, then per
+    /// partition the area/bandwidth/DMA figures, with each inter-device
+    /// link's demand and utilization in between.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let net0 = &self.outcome.parts[0].result.design.network;
+        let chain: Vec<&str> = self.devices.iter().map(|d| d.name).collect();
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}-{} sharded across {} devices [{}]: θ={:.1} fps, latency={:.2} ms, cuts={:?}",
+            net0.name.split('.').next().unwrap_or(&net0.name),
+            net0.quant,
+            self.devices.len(),
+            chain.join(", "),
+            self.outcome.throughput,
+            self.outcome.latency_ms(),
+            self.outcome.cuts
+        );
+        let links = self.links();
+        for (i, p) in self.outcome.parts.iter().enumerate() {
+            let r = &p.result;
+            let sched = &self.schedules[i];
+            let _ = writeln!(
+                out,
+                "  partition {i}: layers {}..{} ({} CEs) on {}: θ={:.1} fps, \
+                 area dsp={} lut={} bram={} ({:.0}% mem), bandwidth={:.2}/{:.2} Gbps, \
+                 {} streaming (DMA util {:.0}%)",
+                p.lo,
+                p.hi,
+                p.len(),
+                p.device.name,
+                r.throughput,
+                r.area.dsp,
+                r.area.lut,
+                r.area.bram.total(),
+                r.area.mem_utilization(&p.device) * 100.0,
+                r.bandwidth_bps / 1e9,
+                p.device.bandwidth_gbps(),
+                sched.entries.len(),
+                sched.dma_utilization() * 100.0
+            );
+            if i < links.len() {
+                let link = &links[i];
+                let _ = writeln!(
+                    out,
+                    "  link {i}→{}: {:.1} Kbit/sample over {:.0} Gbps: utilization {:.1}%, \
+                     latency {:.1} us",
+                    i + 1,
+                    link.boundary_bits as f64 / 1e3,
+                    link.bandwidth_bps / 1e9,
+                    link.utilization(self.outcome.throughput) * 100.0,
+                    link.latency_s * 1e6
+                );
+            }
+        }
+        out
+    }
+
+    /// Boot the serving loop for this sharded design: one [`Server`] (queue,
+    /// batcher, metrics unchanged) dispatching to the chain of per-partition
+    /// engines via [`ChainedEngine`].
+    pub fn serve(&self, policy: BatchPolicy, opts: ServerOptions) -> Result<Server, Error> {
+        let stages: Vec<(crate::dse::Design, Device)> = self
+            .outcome
+            .parts
+            .iter()
+            .map(|p| (p.result.design.clone(), p.device.clone()))
+            .collect();
+        let engine = ChainedEngine::new(stages, self.input_len(), self.output_len);
+        Server::start_with_opts(move || Ok(Box::new(engine) as _), policy, opts)
+            .map_err(|e| Error::Serve(e.to_string()))
+    }
+}

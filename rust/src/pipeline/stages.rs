@@ -104,21 +104,49 @@ impl Deployment {
         Ok(self.quant(q))
     }
 
-    /// Resolve model and device into a [`Planned`] deployment.
-    pub fn on_device(self, device: impl IntoDevice) -> Result<Planned, Error> {
-        let device = device.resolve()?;
-        let network = match self.source {
-            ModelSpec::Zoo(name) => models::by_name(&name, self.quant)
-                .ok_or_else(|| Error::UnknownModel(name))?,
+    /// Resolve the model source into a network (shared by the single- and
+    /// multi-device planning paths).
+    fn build_network(source: ModelSpec, quant: Quant) -> Result<Network, Error> {
+        match source {
+            ModelSpec::Zoo(name) => {
+                models::by_name(&name, quant).ok_or_else(|| Error::UnknownModel(name))
+            }
             ModelSpec::File(path) => {
                 let text = std::fs::read_to_string(&path)
                     .map_err(|source| Error::Io { path: path.clone(), source })?;
-                crate::ir::parse_network(&text, self.quant)
-                    .map_err(|source| Error::NetParse { path, source })?
+                crate::ir::parse_network(&text, quant)
+                    .map_err(|source| Error::NetParse { path, source })
             }
-            ModelSpec::Network(net) => net,
-        };
+            ModelSpec::Network(net) => Ok(net),
+        }
+    }
+
+    /// Resolve model and device into a [`Planned`] deployment.
+    pub fn on_device(self, device: impl IntoDevice) -> Result<Planned, Error> {
+        let device = device.resolve()?;
+        let network = Self::build_network(self.source, self.quant)?;
         Ok(Planned { network, device })
+    }
+
+    /// Resolve model and a **device chain** into a
+    /// [`PartitionedPlanned`](super::PartitionedPlanned) deployment: the
+    /// network will be sharded across the listed devices (in chain order) by
+    /// the cut-point search at `.explore()`. A one-element list is the
+    /// trivial 1-partition case, bit-identical to [`Deployment::on_device`].
+    pub fn on_devices<D: IntoDevice + Clone>(
+        self,
+        devices: &[D],
+    ) -> Result<super::PartitionedPlanned, Error> {
+        if devices.is_empty() {
+            return Err(Error::Usage("on_devices: the device list is empty".to_string()));
+        }
+        let devices: Vec<Device> = devices
+            .iter()
+            .cloned()
+            .map(IntoDevice::resolve)
+            .collect::<Result<_, _>>()?;
+        let network = Self::build_network(self.source, self.quant)?;
+        Ok(super::PartitionedPlanned::from_parts(network, devices))
     }
 }
 

@@ -4,7 +4,7 @@ use crate::device::Device;
 use crate::dse::Design;
 
 /// Timing of one streaming layer's write/read pattern.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BurstEntry {
     /// Layer index in the network chain.
     pub layer: usize,
@@ -26,8 +26,9 @@ pub struct BurstEntry {
     pub start_offset: f64,
 }
 
-/// The complete DMA schedule of a design on a device.
-#[derive(Debug, Clone)]
+/// The complete DMA schedule of a design on a device (one DMA port; a
+/// sharded deployment derives one schedule per partition).
+#[derive(Debug, Clone, PartialEq)]
 pub struct BurstSchedule {
     pub entries: Vec<BurstEntry>,
     /// Effective DMA bandwidth available to weights: `B − β_io` (bits/s).

@@ -1,0 +1,90 @@
+//! Inter-device streaming link of a sharded deployment.
+//!
+//! In a partitioned pipeline, the FIFO between the last CE of one device
+//! and the first CE of the next is carried over a serial link ([`Device`]'s
+//! `link_bandwidth_bps` / `link_latency_s`). Like the DMA port inside a
+//! device, the link is a shared, rate-limited resource: its per-sample
+//! transfer time joins the per-partition bottlenecks in the chain's
+//! steady-state period, and when it loses that race the downstream
+//! partition stalls — attributed by the partitioned simulator the same way
+//! DMA contention is attributed within a device.
+
+use crate::device::Device;
+use crate::ir::Layer;
+
+/// One boundary of a device chain: the activation stream from partition `i`
+/// to partition `i + 1`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    /// Activation bits crossing the boundary per sample.
+    pub boundary_bits: u64,
+    /// Effective link bandwidth (slower endpoint), bits/s.
+    pub bandwidth_bps: f64,
+    /// One-way hop latency, seconds.
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    /// The link carrying `upstream_last`'s output activations from `tx` to
+    /// `rx` (boundary traffic, bandwidth and latency all derived from the
+    /// single definitions in [`crate::dse::partition`]).
+    pub fn between(upstream_last: &Layer, tx: &Device, rx: &Device) -> LinkSpec {
+        LinkSpec {
+            boundary_bits: crate::dse::partition::layer_boundary_bits(upstream_last),
+            bandwidth_bps: crate::dse::partition::link_bandwidth(tx, rx),
+            latency_s: crate::dse::partition::link_latency(tx, rx),
+        }
+    }
+
+    /// The links of a partition chain, in order: one per consecutive stage
+    /// pair, from the upstream partition's last layer and the two devices.
+    /// The single place chain links are derived (report and simulator both
+    /// call this).
+    pub fn chain(stages: &[(&crate::dse::Design, &Device)]) -> Vec<LinkSpec> {
+        stages
+            .windows(2)
+            .map(|w| {
+                let (up_design, up_dev) = w[0];
+                let (_, down_dev) = w[1];
+                let last = up_design.network.layers.last().expect("non-empty partition");
+                LinkSpec::between(last, up_dev, down_dev)
+            })
+            .collect()
+    }
+
+    /// Per-sample transfer time, seconds.
+    pub fn transfer_s(&self) -> f64 {
+        self.boundary_bits as f64 / self.bandwidth_bps
+    }
+
+    /// Samples/s the link sustains in steady state.
+    pub fn max_rate(&self) -> f64 {
+        self.bandwidth_bps / (self.boundary_bits as f64).max(1.0)
+    }
+
+    /// Busy fraction of the link at a given chain throughput (samples/s).
+    pub fn utilization(&self, throughput: f64) -> f64 {
+        (self.boundary_bits as f64 * throughput / self.bandwidth_bps).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Quant;
+
+    #[test]
+    fn link_math_is_consistent() {
+        let l = Layer::conv("c", 8, 16, 16, 16, 3, 1, 1, Quant::W8A8);
+        let tx = Device::zcu102();
+        let rx = Device::u250();
+        let link = LinkSpec::between(&l, &tx, &rx);
+        // slower endpoint wins
+        assert_eq!(link.bandwidth_bps, tx.link_bandwidth_bps.min(rx.link_bandwidth_bps));
+        assert_eq!(link.boundary_bits, l.output_count() * 8);
+        // utilization at the link's own max rate is exactly 1
+        let u = link.utilization(link.max_rate());
+        assert!((u - 1.0).abs() < 1e-9, "{u}");
+        assert!(link.transfer_s() > 0.0);
+    }
+}

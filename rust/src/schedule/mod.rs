@@ -1,15 +1,22 @@
 //! Deterministic DMA scheduling — paper §IV-B, Fig. 5.
 //!
-//! A single DMA port is routed to the streaming CEs through a demultiplexer
-//! driven by a static configuration sequence. Per streaming layer and per
-//! fragment iteration the schedule alternates a **write burst** filling the
-//! shared buffer (Eq. 8) with a **read interval** during which the PE array
-//! drains the static region and then the buffer (Eq. 9); write-burst
-//! balancing (Eq. 10) makes every layer perform the same number `r` of
-//! bursts per batch so the bursts interleave without stalls.
+//! Per device, a single DMA port is routed to the streaming CEs through a
+//! demultiplexer driven by a static configuration sequence. Per streaming
+//! layer and per fragment iteration the schedule alternates a **write
+//! burst** filling the shared buffer (Eq. 8) with a **read interval**
+//! during which the PE array drains the static region and then the buffer
+//! (Eq. 9); write-burst balancing (Eq. 10) makes every layer perform the
+//! same number `r` of bursts per batch so the bursts interleave without
+//! stalls.
+//!
+//! In a sharded deployment each partition owns its own DMA port and
+//! [`BurstSchedule`]; consecutive partitions are joined by a [`LinkSpec`]
+//! carrying the boundary activations.
 
 mod burst;
 mod dma;
+mod link;
 
 pub use burst::{BurstEntry, BurstSchedule};
 pub use dma::{demux_sequence, DemuxSlot};
+pub use link::LinkSpec;

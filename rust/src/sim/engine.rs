@@ -41,7 +41,7 @@ impl Default for SimConfig {
 }
 
 /// Simulation outcome.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimResult {
     /// Wall-clock of the batch through the accelerator, seconds.
     pub makespan_s: f64,

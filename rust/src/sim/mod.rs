@@ -9,11 +9,19 @@
 //! `clk_comp` time scaled by the slow-down factor `s_l`; DMA write bursts
 //! advance at the effective off-chip rate capped by the buffer write port in
 //! `clk_dma` (Eq. 8).
+//!
+//! Sharded deployments run one event simulation per partition (each with
+//! its own DMA port) composed with an analytic model of the inter-device
+//! FIFO links — see [`simulate_partitioned`].
 
 mod engine;
 mod fifo;
+mod partitioned;
 mod trace;
 
 pub use engine::{simulate, SimConfig, SimResult};
 pub use fifo::{fifo_depths, worst_link, FifoSizing, FIFO_ALLOWANCE};
+pub use partitioned::{
+    simulate_partitioned, ChainBottleneck, LinkStat, PartitionedSimResult,
+};
 pub use trace::{fig5_scenario, render_gantt, to_csv, TraceEvent, TraceKind};

@@ -1,0 +1,289 @@
+//! Simulation of a sharded deployment: per-partition event simulation plus
+//! an analytic model of the inter-device FIFO links.
+//!
+//! Each partition runs through the unchanged event engine ([`simulate`])
+//! with its own DMA port; the links between partitions are modeled
+//! analytically — a link is exactly periodic in steady state (one boundary
+//! activation tensor per sample), so, like the intra-device fragment
+//! iterations, nothing is lost by not event-stepping it. A link whose
+//! per-sample transfer time exceeds every partition's compute period
+//! becomes the chain bottleneck and the time the downstream partitions
+//! spend waiting on it is attributed as link stall, mirroring how DMA-port
+//! contention is attributed within a device.
+//!
+//! The 1-partition case returns the single-device simulation verbatim
+//! (bit-identical; enforced by `tests/partitioned_deploy.rs`).
+
+use super::engine::{simulate, SimConfig, SimResult};
+use crate::device::Device;
+use crate::dse::Design;
+use crate::schedule::LinkSpec;
+
+/// What limits the chain's steady-state rate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChainBottleneck {
+    /// Partition `i`'s compute pipeline.
+    Partition(usize),
+    /// The link between partitions `i` and `i + 1`.
+    Link(usize),
+}
+
+/// Steady-state figures of one inter-device link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkStat {
+    pub spec: LinkSpec,
+    /// Busy fraction of the link over the chain's steady-state period.
+    pub utilization: f64,
+    /// Time the chain loses to this link across the batch versus the
+    /// compute-only period. Charged to the bottleneck link only (the chain
+    /// drains at one rate — per-link charging would double-count), so this
+    /// is zero unless this link sets [`PartitionedSimResult::bottleneck`].
+    pub stall_s: f64,
+}
+
+/// Outcome of a partitioned simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionedSimResult {
+    /// Wall-clock of the batch through the whole chain, seconds.
+    pub makespan_s: f64,
+    /// Chain latency in ms (makespan, mirroring [`SimResult::latency_ms`]).
+    pub latency_ms: f64,
+    /// Steady-state chain period per sample, seconds (compute and links).
+    pub steady_period_s: f64,
+    /// What limits the steady-state rate.
+    pub bottleneck: ChainBottleneck,
+    /// Unchanged per-partition event simulations, in chain order.
+    pub per_partition: Vec<SimResult>,
+    /// One entry per inter-device boundary.
+    pub links: Vec<LinkStat>,
+    /// Intra-partition stalls plus link stalls, seconds.
+    pub total_stall_s: f64,
+}
+
+impl PartitionedSimResult {
+    /// Total DMA + link events is not meaningful across devices; expose the
+    /// per-partition event counts summed for reporting symmetry.
+    pub fn events(&self) -> u64 {
+        self.per_partition.iter().map(|p| p.events).sum()
+    }
+}
+
+/// Simulate a chain of `(design, device)` partitions connected by streaming
+/// links. Stages must be in chain order; consecutive stages are joined by a
+/// [`LinkSpec`] derived from the upstream partition's last layer and the
+/// two devices' link parameters.
+pub fn simulate_partitioned(
+    stages: &[(&Design, &Device)],
+    cfg: &SimConfig,
+) -> PartitionedSimResult {
+    assert!(!stages.is_empty(), "simulate_partitioned needs at least one stage");
+
+    let per_partition: Vec<SimResult> =
+        stages.iter().map(|(design, device)| simulate(design, device, cfg)).collect();
+
+    let links: Vec<LinkSpec> = LinkSpec::chain(stages);
+
+    // Steady-state period: slowest compute stage vs slowest link.
+    let periods: Vec<f64> = stages
+        .iter()
+        .map(|(d, _)| d.cycles_of(d.slowest()) as f64 / (d.clk_comp_mhz * 1e6))
+        .collect();
+    let compute_period = periods.iter().copied().fold(0.0_f64, f64::max);
+    let mut steady_period = compute_period;
+    let mut bottleneck = ChainBottleneck::Partition(
+        periods
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0),
+    );
+    for (i, link) in links.iter().enumerate() {
+        if link.transfer_s() > steady_period {
+            steady_period = link.transfer_s();
+            bottleneck = ChainBottleneck::Link(i);
+        }
+    }
+
+    // Link stats: utilization over the steady period. Stall is charged to
+    // the bottleneck link only — the chain drains at ONE rate, so the time
+    // lost versus the compute-only period belongs to the link that sets it
+    // (charging every slow link independently would double-count).
+    let link_stats: Vec<LinkStat> = links
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let utilization = spec.transfer_s() / steady_period.max(f64::MIN_POSITIVE);
+            let stall_s = if bottleneck == ChainBottleneck::Link(i) {
+                cfg.batch as f64 * (steady_period - compute_period)
+            } else {
+                0.0
+            };
+            LinkStat { spec: spec.clone(), utilization, stall_s }
+        })
+        .collect();
+
+    // 1-partition: the single-device simulation verbatim.
+    if links.is_empty() {
+        let only = &per_partition[0];
+        let makespan = only.makespan_s;
+        let total_stall = only.total_stall_s;
+        return PartitionedSimResult {
+            makespan_s: makespan,
+            latency_ms: makespan * 1e3,
+            steady_period_s: steady_period,
+            bottleneck,
+            per_partition,
+            links: link_stats,
+            total_stall_s: total_stall,
+        };
+    }
+
+    // Chain composition: partition p starts once the first sample has made
+    // it through everything upstream (fill + one drain per stage, plus each
+    // hop's latency and transfer).
+    let mut offsets = Vec::with_capacity(stages.len());
+    let mut offset = 0.0_f64;
+    for (i, (design, _)) in stages.iter().enumerate() {
+        offsets.push(offset);
+        if i < links.len() {
+            let first_sample_s = design.latency_ms(1) * 1e-3;
+            offset += first_sample_s + links[i].latency_s + links[i].transfer_s();
+        }
+    }
+    let staged_finish = offsets
+        .iter()
+        .zip(&per_partition)
+        .map(|(o, p)| o + p.makespan_s)
+        .fold(0.0_f64, f64::max);
+    // When a link is the bottleneck the downstream stages drain at the link
+    // rate, not their own: the last stage cannot finish before its offset +
+    // fill + batch link-limited periods.
+    let (last_design, _) = stages.last().expect("non-empty chain");
+    let last_fill_s = last_design.latency_ms(0) * 1e-3;
+    let throttled_finish = offsets.last().expect("non-empty chain")
+        + last_fill_s
+        + cfg.batch as f64 * steady_period;
+    let makespan = staged_finish.max(throttled_finish);
+
+    let total_stall = per_partition.iter().map(|p| p.total_stall_s).sum::<f64>()
+        + link_stats.iter().map(|l| l.stall_s).sum::<f64>();
+
+    PartitionedSimResult {
+        makespan_s: makespan,
+        latency_ms: makespan * 1e3,
+        steady_period_s: steady_period,
+        bottleneck,
+        per_partition,
+        links: link_stats,
+        total_stall_s: total_stall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{self, partition, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn one_stage_is_bit_identical_to_simulate() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let cfg = SimConfig::default();
+        let direct = simulate(&r.design, &dev, &cfg);
+        let chained = simulate_partitioned(&[(&r.design, &dev)], &cfg);
+        assert_eq!(chained.per_partition[0], direct);
+        assert_eq!(chained.makespan_s, direct.makespan_s);
+        assert!(chained.links.is_empty());
+        assert_eq!(chained.bottleneck, ChainBottleneck::Partition(0));
+    }
+
+    #[test]
+    fn two_stage_chain_pipelines_rather_than_serializes() {
+        let net = models::resnet18(Quant::W4A5);
+        let devs = [Device::zcu102(), Device::zcu102()];
+        let p = partition::partition(&net, &devs, &DseConfig::default()).unwrap();
+        let stages: Vec<(&crate::dse::Design, &Device)> = p
+            .parts
+            .iter()
+            .map(|part| (&part.result.design, &part.device))
+            .collect();
+        let cfg = SimConfig { batch: 16, ..Default::default() };
+        let sim = simulate_partitioned(&stages, &cfg);
+        assert_eq!(sim.per_partition.len(), 2);
+        assert_eq!(sim.links.len(), 1);
+        let serial: f64 = sim.per_partition.iter().map(|s| s.makespan_s).sum();
+        // the chain overlaps the two partitions: far better than running
+        // them back to back, but no faster than the slower of the two
+        assert!(sim.makespan_s < serial, "chain {} vs serial {}", sim.makespan_s, serial);
+        let slowest = sim
+            .per_partition
+            .iter()
+            .map(|s| s.makespan_s)
+            .fold(0.0_f64, f64::max);
+        assert!(sim.makespan_s >= slowest * 0.999);
+        let u = sim.links[0].utilization;
+        assert!((0.0..=1.0 + 1e-9).contains(&u), "{u}");
+    }
+
+    #[test]
+    fn only_the_bottleneck_link_is_charged_stall() {
+        // three-stage toy chain where BOTH links are slower than compute:
+        // the stall must equal batch x (slowest link - compute period)
+        // charged once, not the sum over both slow links
+        let net = models::toy_cnn(Quant::W8A8);
+        let cuts = [2usize, 4];
+        let mut mid = Device::zcu102();
+        mid.link_bandwidth_bps = 1e6; // throttles both of its links
+        let devs = [Device::zcu102(), mid, Device::zcu102()];
+        let p = partition::partition_with_cuts(&net, &devs, &cuts, &DseConfig::default())
+            .expect("pinned 3-way toy split is feasible");
+        let stages: Vec<(&crate::dse::Design, &Device)> = p
+            .parts
+            .iter()
+            .map(|part| (&part.result.design, &part.device))
+            .collect();
+        let batch = 4u64;
+        let sim = simulate_partitioned(&stages, &SimConfig { batch, ..Default::default() });
+        let compute_period = stages
+            .iter()
+            .map(|(d, _)| d.cycles_of(d.slowest()) as f64 / (d.clk_comp_mhz * 1e6))
+            .fold(0.0_f64, f64::max);
+        // both links outlast compute, so per-link charging would be 2 items
+        for l in &sim.links {
+            assert!(l.spec.transfer_s() > compute_period, "test premise: slow links");
+        }
+        assert!(matches!(sim.bottleneck, ChainBottleneck::Link(_)), "{:?}", sim.bottleneck);
+        let charged: Vec<&LinkStat> = sim.links.iter().filter(|l| l.stall_s > 0.0).collect();
+        assert_eq!(charged.len(), 1, "exactly one link carries the stall");
+        let total: f64 = sim.links.iter().map(|l| l.stall_s).sum();
+        assert!(
+            (total - batch as f64 * (sim.steady_period_s - compute_period)).abs() < 1e-12,
+            "stall accounts once for the chain's rate loss: {total}"
+        );
+    }
+
+    #[test]
+    fn starved_link_becomes_the_bottleneck_and_stalls() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let mut tx = Device::zcu102();
+        let rx = Device::zcu102();
+        tx.link_bandwidth_bps = 1e6; // pathological 1 Mbps chain link
+        let devs = [tx, rx];
+        let p = partition::partition(&net, &devs, &DseConfig::default()).unwrap();
+        let stages: Vec<(&crate::dse::Design, &Device)> = p
+            .parts
+            .iter()
+            .map(|part| (&part.result.design, &part.device))
+            .collect();
+        let sim = simulate_partitioned(&stages, &SimConfig { batch: 4, ..Default::default() });
+        assert!(matches!(sim.bottleneck, ChainBottleneck::Link(0)), "{:?}", sim.bottleneck);
+        assert!(sim.links[0].stall_s > 0.0);
+        assert!((sim.links[0].utilization - 1.0).abs() < 1e-9);
+        // the throttled finish dominates: makespan scales with the link rate
+        assert!(sim.makespan_s >= 4.0 * sim.steady_period_s);
+    }
+}

@@ -19,7 +19,7 @@ pub enum TraceKind {
 }
 
 /// One traced interval.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceEvent {
     pub layer: usize,
     pub kind: TraceKind,
@@ -128,6 +128,8 @@ pub fn fig5_scenario(balanced: bool) -> (Design, Device) {
         clk_comp_mhz: 100.0,
         clk_dma_mhz: 200.0,
         dma_port_bits: 512,
+        link_bandwidth_bps: 16e9,
+        link_latency_s: 1e-6,
     };
 
     let mut d = Design::initialize(&net, &dev);

@@ -1,0 +1,248 @@
+//! Integration tests of the partitioned (sharded) deployment path: the
+//! golden 1-partition equivalence against the single-device pipeline, the
+//! scale-out acceptance case (infeasible on one device, feasible on two),
+//! cache-key separation between layouts, and the chained serving terminal.
+
+use autows::device::Device;
+use autows::dse::DseConfig;
+use autows::ir::Quant;
+use autows::pipeline::{Deployment, DesignCache};
+use autows::sim::SimConfig;
+use autows::Error;
+
+/// Golden: `on_devices(&["zcu102"])` is the single-device deployment —
+/// design, burst schedule and simulation are bit-identical on
+/// resnet18/zcu102/W4A5.
+#[test]
+fn one_partition_equals_single_device_bit_for_bit() {
+    let cfg = DseConfig::default();
+    let single = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device("zcu102")
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+    let sharded = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_devices(&["zcu102"])
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+
+    assert_eq!(sharded.partitions().len(), 1);
+    assert!(sharded.result().cuts.is_empty());
+    let pd = &sharded.partitions()[0].result;
+    assert_eq!(pd.design.cfgs, single.design().cfgs, "identical per-layer configs");
+    assert_eq!(pd.design.off_bits, single.design().off_bits, "identical evicted bits");
+    assert_eq!(pd.throughput, single.result().throughput, "bit-identical throughput");
+    assert_eq!(pd.latency_ms, single.result().latency_ms, "bit-identical latency");
+    assert_eq!(pd.area, single.result().area);
+    assert_eq!(pd.bandwidth_bps, single.result().bandwidth_bps);
+
+    // the partition's DMA burst schedule is the single-device schedule
+    assert_eq!(sharded.burst_schedules().len(), 1);
+    assert_eq!(sharded.burst_schedules()[0], *single.burst_schedule());
+    assert!(sharded.links().is_empty());
+
+    // and the simulation is the single-device simulation, verbatim
+    let sim_cfg = SimConfig::default();
+    let sim_single = single.simulate(&sim_cfg);
+    let sim_sharded = sharded.simulate(&sim_cfg);
+    assert_eq!(sim_sharded.per_partition.len(), 1);
+    assert_eq!(sim_sharded.per_partition[0], sim_single, "bit-identical SimResult");
+    assert_eq!(sim_sharded.makespan_s, sim_single.makespan_s);
+    assert_eq!(sim_sharded.latency_ms, sim_single.latency_ms);
+    assert_eq!(sim_sharded.total_stall_s, sim_single.total_stall_s);
+}
+
+/// Acceptance: a model that stops fitting one tightened zcu102 deploys
+/// feasibly across two, and the report carries per-partition area/bandwidth
+/// plus inter-device link utilization.
+#[test]
+fn infeasible_on_one_device_deploys_on_two() {
+    let cfg = DseConfig::default();
+    let single = Deployment::for_model("resnet50")
+        .quant(Quant::W4A5)
+        .on_device("zcu102")
+        .unwrap();
+    let sharded = Deployment::for_model("resnet50")
+        .quant(Quant::W4A5)
+        .on_devices(&["zcu102", "zcu102"])
+        .unwrap();
+
+    // walk the memory budget down until one device gives up; two devices of
+    // the same budget must still deploy (each hosts only its partition)
+    let mut witnessed = None;
+    for scale in [0.45, 0.4, 0.35, 0.3, 0.25, 0.2, 0.15, 0.1, 0.07, 0.05] {
+        let alone = single.with_mem_scale(scale).explore(&cfg);
+        if alone.is_ok() {
+            continue;
+        }
+        let err = alone.unwrap_err();
+        assert!(err.is_infeasible(), "{err}");
+        if let Ok(explored) = sharded.with_mem_scale(scale).explore(&cfg) {
+            witnessed = Some((scale, explored));
+            break;
+        }
+    }
+    let (scale, explored) = witnessed.expect(
+        "some tightened zcu102 budget must reject resnet50 alone yet accept it sharded",
+    );
+    assert_eq!(explored.partitions().len(), 2);
+    for p in explored.partitions() {
+        assert!(p.result.area.fits(&p.device), "partition must fit its device at {scale}x");
+    }
+
+    let scheduled = explored.schedule();
+    let report = scheduled.report();
+    assert!(report.contains("sharded across 2 devices"), "{report}");
+    assert!(report.contains("partition 0"), "{report}");
+    assert!(report.contains("partition 1"), "{report}");
+    assert!(report.contains("bandwidth="), "per-partition bandwidth: {report}");
+    assert!(report.contains("% mem"), "per-partition area/memory: {report}");
+    assert!(report.contains("link 0→1"), "inter-device link line: {report}");
+    assert!(report.contains("utilization"), "link utilization: {report}");
+
+    // the chain also survives the partitioned simulator
+    let sim = scheduled.simulate(&SimConfig::default());
+    assert!(sim.makespan_s > 0.0);
+    assert_eq!(sim.links.len(), 1);
+    assert!((0.0..=1.0 + 1e-9).contains(&sim.links[0].utilization));
+}
+
+/// Cache separation (satellite): layouts differing only in device *count*
+/// miss each other, and a cached infeasible on one layout does not leak to
+/// another.
+#[test]
+fn cache_separates_layouts_and_does_not_leak_infeasibles() {
+    let cfg = DseConfig::default();
+    let cache = DesignCache::new();
+    // a budget tight enough that resnet18 W4A5 cannot fit one zedboard-like
+    // sliver of a zcu102 but can fit two
+    let dev = Device::zcu102().with_mem_scale(0.12);
+
+    let one = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_devices(std::slice::from_ref(&dev))
+        .unwrap()
+        .explore_in(&cache, &cfg);
+    let two = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_devices(&[dev.clone(), dev.clone()])
+        .unwrap()
+        .explore_in(&cache, &cfg);
+
+    // both were computed, neither was answered from the other's entry
+    let s = cache.stats();
+    assert_eq!(s.hits, 0, "device-count change must never hit");
+    assert_eq!(s.misses, 2);
+    assert_eq!(s.entries, 2);
+
+    // whatever the outcomes, they are independent entries; revisiting each
+    // layout hits its own entry and reproduces its own outcome
+    let one_again = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_devices(std::slice::from_ref(&dev))
+        .unwrap()
+        .explore_in(&cache, &cfg);
+    let two_again = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_devices(&[dev.clone(), dev.clone()])
+        .unwrap()
+        .explore_in(&cache, &cfg);
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.entries), (2, 2, 2));
+    assert_eq!(one.is_ok(), one_again.is_ok(), "cached outcome must replay identically");
+    assert_eq!(two.is_ok(), two_again.is_ok());
+    if let (Ok(a), Ok(b)) = (&two, &two_again) {
+        assert_eq!(a.result().cuts, b.result().cuts);
+        assert_eq!(a.result().throughput, b.result().throughput);
+        assert!(b.was_cached());
+    }
+}
+
+/// The chained serving terminal: one server, batching and metrics
+/// unchanged, requests flow through the whole chain.
+#[test]
+fn sharded_serve_behind_one_server() {
+    use autows::coordinator::{BatchPolicy, ServerOptions};
+    let scheduled = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_devices(&["zcu102", "zcu102"])
+        .unwrap()
+        .explore(&DseConfig::default())
+        .unwrap()
+        .schedule();
+    assert_eq!(scheduled.partitions().len(), 2);
+    let server = scheduled.serve(BatchPolicy::default(), ServerOptions::default()).unwrap();
+    let resp = server.infer(vec![0.5; scheduled.input_len()]).unwrap();
+    assert_eq!(resp.output.len(), 10);
+    assert!(resp.accel > std::time::Duration::ZERO);
+    assert_eq!(server.metrics().requests, 1);
+    server.shutdown();
+}
+
+/// Stage-0 failures of the multi-device path are typed errors.
+#[test]
+fn on_devices_error_surface() {
+    let none: [&str; 0] = [];
+    let e = Deployment::for_model("toy").on_devices(&none).unwrap_err();
+    assert!(matches!(e, Error::Usage(_)), "{e}");
+
+    let e = Deployment::for_model("toy").on_devices(&["zcu102", "zcu9000"]).unwrap_err();
+    assert!(matches!(e, Error::UnknownDevice(ref d) if d == "zcu9000"), "{e}");
+
+    let e = Deployment::for_model("resnet9000").on_devices(&["zcu102"]).unwrap_err();
+    assert!(matches!(e, Error::UnknownModel(_)), "{e}");
+
+    // the infeasible error names the whole chain
+    let e = Deployment::for_model("resnet50")
+        .quant(Quant::W8A8)
+        .on_devices(&["zedboard", "zedboard"])
+        .unwrap()
+        .explore(&DseConfig::vanilla())
+        .unwrap_err();
+    assert!(e.is_infeasible(), "{e}");
+    assert!(e.to_string().contains("zedboard+zedboard"), "{e}");
+}
+
+/// A malformed pinned cut vector is a usage error, surfaced before any DSE
+/// runs — never reported (or cached) as an infeasible design point.
+#[test]
+fn malformed_pinned_cuts_are_usage_errors_not_infeasible() {
+    let cache = DesignCache::new();
+    for bad in [vec![1, 2, 3], vec![5, 5], vec![0], vec![9999], vec![3]] {
+        let e = Deployment::for_model("resnet18")
+            .quant(Quant::W4A5)
+            .on_devices(&["zcu102", "zcu102"])
+            .unwrap()
+            .with_cuts(bad.clone())
+            .explore_in(&cache, &DseConfig::default())
+            .unwrap_err();
+        assert!(matches!(e, Error::Usage(_)), "cuts {bad:?}: {e}");
+        assert!(!e.is_infeasible(), "cuts {bad:?} must not read as infeasibility");
+    }
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0), "nothing may be cached");
+}
+
+/// A pinned cut vector is honored and keys separately from the searched one.
+#[test]
+fn pinned_cuts_are_honored() {
+    let cfg = DseConfig::default();
+    let net = autows::models::resnet18(Quant::W4A5);
+    let legal = autows::dse::partition::valid_cuts(&net);
+    let pin = legal[legal.len() / 2];
+    let explored = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_devices(&["zcu102", "zcu102"])
+        .unwrap()
+        .with_cuts(vec![pin])
+        .explore_uncached(&cfg)
+        .unwrap();
+    assert_eq!(explored.result().cuts, vec![pin]);
+    assert_eq!(explored.partitions()[0].hi, pin);
+    assert_eq!(explored.partitions()[1].lo, pin);
+}

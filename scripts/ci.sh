@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: build, test, lint, smoke-run the launcher, then record
-# the DSE/simulator performance trajectory (BENCH_dse.json via
-# scripts/bench_dse.sh). Run from anywhere.
+# Tier-1 CI gate: build, test, format check, lint, smoke-run the launcher
+# (single-device and sharded), then record the DSE/simulator performance
+# trajectory (BENCH_dse.json via scripts/bench_dse.sh). Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,15 +11,27 @@ cargo build --release
 echo "== tests =="
 cargo test -q
 
-echo "== clippy =="
+echo "== fmt =="
+if cargo fmt --version >/dev/null 2>&1; then
+    # Advisory until a toolchain-verified `cargo fmt` pass lands: report
+    # drift loudly without failing the gate (the tree predates rustfmt).
+    cargo fmt --all -- --check || echo "rustfmt drift detected (advisory, not failing CI)"
+else
+    echo "rustfmt unavailable in this toolchain; skipped"
+fi
+
+echo "== clippy (-D warnings) =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
 else
     echo "clippy unavailable in this toolchain; skipped"
 fi
 
-echo "== smoke: autows run =="
+echo "== smoke: autows run (single device) =="
 cargo run --release --bin autows -- run --config configs/resnet18_zcu102.toml
+
+echo "== smoke: autows run (sharded, 2x zcu102) =="
+cargo run --release --bin autows -- run --config configs/resnet50_2xzcu102.toml
 
 echo "== perf trajectory (BENCH_dse.json) =="
 ./scripts/bench_dse.sh
