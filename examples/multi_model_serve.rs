@@ -1,11 +1,15 @@
-//! Multi-model serving under open-loop load: the deployment scenario.
+//! Multi-tenant serving under open-loop load: the co-location scenario.
 //!
-//! Two accelerator designs (toy CNN + SqueezeNet) are explored through the
-//! `autows::pipeline` chain and registered in the model registry, each with
-//! its own DSE schedule, batcher and admission cap. A deterministic Poisson
-//! load generator sweeps the offered rate and prints the latency-vs-load
-//! curve per model — the knee where the (simulated) accelerator saturates
-//! is the serving-side counterpart of the paper's throughput numbers.
+//! Two networks (toy CNN + SqueezeNet) are planned onto ONE zcu102 by the
+//! joint budget search (`Deployment::colocate`): the device's area and DMA
+//! bandwidth are split into per-tenant shares (seeded by weight footprint,
+//! rebalanced toward the worst bottleneck), each tenant gets its own burst
+//! schedule against its bandwidth slice, and `.serve` registers every
+//! tenant in one `ModelRegistry` — its own batcher, admission cap and
+//! metrics per tenant. A deterministic Poisson load generator then sweeps
+//! the offered rate per tenant and prints the latency-vs-load curve — the
+//! knee where the (simulated) shared accelerator saturates is the
+//! serving-side counterpart of the paper's throughput numbers.
 //!
 //! ```sh
 //! cargo run --release --example multi_model_serve
@@ -14,8 +18,7 @@
 use std::time::Duration;
 
 use autows::coordinator::{
-    run_open_loop, ArrivalSchedule, BatchPolicy, ModelEntry, ModelRegistry, Priority,
-    ServerOptions, SimOnlyEngine,
+    run_open_loop, ArrivalSchedule, BatchPolicy, Priority, ServerOptions,
 };
 use autows::dse::DseConfig;
 use autows::ir::Quant;
@@ -23,66 +26,46 @@ use autows::pipeline::Deployment;
 use autows::Error;
 
 fn main() -> Result<(), Error> {
-    let mut reg = ModelRegistry::new();
+    // One joint plan instead of two independent full-device plans: the
+    // tenants share the zcu102, and the report shows who got which share.
+    let scheduled = Deployment::colocate([
+        Deployment::for_model("toy").quant(Quant::W8A8),
+        Deployment::for_model("squeezenet").quant(Quant::W8A8),
+    ])
+    .on_device("zcu102")?
+    .explore(&DseConfig::default())?
+    .schedule();
+    print!("{}", scheduled.report());
 
-    for (alias, model, q) in
-        [("toy-w8", "toy", Quant::W8A8), ("squeezenet-w8", "squeezenet", Quant::W8A8)]
-    {
-        let explored = Deployment::for_model(model)
-            .quant(q)
-            .on_device("zcu102")?
-            .explore(&DseConfig::default())?;
-        let r = explored.result();
-        println!(
-            "{alias}: θ={:.0} fps, {} streaming layers, mem {:.0}%",
-            r.throughput,
-            r.design.streaming_count(),
-            r.area.mem_utilization(explored.device()) * 100.0
-        );
-        let (c, h, w) = explored.design().network.input_shape;
-        let input_len = (c * h * w) as usize;
-        let engine = SimOnlyEngine {
-            design: explored.design().clone(),
-            device: explored.device().clone(),
-            input_len,
-            output_len: 10,
-        };
-        // registry failures are typed `autows::Error` now — `?` just works
-        reg.register(
-            ModelEntry {
-                name: alias.into(),
-                input_len,
-                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-                options: ServerOptions { queue_cap: 256 },
-            },
-            move || Ok(Box::new(engine) as _),
-        )?;
-    }
+    let registry = scheduled.serve(
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        ServerOptions { queue_cap: 256 },
+    )?;
 
     println!("\nopen-loop latency vs offered load (64 Poisson arrivals per point):");
     println!("model           offered(rps)  achieved  p50(ms)  p95(ms)  p99(ms)  rejected");
-    for alias in ["toy-w8", "squeezenet-w8"] {
-        let input_len = reg.entry(alias).unwrap().input_len;
+    for name in scheduled.tenant_names() {
+        let input_len = scheduled.input_len(name).expect("tenant from the plan");
         for rate in [200.0, 1000.0, 5000.0] {
             let schedule = ArrivalSchedule::poisson(64, rate, 42);
             let res = run_open_loop(&schedule, || {
-                reg.submit(alias, vec![0.5; input_len], Priority::Normal)
+                registry.submit(name, vec![0.5; input_len], Priority::Normal)
             });
             println!(
-                "{alias:<15} {:>11.0} {:>9.0} {:>8.2} {:>8.2} {:>8.2} {:>9}",
+                "{name:<15} {:>11.0} {:>9.0} {:>8.2} {:>8.2} {:>8.2} {:>9}",
                 res.offered_rps, res.achieved_rps, res.p50_ms, res.p95_ms, res.p99_ms, res.rejected
             );
         }
     }
 
-    // per-model metrics are independent
-    for alias in ["toy-w8", "squeezenet-w8"] {
-        let m = reg.metrics(alias).unwrap();
+    // per-tenant metrics are independent
+    for name in scheduled.tenant_names() {
+        let m = registry.metrics(name).expect("tenant from the plan");
         println!(
-            "{alias}: served {} requests in {} batches (mean batch {:.1})",
+            "{name}: served {} requests in {} batches (mean batch {:.1})",
             m.requests, m.batches, m.mean_batch
         );
     }
-    reg.shutdown();
+    registry.shutdown();
     Ok(())
 }

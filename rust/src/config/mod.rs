@@ -27,6 +27,22 @@
 //! requests  = 64
 //! max_batch = 8
 //! ```
+//!
+//! A co-located (multi-tenant) run replaces `[model]` with a `[[tenant]]`
+//! array — every tenant is planned onto the ONE `[device]` by the joint
+//! budget search (`configs/multitenant_zcu102.toml`):
+//!
+//! ```toml
+//! [device]
+//! name = "zcu102"
+//!
+//! [[tenant]]
+//! name  = "resnet18"
+//! quant = "w4a5"
+//!
+//! [[tenant]]
+//! name  = "squeezenet"      # quant defaults to w8a8
+//! ```
 
 mod toml;
 
@@ -45,16 +61,30 @@ pub enum ModelSource {
     File(String),
 }
 
+/// One co-located tenant (`[[tenant]]` array element).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub model: ModelSource,
+    pub quant: Quant,
+}
+
 /// Fully-resolved run specification.
 #[derive(Debug, Clone)]
 pub struct RunSpec {
     pub title: String,
+    /// The primary model — for a co-located spec this mirrors
+    /// `tenants[0]` (the whole set is [`RunSpec::tenants`]), the same way
+    /// [`RunSpec::device`] mirrors `devices[0]` for sharded specs.
     pub model: ModelSource,
     pub quant: Quant,
     /// Device chain. One entry for a single-device run; more for a sharded
     /// deployment (`[device] devices = [...]`), in chain order. The primary
     /// (single-device) target is [`RunSpec::device`].
     pub devices: Vec<Device>,
+    /// Co-located tenants (`[[tenant]]` array). Empty for single-model
+    /// runs; a non-empty list makes this a multi-tenant deployment of
+    /// every tenant onto the ONE [`RunSpec::device`].
+    pub tenants: Vec<TenantSpec>,
     pub dse: DseConfig,
     /// Batch size for the simulation step.
     pub sim_batch: u64,
@@ -137,24 +167,83 @@ impl RunSpec {
 
         let title = doc.try_str_or("", "title", "untitled run").map_err(invalid)?.to_string();
 
-        // [model]
-        let model = match (doc.get("model", "name"), doc.get("model", "file")) {
-            (Some(_), None) => {
-                let name = doc.try_str_or("model", "name", "").map_err(invalid)?;
-                ModelSource::Zoo(name.to_string())
+        // [[tenant]] — co-located multi-tenant deployments. Only `tenant`
+        // arrays exist; each element takes the same name/file/quant keys as
+        // [model].
+        for name in doc.array_names() {
+            if name != "tenant" {
+                return Err(invalid(format!("unknown array of tables `[[{name}]]`")));
             }
-            (None, Some(_)) => {
-                let path = doc.try_str_or("model", "file", "").map_err(invalid)?;
-                ModelSource::File(path.to_string())
+        }
+        const TENANT_KEYS: &[&str] = &["name", "file", "quant"];
+        let mut tenants = Vec::with_capacity(doc.array_len("tenant"));
+        for i in 0..doc.array_len("tenant") {
+            for k in doc.array_keys("tenant", i) {
+                if !TENANT_KEYS.contains(&k) {
+                    return Err(invalid(format!(
+                        "unknown key `tenant[{i}].{k}` (expected one of: {})",
+                        TENANT_KEYS.join(", ")
+                    )));
+                }
             }
-            (Some(_), Some(_)) => {
-                return Err(invalid("model: give either `name` or `file`, not both"))
+            let model = match (
+                doc.array_get("tenant", i, "name"),
+                doc.array_get("tenant", i, "file"),
+            ) {
+                (Some(_), None) => {
+                    let name =
+                        doc.try_array_str_or("tenant", i, "name", "").map_err(invalid)?;
+                    ModelSource::Zoo(name.to_string())
+                }
+                (None, Some(_)) => {
+                    let path =
+                        doc.try_array_str_or("tenant", i, "file", "").map_err(invalid)?;
+                    ModelSource::File(path.to_string())
+                }
+                (Some(_), Some(_)) => {
+                    return Err(invalid(format!(
+                        "tenant[{i}]: give either `name` or `file`, not both"
+                    )))
+                }
+                (None, None) => {
+                    return Err(invalid(format!("tenant[{i}]: missing `name` or `file`")))
+                }
+            };
+            let ql = doc.try_array_str_or("tenant", i, "quant", "w8a8").map_err(invalid)?;
+            let quant = Quant::parse(ql)
+                .ok_or_else(|| invalid(format!("bad tenant[{i}].quant `{ql}`")))?;
+            tenants.push(TenantSpec { model, quant });
+        }
+
+        // [model] — mutually exclusive with [[tenant]]; a co-located spec's
+        // primary model mirrors its first tenant.
+        let (model, quant) = if tenants.is_empty() {
+            let model = match (doc.get("model", "name"), doc.get("model", "file")) {
+                (Some(_), None) => {
+                    let name = doc.try_str_or("model", "name", "").map_err(invalid)?;
+                    ModelSource::Zoo(name.to_string())
+                }
+                (None, Some(_)) => {
+                    let path = doc.try_str_or("model", "file", "").map_err(invalid)?;
+                    ModelSource::File(path.to_string())
+                }
+                (Some(_), Some(_)) => {
+                    return Err(invalid("model: give either `name` or `file`, not both"))
+                }
+                (None, None) => {
+                    return Err(invalid("missing [model] name/file (or [[tenant]] tenants)"))
+                }
+            };
+            let quant_label = doc.try_str_or("model", "quant", "w8a8").map_err(invalid)?;
+            let quant = Quant::parse(quant_label)
+                .ok_or_else(|| invalid(format!("bad model.quant `{quant_label}`")))?;
+            (model, quant)
+        } else {
+            if doc.has_section("model") {
+                return Err(invalid("give either [model] or [[tenant]] tenants, not both"));
             }
-            (None, None) => return Err(invalid("missing [model] name or file")),
+            (tenants[0].model.clone(), tenants[0].quant)
         };
-        let quant_label = doc.try_str_or("model", "quant", "w8a8").map_err(invalid)?;
-        let quant = Quant::parse(quant_label)
-            .ok_or_else(|| invalid(format!("bad model.quant `{quant_label}`")))?;
 
         // [device] — either a single `name` or a `devices` chain
         let mut devices = match doc.get("device", "devices") {
@@ -186,6 +275,12 @@ impl RunSpec {
                 out
             }
         };
+        if !tenants.is_empty() && devices.len() > 1 {
+            return Err(invalid(
+                "co-location is single-device: give [device] name, not a devices chain \
+                 (shard OR co-locate, not both)",
+            ));
+        }
         let mem_scale = doc.try_float_or("device", "mem_scale", 1.0).map_err(invalid)?;
         if !(0.01..=10.0).contains(&mem_scale) {
             return Err(invalid(format!("device.mem_scale {mem_scale} out of range (0.01..10)")));
@@ -221,12 +316,19 @@ impl RunSpec {
         let sim_batch = doc.try_int_or("sim", "batch", 1).map_err(invalid)?.max(1) as u64;
 
         // [serve]
-        // The PJRT artifact path is single-device; a sharded run serves the
-        // sim-only chain, so an explicit artifact there is a spec error
-        // (mirrors the CLI's --artifact/--devices rejection).
+        // The PJRT artifact path is single-device and single-model; sharded
+        // runs serve the sim-only chain and co-located runs serve one
+        // sim-only engine per tenant, so an explicit artifact there is a
+        // spec error (mirrors the CLI's --artifact/--devices rejection).
         if devices.len() > 1 && doc.get("serve", "artifact").is_some() {
             return Err(invalid(
                 "serve.artifact is single-device; sharded runs serve the sim-only chain (drop the key)",
+            ));
+        }
+        if !tenants.is_empty() && doc.get("serve", "artifact").is_some() {
+            return Err(invalid(
+                "serve.artifact is single-model; co-located runs serve one sim-only engine \
+                 per tenant (drop the key)",
             ));
         }
         let serve = if doc.has_section("serve") {
@@ -268,7 +370,7 @@ impl RunSpec {
             }
         };
 
-        Ok(RunSpec { title, model, quant, devices, dse, sim_batch, serve, mem_sweep })
+        Ok(RunSpec { title, model, quant, devices, tenants, dse, sim_batch, serve, mem_sweep })
     }
 
     /// The primary device — the single-device pipeline target
@@ -280,6 +382,11 @@ impl RunSpec {
     /// Is this spec a sharded (multi-device) deployment?
     pub fn is_sharded(&self) -> bool {
         self.devices.len() > 1
+    }
+
+    /// Is this spec a co-located (multi-tenant) deployment?
+    pub fn is_colocated(&self) -> bool {
+        !self.tenants.is_empty()
     }
 
     /// Load a spec from a file path.
@@ -303,12 +410,18 @@ impl RunSpec {
         }
     }
 
-    fn deployment(&self) -> crate::pipeline::Deployment {
-        match &self.model {
+    /// The one place a [`ModelSource`] + quantization becomes a pipeline
+    /// stage-0 builder (single-model and per-tenant paths both route here).
+    fn deployment_for(model: &ModelSource, quant: Quant) -> crate::pipeline::Deployment {
+        match model {
             ModelSource::Zoo(name) => crate::pipeline::Deployment::for_model(name),
             ModelSource::File(path) => crate::pipeline::Deployment::for_net_file(path),
         }
-        .quant(self.quant)
+        .quant(quant)
+    }
+
+    fn deployment(&self) -> crate::pipeline::Deployment {
+        Self::deployment_for(&self.model, self.quant)
     }
 
     /// Resolve the spec's model and (budget-scaled) device into a pipeline
@@ -323,6 +436,14 @@ impl RunSpec {
         self.deployment().on_devices(&self.devices)
     }
 
+    /// Resolve the spec's tenant list and shared device into a pipeline
+    /// [`ColocatedPlanned`](crate::pipeline::ColocatedPlanned) stage.
+    pub fn plan_colocated(&self) -> Result<crate::pipeline::ColocatedPlanned, crate::Error> {
+        let tenants: Vec<crate::pipeline::Deployment> =
+            self.tenants.iter().map(|t| Self::deployment_for(&t.model, t.quant)).collect();
+        crate::pipeline::Deployment::colocate(tenants).on_device(self.device().clone())
+    }
+
     /// Execute the full run this spec describes — DSE, simulation, the
     /// optional memory sweep, the optional serving session — printing the
     /// launcher's progress report to stdout. This is `autows run`.
@@ -331,6 +452,9 @@ impl RunSpec {
         use crate::pipeline::{self, EngineSpec};
         use crate::sim::SimConfig;
 
+        if self.is_colocated() {
+            return self.execute_colocated();
+        }
         if self.is_sharded() {
             return self.execute_sharded();
         }
@@ -417,6 +541,85 @@ impl RunSpec {
                 m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
             );
             server.shutdown();
+        }
+        Ok(())
+    }
+
+    /// The co-located launcher path: joint budget search + per-tenant DSE,
+    /// the multi-tenant report, the shared-port simulation and (optionally)
+    /// a serving session answering every tenant from one registry.
+    /// `mem_sweep` is single-model-only and skipped here.
+    fn execute_colocated(&self) -> Result<(), crate::Error> {
+        use crate::coordinator::{BatchPolicy, ServerOptions};
+        use crate::sim::SimConfig;
+
+        let plan = self.plan_colocated()?;
+        println!("== {} ==", self.title);
+        let names: Vec<&str> = plan.networks().iter().map(|n| n.name.as_str()).collect();
+        println!(
+            "{} tenants [{}] co-located on {}",
+            names.len(),
+            names.join(", "),
+            self.device().name
+        );
+
+        let explored = match plan.explore(&self.dse) {
+            Err(e) if e.is_infeasible() => {
+                println!(
+                    "DSE: INFEASIBLE for the joint tenant set (vanilla={})",
+                    !self.dse.allow_streaming
+                );
+                return Ok(());
+            }
+            other => other?,
+        };
+        let scheduled = explored.schedule_for_batch(self.sim_batch);
+        print!("{}", scheduled.report());
+
+        let sim = scheduled.simulate(&SimConfig { batch: self.sim_batch, ..Default::default() });
+        println!(
+            "sim (batch={}): makespan={:.3} ms, stalls={:.1} us, port busy {:.0}%, {} events",
+            self.sim_batch,
+            sim.makespan_s * 1e3,
+            sim.total_stall_s * 1e6,
+            sim.port_busy_frac * 100.0,
+            sim.events
+        );
+
+        if !self.mem_sweep.is_empty() {
+            println!("mem sweep: skipped (single-model only)");
+        }
+
+        if let Some(serve) = &self.serve {
+            println!(
+                "serving {} requests per tenant ({} tenants, max batch {}):",
+                serve.requests,
+                scheduled.tenants().len(),
+                serve.max_batch
+            );
+            let registry = scheduled.serve(
+                BatchPolicy {
+                    max_batch: serve.max_batch,
+                    max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
+                },
+                ServerOptions::default(),
+            )?;
+            for name in scheduled.tenant_names() {
+                let input_len =
+                    scheduled.input_len(name).expect("names come from the plan itself");
+                crate::pipeline::drive_synthetic_tenant(
+                    &registry,
+                    name,
+                    serve.requests,
+                    input_len,
+                )?;
+                let m = registry.metrics(name).expect("registered above");
+                println!(
+                    "  {name}: throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+                    m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
+                );
+            }
+            registry.shutdown();
         }
         Ok(())
     }
@@ -593,6 +796,69 @@ max_batch = 4
         )
         .unwrap();
         assert!(s.serve.is_some());
+    }
+
+    #[test]
+    fn tenant_array_parses_into_a_colocated_spec() {
+        let s = RunSpec::from_str(
+            "[device]\nname = \"zcu102\"\n\
+             [[tenant]]\nname = \"resnet18\"\nquant = \"w4a5\"\n\
+             [[tenant]]\nname = \"squeezenet\"\n",
+        )
+        .unwrap();
+        assert!(s.is_colocated());
+        assert!(!s.is_sharded());
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[0].model, ModelSource::Zoo("resnet18".into()));
+        assert_eq!(s.tenants[0].quant, Quant::W4A5);
+        assert_eq!(s.tenants[1].quant, Quant::W8A8, "tenant quant defaults to w8a8");
+        // the primary model mirrors tenant 0 (devices[0] symmetry)
+        assert_eq!(s.model, s.tenants[0].model);
+        assert_eq!(s.quant, Quant::W4A5);
+        let plan = s.plan_colocated().unwrap();
+        assert_eq!(plan.networks().len(), 2);
+        assert_eq!(plan.device().name, "zcu102");
+    }
+
+    #[test]
+    fn tenant_array_conflicts_and_errors() {
+        // [model] and [[tenant]] are mutually exclusive
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[[tenant]]\nname = \"toy\"",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("not both"), "{e}");
+        // co-location is single-device
+        let e = RunSpec::from_str(
+            "[device]\ndevices = [\"zcu102\", \"zcu102\"]\n[[tenant]]\nname = \"toy\"",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("single-device"), "{e}");
+        // a per-tenant artifact cannot exist
+        let e = RunSpec::from_str(
+            "[[tenant]]\nname = \"toy\"\n[serve]\nartifact = \"x.hlo.txt\"",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("single-model"), "{e}");
+        // unknown arrays and keys are rejected with the path
+        let e = RunSpec::from_str("[[tenent]]\nname = \"toy\"").unwrap_err();
+        assert!(e.to_string().contains("[[tenent]]"), "{e}");
+        let e = RunSpec::from_str("[[tenant]]\nnome = \"toy\"").unwrap_err();
+        assert!(e.to_string().contains("tenant[0].nome"), "{e}");
+        // each tenant needs a model source, exactly one way
+        let e = RunSpec::from_str("[[tenant]]\nquant = \"w8a8\"").unwrap_err();
+        assert!(e.to_string().contains("missing"), "{e}");
+        let e = RunSpec::from_str("[[tenant]]\nname = \"toy\"\nfile = \"x.net\"").unwrap_err();
+        assert!(e.to_string().contains("not both"), "{e}");
+        let e = RunSpec::from_str("[[tenant]]\nname = \"toy\"\nquant = \"w9z9\"").unwrap_err();
+        assert!(e.to_string().contains("tenant[0].quant"), "{e}");
+        // a colocated spec still accepts [serve] without an artifact
+        let s = RunSpec::from_str(
+            "[[tenant]]\nname = \"toy\"\n[serve]\nrequests = 4",
+        )
+        .unwrap();
+        assert!(s.serve.is_some());
+        assert!(s.is_colocated());
     }
 
     #[test]

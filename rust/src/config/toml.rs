@@ -11,6 +11,8 @@
 //! key = 3.25           # float
 //! key = true | false
 //! key = [1, 2, 3]      # homogeneous scalar arrays
+//! [[name]]             # array of tables: each header appends one table
+//! key = "per-element"
 //! ```
 //!
 //! Everything the AutoWS launcher needs; deliberately *not* a full TOML
@@ -119,23 +121,48 @@ fn err(line: usize, message: impl Into<String>) -> ParseError {
     ParseError { line, message: message.into() }
 }
 
-/// A parsed document: `section -> key -> value`. Keys outside any `[section]`
-/// header live in the root section `""`. Dotted headers (`[a.b]`) are kept as
-/// the literal section name `"a.b"`.
+/// A parsed document: `section -> key -> value`, plus `name -> [table]` for
+/// `[[name]]` arrays of tables. Keys outside any `[section]` header live in
+/// the root section `""`. Dotted headers (`[a.b]`) are kept as the literal
+/// section name `"a.b"`.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Document {
     sections: BTreeMap<String, BTreeMap<String, Value>>,
+    arrays: BTreeMap<String, Vec<BTreeMap<String, Value>>>,
+}
+
+/// Where subsequent `key = value` lines land: a plain `[section]` table or
+/// the latest element of a `[[name]]` array of tables.
+enum Cursor {
+    Section(String),
+    ArrayElem(String),
 }
 
 impl Document {
     /// Parse a document from text.
     pub fn parse(text: &str) -> Result<Document, ParseError> {
         let mut doc = Document::default();
-        let mut section = String::new();
+        let mut cursor = Cursor::Section(String::new());
         for (idx, raw) in text.lines().enumerate() {
             let lineno = idx + 1;
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("[[") {
+                let name = rest
+                    .strip_suffix("]]")
+                    .ok_or_else(|| err(lineno, "unterminated array-of-tables header"))?
+                    .trim();
+                check_section_name(name, lineno)?;
+                if doc.sections.contains_key(name) {
+                    return Err(err(
+                        lineno,
+                        format!("`[[{name}]]` conflicts with section `[{name}]`"),
+                    ));
+                }
+                doc.arrays.entry(name.to_string()).or_default().push(BTreeMap::new());
+                cursor = Cursor::ArrayElem(name.to_string());
                 continue;
             }
             if let Some(rest) = line.strip_prefix('[') {
@@ -143,14 +170,15 @@ impl Document {
                     .strip_suffix(']')
                     .ok_or_else(|| err(lineno, "unterminated section header"))?
                     .trim();
-                if name.is_empty() {
-                    return Err(err(lineno, "empty section name"));
+                check_section_name(name, lineno)?;
+                if doc.arrays.contains_key(name) {
+                    return Err(err(
+                        lineno,
+                        format!("`[{name}]` conflicts with array of tables `[[{name}]]`"),
+                    ));
                 }
-                if !name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c)) {
-                    return Err(err(lineno, format!("invalid section name `{name}`")));
-                }
-                section = name.to_string();
-                doc.sections.entry(section.clone()).or_default();
+                doc.sections.entry(name.to_string()).or_default();
+                cursor = Cursor::Section(name.to_string());
                 continue;
             }
             let (key, value) = line
@@ -164,9 +192,21 @@ impl Document {
                 return Err(err(lineno, format!("invalid key `{key}`")));
             }
             let value = parse_value(value.trim(), lineno)?;
-            let table = doc.sections.entry(section.clone()).or_default();
+            let (table, place) = match &cursor {
+                Cursor::Section(section) => (
+                    doc.sections.entry(section.clone()).or_default(),
+                    format!("section `[{section}]`"),
+                ),
+                Cursor::ArrayElem(name) => (
+                    doc.arrays
+                        .get_mut(name)
+                        .and_then(|v| v.last_mut())
+                        .expect("cursor points at the table its header just pushed"),
+                    format!("this `[[{name}]]` element"),
+                ),
+            };
             if table.insert(key.to_string(), value).is_some() {
-                return Err(err(lineno, format!("duplicate key `{key}` in section `[{section}]`")));
+                return Err(err(lineno, format!("duplicate key `{key}` in {place}")));
             }
         }
         Ok(doc)
@@ -192,6 +232,53 @@ impl Document {
             .get(section)
             .map(|t| t.keys().map(String::as_str).collect())
             .unwrap_or_default()
+    }
+
+    // --- arrays of tables (`[[name]]`) --------------------------------------
+
+    /// Names of all arrays of tables present.
+    pub fn array_names(&self) -> impl Iterator<Item = &str> {
+        self.arrays.keys().map(String::as_str)
+    }
+
+    pub fn has_array(&self, name: &str) -> bool {
+        self.arrays.contains_key(name)
+    }
+
+    /// Number of `[[name]]` elements (0 when the array is absent).
+    pub fn array_len(&self, name: &str) -> usize {
+        self.arrays.get(name).map_or(0, Vec::len)
+    }
+
+    /// Keys of one array element in sorted order.
+    pub fn array_keys(&self, name: &str, idx: usize) -> Vec<&str> {
+        self.arrays
+            .get(name)
+            .and_then(|v| v.get(idx))
+            .map(|t| t.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    /// Raw value lookup inside one array element.
+    pub fn array_get(&self, name: &str, idx: usize, key: &str) -> Option<&Value> {
+        self.arrays.get(name)?.get(idx)?.get(key)
+    }
+
+    /// Checked string accessor inside one array element: a present key of
+    /// the wrong type is an error naming `name[idx].key`.
+    pub fn try_array_str_or<'a>(
+        &'a self,
+        name: &str,
+        idx: usize,
+        key: &str,
+        default: &'a str,
+    ) -> Result<&'a str, String> {
+        match self.array_get(name, idx, key) {
+            None => Ok(default),
+            Some(v) => v.as_str().ok_or_else(|| {
+                format!("`{name}[{idx}].{key}`: expected string, found {} {v}", v.type_name())
+            }),
+        }
     }
 
     // --- typed accessors with defaults -------------------------------------
@@ -261,6 +348,17 @@ impl Document {
     pub fn try_bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool, String> {
         self.expect(section, key, "boolean", Value::as_bool, default)
     }
+}
+
+/// Validate a `[section]` / `[[array]]` header name.
+fn check_section_name(name: &str, line: usize) -> Result<(), ParseError> {
+    if name.is_empty() {
+        return Err(err(line, "empty section name"));
+    }
+    if !name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c)) {
+        return Err(err(line, format!("invalid section name `{name}`")));
+    }
+    Ok(())
 }
 
 /// Strip a `#` comment, respecting `#` inside quoted strings.
@@ -411,6 +509,55 @@ empty = []"#)
         let doc = Document::parse("[sweep.mem]\nlo = 0.5").unwrap();
         assert!(doc.has_section("sweep.mem"));
         assert_eq!(doc.float_or("sweep.mem", "lo", 0.0), 0.5);
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = Document::parse(
+            r#"
+[device]
+name = "zcu102"
+[[tenant]]
+name = "resnet18"
+quant = "w4a5"
+[[tenant]]
+name = "squeezenet"
+"#,
+        )
+        .unwrap();
+        assert!(doc.has_array("tenant"));
+        assert_eq!(doc.array_len("tenant"), 2);
+        assert_eq!(doc.array_names().collect::<Vec<_>>(), vec!["tenant"]);
+        assert_eq!(doc.array_get("tenant", 0, "name").unwrap().as_str(), Some("resnet18"));
+        assert_eq!(doc.array_get("tenant", 0, "quant").unwrap().as_str(), Some("w4a5"));
+        assert_eq!(doc.array_get("tenant", 1, "name").unwrap().as_str(), Some("squeezenet"));
+        assert!(doc.array_get("tenant", 1, "quant").is_none());
+        assert_eq!(doc.array_keys("tenant", 0), vec!["name", "quant"]);
+        // typed accessor: default on absent, typed error on mismatch
+        assert_eq!(doc.try_array_str_or("tenant", 1, "quant", "w8a8").unwrap(), "w8a8");
+        let doc2 = Document::parse("[[tenant]]\nname = 3").unwrap();
+        let e = doc2.try_array_str_or("tenant", 0, "name", "?").unwrap_err();
+        assert!(e.contains("`tenant[0].name`") && e.contains("expected string"), "{e}");
+        // the plain section is untouched
+        assert_eq!(doc.str_or("device", "name", "?"), "zcu102");
+        assert_eq!(doc.array_len("absent"), 0);
+    }
+
+    #[test]
+    fn array_table_conflicts_and_duplicates() {
+        // same name as section and array is rejected, both orders
+        let e = Document::parse("[tenant]\na = 1\n[[tenant]]\nb = 2").unwrap_err();
+        assert!(e.message.contains("conflicts"), "{e}");
+        let e = Document::parse("[[tenant]]\nb = 2\n[tenant]\na = 1").unwrap_err();
+        assert!(e.message.contains("conflicts"), "{e}");
+        // duplicate keys are per element, not across elements
+        let ok = Document::parse("[[t]]\na = 1\n[[t]]\na = 2").unwrap();
+        assert_eq!(ok.array_len("t"), 2);
+        let e = Document::parse("[[t]]\na = 1\na = 2").unwrap_err();
+        assert!(e.message.contains("duplicate"), "{e}");
+        // malformed headers
+        assert!(Document::parse("[[t]\na = 1").is_err());
+        assert!(Document::parse("[[]]").is_err());
     }
 
     #[test]

@@ -28,7 +28,13 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Record one dispatched batch. An empty latency slice is a no-op: a
+    /// batch that served nothing must not skew `mean_batch` toward zero or
+    /// start the throughput clock.
     pub fn record_batch(&mut self, latencies: &[Duration], sim_accel: Duration) {
+        if latencies.is_empty() {
+            return;
+        }
         if self.started_at.is_none() {
             self.started_at = Some(std::time::Instant::now());
         }
@@ -104,5 +110,73 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_percentiles_collapse_to_the_sample() {
+        let mut m = Metrics::default();
+        m.record_batch(&[Duration::from_millis(7)], Duration::from_millis(1));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.batches, 1);
+        // every percentile of a 1-sample distribution IS the sample
+        assert_eq!(s.p50_ms, 7.0);
+        assert_eq!(s.p95_ms, 7.0);
+        assert_eq!(s.p99_ms, 7.0);
+        assert_eq!(s.mean_ms, 7.0);
+        assert!((s.mean_batch - 1.0).abs() < 1e-12);
+        assert!((s.sim_accel_s - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut m = Metrics::default();
+        m.record_batch(&[], Duration::from_millis(9));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.batches, 0, "an empty batch must not count as a batch");
+        assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.sim_accel_s, 0.0, "no work was dispatched");
+        assert_eq!(s.throughput_rps, 0.0, "the clock must not start on nothing");
+        // a real batch after the no-op accounts normally
+        m.record_batch(&[Duration::from_millis(2); 3], Duration::ZERO);
+        let s = m.snapshot();
+        assert_eq!((s.requests, s.batches), (3, 1));
+        assert!((s.mean_batch - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshots_are_monotone_under_interleaved_batches() {
+        let mut m = Metrics::default();
+        let mut last_requests = 0;
+        let mut last_p99 = 0.0_f64;
+        // interleave slow, fast and empty batches: cumulative counters only
+        // grow, percentiles stay ordered, and the max-latency tail (p99 on
+        // a growing set that keeps its maximum) never shrinks
+        let batches: Vec<Vec<Duration>> = vec![
+            vec![Duration::from_millis(50); 2],
+            vec![],
+            vec![Duration::from_millis(1); 8],
+            vec![Duration::from_millis(50), Duration::from_millis(2)],
+            vec![],
+            vec![Duration::from_millis(3); 5],
+        ];
+        for b in &batches {
+            m.record_batch(b, Duration::ZERO);
+            let s = m.snapshot();
+            assert!(s.requests >= last_requests, "requests are cumulative");
+            assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms, "percentiles ordered");
+            if s.requests == last_requests {
+                assert_eq!(s.p99_ms, last_p99, "an empty batch must not move the tail");
+            }
+            last_requests = s.requests;
+            last_p99 = s.p99_ms;
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 17);
+        assert_eq!(s.batches, 4, "two interleaved empties dropped");
+        // the 50 ms stragglers keep the tail up after fast batches landed
+        assert!(s.p99_ms >= 49.0, "{}", s.p99_ms);
+        assert!(s.p50_ms <= 4.0, "{}", s.p50_ms);
     }
 }

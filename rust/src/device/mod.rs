@@ -202,6 +202,33 @@ impl Device {
         d.uram = (d.uram as f64 * factor).round() as u32;
         d
     }
+
+    /// A budget-clamped view of this device holding `share` of every
+    /// partitionable resource — the per-tenant planning target of a
+    /// co-located deployment ([`crate::dse::colocate`]).
+    ///
+    /// DSP/LUT/FF/BRAM/URAM are **floored** (never rounded up), so any set of
+    /// views whose shares sum to ≤ 1 is guaranteed to sum within the physical
+    /// device; off-chip bandwidth scales continuously, which carves the
+    /// single DMA port into per-tenant slices the burst schedule (Eq. 8–10)
+    /// can be derived against per tenant. Clocks, the DMA bus width and the
+    /// inter-device link are physical per-port properties and stay unscaled.
+    /// `share >= 1` returns the device unchanged (bit-identical single-tenant
+    /// golden path).
+    pub fn with_share(&self, share: f64) -> Device {
+        if share >= 1.0 {
+            return self.clone();
+        }
+        let share = share.max(0.0);
+        let mut d = self.clone();
+        d.bram36 = (d.bram36 as f64 * share).floor() as u32;
+        d.uram = (d.uram as f64 * share).floor() as u32;
+        d.dsp = (d.dsp as f64 * share).floor() as u32;
+        d.lut = (d.lut as f64 * share).floor() as u32;
+        d.ff = (d.ff as f64 * share).floor() as u32;
+        d.bandwidth_bps *= share;
+        d
+    }
 }
 
 #[cfg(test)]
@@ -239,6 +266,29 @@ mod tests {
             // the chain link is never faster than the DDR/HBM interface on
             // the big boards and stays in the same order of magnitude
             assert!(d.link_bandwidth_bps <= d.bandwidth_bps * 2.0, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn share_views_partition_the_device() {
+        let d = Device::zcu102();
+        // full share is the identity (single-tenant golden path)
+        assert_eq!(d.with_share(1.0), d);
+        assert_eq!(d.with_share(1.5), d);
+        // floored shares can never oversubscribe the physical device
+        let shares = [0.37, 0.21, 0.42];
+        let views: Vec<Device> = shares.iter().map(|&s| d.with_share(s)).collect();
+        assert!(views.iter().map(|v| v.bram36).sum::<u32>() <= d.bram36);
+        assert!(views.iter().map(|v| v.dsp).sum::<u32>() <= d.dsp);
+        assert!(views.iter().map(|v| v.lut).sum::<u32>() <= d.lut);
+        let bw: f64 = views.iter().map(|v| v.bandwidth_bps).sum();
+        assert!(bw <= d.bandwidth_bps * (1.0 + 1e-9));
+        // per-port physics are not carved up
+        for v in &views {
+            assert_eq!(v.clk_comp_mhz, d.clk_comp_mhz);
+            assert_eq!(v.clk_dma_mhz, d.clk_dma_mhz);
+            assert_eq!(v.dma_port_bits, d.dma_port_bits);
+            assert_eq!(v.link_bandwidth_bps, d.link_bandwidth_bps);
         }
     }
 

@@ -1,0 +1,424 @@
+//! Multi-tenant co-location: plan N networks onto ONE device.
+//!
+//! The dual of [`super::partition`] (one network, many devices): here the
+//! device's DSP/LUT/FF/BRAM and off-chip DMA bandwidth are split into
+//! per-tenant budgets, each tenant runs the unchanged greedy DSE (paper
+//! Algorithm 1) against its budget-clamped [`Device`] view
+//! ([`Device::with_share`]), and a rebalancing loop moves budget from slack
+//! tenants to the tenant with the worst bottleneck.
+//!
+//! Why this is tractable at all is AutoWS's own argument: the static burst
+//! schedule makes off-chip bandwidth a *budgeted* resource (Eq. 5, Eq. 8–10),
+//! so carving the DMA port into per-tenant bandwidth slices preserves each
+//! tenant's stall-freedom proof — every tenant's schedule is feasible against
+//! its slice, and the slices sum to at most the port
+//! ([`crate::schedule::SharedDmaSchedule`] re-checks the composition).
+//!
+//! Search shape:
+//!
+//! 1. **Seed** shares proportionally to each tenant's weight footprint
+//!    (weight bits — the quantity streaming actually moves).
+//! 2. **Evaluate** every tenant's DSE on its view, fanned across cores via
+//!    [`super::parallel_cases`].
+//! 3. **Rebalance**: score each tenant by throughput *normalized to its solo
+//!    run on the whole device* (raw fps would starve small models), then
+//!    shift a slice of budget from the most-slack tenant to the worst one
+//!    (an infeasible tenant is worst by definition). Keep the best outcome
+//!    seen; stop after [`MAX_ROUNDS`] or when no donor has slack to spare.
+//!
+//! Floored views ([`Device::with_share`]) guarantee the invariant the
+//! acceptance tests assert: summed per-tenant area/BRAM/bandwidth never
+//! exceed the physical device. A single tenant gets the whole device
+//! untouched, so the 1-tenant case is bit-identical to the single-device
+//! DSE (golden-tested in `tests/colocated_deploy.rs`).
+
+use super::{parallel_cases, run, DseConfig, DseResult};
+use crate::ce::Area;
+use crate::device::Device;
+use crate::ir::Network;
+
+/// Rebalancing rounds after the seeded evaluation.
+const MAX_ROUNDS: usize = 10;
+
+/// No tenant's share may be rebalanced below this floor.
+const MIN_SHARE: f64 = 0.02;
+
+/// Fraction of the donor's share one rebalancing step moves.
+const TRANSFER_FRAC: f64 = 0.2;
+
+/// One tenant of a co-located deployment: its budget share, the clamped
+/// device view it was planned against, and its DSE outcome.
+#[derive(Debug, Clone)]
+pub struct TenantPlan {
+    /// Tenant label (the network's name; the pipeline layer enforces
+    /// uniqueness before serving).
+    pub name: String,
+    /// Fraction of the device budget this tenant holds (shares sum to 1).
+    pub share: f64,
+    /// The budget-clamped device view ([`Device::with_share`]) the DSE ran
+    /// against — also the view its burst schedule must be derived from.
+    pub view: Device,
+    /// The tenant's DSE outcome on that view (its design embeds the
+    /// tenant's network).
+    pub result: DseResult,
+    /// Throughput of the tenant's solo run on the whole device
+    /// (normalization baseline of the joint objective).
+    pub solo_throughput: f64,
+}
+
+impl TenantPlan {
+    /// Throughput normalized to the tenant's solo run on the full device
+    /// (1.0 = co-location costs this tenant nothing).
+    pub fn norm_throughput(&self) -> f64 {
+        if self.solo_throughput > 0.0 {
+            self.result.throughput / self.solo_throughput
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Outcome of a joint co-location search: one [`TenantPlan`] per network
+/// plus the joint metrics.
+#[derive(Debug, Clone)]
+pub struct ColocatedResult {
+    /// One plan per tenant, in input order.
+    pub tenants: Vec<TenantPlan>,
+    /// Worst tenant's normalized throughput (the joint objective).
+    pub min_norm_throughput: f64,
+    /// The rebalancing round whose outcome this is: 0 when the seeded split
+    /// was kept, N when the N-th transfer produced the best score seen.
+    pub rounds: usize,
+}
+
+impl ColocatedResult {
+    /// Summed area across tenants — must fit the physical device
+    /// (guaranteed by the floored views; re-asserted by tests).
+    pub fn joint_area(&self) -> Area {
+        self.tenants.iter().fold(Area::default(), |acc, t| acc + t.result.area)
+    }
+
+    /// Summed off-chip bandwidth demand across tenants, bits/s.
+    pub fn joint_bandwidth_bps(&self) -> f64 {
+        self.tenants.iter().map(|t| t.result.bandwidth_bps).sum()
+    }
+
+    /// Summed throughput across tenants, samples/s (capacity figure; each
+    /// tenant serves its own request stream).
+    pub fn aggregate_throughput(&self) -> f64 {
+        self.tenants.iter().map(|t| t.result.throughput).sum()
+    }
+}
+
+/// Seed shares proportional to weight footprint (weight bits), with every
+/// share floored at [`MIN_SHARE`] (or `1/N` if smaller) and the total
+/// summing to exactly 1: below-floor tenants are pinned AT the floor and
+/// the remaining mass redistributes proportionally among the rest
+/// (water-filling, at most N rounds). A plain clamp-then-normalize would
+/// push clamped tenants back below the floor.
+fn seed_shares(networks: &[Network]) -> Vec<f64> {
+    let n = networks.len();
+    let floor = MIN_SHARE.min(1.0 / n as f64);
+    // zero-weight tenants count as one bit so they still seed a share
+    let bits: Vec<f64> =
+        networks.iter().map(|net| (net.stats().weight_bits as f64).max(1.0)).collect();
+    let mut fixed = vec![false; n];
+    let mut shares = vec![0.0; n];
+    loop {
+        let fixed_mass = fixed.iter().filter(|&&f| f).count() as f64 * floor;
+        let free_bits: f64 =
+            bits.iter().zip(&fixed).filter(|&(_, &f)| !f).map(|(b, _)| b).sum();
+        let mut changed = false;
+        for i in 0..n {
+            shares[i] = if fixed[i] {
+                floor
+            } else {
+                (1.0 - fixed_mass) * bits[i] / free_bits
+            };
+            if !fixed[i] && shares[i] < floor {
+                // pin this tenant at the floor and redistribute the rest
+                fixed[i] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            // At least one tenant always stays unpinned (floor <= 1/N means
+            // the proportional remainder cannot be below-floor everywhere),
+            // so `free_bits` never hits zero and this terminates within N
+            // rounds.
+            return shares;
+        }
+    }
+}
+
+/// Evaluate every tenant on its share of the device (fanned across cores).
+/// `memo` caches `(tenant, share)` evaluations within one search — a
+/// rebalance round only changes two tenants' shares, so the other tenants'
+/// (expensive) DSE runs replay from the memo instead of recomputing.
+fn evaluate(
+    networks: &[Network],
+    device: &Device,
+    shares: &[f64],
+    cfg: &DseConfig,
+    memo: &mut std::collections::HashMap<(usize, u64), (Device, Option<DseResult>)>,
+) -> Vec<(Device, Option<DseResult>)> {
+    let misses: Vec<(usize, f64)> = shares
+        .iter()
+        .enumerate()
+        .filter(|&(i, s)| !memo.contains_key(&(i, s.to_bits())))
+        .map(|(i, &s)| (i, s))
+        .collect();
+    let fresh = parallel_cases(&misses, |_, &(i, share)| {
+        let view = device.with_share(share);
+        let result = run(&networks[i], &view, cfg);
+        (view, result)
+    });
+    for ((i, s), r) in misses.into_iter().zip(fresh) {
+        memo.insert((i, s.to_bits()), r);
+    }
+    shares.iter().enumerate().map(|(i, s)| memo[&(i, s.to_bits())].clone()).collect()
+}
+
+/// Joint objective of one evaluation: `(feasible count, min normalized
+/// throughput)` — compared lexicographically, so gaining a feasible tenant
+/// always beats polishing throughput.
+fn score(evals: &[(Device, Option<DseResult>)], solo: &[f64]) -> (usize, f64) {
+    let mut feasible = 0;
+    let mut min_norm = f64::INFINITY;
+    for (i, (_, r)) in evals.iter().enumerate() {
+        match r {
+            Some(r) => {
+                feasible += 1;
+                let norm = if solo[i] > 0.0 { r.throughput / solo[i] } else { 0.0 };
+                min_norm = min_norm.min(norm);
+            }
+            None => min_norm = min_norm.min(0.0),
+        }
+    }
+    if min_norm == f64::INFINITY {
+        min_norm = 0.0;
+    }
+    (feasible, min_norm)
+}
+
+/// Jointly plan `networks` onto one `device`: seeded budget split, per-tenant
+/// greedy DSE on budget-clamped views, slack-to-bottleneck rebalancing.
+///
+/// Returns `None` when no explored budget split yields a feasible design for
+/// *every* tenant — including when any tenant is infeasible even solo on the
+/// whole device (co-location can only shrink its budget).
+pub fn colocate(
+    networks: &[Network],
+    device: &Device,
+    cfg: &DseConfig,
+) -> Option<ColocatedResult> {
+    if networks.is_empty() {
+        return None;
+    }
+
+    // Solo baselines: the normalization anchors of the joint objective and
+    // the early infeasibility gate. A single tenant IS its solo run — the
+    // whole device, untouched (bit-identical to the plain DSE).
+    let solo: Vec<Option<DseResult>> =
+        parallel_cases(networks, |_, net| run(net, device, cfg));
+    let solo_theta: Vec<f64> = solo
+        .iter()
+        .map(|r| r.as_ref().map(|r| r.throughput).unwrap_or(0.0))
+        .collect();
+    if solo.iter().any(Option::is_none) {
+        return None;
+    }
+    if networks.len() == 1 {
+        let result = solo.into_iter().next().flatten()?;
+        let theta = result.throughput;
+        return Some(ColocatedResult {
+            tenants: vec![TenantPlan {
+                name: networks[0].name.clone(),
+                share: 1.0,
+                view: device.clone(),
+                result,
+                solo_throughput: theta,
+            }],
+            min_norm_throughput: 1.0,
+            rounds: 0,
+        });
+    }
+
+    let mut shares = seed_shares(networks);
+    let mut memo = std::collections::HashMap::new();
+    let mut evals = evaluate(networks, device, &shares, cfg, &mut memo);
+    let mut best_score = score(&evals, &solo_theta);
+    let mut best: (Vec<f64>, Vec<(Device, Option<DseResult>)>) =
+        (shares.clone(), evals.clone());
+    let mut round = 0;
+    let mut best_round = 0;
+
+    for _ in 0..MAX_ROUNDS {
+        // Worst tenant: infeasible first, then lowest normalized throughput.
+        let norm = |i: usize| -> f64 {
+            match &evals[i].1 {
+                None => -1.0,
+                Some(r) => {
+                    if solo_theta[i] > 0.0 {
+                        r.throughput / solo_theta[i]
+                    } else {
+                        0.0
+                    }
+                }
+            }
+        };
+        let worst = (0..networks.len())
+            .min_by(|&a, &b| norm(a).partial_cmp(&norm(b)).unwrap_or(std::cmp::Ordering::Equal))?;
+        // Donor: the most-slack tenant that can still give budget away.
+        let donor = (0..networks.len())
+            .filter(|&i| i != worst && shares[i] > MIN_SHARE && evals[i].1.is_some())
+            .max_by(|&a, &b| norm(a).partial_cmp(&norm(b)).unwrap_or(std::cmp::Ordering::Equal));
+        let Some(donor) = donor else { break };
+        if norm(donor) <= norm(worst) {
+            break; // nobody has slack to spare
+        }
+        let delta = (shares[donor] * TRANSFER_FRAC).min(shares[donor] - MIN_SHARE);
+        if delta <= 1e-4 {
+            break;
+        }
+        shares[donor] -= delta;
+        shares[worst] += delta;
+        round += 1;
+
+        evals = evaluate(networks, device, &shares, cfg, &mut memo);
+        let s = score(&evals, &solo_theta);
+        if s > best_score {
+            best_score = s;
+            best = (shares.clone(), evals.clone());
+            best_round = round;
+        }
+    }
+
+    let (shares, evals) = best;
+    if evals.iter().any(|(_, r)| r.is_none()) {
+        return None;
+    }
+    let tenants: Vec<TenantPlan> = evals
+        .into_iter()
+        .enumerate()
+        .map(|(i, (view, result))| TenantPlan {
+            name: networks[i].name.clone(),
+            share: shares[i],
+            view,
+            result: result.expect("checked feasible above"),
+            solo_throughput: solo_theta[i],
+        })
+        .collect();
+    let min_norm = tenants
+        .iter()
+        .map(TenantPlan::norm_throughput)
+        .fold(f64::INFINITY, f64::min);
+    Some(ColocatedResult {
+        tenants,
+        min_norm_throughput: if min_norm.is_finite() { min_norm } else { 0.0 },
+        rounds: best_round,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn seed_shares_follow_weight_footprint_and_sum_to_one() {
+        let nets =
+            [models::resnet18(Quant::W4A5), models::squeezenet(Quant::W8A8)];
+        let shares = seed_shares(&nets);
+        assert_eq!(shares.len(), 2);
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // resnet18 carries far more weight bits than squeezenet
+        assert!(shares[0] > shares[1], "{shares:?}");
+        for &s in &shares {
+            assert!(s >= MIN_SHARE);
+        }
+    }
+
+    #[test]
+    fn seed_floor_survives_extreme_weight_skew() {
+        // resnet50 W8A8 outweighs toy_cnn by orders of magnitude; a naive
+        // clamp-then-normalize would push toy back below the floor
+        let nets = [models::resnet50(Quant::W8A8), models::toy_cnn(Quant::W8A8)];
+        let shares = seed_shares(&nets);
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for &s in &shares {
+            assert!(s >= MIN_SHARE - 1e-12, "floor must hold: {shares:?}");
+        }
+        assert!(shares[0] > shares[1]);
+        // the pinned tenant sits exactly at the floor
+        assert!((shares[1] - MIN_SHARE).abs() < 1e-12, "{shares:?}");
+    }
+
+    #[test]
+    fn single_tenant_is_the_plain_dse_on_the_whole_device() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let direct = run(&net, &dev, &cfg).unwrap();
+        let joint = colocate(std::slice::from_ref(&net), &dev, &cfg).unwrap();
+        assert_eq!(joint.tenants.len(), 1);
+        let t = &joint.tenants[0];
+        assert_eq!(t.share, 1.0);
+        assert_eq!(t.view, dev, "1-tenant view must be the untouched device");
+        assert_eq!(t.result.design.cfgs, direct.design.cfgs);
+        assert_eq!(t.result.design.off_bits, direct.design.off_bits);
+        assert_eq!(t.result.throughput, direct.throughput);
+        assert_eq!(joint.min_norm_throughput, 1.0);
+    }
+
+    #[test]
+    fn two_tenants_fit_jointly_within_the_device() {
+        let nets =
+            [models::resnet18(Quant::W4A5), models::squeezenet(Quant::W8A8)];
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let joint = colocate(&nets, &dev, &cfg).expect("resnet18+squeezenet co-locate on zcu102");
+        assert_eq!(joint.tenants.len(), 2);
+        assert!((joint.tenants.iter().map(|t| t.share).sum::<f64>() - 1.0).abs() < 1e-9);
+        // the joint plan respects every physical cap
+        let area = joint.joint_area();
+        assert!(area.fits(&dev), "joint area {area:?} must fit {:?}", dev.name);
+        assert!(joint.joint_bandwidth_bps() <= dev.bandwidth_bps * (1.0 + 1e-9));
+        // every tenant fits its own view too
+        for t in &joint.tenants {
+            assert!(t.result.area.fits(&t.view), "{}", t.name);
+            assert!(t.result.throughput > 0.0);
+            // the greedy DSE is not perfectly monotone in budget (see
+            // `more_memory_never_hurts`), so a slice may beat solo slightly
+            assert!(t.norm_throughput() <= 1.05, "{}", t.norm_throughput());
+        }
+        assert!(joint.min_norm_throughput > 0.0);
+    }
+
+    #[test]
+    fn over_budget_tenant_set_is_none_not_a_panic() {
+        // Three ResNet50s cannot share a zedboard-sized sliver.
+        let nets = [
+            models::resnet50(Quant::W8A8),
+            models::resnet50(Quant::W8A8),
+            models::resnet50(Quant::W8A8),
+        ];
+        let dev = Device::zedboard();
+        assert!(colocate(&nets, &dev, &DseConfig::vanilla()).is_none());
+    }
+
+    #[test]
+    fn tenant_infeasible_solo_fails_the_joint_search_early() {
+        // resnet18 W4A5 does not fit a zedboard without streaming; adding a
+        // healthy tenant cannot rescue it
+        let nets = [models::resnet18(Quant::W4A5), models::toy_cnn(Quant::W8A8)];
+        let dev = Device::zedboard();
+        assert!(colocate(&nets, &dev, &DseConfig::vanilla()).is_none());
+    }
+
+    #[test]
+    fn empty_tenant_list_is_none() {
+        assert!(colocate(&[], &Device::zcu102(), &DseConfig::default()).is_none());
+    }
+}

@@ -21,6 +21,7 @@
 //! the "before" side of `benches/dse_perf.rs`.
 
 mod ablation;
+pub mod colocate;
 mod compute_alloc;
 mod design;
 mod exhaustive;
@@ -32,6 +33,7 @@ mod serialize;
 mod sweep;
 
 pub use ablation::{balanced_and_unbalanced, phi_mu_sweep, unbalanced_variant, HyperPoint};
+pub use colocate::{ColocatedResult, TenantPlan};
 pub use compute_alloc::{allocate_compute, increment_unroll};
 pub use design::Design;
 pub use exhaustive::{exhaustive_memory, ExhaustiveResult};

@@ -42,6 +42,16 @@
 //! partitioned simulator models the links, and the chain serves behind one
 //! coordinator — see [`pipeline`] for the staged walk-through.
 //!
+//! **Co-located deployments** are the dual: `Deployment::colocate([...])`
+//! plans several networks onto ONE device. A joint budget search
+//! ([`dse::colocate`]) splits area and DMA bandwidth into per-tenant
+//! shares, each tenant's burst schedule is derived against its bandwidth
+//! slice and composed under the port cap
+//! ([`schedule::SharedDmaSchedule`]), the co-located simulator interleaves
+//! the tenants' burst trains on the shared DDR port
+//! ([`sim::simulate_colocated`]), and `.serve` registers every tenant
+//! behind one [`coordinator::ModelRegistry`].
+//!
 //! ## Layers (bottom-up)
 //!
 //! - [`ir`] — DNN graph intermediate representation (layers, shapes, bitwidths).

@@ -15,7 +15,7 @@ use autows::config::RunSpec;
 use autows::coordinator::{BatchPolicy, ServerOptions};
 use autows::dse::{self, DseConfig};
 use autows::ir::Quant;
-use autows::pipeline::{drive_synthetic, Deployment, EngineSpec};
+use autows::pipeline::{drive_synthetic, drive_synthetic_tenant, Deployment, EngineSpec};
 use autows::report;
 use autows::sim::SimConfig;
 use autows::Error;
@@ -116,16 +116,76 @@ fn parse_device_chain(args: &Args) -> Result<Option<Vec<String>>, Error> {
     Ok(Some(names))
 }
 
+/// Parse `--models m1,m2,...` into a tenant list for a co-located
+/// deployment. Rejects combining with `--model` (ambiguous) and with
+/// `--devices` (shard OR co-locate, not both).
+fn parse_model_list(args: &Args) -> Result<Option<Vec<String>>, Error> {
+    let Some(list) = args.flags.get("models") else {
+        return Ok(None);
+    };
+    if args.has("model") {
+        return Err(Error::Usage("give either --model or --models, not both".to_string()));
+    }
+    if args.has("devices") {
+        return Err(Error::Usage(
+            "--models co-locates on ONE device; it cannot combine with --devices".to_string(),
+        ));
+    }
+    let names: Vec<String> = list
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        return Err(Error::Usage("--models: empty model list".to_string()));
+    }
+    Ok(Some(names))
+}
+
+/// The co-located stage-0 builder for a `--models` tenant list (every
+/// tenant shares the one `--quant` the CLI takes).
+fn colocate_builder(models: &[String], quant: Quant) -> autows::pipeline::ColocatedDeployment {
+    Deployment::colocate(models.iter().map(|m| Deployment::for_model(m.as_str()).quant(quant)))
+}
+
+/// Minimal JSON string escaping (quotes and backslashes; names here are
+/// plain identifiers, control characters cannot reach a model/device name).
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// A finite f64 as a JSON number (non-finite values cannot appear in a
+/// simulation summary, but emit a valid document regardless).
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write the `--json` simulation summary, reporting the path on success.
+fn write_json_summary(path: &str, text: &str) -> Result<(), Error> {
+    std::fs::write(path, text)
+        .map_err(|source| Error::Io { path: path.to_string(), source })?;
+    println!("simulation summary written to {path}");
+    Ok(())
+}
+
 const USAGE: &str = "usage: autows <report|dse|simulate|serve|run> [options]
   report <table1|tech|compress|strategies|table2|table3|fig5|fig6|fig7|yolo|all>
   dse      --model resnet18 --device zcu102 --quant w4a5 [--vanilla] [--phi 1] [--mu 512]
            [--warm] [--save PATH] [--tech]
   simulate --model resnet18 --device zcu102 --quant w4a5 [--batch 1] [--design PATH]
+           [--json PATH]   # machine-readable simulation summary
   serve    --artifact artifacts/toy_cnn_b8.hlo.txt [--requests 64] [--max-batch 8] [--device zcu102]
+           (--models m1,m2 [--quant w8a8] serves co-located sim-only tenants)
   run      --config configs/resnet18_zcu102.toml   # full pipeline from a config file
 
   dse/simulate/serve also accept --devices d1,d2,... to shard the model
-  across a chain of devices (e.g. --devices zcu102,zcu102).";
+  across a chain of devices (e.g. --devices zcu102,zcu102), or
+  --models m1,m2,... to co-locate several models on the ONE --device
+  (e.g. --models resnet18,squeezenet --device zcu102).";
 
 fn main() {
     if let Err(e) = run_cli() {
@@ -149,6 +209,7 @@ fn run_cli() -> Result<(), Error> {
             rest,
             &[
                 val("model"),
+                val("models"),
                 val("device"),
                 val("devices"),
                 val("quant"),
@@ -165,11 +226,13 @@ fn run_cli() -> Result<(), Error> {
             rest,
             &[
                 val("model"),
+                val("models"),
                 val("device"),
                 val("devices"),
                 val("quant"),
                 val("batch"),
                 val("design"),
+                val("json"),
             ],
         )?),
         "serve" => cmd_serve(&Args::parse(
@@ -181,6 +244,8 @@ fn run_cli() -> Result<(), Error> {
                 val("max-batch"),
                 val("device"),
                 val("devices"),
+                val("models"),
+                val("quant"),
             ],
         )?),
         "run" => cmd_run(&Args::parse("run", rest, &[val("config")])?),
@@ -239,6 +304,27 @@ fn cmd_dse(args: &Args) -> Result<(), Error> {
         .with_mu(args.get_num("mu", 512u64)?)
         .with_streaming(!args.has("vanilla"))
         .with_warm_start(args.has("warm"));
+
+    if let Some(models) = parse_model_list(args)? {
+        if args.has("save") || args.has("tech") {
+            return Err(Error::Usage(
+                "--save and --tech are single-model options (not valid with --models)"
+                    .to_string(),
+            ));
+        }
+        let plan = colocate_builder(&models, quant).on_device(device.as_str())?;
+        match plan.explore(&cfg) {
+            Err(e) if e.is_infeasible() => {
+                println!(
+                    "INFEASIBLE: [{}] do not co-locate on {device} (vanilla={})",
+                    models.join(", "),
+                    args.has("vanilla")
+                );
+            }
+            other => print!("{}", other?.schedule().report()),
+        }
+        return Ok(());
+    }
 
     if let Some(chain) = parse_device_chain(args)? {
         if args.has("save") || args.has("tech") {
@@ -305,6 +391,80 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
     let device = args.get("device", "zcu102");
     let quant = parse_quant(&args.get("quant", "w4a5"))?;
     let batch: u64 = args.get_num("batch", 1u64)?;
+    let json_path = args.flags.get("json").cloned();
+
+    if let Some(models) = parse_model_list(args)? {
+        if args.has("design") {
+            return Err(Error::Usage(
+                "--design checkpoints are single-model (not valid with --models)".to_string(),
+            ));
+        }
+        let scheduled = colocate_builder(&models, quant)
+            .on_device(device.as_str())?
+            .explore(&DseConfig::default())?
+            .schedule_for_batch(batch);
+        let sim = scheduled.simulate(&SimConfig { batch, ..Default::default() });
+        println!(
+            "[{}] co-located on {device} batch={batch}: makespan={:.3} ms, stalls={:.1} us, \
+             port busy {:.0}%, {} events",
+            models.join(", "),
+            sim.makespan_s * 1e3,
+            sim.total_stall_s * 1e6,
+            sim.port_busy_frac * 100.0,
+            sim.events
+        );
+        for t in &sim.per_tenant {
+            println!(
+                "  {}: makespan={:.3} ms, stalls={:.1} us (contention {:.1} us), {} events",
+                t.name,
+                t.makespan_s * 1e3,
+                t.total_stall_s * 1e6,
+                t.contention_s * 1e6,
+                t.events
+            );
+        }
+        if let Some(path) = json_path {
+            let tenants: Vec<String> = sim
+                .per_tenant
+                .iter()
+                .map(|t| {
+                    format!(
+                        "{{\"name\":\"{}\",\"makespan_ms\":{},\"stall_us\":{},\
+                         \"contention_us\":{},\"events\":{}}}",
+                        json_escape(&t.name),
+                        jnum(t.makespan_s * 1e3),
+                        jnum(t.total_stall_s * 1e6),
+                        jnum(t.contention_s * 1e6),
+                        t.events
+                    )
+                })
+                .collect();
+            // canonical tenant names (a zoo alias like "toy" resolves to
+            // network name "toy_cnn"), so the list joins with tenants[].name
+            let names: Vec<String> = scheduled
+                .tenant_names()
+                .iter()
+                .map(|m| format!("\"{}\"", json_escape(m)))
+                .collect();
+            let doc = format!(
+                "{{\"mode\":\"colocated\",\"models\":[{}],\"quant\":\"{}\",\
+                 \"device\":\"{}\",\"batch\":{},\
+                 \"makespan_ms\":{},\"stall_us\":{},\"port_busy_frac\":{},\"events\":{},\
+                 \"tenants\":[{}]}}\n",
+                names.join(","),
+                quant,
+                json_escape(&device),
+                batch,
+                jnum(sim.makespan_s * 1e3),
+                jnum(sim.total_stall_s * 1e6),
+                jnum(sim.port_busy_frac),
+                sim.events,
+                tenants.join(",")
+            );
+            write_json_summary(&path, &doc)?;
+        }
+        return Ok(());
+    }
 
     if let Some(chain) = parse_device_chain(args)? {
         if args.has("design") {
@@ -328,6 +488,25 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
             sim.bottleneck,
             sim.events()
         );
+        if let Some(path) = json_path {
+            let devices: Vec<String> =
+                chain.iter().map(|d| format!("\"{}\"", json_escape(d))).collect();
+            let doc = format!(
+                "{{\"mode\":\"sharded\",\"model\":\"{}\",\"quant\":\"{}\",\"devices\":[{}],\
+                 \"batch\":{},\"makespan_ms\":{},\"stall_us\":{},\"steady_period_us\":{},\
+                 \"bottleneck\":\"{:?}\",\"events\":{}}}\n",
+                json_escape(&model),
+                quant,
+                devices.join(","),
+                batch,
+                jnum(sim.makespan_s * 1e3),
+                jnum(sim.total_stall_s * 1e6),
+                jnum(sim.steady_period_s * 1e6),
+                sim.bottleneck,
+                sim.events()
+            );
+            write_json_summary(&path, &doc)?;
+        }
         return Ok(());
     }
 
@@ -355,6 +534,23 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
         sim.events,
         analytic_ms
     );
+    if let Some(path) = json_path {
+        let doc = format!(
+            "{{\"mode\":\"single\",\"model\":\"{}\",\"quant\":\"{}\",\"device\":\"{}\",\
+             \"batch\":{},\"makespan_ms\":{},\"stall_us\":{},\"dma_busy_frac\":{},\
+             \"events\":{},\"analytic_latency_ms\":{}}}\n",
+            json_escape(&model),
+            quant,
+            json_escape(&device),
+            batch,
+            jnum(sim.makespan_s * 1e3),
+            jnum(sim.total_stall_s * 1e6),
+            jnum(sim.dma_busy_frac),
+            sim.events,
+            jnum(analytic_ms)
+        );
+        write_json_summary(&path, &doc)?;
+    }
     Ok(())
 }
 
@@ -371,6 +567,58 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
     let requests: usize = args.get_num("requests", 64usize)?;
     let max_batch: usize = args.get_num("max-batch", 8usize)?;
     let device = args.get("device", "zcu102");
+
+    if let Some(models) = parse_model_list(args)? {
+        if args.has("artifact") {
+            return Err(Error::Usage(
+                "--artifact serving is single-model; --models serves one sim-only engine \
+                 per tenant"
+                    .to_string(),
+            ));
+        }
+        // honor --quant so serve plans the same joint design the user just
+        // explored with `dse --models` (whose --quant defaults to w4a5)
+        let quant = parse_quant(&args.get("quant", "w8a8"))?;
+        let scheduled = colocate_builder(&models, quant)
+            .on_device(device.as_str())?
+            .explore(&DseConfig::default())?
+            .schedule_for_batch(max_batch as u64);
+        let registry = scheduled.serve(
+            BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
+            ServerOptions::default(),
+        )?;
+        let t0 = std::time::Instant::now();
+        for name in scheduled.tenant_names() {
+            let input_len = scheduled.input_len(name).expect("names come from the plan");
+            drive_synthetic_tenant(&registry, name, requests, input_len)?;
+        }
+        let elapsed = t0.elapsed();
+        println!(
+            "{} requests x {} tenants on one {device} in {:.1} ms:",
+            requests,
+            models.len(),
+            elapsed.as_secs_f64() * 1e3
+        );
+        for name in scheduled.tenant_names() {
+            let m = registry.metrics(name).expect("registered above");
+            println!(
+                "  {name}: throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+                m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
+            );
+        }
+        registry.shutdown();
+        return Ok(());
+    }
+
+    // the artifact/chain serve paths are pinned to the bundled toy-W8A8
+    // artifact; a silently ignored --quant would be a footgun
+    if args.has("quant") {
+        return Err(Error::Usage(
+            "serve --quant applies to co-located --models serving only (artifact and \
+             chain serving are fixed to the toy W8A8 artifact)"
+                .to_string(),
+        ));
+    }
 
     if let Some(chain) = parse_device_chain(args)? {
         if args.has("artifact") {

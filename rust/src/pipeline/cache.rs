@@ -26,7 +26,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use crate::device::Device;
-use crate::dse::{self, partition, DseConfig, DseResult, PartitionedResult};
+use crate::dse::{
+    self, colocate, partition, ColocatedResult, DseConfig, DseResult, PartitionedResult,
+};
 use crate::ir::Network;
 
 /// Snapshot of the cache counters (the eval counters the cache-hit tests
@@ -42,14 +44,16 @@ pub struct CacheStats {
 }
 
 /// Memoization table for DSE outcomes, keyed by design-point content.
-/// Single-device and partitioned (multi-device) outcomes live in separate
-/// maps under disjoint key schemas — a 1-partition deployment and the
-/// plain single-device deployment of the same content never collide, and a
-/// cached infeasible on one partition layout cannot leak to another.
+/// Single-device, partitioned (multi-device) and co-located (multi-tenant)
+/// outcomes live in separate maps under disjoint key schemas — a
+/// 1-partition deployment, a 1-tenant co-location and the plain
+/// single-device deployment of the same content never collide, and a
+/// cached infeasible on one layout cannot leak to another.
 #[derive(Debug, Default)]
 pub struct DesignCache {
     map: Mutex<HashMap<String, Option<DseResult>>>,
     parts: Mutex<HashMap<String, Option<PartitionedResult>>>,
+    colo: Mutex<HashMap<String, Option<ColocatedResult>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -137,6 +141,25 @@ impl DesignCache {
         k
     }
 
+    /// Content key of a co-located (multi-tenant) design point: the **full
+    /// tenant list** (count and order matter — serving resnet18 alongside
+    /// squeezenet is a different joint plan from resnet18 alone, and from
+    /// squeezenet-then-resnet18 whose seeded shares permute) plus the one
+    /// shared device and the config. Co-located keys never collide with
+    /// single-device or partitioned keys: they live in a third map with its
+    /// own schema.
+    pub fn colo_key(networks: &[Network], device: &Device, cfg: &DseConfig) -> String {
+        let mut k = String::with_capacity(1024);
+        let _ = write!(k, "|nten={}", networks.len());
+        for network in networks {
+            k.push('|');
+            k.push_str(&crate::ir::serialize_network(network));
+        }
+        Self::push_device(&mut k, device);
+        Self::push_cfg(&mut k, cfg);
+        k
+    }
+
     /// Return the cached outcome for this design point, running the DSE on a
     /// miss. The boolean is `true` when the result came from the cache.
     pub fn explore(
@@ -182,11 +205,32 @@ impl DesignCache {
         (result, false)
     }
 
+    /// Return the cached co-located outcome for this multi-tenant design
+    /// point, running the joint budget search on a miss. The boolean is
+    /// `true` when the result came from the cache.
+    pub fn explore_colocated(
+        &self,
+        networks: &[Network],
+        device: &Device,
+        cfg: &DseConfig,
+    ) -> (Option<ColocatedResult>, bool) {
+        let key = Self::colo_key(networks, device, cfg);
+        if let Some(found) = self.colo.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (found.clone(), true);
+        }
+        // run outside the lock, like the other two paths
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let result = colocate::colocate(networks, device, cfg);
+        self.colo.lock().unwrap().entry(key).or_insert_with(|| result.clone());
+        (result, false)
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.map.lock().unwrap().len() + self.parts.lock().unwrap().len(),
+            entries: self.len(),
         }
     }
 
@@ -194,10 +238,13 @@ impl DesignCache {
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
         self.parts.lock().unwrap().clear();
+        self.colo.lock().unwrap().clear();
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len() + self.parts.lock().unwrap().len()
+        self.map.lock().unwrap().len()
+            + self.parts.lock().unwrap().len()
+            + self.colo.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -294,6 +341,48 @@ mod tests {
         let (c, cc) = cache.explore_partitioned(&net, std::slice::from_ref(&dev), None, &cfg);
         assert!(!cc);
         assert_eq!(c.unwrap().parts.len(), 1);
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn colo_key_separates_tenant_lists_and_never_collides_with_other_schemas() {
+        let a = models::toy_cnn(Quant::W8A8);
+        let b = models::squeezenet(Quant::W8A8);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let one = DesignCache::colo_key(std::slice::from_ref(&a), &dev, &cfg);
+        let two = DesignCache::colo_key(&[a.clone(), b.clone()], &dev, &cfg);
+        // tenant count and order are content
+        assert_ne!(one, two);
+        assert_ne!(two, DesignCache::colo_key(&[b.clone(), a.clone()], &dev, &cfg));
+        // a 1-tenant co-location never collides with the single-device key
+        // or the 1-partition key of the same content
+        assert_ne!(one, DesignCache::key(&a, &dev, &cfg));
+        assert_ne!(one, DesignCache::multi_key(&a, std::slice::from_ref(&dev), None, &cfg));
+        // device and config content still separate
+        assert_ne!(two, DesignCache::colo_key(&[a.clone(), b.clone()], &dev.with_mem_scale(0.5), &cfg));
+        assert_ne!(two, DesignCache::colo_key(&[a, b], &dev, &cfg.with_batch(8)));
+    }
+
+    #[test]
+    fn colocated_outcomes_are_cached_per_tenant_list() {
+        let nets = [models::toy_cnn(Quant::W8A8), models::squeezenet(Quant::W8A8)];
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let cache = DesignCache::new();
+        let (a, ca) = cache.explore_colocated(&nets, &dev, &cfg);
+        let (b, cb) = cache.explore_colocated(&nets, &dev, &cfg);
+        assert!(!ca && cb, "second lookup of the same tenant list must hit");
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.tenants.len(), b.tenants.len());
+        for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(ta.share, tb.share);
+            assert_eq!(ta.result.throughput, tb.result.throughput);
+        }
+        // dropping a tenant is a different entry, not a hit
+        let (c, cc) = cache.explore_colocated(&nets[..1], &dev, &cfg);
+        assert!(!cc);
+        assert_eq!(c.unwrap().tenants.len(), 1);
         assert_eq!(cache.stats().entries, 2);
     }
 

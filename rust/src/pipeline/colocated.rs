@@ -1,0 +1,354 @@
+//! The co-located (multi-tenant) deployment stages: `ColocatedPlanned` →
+//! `ColocatedExplored` → `ColocatedScheduled`.
+//!
+//! Mirrors the single-device staged builder one-to-one —
+//! [`Deployment::colocate`](super::Deployment::colocate) instead of a single
+//! model, then `on_device` (ONE device shared by every tenant), then
+//! `explore` (joint budget search + per-tenant DSE, through the design
+//! cache), then `schedule` (one [`BurstSchedule`] per tenant composed on the
+//! shared DMA port), then the terminals `simulate` / `report` / `serve` (a
+//! [`ModelRegistry`] answering every tenant).
+//!
+//! The 1-tenant case is the trivial degenerate co-location and is
+//! bit-identical to the single-device path (enforced by
+//! `tests/colocated_deploy.rs`), mirroring PR 4's 1-partition golden.
+
+use crate::coordinator::{BatchPolicy, ModelEntry, ModelRegistry, ServerOptions, SimOnlyEngine};
+use crate::device::Device;
+use crate::dse::{colocate, ColocatedResult, DseConfig, TenantPlan};
+use crate::error::Error;
+use crate::ir::Network;
+use crate::schedule::{BurstSchedule, SharedDmaSchedule};
+use crate::sim::{simulate_colocated, ColocatedSimResult, SimConfig};
+
+use super::cache::{design_cache, DesignCache};
+use super::stages::{Deployment, IntoDevice};
+
+/// Stage 0 (multi-tenant) — a set of tenant deployments waiting for their
+/// shared device. Created by [`Deployment::colocate`]; advanced by
+/// [`ColocatedDeployment::on_device`].
+#[derive(Debug, Clone)]
+pub struct ColocatedDeployment {
+    pub(super) tenants: Vec<Deployment>,
+}
+
+impl ColocatedDeployment {
+    /// Resolve every tenant's model and the one shared device into a
+    /// [`ColocatedPlanned`] deployment. Tenant names must be unique — the
+    /// serving registry routes by name, so a duplicate is a typed
+    /// [`Error::DuplicateModel`] here, not a surprise at `.serve`.
+    pub fn on_device(self, device: impl IntoDevice) -> Result<ColocatedPlanned, Error> {
+        if self.tenants.is_empty() {
+            return Err(Error::Usage("colocate: the tenant list is empty".to_string()));
+        }
+        let device = device.resolve()?;
+        let networks: Vec<Network> = self
+            .tenants
+            .into_iter()
+            .map(Deployment::into_network)
+            .collect::<Result<_, _>>()?;
+        for (i, net) in networks.iter().enumerate() {
+            if networks[..i].iter().any(|n| n.name == net.name) {
+                return Err(Error::DuplicateModel(net.name.clone()));
+            }
+        }
+        Ok(ColocatedPlanned { networks, device })
+    }
+}
+
+/// Stage 1 (multi-tenant) — N models resolved against one shared device,
+/// ready for the joint budget search.
+#[derive(Debug, Clone)]
+pub struct ColocatedPlanned {
+    networks: Vec<Network>,
+    device: Device,
+}
+
+impl ColocatedPlanned {
+    /// Build a co-located plan directly from parts.
+    pub fn from_parts(networks: Vec<Network>, device: Device) -> ColocatedPlanned {
+        assert!(!networks.is_empty(), "a co-location needs at least one tenant");
+        ColocatedPlanned { networks, device }
+    }
+
+    pub fn networks(&self) -> &[Network] {
+        &self.networks
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    /// The same tenant set against a memory-scaled variant of the shared
+    /// device (the co-located analogue of
+    /// [`super::Planned::with_mem_scale`]).
+    pub fn with_mem_scale(&self, scale: f64) -> ColocatedPlanned {
+        ColocatedPlanned {
+            networks: self.networks.clone(),
+            device: self.device.with_mem_scale(scale),
+        }
+    }
+
+    fn infeasible(&self, cfg: &DseConfig) -> Error {
+        let tenants: Vec<&str> = self.networks.iter().map(|n| n.name.as_str()).collect();
+        Error::Infeasible {
+            model: tenants.join("+"),
+            device: self.device.name.to_string(),
+            vanilla: !cfg.allow_streaming,
+        }
+    }
+
+    /// Run the joint budget search and per-tenant DSE through the
+    /// process-wide [design cache](design_cache).
+    pub fn explore(self, cfg: &DseConfig) -> Result<ColocatedExplored, Error> {
+        self.explore_in(design_cache(), cfg)
+    }
+
+    /// [`ColocatedPlanned::explore`] with [`DseConfig::default`].
+    pub fn explore_default(self) -> Result<ColocatedExplored, Error> {
+        self.explore(&DseConfig::default())
+    }
+
+    /// [`ColocatedPlanned::explore`] against a caller-owned cache.
+    pub fn explore_in(
+        self,
+        cache: &DesignCache,
+        cfg: &DseConfig,
+    ) -> Result<ColocatedExplored, Error> {
+        let (outcome, cached) = cache.explore_colocated(&self.networks, &self.device, cfg);
+        match outcome {
+            Some(outcome) => {
+                Ok(ColocatedExplored { outcome, device: self.device, cfg: *cfg, cached })
+            }
+            None => Err(self.infeasible(cfg)),
+        }
+    }
+
+    /// Run the search bypassing the cache (benchmarks, equivalence oracles).
+    pub fn explore_uncached(self, cfg: &DseConfig) -> Result<ColocatedExplored, Error> {
+        match colocate::colocate(&self.networks, &self.device, cfg) {
+            Some(outcome) => Ok(ColocatedExplored {
+                outcome,
+                device: self.device,
+                cfg: *cfg,
+                cached: false,
+            }),
+            None => Err(self.infeasible(cfg)),
+        }
+    }
+}
+
+/// Stage 2 (multi-tenant) — a feasible joint plan with per-tenant designs
+/// and budget shares.
+#[derive(Debug, Clone)]
+pub struct ColocatedExplored {
+    outcome: ColocatedResult,
+    device: Device,
+    cfg: DseConfig,
+    cached: bool,
+}
+
+impl ColocatedExplored {
+    pub fn result(&self) -> &ColocatedResult {
+        &self.outcome
+    }
+
+    pub fn tenants(&self) -> &[TenantPlan] {
+        &self.outcome.tenants
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    pub fn config(&self) -> &DseConfig {
+        &self.cfg
+    }
+
+    /// `true` when the joint plan came from the design cache (no search
+    /// ran).
+    pub fn was_cached(&self) -> bool {
+        self.cached
+    }
+
+    /// Derive every tenant's DMA burst schedule (against its bandwidth
+    /// slice) composed on the shared port, for the batch size the DSE
+    /// planned for.
+    pub fn schedule(self) -> ColocatedScheduled {
+        let batch = self.cfg.batch;
+        self.schedule_for_batch(batch)
+    }
+
+    /// [`ColocatedExplored::schedule`] for an explicit serving batch size.
+    pub fn schedule_for_batch(self, batch: u64) -> ColocatedScheduled {
+        let port = {
+            let tenants: Vec<(&str, f64, &crate::dse::Design, &Device)> = self
+                .outcome
+                .tenants
+                .iter()
+                .map(|t| (t.name.as_str(), t.share, &t.result.design, &t.view))
+                .collect();
+            SharedDmaSchedule::compose(&tenants, &self.device, batch)
+        };
+        ColocatedScheduled { outcome: self.outcome, device: self.device, port, output_len: 10 }
+    }
+}
+
+/// Stage 3 (multi-tenant) — per-tenant designs + the composed shared-port
+/// schedule: the terminal co-located artifact. Simulate it, render a
+/// report, or serve every tenant from one registry.
+#[derive(Debug, Clone)]
+pub struct ColocatedScheduled {
+    outcome: ColocatedResult,
+    device: Device,
+    port: SharedDmaSchedule,
+    output_len: usize,
+}
+
+impl ColocatedScheduled {
+    pub fn result(&self) -> &ColocatedResult {
+        &self.outcome
+    }
+
+    pub fn tenants(&self) -> &[TenantPlan] {
+        &self.outcome.tenants
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    /// The composed shared-DMA-port schedule (one [`BurstSchedule`] per
+    /// tenant under the port-level cap).
+    pub fn port_schedule(&self) -> &SharedDmaSchedule {
+        &self.port
+    }
+
+    /// A tenant's own burst schedule, by name.
+    pub fn burst_schedule(&self, tenant: &str) -> Option<&BurstSchedule> {
+        self.port.slice(tenant).map(|s| &s.schedule)
+    }
+
+    /// Output vector length of the served checksum engines (default 10).
+    pub fn with_output_len(mut self, output_len: usize) -> ColocatedScheduled {
+        self.output_len = output_len;
+        self
+    }
+
+    /// Flattened per-sample input length of a tenant's network.
+    pub fn input_len(&self, tenant: &str) -> Option<usize> {
+        self.outcome.tenants.iter().find(|t| t.name == tenant).map(|t| {
+            let (c, h, w) = t.result.design.network.input_shape;
+            (c as usize) * (h as usize) * (w as usize)
+        })
+    }
+
+    /// Tenant names in plan order.
+    pub fn tenant_names(&self) -> Vec<&str> {
+        self.outcome.tenants.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// Validate the joint plan in the co-located simulator: every tenant's
+    /// burst train interleaved on the one shared DMA port.
+    pub fn simulate(&self, cfg: &SimConfig) -> ColocatedSimResult {
+        let stages: Vec<(&str, &crate::dse::Design, &Device)> = self
+            .outcome
+            .tenants
+            .iter()
+            .map(|t| (t.name.as_str(), &t.result.design, &t.view))
+            .collect();
+        simulate_colocated(&stages, &self.device, cfg)
+    }
+
+    /// Human-readable co-located deployment report: joint metrics, then per
+    /// tenant the budget share, throughput (absolute and normalized to its
+    /// solo run), area/bandwidth figures and streaming count, closing with
+    /// the shared-port composition.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let names = self.tenant_names().join(" + ");
+        let area = self.outcome.joint_area();
+        let _ = writeln!(
+            out,
+            "{} co-located on {}: min norm θ={:.2}, aggregate θ={:.1} fps, \
+             budget from rebalance round {}",
+            names,
+            self.device.name,
+            self.outcome.min_norm_throughput,
+            self.outcome.aggregate_throughput(),
+            self.outcome.rounds
+        );
+        let _ = writeln!(
+            out,
+            "joint area: dsp={}/{} lut={}/{} bram={}/{} ({:.0}% mem)  \
+             bandwidth={:.2}/{:.2} Gbps (port util {:.0}%)",
+            area.dsp,
+            self.device.dsp,
+            area.lut,
+            self.device.lut,
+            area.bram.total(),
+            self.device.mem_bram_equiv(),
+            area.mem_utilization(&self.device) * 100.0,
+            self.outcome.joint_bandwidth_bps() / 1e9,
+            self.device.bandwidth_gbps(),
+            self.port.port_utilization() * 100.0
+        );
+        for (i, t) in self.outcome.tenants.iter().enumerate() {
+            let r = &t.result;
+            let sched = &self.port.slices[i].schedule;
+            let _ = writeln!(
+                out,
+                "  tenant {i} {:<16} share={:.0}%: θ={:.1} fps ({:.0}% of solo), \
+                 area dsp={} lut={} bram={} ({:.0}% of its slice), \
+                 bandwidth={:.2} Gbps, {} streaming (DMA util {:.0}%)",
+                t.name,
+                t.share * 100.0,
+                r.throughput,
+                t.norm_throughput() * 100.0,
+                r.area.dsp,
+                r.area.lut,
+                r.area.bram.total(),
+                r.area.mem_utilization(&t.view) * 100.0,
+                r.bandwidth_bps / 1e9,
+                sched.entries.len(),
+                sched.dma_utilization() * 100.0
+            );
+        }
+        let _ = writeln!(
+            out,
+            "shared DMA port: {} burst entries across {} tenants, schedulable={}",
+            self.port.total_entries(),
+            self.outcome.tenants.len(),
+            self.port.schedulable()
+        );
+        out
+    }
+
+    /// Boot the serving side of this joint plan: every tenant registered
+    /// behind one [`ModelRegistry`] (its own engine on its budget view;
+    /// queue, batcher and metrics per tenant), routed by tenant name.
+    pub fn serve(
+        &self,
+        policy: BatchPolicy,
+        opts: ServerOptions,
+    ) -> Result<ModelRegistry, Error> {
+        let mut registry = ModelRegistry::new();
+        for t in &self.outcome.tenants {
+            let input_len = self
+                .input_len(&t.name)
+                .expect("tenant names come from the plan itself");
+            let engine = SimOnlyEngine {
+                design: t.result.design.clone(),
+                device: t.view.clone(),
+                input_len,
+                output_len: self.output_len,
+            };
+            registry.register(
+                ModelEntry { name: t.name.clone(), input_len, policy, options: opts },
+                move || Ok(Box::new(engine) as _),
+            )?;
+        }
+        Ok(registry)
+    }
+}

@@ -44,6 +44,33 @@
 //! }
 //! ```
 //!
+//! **Co-located deployments** are the dual: several models share ONE device
+//! via [`Deployment::colocate`]. The joint `.explore()` splits the device's
+//! area and DMA bandwidth into per-tenant budgets (seeded by weight
+//! footprint, rebalanced toward the worst bottleneck — see
+//! [`crate::dse::colocate`]), `.schedule()` composes one burst schedule per
+//! tenant on the shared port, and `.serve` registers every tenant behind a
+//! [`crate::coordinator::ModelRegistry`]. A one-element tenant list is
+//! bit-identical to `on_device`:
+//!
+//! ```no_run
+//! use autows::dse::DseConfig;
+//! use autows::ir::Quant;
+//! use autows::pipeline::Deployment;
+//!
+//! fn main() -> Result<(), autows::Error> {
+//!     let joint = Deployment::colocate([
+//!         Deployment::for_model("resnet18").quant(Quant::W4A5),
+//!         Deployment::for_model("squeezenet").quant(Quant::W8A8),
+//!     ])
+//!     .on_device("zcu102")?                     // -> ColocatedPlanned
+//!     .explore(&DseConfig::default())?          // -> ColocatedExplored (joint search)
+//!     .schedule();                              // -> ColocatedScheduled
+//!     print!("{}", joint.report());             // per-tenant shares + port utilization
+//!     Ok(())
+//! }
+//! ```
+//!
 //! Skipping a stage is a *compile* error — `Planned` simply has no
 //! `schedule` method:
 //!
@@ -94,12 +121,16 @@
 //! ```
 
 pub mod cache;
+mod colocated;
 mod partitioned;
 mod serve;
 mod stages;
 pub mod sweep;
 
 pub use cache::{design_cache, CacheStats, DesignCache};
+pub use colocated::{
+    ColocatedDeployment, ColocatedExplored, ColocatedPlanned, ColocatedScheduled,
+};
 pub use partitioned::{PartitionedExplored, PartitionedPlanned, PartitionedScheduled};
-pub use serve::{drive_synthetic, EngineSpec};
+pub use serve::{drive_synthetic, drive_synthetic_tenant, EngineSpec};
 pub use stages::{Deployment, Explored, IntoDevice, Planned, Scheduled};

@@ -1,7 +1,9 @@
 //! Terminal serving stage: turn a [`Scheduled`](super::Scheduled) design
 //! into a running [`Server`] and drive it.
 
-use crate::coordinator::{BatchPolicy, PjrtEngine, Server, ServerOptions, SimOnlyEngine};
+use crate::coordinator::{
+    BatchPolicy, ModelRegistry, PjrtEngine, Priority, Server, ServerOptions, SimOnlyEngine,
+};
 use crate::error::Error;
 use crate::runtime::Runtime;
 
@@ -91,22 +93,48 @@ impl Scheduled {
     }
 }
 
-/// Submit `requests` deterministic synthetic inputs and wait for every
-/// response — the shared driver of the CLI serve command, `RunSpec`
-/// serving sections and the e2e bench.
-pub fn drive_synthetic(server: &Server, requests: usize, input_len: usize) -> Result<(), Error> {
-    let receivers: Result<Vec<_>, _> = (0..requests)
-        .map(|i| {
-            let input: Vec<f32> =
-                (0..input_len).map(|j| ((i * 31 + j) % 255) as f32 / 255.0).collect();
-            server.submit(input)
-        })
-        .collect();
-    let receivers = receivers.map_err(|e| Error::Serve(e.to_string()))?;
+/// The deterministic synthetic input of request `i` — ONE definition shared
+/// by every drive path, so the CLI, launcher and benches always offer the
+/// same load.
+fn synthetic_input(i: usize, input_len: usize) -> Vec<f32> {
+    (0..input_len).map(|j| ((i * 31 + j) % 255) as f32 / 255.0).collect()
+}
+
+/// Wait for every submitted response, mapping the two failure layers
+/// (dropped coordinator, engine error) to [`Error::Serve`].
+fn await_all(
+    receivers: Vec<std::sync::mpsc::Receiver<anyhow::Result<crate::coordinator::Response>>>,
+) -> Result<(), Error> {
     for rx in receivers {
         rx.recv()
             .map_err(|_| Error::Serve("coordinator dropped request".to_string()))?
             .map_err(|e| Error::Serve(e.to_string()))?;
     }
     Ok(())
+}
+
+/// Submit `requests` deterministic synthetic inputs and wait for every
+/// response — the shared driver of the CLI serve command, `RunSpec`
+/// serving sections and the e2e bench.
+pub fn drive_synthetic(server: &Server, requests: usize, input_len: usize) -> Result<(), Error> {
+    let receivers: Result<Vec<_>, _> = (0..requests)
+        .map(|i| server.submit(synthetic_input(i, input_len)))
+        .collect();
+    await_all(receivers.map_err(|e| Error::Serve(e.to_string()))?)
+}
+
+/// [`drive_synthetic`] against one tenant of a co-located
+/// [`ModelRegistry`]: same deterministic inputs and error mapping, routed
+/// by tenant name — the shared driver of the colocated CLI serve path and
+/// `RunSpec` tenant serving sections.
+pub fn drive_synthetic_tenant(
+    registry: &ModelRegistry,
+    tenant: &str,
+    requests: usize,
+    input_len: usize,
+) -> Result<(), Error> {
+    let receivers: Result<Vec<_>, Error> = (0..requests)
+        .map(|i| registry.submit(tenant, synthetic_input(i, input_len), Priority::Normal))
+        .collect();
+    await_all(receivers?)
 }

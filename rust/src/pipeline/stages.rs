@@ -121,11 +121,31 @@ impl Deployment {
         }
     }
 
+    /// Resolve this deployment's model into its network (the multi-tenant
+    /// planning path consumes tenants one by one).
+    pub(super) fn into_network(self) -> Result<Network, Error> {
+        Self::build_network(self.source, self.quant)
+    }
+
     /// Resolve model and device into a [`Planned`] deployment.
     pub fn on_device(self, device: impl IntoDevice) -> Result<Planned, Error> {
         let device = device.resolve()?;
         let network = Self::build_network(self.source, self.quant)?;
         Ok(Planned { network, device })
+    }
+
+    /// Co-locate several tenant deployments on ONE shared device: the dual
+    /// of [`Deployment::on_devices`] (N networks, one device instead of one
+    /// network, N devices). Returns the multi-tenant stage-0 builder;
+    /// advance with
+    /// [`ColocatedDeployment::on_device`](super::ColocatedDeployment::on_device),
+    /// after which `.explore()` runs the joint budget search. A one-element
+    /// tenant list is the trivial co-location, bit-identical to
+    /// [`Deployment::on_device`].
+    pub fn colocate(
+        tenants: impl IntoIterator<Item = Deployment>,
+    ) -> super::ColocatedDeployment {
+        super::ColocatedDeployment { tenants: tenants.into_iter().collect() }
     }
 
     /// Resolve model and a **device chain** into a

@@ -12,11 +12,18 @@
 //! In a sharded deployment each partition owns its own DMA port and
 //! [`BurstSchedule`]; consecutive partitions are joined by a [`LinkSpec`]
 //! carrying the boundary activations.
+//!
+//! In a co-located deployment several tenants share ONE port: each tenant's
+//! burst schedule is derived against its provisioned bandwidth slice and
+//! the slices compose under the port-level cap ([`SharedDmaSchedule`]), so
+//! the Eq. 8–10 feasibility argument still holds per tenant.
 
 mod burst;
 mod dma;
 mod link;
+mod port;
 
 pub use burst::{BurstEntry, BurstSchedule};
 pub use dma::{demux_sequence, DemuxSlot};
 pub use link::LinkSpec;
+pub use port::{SharedDmaSchedule, TenantSlice};

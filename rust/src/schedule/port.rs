@@ -1,0 +1,163 @@
+//! Shared-DMA-port arbitration for co-located tenants.
+//!
+//! A co-located deployment plans every tenant against a bandwidth *slice*
+//! of the one physical DMA port ([`crate::device::Device::with_share`]), so
+//! each tenant's [`BurstSchedule`] — and with it the paper's Eq. 8–10
+//! stall-freedom argument — holds *per tenant* against its slice. This
+//! module composes those per-tenant schedules under the port-level cap:
+//! the composition is feasible iff every tenant's schedule is feasible
+//! against its slice AND the slices themselves (equivalently, the summed
+//! weight+IO bandwidth demand) fit the physical port.
+//!
+//! That separation is deliberate: slice feasibility is the per-tenant
+//! Eq. 8–10 proof unchanged, and the port-level sum is a one-line budget
+//! check — exactly the "bandwidth as a budgeted resource" property that
+//! makes co-location analyzable at all. The co-located simulator
+//! ([`crate::sim::simulate_colocated`]) validates the same composition
+//! event by event, interleaving the tenants' burst trains on one port.
+
+use super::burst::BurstSchedule;
+use crate::device::Device;
+use crate::dse::Design;
+
+/// One tenant's slice of the shared port: its burst schedule (derived
+/// against its budget-clamped device view) plus its demand bookkeeping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSlice {
+    /// Tenant label (network name).
+    pub name: String,
+    /// Fraction of the port's bandwidth provisioned to this tenant.
+    pub share: f64,
+    /// The tenant's DMA schedule against its slice (Eq. 8–10 per tenant).
+    pub schedule: BurstSchedule,
+    /// The tenant design's total off-chip demand `β_io + Σ s_l·β_l`, bits/s.
+    pub demand_bps: f64,
+}
+
+/// The composed DMA schedule of every tenant sharing one physical port.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharedDmaSchedule {
+    /// One slice per tenant, in plan order.
+    pub slices: Vec<TenantSlice>,
+    /// The physical port's bandwidth (the unclamped device), bits/s.
+    pub port_bandwidth_bps: f64,
+    /// Batch size the repeat counts were computed for.
+    pub batch: u64,
+}
+
+impl SharedDmaSchedule {
+    /// Compose the port schedule from `(name, share, design, view)` tenants.
+    /// `device` is the *physical* device; each `view` must be the
+    /// budget-clamped variant the tenant's design was explored against, so
+    /// its burst timing (Eq. 8) is derived from its provisioned slice.
+    pub fn compose(
+        tenants: &[(&str, f64, &Design, &Device)],
+        device: &Device,
+        batch: u64,
+    ) -> SharedDmaSchedule {
+        let slices = tenants
+            .iter()
+            .map(|&(name, share, design, view)| TenantSlice {
+                name: name.to_string(),
+                share,
+                schedule: BurstSchedule::from_design(design, view, batch),
+                demand_bps: design.total_bandwidth(),
+            })
+            .collect();
+        SharedDmaSchedule {
+            slices,
+            port_bandwidth_bps: device.bandwidth_bps,
+            batch,
+        }
+    }
+
+    /// Busy fraction of the physical port: summed tenant demand over the
+    /// port's bandwidth. ≤ 1 whenever the tenants' shares sum to ≤ 1 (each
+    /// design's demand is capped by its slice).
+    pub fn port_utilization(&self) -> f64 {
+        if self.port_bandwidth_bps <= 0.0 {
+            return 0.0;
+        }
+        self.slices.iter().map(|s| s.demand_bps).sum::<f64>() / self.port_bandwidth_bps
+    }
+
+    /// Summed provisioned shares (≤ 1 for a valid co-location).
+    pub fn total_share(&self) -> f64 {
+        self.slices.iter().map(|s| s.share).sum()
+    }
+
+    /// The composed feasibility argument: every tenant's schedule is
+    /// stall-free against its slice (per-tenant Eq. 8–10) and the slices
+    /// plus their demands fit the physical port.
+    pub fn schedulable(&self) -> bool {
+        self.slices.iter().all(|s| s.schedule.schedulable())
+            && self.total_share() <= 1.0 + 1e-9
+            && self.port_utilization() <= 1.0 + 1e-9
+    }
+
+    /// A tenant's slice by name.
+    pub fn slice(&self, name: &str) -> Option<&TenantSlice> {
+        self.slices.iter().find(|s| s.name == name)
+    }
+
+    /// Streaming burst entries across all tenants (reporting).
+    pub fn total_entries(&self) -> usize {
+        self.slices.iter().map(|s| s.schedule.entries.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{colocate, DseConfig};
+    use crate::ir::Quant;
+    use crate::models;
+
+    #[test]
+    fn composed_port_respects_the_physical_cap() {
+        let nets = [models::resnet18(Quant::W4A5), models::squeezenet(Quant::W8A8)];
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let joint = colocate::colocate(&nets, &dev, &cfg).unwrap();
+        let tenants: Vec<(&str, f64, &Design, &Device)> = joint
+            .tenants
+            .iter()
+            .map(|t| (t.name.as_str(), t.share, &t.result.design, &t.view))
+            .collect();
+        let port = SharedDmaSchedule::compose(&tenants, &dev, 1);
+        assert_eq!(port.slices.len(), 2);
+        assert!(port.total_share() <= 1.0 + 1e-9, "{}", port.total_share());
+        assert!(port.port_utilization() <= 1.0 + 1e-9, "{}", port.port_utilization());
+        assert!(port.schedulable(), "composed schedule must stay feasible");
+        assert!(port.slice("resnet18").is_some());
+        assert!(port.slice("nope").is_none());
+    }
+
+    #[test]
+    fn single_tenant_slice_is_the_plain_schedule() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let r = crate::dse::run(&net, &dev, &cfg).unwrap();
+        let direct = BurstSchedule::from_design(&r.design, &dev, 1);
+        let port =
+            SharedDmaSchedule::compose(&[(net.name.as_str(), 1.0, &r.design, &dev)], &dev, 1);
+        assert_eq!(port.slices[0].schedule, direct, "1-tenant schedule is bit-identical");
+        assert_eq!(port.total_entries(), direct.entries.len());
+    }
+
+    #[test]
+    fn an_oversubscribed_composition_reports_unschedulable() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = crate::dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        // two full-share copies of the same design cannot share one port
+        let port = SharedDmaSchedule::compose(
+            &[("a", 1.0, &r.design, &dev), ("b", 1.0, &r.design, &dev)],
+            &dev,
+            1,
+        );
+        assert!(port.total_share() > 1.0);
+        assert!(!port.schedulable());
+    }
+}

@@ -88,17 +88,22 @@ impl PartialOrd for Request {
     }
 }
 
-/// Run the simulation of `design` on `device`.
-pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult {
-    let schedule = BurstSchedule::from_design(design, device, cfg.batch);
+/// Ideal (stall-free) pipeline time of a batch: fill of every CE plus
+/// `batch` drains of the bottleneck CE. The single definition shared by the
+/// single-device run and the co-located per-tenant accounting — the two
+/// must never drift.
+pub(crate) fn ideal_finish(design: &Design, batch: u64) -> f64 {
     let clk = design.clk_comp_mhz * 1e6;
-
-    // Ideal (stall-free) pipeline time: fill + batch drains of bottleneck.
     let fill: f64 = (0..design.len())
         .map(|i| crate::ce::fill_cycles(&design.network.layers[i], &design.cfgs[i]) as f64 / clk)
         .sum();
-    let bottleneck_period = design.cycles_of(design.slowest()) as f64 / clk;
-    let ideal_finish = fill + cfg.batch as f64 * bottleneck_period;
+    fill + batch as f64 * (design.cycles_of(design.slowest()) as f64 / clk)
+}
+
+/// Run the simulation of `design` on `device`.
+pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult {
+    let schedule = BurstSchedule::from_design(design, device, cfg.batch);
+    let ideal_finish = ideal_finish(design, cfg.batch);
 
     let mut per_layer_stall = vec![0.0; design.len()];
     let mut per_layer_contention = vec![0.0; design.len()];

@@ -13,12 +13,19 @@
 //! Sharded deployments run one event simulation per partition (each with
 //! its own DMA port) composed with an analytic model of the inter-device
 //! FIFO links — see [`simulate_partitioned`].
+//!
+//! Co-located deployments share ONE physical DMA port across tenants: the
+//! joint event simulation interleaves every tenant's burst train on the
+//! port and attributes queueing stall as contention — see
+//! [`simulate_colocated`].
 
+mod colocated;
 mod engine;
 mod fifo;
 mod partitioned;
 mod trace;
 
+pub use colocated::{simulate_colocated, ColocatedSimResult, TenantSim};
 pub use engine::{simulate, SimConfig, SimResult};
 pub use fifo::{fifo_depths, worst_link, FifoSizing, FIFO_ALLOWANCE};
 pub use partitioned::{

@@ -1,0 +1,266 @@
+//! Integration tests of the co-located (multi-tenant) deployment path: the
+//! golden 1-tenant equivalence against the single-device pipeline, the
+//! acceptance case (resnet18 + squeezenet jointly feasible on one zcu102
+//! within every physical cap), cache-key separation across the three
+//! deployment schemas, typed infeasibility for over-budget tenant sets, and
+//! the registry serving terminal.
+
+use autows::device::Device;
+use autows::dse::DseConfig;
+use autows::ir::Quant;
+use autows::pipeline::{Deployment, DesignCache};
+use autows::sim::SimConfig;
+use autows::Error;
+
+/// Golden (satellite): `colocate([one tenant])` is the single-device
+/// deployment — design, burst schedule and simulation are bit-identical on
+/// resnet18/zcu102/W4A5, mirroring the 1-partition golden from PR 4.
+#[test]
+fn one_tenant_equals_single_device_bit_for_bit() {
+    let cfg = DseConfig::default();
+    let single = Deployment::for_model("resnet18")
+        .quant(Quant::W4A5)
+        .on_device("zcu102")
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+    let joint = Deployment::colocate([Deployment::for_model("resnet18").quant(Quant::W4A5)])
+        .on_device("zcu102")
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+
+    assert_eq!(joint.tenants().len(), 1);
+    let t = &joint.tenants()[0];
+    assert_eq!(t.share, 1.0, "a lone tenant owns the whole device");
+    assert_eq!(t.view, *single.device(), "its view is the untouched device");
+    assert_eq!(t.result.design.cfgs, single.design().cfgs, "identical per-layer configs");
+    assert_eq!(t.result.design.off_bits, single.design().off_bits, "identical evicted bits");
+    assert_eq!(t.result.throughput, single.result().throughput, "bit-identical throughput");
+    assert_eq!(t.result.latency_ms, single.result().latency_ms, "bit-identical latency");
+    assert_eq!(t.result.area, single.result().area);
+    assert_eq!(t.result.bandwidth_bps, single.result().bandwidth_bps);
+
+    // the tenant's DMA burst schedule is the single-device schedule
+    assert_eq!(joint.port_schedule().slices.len(), 1);
+    assert_eq!(joint.burst_schedule("resnet18").unwrap(), single.burst_schedule());
+    assert_eq!(joint.input_len("resnet18"), Some(single.input_len()));
+
+    // and the simulation is the single-device simulation, verbatim
+    let sim_cfg = SimConfig::default();
+    let sim_single = single.simulate(&sim_cfg);
+    let sim_joint = joint.simulate(&sim_cfg);
+    assert_eq!(sim_joint.per_tenant.len(), 1);
+    assert_eq!(sim_joint.makespan_s, sim_single.makespan_s, "bit-identical makespan");
+    assert_eq!(sim_joint.latency_ms, sim_single.latency_ms);
+    assert_eq!(sim_joint.total_stall_s, sim_single.total_stall_s);
+    assert_eq!(sim_joint.port_busy_frac, sim_single.dma_busy_frac);
+    assert_eq!(sim_joint.events, sim_single.events);
+}
+
+/// Acceptance: resnet18 + squeezenet on zcu102 yield a feasible joint plan
+/// whose summed per-tenant area/BRAM/bandwidth respect the device caps, and
+/// the report carries per-tenant shares plus the port utilization.
+#[test]
+fn resnet18_plus_squeezenet_fit_one_zcu102_within_every_cap() {
+    let cfg = DseConfig::default();
+    let dev = Device::zcu102();
+    let scheduled = Deployment::colocate([
+        Deployment::for_model("resnet18").quant(Quant::W4A5),
+        Deployment::for_model("squeezenet").quant(Quant::W8A8),
+    ])
+    .on_device("zcu102")
+    .unwrap()
+    .explore(&cfg)
+    .expect("resnet18+squeezenet must co-locate on zcu102")
+    .schedule();
+
+    assert_eq!(scheduled.tenants().len(), 2);
+    let r = scheduled.result();
+    // shares partition the budget
+    let share_sum: f64 = r.tenants.iter().map(|t| t.share).sum();
+    assert!((share_sum - 1.0).abs() < 1e-9, "{share_sum}");
+    // summed area/BRAM fit the physical device
+    let area = r.joint_area();
+    assert!(area.fits(&dev), "joint area {area:?} exceeds zcu102");
+    assert!(area.bram.total() <= dev.mem_bram_equiv());
+    // summed bandwidth fits the physical DMA port
+    assert!(r.joint_bandwidth_bps() <= dev.bandwidth_bps * (1.0 + 1e-9));
+    // every tenant fits its own slice and actually runs
+    for t in r.tenants.iter() {
+        assert!(t.result.area.fits(&t.view), "{}", t.name);
+        assert!(t.result.throughput > 0.0, "{}", t.name);
+    }
+    // the composed port schedule upholds the Eq. 8-10 argument per tenant
+    let port = scheduled.port_schedule();
+    assert!(port.schedulable(), "composed shared-port schedule must be feasible");
+    assert!(port.port_utilization() <= 1.0 + 1e-9);
+
+    // report surfaces the joint accounting
+    let report = scheduled.report();
+    assert!(report.contains("co-located on zcu102"), "{report}");
+    assert!(report.contains("tenant 0 resnet18"), "{report}");
+    assert!(report.contains("tenant 1 squeezenet"), "{report}");
+    assert!(report.contains("share="), "per-tenant share: {report}");
+    assert!(report.contains("port util"), "port utilization: {report}");
+    assert!(report.contains("joint area"), "{report}");
+
+    // and the joint simulation stays within the shared port
+    let sim = scheduled.simulate(&SimConfig::default());
+    assert!(sim.makespan_s > 0.0);
+    assert!((0.0..=1.0 + 1e-9).contains(&sim.port_busy_frac), "{}", sim.port_busy_frac);
+    assert_eq!(sim.per_tenant.len(), 2);
+}
+
+/// An over-budget tenant set fails with typed `Error::Infeasible` naming
+/// the whole tenant list — not a panic.
+#[test]
+fn over_budget_tenant_set_is_typed_infeasible() {
+    let e = Deployment::colocate([
+        Deployment::for_model("resnet50").quant(Quant::W8A8),
+        Deployment::for_model("vgg16").quant(Quant::W8A8),
+    ])
+    .on_device("zedboard")
+    .unwrap()
+    .explore(&DseConfig::vanilla())
+    .unwrap_err();
+    assert!(e.is_infeasible(), "{e}");
+    assert!(matches!(e, Error::Infeasible { .. }), "{e}");
+    assert!(e.to_string().contains("resnet50+vgg16"), "{e}");
+    assert!(e.to_string().contains("zedboard"), "{e}");
+}
+
+/// Cache separation (satellite): co-located keys never collide with
+/// single-device or partitioned keys of the same content, and tenant-list
+/// changes miss.
+#[test]
+fn cache_separates_colocated_from_single_and_partitioned() {
+    let cfg = DseConfig::default();
+    let cache = DesignCache::new();
+
+    // the same content through all three schemas: three entries, zero hits
+    let single = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_device("zcu102")
+        .unwrap()
+        .explore_in(&cache, &cfg);
+    assert!(single.is_ok());
+    let sharded = Deployment::for_model("toy")
+        .quant(Quant::W8A8)
+        .on_devices(&["zcu102"])
+        .unwrap()
+        .explore_in(&cache, &cfg);
+    assert!(sharded.is_ok());
+    let colocated = Deployment::colocate([Deployment::for_model("toy").quant(Quant::W8A8)])
+        .on_device("zcu102")
+        .unwrap()
+        .explore_in(&cache, &cfg);
+    assert!(colocated.is_ok());
+    let s = cache.stats();
+    assert_eq!(s.hits, 0, "the three schemas must never answer each other");
+    assert_eq!((s.misses, s.entries), (3, 3));
+
+    // revisiting the co-located point hits its own entry
+    let again = Deployment::colocate([Deployment::for_model("toy").quant(Quant::W8A8)])
+        .on_device("zcu102")
+        .unwrap()
+        .explore_in(&cache, &cfg)
+        .unwrap();
+    assert!(again.was_cached());
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.entries), (1, 3, 3));
+
+    // a different tenant list is a different entry, not a hit
+    let two = Deployment::colocate([
+        Deployment::for_model("toy").quant(Quant::W8A8),
+        Deployment::for_model("squeezenet").quant(Quant::W8A8),
+    ])
+    .on_device("zcu102")
+    .unwrap()
+    .explore_in(&cache, &cfg);
+    assert!(two.is_ok());
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.entries), (1, 4, 4));
+}
+
+/// The serving terminal: every tenant answers inference behind the one
+/// registry, with independent metrics, and unknown routes stay typed.
+#[test]
+fn every_tenant_serves_behind_one_registry() {
+    use autows::coordinator::{BatchPolicy, ServerOptions};
+    let scheduled = Deployment::colocate([
+        Deployment::for_model("toy").quant(Quant::W8A8),
+        Deployment::for_model("squeezenet").quant(Quant::W8A8),
+    ])
+    .on_device("zcu102")
+    .unwrap()
+    .explore(&DseConfig::default())
+    .unwrap()
+    .schedule();
+    let registry = scheduled
+        .serve(BatchPolicy::default(), ServerOptions::default())
+        .unwrap();
+    assert_eq!(registry.models(), vec!["squeezenet", "toy_cnn"]);
+    for name in scheduled.tenant_names() {
+        let input_len = scheduled.input_len(name).unwrap();
+        let resp = registry.infer(name, vec![0.5; input_len]).unwrap();
+        assert_eq!(resp.output.len(), 10, "{name}");
+        assert_eq!(registry.metrics(name).unwrap().requests, 1, "{name}");
+    }
+    let e = registry.infer("nonexistent", vec![0.0; 4]).unwrap_err();
+    assert!(matches!(e, Error::UnknownModel(_)), "{e}");
+    registry.shutdown();
+}
+
+/// Stage-0 failures of the multi-tenant path are typed errors.
+#[test]
+fn colocate_error_surface() {
+    // empty tenant list
+    let e = Deployment::colocate(Vec::new()).on_device("zcu102").unwrap_err();
+    assert!(matches!(e, Error::Usage(_)), "{e}");
+
+    // duplicate tenant names collide in the serving registry, so they are
+    // rejected at planning time
+    let e = Deployment::colocate([
+        Deployment::for_model("toy").quant(Quant::W8A8),
+        Deployment::for_model("toy").quant(Quant::W4A4),
+    ])
+    .on_device("zcu102")
+    .unwrap_err();
+    assert!(matches!(e, Error::DuplicateModel(ref m) if m == "toy_cnn"), "{e}");
+
+    // unknown device / model stay typed
+    let e = Deployment::colocate([Deployment::for_model("toy")])
+        .on_device("zcu9000")
+        .unwrap_err();
+    assert!(matches!(e, Error::UnknownDevice(_)), "{e}");
+    let e = Deployment::colocate([Deployment::for_model("resnet9000")])
+        .on_device("zcu102")
+        .unwrap_err();
+    assert!(matches!(e, Error::UnknownModel(_)), "{e}");
+}
+
+/// The `[[tenant]]` config path drives the same joint plan end to end.
+#[test]
+fn multitenant_runspec_plans_and_reports() {
+    use autows::config::RunSpec;
+    let spec = RunSpec::from_str(
+        "[device]\nname = \"zcu102\"\n\
+         [[tenant]]\nname = \"toy\"\n\
+         [[tenant]]\nname = \"squeezenet\"\n",
+    )
+    .unwrap();
+    assert!(spec.is_colocated());
+    let scheduled = spec
+        .plan_colocated()
+        .unwrap()
+        .explore(&DseConfig::default())
+        .unwrap()
+        .schedule();
+    assert_eq!(scheduled.tenants().len(), 2);
+    let report = scheduled.report();
+    assert!(report.contains("toy_cnn"), "{report}");
+    assert!(report.contains("squeezenet"), "{report}");
+}

@@ -33,6 +33,26 @@ cargo run --release --bin autows -- run --config configs/resnet18_zcu102.toml
 echo "== smoke: autows run (sharded, 2x zcu102) =="
 cargo run --release --bin autows -- run --config configs/resnet50_2xzcu102.toml
 
+echo "== smoke: autows run (co-located, resnet18 + squeezenet on one zcu102) =="
+cargo run --release --bin autows -- run --config configs/multitenant_zcu102.toml
+
+echo "== smoke: simulate --json parses (single + co-located) =="
+SIM_JSON_DIR="$(mktemp -d)"
+trap 'rm -rf "$SIM_JSON_DIR"' EXIT
+cargo run --release --bin autows -- simulate --model resnet18 --device zcu102 \
+    --quant w4a5 --json "$SIM_JSON_DIR/single.json"
+cargo run --release --bin autows -- simulate --models resnet18,squeezenet \
+    --device zcu102 --quant w4a5 --json "$SIM_JSON_DIR/colocated.json"
+for f in "$SIM_JSON_DIR/single.json" "$SIM_JSON_DIR/colocated.json"; do
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -m json.tool "$f" >/dev/null || { echo "invalid JSON: $f"; exit 1; }
+    else
+        # no python3: at least require the machine-readable envelope
+        grep -q '"mode":' "$f" || { echo "missing mode field: $f"; exit 1; }
+    fi
+done
+echo "simulate --json OK"
+
 echo "== perf trajectory (BENCH_dse.json) =="
 ./scripts/bench_dse.sh
 
