@@ -62,8 +62,7 @@ fn main() -> Result<(), Error> {
     for rx in receivers {
         let resp = rx
             .recv()
-            .map_err(|_| Error::Serve("coordinator dropped request".into()))?
-            .map_err(|e| Error::Serve(e.to_string()))?;
+            .map_err(|_| Error::Serve("coordinator dropped request".into()))??;
         let argmax = resp
             .output
             .iter()

@@ -37,9 +37,11 @@ fn main() -> Result<(), Error> {
     .schedule();
     print!("{}", scheduled.report());
 
+    // two pool workers per tenant: the SimOnly engines clone cheaply, and
+    // the registry's batching/metrics are unchanged by the fan-out
     let registry = scheduled.serve(
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-        ServerOptions { queue_cap: 256 },
+        ServerOptions { queue_cap: 256, workers: 2 },
     )?;
 
     println!("\nopen-loop latency vs offered load (64 Poisson arrivals per point):");

@@ -1,28 +1,161 @@
-//! End-to-end serving benchmark: PJRT numerics + coordinator batching,
-//! reporting request throughput and latency percentiles (the e2e driver of
-//! DESIGN.md's experiment index). Runs on the `autows::pipeline` chain —
-//! model → DSE → schedule → serve — with the PJRT engine spec.
+//! End-to-end serving benchmark, two parts:
 //!
-//! Skips gracefully when `make artifacts` has not been run.
+//! 1. **Pool sweep** (always runs — SimOnly, self-contained): the same
+//!    open-loop Poisson load offered to engine pools of 1/2/4/8 workers.
+//!    The engines are paced ([`PacedEngine`]) so each batch occupies its
+//!    worker for the simulated accelerator time — without pacing the
+//!    checksum engines finish in microseconds and every pool size looks
+//!    identical. This is the perf-trajectory artifact: `--json PATH`
+//!    writes `BENCH_serve.json` (offered rate, achieved rps, p50/p99 per
+//!    pool size) next to `BENCH_dse.json`.
+//! 2. **PJRT e2e** (skips gracefully when `make artifacts` has not run):
+//!    PJRT numerics + coordinator batching through `autows::pipeline`.
+//!
+//! ```text
+//! e2e_serve_bench                  pool sweep + PJRT e2e
+//! e2e_serve_bench --quick          smaller sweep (CI cadence)
+//! e2e_serve_bench --json <path>    also write the sweep as JSON
+//! ```
 
 #[path = "harness.rs"]
 mod harness;
 
 use std::time::Duration;
 
-use autows::coordinator::{BatchPolicy, ServerOptions};
-use autows::dse::DseConfig;
+use autows::coordinator::{
+    run_open_loop, ArrivalSchedule, BatchPolicy, Engine, LoadResult, PacedEngine, Server,
+    ServerOptions, SimOnlyEngine,
+};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
 use autows::ir::Quant;
 use autows::pipeline::{drive_synthetic, Deployment, EngineSpec};
 
-fn main() {
+const MAX_BATCH: usize = 8;
+const INPUT_LEN: usize = 3 * 32 * 32;
+
+struct SweepPoint {
+    workers: usize,
+    res: LoadResult,
+    queue_depth_mean: f64,
+    queue_depth_max: usize,
+    /// (min, max) batches served by any one worker — pool skew.
+    batch_spread: (u64, u64),
+}
+
+struct SweepParams {
+    paced_batch_s: f64,
+    offered_rps: f64,
+    requests: usize,
+}
+
+/// Offer one fixed Poisson load to pools of 1/2/4/8 paced SimOnly engines.
+fn pool_sweep(quick: bool) -> (SweepParams, Vec<SweepPoint>) {
+    let net = autows::models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).expect("toy cnn fits zcu102");
+    let mut template = SimOnlyEngine {
+        design: r.design,
+        device: dev,
+        input_len: INPUT_LEN,
+        output_len: 10,
+    };
+
+    // Pace the engines so a full batch occupies its worker for a fixed,
+    // machine-independent time; offer ~5x one worker's capacity so the
+    // single-worker server saturates and the pool sizes separate.
+    let paced_batch_s = if quick { 2e-3 } else { 4e-3 };
+    let accel_s = template.accel_batch_time(MAX_BATCH).as_secs_f64().max(1e-9);
+    let pace = paced_batch_s / accel_s;
+    let capacity_rps = MAX_BATCH as f64 / paced_batch_s;
+    let offered_rps = 5.0 * capacity_rps;
+    let requests = if quick { 160 } else { 640 };
+
+    let mut points = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let engine = PacedEngine::new(template.clone(), pace);
+        let server = Server::start_with_opts(
+            move || Ok(Box::new(engine.clone()) as _),
+            BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(500) },
+            ServerOptions { queue_cap: 0, workers },
+        )
+        .expect("sim engines boot");
+        let schedule = ArrivalSchedule::poisson(requests, offered_rps, 42);
+        let res = run_open_loop(&schedule, || server.submit(vec![0.5; INPUT_LEN]));
+        let m = server.metrics();
+        assert_eq!(res.completed, requests, "open-loop run must lose no responses");
+        let batches: Vec<u64> = m.per_worker.iter().map(|w| w.batches).collect();
+        let spread = (
+            batches.iter().copied().min().unwrap_or(0),
+            batches.iter().copied().max().unwrap_or(0),
+        );
+        points.push(SweepPoint {
+            workers,
+            res,
+            queue_depth_mean: m.queue_depth_mean,
+            queue_depth_max: m.queue_depth_max,
+            batch_spread: spread,
+        });
+        server.shutdown();
+    }
+    (SweepParams { paced_batch_s, offered_rps, requests }, points)
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(path: &str, params: &SweepParams, points: &[SweepPoint], speedup: f64) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"serve_pool\",\n");
+    out.push_str("  \"engine\": \"sim_only_paced\",\n");
+    out.push_str("  \"model\": \"toy_cnn\",\n");
+    out.push_str("  \"device\": \"zcu102\",\n");
+    out.push_str(&format!("  \"max_batch\": {MAX_BATCH},\n"));
+    out.push_str(&format!("  \"paced_batch_s\": {},\n", json_f64(params.paced_batch_s)));
+    out.push_str(&format!("  \"offered_rps\": {},\n", json_f64(params.offered_rps)));
+    out.push_str(&format!("  \"requests\": {},\n", params.requests));
+    out.push_str(&format!("  \"speedup_w4_over_w1\": {},\n", json_f64(speedup)));
+    out.push_str("  \"sweep\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"workers\": {},\n", p.workers));
+        out.push_str(&format!("      \"offered_rps\": {},\n", json_f64(p.res.offered_rps)));
+        out.push_str(&format!("      \"achieved_rps\": {},\n", json_f64(p.res.achieved_rps)));
+        out.push_str(&format!("      \"p50_ms\": {},\n", json_f64(p.res.p50_ms)));
+        out.push_str(&format!("      \"p99_ms\": {},\n", json_f64(p.res.p99_ms)));
+        out.push_str(&format!("      \"mean_ms\": {},\n", json_f64(p.res.mean_ms)));
+        out.push_str(&format!("      \"completed\": {},\n", p.res.completed));
+        out.push_str(&format!("      \"rejected\": {},\n", p.res.rejected));
+        out.push_str(&format!(
+            "      \"queue_depth_mean\": {},\n",
+            json_f64(p.queue_depth_mean)
+        ));
+        out.push_str(&format!("      \"queue_depth_max\": {},\n", p.queue_depth_max));
+        out.push_str(&format!(
+            "      \"worker_batches_min\": {},\n      \"worker_batches_max\": {}\n",
+            p.batch_spread.0, p.batch_spread.1
+        ));
+        out.push_str(if i + 1 == points.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out).expect("write BENCH_serve.json");
+    println!("wrote {path}");
+}
+
+/// PJRT numerics + coordinator batching through the pipeline chain.
+fn pjrt_e2e() {
     let artifact = format!("{}/artifacts/toy_cnn_b8.hlo.txt", env!("CARGO_MANIFEST_DIR"));
     if !std::path::Path::new(&artifact).exists() {
-        println!("SKIP e2e_serve: {artifact} missing — run `make artifacts`");
+        println!("SKIP e2e pjrt: {artifact} missing — run `make artifacts`");
         return;
     }
 
-    println!("=== End-to-end serving (toy CNN, PJRT + AutoWS schedule) ===\n");
+    println!("\n=== End-to-end serving (toy CNN, PJRT + AutoWS schedule) ===\n");
     let scheduled = Deployment::for_model("toy")
         .quant(Quant::W8A8)
         .on_device("zcu102")
@@ -58,5 +191,56 @@ fn main() {
     );
     assert!(m.mean_batch > 1.5, "batching must engage under load");
     server.shutdown();
-    println!("e2e_serve bench OK");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = match args.iter().position(|a| a == "--json") {
+        None => None,
+        Some(i) => match args.get(i + 1) {
+            Some(p) => Some(p.clone()),
+            None => {
+                eprintln!("error: --json requires an output path");
+                std::process::exit(2);
+            }
+        },
+    };
+
+    println!("=== Engine-pool sweep (paced SimOnly, open-loop Poisson) ===\n");
+    let (params, points) = pool_sweep(quick);
+    println!(
+        "offered {:.0} rps ({} requests, paced batch {:.1} ms):",
+        params.offered_rps,
+        params.requests,
+        params.paced_batch_s * 1e3
+    );
+    println!("workers  achieved(rps)  p50(ms)  p99(ms)  qdepth(max)  batches/worker");
+    for p in &points {
+        println!(
+            "{:>7} {:>14.0} {:>8.2} {:>8.2} {:>12} {:>9}..{}",
+            p.workers,
+            p.res.achieved_rps,
+            p.res.p50_ms,
+            p.res.p99_ms,
+            p.queue_depth_max,
+            p.batch_spread.0,
+            p.batch_spread.1
+        );
+    }
+
+    let w1 = points.iter().find(|p| p.workers == 1).expect("sweep includes workers=1");
+    let w4 = points.iter().find(|p| p.workers == 4).expect("sweep includes workers=4");
+    let speedup = w4.res.achieved_rps / w1.res.achieved_rps.max(1e-9);
+    println!("\nworkers=4 vs workers=1 achieved-rps: {speedup:.2}x");
+    if let Some(path) = json_path {
+        write_json(&path, &params, &points, speedup);
+    }
+    assert!(
+        speedup >= 2.0,
+        "the pool must scale: workers=4 achieved only {speedup:.2}x of workers=1"
+    );
+
+    pjrt_e2e();
+    println!("\ne2e_serve bench OK");
 }

@@ -101,6 +101,10 @@ pub struct ServeSpec {
     pub requests: usize,
     pub max_batch: usize,
     pub max_wait_ms: u64,
+    /// Engine-pool size ([`crate::coordinator::ServerOptions::workers`]):
+    /// each worker constructs its own engine on its own thread. `1` is the
+    /// single-worker server.
+    pub workers: usize,
 }
 
 /// A configuration error: parse failure or semantic problem.
@@ -140,7 +144,7 @@ const KNOWN_KEYS: [(&str, &[&str]); 6] = [
     ("device", &["name", "devices", "mem_scale", "mem_sweep"]),
     ("dse", &["phi", "mu", "batch", "vanilla", "bw_margin", "warm_start"]),
     ("sim", &["batch"]),
-    ("serve", &["artifact", "requests", "max_batch", "max_wait_ms"]),
+    ("serve", &["artifact", "requests", "max_batch", "max_wait_ms", "workers"]),
 ];
 
 impl RunSpec {
@@ -338,14 +342,19 @@ impl RunSpec {
             let requests = doc.try_int_or("serve", "requests", 64).map_err(invalid)?;
             let max_batch = doc.try_int_or("serve", "max_batch", 8).map_err(invalid)?;
             let max_wait_ms = doc.try_int_or("serve", "max_wait_ms", 2).map_err(invalid)?;
+            let workers = doc.try_int_or("serve", "workers", 1).map_err(invalid)?;
             if requests < 1 || max_batch < 1 || max_wait_ms < 0 {
                 return Err(invalid("serve: requests/max_batch must be >= 1, max_wait_ms >= 0"));
+            }
+            if !(1..=64).contains(&workers) {
+                return Err(invalid(format!("serve.workers {workers} out of range (1..64)")));
             }
             Some(ServeSpec {
                 artifact: artifact.to_string(),
                 requests: requests as usize,
                 max_batch: max_batch as usize,
                 max_wait_ms: max_wait_ms as u64,
+                workers: workers as usize,
             })
         } else {
             None
@@ -532,7 +541,7 @@ impl RunSpec {
                         max_batch: serve.max_batch,
                         max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
                     },
-                    ServerOptions::default(),
+                    ServerOptions { workers: serve.workers, ..Default::default() },
                 )?;
             crate::pipeline::drive_synthetic(&server, serve.requests, c * h * w)?;
             let m = server.metrics();
@@ -602,7 +611,7 @@ impl RunSpec {
                     max_batch: serve.max_batch,
                     max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
                 },
-                ServerOptions::default(),
+                ServerOptions { workers: serve.workers, ..Default::default() },
             )?;
             for name in scheduled.tenant_names() {
                 let input_len =
@@ -682,7 +691,7 @@ impl RunSpec {
                     max_batch: serve.max_batch,
                     max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
                 },
-                ServerOptions::default(),
+                ServerOptions { workers: serve.workers, ..Default::default() },
             )?;
             crate::pipeline::drive_synthetic(&server, serve.requests, scheduled.input_len())?;
             let m = server.metrics();
@@ -719,6 +728,7 @@ batch = 8
 artifact  = "artifacts/toy_cnn_b8.hlo.txt"
 requests  = 32
 max_batch = 4
+workers   = 2
 "#;
 
     #[test]
@@ -737,7 +747,25 @@ max_batch = 4
         let serve = s.serve.unwrap();
         assert_eq!(serve.requests, 32);
         assert_eq!(serve.max_batch, 4);
+        assert_eq!(serve.workers, 2);
         assert_eq!(s.mem_sweep, vec![0.5, 1.0, 1.5]);
+    }
+
+    #[test]
+    fn serve_workers_defaults_and_bounds() {
+        // absent key -> single-worker server
+        let s = RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\nrequests = 8").unwrap();
+        assert_eq!(s.serve.unwrap().workers, 1);
+        // zero and absurd pool sizes are spec errors, not silent clamps
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\nworkers = 0")
+            .unwrap_err();
+        assert!(e.to_string().contains("workers"), "{e}");
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\nworkers = 1000")
+            .unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        // a typo'd key is rejected with alternatives, as everywhere else
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\nworker = 2").unwrap_err();
+        assert!(e.to_string().contains("unknown key"), "{e}");
     }
 
     #[test]

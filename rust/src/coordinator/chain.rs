@@ -20,7 +20,9 @@ use crate::sim::{simulate_partitioned, SimConfig};
 
 /// Timing-only engine for a chain of partitions (the sharded counterpart of
 /// [`super::SimOnlyEngine`]): checksum numerics + the partitioned
-/// simulator's accelerator clock.
+/// simulator's accelerator clock. `Clone` so one template chain can seed
+/// every worker of an engine pool.
+#[derive(Clone)]
 pub struct ChainedEngine {
     /// `(design, device)` per partition, in chain order.
     pub stages: Vec<(Design, Device)>,

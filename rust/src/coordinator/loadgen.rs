@@ -47,6 +47,27 @@ impl ArrivalSchedule {
         }
     }
 
+    /// Deterministic non-stationary arrivals: the offered rate ramps
+    /// linearly from `start_rps` to `end_rps` across the `n` requests.
+    /// Gap `i` is an exponential sample with the locally interpolated rate,
+    /// so the schedule sweeps a latency-vs-load curve in ONE run — the
+    /// saturation knee shows up as the point in the trace where queueing
+    /// delay takes off. `rate_rps` reports the mean of the two endpoints.
+    pub fn ramp(n: usize, start_rps: f64, end_rps: f64, seed: u64) -> ArrivalSchedule {
+        assert!(start_rps > 0.0 && end_rps > 0.0, "rates must be positive");
+        let mut rng = XorShift64::new(seed);
+        let mut t = 0.0_f64;
+        let mut offsets = Vec::with_capacity(n);
+        for i in 0..n {
+            let frac = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.0 };
+            let rate = start_rps + (end_rps - start_rps) * frac;
+            let u = rng.unit().max(1e-12);
+            t += -u.ln() / rate;
+            offsets.push(Duration::from_secs_f64(t));
+        }
+        ArrivalSchedule { offsets, rate_rps: 0.5 * (start_rps + end_rps) }
+    }
+
     pub fn len(&self) -> usize {
         self.offsets.len()
     }
@@ -87,7 +108,10 @@ pub struct LoadResult {
 /// inflate early requests (the receivers buffer completed responses).
 pub fn run_open_loop<S, E>(schedule: &ArrivalSchedule, mut submit: S) -> LoadResult
 where
-    S: FnMut() -> Result<std::sync::mpsc::Receiver<anyhow::Result<crate::coordinator::Response>>, E>,
+    S: FnMut() -> Result<
+        std::sync::mpsc::Receiver<Result<crate::coordinator::Response, crate::Error>>,
+        E,
+    >,
 {
     let start = Instant::now();
     let mut pending: Vec<std::sync::mpsc::Receiver<_>> = Vec::new();
@@ -111,12 +135,8 @@ where
     }
     let wall = start.elapsed().as_secs_f64();
     latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| -> f64 {
-        if latencies_ms.is_empty() {
-            return 0.0;
-        }
-        latencies_ms[((latencies_ms.len() as f64 - 1.0) * p).round() as usize]
-    };
+    // same linear-interpolation estimator the server metrics use
+    let pct = |p: f64| -> f64 { super::metrics::percentile_sorted(&latencies_ms, p) };
     let completed = latencies_ms.len();
     LoadResult {
         offered_rps: schedule.rate_rps,
@@ -177,6 +197,43 @@ mod tests {
         // exponential gaps: coefficient of variation ≈ 1; uniform: 0
         assert!(cv(&p) > 0.8, "poisson cv {}", cv(&p));
         assert!(cv(&u) < 1e-9, "uniform cv {}", cv(&u));
+    }
+
+    #[test]
+    fn ramp_offsets_are_monotonic_and_deterministic() {
+        let a = ArrivalSchedule::ramp(500, 100.0, 1000.0, 7);
+        assert_eq!(a.len(), 500);
+        for w in a.offsets.windows(2) {
+            assert!(w[0] < w[1], "offsets must be strictly increasing");
+        }
+        let b = ArrivalSchedule::ramp(500, 100.0, 1000.0, 7);
+        assert_eq!(a.offsets, b.offsets);
+        let c = ArrivalSchedule::ramp(500, 100.0, 1000.0, 8);
+        assert_ne!(a.offsets, c.offsets);
+        assert!((a.rate_rps - 550.0).abs() < 1e-9, "mean of the endpoints");
+    }
+
+    #[test]
+    fn ramp_rate_endpoints_match() {
+        let n = 4000;
+        let s = ArrivalSchedule::ramp(n, 200.0, 2000.0, 13);
+        let gaps: Vec<f64> =
+            s.offsets.windows(2).map(|w| (w[1] - w[0]).as_secs_f64()).collect();
+        let head = n / 10;
+        let mean = |g: &[f64]| g.iter().sum::<f64>() / g.len() as f64;
+        let head_rate = 1.0 / mean(&gaps[..head]);
+        let tail_rate = 1.0 / mean(&gaps[gaps.len() - head..]);
+        // first/last decile should sit near the ramp endpoints (exponential
+        // noise over ~400 gaps: relative std ≈ 5%, allow ±30%)
+        assert!(
+            (140.0..280.0).contains(&head_rate),
+            "head of the ramp ≈ start rate, got {head_rate}"
+        );
+        assert!(
+            (1400.0..2800.0).contains(&tail_rate),
+            "tail of the ramp ≈ end rate, got {tail_rate}"
+        );
+        assert!(tail_rate > 3.0 * head_rate, "the ramp must actually ramp");
     }
 
     #[test]

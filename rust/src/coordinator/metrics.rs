@@ -1,6 +1,39 @@
-//! Serving metrics: latency distribution, throughput, batch sizes.
+//! Serving metrics: latency distribution, throughput, batch sizes, and —
+//! since the engine pool — per-worker accounting and dispatch-queue depth.
 
 use std::time::Duration;
+
+/// Linear-interpolation percentile over an ascending-sorted slice (the
+/// "exclusive of the definition, inclusive of the data" estimator used by
+/// numpy's default `linear` mode): rank `h = (n-1)·p` falls between two
+/// order statistics and the result interpolates between them. On tiny
+/// sample sets this matters — nearest-rank snapping makes p99 of a
+/// 10-sample set equal its maximum, hiding the tail shape entirely.
+pub(crate) fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let h = (sorted.len() as f64 - 1.0) * p.clamp(0.0, 1.0);
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    let frac = h - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Per-worker accounting: how many batches/requests each pool worker
+/// served and how long it spent busy in the engine. Uneven `batches`
+/// across workers is pool skew; `busy_s` against wall-clock is worker
+/// utilization.
+#[derive(Debug, Default, Clone)]
+pub struct WorkerStats {
+    /// Batches this worker dispatched to its engine.
+    pub batches: u64,
+    /// Requests those batches carried.
+    pub requests: u64,
+    /// Wall-clock the worker spent inside the engine (timing + numerics),
+    /// seconds.
+    pub busy_s: f64,
+}
 
 /// Online metrics accumulator (plain struct; the server wraps it in a lock).
 #[derive(Debug, Default)]
@@ -10,9 +43,38 @@ pub struct Metrics {
     batch_items: u64,
     sim_accel_s: f64,
     started_at: Option<std::time::Instant>,
+    workers: Vec<WorkerStats>,
+    queue_samples: u64,
+    queue_sum: u64,
+    queue_max: usize,
 }
 
 /// A point-in-time summary.
+///
+/// Percentiles (`p50_ms`/`p95_ms`/`p99_ms`) use the **linear-interpolation
+/// order-statistic estimator**: the rank `h = (n-1)·p` generally falls
+/// between two sorted samples, and the reported value interpolates linearly
+/// between them (numpy's default). The earlier estimator snapped to the
+/// nearest sample index, which on small batches collapsed every tail
+/// percentile onto one sample — p99 of a 10-sample set was just the
+/// maximum. Worked 5-sample example:
+///
+/// ```
+/// use std::time::Duration;
+/// use autows::coordinator::Metrics;
+///
+/// let mut m = Metrics::default();
+/// let lats: Vec<Duration> =
+///     [10u64, 20, 30, 40, 50].iter().map(|&ms| Duration::from_millis(ms)).collect();
+/// m.record_batch(&lats, Duration::ZERO);
+/// let s = m.snapshot();
+/// // h = (5-1)·p: p50 → rank 2.0 (exactly the middle sample) ...
+/// assert!((s.p50_ms - 30.0).abs() < 1e-9);
+/// // ... p95 → rank 3.8: 40 + 0.8·(50-40) = 48 ms (nearest-rank said 50)
+/// assert!((s.p95_ms - 48.0).abs() < 1e-9);
+/// // ... p99 → rank 3.96: 40 + 0.96·(50-40) = 49.6 ms
+/// assert!((s.p99_ms - 49.6).abs() < 1e-9);
+/// ```
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub requests: u64,
@@ -25,13 +87,37 @@ pub struct MetricsSnapshot {
     pub throughput_rps: f64,
     /// Total *simulated accelerator* time spent, seconds.
     pub sim_accel_s: f64,
+    /// Per-worker batch/request counts and engine busy-time. One entry per
+    /// pool worker that has served at least one batch (always index-aligned
+    /// with worker ids; a worker that served nothing may be absent from the
+    /// tail).
+    pub per_worker: Vec<WorkerStats>,
+    /// Mean of the queue-depth samples the dispatcher took at each batch
+    /// dispatch (requests admitted but not yet handed to an engine).
+    pub queue_depth_mean: f64,
+    /// Maximum observed dispatch-point queue depth.
+    pub queue_depth_max: usize,
 }
 
 impl Metrics {
-    /// Record one dispatched batch. An empty latency slice is a no-op: a
-    /// batch that served nothing must not skew `mean_batch` toward zero or
-    /// start the throughput clock.
+    /// Record one dispatched batch against pool worker 0 (the single-worker
+    /// server's accounting; pool workers use [`Metrics::record_batch_on`]).
+    /// An empty latency slice is a no-op: a batch that served nothing must
+    /// not skew `mean_batch` toward zero or start the throughput clock.
     pub fn record_batch(&mut self, latencies: &[Duration], sim_accel: Duration) {
+        self.record_batch_on(0, latencies, sim_accel, Duration::ZERO);
+    }
+
+    /// Record one dispatched batch served by pool worker `worker`, with the
+    /// wall-clock the worker spent inside the engine (`busy`). Empty
+    /// latency slices are a no-op, as in [`Metrics::record_batch`].
+    pub fn record_batch_on(
+        &mut self,
+        worker: usize,
+        latencies: &[Duration],
+        sim_accel: Duration,
+        busy: Duration,
+    ) {
         if latencies.is_empty() {
             return;
         }
@@ -42,22 +128,32 @@ impl Metrics {
         self.batch_items += latencies.len() as u64;
         self.sim_accel_s += sim_accel.as_secs_f64();
         self.latencies_us.extend(latencies.iter().map(|d| d.as_micros() as u64));
+        if self.workers.len() <= worker {
+            self.workers.resize(worker + 1, WorkerStats::default());
+        }
+        let w = &mut self.workers[worker];
+        w.batches += 1;
+        w.requests += latencies.len() as u64;
+        w.busy_s += busy.as_secs_f64();
+    }
+
+    /// Sample the dispatch-point queue depth (requests admitted but not yet
+    /// handed to an engine). The dispatcher calls this once per dispatched
+    /// batch, so the mean weights depth by dispatch activity.
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.queue_samples += 1;
+        self.queue_sum += depth as u64;
+        self.queue_max = self.queue_max.max(depth);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut sorted = self.latencies_us.clone();
-        sorted.sort_unstable();
-        let pct = |p: f64| -> f64 {
-            if sorted.is_empty() {
-                return 0.0;
-            }
-            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-            sorted[idx] as f64 / 1e3
-        };
-        let mean = if sorted.is_empty() {
+        let mut sorted_ms: Vec<f64> =
+            self.latencies_us.iter().map(|&us| us as f64 / 1e3).collect();
+        sorted_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = if sorted_ms.is_empty() {
             0.0
         } else {
-            sorted.iter().sum::<u64>() as f64 / sorted.len() as f64 / 1e3
+            sorted_ms.iter().sum::<f64>() / sorted_ms.len() as f64
         };
         let elapsed = self.started_at.map_or(0.0, |t| t.elapsed().as_secs_f64());
         MetricsSnapshot {
@@ -68,12 +164,19 @@ impl Metrics {
             } else {
                 self.batch_items as f64 / self.batches as f64
             },
-            p50_ms: pct(0.50),
-            p95_ms: pct(0.95),
-            p99_ms: pct(0.99),
+            p50_ms: percentile_sorted(&sorted_ms, 0.50),
+            p95_ms: percentile_sorted(&sorted_ms, 0.95),
+            p99_ms: percentile_sorted(&sorted_ms, 0.99),
             mean_ms: mean,
             throughput_rps: if elapsed > 0.0 { self.batch_items as f64 / elapsed } else { 0.0 },
             sim_accel_s: self.sim_accel_s,
+            per_worker: self.workers.clone(),
+            queue_depth_mean: if self.queue_samples == 0 {
+                0.0
+            } else {
+                self.queue_sum as f64 / self.queue_samples as f64
+            },
+            queue_depth_max: self.queue_max,
         }
     }
 }
@@ -88,6 +191,9 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99_ms, 0.0);
+        assert!(s.per_worker.is_empty());
+        assert_eq!(s.queue_depth_mean, 0.0);
+        assert_eq!(s.queue_depth_max, 0);
     }
 
     #[test]
@@ -138,6 +244,7 @@ mod tests {
         assert_eq!(s.mean_batch, 0.0);
         assert_eq!(s.sim_accel_s, 0.0, "no work was dispatched");
         assert_eq!(s.throughput_rps, 0.0, "the clock must not start on nothing");
+        assert!(s.per_worker.is_empty(), "no worker served anything");
         // a real batch after the no-op accounts normally
         m.record_batch(&[Duration::from_millis(2); 3], Duration::ZERO);
         let s = m.snapshot();
@@ -178,5 +285,49 @@ mod tests {
         // the 50 ms stragglers keep the tail up after fast batches landed
         assert!(s.p99_ms >= 49.0, "{}", s.p99_ms);
         assert!(s.p50_ms <= 4.0, "{}", s.p50_ms);
+    }
+
+    #[test]
+    fn small_sample_tails_interpolate_instead_of_snapping() {
+        // 10 samples, 1..=10 ms: nearest-rank p99 snapped to the maximum
+        // (10 ms); the interpolated estimator lands between the top two
+        // order statistics: h = 9·0.99 = 8.91 → 9 + 0.91·(10-9) = 9.91 ms.
+        let mut m = Metrics::default();
+        let lats: Vec<Duration> = (1..=10).map(Duration::from_millis).collect();
+        m.record_batch(&lats, Duration::ZERO);
+        let s = m.snapshot();
+        assert!((s.p99_ms - 9.91).abs() < 1e-9, "{}", s.p99_ms);
+        assert!(s.p99_ms < 10.0, "p99 of 10 samples must not equal the max");
+        // p95: h = 9·0.95 = 8.55 → 9 + 0.55·1 = 9.55 ms
+        assert!((s.p95_ms - 9.55).abs() < 1e-9, "{}", s.p95_ms);
+        // p50: h = 4.5 → 5 + 0.5·1 = 5.5 ms (even-count median, the
+        // classic interpolation case)
+        assert!((s.p50_ms - 5.5).abs() < 1e-9, "{}", s.p50_ms);
+    }
+
+    #[test]
+    fn per_worker_accounting_and_queue_depth() {
+        let mut m = Metrics::default();
+        m.record_batch_on(0, &[Duration::from_millis(1); 4], Duration::ZERO, Duration::from_millis(2));
+        m.record_batch_on(2, &[Duration::from_millis(1); 2], Duration::ZERO, Duration::from_millis(3));
+        m.record_batch_on(0, &[Duration::from_millis(1); 1], Duration::ZERO, Duration::from_millis(1));
+        m.record_queue_depth(4);
+        m.record_queue_depth(0);
+        m.record_queue_depth(8);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 7);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.per_worker.len(), 3, "ids index the vec; worker 1 served nothing");
+        assert_eq!(s.per_worker[0].batches, 2);
+        assert_eq!(s.per_worker[0].requests, 5);
+        assert!((s.per_worker[0].busy_s - 3e-3).abs() < 1e-12);
+        assert_eq!(s.per_worker[1].batches, 0);
+        assert_eq!(s.per_worker[2].batches, 1);
+        assert_eq!(s.per_worker[2].requests, 2);
+        assert!((s.queue_depth_mean - 4.0).abs() < 1e-12);
+        assert_eq!(s.queue_depth_max, 8);
+        // aggregate view stays consistent with the per-worker split
+        let total: u64 = s.per_worker.iter().map(|w| w.requests).sum();
+        assert_eq!(total, s.requests);
     }
 }

@@ -5,9 +5,12 @@
 //! incoming requests, form batches, dispatch each batch to the engine
 //! (PJRT numerics + simulated accelerator clock), and report metrics.
 //!
-//! Everything here is synchronous-core with an async facade: the batching
-//! policy and metrics are plain testable structs; [`Server`] wires them to
-//! tokio channels.
+//! Everything here is synchronous-core: the batching policy and metrics are
+//! plain testable structs; [`Server`] wires them to threads and channels.
+//! Execution scales out via an engine pool ([`ServerOptions::workers`]):
+//! one shared [`PriorityBatcher`] front dispatches formed batches to K
+//! workers, each owning an engine constructed on its own thread (the PJRT
+//! thread-affinity contract). See `server.rs` for the topology diagram.
 
 mod batcher;
 mod chain;
@@ -20,9 +23,9 @@ mod server;
 pub use batcher::{BatchPolicy, Batcher};
 pub use chain::ChainedEngine;
 pub use loadgen::{run_open_loop, ArrivalSchedule, LoadResult};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, WorkerStats};
 pub use priority::{Priority, PriorityBatcher};
 pub use registry::{ModelEntry, ModelRegistry};
 pub use server::{
-    Engine, PjrtEngine, Request, Response, Server, ServerOptions, SimOnlyEngine,
+    Engine, PacedEngine, PjrtEngine, Request, Response, Server, ServerOptions, SimOnlyEngine,
 };

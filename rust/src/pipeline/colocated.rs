@@ -346,7 +346,7 @@ impl ColocatedScheduled {
             };
             registry.register(
                 ModelEntry { name: t.name.clone(), input_len, policy, options: opts },
-                move || Ok(Box::new(engine) as _),
+                move || Ok(Box::new(engine.clone()) as _),
             )?;
         }
         Ok(registry)

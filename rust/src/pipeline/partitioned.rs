@@ -311,7 +311,8 @@ impl PartitionedScheduled {
 
     /// Boot the serving loop for this sharded design: one [`Server`] (queue,
     /// batcher, metrics unchanged) dispatching to the chain of per-partition
-    /// engines via [`ChainedEngine`].
+    /// engines via [`ChainedEngine`] — or, with `opts.workers > 1`, to a
+    /// pool of identical chains.
     pub fn serve(&self, policy: BatchPolicy, opts: ServerOptions) -> Result<Server, Error> {
         let stages: Vec<(crate::dse::Design, Device)> = self
             .outcome
@@ -320,7 +321,7 @@ impl PartitionedScheduled {
             .map(|p| (p.result.design.clone(), p.device.clone()))
             .collect();
         let engine = ChainedEngine::new(stages, self.input_len(), self.output_len);
-        Server::start_with_opts(move || Ok(Box::new(engine) as _), policy, opts)
+        Server::start_with_opts(move || Ok(Box::new(engine.clone()) as _), policy, opts)
             .map_err(|e| Error::Serve(e.to_string()))
     }
 }

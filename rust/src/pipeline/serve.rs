@@ -51,8 +51,9 @@ impl Scheduled {
     }
 
     /// Boot the serving loop for this design: the engine (per
-    /// [`Scheduled::with_engine`]) is constructed on the worker thread, the
-    /// batcher runs `policy`, and admission control follows `opts`.
+    /// [`Scheduled::with_engine`]) is constructed on each pool worker's own
+    /// thread (`opts.workers` of them), the batcher runs `policy`, and
+    /// admission control follows `opts`.
     pub fn serve(&self, policy: BatchPolicy, opts: ServerOptions) -> Result<Server, Error> {
         let design = self.result.design.clone();
         let device = self.device.clone();
@@ -64,22 +65,23 @@ impl Scheduled {
                     input_len: self.input_len(),
                     output_len: *output_len,
                 };
-                Server::start_with_opts(move || Ok(Box::new(engine) as _), policy, opts)
+                Server::start_with_opts(move || Ok(Box::new(engine.clone()) as _), policy, opts)
                     .map_err(|e| Error::Serve(e.to_string()))
             }
             EngineSpec::Pjrt { artifact, input_shape, artifact_batch } => {
                 let artifact = artifact.clone();
                 let input_shape = *input_shape;
                 let artifact_batch = *artifact_batch;
-                // PJRT handles are thread-affine: construct on the worker.
+                // PJRT handles are thread-affine: each worker loads its own
+                // copy of the artifact on its own thread.
                 Server::start_with_opts(
                     move || {
                         let rt = Runtime::cpu()?;
                         let model = rt.load_hlo_text(&artifact)?;
                         Ok(Box::new(PjrtEngine::new(
                             model,
-                            design,
-                            device,
+                            design.clone(),
+                            device.clone(),
                             input_shape,
                             artifact_batch,
                         )) as _)
@@ -100,15 +102,13 @@ fn synthetic_input(i: usize, input_len: usize) -> Vec<f32> {
     (0..input_len).map(|j| ((i * 31 + j) % 255) as f32 / 255.0).collect()
 }
 
-/// Wait for every submitted response, mapping the two failure layers
-/// (dropped coordinator, engine error) to [`Error::Serve`].
+/// Wait for every submitted response; per-request failures arrive typed
+/// from the coordinator, a dropped coordinator maps to [`Error::Serve`].
 fn await_all(
-    receivers: Vec<std::sync::mpsc::Receiver<anyhow::Result<crate::coordinator::Response>>>,
+    receivers: Vec<std::sync::mpsc::Receiver<Result<crate::coordinator::Response, Error>>>,
 ) -> Result<(), Error> {
     for rx in receivers {
-        rx.recv()
-            .map_err(|_| Error::Serve("coordinator dropped request".to_string()))?
-            .map_err(|e| Error::Serve(e.to_string()))?;
+        rx.recv().map_err(|_| Error::Serve("coordinator dropped request".to_string()))??;
     }
     Ok(())
 }
@@ -117,10 +117,9 @@ fn await_all(
 /// response — the shared driver of the CLI serve command, `RunSpec`
 /// serving sections and the e2e bench.
 pub fn drive_synthetic(server: &Server, requests: usize, input_len: usize) -> Result<(), Error> {
-    let receivers: Result<Vec<_>, _> = (0..requests)
-        .map(|i| server.submit(synthetic_input(i, input_len)))
-        .collect();
-    await_all(receivers.map_err(|e| Error::Serve(e.to_string()))?)
+    let receivers: Result<Vec<_>, Error> =
+        (0..requests).map(|i| server.submit(synthetic_input(i, input_len))).collect();
+    await_all(receivers?)
 }
 
 /// [`drive_synthetic`] against one tenant of a co-located

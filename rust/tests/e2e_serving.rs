@@ -1,14 +1,27 @@
 //! End-to-end integration: DSE schedule + PJRT numerics + coordinator
-//! batching, exercised together the way `autows serve` wires them.
+//! batching, exercised together the way `autows serve` wires them — plus
+//! the engine-pool serving path on the SimOnly engine (always runs, no
+//! artifacts needed).
 
 use std::time::Duration;
 
-use autows::coordinator::{BatchPolicy, PjrtEngine, Server};
+use autows::coordinator::{
+    BatchPolicy, Engine, PacedEngine, PjrtEngine, Server, ServerOptions, SimOnlyEngine,
+};
 use autows::device::Device;
 use autows::dse::{self, DseConfig};
 use autows::ir::Quant;
 use autows::models;
 use autows::runtime::Runtime;
+use autows::Error;
+
+/// Deterministic checksum engine for the toy CNN on zcu102.
+fn sim_engine() -> SimOnlyEngine {
+    let net = models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).expect("toy cnn fits zcu102");
+    SimOnlyEngine { design: r.design, device: dev, input_len: 3 * 32 * 32, output_len: 10 }
+}
 
 fn artifact(name: &str) -> Option<String> {
     let path = format!("{}/artifacts/{}", env!("CARGO_MANIFEST_DIR"), name);
@@ -89,5 +102,114 @@ fn identical_inputs_get_identical_outputs_across_batches() {
     let a = server.infer(input.clone()).unwrap();
     let b = server.infer(input).unwrap();
     assert_eq!(a.output, b.output, "padding/batching must not perturb numerics");
+    server.shutdown();
+}
+
+/// workers = 1 must behave exactly like the pre-pool server: same outputs
+/// for the same fixed trace through both the legacy `start` entry point and
+/// `start_with_opts { workers: 1 }`, and the same serving metrics.
+#[test]
+fn pool_of_one_matches_legacy_server_on_fixed_trace() {
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let legacy = Server::start(sim_engine(), policy);
+    let engine = sim_engine();
+    let pooled = Server::start_with_opts(
+        move || Ok(Box::new(engine.clone()) as _),
+        policy,
+        ServerOptions { queue_cap: 0, workers: 1 },
+    )
+    .unwrap();
+
+    let trace: Vec<Vec<f32>> = (0..16)
+        .map(|i| (0..3 * 32 * 32).map(|j| ((i * 37 + j) % 101) as f32 / 101.0).collect())
+        .collect();
+    let mut outputs = Vec::new();
+    for server in [&legacy, &pooled] {
+        let rxs: Vec<_> = trace.iter().map(|t| server.submit(t.clone()).unwrap()).collect();
+        let outs: Vec<Vec<f32>> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().output).collect();
+        outputs.push(outs);
+    }
+    assert_eq!(outputs[0], outputs[1], "pool of one must be bit-identical to legacy path");
+
+    let (lm, pm) = (legacy.metrics(), pooled.metrics());
+    assert_eq!(lm.requests, 16);
+    assert_eq!(pm.requests, 16);
+    assert_eq!(pm.per_worker.len(), 1, "single worker, id 0");
+    assert_eq!(pm.per_worker[0].requests, 16);
+    legacy.shutdown();
+    pooled.shutdown();
+}
+
+/// K > 1 loses no responses and keeps per-request integrity: every request
+/// carries a distinct input whose checksum output must come back on *its*
+/// receiver, no matter which worker served it.
+#[test]
+fn pool_preserves_per_request_integrity_under_load() {
+    let engine = sim_engine();
+    let input_len = engine.input_len;
+    let server = Server::start_with_opts(
+        move || Ok(Box::new(engine.clone()) as _),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        ServerOptions { queue_cap: 0, workers: 4 },
+    )
+    .unwrap();
+
+    const N: usize = 96;
+    let rxs: Vec<_> = (0..N).map(|i| server.submit(vec![i as f32; input_len]).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("no response lost").expect("inference ok");
+        let want = i as f32 * input_len as f32;
+        assert_eq!(resp.output.len(), 10);
+        for v in &resp.output {
+            assert!(
+                (v - want).abs() <= 1e-1 * want.max(1.0),
+                "request {i} got checksum {v}, want {want} — cross-request mixup"
+            );
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests, N as u64);
+    let served: u64 = m.per_worker.iter().map(|w| w.requests).sum();
+    assert_eq!(served, N as u64, "per-worker accounting covers every request");
+    server.shutdown();
+}
+
+/// A full queue surfaces `Error::Overloaded` at submit time instead of
+/// blocking or deadlocking; every admitted request still completes.
+#[test]
+fn pool_overload_rejects_instead_of_deadlocking() {
+    // Paced engine so workers stay busy ~5ms per batch: submissions landing
+    // while the queue is at cap must bounce synchronously.
+    let mut engine = sim_engine();
+    let input_len = engine.input_len;
+    let accel_s = engine.accel_batch_time(8).as_secs_f64().max(1e-9);
+    let paced = PacedEngine::new(engine, 5e-3 / accel_s);
+    let server = Server::start_with_opts(
+        move || Ok(Box::new(paced.clone()) as _),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        ServerOptions { queue_cap: 4, workers: 2 },
+    )
+    .unwrap();
+
+    let mut admitted = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..64 {
+        match server.submit(vec![i as f32; input_len]) {
+            Ok(rx) => admitted.push(rx),
+            Err(e) => {
+                assert!(
+                    matches!(e, Error::Overloaded { cap: 4, .. }),
+                    "expected typed overload, got: {e}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "64 instant submissions must overflow a cap of 4");
+    assert!(!admitted.is_empty(), "admission control must not reject everything");
+    for rx in admitted {
+        rx.recv().expect("admitted request must complete").expect("inference ok");
+    }
     server.shutdown();
 }

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Build release and record the serving-path performance trajectory.
+#
+# Writes BENCH_serve.json at the repo root (next to BENCH_dse.json): one
+# open-loop Poisson load offered to engine pools of 1/2/4/8 workers on the
+# paced SimOnly engine — offered rate, achieved rps, p50/p99 latency and
+# queue depth per pool size, plus the workers=4 vs workers=1 speedup the
+# bench asserts on. Pass --quick for the small CI-cadence sweep. Run from
+# anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# (Absolute path: cargo runs bench binaries with cwd set to the package
+# root, so a bare filename would land in rust/. The non-empty array also
+# keeps `set -u` happy on pre-4.4 bash when no --quick flag is given.)
+ARGS=(--json "$PWD/BENCH_serve.json")
+if [[ "${1:-}" == "--quick" ]]; then
+    ARGS=(--quick "${ARGS[@]}")
+fi
+
+cargo build --release
+
+cargo bench --bench e2e_serve_bench -- "${ARGS[@]}"
+
+echo
+echo "BENCH_serve.json:"
+cat BENCH_serve.json

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 CI gate: build, test, format check, lint, smoke-run the launcher
 # (single-device and sharded), then record the DSE/simulator performance
-# trajectory (BENCH_dse.json via scripts/bench_dse.sh). Run from anywhere.
+# trajectory (BENCH_dse.json via scripts/bench_dse.sh) and the serving-path
+# trajectory (BENCH_serve.json via scripts/bench_serve.sh). Run from
+# anywhere.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -55,5 +57,19 @@ echo "simulate --json OK"
 
 echo "== perf trajectory (BENCH_dse.json) =="
 ./scripts/bench_dse.sh
+
+echo "== perf trajectory (BENCH_serve.json, quick sweep) =="
+./scripts/bench_serve.sh --quick
+
+echo "== bench artifacts parse as JSON =="
+for f in BENCH_dse.json BENCH_serve.json; do
+    [[ -s "$f" ]] || { echo "missing bench artifact: $f"; exit 1; }
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -m json.tool "$f" >/dev/null || { echo "invalid JSON: $f"; exit 1; }
+    else
+        grep -q '"bench":' "$f" || { echo "missing bench field: $f"; exit 1; }
+    fi
+done
+echo "bench artifacts OK"
 
 echo "CI OK"
