@@ -41,7 +41,7 @@ fn main() -> Result<(), Error> {
     // the registry's batching/metrics are unchanged by the fan-out
     let registry = scheduled.serve(
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-        ServerOptions { queue_cap: 256, workers: 2 },
+        ServerOptions { queue_cap: 256, workers: 2, dispatch_shards: 0 },
     )?;
 
     println!("\nopen-loop latency vs offered load (64 Poisson arrivals per point):");

@@ -1,4 +1,4 @@
-//! End-to-end serving benchmark, two parts:
+//! End-to-end serving benchmark, three parts:
 //!
 //! 1. **Pool sweep** (always runs — SimOnly, self-contained): the same
 //!    open-loop Poisson load offered to engine pools of 1/2/4/8 workers.
@@ -8,19 +8,26 @@
 //!    identical. This is the perf-trajectory artifact: `--json PATH`
 //!    writes `BENCH_serve.json` (offered rate, achieved rps, p50/p99 per
 //!    pool size) next to `BENCH_dse.json`.
-//! 2. **PJRT e2e** (skips gracefully when `make artifacts` has not run):
+//! 2. **Dispatcher-saturation sweep** (always runs): tiny paced engine
+//!    time, tiny inputs, offered load ~1.25× the *8-worker* pool capacity
+//!    from 4 concurrent submitters — the configuration where engine time
+//!    is near-zero and the old single-dispatcher front flatlined. With the
+//!    sharded front, achieved rps must keep scaling with the pool
+//!    (`workers = 8` ≥ 3.5× `workers = 1`, asserted here), and the
+//!    steady-state lock counter must stay zero.
+//! 3. **PJRT e2e** (skips gracefully when `make artifacts` has not run):
 //!    PJRT numerics + coordinator batching through `autows::pipeline`.
 //!
 //! ```text
-//! e2e_serve_bench                  pool sweep + PJRT e2e
-//! e2e_serve_bench --quick          smaller sweep (CI cadence)
-//! e2e_serve_bench --json <path>    also write the sweep as JSON
+//! e2e_serve_bench                  both sweeps + PJRT e2e
+//! e2e_serve_bench --quick          smaller sweeps (CI cadence)
+//! e2e_serve_bench --json <path>    also write the sweeps as JSON
 //! ```
 
 #[path = "harness.rs"]
 mod harness;
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use autows::coordinator::{
     run_open_loop, ArrivalSchedule, BatchPolicy, Engine, LoadResult, PacedEngine, Server,
@@ -77,7 +84,7 @@ fn pool_sweep(quick: bool) -> (SweepParams, Vec<SweepPoint>) {
         let server = Server::start_with_opts(
             move || Ok(Box::new(engine.clone()) as _),
             BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(500) },
-            ServerOptions { queue_cap: 0, workers },
+            ServerOptions { queue_cap: 0, workers, dispatch_shards: 0 },
         )
         .expect("sim engines boot");
         let schedule = ArrivalSchedule::poisson(requests, offered_rps, 42);
@@ -101,6 +108,118 @@ fn pool_sweep(quick: bool) -> (SweepParams, Vec<SweepPoint>) {
     (SweepParams { paced_batch_s, offered_rps, requests }, points)
 }
 
+/// Bench-local engine for the dispatcher-saturation sweep: occupies its
+/// worker for a FIXED, cached batch time (no per-batch simulator call —
+/// that would put simulator CPU on the measurement path) and runs the
+/// SimOnly checksum numerics. The fixed time is deliberately tiny so the
+/// front end, not the engines, is the bottleneck under test.
+#[derive(Clone)]
+struct FrontEngine {
+    inner: SimOnlyEngine,
+    batch_time: Duration,
+}
+
+impl Engine for FrontEngine {
+    fn infer(&mut self, batch: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.batch_time);
+        self.inner.infer(batch)
+    }
+
+    fn input_len(&self) -> usize {
+        self.inner.input_len
+    }
+
+    fn accel_batch_time(&mut self, _batch: usize) -> Duration {
+        self.batch_time
+    }
+}
+
+struct FrontPoint {
+    workers: usize,
+    shards: usize,
+    achieved_rps: f64,
+    p99_ms: f64,
+    completed: usize,
+}
+
+struct FrontParams {
+    paced_batch_s: f64,
+    offered_rps: f64,
+    requests: usize,
+    submitters: usize,
+    input_len: usize,
+}
+
+/// Saturate the serving FRONT: near-zero paced engine time, tiny inputs,
+/// offered load above the whole 8-worker pool's capacity, submitted from 4
+/// concurrent threads. Engine time is negligible by construction, so
+/// achieved rps is decided by how fast the dispatch path forms and routes
+/// batches — the number this PR exists to scale.
+fn front_sweep(quick: bool) -> (FrontParams, Vec<FrontPoint>) {
+    let net = autows::models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).expect("toy cnn fits zcu102");
+    // tiny inputs: the per-request copy/checksum cost must not mask the front
+    let input_len = 16usize;
+    let template = FrontEngine {
+        inner: SimOnlyEngine { design: r.design, device: dev, input_len, output_len: 4 },
+        batch_time: Duration::from_secs_f64(1e-3),
+    };
+    let paced_batch_s = template.batch_time.as_secs_f64();
+    // one worker drains MAX_BATCH per paced tick; offer 1.25x the FULL
+    // 8-worker capacity so every pool size saturates
+    let offered_rps = 1.25 * 8.0 * MAX_BATCH as f64 / paced_batch_s;
+    let submitters = 4usize;
+    let requests = if quick { 4000 } else { 12000 };
+    let per = requests / submitters;
+
+    let mut points = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let engine = template.clone();
+        let server = Server::start_with_opts(
+            move || Ok(Box::new(engine.clone()) as _),
+            BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(200) },
+            ServerOptions { queue_cap: 0, workers, dispatch_shards: 0 },
+        )
+        .expect("sim engines boot");
+        let t0 = Instant::now();
+        let results: Vec<LoadResult> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..submitters)
+                .map(|k| {
+                    let server = &server;
+                    s.spawn(move || {
+                        let schedule = ArrivalSchedule::poisson(
+                            per,
+                            offered_rps / submitters as f64,
+                            42 + k as u64,
+                        );
+                        run_open_loop(&schedule, || server.submit(vec![0.5; input_len]))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("submitter thread")).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64().max(1e-12);
+        let completed: usize = results.iter().map(|r| r.completed).sum();
+        assert_eq!(completed, per * submitters, "front sweep must lose no responses");
+        assert_eq!(
+            server.serving_path_locks(),
+            0,
+            "steady-state dispatch took a lock under saturation"
+        );
+        let p99_ms = results.iter().map(|r| r.p99_ms).fold(0.0, f64::max);
+        points.push(FrontPoint {
+            workers,
+            shards: server.dispatch_shards(),
+            achieved_rps: completed as f64 / wall,
+            p99_ms,
+            completed,
+        });
+        server.shutdown();
+    }
+    (FrontParams { paced_batch_s, offered_rps, requests, submitters, input_len }, points)
+}
+
 fn json_f64(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
@@ -109,7 +228,19 @@ fn json_f64(v: f64) -> String {
     }
 }
 
-fn write_json(path: &str, params: &SweepParams, points: &[SweepPoint], speedup: f64) {
+struct FrontReport<'a> {
+    params: &'a FrontParams,
+    points: &'a [FrontPoint],
+    speedup_w8_over_w1: f64,
+}
+
+fn write_json(
+    path: &str,
+    params: &SweepParams,
+    points: &[SweepPoint],
+    speedup: f64,
+    front: &FrontReport,
+) {
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"serve_pool\",\n");
     out.push_str("  \"engine\": \"sim_only_paced\",\n");
@@ -142,7 +273,31 @@ fn write_json(path: &str, params: &SweepParams, points: &[SweepPoint], speedup: 
         ));
         out.push_str(if i + 1 == points.len() { "    }\n" } else { "    },\n" });
     }
-    out.push_str("  ]\n}\n");
+    out.push_str("  ],\n");
+    out.push_str("  \"front\": {\n");
+    out.push_str(&format!(
+        "    \"paced_batch_s\": {},\n",
+        json_f64(front.params.paced_batch_s)
+    ));
+    out.push_str(&format!("    \"offered_rps\": {},\n", json_f64(front.params.offered_rps)));
+    out.push_str(&format!("    \"requests\": {},\n", front.params.requests));
+    out.push_str(&format!("    \"submitters\": {},\n", front.params.submitters));
+    out.push_str(&format!("    \"input_len\": {},\n", front.params.input_len));
+    out.push_str(&format!(
+        "    \"speedup_w8_over_w1\": {},\n",
+        json_f64(front.speedup_w8_over_w1)
+    ));
+    out.push_str("    \"sweep\": [\n");
+    for (i, p) in front.points.iter().enumerate() {
+        out.push_str("      {\n");
+        out.push_str(&format!("        \"workers\": {},\n", p.workers));
+        out.push_str(&format!("        \"dispatch_shards\": {},\n", p.shards));
+        out.push_str(&format!("        \"achieved_rps\": {},\n", json_f64(p.achieved_rps)));
+        out.push_str(&format!("        \"p99_ms\": {},\n", json_f64(p.p99_ms)));
+        out.push_str(&format!("        \"completed\": {}\n", p.completed));
+        out.push_str(if i + 1 == front.points.len() { "      }\n" } else { "      },\n" });
+    }
+    out.push_str("    ]\n  }\n}\n");
     std::fs::write(path, out).expect("write BENCH_serve.json");
     println!("wrote {path}");
 }
@@ -233,12 +388,41 @@ fn main() {
     let w4 = points.iter().find(|p| p.workers == 4).expect("sweep includes workers=4");
     let speedup = w4.res.achieved_rps / w1.res.achieved_rps.max(1e-9);
     println!("\nworkers=4 vs workers=1 achieved-rps: {speedup:.2}x");
+
+    println!("\n=== Dispatcher-saturation sweep (sharded front, near-zero engine time) ===\n");
+    let (fparams, fpoints) = front_sweep(quick);
+    println!(
+        "offered {:.0} rps from {} submitters ({} requests, paced batch {:.1} ms):",
+        fparams.offered_rps,
+        fparams.submitters,
+        fparams.requests,
+        fparams.paced_batch_s * 1e3
+    );
+    println!("workers  shards  achieved(rps)  p99(ms)  completed");
+    for p in &fpoints {
+        println!(
+            "{:>7} {:>7} {:>14.0} {:>8.2} {:>10}",
+            p.workers, p.shards, p.achieved_rps, p.p99_ms, p.completed
+        );
+    }
+    let f1 = fpoints.iter().find(|p| p.workers == 1).expect("front sweep includes workers=1");
+    let f8 = fpoints.iter().find(|p| p.workers == 8).expect("front sweep includes workers=8");
+    let front_speedup = f8.achieved_rps / f1.achieved_rps.max(1e-9);
+    println!("\nfront: workers=8 vs workers=1 achieved-rps: {front_speedup:.2}x");
+
     if let Some(path) = json_path {
-        write_json(&path, &params, &points, speedup);
+        let front =
+            FrontReport { params: &fparams, points: &fpoints, speedup_w8_over_w1: front_speedup };
+        write_json(&path, &params, &points, speedup, &front);
     }
     assert!(
         speedup >= 2.0,
         "the pool must scale: workers=4 achieved only {speedup:.2}x of workers=1"
+    );
+    assert!(
+        front_speedup >= 3.5,
+        "the sharded front must scale with the pool at saturating load: \
+         workers=8 achieved only {front_speedup:.2}x of workers=1"
     );
 
     pjrt_e2e();

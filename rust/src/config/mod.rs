@@ -105,6 +105,10 @@ pub struct ServeSpec {
     /// each worker constructs its own engine on its own thread. `1` is the
     /// single-worker server.
     pub workers: usize,
+    /// Batcher shards on the dispatch front
+    /// ([`crate::coordinator::ServerOptions::dispatch_shards`]): `0` (the
+    /// default) auto-sizes from the pool, any other value pins the count.
+    pub dispatch_shards: usize,
 }
 
 /// A configuration error: parse failure or semantic problem.
@@ -144,7 +148,7 @@ const KNOWN_KEYS: [(&str, &[&str]); 6] = [
     ("device", &["name", "devices", "mem_scale", "mem_sweep"]),
     ("dse", &["phi", "mu", "batch", "vanilla", "bw_margin", "warm_start"]),
     ("sim", &["batch"]),
-    ("serve", &["artifact", "requests", "max_batch", "max_wait_ms", "workers"]),
+    ("serve", &["artifact", "requests", "max_batch", "max_wait_ms", "workers", "dispatch_shards"]),
 ];
 
 impl RunSpec {
@@ -343,11 +347,18 @@ impl RunSpec {
             let max_batch = doc.try_int_or("serve", "max_batch", 8).map_err(invalid)?;
             let max_wait_ms = doc.try_int_or("serve", "max_wait_ms", 2).map_err(invalid)?;
             let workers = doc.try_int_or("serve", "workers", 1).map_err(invalid)?;
+            let dispatch_shards =
+                doc.try_int_or("serve", "dispatch_shards", 0).map_err(invalid)?;
             if requests < 1 || max_batch < 1 || max_wait_ms < 0 {
                 return Err(invalid("serve: requests/max_batch must be >= 1, max_wait_ms >= 0"));
             }
             if !(1..=64).contains(&workers) {
                 return Err(invalid(format!("serve.workers {workers} out of range (1..64)")));
+            }
+            if !(0..=64).contains(&dispatch_shards) {
+                return Err(invalid(format!(
+                    "serve.dispatch_shards {dispatch_shards} out of range (0..64, 0 = auto)"
+                )));
             }
             Some(ServeSpec {
                 artifact: artifact.to_string(),
@@ -355,6 +366,7 @@ impl RunSpec {
                 max_batch: max_batch as usize,
                 max_wait_ms: max_wait_ms as u64,
                 workers: workers as usize,
+                dispatch_shards: dispatch_shards as usize,
             })
         } else {
             None
@@ -541,7 +553,11 @@ impl RunSpec {
                         max_batch: serve.max_batch,
                         max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
                     },
-                    ServerOptions { workers: serve.workers, ..Default::default() },
+                    ServerOptions {
+                    workers: serve.workers,
+                    dispatch_shards: serve.dispatch_shards,
+                    ..Default::default()
+                },
                 )?;
             crate::pipeline::drive_synthetic(&server, serve.requests, c * h * w)?;
             let m = server.metrics();
@@ -611,7 +627,11 @@ impl RunSpec {
                     max_batch: serve.max_batch,
                     max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
                 },
-                ServerOptions { workers: serve.workers, ..Default::default() },
+                ServerOptions {
+                    workers: serve.workers,
+                    dispatch_shards: serve.dispatch_shards,
+                    ..Default::default()
+                },
             )?;
             for name in scheduled.tenant_names() {
                 let input_len =
@@ -691,7 +711,11 @@ impl RunSpec {
                     max_batch: serve.max_batch,
                     max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
                 },
-                ServerOptions { workers: serve.workers, ..Default::default() },
+                ServerOptions {
+                    workers: serve.workers,
+                    dispatch_shards: serve.dispatch_shards,
+                    ..Default::default()
+                },
             )?;
             crate::pipeline::drive_synthetic(&server, serve.requests, scheduled.input_len())?;
             let m = server.metrics();
@@ -729,6 +753,7 @@ artifact  = "artifacts/toy_cnn_b8.hlo.txt"
 requests  = 32
 max_batch = 4
 workers   = 2
+dispatch_shards = 2
 "#;
 
     #[test]
@@ -748,14 +773,17 @@ workers   = 2
         assert_eq!(serve.requests, 32);
         assert_eq!(serve.max_batch, 4);
         assert_eq!(serve.workers, 2);
+        assert_eq!(serve.dispatch_shards, 2);
         assert_eq!(s.mem_sweep, vec![0.5, 1.0, 1.5]);
     }
 
     #[test]
     fn serve_workers_defaults_and_bounds() {
-        // absent key -> single-worker server
+        // absent keys -> single-worker server, auto-sized shards
         let s = RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\nrequests = 8").unwrap();
-        assert_eq!(s.serve.unwrap().workers, 1);
+        let serve = s.serve.unwrap();
+        assert_eq!(serve.workers, 1);
+        assert_eq!(serve.dispatch_shards, 0, "0 = auto-size from the pool");
         // zero and absurd pool sizes are spec errors, not silent clamps
         let e = RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\nworkers = 0")
             .unwrap_err();
@@ -763,6 +791,14 @@ workers   = 2
         let e = RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\nworkers = 1000")
             .unwrap_err();
         assert!(e.to_string().contains("out of range"), "{e}");
+        // dispatch_shards = 0 is the explicit auto value, not an error …
+        let s =
+            RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\ndispatch_shards = 0").unwrap();
+        assert_eq!(s.serve.unwrap().dispatch_shards, 0);
+        // … but out-of-range pins are rejected like workers
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\ndispatch_shards = 1000")
+            .unwrap_err();
+        assert!(e.to_string().contains("dispatch_shards"), "{e}");
         // a typo'd key is rejected with alternatives, as everywhere else
         let e = RunSpec::from_str("[model]\nname = \"toy\"\n[serve]\nworker = 2").unwrap_err();
         assert!(e.to_string().contains("unknown key"), "{e}");

@@ -4,6 +4,11 @@
 //! batch (paper Eq. 3: weights are reused over the `b` dimension), so the
 //! coordinator collects up to `max_batch` requests, but never waits longer
 //! than `max_wait` once at least one request is pending.
+//!
+//! The policy is interpreted per batching thread: the single-worker server
+//! runs one batcher, a pooled server runs one per dispatch shard
+//! ([`super::ServerOptions::dispatch_shards`]), each applying `max_batch` /
+//! `max_wait` to its own slice of the request stream.
 
 use std::time::Duration;
 

@@ -68,6 +68,35 @@ impl ArrivalSchedule {
         ArrivalSchedule { offsets, rate_rps: 0.5 * (start_rps + end_rps) }
     }
 
+    /// Flash-crowd arrivals: a Poisson stream at `base_rps` with a spike of
+    /// `spike_frac · n` requests at `spike_rps` in the middle — the arrival
+    /// shape an admission controller has to survive (ROADMAP open item 2).
+    /// Seed-deterministic like every other schedule; `rate_rps` reports the
+    /// whole-trace average `n / span` implied by the segment rates.
+    pub fn burst(
+        n: usize,
+        base_rps: f64,
+        spike_rps: f64,
+        spike_frac: f64,
+        seed: u64,
+    ) -> ArrivalSchedule {
+        assert!(base_rps > 0.0 && spike_rps > 0.0, "rates must be positive");
+        assert!((0.0..=1.0).contains(&spike_frac), "spike_frac must be in [0, 1]");
+        let spike_n = ((n as f64) * spike_frac).round() as usize;
+        let pre_n = (n - spike_n) / 2;
+        let mut rng = XorShift64::new(seed);
+        let mut t = 0.0_f64;
+        let mut offsets = Vec::with_capacity(n);
+        for i in 0..n {
+            let rate = if i < pre_n || i >= pre_n + spike_n { base_rps } else { spike_rps };
+            let u = rng.unit().max(1e-12);
+            t += -u.ln() / rate;
+            offsets.push(Duration::from_secs_f64(t));
+        }
+        let span = (n - spike_n) as f64 / base_rps + spike_n as f64 / spike_rps;
+        ArrivalSchedule { offsets, rate_rps: n as f64 / span.max(1e-12) }
+    }
+
     pub fn len(&self) -> usize {
         self.offsets.len()
     }
@@ -102,19 +131,17 @@ pub struct LoadResult {
 /// Drive `submit` open-loop along `schedule`, then wait for all responses.
 ///
 /// `submit` is called at (or as close as the clock allows to) each arrival
-/// offset and returns a completion receiver or an admission error. Latency
-/// comes from each [`Response::total`] — stamped by the worker at
-/// completion, so draining the receivers after the submission loop does not
-/// inflate early requests (the receivers buffer completed responses).
+/// offset and returns a completion handle or an admission error. Latency
+/// comes from each [`Response::total`](crate::coordinator::Response) —
+/// stamped by the worker at completion, so draining the handles after the
+/// submission loop does not inflate early requests (the pooled reply slots
+/// buffer completed responses).
 pub fn run_open_loop<S, E>(schedule: &ArrivalSchedule, mut submit: S) -> LoadResult
 where
-    S: FnMut() -> Result<
-        std::sync::mpsc::Receiver<Result<crate::coordinator::Response, crate::Error>>,
-        E,
-    >,
+    S: FnMut() -> Result<crate::coordinator::ReplyHandle, E>,
 {
     let start = Instant::now();
-    let mut pending: Vec<std::sync::mpsc::Receiver<_>> = Vec::new();
+    let mut pending: Vec<crate::coordinator::ReplyHandle> = Vec::new();
     let mut rejected = 0usize;
 
     for &offset in &schedule.offsets {
@@ -234,6 +261,60 @@ mod tests {
             "tail of the ramp ≈ end rate, got {tail_rate}"
         );
         assert!(tail_rate > 3.0 * head_rate, "the ramp must actually ramp");
+    }
+
+    #[test]
+    fn burst_offsets_are_monotonic_and_deterministic() {
+        let a = ArrivalSchedule::burst(1000, 100.0, 5000.0, 0.3, 21);
+        assert_eq!(a.len(), 1000);
+        for w in a.offsets.windows(2) {
+            assert!(w[0] < w[1], "offsets must be strictly increasing");
+        }
+        let b = ArrivalSchedule::burst(1000, 100.0, 5000.0, 0.3, 21);
+        assert_eq!(a.offsets, b.offsets);
+        let c = ArrivalSchedule::burst(1000, 100.0, 5000.0, 0.3, 22);
+        assert_ne!(a.offsets, c.offsets);
+    }
+
+    #[test]
+    fn burst_spike_sits_in_the_middle_at_spike_rate() {
+        let n = 4000;
+        let (base, spike, frac) = (200.0, 4000.0, 0.25);
+        let s = ArrivalSchedule::burst(n, base, spike, frac, 5);
+        let gaps: Vec<f64> =
+            s.offsets.windows(2).map(|w| (w[1] - w[0]).as_secs_f64()).collect();
+        let spike_n = ((n as f64) * frac).round() as usize;
+        let pre_n = (n - spike_n) / 2;
+        let mean = |g: &[f64]| g.iter().sum::<f64>() / g.len() as f64;
+        // interior slices, clear of the segment boundaries
+        let pre_rate = 1.0 / mean(&gaps[..pre_n - 1]);
+        let spike_rate = 1.0 / mean(&gaps[pre_n..pre_n + spike_n - 1]);
+        let post_rate = 1.0 / mean(&gaps[pre_n + spike_n..]);
+        assert!((140.0..280.0).contains(&pre_rate), "pre-spike ≈ base, got {pre_rate}");
+        assert!(
+            (2800.0..5600.0).contains(&spike_rate),
+            "spike ≈ spike_rps, got {spike_rate}"
+        );
+        assert!((140.0..280.0).contains(&post_rate), "post-spike ≈ base, got {post_rate}");
+        assert!(spike_rate > 10.0 * pre_rate, "the flash crowd must actually flash");
+    }
+
+    #[test]
+    fn burst_reported_rate_averages_the_segments() {
+        let s = ArrivalSchedule::burst(2000, 500.0, 10000.0, 0.5, 9);
+        // n/span with half the requests at each rate: 2/(1/500 + 1/10000)
+        let want = 2.0 / (1.0 / 500.0 + 1.0 / 10000.0);
+        assert!(
+            (s.rate_rps - want).abs() / want < 1e-9,
+            "reported {} vs harmonic mean {want}",
+            s.rate_rps
+        );
+        // degenerate shapes still behave
+        let flat = ArrivalSchedule::burst(100, 300.0, 9000.0, 0.0, 1);
+        assert_eq!(flat.len(), 100);
+        assert!((flat.rate_rps - 300.0).abs() < 1e-9);
+        let all = ArrivalSchedule::burst(100, 300.0, 9000.0, 1.0, 1);
+        assert!((all.rate_rps - 9000.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,7 +1,21 @@
 //! Serving metrics: latency distribution, throughput, batch sizes, and —
 //! since the engine pool — per-worker accounting and dispatch-queue depth.
+//!
+//! Two layers:
+//!
+//! - [`Metrics`] — the plain accumulator + [`MetricsSnapshot`] summary
+//!   (unchanged public API, directly usable single-threaded).
+//! - [`MetricsHub`] — the *lock-free serving front* over it. Workers and
+//!   batcher shards never touch a mutex: batch completions travel as
+//!   [`BatchRecord`] events over an mpsc sender (lock-free send) and
+//!   queue-depth samples land in plain atomics. The only lock is the
+//!   snapshot-side fold mutex, taken by **readers** to fold pending events
+//!   into a `Metrics` — a metrics read can therefore never stall dispatch,
+//!   and dispatch never waits on a metrics read.
 
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Linear-interpolation percentile over an ascending-sorted slice (the
 /// "exclusive of the definition, inclusive of the data" estimator used by
@@ -118,23 +132,37 @@ impl Metrics {
         sim_accel: Duration,
         busy: Duration,
     ) {
-        if latencies.is_empty() {
+        self.fold(BatchRecord {
+            worker,
+            latencies_us: latencies.iter().map(|d| d.as_micros() as u64).collect(),
+            sim_accel,
+            busy,
+            at: Instant::now(),
+        });
+    }
+
+    /// Fold one completed-batch event. `rec.at` — the worker-side
+    /// completion stamp — starts the throughput clock on the first event,
+    /// so lazily folded events (the [`MetricsHub`] path) report the same
+    /// elapsed window as eagerly recorded ones.
+    pub(crate) fn fold(&mut self, rec: BatchRecord) {
+        if rec.latencies_us.is_empty() {
             return;
         }
         if self.started_at.is_none() {
-            self.started_at = Some(std::time::Instant::now());
+            self.started_at = Some(rec.at);
         }
         self.batches += 1;
-        self.batch_items += latencies.len() as u64;
-        self.sim_accel_s += sim_accel.as_secs_f64();
-        self.latencies_us.extend(latencies.iter().map(|d| d.as_micros() as u64));
-        if self.workers.len() <= worker {
-            self.workers.resize(worker + 1, WorkerStats::default());
+        self.batch_items += rec.latencies_us.len() as u64;
+        self.sim_accel_s += rec.sim_accel.as_secs_f64();
+        self.latencies_us.extend_from_slice(&rec.latencies_us);
+        if self.workers.len() <= rec.worker {
+            self.workers.resize(rec.worker + 1, WorkerStats::default());
         }
-        let w = &mut self.workers[worker];
+        let w = &mut self.workers[rec.worker];
         w.batches += 1;
-        w.requests += latencies.len() as u64;
-        w.busy_s += busy.as_secs_f64();
+        w.requests += rec.latencies_us.len() as u64;
+        w.busy_s += rec.busy.as_secs_f64();
     }
 
     /// Sample the dispatch-point queue depth (requests admitted but not yet
@@ -178,6 +206,116 @@ impl Metrics {
             },
             queue_depth_max: self.queue_max,
         }
+    }
+}
+
+/// One completed batch, as an event (what a worker emits instead of taking
+/// the metrics lock).
+pub(crate) struct BatchRecord {
+    pub worker: usize,
+    pub latencies_us: Vec<u64>,
+    pub sim_accel: Duration,
+    pub busy: Duration,
+    /// Worker-side completion stamp (starts the throughput clock on fold).
+    pub at: Instant,
+}
+
+/// A worker's lock-free handle for reporting completed batches: one event
+/// send per batch, no shared mutable state.
+#[derive(Clone)]
+pub(crate) struct BatchSink {
+    tx: mpsc::Sender<BatchRecord>,
+}
+
+impl BatchSink {
+    pub fn record(&self, worker: usize, latencies: &[Duration], sim_accel: Duration, busy: Duration) {
+        // A send only fails after the hub is gone (server teardown), when
+        // nobody can snapshot anymore — dropping the event is correct.
+        let _ = self.tx.send(BatchRecord {
+            worker,
+            latencies_us: latencies.iter().map(|d| d.as_micros() as u64).collect(),
+            sim_accel,
+            busy,
+            at: Instant::now(),
+        });
+    }
+}
+
+/// The serving-side metrics front: lock-free for writers, folding for
+/// readers.
+///
+/// Writers (workers, batcher shards) use [`BatchSink::record`] — an mpsc
+/// send — and [`MetricsHub::record_queue_depth`] — three atomic RMWs.
+/// Readers call [`MetricsHub::snapshot`], which takes the fold mutex,
+/// drains pending events into the folded [`Metrics`], and summarizes. The
+/// fold lock is contended only by concurrent *readers*; the serving path
+/// never acquires it, which [`MetricsHub::serving_path_locks`] makes
+/// checkable.
+pub(crate) struct MetricsHub {
+    tx: mpsc::Sender<BatchRecord>,
+    fold: Mutex<(mpsc::Receiver<BatchRecord>, Metrics)>,
+    queue_samples: AtomicU64,
+    queue_sum: AtomicU64,
+    queue_max: AtomicU64,
+    /// Tripwire: lock acquisitions charged to the dispatch/batch-completion
+    /// path. The sharded front is lock-free by construction, so this MUST
+    /// stay 0 — any future Mutex introduced on those paths must count
+    /// itself here, and the serving tests assert the counter never moves.
+    serving_locks: AtomicU64,
+    /// Snapshot-side fold-lock acquisitions (diagnostic counterpart).
+    fold_locks: AtomicU64,
+}
+
+impl MetricsHub {
+    pub fn new() -> MetricsHub {
+        let (tx, rx) = mpsc::channel();
+        MetricsHub {
+            tx,
+            fold: Mutex::new((rx, Metrics::default())),
+            queue_samples: AtomicU64::new(0),
+            queue_sum: AtomicU64::new(0),
+            queue_max: AtomicU64::new(0),
+            serving_locks: AtomicU64::new(0),
+            fold_locks: AtomicU64::new(0),
+        }
+    }
+
+    /// A lock-free batch-completion sink for one serving thread.
+    pub fn sink(&self) -> BatchSink {
+        BatchSink { tx: self.tx.clone() }
+    }
+
+    /// Sample the dispatch-point queue depth — atomics only.
+    pub fn record_queue_depth(&self, depth: usize) {
+        self.queue_samples.fetch_add(1, Ordering::AcqRel);
+        self.queue_sum.fetch_add(depth as u64, Ordering::AcqRel);
+        self.queue_max.fetch_max(depth as u64, Ordering::AcqRel);
+    }
+
+    /// Fold all pending events and summarize. Reader-side work: the fold
+    /// mutex is shared with other snapshots, never with the serving path.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.fold_locks.fetch_add(1, Ordering::AcqRel);
+        let mut guard = self.fold.lock().unwrap();
+        let (rx, folded) = &mut *guard;
+        while let Ok(rec) = rx.try_recv() {
+            folded.fold(rec);
+        }
+        let mut snap = folded.snapshot();
+        // queue depth lives in the hub's atomics, not the folded struct
+        let samples = self.queue_samples.load(Ordering::Acquire);
+        let sum = self.queue_sum.load(Ordering::Acquire);
+        snap.queue_depth_mean = if samples == 0 { 0.0 } else { sum as f64 / samples as f64 };
+        snap.queue_depth_max = self.queue_max.load(Ordering::Acquire) as usize;
+        snap
+    }
+
+    pub fn serving_path_locks(&self) -> u64 {
+        self.serving_locks.load(Ordering::Acquire)
+    }
+
+    pub fn fold_locks(&self) -> u64 {
+        self.fold_locks.load(Ordering::Acquire)
     }
 }
 
@@ -329,5 +467,66 @@ mod tests {
         // aggregate view stays consistent with the per-worker split
         let total: u64 = s.per_worker.iter().map(|w| w.requests).sum();
         assert_eq!(total, s.requests);
+    }
+
+    #[test]
+    fn hub_folds_events_at_snapshot_time() {
+        let hub = MetricsHub::new();
+        let sink = hub.sink();
+        sink.record(0, &[Duration::from_millis(2); 4], Duration::from_millis(1), Duration::ZERO);
+        sink.record(2, &[Duration::from_millis(4); 2], Duration::ZERO, Duration::from_millis(3));
+        hub.record_queue_depth(3);
+        hub.record_queue_depth(9);
+        let s = hub.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.per_worker.len(), 3);
+        assert_eq!(s.per_worker[0].requests, 4);
+        assert_eq!(s.per_worker[2].requests, 2);
+        assert!((s.per_worker[2].busy_s - 3e-3).abs() < 1e-12);
+        assert!((s.queue_depth_mean - 6.0).abs() < 1e-12);
+        assert_eq!(s.queue_depth_max, 9);
+        assert!((s.sim_accel_s - 1e-3).abs() < 1e-12);
+        // snapshots are cumulative, not consuming
+        let again = hub.snapshot();
+        assert_eq!(again.requests, 6);
+        assert_eq!(hub.fold_locks(), 2, "each snapshot takes the fold lock once");
+        assert_eq!(hub.serving_path_locks(), 0, "recording never locked");
+    }
+
+    #[test]
+    fn hub_writers_are_lock_free_under_concurrent_snapshots() {
+        let hub = MetricsHub::new();
+        std::thread::scope(|s| {
+            for w in 0..4usize {
+                let sink = hub.sink();
+                let hub = &hub;
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        sink.record(
+                            w,
+                            &[Duration::from_micros(50 + i)],
+                            Duration::ZERO,
+                            Duration::ZERO,
+                        );
+                        hub.record_queue_depth((i % 7) as usize);
+                    }
+                });
+            }
+            // a reader hammering snapshots while writers stream events
+            let hub = &hub;
+            s.spawn(move || {
+                for _ in 0..50 {
+                    let snap = hub.snapshot();
+                    assert!(snap.requests <= 400);
+                    std::thread::yield_now();
+                }
+            });
+        });
+        let s = hub.snapshot();
+        assert_eq!(s.requests, 400, "no event lost under contention");
+        assert_eq!(s.per_worker.len(), 4);
+        assert_eq!(hub.serving_path_locks(), 0, "the writer path never took a lock");
+        assert!(hub.fold_locks() >= 51);
     }
 }

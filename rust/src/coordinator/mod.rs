@@ -6,24 +6,32 @@
 //! (PJRT numerics + simulated accelerator clock), and report metrics.
 //!
 //! Everything here is synchronous-core: the batching policy and metrics are
-//! plain testable structs; [`Server`] wires them to threads and channels.
-//! Execution scales out via an engine pool ([`ServerOptions::workers`]):
-//! one shared [`PriorityBatcher`] front dispatches formed batches to K
-//! workers, each owning an engine constructed on its own thread (the PJRT
-//! thread-affinity contract). See `server.rs` for the topology diagram.
+//! plain testable structs; [`Server`] wires them to threads and lock-free
+//! channels. Execution scales out via an engine pool
+//! ([`ServerOptions::workers`]) behind a sharded batching front
+//! ([`ServerOptions::dispatch_shards`]): each shard owns its own
+//! [`PriorityBatcher`] and hands formed batches to workers through
+//! per-worker lock-free mailboxes (`sync::AtomicBox`), replies ride pooled
+//! oneshot slots ([`ReplyHandle`]), and metrics fold lazily in the hub so
+//! the steady-state serving path never takes a lock. Each worker's engine
+//! is constructed on its own thread (the PJRT thread-affinity contract).
+//! See `server.rs` for the topology diagram.
 
 mod batcher;
 mod chain;
 mod loadgen;
 mod metrics;
+mod oneshot;
 mod priority;
 mod registry;
 mod server;
+mod sync;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use chain::ChainedEngine;
 pub use loadgen::{run_open_loop, ArrivalSchedule, LoadResult};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerStats};
+pub use oneshot::ReplyHandle;
 pub use priority::{Priority, PriorityBatcher};
 pub use registry::{ModelEntry, ModelRegistry};
 pub use server::{

@@ -1,0 +1,339 @@
+//! Pooled oneshot reply slots — the per-request reply path without a
+//! per-request `mpsc::channel` allocation.
+//!
+//! Every submit used to allocate a fresh mpsc channel (two Arcs, a buffer,
+//! a condvar chain) just to carry ONE `Result<Response, Error>` back.
+//! A reply is a oneshot: the coordinator writes exactly once, the caller
+//! reads exactly once. [`SlotPool::oneshot`] hands out a recycled slot —
+//! two [`super::sync::AtomicBox`] cells (value + parked waiter) and two
+//! small atomics — so the steady-state serving path allocates nothing per
+//! request and never takes a lock:
+//!
+//! - [`ReplySender::send`] publishes the value with an atomic pointer swap
+//!   and unparks the waiter if one is registered.
+//! - [`ReplyHandle::recv`] spins a bounded park loop: take the value, or
+//!   register `thread::current()` and re-check before parking (the sender
+//!   reads the waiter cell only *after* publishing the value, so the
+//!   two-phase check cannot lose a wakeup).
+//! - Dropping an unsent [`ReplySender`] delivers a typed
+//!   `Error::Serve("coordinator dropped request")` — receivers are never
+//!   left hanging, mirroring the old channel's disconnect semantics.
+//! - The *last* endpoint to drop (a 2-owner atomic count) returns the slot
+//!   to the pool's lock-free shelf for reuse.
+//!
+//! `recv()` keeps the `Result<_, mpsc::RecvError>` shape of
+//! `mpsc::Receiver::recv`, so every call site written against the old
+//! channel (`rx.recv().unwrap().unwrap()`) compiles and behaves
+//! identically; a second `recv` after consumption reports `RecvError` just
+//! as a drained, disconnected channel would.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::RecvError;
+use std::sync::Arc;
+use std::thread::{self, Thread};
+use std::time::Duration;
+
+use super::server::Response;
+use super::sync::AtomicBox;
+use crate::error::Error;
+
+type Payload = Result<Response, Error>;
+
+/// One reply slot: written once by the coordinator, read once by the caller.
+struct Slot {
+    value: AtomicBox<Payload>,
+    /// The receiver parked waiting for the value, if any.
+    waiter: AtomicBox<Thread>,
+    /// Set once the handle has taken the payload: a later `recv` is a
+    /// drained-and-disconnected channel, i.e. `RecvError`.
+    consumed: AtomicBool,
+    /// Live endpoints (sender + handle). The last to drop recycles.
+    owners: AtomicU8,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            value: AtomicBox::empty(),
+            waiter: AtomicBox::empty(),
+            consumed: AtomicBool::new(false),
+            owners: AtomicU8::new(2),
+        }
+    }
+
+    /// Re-arm a recycled slot (exclusive access: the pool holds the only
+    /// reference between release and the next acquire).
+    fn reset(&mut self) {
+        drop(self.value.take());
+        drop(self.waiter.take());
+        *self.consumed.get_mut() = false;
+        *self.owners.get_mut() = 2;
+    }
+}
+
+/// Recycling shelf size. Slots beyond a full shelf are simply freed, so
+/// this bounds pool memory, not concurrency.
+const SHELF: usize = 256;
+/// How many shelf cells an acquire/release probes before giving up.
+const PROBES: usize = 8;
+
+/// Lock-free recycling pool of reply slots.
+pub(crate) struct SlotPool {
+    shelf: Vec<AtomicBox<Slot>>,
+    /// Rotating probe start, so concurrent callers spread across the shelf.
+    cursor: AtomicUsize,
+    /// Acquires served from the shelf (vs fresh allocations) — lets tests
+    /// prove recycling actually engages under steady-state load.
+    recycled: AtomicUsize,
+}
+
+impl SlotPool {
+    pub fn new() -> Arc<SlotPool> {
+        Arc::new(SlotPool {
+            shelf: (0..SHELF).map(|_| AtomicBox::empty()).collect(),
+            cursor: AtomicUsize::new(0),
+            recycled: AtomicUsize::new(0),
+        })
+    }
+
+    /// A fresh sender/handle pair over one (possibly recycled) slot.
+    pub fn oneshot(self: &Arc<Self>) -> (ReplySender, ReplyHandle) {
+        let slot = Box::into_raw(self.acquire());
+        (
+            ReplySender { slot, pool: self.clone(), sent: false },
+            ReplyHandle { slot, pool: self.clone() },
+        )
+    }
+
+    /// Slots reused from the shelf so far.
+    pub fn recycled(&self) -> usize {
+        self.recycled.load(Ordering::Acquire)
+    }
+
+    fn acquire(&self) -> Box<Slot> {
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed);
+        for k in 0..PROBES {
+            if let Some(mut slot) = self.shelf[(start + k) % SHELF].take() {
+                slot.reset();
+                self.recycled.fetch_add(1, Ordering::AcqRel);
+                return slot;
+            }
+        }
+        Box::new(Slot::new())
+    }
+
+    fn release(&self, mut slot: Box<Slot>) {
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed);
+        for k in 0..PROBES {
+            match self.shelf[(start + k) % SHELF].put(slot) {
+                Ok(()) => return,
+                Err(back) => slot = back,
+            }
+        }
+        // shelf full: let this one free normally
+    }
+}
+
+/// Decrement the 2-party owner count; the last owner recycles the slot.
+fn release_owner(slot: *mut Slot, pool: &SlotPool) {
+    // SAFETY: `slot` stays valid until both owners have released — this is
+    // at most the second (final) access through the raw pointer.
+    let last = unsafe { (*slot).owners.fetch_sub(1, Ordering::AcqRel) } == 1;
+    if last {
+        // SAFETY: owner count reached zero, so no other endpoint can touch
+        // the slot again; reconstituting the Box reclaims it exactly once.
+        pool.release(unsafe { Box::from_raw(slot) });
+    }
+}
+
+/// Write half of a pooled oneshot (held inside the coordinator's
+/// [`super::server::Request`]).
+pub(crate) struct ReplySender {
+    slot: *mut Slot,
+    pool: Arc<SlotPool>,
+    sent: bool,
+}
+
+// SAFETY: the raw pointer is an owner handle over a heap slot whose shared
+// mutation goes through atomics only; Send payloads make the whole slot
+// safe to hand across threads.
+unsafe impl Send for ReplySender {}
+
+impl ReplySender {
+    /// Publish the reply and wake the receiver. Consumes the sender (a
+    /// oneshot writes once by construction).
+    pub fn send(mut self, payload: Payload) {
+        self.deliver(payload);
+        // Drop runs next and releases this endpoint's ownership.
+    }
+
+    fn deliver(&mut self, payload: Payload) {
+        if self.sent {
+            return;
+        }
+        self.sent = true;
+        // SAFETY: sender endpoint is live (owner count not yet released).
+        let slot = unsafe { &*self.slot };
+        // Publish first, then look for a waiter: recv's register-then-
+        // re-check sees either the value or our take of its waiter.
+        slot.value.replace(Box::new(payload));
+        if let Some(w) = slot.waiter.take() {
+            w.unpark();
+        }
+    }
+}
+
+impl Drop for ReplySender {
+    fn drop(&mut self) {
+        if !self.sent {
+            // Dropped without sending (dead pool, panicking worker): a
+            // typed error, never a hung receiver.
+            self.deliver(Err(Error::Serve("coordinator dropped request".to_string())));
+        }
+        release_owner(self.slot, &self.pool);
+    }
+}
+
+/// Read half of a pooled oneshot — what [`super::server::Server::submit`]
+/// returns. API-compatible with the old `mpsc::Receiver`: `recv()` blocks
+/// for the single reply, and returns `Err(RecvError)` once consumed (the
+/// drained-disconnected-channel contract).
+pub struct ReplyHandle {
+    slot: *mut Slot,
+    pool: Arc<SlotPool>,
+}
+
+// SAFETY: same argument as ReplySender — shared state is atomics-only.
+unsafe impl Send for ReplyHandle {}
+
+impl ReplyHandle {
+    /// Block until the reply arrives. A second call after the value was
+    /// taken reports [`RecvError`], exactly like a drained disconnected
+    /// mpsc receiver.
+    pub fn recv(&self) -> Result<Payload, RecvError> {
+        // SAFETY: handle endpoint is live (owner count not yet released).
+        let slot = unsafe { &*self.slot };
+        if slot.consumed.load(Ordering::Acquire) {
+            return Err(RecvError);
+        }
+        loop {
+            if let Some(v) = slot.value.take() {
+                slot.consumed.store(true, Ordering::Release);
+                return Ok(*v);
+            }
+            slot.waiter.replace(Box::new(thread::current()));
+            // Re-check after registering: the sender publishes the value
+            // BEFORE reading the waiter cell, so if it raced past the take
+            // above, the value is visible now (no lost wakeup).
+            if let Some(v) = slot.value.take() {
+                slot.consumed.store(true, Ordering::Release);
+                drop(slot.waiter.take());
+                return Ok(*v);
+            }
+            // The timeout is belt-and-braces against spurious coincidences;
+            // the common path is one park ended by the sender's unpark.
+            thread::park_timeout(Duration::from_millis(5));
+        }
+    }
+}
+
+impl Drop for ReplyHandle {
+    fn drop(&mut self) {
+        release_owner(self.slot, &self.pool);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn response(id: u64) -> Response {
+        Response {
+            id,
+            output: vec![id as f32],
+            total: Duration::from_millis(1),
+            accel: Duration::from_micros(10),
+            batch: 1,
+        }
+    }
+
+    #[test]
+    fn send_then_recv_roundtrip() {
+        let pool = SlotPool::new();
+        let (tx, rx) = pool.oneshot();
+        tx.send(Ok(response(7)));
+        let got = rx.recv().expect("value present").expect("ok payload");
+        assert_eq!(got.id, 7);
+        assert_eq!(got.output, vec![7.0]);
+    }
+
+    #[test]
+    fn recv_blocks_until_cross_thread_send() {
+        let pool = SlotPool::new();
+        let (tx, rx) = pool.oneshot();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(Ok(response(3)));
+        });
+        let t0 = std::time::Instant::now();
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.id, 3);
+        assert!(t0.elapsed() >= Duration::from_millis(10), "recv actually waited");
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn second_recv_reports_disconnected() {
+        let pool = SlotPool::new();
+        let (tx, rx) = pool.oneshot();
+        tx.send(Ok(response(1)));
+        assert!(rx.recv().is_ok());
+        assert!(rx.recv().is_err(), "consumed oneshot behaves like a drained channel");
+    }
+
+    #[test]
+    fn dropped_sender_delivers_typed_error() {
+        let pool = SlotPool::new();
+        let (tx, rx) = pool.oneshot();
+        drop(tx);
+        let got = rx.recv().expect("an error value, not a hang");
+        assert!(
+            matches!(got, Err(Error::Serve(ref m)) if m.contains("dropped request")),
+            "{got:?}"
+        );
+    }
+
+    #[test]
+    fn slots_recycle_through_the_pool() {
+        let pool = SlotPool::new();
+        for i in 0..64 {
+            let (tx, rx) = pool.oneshot();
+            tx.send(Ok(response(i)));
+            assert_eq!(rx.recv().unwrap().unwrap().id, i);
+        }
+        assert!(
+            pool.recycled() >= 32,
+            "steady-state oneshot traffic must reuse slots, recycled {}",
+            pool.recycled()
+        );
+    }
+
+    #[test]
+    fn many_concurrent_oneshots_stay_isolated() {
+        let pool = SlotPool::new();
+        const N: u64 = 512;
+        let pairs: Vec<_> = (0..N).map(|_| pool.oneshot()).collect();
+        let (txs, rxs): (Vec<_>, Vec<_>) = pairs.into_iter().unzip();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for (i, tx) in txs.into_iter().enumerate() {
+                    tx.send(Ok(response(i as u64)));
+                }
+            });
+            for (i, rx) in rxs.iter().enumerate() {
+                let got = rx.recv().unwrap().unwrap();
+                assert_eq!(got.id, i as u64, "replies must land on their own handles");
+            }
+        });
+    }
+}

@@ -6,6 +6,14 @@
 //! one is pending — so a stream of bulk traffic can never starve the
 //! interactive class, while a lone bulk request still flushes within its own
 //! deadline.
+//!
+//! Since the sharded serving front landed, a pooled server runs one
+//! `PriorityBatcher` **per dispatch shard** (see `server.rs`): the state
+//! machine itself stays single-threaded — submits are spread round-robin
+//! across shards, each shard batching its slice independently — so the
+//! deadline math needs no synchronization, and the starvation bound holds
+//! per shard (a high request always lands in *some* shard's batcher and
+//! boosts that shard's flush).
 
 use std::time::Duration;
 

@@ -109,14 +109,14 @@ impl ModelRegistry {
         rx.recv().map_err(|_| Error::Serve("coordinator dropped request".to_string()))?
     }
 
-    /// Async submit against a named model. The receiver yields the worker's
+    /// Async submit against a named model. The handle yields the worker's
     /// typed response result.
     pub fn submit(
         &self,
         model: &str,
         input: Vec<f32>,
         prio: Priority,
-    ) -> Result<std::sync::mpsc::Receiver<Result<Response, Error>>, Error> {
+    ) -> Result<super::ReplyHandle, Error> {
         let (_, server) = self.lookup(model, input.len())?;
         server.submit_with(input, prio)
     }

@@ -1,27 +1,43 @@
-//! The serving loop: a shared batching front dispatching to a pool of
-//! engine workers.
+//! The serving loop: a sharded batching front dispatching to a pool of
+//! engine workers over lock-free mailboxes.
 //!
 //! (This build is fully offline/self-contained, so the front-end is plain
-//! threads + channels rather than an async executor; the coordinator logic —
+//! threads + atomics rather than an async executor; the coordinator logic —
 //! batching, dispatch, metrics — is identical.)
 //!
 //! Topology — `ServerOptions::workers` picks between two shapes:
 //!
 //! ```text
-//! workers = 1 (default)              workers = K > 1
+//! workers = 1 (default)              workers = K > 1, S dispatch shards
 //!
-//! submit → [queue] → worker          submit → [queue] → dispatcher (batcher)
-//!           (batcher + engine           │ bounded hand-off (K·2 batches)
-//!            on one thread)             ├→ worker 0 (its own engine)
-//!                                       ├→ worker 1 (its own engine)
-//!                                       └→ worker K-1 ...
+//! submit → [queue] → worker          submit ─ round-robin ┬→ shard 0 (batcher) ─┐
+//!           (batcher + engine                             ├→ shard 1 (batcher) ─┤
+//!            on one thread)                               └→ …      (S shards)  │
+//!                                        per-worker single-slot mailboxes  ◄────┘
+//!                                        (lock-free AtomicBox hand-off,
+//!                                         idle workers steal from siblings)
+//!                                            ├→ worker 0 (its own engine)
+//!                                            ├→ worker 1 (its own engine)
+//!                                            └→ worker K-1 …
 //! ```
+//!
+//! No single lock or thread serializes the pool: each shard owns its own
+//! [`PriorityBatcher`] and request queue (submits are spread round-robin),
+//! formed batches are handed to workers through per-worker
+//! [`AtomicBox`](super::sync::AtomicBox) mailboxes (one CAS, no shared
+//! `Mutex<Receiver>`), metrics flow as events into the lock-free
+//! [`MetricsHub`](super::metrics::MetricsHub), and replies ride pooled
+//! oneshot slots ([`super::oneshot`]) instead of per-request channels. A
+//! shard prefers its own workers but overflows into any free mailbox, and
+//! an idle worker steals from sibling mailboxes — skew cannot strand a
+//! formed batch behind a busy worker.
 //!
 //! Each worker constructs its engine **on its own thread** via the shared
 //! factory — the PJRT thread-affinity contract (`Rc` internals) is
 //! per-worker, exactly as it was per-server. The single-worker shape is the
 //! pre-pool server verbatim: batcher and engine on one thread, no hand-off
-//! queue, so `workers: 1` behaves bit-identically to the old code path.
+//! queue, so `workers: 1` (and `dispatch_shards: 1`) behaves bit-identically
+//! to the old code path.
 //!
 //! Failure classes are typed ([`crate::Error`]): admission control rejects
 //! with [`Error::Overloaded`], a request stranded undispatched by an
@@ -29,12 +45,16 @@
 //! surface as [`Error::Serve`].
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::thread::Thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{BatchPolicy, Metrics, MetricsSnapshot, Priority, PriorityBatcher};
+use super::metrics::{BatchSink, MetricsHub};
+use super::oneshot::{ReplyHandle, ReplySender, SlotPool};
+use super::sync::AtomicBox;
+use super::{BatchPolicy, MetricsSnapshot, Priority, PriorityBatcher};
 use crate::device::Device;
 use crate::dse::Design;
 use crate::error::Error;
@@ -47,7 +67,7 @@ pub struct Request {
     pub input: Vec<f32>,
     pub priority: Priority,
     pub submitted: Instant,
-    reply: mpsc::Sender<Result<Response, Error>>,
+    reply: ReplySender,
 }
 
 /// Server-level options beyond the batching policy.
@@ -58,15 +78,37 @@ pub struct ServerOptions {
     /// [`Error::Overloaded`] instead of growing the queue without bound.
     pub queue_cap: usize,
     /// Engine-pool size: how many workers (each with its own engine,
-    /// constructed on its own thread) consume batches from the shared
-    /// batching front. `1` (the default) is the pre-pool single-worker
-    /// server, bit-identical in behavior; `0` is normalized to `1`.
+    /// constructed on its own thread) consume batches from the batching
+    /// front. `1` (the default) is the pre-pool single-worker server,
+    /// bit-identical in behavior; `0` is normalized to `1`.
     pub workers: usize,
+    /// Batcher shards on the dispatch front. `0` (the default) auto-sizes
+    /// from the pool — `⌈workers/2⌉`, capped at 8 — so one batcher thread
+    /// never has to feed more than ~2 engines; any other value pins the
+    /// shard count (clamped to `workers`). With `workers = 1` the front is
+    /// always the single pre-pool loop, whatever this says.
+    pub dispatch_shards: usize,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        ServerOptions { queue_cap: 0, workers: 1 }
+        ServerOptions { queue_cap: 0, workers: 1, dispatch_shards: 0 }
+    }
+}
+
+impl ServerOptions {
+    /// The shard count [`Server::start_with_opts`] will actually run:
+    /// `dispatch_shards` clamped to the pool, or the `⌈workers/2⌉` (≤ 8)
+    /// auto-size when unset.
+    pub fn effective_dispatch_shards(&self) -> usize {
+        let workers = self.workers.max(1);
+        if workers == 1 {
+            return 1;
+        }
+        match self.dispatch_shards {
+            0 => ((workers + 1) / 2).min(8),
+            pinned => pinned.min(workers),
+        }
     }
 }
 
@@ -252,13 +294,17 @@ impl<E: Engine> Engine for PacedEngine<E> {
 
 /// Handle to a running coordinator.
 pub struct Server {
-    tx: Option<mpsc::Sender<Request>>,
-    metrics: Arc<Mutex<Metrics>>,
+    /// One request queue per dispatch shard; submits route round-robin.
+    txs: Option<Vec<mpsc::Sender<Request>>>,
+    next_shard: AtomicUsize,
+    hub: Arc<MetricsHub>,
+    replies: Arc<SlotPool>,
     next_id: AtomicU64,
-    /// Dispatcher (pools only) + workers, joined on shutdown/drop.
+    /// Shards (pools only) + workers, joined on shutdown/drop.
     threads: Vec<std::thread::JoinHandle<()>>,
     in_flight: Arc<AtomicUsize>,
     queue_cap: usize,
+    shards: usize,
     /// Abortive-shutdown flag: when set, the drain path fails
     /// queued-but-undispatched requests with [`Error::ShuttingDown`]
     /// instead of flushing them through the engines.
@@ -268,7 +314,8 @@ pub struct Server {
 /// Adapt a single-shot factory to the pool-compatible `Fn` bound. The
 /// wrapper errors on a second call, so it only composes with `workers: 1`
 /// — which is exactly what [`Server::start`]/[`Server::start_with`]
-/// guarantee by using default options.
+/// guarantee by using default options. (The `Mutex` here guards engine
+/// *boot*, never the serving path.)
 fn once_factory<F>(factory: F) -> impl Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static
 where
     F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
@@ -297,8 +344,8 @@ impl Server {
         Self::start_with_opts(once_factory(factory), policy, ServerOptions::default())
     }
 
-    /// Spawn the serving stack: `opts.workers` engine workers behind one
-    /// shared batching front. The factory runs once **on each worker
+    /// Spawn the serving stack: `opts.workers` engine workers behind a
+    /// sharded batching front. The factory runs once **on each worker
     /// thread** (required for PJRT engines, whose handles are thread-
     /// affine). Blocks until every engine is ready; factory errors are
     /// returned here (first error wins, all threads are reaped).
@@ -311,19 +358,29 @@ impl Server {
         F: Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static,
     {
         let workers = opts.workers.max(1);
-        let (tx, rx) = mpsc::channel::<Request>();
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let shards = opts.effective_dispatch_shards();
+        let (txs, mut rxs): (Vec<_>, Vec<_>) =
+            (0..shards).map(|_| mpsc::channel::<Request>()).unzip();
+        let hub = Arc::new(MetricsHub::new());
         let in_flight = Arc::new(AtomicUsize::new(0));
         let abort = Arc::new(AtomicBool::new(false));
 
         let (threads, ready_rx) = if workers == 1 {
-            spawn_single(factory, policy, &metrics, &in_flight, &abort, rx)
+            let rx = rxs.pop().expect("one shard");
+            spawn_single(factory, policy, &hub, &in_flight, &abort, rx)
         } else {
-            spawn_pool(Arc::new(factory), workers, policy, &metrics, &in_flight, &abort, rx)
+            spawn_pool(
+                Arc::new(factory),
+                PoolConfig { workers, shards, policy },
+                &hub,
+                &in_flight,
+                &abort,
+                rxs,
+            )
         };
 
         // Wait for every engine to boot. On any failure: close the request
-        // queue (dispatcher exits, closing the worker hand-off), reap all
+        // queues (shards exit, closing the worker hand-off), reap all
         // threads, and report the first error.
         let mut boot_err: Option<anyhow::Error> = None;
         for _ in 0..workers {
@@ -337,7 +394,7 @@ impl Server {
             }
         }
         if let Some(e) = boot_err {
-            drop(tx);
+            drop(txs);
             for t in threads {
                 let _ = t.join();
             }
@@ -345,12 +402,15 @@ impl Server {
         }
 
         Ok(Server {
-            tx: Some(tx),
-            metrics,
+            txs: Some(txs),
+            next_shard: AtomicUsize::new(0),
+            hub,
+            replies: SlotPool::new(),
             next_id: AtomicU64::new(0),
             threads,
             in_flight,
             queue_cap: opts.queue_cap,
+            shards,
             abort,
         })
     }
@@ -361,21 +421,19 @@ impl Server {
         rx.recv().map_err(|_| Error::Serve("coordinator dropped request".to_string()))?
     }
 
-    /// Submit one input at normal priority; returns the channel the response
+    /// Submit one input at normal priority; returns the handle the response
     /// will arrive on (lets callers issue many requests concurrently).
-    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Response, Error>>, Error> {
+    pub fn submit(&self, input: Vec<f32>) -> Result<ReplyHandle, Error> {
         self.submit_with(input, Priority::Normal)
     }
 
     /// Submit with an explicit service class. Fails fast with
     /// [`Error::Overloaded`] when admission control is enabled and the
     /// in-flight count is at the cap, and with [`Error::ShuttingDown`] once
-    /// the server has stopped accepting work.
-    pub fn submit_with(
-        &self,
-        input: Vec<f32>,
-        priority: Priority,
-    ) -> Result<mpsc::Receiver<Result<Response, Error>>, Error> {
+    /// the server has stopped accepting work. The whole submit path is
+    /// lock-free: admission is an atomic reservation, the reply slot comes
+    /// from a recycling pool, and shard routing is one atomic counter.
+    pub fn submit_with(&self, input: Vec<f32>, priority: Priority) -> Result<ReplyHandle, Error> {
         if self.queue_cap > 0 {
             // optimistic reservation; backed out on send failure
             let prev = self.in_flight.fetch_add(1, Ordering::AcqRel);
@@ -386,18 +444,18 @@ impl Server {
         } else {
             self.in_flight.fetch_add(1, Ordering::AcqRel);
         }
-        let (reply, rx) = mpsc::channel();
+        let (reply, rx) = self.replies.oneshot();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let sent = self
-            .tx
-            .as_ref()
-            .ok_or(Error::ShuttingDown)
-            .and_then(|tx| {
-                tx.send(Request { id, input, priority, submitted: Instant::now(), reply })
-                    .map_err(|_| Error::ShuttingDown)
-            });
+        let sent = self.txs.as_ref().ok_or(Error::ShuttingDown).and_then(|txs| {
+            let shard = self.next_shard.fetch_add(1, Ordering::Relaxed) % txs.len();
+            txs[shard]
+                .send(Request { id, input, priority, submitted: Instant::now(), reply })
+                .map_err(|_| Error::ShuttingDown)
+        });
         if let Err(e) = sent {
             self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            // rx (and the request's sender, inside the SendError) drop here,
+            // recycling the slot
             return Err(e);
         }
         Ok(rx)
@@ -408,28 +466,53 @@ impl Server {
         self.in_flight.load(Ordering::Acquire)
     }
 
+    /// Fold pending metrics events and summarize. Reader-side work only —
+    /// a snapshot under sustained load can never stall dispatch, because
+    /// the serving path records through lock-free sinks and never touches
+    /// the fold lock this takes.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.lock().unwrap().snapshot()
+        self.hub.snapshot()
     }
 
-    /// Graceful shutdown: close the queue, flush every pending request
+    /// Dispatch shards actually running (1 for the single-worker shape).
+    pub fn dispatch_shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Lock acquisitions charged to the steady-state dispatch/batch-
+    /// completion path since boot. The sharded front is lock-free by
+    /// construction — mailbox hand-off, reply delivery and metrics
+    /// recording are atomics and channel sends — so this MUST read 0; any
+    /// future Mutex on those paths is contractually obliged to count
+    /// itself here (and the serving tests pin the counter at zero).
+    pub fn serving_path_locks(&self) -> u64 {
+        self.hub.serving_path_locks()
+    }
+
+    /// Reply slots served from the recycling pool so far (observability
+    /// for the zero-allocation steady state).
+    pub fn reply_slots_recycled(&self) -> usize {
+        self.replies.recycled()
+    }
+
+    /// Graceful shutdown: close the queues, flush every pending request
     /// through the engines (split into policy-sized batches), then join the
     /// workers.
     pub fn shutdown(mut self) {
-        drop(self.tx.take());
+        drop(self.txs.take());
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
 
-    /// Abortive shutdown: close the queue and fail every queued-but-
+    /// Abortive shutdown: close the queues and fail every queued-but-
     /// undispatched request with the typed [`Error::ShuttingDown`] instead
-    /// of flushing it — callers waiting on a receiver get a matchable error,
+    /// of flushing it — callers waiting on a reply get a matchable error,
     /// never a dropped channel. Batches already handed to a worker still
     /// complete normally.
     pub fn shutdown_now(mut self) {
         self.abort.store(true, Ordering::Release);
-        drop(self.tx.take());
+        drop(self.txs.take());
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -438,7 +521,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        drop(self.txs.take());
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -447,11 +530,12 @@ impl Drop for Server {
 
 /// The pre-pool single-worker shape: batcher and engine on ONE thread, no
 /// hand-off queue — `workers: 1` stays behaviorally identical to the server
-/// before the pool existed.
+/// before the pool existed. (Queue depth is sampled exactly once per loop
+/// pass that dispatches, through the hub's atomics.)
 fn spawn_single<F>(
     factory: F,
     policy: BatchPolicy,
-    metrics: &Arc<Mutex<Metrics>>,
+    hub: &Arc<MetricsHub>,
     in_flight: &Arc<AtomicUsize>,
     abort: &Arc<AtomicBool>,
     rx: mpsc::Receiver<Request>,
@@ -460,7 +544,7 @@ where
     F: Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static,
 {
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-    let metrics = metrics.clone();
+    let hub = hub.clone();
     let in_flight = in_flight.clone();
     let abort = abort.clone();
     let handle = std::thread::spawn(move || {
@@ -475,26 +559,20 @@ where
                 return;
             }
         };
+        let sink = hub.sink();
         let epoch = Instant::now();
         let now = |e: &Instant| e.elapsed().as_secs_f64();
         let mut batcher: PriorityBatcher<Request> = PriorityBatcher::new(policy);
         loop {
             let wait =
                 batcher.time_to_deadline(now(&epoch)).unwrap_or(Duration::from_secs(3600));
-            match rx.recv_timeout(wait) {
+            // one batch may form per pass (push-full or deadline flush) …
+            let formed = match rx.recv_timeout(wait) {
                 Ok(r) => {
                     let prio = r.priority;
-                    if let Some(batch) = batcher.push(r, prio, now(&epoch)) {
-                        metrics.lock().unwrap().record_queue_depth(batcher.pending());
-                        process(&mut engine, batch, &metrics, &in_flight, 0);
-                    }
+                    batcher.push(r, prio, now(&epoch))
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    if let Some(batch) = batcher.poll(now(&epoch)) {
-                        metrics.lock().unwrap().record_queue_depth(batcher.pending());
-                        process(&mut engine, batch, &metrics, &in_flight, 0);
-                    }
-                }
+                Err(mpsc::RecvTimeoutError::Timeout) => batcher.poll(now(&epoch)),
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     while let Some(batch) = batcher.drain() {
                         if abort.load(Ordering::Acquire) {
@@ -503,52 +581,110 @@ where
                             // the drain can exceed max_batch; split so the
                             // flush never feeds an engine an oversized batch
                             for chunk in split_batches(batch, policy.max_batch) {
-                                process(&mut engine, chunk, &metrics, &in_flight, 0);
+                                process(&mut engine, chunk, &sink, &in_flight, 0);
                             }
                         }
                     }
                     break;
                 }
+            };
+            // … and queue depth is sampled exactly once for it.
+            if let Some(batch) = formed {
+                hub.record_queue_depth(batcher.pending());
+                process(&mut engine, batch, &sink, &in_flight, 0);
             }
         }
     });
     (vec![handle], ready_rx)
 }
 
-/// The pool shape: a dispatcher thread runs the shared batching front and
-/// hands formed batches to K workers over a bounded queue; each worker
-/// constructs its own engine on its own thread.
+/// Pool sizing handed to [`spawn_pool`].
+struct PoolConfig {
+    workers: usize,
+    shards: usize,
+    policy: BatchPolicy,
+}
+
+/// State shared between the batcher shards and the worker pool — all of it
+/// atomics and lock-free cells; nothing here can block a thread.
+struct PoolShared {
+    /// One single-slot batch mailbox per worker.
+    mailboxes: Vec<AtomicBox<Vec<Request>>>,
+    /// Worker thread handles (for unpark); set once, after the workers
+    /// spawn and before any shard runs.
+    workers: OnceLock<Vec<Thread>>,
+    /// Live shard threads. 0 ⇒ no further mailbox puts can ever happen.
+    shards_live: AtomicUsize,
+    /// Live worker threads. 0 ⇒ dispatch must fail batches typed.
+    workers_live: AtomicUsize,
+    /// Requests sitting in mailboxes, not yet picked up by a worker.
+    queued: AtomicUsize,
+    /// Requests received by a shard, still pending in its batcher.
+    front_pending: AtomicUsize,
+}
+
+/// Panic-safe worker liveness: decrements on thread exit however it exits.
+struct WorkerLiveGuard(Arc<PoolShared>);
+
+impl Drop for WorkerLiveGuard {
+    fn drop(&mut self) {
+        self.0.workers_live.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Panic-safe shard liveness; the last shard out wakes every worker so
+/// they observe the closed front and drain the mailboxes.
+struct ShardLiveGuard(Arc<PoolShared>);
+
+impl Drop for ShardLiveGuard {
+    fn drop(&mut self) {
+        if self.0.shards_live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            if let Some(threads) = self.0.workers.get() {
+                for t in threads {
+                    t.unpark();
+                }
+            }
+        }
+    }
+}
+
+/// The pool shape: `cfg.shards` batcher shards each own a slice of the
+/// request stream and hand formed batches to `cfg.workers` workers through
+/// lock-free per-worker mailboxes; each worker constructs its own engine on
+/// its own thread and steals from sibling mailboxes when idle.
 fn spawn_pool<F>(
     factory: Arc<F>,
-    workers: usize,
-    policy: BatchPolicy,
-    metrics: &Arc<Mutex<Metrics>>,
+    cfg: PoolConfig,
+    hub: &Arc<MetricsHub>,
     in_flight: &Arc<AtomicUsize>,
     abort: &Arc<AtomicBool>,
-    rx: mpsc::Receiver<Request>,
+    rxs: Vec<mpsc::Receiver<Request>>,
 ) -> (Vec<std::thread::JoinHandle<()>>, mpsc::Receiver<Result<()>>)
 where
     F: Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static,
 {
-    // Bounded hand-off: when every worker is busy and the buffer is full,
-    // the dispatcher blocks on `send` — backpressure piles further requests
-    // up in the batcher (and, with `queue_cap`, into typed rejections at
-    // submit) instead of growing an invisible in-between queue.
-    let (batch_tx, batch_rx) = mpsc::sync_channel::<Vec<Request>>(workers * 2);
-    let batch_rx = Arc::new(Mutex::new(batch_rx));
-    // Requests sitting in the hand-off channel (for queue-depth sampling).
-    let queued = Arc::new(AtomicUsize::new(0));
+    let PoolConfig { workers, shards, policy } = cfg;
+    debug_assert_eq!(rxs.len(), shards);
+    let shared = Arc::new(PoolShared {
+        mailboxes: (0..workers).map(|_| AtomicBox::empty()).collect(),
+        workers: OnceLock::new(),
+        shards_live: AtomicUsize::new(shards),
+        workers_live: AtomicUsize::new(workers),
+        queued: AtomicUsize::new(0),
+        front_pending: AtomicUsize::new(0),
+    });
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-    let mut handles = Vec::with_capacity(workers + 1);
+    let mut handles = Vec::with_capacity(workers + shards);
 
     for idx in 0..workers {
         let factory = factory.clone();
-        let batch_rx = batch_rx.clone();
-        let metrics = metrics.clone();
-        let in_flight = in_flight.clone();
-        let queued = queued.clone();
         let ready_tx = ready_tx.clone();
+        let shared = shared.clone();
+        let sink = hub.sink();
+        let in_flight = in_flight.clone();
         handles.push(std::thread::spawn(move || {
+            // liveness first: a failed boot must still decrement
+            let _live = WorkerLiveGuard(shared.clone());
             // PJRT thread-affinity contract: the engine is constructed on
             // the thread that will run it, one engine per worker.
             let mut engine = match factory() {
@@ -562,80 +698,194 @@ where
                     return;
                 }
             };
-            loop {
-                // hold the lock only for the recv, not while processing
-                let next = { batch_rx.lock().unwrap().recv() };
-                match next {
-                    Ok(batch) => {
-                        queued.fetch_sub(batch.len(), Ordering::AcqRel);
-                        process(&mut engine, batch, &metrics, &in_flight, idx);
-                    }
-                    Err(_) => break, // dispatcher gone and hand-off drained
-                }
-            }
+            worker_loop(idx, &mut engine, &shared, &sink, &in_flight);
         }));
     }
     drop(ready_tx);
+    let worker_threads: Vec<Thread> = handles.iter().map(|h| h.thread().clone()).collect();
+    let _ = shared.workers.set(worker_threads);
 
-    // The dispatcher: owns the request queue and the priority batcher —
-    // batch formation (and thus priority ordering) is identical to the
-    // single-worker server; only execution fans out.
-    let metrics = metrics.clone();
-    let in_flight = in_flight.clone();
-    let abort = abort.clone();
-    let dispatcher = std::thread::spawn(move || {
-        let epoch = Instant::now();
-        let now = |e: &Instant| e.elapsed().as_secs_f64();
-        let mut batcher: PriorityBatcher<Request> = PriorityBatcher::new(policy);
-        let dispatch = |batch: Vec<Request>, batcher_pending: usize| {
-            metrics
-                .lock()
-                .unwrap()
-                .record_queue_depth(batcher_pending + queued.load(Ordering::Acquire));
-            queued.fetch_add(batch.len(), Ordering::AcqRel);
-            if let Err(mpsc::SendError(batch)) = batch_tx.send(batch) {
-                // every worker died (engine boot failure teardown): the
-                // requests were never dispatched — fail them typed
-                queued.fetch_sub(batch.len(), Ordering::AcqRel);
-                fail_undispatched(batch, &in_flight);
+    for (shard, rx) in rxs.into_iter().enumerate() {
+        let shared = shared.clone();
+        let hub = hub.clone();
+        let in_flight = in_flight.clone();
+        let abort = abort.clone();
+        handles.push(std::thread::spawn(move || {
+            let _live = ShardLiveGuard(shared.clone());
+            shard_loop(shard, shards, policy, rx, &shared, &hub, &in_flight, &abort);
+        }));
+    }
+    (handles, ready_rx)
+}
+
+/// One batcher shard: the same recv/push/poll/drain loop as the single-
+/// worker server, over this shard's slice of the request stream.
+#[allow(clippy::too_many_arguments)]
+fn shard_loop(
+    shard: usize,
+    shards: usize,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Request>,
+    shared: &Arc<PoolShared>,
+    hub: &MetricsHub,
+    in_flight: &AtomicUsize,
+    abort: &AtomicBool,
+) {
+    let epoch = Instant::now();
+    let now = |e: &Instant| e.elapsed().as_secs_f64();
+    let mut batcher: PriorityBatcher<Request> = PriorityBatcher::new(policy);
+    let mut router = ShardRouter::new(shard, shards, shared, hub, in_flight);
+    loop {
+        let wait = batcher.time_to_deadline(now(&epoch)).unwrap_or(Duration::from_secs(3600));
+        let formed = match rx.recv_timeout(wait) {
+            Ok(r) => {
+                shared.front_pending.fetch_add(1, Ordering::AcqRel);
+                let prio = r.priority;
+                batcher.push(r, prio, now(&epoch))
             }
-        };
-        loop {
-            let wait =
-                batcher.time_to_deadline(now(&epoch)).unwrap_or(Duration::from_secs(3600));
-            match rx.recv_timeout(wait) {
-                Ok(r) => {
-                    let prio = r.priority;
-                    if let Some(batch) = batcher.push(r, prio, now(&epoch)) {
-                        let pending = batcher.pending();
-                        dispatch(batch, pending);
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    if let Some(batch) = batcher.poll(now(&epoch)) {
-                        let pending = batcher.pending();
-                        dispatch(batch, pending);
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    while let Some(batch) = batcher.drain() {
-                        if abort.load(Ordering::Acquire) {
-                            fail_undispatched(batch, &in_flight);
-                        } else {
-                            for chunk in split_batches(batch, policy.max_batch) {
-                                let pending = batcher.pending();
-                                dispatch(chunk, pending);
-                            }
+            Err(mpsc::RecvTimeoutError::Timeout) => batcher.poll(now(&epoch)),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                while let Some(batch) = batcher.drain() {
+                    shared.front_pending.fetch_sub(batch.len(), Ordering::AcqRel);
+                    if abort.load(Ordering::Acquire) {
+                        fail_undispatched(batch, in_flight);
+                    } else {
+                        for chunk in split_batches(batch, policy.max_batch) {
+                            router.dispatch(chunk);
                         }
                     }
-                    break;
+                }
+                break;
+            }
+        };
+        if let Some(batch) = formed {
+            shared.front_pending.fetch_sub(batch.len(), Ordering::AcqRel);
+            router.dispatch(batch);
+        }
+    }
+    // ShardLiveGuard drops on return: the last shard wakes every worker.
+}
+
+/// A shard's view of the mailboxes: its own workers (stride-assigned) in
+/// rotation first, every other mailbox as overflow.
+struct ShardRouter<'a> {
+    own: Vec<usize>,
+    foreign: Vec<usize>,
+    rotate: usize,
+    shared: &'a PoolShared,
+    hub: &'a MetricsHub,
+    in_flight: &'a AtomicUsize,
+}
+
+impl<'a> ShardRouter<'a> {
+    fn new(
+        shard: usize,
+        shards: usize,
+        shared: &'a PoolShared,
+        hub: &'a MetricsHub,
+        in_flight: &'a AtomicUsize,
+    ) -> ShardRouter<'a> {
+        let workers = shared.mailboxes.len();
+        ShardRouter {
+            own: (0..workers).filter(|w| w % shards == shard).collect(),
+            foreign: (0..workers).filter(|w| w % shards != shard).collect(),
+            rotate: 0,
+            shared,
+            hub,
+            in_flight,
+        }
+    }
+
+    /// Hand one formed batch to a worker mailbox — own workers in rotation
+    /// first, then any foreign mailbox, retrying with a short backoff while
+    /// the whole pool is saturated (the bounded mailboxes ARE the
+    /// backpressure: further requests pile up in the batchers and, with
+    /// `queue_cap`, into typed rejections at submit).
+    fn dispatch(&mut self, batch: Vec<Request>) {
+        let n = batch.len();
+        // one queue-depth sample per dispatched batch: everything admitted
+        // but not yet on an engine = pending in batchers + parked in
+        // mailboxes (the just-formed batch intentionally excluded, exactly
+        // like the pre-shard dispatcher)
+        self.hub.record_queue_depth(
+            self.shared.front_pending.load(Ordering::Acquire)
+                + self.shared.queued.load(Ordering::Acquire),
+        );
+        self.shared.queued.fetch_add(n, Ordering::AcqRel);
+        let threads = self.shared.workers.get().expect("set before shards spawn");
+        let mut boxed = Box::new(batch);
+        loop {
+            for k in 0..self.own.len() {
+                let w = self.own[(self.rotate + k) % self.own.len()];
+                match self.shared.mailboxes[w].put(boxed) {
+                    Ok(()) => {
+                        self.rotate = (self.rotate + k + 1) % self.own.len();
+                        threads[w].unpark();
+                        return;
+                    }
+                    Err(back) => boxed = back,
                 }
             }
+            for &w in &self.foreign {
+                match self.shared.mailboxes[w].put(boxed) {
+                    Ok(()) => {
+                        threads[w].unpark();
+                        return;
+                    }
+                    Err(back) => boxed = back,
+                }
+            }
+            if self.shared.workers_live.load(Ordering::Acquire) == 0 {
+                // every worker died (boot-failure teardown): the requests
+                // were never dispatched — fail them typed
+                self.shared.queued.fetch_sub(n, Ordering::AcqRel);
+                fail_undispatched(*boxed, self.in_flight);
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(50));
         }
-        // dropping batch_tx closes the hand-off; workers drain it and exit
-    });
-    handles.insert(0, dispatcher);
-    (handles, ready_rx)
+    }
+}
+
+/// One pool worker: drain the own mailbox, steal from siblings when idle,
+/// park briefly when there is nothing anywhere. Exits once the front has
+/// shut down AND a final full sweep finds the mailboxes dry — a batch
+/// published right before the last shard exited can never be stranded
+/// (the shard's puts happen-before its `shards_live` decrement, which this
+/// loop's `Acquire` load observes before the conclusive sweep).
+fn worker_loop(
+    idx: usize,
+    engine: &mut Box<dyn Engine>,
+    shared: &Arc<PoolShared>,
+    sink: &BatchSink,
+    in_flight: &AtomicUsize,
+) {
+    let n = shared.mailboxes.len();
+    let mut front_done = false;
+    loop {
+        let mut served = false;
+        // own mailbox first, then steal from siblings
+        for off in 0..n {
+            let w = (idx + off) % n;
+            if let Some(batch) = shared.mailboxes[w].take() {
+                shared.queued.fetch_sub(batch.len(), Ordering::AcqRel);
+                process(engine, *batch, sink, in_flight, idx);
+                served = true;
+                break;
+            }
+        }
+        if served {
+            continue;
+        }
+        if front_done {
+            break; // full sweep after the front closed found nothing
+        }
+        if shared.shards_live.load(Ordering::Acquire) == 0 {
+            front_done = true; // one more conclusive sweep, then exit
+            continue;
+        }
+        std::thread::park_timeout(Duration::from_millis(1));
+    }
 }
 
 /// Split an oversized (shutdown-drain) batch into policy-sized chunks.
@@ -658,28 +908,33 @@ fn split_batches(batch: Vec<Request>, max_batch: usize) -> Vec<Vec<Request>> {
 
 /// Fail every request of an undispatched batch with the typed shutdown
 /// error (the abortive-shutdown and dead-pool paths).
-fn fail_undispatched(batch: Vec<Request>, in_flight: &Arc<AtomicUsize>) {
+fn fail_undispatched(batch: Vec<Request>, in_flight: &AtomicUsize) {
     in_flight.fetch_sub(batch.len(), Ordering::AcqRel);
     for req in batch {
-        let _ = req.reply.send(Err(Error::ShuttingDown));
+        req.reply.send(Err(Error::ShuttingDown));
     }
 }
 
+/// Run one batch through the engine and deliver the replies. Zero-copy
+/// hand-off: each request's input vector is *moved* into the engine batch
+/// (`mem::take`), and metrics go through the lock-free sink — nothing on
+/// this path clones a payload or takes a lock.
 fn process(
     engine: &mut Box<dyn Engine>,
-    batch: Vec<Request>,
-    metrics: &Arc<Mutex<Metrics>>,
-    in_flight: &Arc<AtomicUsize>,
+    mut batch: Vec<Request>,
+    sink: &BatchSink,
+    in_flight: &AtomicUsize,
     worker: usize,
 ) {
-    let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+    let inputs: Vec<Vec<f32>> =
+        batch.iter_mut().map(|r| std::mem::take(&mut r.input)).collect();
     let t0 = Instant::now();
     let accel = engine.accel_batch_time(batch.len());
     let result = engine.infer(&inputs);
     let busy = t0.elapsed();
     let done = Instant::now();
     let latencies: Vec<Duration> = batch.iter().map(|r| done - r.submitted).collect();
-    metrics.lock().unwrap().record_batch_on(worker, &latencies, accel, busy);
+    sink.record(worker, &latencies, accel, busy);
     in_flight.fetch_sub(batch.len(), Ordering::AcqRel);
     let n = batch.len();
     match result {
@@ -687,19 +942,13 @@ fn process(
             for (req, (out, lat)) in
                 batch.into_iter().zip(outputs.into_iter().zip(latencies.into_iter()))
             {
-                let _ = req.reply.send(Ok(Response {
-                    id: req.id,
-                    output: out,
-                    total: lat,
-                    accel,
-                    batch: n,
-                }));
+                req.reply.send(Ok(Response { id: req.id, output: out, total: lat, accel, batch: n }));
             }
         }
         Err(e) => {
             let msg = format!("{e:?}");
             for req in batch {
-                let _ = req.reply.send(Err(Error::Serve(format!("batch failed: {msg}"))));
+                req.reply.send(Err(Error::Serve(format!("batch failed: {msg}"))));
             }
         }
     }
@@ -766,7 +1015,7 @@ mod tests {
             move || Ok(Box::new(e.clone()) as _),
             // huge wait so requests pile up in the queue
             BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(5) },
-            ServerOptions { queue_cap: 4, workers: 1 },
+            ServerOptions { queue_cap: 4, workers: 1, dispatch_shards: 0 },
         )
         .unwrap();
         let mut pending = Vec::new();
@@ -875,9 +1124,10 @@ mod tests {
         let server = Server::start_with_opts(
             move || Ok(Box::new(e.clone()) as _),
             BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-            ServerOptions { queue_cap: 0, workers: 4 },
+            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 0 },
         )
         .unwrap();
+        assert_eq!(server.dispatch_shards(), 2, "workers=4 auto-sizes to 2 shards");
         let receivers: Vec<_> =
             (0..64).map(|i| server.submit(vec![i as f32; 3 * 32 * 32]).unwrap()).collect();
         for (i, rx) in receivers.into_iter().enumerate() {
@@ -918,7 +1168,7 @@ mod tests {
                 }) as _)
             },
             BatchPolicy::default(),
-            ServerOptions { queue_cap: 0, workers: 3 },
+            ServerOptions { queue_cap: 0, workers: 3, dispatch_shards: 0 },
         );
         assert!(err.is_err(), "one failed engine fails the whole boot");
         assert_eq!(calls.load(Ordering::Acquire), 3, "every worker tried its factory");
@@ -937,5 +1187,75 @@ mod tests {
         );
         assert_eq!(paced.input_len(), raw.input_len());
         assert_eq!(paced.accel_batch_time(4), raw.accel_batch_time(4));
+    }
+
+    #[test]
+    fn shard_auto_sizing_follows_the_pool() {
+        let eff = |workers, dispatch_shards| {
+            ServerOptions { queue_cap: 0, workers, dispatch_shards }.effective_dispatch_shards()
+        };
+        assert_eq!(eff(1, 0), 1);
+        assert_eq!(eff(2, 0), 1);
+        assert_eq!(eff(4, 0), 2);
+        assert_eq!(eff(8, 0), 4);
+        assert_eq!(eff(32, 0), 8, "auto-sizing caps at 8 shards");
+        assert_eq!(eff(8, 3), 3, "explicit pin wins");
+        assert_eq!(eff(4, 64), 4, "pins clamp to the pool size");
+        assert_eq!(eff(1, 5), 1, "workers=1 is always the single-thread loop");
+        assert_eq!(eff(0, 0), 1, "workers=0 normalizes to 1");
+    }
+
+    #[test]
+    fn pinned_shards_serve_all_requests() {
+        let e = sim_engine();
+        let server = Server::start_with_opts(
+            move || Ok(Box::new(e.clone()) as _),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 4 },
+        )
+        .unwrap();
+        assert_eq!(server.dispatch_shards(), 4);
+        let receivers: Vec<_> =
+            (0..48).map(|i| server.submit(vec![i as f32; 3 * 32 * 32]).unwrap()).collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            let want = (i as f32) * 3072.0;
+            assert!((r.output[0] - want).abs() < 1e-1, "request {i}: {}", r.output[0]);
+        }
+        assert_eq!(server.metrics().requests, 48);
+        server.shutdown();
+    }
+
+    #[test]
+    fn steady_state_serving_takes_no_lock_and_recycles_reply_slots() {
+        let e = sim_engine();
+        let server = Server::start_with_opts(
+            move || Ok(Box::new(e.clone()) as _),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2 },
+        )
+        .unwrap();
+        for round in 0..8 {
+            let rxs: Vec<_> =
+                (0..16).map(|_| server.submit(vec![0.5; 3 * 32 * 32]).unwrap()).collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+            // interleave metrics reads: snapshots must not charge the
+            // serving path either
+            let m = server.metrics();
+            assert_eq!(m.requests, (round + 1) * 16);
+        }
+        assert_eq!(
+            server.serving_path_locks(),
+            0,
+            "dispatch/batch-completion must never take a lock"
+        );
+        assert!(
+            server.reply_slots_recycled() > 64,
+            "steady-state submits must reuse pooled reply slots, recycled {}",
+            server.reply_slots_recycled()
+        );
+        server.shutdown();
     }
 }

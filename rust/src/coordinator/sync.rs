@@ -1,0 +1,182 @@
+//! Lock-free single-slot box exchanger — the one `unsafe` building block
+//! under the sharded serving front.
+//!
+//! [`AtomicBox`] is a cell holding at most one `Box<T>`, exchanged with
+//! compare-and-swap on the raw pointer. Three serving-path structures are
+//! built from it, so the whole hot path concentrates its unsafety here:
+//!
+//! - the per-worker **batch mailbox** (shard puts a formed batch, worker —
+//!   or a stealing sibling — takes it),
+//! - the **value** and **waiter** cells of a pooled oneshot reply slot,
+//! - the recycling shelf of the reply-slot pool.
+//!
+//! Safety model: ownership of the `Box` transfers atomically with the
+//! pointer. `put` installs a pointer only into an observed-null cell
+//! (`compare_exchange`), `take` detaches with an unconditional `swap`, so
+//! no two parties can ever hold the same allocation; `AcqRel`/`Acquire`
+//! ordering makes the boxed contents visible to whichever thread wins the
+//! exchange. Multi-producer/multi-consumer safe — every operation is one
+//! atomic RMW on the pointer.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+/// A lock-free cell holding zero or one `Box<T>`.
+pub(crate) struct AtomicBox<T> {
+    ptr: AtomicPtr<T>,
+}
+
+impl<T> AtomicBox<T> {
+    pub fn empty() -> AtomicBox<T> {
+        AtomicBox { ptr: AtomicPtr::new(std::ptr::null_mut()) }
+    }
+
+    /// Try to install `value` into an empty cell. On a full cell the box
+    /// comes back in `Err` (same allocation — retry loops never realloc).
+    pub fn put(&self, value: Box<T>) -> Result<(), Box<T>> {
+        let raw = Box::into_raw(value);
+        match self.ptr.compare_exchange(
+            std::ptr::null_mut(),
+            raw,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => Ok(()),
+            // SAFETY: the exchange failed, so `raw` was never published —
+            // this thread still exclusively owns the allocation.
+            Err(_) => Err(unsafe { Box::from_raw(raw) }),
+        }
+    }
+
+    /// Detach the current contents, leaving the cell empty.
+    pub fn take(&self) -> Option<Box<T>> {
+        let raw = self.ptr.swap(std::ptr::null_mut(), Ordering::AcqRel);
+        if raw.is_null() {
+            None
+        } else {
+            // SAFETY: the swap atomically transferred the published pointer
+            // to this thread; no other `take` can observe it again.
+            Some(unsafe { Box::from_raw(raw) })
+        }
+    }
+
+    /// Install `value`, dropping whatever the cell held before. Single-
+    /// writer cells only (the oneshot value/waiter, where one side writes).
+    pub fn replace(&self, value: Box<T>) {
+        let raw = Box::into_raw(value);
+        let old = self.ptr.swap(raw, Ordering::AcqRel);
+        if !old.is_null() {
+            // SAFETY: the swap detached the old pointer exclusively.
+            drop(unsafe { Box::from_raw(old) });
+        }
+    }
+}
+
+impl<T> Drop for AtomicBox<T> {
+    fn drop(&mut self) {
+        // &mut self: no concurrent access; reclaim any remaining contents.
+        let raw = *self.ptr.get_mut();
+        if !raw.is_null() {
+            // SAFETY: exclusive access via &mut, pointer came from Box::into_raw.
+            drop(unsafe { Box::from_raw(raw) });
+        }
+    }
+}
+
+// SAFETY: the cell hands the Box across threads whole (ownership moves with
+// the pointer), so Send on the payload is exactly what both bounds need.
+unsafe impl<T: Send> Send for AtomicBox<T> {}
+unsafe impl<T: Send> Sync for AtomicBox<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn put_take_roundtrip() {
+        let cell: AtomicBox<Vec<u32>> = AtomicBox::empty();
+        assert!(cell.take().is_none());
+        cell.put(Box::new(vec![1, 2, 3])).unwrap();
+        assert_eq!(*cell.take().unwrap(), vec![1, 2, 3]);
+        assert!(cell.take().is_none(), "take empties the cell");
+    }
+
+    #[test]
+    fn put_into_full_cell_returns_the_box() {
+        let cell: AtomicBox<u64> = AtomicBox::empty();
+        cell.put(Box::new(7)).unwrap();
+        let back = cell.put(Box::new(9)).unwrap_err();
+        assert_eq!(*back, 9, "rejected put returns the caller's own box");
+        assert_eq!(*cell.take().unwrap(), 7, "cell contents untouched");
+    }
+
+    #[test]
+    fn replace_swaps_and_drops_old() {
+        let cell: AtomicBox<&'static str> = AtomicBox::empty();
+        cell.replace(Box::new("a"));
+        cell.replace(Box::new("b"));
+        assert_eq!(*cell.take().unwrap(), "b");
+    }
+
+    #[test]
+    fn drop_reclaims_contents() {
+        struct Counted<'a>(&'a AtomicUsize);
+        impl Drop for Counted<'_> {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::AcqRel);
+            }
+        }
+        let drops = AtomicUsize::new(0);
+        {
+            let cell = AtomicBox::empty();
+            cell.put(Box::new(Counted(&drops))).unwrap_or_else(|_| panic!("empty cell"));
+        }
+        assert_eq!(drops.load(Ordering::Acquire), 1, "cell drop frees its payload");
+    }
+
+    #[test]
+    fn concurrent_exchange_loses_nothing() {
+        // 4 producers push 256 values each through one cell, 4 consumers
+        // drain; every value arrives exactly once.
+        let cell: AtomicBox<usize> = AtomicBox::empty();
+        let sum = AtomicUsize::new(0);
+        let taken = AtomicUsize::new(0);
+        const PER: usize = 256;
+        const PRODUCERS: usize = 4;
+        std::thread::scope(|s| {
+            for p in 0..PRODUCERS {
+                let cell = &cell;
+                s.spawn(move || {
+                    for i in 0..PER {
+                        let mut b = Box::new(p * PER + i + 1);
+                        loop {
+                            match cell.put(b) {
+                                Ok(()) => break,
+                                Err(back) => {
+                                    b = back;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            for _ in 0..PRODUCERS {
+                let (cell, sum, taken) = (&cell, &sum, &taken);
+                s.spawn(move || {
+                    while taken.load(Ordering::Acquire) < PRODUCERS * PER {
+                        if let Some(v) = cell.take() {
+                            sum.fetch_add(*v, Ordering::AcqRel);
+                            taken.fetch_add(1, Ordering::AcqRel);
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+        });
+        let n = PRODUCERS * PER;
+        assert_eq!(taken.load(Ordering::Acquire), n);
+        assert_eq!(sum.load(Ordering::Acquire), n * (n + 1) / 2, "each value exactly once");
+    }
+}

@@ -5,7 +5,8 @@
 //! autows report <table1|tech|compress|strategies|table2|table3|fig5|fig6|fig7|yolo|all>
 //! autows dse      [--model M] [--device D] [--quant Q] [--vanilla] [--phi N] [--mu N]
 //! autows simulate [--model M] [--device D] [--quant Q] [--batch N]
-//! autows serve    [--artifact PATH] [--requests N] [--max-batch N] [--workers K] [--device D]
+//! autows serve    [--artifact PATH] [--requests N] [--max-batch N] [--workers K]
+//!                 [--dispatch-shards S] [--device D]
 //! autows run      --config configs/resnet18_zcu102.toml
 //! ```
 
@@ -180,7 +181,8 @@ const USAGE: &str = "usage: autows <report|dse|simulate|serve|run> [options]
            [--json PATH]   # machine-readable simulation summary
   serve    --artifact artifacts/toy_cnn_b8.hlo.txt [--requests 64] [--max-batch 8] [--workers 1] [--device zcu102]
            (--models m1,m2 [--quant w8a8] serves co-located sim-only tenants;
-            --workers K fans execution out to a K-engine pool)
+            --workers K fans execution out to a K-engine pool;
+            --dispatch-shards S pins the batching-front shard count, 0 = auto)
   run      --config configs/resnet18_zcu102.toml   # full pipeline from a config file
 
   dse/simulate/serve also accept --devices d1,d2,... to shard the model
@@ -244,6 +246,7 @@ fn run_cli() -> Result<(), Error> {
                 val("requests"),
                 val("max-batch"),
                 val("workers"),
+                val("dispatch-shards"),
                 val("device"),
                 val("devices"),
                 val("models"),
@@ -569,8 +572,9 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
     let requests: usize = args.get_num("requests", 64usize)?;
     let max_batch: usize = args.get_num("max-batch", 8usize)?;
     let workers: usize = args.get_num("workers", 1usize)?;
+    let dispatch_shards: usize = args.get_num("dispatch-shards", 0usize)?;
     let device = args.get("device", "zcu102");
-    let opts = ServerOptions { workers, ..Default::default() };
+    let opts = ServerOptions { workers, dispatch_shards, ..Default::default() };
 
     if let Some(models) = parse_model_list(args)? {
         if args.has("artifact") {

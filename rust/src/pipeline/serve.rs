@@ -104,9 +104,7 @@ fn synthetic_input(i: usize, input_len: usize) -> Vec<f32> {
 
 /// Wait for every submitted response; per-request failures arrive typed
 /// from the coordinator, a dropped coordinator maps to [`Error::Serve`].
-fn await_all(
-    receivers: Vec<std::sync::mpsc::Receiver<Result<crate::coordinator::Response, Error>>>,
-) -> Result<(), Error> {
+fn await_all(receivers: Vec<crate::coordinator::ReplyHandle>) -> Result<(), Error> {
     for rx in receivers {
         rx.recv().map_err(|_| Error::Serve("coordinator dropped request".to_string()))??;
     }

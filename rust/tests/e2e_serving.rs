@@ -6,7 +6,7 @@
 use std::time::Duration;
 
 use autows::coordinator::{
-    BatchPolicy, Engine, PacedEngine, PjrtEngine, Server, ServerOptions, SimOnlyEngine,
+    BatchPolicy, Engine, PacedEngine, PjrtEngine, Priority, Server, ServerOptions, SimOnlyEngine,
 };
 use autows::device::Device;
 use autows::dse::{self, DseConfig};
@@ -116,7 +116,7 @@ fn pool_of_one_matches_legacy_server_on_fixed_trace() {
     let pooled = Server::start_with_opts(
         move || Ok(Box::new(engine.clone()) as _),
         policy,
-        ServerOptions { queue_cap: 0, workers: 1 },
+        ServerOptions { queue_cap: 0, workers: 1, dispatch_shards: 1 },
     )
     .unwrap();
 
@@ -151,7 +151,7 @@ fn pool_preserves_per_request_integrity_under_load() {
     let server = Server::start_with_opts(
         move || Ok(Box::new(engine.clone()) as _),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
-        ServerOptions { queue_cap: 0, workers: 4 },
+        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 0 },
     )
     .unwrap();
 
@@ -188,7 +188,7 @@ fn pool_overload_rejects_instead_of_deadlocking() {
     let server = Server::start_with_opts(
         move || Ok(Box::new(paced.clone()) as _),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
-        ServerOptions { queue_cap: 4, workers: 2 },
+        ServerOptions { queue_cap: 4, workers: 2, dispatch_shards: 0 },
     )
     .unwrap();
 
@@ -211,5 +211,183 @@ fn pool_overload_rejects_instead_of_deadlocking() {
     for rx in admitted {
         rx.recv().expect("admitted request must complete").expect("inference ok");
     }
+    server.shutdown();
+}
+
+/// Starvation bound through the sharded front: a high-priority request
+/// arriving behind a backlog of normals must ride the boosted deadline
+/// (`high_wait_frac` of `max_wait`), not wait out the normals' full window.
+#[test]
+fn sharded_front_high_priority_beats_backlog() {
+    let engine = sim_engine();
+    let input_len = engine.input_len;
+    let max_wait = Duration::from_millis(400);
+    let server = Server::start_with_opts(
+        move || Ok(Box::new(engine.clone()) as _),
+        // max_batch far above the backlog: only a deadline can flush
+        BatchPolicy { max_batch: 100, max_wait },
+        // one shard so the backlog and the high request share a batcher
+        ServerOptions { queue_cap: 0, workers: 2, dispatch_shards: 1 },
+    )
+    .unwrap();
+
+    let normals: Vec<_> =
+        (0..10).map(|i| server.submit(vec![i as f32; input_len]).unwrap()).collect();
+    // let the shard pull the normals into its batcher, arming their 400ms window
+    std::thread::sleep(Duration::from_millis(30));
+    let t0 = std::time::Instant::now();
+    let high = server.submit_with(vec![99.0; input_len], Priority::High).unwrap();
+    let resp = high.recv().unwrap().unwrap();
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_millis(250),
+        "high priority must flush at ~25% of max_wait (100ms), waited {waited:?}"
+    );
+    assert!(
+        resp.batch >= 11,
+        "the boosted flush must carry the queued normals along, batch {}",
+        resp.batch
+    );
+    for rx in normals {
+        rx.recv().unwrap().unwrap();
+    }
+    server.shutdown();
+}
+
+/// Degenerate batching policies through the sharded front: `max_wait == 0`
+/// (every poll flushes immediately) and `max_batch == 1` (no batch ever
+/// carries two requests) must both serve every request.
+#[test]
+fn sharded_front_zero_wait_and_unit_batch_edges() {
+    let engine = sim_engine();
+    let input_len = engine.input_len;
+
+    let e = engine.clone();
+    let zero_wait = Server::start_with_opts(
+        move || Ok(Box::new(e.clone()) as _),
+        BatchPolicy { max_batch: 8, max_wait: Duration::ZERO },
+        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2 },
+    )
+    .unwrap();
+    let rxs: Vec<_> =
+        (0..64).map(|i| zero_wait.submit(vec![i as f32; input_len]).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("no response lost").expect("inference ok");
+        let want = i as f32 * input_len as f32;
+        assert!((resp.output[0] - want).abs() <= 1e-1 * want.max(1.0), "request {i}");
+    }
+    assert_eq!(zero_wait.metrics().requests, 64);
+    zero_wait.shutdown();
+
+    let e = engine.clone();
+    let unit_batch = Server::start_with_opts(
+        move || Ok(Box::new(e.clone()) as _),
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 4 },
+    )
+    .unwrap();
+    let rxs: Vec<_> =
+        (0..32).map(|i| unit_batch.submit(vec![i as f32; input_len]).unwrap()).collect();
+    for rx in rxs {
+        let resp = rx.recv().expect("no response lost").expect("inference ok");
+        assert_eq!(resp.batch, 1, "max_batch = 1 must never co-batch requests");
+    }
+    let m = unit_batch.metrics();
+    assert_eq!(m.requests, 32);
+    assert_eq!(m.batches, 32, "unit batches: one executable invocation per request");
+    unit_batch.shutdown();
+}
+
+/// Per-request checksum integrity at K = 8 with genuinely concurrent
+/// submitters: every reply must land on the handle of the request that
+/// produced it, whichever shard batched it and whichever worker served it.
+#[test]
+fn sharded_front_checksum_integrity_k8() {
+    let engine = sim_engine();
+    let input_len = engine.input_len;
+    let server = Server::start_with_opts(
+        move || Ok(Box::new(engine.clone()) as _),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        ServerOptions { queue_cap: 0, workers: 8, dispatch_shards: 0 },
+    )
+    .unwrap();
+    assert_eq!(server.dispatch_shards(), 4, "workers=8 auto-sizes to 4 shards");
+
+    const SUBMITTERS: usize = 4;
+    const PER: usize = 64;
+    std::thread::scope(|s| {
+        for t in 0..SUBMITTERS {
+            let server = &server;
+            s.spawn(move || {
+                let rxs: Vec<_> = (0..PER)
+                    .map(|i| {
+                        let tag = (t * PER + i) as f32;
+                        (tag, server.submit(vec![tag; input_len]).unwrap())
+                    })
+                    .collect();
+                for (tag, rx) in rxs {
+                    let resp = rx.recv().expect("no response lost").expect("inference ok");
+                    let want = tag * input_len as f32;
+                    assert!(
+                        (resp.output[0] - want).abs() <= 1e-1 * want.max(1.0),
+                        "request {tag} got checksum {} — cross-request mixup",
+                        resp.output[0]
+                    );
+                }
+            });
+        }
+    });
+    let m = server.metrics();
+    assert_eq!(m.requests, (SUBMITTERS * PER) as u64, "no responses lost at K=8");
+    let served: u64 = m.per_worker.iter().map(|w| w.requests).sum();
+    assert_eq!(served, (SUBMITTERS * PER) as u64);
+    assert_eq!(server.serving_path_locks(), 0, "K=8 serving path stayed lock-free");
+    server.shutdown();
+}
+
+/// Satellite (b): hammering `Server::metrics()` from a reader thread while
+/// requests stream through must neither stall dispatch nor charge a lock
+/// to the serving path — snapshots fold on the reader's clock only.
+#[test]
+fn metrics_snapshots_under_load_do_not_stall_dispatch() {
+    let engine = sim_engine();
+    let input_len = engine.input_len;
+    let server = Server::start_with_opts(
+        move || Ok(Box::new(engine.clone()) as _),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2 },
+    )
+    .unwrap();
+
+    const N: usize = 192;
+    let done = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let server_ref = &server;
+        let done_ref = &done;
+        // reader: tight snapshot loop for the whole serving window
+        let reader = s.spawn(move || {
+            let mut snaps = 0u64;
+            while !done_ref.load(std::sync::atomic::Ordering::Acquire) {
+                let m = server_ref.metrics();
+                assert!(m.requests <= N as u64);
+                snaps += 1;
+            }
+            snaps
+        });
+        let rxs: Vec<_> =
+            (0..N).map(|i| server_ref.submit(vec![i as f32; input_len]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().expect("snapshot reader must not stall serving").unwrap();
+        }
+        done.store(true, std::sync::atomic::Ordering::Release);
+        let snaps = reader.join().unwrap();
+        assert!(snaps > 0, "the reader actually snapshotted under load");
+    });
+    assert_eq!(server.metrics().requests, N as u64);
+    assert_eq!(
+        server.serving_path_locks(),
+        0,
+        "snapshots under load must never charge the serving path"
+    );
     server.shutdown();
 }

@@ -1,22 +1,35 @@
 #!/usr/bin/env bash
 # Build release and record the serving-path performance trajectory.
 #
-# Writes BENCH_serve.json at the repo root (next to BENCH_dse.json): one
-# open-loop Poisson load offered to engine pools of 1/2/4/8 workers on the
-# paced SimOnly engine — offered rate, achieved rps, p50/p99 latency and
-# queue depth per pool size, plus the workers=4 vs workers=1 speedup the
-# bench asserts on. Pass --quick for the small CI-cadence sweep. Run from
-# anywhere.
+# Writes BENCH_serve.json at the repo root (next to BENCH_dse.json), two
+# sweeps: (1) one open-loop Poisson load offered to engine pools of 1/2/4/8
+# workers on the paced SimOnly engine — offered rate, achieved rps, p50/p99
+# latency and queue depth per pool size, plus the workers=4 vs workers=1
+# speedup the bench asserts on; (2) the dispatcher-saturation "front" sweep
+# (near-zero engine time, 4 concurrent submitters) with the workers=8 vs
+# workers=1 front speedup the bench also asserts on.
+#
+# Regression gate: when the repo has a *committed* BENCH_serve.json
+# baseline (git show HEAD:BENCH_serve.json), achieved rps at any matching
+# pool size dropping more than 20% below the baseline fails the run — or
+# just warns when --advisory is passed (CI uses --advisory so quick-sweep
+# jitter cannot hard-fail unrelated changes). Pass --quick for the small
+# CI-cadence sweep. Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 # (Absolute path: cargo runs bench binaries with cwd set to the package
 # root, so a bare filename would land in rust/. The non-empty array also
-# keeps `set -u` happy on pre-4.4 bash when no --quick flag is given.)
+# keeps `set -u` happy on pre-4.4 bash when no flags are given.)
 ARGS=(--json "$PWD/BENCH_serve.json")
-if [[ "${1:-}" == "--quick" ]]; then
-    ARGS=(--quick "${ARGS[@]}")
-fi
+ADVISORY=0
+for arg in "$@"; do
+    case "$arg" in
+        --quick) ARGS=(--quick "${ARGS[@]}") ;;
+        --advisory) ADVISORY=1 ;;
+        *) echo "unknown flag: $arg (known: --quick --advisory)" >&2; exit 2 ;;
+    esac
+done
 
 cargo build --release
 
@@ -25,3 +38,64 @@ cargo bench --bench e2e_serve_bench -- "${ARGS[@]}"
 echo
 echo "BENCH_serve.json:"
 cat BENCH_serve.json
+
+# ---- regression gate against the committed baseline ------------------------
+# Points are keyed (section, workers, requests, paced_batch_s): a baseline
+# recorded with different sweep parameters (quick vs full, resized sweep)
+# simply has no matching keys and gates nothing.
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "regression gate: python3 unavailable; skipped"
+    exit 0
+fi
+BASELINE="$(mktemp)"
+trap 'rm -f "$BASELINE"' EXIT
+if ! git show HEAD:BENCH_serve.json >"$BASELINE" 2>/dev/null; then
+    echo "regression gate: no committed BENCH_serve.json baseline; skipped"
+    exit 0
+fi
+echo
+echo "== serving regression gate (>20% achieved-rps drop vs committed baseline) =="
+ADVISORY="$ADVISORY" BASELINE="$BASELINE" python3 - <<'PY'
+import json, os, sys
+
+def points(doc):
+    out = {}
+    for p in doc.get("sweep", []):
+        key = ("pool", p["workers"], doc.get("requests"), doc.get("paced_batch_s"))
+        out[key] = p["achieved_rps"]
+    front = doc.get("front", {})
+    for p in front.get("sweep", []):
+        key = ("front", p["workers"], front.get("requests"), front.get("paced_batch_s"))
+        out[key] = p["achieved_rps"]
+    return out
+
+with open(os.environ["BASELINE"]) as f:
+    base = points(json.load(f))
+with open("BENCH_serve.json") as f:
+    cur = points(json.load(f))
+
+regressions = []
+matched = 0
+for key, rps in sorted(base.items()):
+    if key not in cur or not rps:
+        continue
+    matched += 1
+    ratio = cur[key] / rps
+    tag = "OK " if ratio >= 0.8 else "REG"
+    print(f"  {tag} {key[0]:<5} workers={key[1]:<2} "
+          f"baseline {rps:9.0f} rps -> current {cur[key]:9.0f} rps ({ratio:5.2f}x)")
+    if ratio < 0.8:
+        regressions.append(key)
+
+if not matched:
+    print("  no comparable points (sweep parameters changed); nothing gated")
+elif regressions:
+    msg = f"{len(regressions)} pool size(s) regressed >20% vs committed baseline"
+    if os.environ.get("ADVISORY") == "1":
+        print(f"  WARNING (advisory): {msg}")
+    else:
+        print(f"  FAIL: {msg}")
+        sys.exit(1)
+else:
+    print(f"  all {matched} comparable points within 20% of baseline")
+PY
