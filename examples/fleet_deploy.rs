@@ -1,0 +1,82 @@
+//! Fleet placement: three models, three boards, one router.
+//!
+//! `Deployment::fleet` hands the whole model list and the whole device pool
+//! to the placement search (`dse::fleet`): each model may be placed solo on
+//! one board, sharded across several (`dse::partition`), or co-located with
+//! others on one (`dse::colocate`), under either objective —
+//! `MaxAggregateThroughput` packs for summed fps, `MinDevicesAtSlo` opens
+//! boards only when the p99 proxy demands it. The terminal `.serve` fronts
+//! every per-device serving stack behind ONE `Router`: submit by model
+//! name, least-outstanding-requests replica choice, per-model metrics.
+//!
+//! The load side uses `ArrivalSchedule::mixed` — one seed-deterministic
+//! Poisson superposition over all models, so the multi-model arrival
+//! ordering is reproducible across runs.
+//!
+//! ```sh
+//! cargo run --release --example fleet_deploy
+//! ```
+
+use std::time::Duration;
+
+use autows::coordinator::{
+    run_open_loop_mixed, ArrivalSchedule, BatchPolicy, MixedSpec, ServerOptions,
+};
+use autows::dse::{DseConfig, FleetObjective};
+use autows::ir::Quant;
+use autows::pipeline::Deployment;
+use autows::Error;
+
+fn main() -> Result<(), Error> {
+    // A mixed pool: one small zc706 and two zcu102s. resnet50 is the big
+    // tenant; the search decides who shards, who shares, who rides solo.
+    let scheduled = Deployment::fleet(
+        [
+            Deployment::for_model("resnet50").quant(Quant::W8A8),
+            Deployment::for_model("resnet18").quant(Quant::W4A5),
+            Deployment::for_model("squeezenet").quant(Quant::W8A8),
+        ],
+        &["zc706", "zcu102", "zcu102"],
+    )?
+    .with_objective(FleetObjective::MaxAggregateThroughput)
+    .explore(&DseConfig::default())?
+    .schedule();
+    print!("{}", scheduled.report());
+
+    // One router over every placement's serving stack: solo/sharded models
+    // get a Server (sharded ones behind a ChainedEngine spanning their
+    // boards), co-located groups a ModelRegistry on their shared board.
+    let router = scheduled.serve(
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        ServerOptions { queue_cap: 256, workers: 2, dispatch_shards: 0 },
+    )?;
+    println!("\nrouter: models={:?}, endpoints={:?}", router.models(), router.endpoint_labels());
+
+    // A 60/30/10 traffic mix over the fleet, one deterministic arrival
+    // process for all three models (seed 42).
+    let mix = [
+        MixedSpec { model: "resnet18".to_string(), rate_rps: 600.0 },
+        MixedSpec { model: "squeezenet".to_string(), rate_rps: 300.0 },
+        MixedSpec { model: "resnet50".to_string(), rate_rps: 100.0 },
+    ];
+    let schedule = ArrivalSchedule::mixed(256, &mix, 42);
+    let res = run_open_loop_mixed(&schedule, |model| {
+        let input_len = scheduled.input_len(model).expect("model from the plan");
+        router.submit(model, vec![0.5; input_len])
+    });
+    println!(
+        "\nmixed load: offered {:.0} rps, achieved {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, rejected {}",
+        res.offered_rps, res.achieved_rps, res.p50_ms, res.p99_ms, res.rejected
+    );
+
+    // the router rolls metrics up per model, whatever the placement shape
+    for model in router.models() {
+        let m = router.model_metrics(&model).expect("routed above");
+        println!(
+            "{model:<12} {} requests in {} batches (mean batch {:.1}), p99 {:.2} ms",
+            m.requests, m.batches, m.mean_batch, m.p99_ms
+        );
+    }
+    router.shutdown();
+    Ok(())
+}

@@ -1,4 +1,4 @@
-//! End-to-end serving benchmark, three parts:
+//! End-to-end serving benchmark, four parts:
 //!
 //! 1. **Pool sweep** (always runs — SimOnly, self-contained): the same
 //!    open-loop Poisson load offered to engine pools of 1/2/4/8 workers.
@@ -15,7 +15,13 @@
 //!    sharded front, achieved rps must keep scaling with the pool
 //!    (`workers = 8` ≥ 3.5× `workers = 1`, asserted here), and the
 //!    steady-state lock counter must stay zero.
-//! 3. **PJRT e2e** (skips gracefully when `make artifacts` has not run):
+//! 3. **Router overhead** (always runs): the same two-model mixed Poisson
+//!    load offered twice — straight to two per-model paced servers, then
+//!    through the fleet [`Router`] fronting the identical pair. The router
+//!    adds one hash lookup + one atomic pair per request; achieved rps
+//!    through it must stay within 10% of direct (asserted, and written to
+//!    the `fleet` section of `BENCH_serve.json`).
+//! 4. **PJRT e2e** (skips gracefully when `make artifacts` has not run):
 //!    PJRT numerics + coordinator batching through `autows::pipeline`.
 //!
 //! ```text
@@ -30,8 +36,8 @@ mod harness;
 use std::time::{Duration, Instant};
 
 use autows::coordinator::{
-    run_open_loop, ArrivalSchedule, BatchPolicy, Engine, LoadResult, PacedEngine, Server,
-    ServerOptions, SimOnlyEngine,
+    run_open_loop, run_open_loop_mixed, ArrivalSchedule, BatchPolicy, Engine, LoadResult,
+    MixedSpec, PacedEngine, Router, Server, ServerOptions, SimOnlyEngine,
 };
 use autows::device::Device;
 use autows::dse::{self, DseConfig};
@@ -220,6 +226,105 @@ fn front_sweep(quick: bool) -> (FrontParams, Vec<FrontPoint>) {
     (FrontParams { paced_batch_s, offered_rps, requests, submitters, input_len }, points)
 }
 
+const FLEET_MODELS: [&str; 2] = ["toy_a", "toy_b"];
+
+struct FleetLeg {
+    achieved_rps: f64,
+    p99_ms: f64,
+    completed: usize,
+    rejected: usize,
+}
+
+struct FleetParams {
+    paced_batch_s: f64,
+    offered_rps: f64,
+    requests: usize,
+}
+
+struct FleetReport {
+    params: FleetParams,
+    direct: FleetLeg,
+    routed: FleetLeg,
+    /// `1 - routed/direct` achieved-rps — what the router's hash lookup +
+    /// least-outstanding atomics cost under mixed load.
+    overhead_frac: f64,
+}
+
+/// Two identical paced servers, one per model. The same mixed schedule is
+/// offered straight to them (the caller does the routing) and through the
+/// [`Router`]; the achieved-rps gap is the router's per-request overhead.
+fn fleet_sweep(quick: bool) -> FleetReport {
+    let net = autows::models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).expect("toy cnn fits zcu102");
+    let mut template = SimOnlyEngine {
+        design: r.design,
+        device: dev,
+        input_len: INPUT_LEN,
+        output_len: 10,
+    };
+    let paced_batch_s = 2e-3;
+    let accel_s = template.accel_batch_time(MAX_BATCH).as_secs_f64().max(1e-9);
+    let pace = paced_batch_s / accel_s;
+    // per-server capacity is MAX_BATCH / paced_batch_s; offer ~75% of the
+    // two-server total so neither leg saturates and the gap is pure routing
+    let offered_rps = 0.75 * 2.0 * MAX_BATCH as f64 / paced_batch_s;
+    let requests = if quick { 400 } else { 1200 };
+    let specs: Vec<MixedSpec> = FLEET_MODELS
+        .iter()
+        .map(|m| MixedSpec { model: m.to_string(), rate_rps: offered_rps / 2.0 })
+        .collect();
+
+    let boot = |engine: PacedEngine<SimOnlyEngine>| {
+        Server::start_with_opts(
+            move || Ok(Box::new(engine.clone()) as _),
+            BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(500) },
+            ServerOptions { queue_cap: 0, workers: 1, dispatch_shards: 0 },
+        )
+        .expect("sim engines boot")
+    };
+
+    // leg 1: direct — the submit closure is the router (a match statement)
+    let schedule = ArrivalSchedule::mixed(requests, &specs, 42);
+    let servers: Vec<Server> =
+        FLEET_MODELS.iter().map(|_| boot(PacedEngine::new(template.clone(), pace))).collect();
+    let res = run_open_loop_mixed(&schedule, |model| {
+        let i = FLEET_MODELS.iter().position(|m| *m == model).expect("model from the mix");
+        servers[i].submit(vec![0.5; INPUT_LEN])
+    });
+    let direct = FleetLeg {
+        achieved_rps: res.achieved_rps,
+        p99_ms: res.p99_ms,
+        completed: res.completed,
+        rejected: res.rejected,
+    };
+    for s in servers {
+        s.shutdown();
+    }
+
+    // leg 2: the identical pair behind one Router, same mixed schedule
+    let mut router = Router::new();
+    for model in FLEET_MODELS {
+        router.add_server("zcu102", model, INPUT_LEN, boot(PacedEngine::new(template.clone(), pace)));
+    }
+    let res = run_open_loop_mixed(&schedule, |model| router.submit(model, vec![0.5; INPUT_LEN]));
+    let routed = FleetLeg {
+        achieved_rps: res.achieved_rps,
+        p99_ms: res.p99_ms,
+        completed: res.completed,
+        rejected: res.rejected,
+    };
+    router.shutdown();
+
+    let overhead_frac = 1.0 - routed.achieved_rps / direct.achieved_rps.max(1e-9);
+    FleetReport {
+        params: FleetParams { paced_batch_s, offered_rps, requests },
+        direct,
+        routed,
+        overhead_frac,
+    }
+}
+
 fn json_f64(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
@@ -240,6 +345,7 @@ fn write_json(
     points: &[SweepPoint],
     speedup: f64,
     front: &FrontReport,
+    fleet: &FleetReport,
 ) {
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"serve_pool\",\n");
@@ -297,7 +403,34 @@ fn write_json(
         out.push_str(&format!("        \"completed\": {}\n", p.completed));
         out.push_str(if i + 1 == front.points.len() { "      }\n" } else { "      },\n" });
     }
-    out.push_str("    ]\n  }\n}\n");
+    out.push_str("    ]\n  },\n");
+    out.push_str("  \"fleet\": {\n");
+    out.push_str(&format!(
+        "    \"models\": [\"{}\", \"{}\"],\n",
+        FLEET_MODELS[0], FLEET_MODELS[1]
+    ));
+    out.push_str(&format!(
+        "    \"paced_batch_s\": {},\n",
+        json_f64(fleet.params.paced_batch_s)
+    ));
+    out.push_str(&format!("    \"offered_rps\": {},\n", json_f64(fleet.params.offered_rps)));
+    out.push_str(&format!("    \"requests\": {},\n", fleet.params.requests));
+    for (key, leg) in [("direct", &fleet.direct), ("routed", &fleet.routed)] {
+        out.push_str(&format!("    \"{key}\": {{\n"));
+        out.push_str(&format!(
+            "      \"achieved_rps\": {},\n",
+            json_f64(leg.achieved_rps)
+        ));
+        out.push_str(&format!("      \"p99_ms\": {},\n", json_f64(leg.p99_ms)));
+        out.push_str(&format!("      \"completed\": {},\n", leg.completed));
+        out.push_str(&format!("      \"rejected\": {}\n", leg.rejected));
+        out.push_str("    },\n");
+    }
+    out.push_str(&format!(
+        "    \"router_overhead_frac\": {}\n",
+        json_f64(fleet.overhead_frac)
+    ));
+    out.push_str("  }\n}\n");
     std::fs::write(path, out).expect("write BENCH_serve.json");
     println!("wrote {path}");
 }
@@ -410,10 +543,28 @@ fn main() {
     let front_speedup = f8.achieved_rps / f1.achieved_rps.max(1e-9);
     println!("\nfront: workers=8 vs workers=1 achieved-rps: {front_speedup:.2}x");
 
+    println!("\n=== Router overhead (two-model mixed load, direct vs routed) ===\n");
+    let fleet = fleet_sweep(quick);
+    println!(
+        "offered {:.0} rps over {:?} ({} requests, paced batch {:.1} ms):",
+        fleet.params.offered_rps,
+        FLEET_MODELS,
+        fleet.params.requests,
+        fleet.params.paced_batch_s * 1e3
+    );
+    println!("leg      achieved(rps)  p99(ms)  completed  rejected");
+    for (name, leg) in [("direct", &fleet.direct), ("routed", &fleet.routed)] {
+        println!(
+            "{name:<8} {:>13.0} {:>8.2} {:>10} {:>9}",
+            leg.achieved_rps, leg.p99_ms, leg.completed, leg.rejected
+        );
+    }
+    println!("\nrouter overhead: {:.1}% of direct achieved-rps", fleet.overhead_frac * 100.0);
+
     if let Some(path) = json_path {
         let front =
             FrontReport { params: &fparams, points: &fpoints, speedup_w8_over_w1: front_speedup };
-        write_json(&path, &params, &points, speedup, &front);
+        write_json(&path, &params, &points, speedup, &front, &fleet);
     }
     assert!(
         speedup >= 2.0,
@@ -423,6 +574,12 @@ fn main() {
         front_speedup >= 3.5,
         "the sharded front must scale with the pool at saturating load: \
          workers=8 achieved only {front_speedup:.2}x of workers=1"
+    );
+    assert!(
+        fleet.routed.achieved_rps >= 0.9 * fleet.direct.achieved_rps,
+        "the router must cost under 10%: routed {:.0} rps vs direct {:.0} rps",
+        fleet.routed.achieved_rps,
+        fleet.direct.achieved_rps
     );
 
     pjrt_e2e();

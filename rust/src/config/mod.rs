@@ -43,13 +43,33 @@
 //! [[tenant]]
 //! name  = "squeezenet"      # quant defaults to w8a8
 //! ```
+//!
+//! A fleet run adds a `[fleet]` section: the model set (the `[[tenant]]`
+//! list, or the single `[model]`) is placed over the whole `devices` pool —
+//! per model solo, sharded, or co-located — under the stated objective
+//! (`configs/fleet_mixed.toml`):
+//!
+//! ```toml
+//! [device]
+//! devices = ["zcu102", "zc706"]
+//!
+//! [[tenant]]
+//! name  = "resnet18"
+//! quant = "w4a5"
+//!
+//! [[tenant]]
+//! name = "squeezenet"
+//!
+//! [fleet]
+//! objective = "max_aggregate_throughput"  # or "min_devices_at_slo" + slo_p99_ms
+//! ```
 
 mod toml;
 
 pub use toml::{Document, ParseError, Value};
 
 use crate::device::Device;
-use crate::dse::DseConfig;
+use crate::dse::{DseConfig, FleetObjective};
 use crate::ir::{Network, Quant};
 use crate::models;
 
@@ -66,6 +86,15 @@ pub enum ModelSource {
 pub struct TenantSpec {
     pub model: ModelSource,
     pub quant: Quant,
+}
+
+/// Fleet placement parameters (`[fleet]` section). Its presence makes the
+/// run a fleet placement: the model set (the `[[tenant]]` list, or the
+/// single `[model]`) is placed onto the whole device pool, per model solo,
+/// sharded or co-located.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub objective: FleetObjective,
 }
 
 /// Fully-resolved run specification.
@@ -85,6 +114,9 @@ pub struct RunSpec {
     /// runs; a non-empty list makes this a multi-tenant deployment of
     /// every tenant onto the ONE [`RunSpec::device`].
     pub tenants: Vec<TenantSpec>,
+    /// Fleet placement (`[fleet]` section). `Some` turns the spec into a
+    /// fleet run: the model set over the whole device pool.
+    pub fleet: Option<FleetSpec>,
     pub dse: DseConfig,
     /// Batch size for the simulation step.
     pub sim_batch: u64,
@@ -142,13 +174,14 @@ fn invalid(msg: impl Into<String>) -> ConfigError {
 /// Known keys per section: a typo'd key silently falling back to its
 /// default is the worst failure mode a config system can have, so anything
 /// not listed here is rejected with the expected alternatives.
-const KNOWN_KEYS: [(&str, &[&str]); 6] = [
+const KNOWN_KEYS: [(&str, &[&str]); 7] = [
     ("", &["title"]),
     ("model", &["name", "file", "quant"]),
     ("device", &["name", "devices", "mem_scale", "mem_sweep"]),
     ("dse", &["phi", "mu", "batch", "vanilla", "bw_margin", "warm_start"]),
     ("sim", &["batch"]),
     ("serve", &["artifact", "requests", "max_batch", "max_wait_ms", "workers", "dispatch_shards"]),
+    ("fleet", &["objective", "slo_p99_ms"]),
 ];
 
 impl RunSpec {
@@ -253,6 +286,49 @@ impl RunSpec {
             (tenants[0].model.clone(), tenants[0].quant)
         };
 
+        // [fleet] — present = fleet placement of the model set over the
+        // whole device pool (the only spec shape where [[tenant]] combines
+        // with a `devices` chain).
+        let fleet = if doc.has_section("fleet") {
+            let label = doc
+                .try_str_or("fleet", "objective", "max_aggregate_throughput")
+                .map_err(invalid)?;
+            let objective = match label {
+                "max_aggregate_throughput" => {
+                    if doc.get("fleet", "slo_p99_ms").is_some() {
+                        return Err(invalid(
+                            "fleet.slo_p99_ms applies to objective = \"min_devices_at_slo\" only",
+                        ));
+                    }
+                    FleetObjective::MaxAggregateThroughput
+                }
+                "min_devices_at_slo" => {
+                    if doc.get("fleet", "slo_p99_ms").is_none() {
+                        return Err(invalid(
+                            "fleet.objective = \"min_devices_at_slo\" requires fleet.slo_p99_ms",
+                        ));
+                    }
+                    let p99_ms =
+                        doc.try_float_or("fleet", "slo_p99_ms", 0.0).map_err(invalid)?;
+                    if p99_ms <= 0.0 {
+                        return Err(invalid(format!(
+                            "fleet.slo_p99_ms {p99_ms} must be positive"
+                        )));
+                    }
+                    FleetObjective::MinDevicesAtSlo { p99_ms }
+                }
+                other => {
+                    return Err(invalid(format!(
+                        "fleet.objective `{other}` is not `max_aggregate_throughput` or \
+                         `min_devices_at_slo`"
+                    )))
+                }
+            };
+            Some(FleetSpec { objective })
+        } else {
+            None
+        };
+
         // [device] — either a single `name` or a `devices` chain
         let mut devices = match doc.get("device", "devices") {
             None => {
@@ -283,10 +359,11 @@ impl RunSpec {
                 out
             }
         };
-        if !tenants.is_empty() && devices.len() > 1 {
+        if fleet.is_none() && !tenants.is_empty() && devices.len() > 1 {
             return Err(invalid(
                 "co-location is single-device: give [device] name, not a devices chain \
-                 (shard OR co-locate, not both)",
+                 (shard OR co-locate, not both — or add a [fleet] section to place the \
+                 tenant set over the pool)",
             ));
         }
         let mem_scale = doc.try_float_or("device", "mem_scale", 1.0).map_err(invalid)?;
@@ -328,6 +405,12 @@ impl RunSpec {
         // runs serve the sim-only chain and co-located runs serve one
         // sim-only engine per tenant, so an explicit artifact there is a
         // spec error (mirrors the CLI's --artifact/--devices rejection).
+        if fleet.is_some() && doc.get("serve", "artifact").is_some() {
+            return Err(invalid(
+                "serve.artifact is single-model; fleet runs serve sim-only engines behind \
+                 the router (drop the key)",
+            ));
+        }
         if devices.len() > 1 && doc.get("serve", "artifact").is_some() {
             return Err(invalid(
                 "serve.artifact is single-device; sharded runs serve the sim-only chain (drop the key)",
@@ -391,7 +474,18 @@ impl RunSpec {
             }
         };
 
-        Ok(RunSpec { title, model, quant, devices, tenants, dse, sim_batch, serve, mem_sweep })
+        Ok(RunSpec {
+            title,
+            model,
+            quant,
+            devices,
+            tenants,
+            fleet,
+            dse,
+            sim_batch,
+            serve,
+            mem_sweep,
+        })
     }
 
     /// The primary device — the single-device pipeline target
@@ -408,6 +502,11 @@ impl RunSpec {
     /// Is this spec a co-located (multi-tenant) deployment?
     pub fn is_colocated(&self) -> bool {
         !self.tenants.is_empty()
+    }
+
+    /// Is this spec a fleet placement (`[fleet]` section present)?
+    pub fn is_fleet(&self) -> bool {
+        self.fleet.is_some()
     }
 
     /// Load a spec from a file path.
@@ -465,6 +564,23 @@ impl RunSpec {
         crate::pipeline::Deployment::colocate(tenants).on_device(self.device().clone())
     }
 
+    /// Resolve the spec's model set (tenants, or the single `[model]`) and
+    /// device pool into a pipeline
+    /// [`FleetPlanned`](crate::pipeline::FleetPlanned) stage with the
+    /// `[fleet]` objective applied.
+    pub fn plan_fleet(&self) -> Result<crate::pipeline::FleetPlanned, crate::Error> {
+        let models: Vec<crate::pipeline::Deployment> = if self.tenants.is_empty() {
+            vec![self.deployment()]
+        } else {
+            self.tenants.iter().map(|t| Self::deployment_for(&t.model, t.quant)).collect()
+        };
+        let planned = crate::pipeline::Deployment::fleet(models, &self.devices)?;
+        Ok(match &self.fleet {
+            Some(f) => planned.with_objective(f.objective),
+            None => planned,
+        })
+    }
+
     /// Execute the full run this spec describes — DSE, simulation, the
     /// optional memory sweep, the optional serving session — printing the
     /// launcher's progress report to stdout. This is `autows run`.
@@ -473,6 +589,9 @@ impl RunSpec {
         use crate::pipeline::{self, EngineSpec};
         use crate::sim::SimConfig;
 
+        if self.is_fleet() {
+            return self.execute_fleet();
+        }
         if self.is_colocated() {
             return self.execute_colocated();
         }
@@ -566,6 +685,90 @@ impl RunSpec {
                 m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
             );
             server.shutdown();
+        }
+        Ok(())
+    }
+
+    /// The fleet launcher path: the placement search over the device pool,
+    /// the placement table, per-placement simulation and (optionally) a
+    /// serving session routing every model through one router. `mem_sweep`
+    /// is single-model-only and skipped here.
+    fn execute_fleet(&self) -> Result<(), crate::Error> {
+        use crate::coordinator::{BatchPolicy, ServerOptions};
+        use crate::sim::SimConfig;
+
+        let plan = self.plan_fleet()?;
+        println!("== {} ==", self.title);
+        let names: Vec<&str> = plan.networks().iter().map(|n| n.name.as_str()).collect();
+        let pool: Vec<&str> = plan.devices().iter().map(|d| d.name).collect();
+        println!(
+            "{} models [{}] fleet-placed over [{}]",
+            names.len(),
+            names.join(", "),
+            pool.join(", ")
+        );
+
+        let explored = match plan.explore(&self.dse) {
+            Err(e) if e.is_infeasible() => {
+                println!(
+                    "DSE: INFEASIBLE for the fleet (vanilla={})",
+                    !self.dse.allow_streaming
+                );
+                return Ok(());
+            }
+            other => other?,
+        };
+        let scheduled = explored.schedule_for_batch(self.sim_batch);
+        print!("{}", scheduled.report());
+
+        let sim = scheduled.simulate(&SimConfig { batch: self.sim_batch, ..Default::default() });
+        println!(
+            "sim (batch={}): fleet makespan={:.3} ms, stalls={:.1} us",
+            self.sim_batch,
+            sim.makespan_s * 1e3,
+            sim.total_stall_s * 1e6
+        );
+
+        if !self.mem_sweep.is_empty() {
+            println!("mem sweep: skipped (single-model only)");
+        }
+
+        if let Some(serve) = &self.serve {
+            println!(
+                "serving {} requests per model through the fleet router (max batch {}):",
+                serve.requests, serve.max_batch
+            );
+            let router = scheduled.serve(
+                BatchPolicy {
+                    max_batch: serve.max_batch,
+                    max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
+                },
+                ServerOptions {
+                    workers: serve.workers,
+                    dispatch_shards: serve.dispatch_shards,
+                    ..Default::default()
+                },
+            )?;
+            for name in scheduled.model_names() {
+                let input_len =
+                    scheduled.input_len(name).expect("names come from the plan itself");
+                let mut pending = Vec::with_capacity(serve.requests);
+                for _ in 0..serve.requests {
+                    pending.push(router.submit(name, vec![0.5; input_len])?);
+                }
+                for rx in pending {
+                    rx.recv().map_err(|_| {
+                        crate::Error::Serve("router: reply channel dropped".to_string())
+                    })??;
+                }
+                let m = router.model_metrics(name).expect("routed above");
+                println!(
+                    "  {name}: throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, \
+                     mean batch {:.1}",
+                    m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
+                );
+            }
+            router.shutdown();
         }
         Ok(())
     }
@@ -923,6 +1126,93 @@ dispatch_shards = 2
         .unwrap();
         assert!(s.serve.is_some());
         assert!(s.is_colocated());
+    }
+
+    #[test]
+    fn fleet_section_parses_over_a_device_pool() {
+        let s = RunSpec::from_str(
+            "[device]\ndevices = [\"zcu102\", \"zc706\"]\n\
+             [[tenant]]\nname = \"resnet18\"\nquant = \"w4a5\"\n\
+             [[tenant]]\nname = \"squeezenet\"\n\
+             [fleet]\nobjective = \"min_devices_at_slo\"\nslo_p99_ms = 50.0",
+        )
+        .unwrap();
+        assert!(s.is_fleet());
+        assert_eq!(
+            s.fleet.as_ref().unwrap().objective,
+            FleetObjective::MinDevicesAtSlo { p99_ms: 50.0 }
+        );
+        // tenants WITH a devices chain is legal here — fleet places the set
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.devices.len(), 2);
+        let plan = s.plan_fleet().unwrap();
+        assert_eq!(plan.networks().len(), 2);
+        assert_eq!(plan.devices().len(), 2);
+        assert_eq!(plan.objective(), FleetObjective::MinDevicesAtSlo { p99_ms: 50.0 });
+
+        // the objective defaults to max aggregate throughput
+        let s = RunSpec::from_str(
+            "[device]\ndevices = [\"zcu102\", \"zc706\"]\n\
+             [[tenant]]\nname = \"resnet18\"\n[[tenant]]\nname = \"squeezenet\"\n\
+             [fleet]\nobjective = \"max_aggregate_throughput\"",
+        )
+        .unwrap();
+        assert_eq!(
+            s.fleet.as_ref().unwrap().objective,
+            FleetObjective::MaxAggregateThroughput
+        );
+        // a single [model] over a pool is also a legal fleet
+        let s = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[device]\ndevices = [\"zcu102\", \"zcu102\"]\n\
+             [fleet]\nobjective = \"max_aggregate_throughput\"",
+        )
+        .unwrap();
+        assert!(s.is_fleet());
+        assert_eq!(s.plan_fleet().unwrap().networks().len(), 1);
+    }
+
+    #[test]
+    fn fleet_section_conflicts_and_errors() {
+        // min_devices_at_slo requires the SLO value
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[fleet]\nobjective = \"min_devices_at_slo\"",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("slo_p99_ms"), "{e}");
+        // ... and the SLO key is meaningless under max aggregate
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[fleet]\nobjective = \"max_aggregate_throughput\"\n\
+             slo_p99_ms = 50.0",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("min_devices_at_slo"), "{e}");
+        // unknown objectives and non-positive SLOs are rejected
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[fleet]\nobjective = \"fastest\"")
+            .unwrap_err();
+        assert!(e.to_string().contains("fleet.objective"), "{e}");
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[fleet]\nobjective = \"min_devices_at_slo\"\n\
+             slo_p99_ms = -1.0",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("positive"), "{e}");
+        // a typo'd fleet key is rejected with alternatives
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[fleet]\nobjectve = \"agg\"")
+            .unwrap_err();
+        assert!(e.to_string().contains("unknown key"), "{e}");
+        // fleet serving is router-fronted sim-only: no artifact
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[fleet]\nobjective = \"max_aggregate_throughput\"\n\
+             [serve]\nartifact = \"x.hlo.txt\"",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("router"), "{e}");
+        // without [fleet], tenants × devices chain stays rejected
+        let e = RunSpec::from_str(
+            "[device]\ndevices = [\"zcu102\", \"zcu102\"]\n[[tenant]]\nname = \"toy\"",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("single-device"), "{e}");
     }
 
     #[test]

@@ -112,6 +112,128 @@ impl ArrivalSchedule {
             Some(last) => self.offsets.len() as f64 / last.as_secs_f64().max(1e-12),
         }
     }
+
+    /// Build `n` arrivals of a **multi-model mix**: one aggregate Poisson
+    /// stream at `Σ rate_i`, each arrival assigned to a model with
+    /// probability `rate_i / Σ rate_j` (the superposition theorem — the
+    /// per-model substreams are themselves Poisson at their spec rates).
+    /// Seed-deterministic like every other schedule; this is the offered
+    /// load a fleet router sees.
+    pub fn mixed(n: usize, specs: &[MixedSpec], seed: u64) -> MixedSchedule {
+        assert!(!specs.is_empty(), "mixed: the model mix is empty");
+        assert!(specs.iter().all(|s| s.rate_rps > 0.0), "rates must be positive");
+        let total: f64 = specs.iter().map(|s| s.rate_rps).sum();
+        let mut rng = XorShift64::new(seed);
+        let mut t = 0.0_f64;
+        let mut offsets = Vec::with_capacity(n);
+        let mut picks = Vec::with_capacity(n);
+        for _ in 0..n {
+            let u = rng.unit().max(1e-12);
+            t += -u.ln() / total;
+            offsets.push(Duration::from_secs_f64(t));
+            // weighted pick from a second draw: walk the cumulative rates
+            let mut w = rng.unit() * total;
+            let mut pick = specs.len() - 1;
+            for (i, s) in specs.iter().enumerate() {
+                if w < s.rate_rps {
+                    pick = i;
+                    break;
+                }
+                w -= s.rate_rps;
+            }
+            picks.push(pick);
+        }
+        MixedSchedule {
+            offsets,
+            picks,
+            models: specs.iter().map(|s| s.model.clone()).collect(),
+            rate_rps: total,
+        }
+    }
+}
+
+/// One model's slice of a mixed offered load.
+#[derive(Debug, Clone)]
+pub struct MixedSpec {
+    /// Model name, as registered with the router/registry.
+    pub model: String,
+    /// This model's offered rate (requests/second).
+    pub rate_rps: f64,
+}
+
+/// A deterministic multi-model arrival schedule
+/// ([`ArrivalSchedule::mixed`]): aggregate Poisson offsets plus a per-arrival
+/// model assignment.
+#[derive(Debug, Clone)]
+pub struct MixedSchedule {
+    /// Offsets from t=0 at which each request should be issued, sorted.
+    pub offsets: Vec<Duration>,
+    /// Index into [`MixedSchedule::models`] per arrival.
+    pub picks: Vec<usize>,
+    /// Model names, in spec order.
+    pub models: Vec<String>,
+    /// The aggregate offered rate `Σ rate_i` (requests/second).
+    pub rate_rps: f64,
+}
+
+impl MixedSchedule {
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Model name assigned to arrival `i`.
+    pub fn model_of(&self, i: usize) -> &str {
+        &self.models[self.picks[i]]
+    }
+
+    /// Empirical aggregate rate of the schedule (n / span).
+    pub fn empirical_rate(&self) -> f64 {
+        match self.offsets.last() {
+            None => 0.0,
+            Some(last) => self.offsets.len() as f64 / last.as_secs_f64().max(1e-12),
+        }
+    }
+
+    /// Number of arrivals assigned to each model, in spec order.
+    pub fn per_model_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.models.len()];
+        for &p in &self.picks {
+            counts[p] += 1;
+        }
+        counts
+    }
+}
+
+/// A completion handle the open-loop drivers can drain: both the server's
+/// pooled [`ReplyHandle`](crate::coordinator::ReplyHandle) and the fleet
+/// router's [`RouterReply`](crate::coordinator::RouterReply) qualify, so the
+/// same driver measures a device directly or a whole fleet through its
+/// router.
+pub trait Completion {
+    /// Block for the response; `None` on a dropped channel or typed error.
+    fn completion(self) -> Option<crate::coordinator::Response>;
+}
+
+impl Completion for crate::coordinator::ReplyHandle {
+    fn completion(self) -> Option<crate::coordinator::Response> {
+        match self.recv() {
+            Ok(Ok(resp)) => Some(resp),
+            _ => None,
+        }
+    }
+}
+
+impl Completion for super::router::RouterReply {
+    fn completion(self) -> Option<crate::coordinator::Response> {
+        match self.recv() {
+            Ok(Ok(resp)) => Some(resp),
+            _ => None,
+        }
+    }
 }
 
 /// Outcome of one open-loop run.
@@ -136,12 +258,13 @@ pub struct LoadResult {
 /// stamped by the worker at completion, so draining the handles after the
 /// submission loop does not inflate early requests (the pooled reply slots
 /// buffer completed responses).
-pub fn run_open_loop<S, E>(schedule: &ArrivalSchedule, mut submit: S) -> LoadResult
+pub fn run_open_loop<H, S, E>(schedule: &ArrivalSchedule, mut submit: S) -> LoadResult
 where
-    S: FnMut() -> Result<crate::coordinator::ReplyHandle, E>,
+    H: Completion,
+    S: FnMut() -> Result<H, E>,
 {
     let start = Instant::now();
-    let mut pending: Vec<crate::coordinator::ReplyHandle> = Vec::new();
+    let mut pending: Vec<H> = Vec::new();
     let mut rejected = 0usize;
 
     for &offset in &schedule.offsets {
@@ -156,13 +279,61 @@ where
 
     let mut latencies_ms: Vec<f64> = Vec::with_capacity(pending.len());
     for rx in pending {
-        if let Ok(Ok(resp)) = rx.recv() {
+        if let Some(resp) = rx.completion() {
             latencies_ms.push(resp.total.as_secs_f64() * 1e3);
         }
     }
     let wall = start.elapsed().as_secs_f64();
     latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
     // same linear-interpolation estimator the server metrics use
+    let pct = |p: f64| -> f64 { super::metrics::percentile_sorted(&latencies_ms, p) };
+    let completed = latencies_ms.len();
+    LoadResult {
+        offered_rps: schedule.rate_rps,
+        achieved_rps: completed as f64 / wall.max(1e-12),
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        p99_ms: pct(0.99),
+        mean_ms: if completed == 0 {
+            0.0
+        } else {
+            latencies_ms.iter().sum::<f64>() / completed as f64
+        },
+        rejected,
+        completed,
+    }
+}
+
+/// [`run_open_loop`] for a multi-model mix: `submit` receives the model
+/// name assigned to each arrival (a router's `submit(model, input)` curries
+/// naturally into this).
+pub fn run_open_loop_mixed<H, S, E>(schedule: &MixedSchedule, mut submit: S) -> LoadResult
+where
+    H: Completion,
+    S: FnMut(&str) -> Result<H, E>,
+{
+    let start = Instant::now();
+    let mut pending: Vec<H> = Vec::new();
+    let mut rejected = 0usize;
+
+    for (i, &offset) in schedule.offsets.iter().enumerate() {
+        if let Some(sleep) = offset.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match submit(schedule.model_of(i)) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(pending.len());
+    for rx in pending {
+        if let Some(resp) = rx.completion() {
+            latencies_ms.push(resp.total.as_secs_f64() * 1e3);
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| -> f64 { super::metrics::percentile_sorted(&latencies_ms, p) };
     let completed = latencies_ms.len();
     LoadResult {
@@ -317,6 +488,51 @@ mod tests {
         assert!((all.rate_rps - 9000.0).abs() < 1e-9);
     }
 
+    fn mix(pairs: &[(&str, f64)]) -> Vec<MixedSpec> {
+        pairs
+            .iter()
+            .map(|&(m, r)| MixedSpec { model: m.to_string(), rate_rps: r })
+            .collect()
+    }
+
+    #[test]
+    fn mixed_offsets_are_monotonic_and_deterministic() {
+        let specs = mix(&[("resnet18", 300.0), ("squeezenet", 100.0)]);
+        let a = ArrivalSchedule::mixed(1000, &specs, 17);
+        assert_eq!(a.len(), 1000);
+        assert_eq!(a.picks.len(), 1000);
+        for w in a.offsets.windows(2) {
+            assert!(w[0] < w[1], "offsets must be strictly increasing");
+        }
+        let b = ArrivalSchedule::mixed(1000, &specs, 17);
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.picks, b.picks);
+        let c = ArrivalSchedule::mixed(1000, &specs, 18);
+        assert_ne!(a.picks, c.picks);
+    }
+
+    #[test]
+    fn mixed_aggregate_rate_and_per_model_shares_match_the_specs() {
+        let specs = mix(&[("a", 600.0), ("b", 300.0), ("c", 100.0)]);
+        let s = ArrivalSchedule::mixed(4000, &specs, 23);
+        assert!((s.rate_rps - 1000.0).abs() < 1e-9, "aggregate rate is Σ rate_i");
+        let rate = s.empirical_rate();
+        assert!((800.0..1200.0).contains(&rate), "empirical aggregate rate {rate}");
+        // per-model shares track rate_i / Σ (binomial: n=4000, rel std ≲ 3%)
+        let counts = s.per_model_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 4000);
+        for (i, want_frac) in [0.6, 0.3, 0.1].iter().enumerate() {
+            let frac = counts[i] as f64 / 4000.0;
+            assert!(
+                (frac - want_frac).abs() < 0.05,
+                "model {} share {frac} vs spec {want_frac}",
+                s.models[i]
+            );
+        }
+        // every arrival resolves to a registered model name
+        assert_eq!(s.model_of(0), s.models[s.picks[0]].as_str());
+    }
+
     #[test]
     fn open_loop_against_live_server() {
         use crate::coordinator::{BatchPolicy, Server, SimOnlyEngine};
@@ -344,5 +560,41 @@ mod tests {
         assert!(res.p50_ms <= res.p95_ms && res.p95_ms <= res.p99_ms);
         assert!(res.achieved_rps > 0.0);
         server.shutdown();
+    }
+
+    #[test]
+    fn mixed_open_loop_against_live_router() {
+        use crate::coordinator::{BatchPolicy, Router, Server, ServerOptions, SimOnlyEngine};
+        use crate::device::Device;
+        use crate::dse::{self, DseConfig};
+        use crate::ir::Quant;
+
+        let net = crate::models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let mut router = Router::new();
+        for model in ["toy_a", "toy_b"] {
+            let engine = SimOnlyEngine {
+                design: r.design.clone(),
+                device: dev.clone(),
+                input_len: 3 * 32 * 32,
+                output_len: 10,
+            };
+            let server = Server::start_with_opts(
+                move || Ok(Box::new(engine.clone()) as _),
+                BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                ServerOptions::default(),
+            )
+            .unwrap();
+            router.add_server("zcu102", model, 3 * 32 * 32, server);
+        }
+        let specs = mix(&[("toy_a", 1500.0), ("toy_b", 500.0)]);
+        let schedule = ArrivalSchedule::mixed(64, &specs, 11);
+        let res =
+            run_open_loop_mixed(&schedule, |m| router.submit(m, vec![0.5; 3 * 32 * 32]));
+        assert_eq!(res.completed, 64);
+        assert_eq!(res.rejected, 0);
+        assert!(res.p50_ms <= res.p95_ms && res.p95_ms <= res.p99_ms);
+        router.shutdown();
     }
 }

@@ -16,6 +16,11 @@
 //! the steady-state serving path never takes a lock. Each worker's engine
 //! is constructed on its own thread (the PJRT thread-affinity contract).
 //! See `server.rs` for the topology diagram.
+//!
+//! Fleet deployments front several such stacks — per-device [`Server`]s and
+//! [`ModelRegistry`]s — behind one [`Router`]: per-model routing with
+//! least-outstanding-requests replica selection and per-model/per-device
+//! metrics rollup (see `router.rs` for that topology).
 
 mod batcher;
 mod chain;
@@ -24,16 +29,21 @@ mod metrics;
 mod oneshot;
 mod priority;
 mod registry;
+mod router;
 mod server;
 mod sync;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use chain::ChainedEngine;
-pub use loadgen::{run_open_loop, ArrivalSchedule, LoadResult};
+pub use loadgen::{
+    run_open_loop, run_open_loop_mixed, ArrivalSchedule, Completion, LoadResult, MixedSchedule,
+    MixedSpec,
+};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerStats};
 pub use oneshot::ReplyHandle;
 pub use priority::{Priority, PriorityBatcher};
 pub use registry::{ModelEntry, ModelRegistry};
+pub use router::{EndpointMetrics, Router, RouterReply};
 pub use server::{
     Engine, PacedEngine, PjrtEngine, Request, Response, Server, ServerOptions, SimOnlyEngine,
 };

@@ -1,0 +1,478 @@
+//! Fleet router — ONE submit surface over many per-device serving stacks.
+//!
+//! A fleet deployment boots one serving stack per placement: a [`Server`]
+//! for a solo or sharded model, a [`ModelRegistry`] for a co-located group.
+//! The router fronts all of them behind a single `submit(model, input)`
+//! call:
+//!
+//! ```text
+//!                         Router
+//!              ┌────────────┼──────────────┐
+//!         endpoint 0    endpoint 1     endpoint 2
+//!         Server        Server         ModelRegistry
+//!         (resnet50     (resnet50      (resnet18 + squeezenet
+//!          shard A)      shard B)       co-located)
+//! ```
+//!
+//! Routing is by model name. When the same model is registered on several
+//! endpoints those are **replicas**, and each submit picks the replica with
+//! the fewest outstanding requests (least-outstanding-requests — the
+//! classic low-overhead approximation of join-shortest-queue; ties go to
+//! the lowest endpoint index, so routing is deterministic under equal
+//! load). Outstanding counts are per-endpoint atomics, incremented at
+//! submit and retired exactly once when the reply is received *or* dropped
+//! ([`RouterReply`]), so an abandoned reply can never wedge a replica into
+//! appearing busy.
+//!
+//! Metrics roll up two ways: per endpoint ([`Router::endpoint_metrics`],
+//! the per-device view) and per model ([`Router::model_metrics`], the
+//! cross-replica view — counts and throughput sum, latency percentiles take
+//! the conservative max, means weight by request count).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::RecvError;
+use std::sync::Arc;
+
+use crate::error::Error;
+
+use super::{MetricsSnapshot, ModelRegistry, Priority, ReplyHandle, Response, Server};
+
+/// One per-device serving stack behind the router.
+enum Backend {
+    /// A single-model server (solo or sharded placement). `input_len` is
+    /// kept here so the router types payload-shape errors exactly like the
+    /// registry does.
+    Server { model: String, input_len: usize, server: Server },
+    /// A multi-tenant registry (co-located placement); it validates routes
+    /// and payloads itself.
+    Registry(ModelRegistry),
+}
+
+struct Endpoint {
+    label: String,
+    backend: Backend,
+    /// Requests submitted through this endpoint whose replies have not been
+    /// retired yet — the least-outstanding-requests routing signal.
+    outstanding: Arc<AtomicUsize>,
+}
+
+impl Endpoint {
+    fn models(&self) -> Vec<String> {
+        match &self.backend {
+            Backend::Server { model, .. } => vec![model.clone()],
+            Backend::Registry(r) => r.models().iter().map(|m| m.to_string()).collect(),
+        }
+    }
+}
+
+/// Per-endpoint metrics view: the device-side rollup of
+/// [`Router::endpoint_metrics`].
+#[derive(Debug, Clone)]
+pub struct EndpointMetrics {
+    /// The label the endpoint was registered under (a fleet uses the device
+    /// names of the placement).
+    pub label: String,
+    /// Requests in flight through this endpoint right now.
+    pub outstanding: usize,
+    /// One serving snapshot per model this endpoint answers.
+    pub per_model: Vec<(String, MetricsSnapshot)>,
+}
+
+/// Reply handle returned by [`Router::submit`]: wraps the backend's
+/// [`ReplyHandle`] and retires the endpoint's outstanding count **exactly
+/// once** — on the first successful `recv`, or at drop if the caller
+/// abandons the reply.
+pub struct RouterReply {
+    inner: ReplyHandle,
+    outstanding: Arc<AtomicUsize>,
+    retired: AtomicBool,
+}
+
+impl RouterReply {
+    /// Block for the reply (same contract as [`ReplyHandle::recv`]: a second
+    /// call after consumption reports [`RecvError`]).
+    pub fn recv(&self) -> Result<Result<Response, Error>, RecvError> {
+        let out = self.inner.recv();
+        if out.is_ok() {
+            self.retire();
+        }
+        out
+    }
+
+    /// Decrement the endpoint's outstanding count exactly once (the atomic
+    /// swap makes recv-then-drop safe).
+    fn retire(&self) {
+        if !self.retired.swap(true, Ordering::Relaxed) {
+            self.outstanding.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for RouterReply {
+    fn drop(&mut self) {
+        self.retire();
+    }
+}
+
+/// The fleet-level submit surface. See the module docs for the topology.
+#[derive(Default)]
+pub struct Router {
+    endpoints: Vec<Endpoint>,
+    /// model name → endpoint indices serving it (≥ 2 entries = replicas).
+    routes: HashMap<String, Vec<usize>>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Register a single-model [`Server`] endpoint (a solo or sharded
+    /// placement). Registering the same model name again adds a replica —
+    /// that is the point, not an error.
+    pub fn add_server(
+        &mut self,
+        label: impl Into<String>,
+        model: impl Into<String>,
+        input_len: usize,
+        server: Server,
+    ) {
+        let model = model.into();
+        let idx = self.endpoints.len();
+        self.endpoints.push(Endpoint {
+            label: label.into(),
+            backend: Backend::Server { model: model.clone(), input_len, server },
+            outstanding: Arc::new(AtomicUsize::new(0)),
+        });
+        self.routes.entry(model).or_default().push(idx);
+    }
+
+    /// Register a [`ModelRegistry`] endpoint (a co-located placement):
+    /// every model the registry serves becomes routable here.
+    pub fn add_registry(&mut self, label: impl Into<String>, registry: ModelRegistry) {
+        let idx = self.endpoints.len();
+        let models: Vec<String> = registry.models().iter().map(|m| m.to_string()).collect();
+        self.endpoints.push(Endpoint {
+            label: label.into(),
+            backend: Backend::Registry(registry),
+            outstanding: Arc::new(AtomicUsize::new(0)),
+        });
+        for model in models {
+            self.routes.entry(model).or_default().push(idx);
+        }
+    }
+
+    /// Every routable model name, sorted.
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.routes.keys().cloned().collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// How many endpoints serve `model` (0 = unrouted).
+    pub fn replicas(&self, model: &str) -> usize {
+        self.routes.get(model).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Endpoint labels in registration order.
+    pub fn endpoint_labels(&self) -> Vec<&str> {
+        self.endpoints.iter().map(|e| e.label.as_str()).collect()
+    }
+
+    /// Submit one input for `model`, routed to the least-outstanding
+    /// replica. Typed failures pass through: [`Error::UnknownModel`] for an
+    /// unrouted name, [`Error::InputLength`] for a wrong payload shape, and
+    /// the backend's own admission errors ([`Error::Overloaded`],
+    /// [`Error::ShuttingDown`]).
+    pub fn submit(&self, model: &str, input: Vec<f32>) -> Result<RouterReply, Error> {
+        let route = self
+            .routes
+            .get(model)
+            .ok_or_else(|| Error::UnknownModel(model.to_string()))?;
+        // Least outstanding requests; the index tie-break keeps routing
+        // deterministic when replicas are equally loaded.
+        let &idx = route
+            .iter()
+            .min_by_key(|&&i| (self.endpoints[i].outstanding.load(Ordering::Relaxed), i))
+            .expect("a route is never registered empty");
+        let endpoint = &self.endpoints[idx];
+        let inner = match &endpoint.backend {
+            Backend::Server { input_len, server, .. } => {
+                if input.len() != *input_len {
+                    return Err(Error::InputLength {
+                        model: model.to_string(),
+                        expected: *input_len,
+                        got: input.len(),
+                    });
+                }
+                server.submit(input)?
+            }
+            Backend::Registry(registry) => registry.submit(model, input, Priority::Normal)?,
+        };
+        endpoint.outstanding.fetch_add(1, Ordering::Relaxed);
+        Ok(RouterReply {
+            inner,
+            outstanding: Arc::clone(&endpoint.outstanding),
+            retired: AtomicBool::new(false),
+        })
+    }
+
+    /// Submit one input and block until its response arrives.
+    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<Response, Error> {
+        let reply = self.submit(model, input)?;
+        reply
+            .recv()
+            .map_err(|_| Error::Serve("router: reply channel dropped".to_string()))?
+    }
+
+    /// Per-endpoint metrics: one entry per registered serving stack, with a
+    /// snapshot per model it answers.
+    pub fn endpoint_metrics(&self) -> Vec<EndpointMetrics> {
+        self.endpoints
+            .iter()
+            .map(|e| {
+                let per_model = match &e.backend {
+                    Backend::Server { model, server, .. } => {
+                        vec![(model.clone(), server.metrics())]
+                    }
+                    Backend::Registry(r) => r
+                        .models()
+                        .iter()
+                        .filter_map(|m| r.metrics(m).map(|s| (m.to_string(), s)))
+                        .collect(),
+                };
+                EndpointMetrics {
+                    label: e.label.clone(),
+                    outstanding: e.outstanding.load(Ordering::Relaxed),
+                    per_model,
+                }
+            })
+            .collect()
+    }
+
+    /// Cross-replica rollup for one model: request/batch counts and
+    /// throughput sum over replicas, latency percentiles take the
+    /// conservative max, means weight by request count. `None` for an
+    /// unrouted name.
+    pub fn model_metrics(&self, model: &str) -> Option<MetricsSnapshot> {
+        let route = self.routes.get(model)?;
+        let snaps: Vec<MetricsSnapshot> = route
+            .iter()
+            .filter_map(|&i| match &self.endpoints[i].backend {
+                Backend::Server { server, .. } => Some(server.metrics()),
+                Backend::Registry(r) => r.metrics(model),
+            })
+            .collect();
+        Some(fold_snapshots(&snaps))
+    }
+
+    /// Shut down every endpoint's serving loops, flushing pending requests.
+    pub fn shutdown(self) {
+        for e in self.endpoints {
+            match e.backend {
+                Backend::Server { server, .. } => server.shutdown(),
+                Backend::Registry(registry) => registry.shutdown(),
+            }
+        }
+    }
+}
+
+/// Fold replica snapshots into one conservative model-level view.
+fn fold_snapshots(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
+    let mut out = MetricsSnapshot {
+        requests: 0,
+        batches: 0,
+        mean_batch: 0.0,
+        p50_ms: 0.0,
+        p95_ms: 0.0,
+        p99_ms: 0.0,
+        mean_ms: 0.0,
+        throughput_rps: 0.0,
+        sim_accel_s: 0.0,
+        per_worker: Vec::new(),
+        queue_depth_mean: 0.0,
+        queue_depth_max: 0,
+    };
+    let mut weighted_mean = 0.0;
+    let mut weighted_depth = 0.0;
+    for s in snaps {
+        out.requests += s.requests;
+        out.batches += s.batches;
+        out.p50_ms = out.p50_ms.max(s.p50_ms);
+        out.p95_ms = out.p95_ms.max(s.p95_ms);
+        out.p99_ms = out.p99_ms.max(s.p99_ms);
+        out.throughput_rps += s.throughput_rps;
+        out.sim_accel_s += s.sim_accel_s;
+        out.per_worker.extend(s.per_worker.iter().cloned());
+        out.queue_depth_max = out.queue_depth_max.max(s.queue_depth_max);
+        weighted_mean += s.mean_ms * s.requests as f64;
+        weighted_depth += s.queue_depth_mean * s.requests as f64;
+    }
+    if out.requests > 0 {
+        out.mean_ms = weighted_mean / out.requests as f64;
+        out.queue_depth_mean = weighted_depth / out.requests as f64;
+    }
+    if out.batches > 0 {
+        out.mean_batch = out.requests as f64 / out.batches as f64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchPolicy, Engine, ModelEntry, ServerOptions};
+    use anyhow::Result;
+    use std::time::Duration;
+
+    /// Checksum engine with a configurable hold time so requests stay
+    /// outstanding long enough to observe the routing decision.
+    #[derive(Clone)]
+    struct EchoEngine {
+        input_len: usize,
+        hold: Duration,
+    }
+
+    impl Engine for EchoEngine {
+        fn infer(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            if !self.hold.is_zero() {
+                std::thread::sleep(self.hold);
+            }
+            Ok(batch.iter().map(|b| vec![b.iter().sum()]).collect())
+        }
+
+        fn input_len(&self) -> usize {
+            self.input_len
+        }
+
+        fn accel_batch_time(&mut self, _batch: usize) -> Duration {
+            Duration::ZERO
+        }
+    }
+
+    fn server(input_len: usize, hold: Duration) -> Server {
+        let engine = EchoEngine { input_len, hold };
+        Server::start_with_opts(
+            move || Ok(Box::new(engine.clone()) as _),
+            BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            ServerOptions::default(),
+        )
+        .expect("echo server boots")
+    }
+
+    #[test]
+    fn routes_by_model_and_rejects_unknown() {
+        let mut router = Router::new();
+        router.add_server("dev0", "toy", 4, server(4, Duration::ZERO));
+        assert_eq!(router.models(), vec!["toy".to_string()]);
+        assert_eq!(router.replicas("toy"), 1);
+        assert_eq!(router.replicas("resnet9000"), 0);
+
+        let r = router.infer("toy", vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(r.output, vec![10.0]);
+
+        let e = router.submit("resnet9000", vec![0.0; 4]).unwrap_err();
+        assert!(matches!(e, Error::UnknownModel(ref m) if m == "resnet9000"), "{e}");
+        let e = router.submit("toy", vec![0.0; 3]).unwrap_err();
+        assert!(
+            matches!(e, Error::InputLength { expected: 4, got: 3, .. }),
+            "{e}"
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn least_outstanding_spreads_replicas_and_retires_on_recv() {
+        let mut router = Router::new();
+        // two replicas of the same model; a hold keeps requests in flight
+        router.add_server("dev0", "toy", 2, server(2, Duration::from_millis(50)));
+        router.add_server("dev1", "toy", 2, server(2, Duration::from_millis(50)));
+        assert_eq!(router.replicas("toy"), 2);
+
+        // first pick ties at (0, 0) -> endpoint 0; second sees it loaded
+        let a = router.submit("toy", vec![1.0, 2.0]).unwrap();
+        let b = router.submit("toy", vec![3.0, 4.0]).unwrap();
+        let outstanding: Vec<usize> =
+            router.endpoint_metrics().iter().map(|e| e.outstanding).collect();
+        assert_eq!(outstanding, vec![1, 1], "LOR must spread equal load");
+
+        assert_eq!(a.recv().unwrap().unwrap().output, vec![3.0]);
+        assert_eq!(b.recv().unwrap().unwrap().output, vec![7.0]);
+        let outstanding: Vec<usize> =
+            router.endpoint_metrics().iter().map(|e| e.outstanding).collect();
+        assert_eq!(outstanding, vec![0, 0], "recv retires the count");
+        router.shutdown();
+    }
+
+    #[test]
+    fn dropped_reply_still_retires_exactly_once() {
+        let mut router = Router::new();
+        router.add_server("dev0", "toy", 2, server(2, Duration::ZERO));
+        {
+            let reply = router.submit("toy", vec![1.0, 1.0]).unwrap();
+            // received AND dropped: the count must come down exactly once
+            let _ = reply.recv();
+        }
+        {
+            let _abandoned = router.submit("toy", vec![1.0, 1.0]).unwrap();
+            // dropped without recv
+        }
+        // allow the abandoned request to drain through the server
+        std::thread::sleep(Duration::from_millis(20));
+        let outstanding: Vec<usize> =
+            router.endpoint_metrics().iter().map(|e| e.outstanding).collect();
+        assert_eq!(outstanding, vec![0]);
+        router.shutdown();
+    }
+
+    #[test]
+    fn registry_endpoint_routes_all_its_models() {
+        let mut registry = ModelRegistry::new();
+        for name in ["alpha", "beta"] {
+            let engine = EchoEngine { input_len: 3, hold: Duration::ZERO };
+            registry
+                .register(
+                    ModelEntry {
+                        name: name.to_string(),
+                        input_len: 3,
+                        policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+                        options: ServerOptions::default(),
+                    },
+                    move || Ok(Box::new(engine.clone()) as _),
+                )
+                .unwrap();
+        }
+        let mut router = Router::new();
+        router.add_registry("dev0", registry);
+        assert_eq!(router.models(), vec!["alpha".to_string(), "beta".to_string()]);
+        let r = router.infer("beta", vec![1.0, 2.0, 4.0]).unwrap();
+        assert_eq!(r.output, vec![7.0]);
+        // the registry types its own payload-shape failures
+        let e = router.submit("alpha", vec![0.0; 2]).unwrap_err();
+        assert!(matches!(e, Error::InputLength { expected: 3, got: 2, .. }), "{e}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn model_metrics_roll_up_across_replicas() {
+        let mut router = Router::new();
+        router.add_server("dev0", "toy", 2, server(2, Duration::ZERO));
+        router.add_server("dev1", "toy", 2, server(2, Duration::ZERO));
+        for i in 0..6 {
+            let _ = router.infer("toy", vec![i as f32, 1.0]).unwrap();
+        }
+        let rolled = router.model_metrics("toy").expect("routed model");
+        assert_eq!(rolled.requests, 6, "replica counts must sum");
+        assert!(rolled.throughput_rps > 0.0);
+        // per-endpoint views account for every request exactly once
+        let per_endpoint: u64 = router
+            .endpoint_metrics()
+            .iter()
+            .flat_map(|e| e.per_model.iter().map(|(_, s)| s.requests))
+            .sum();
+        assert_eq!(per_endpoint, 6);
+        assert!(router.model_metrics("resnet9000").is_none());
+        router.shutdown();
+    }
+}

@@ -183,6 +183,12 @@ impl Device {
         }
     }
 
+    /// The library's board names, small to large — the `known` list a typed
+    /// [`crate::Error::UnknownDevice`] reports on a lookup miss.
+    pub fn known_names() -> Vec<String> {
+        Device::all().iter().map(|d| d.name.to_string()).collect()
+    }
+
     /// All devices used in the paper's evaluation, small to large.
     pub fn all() -> Vec<Device> {
         vec![

@@ -1,0 +1,748 @@
+//! Fleet placement search — N networks over M heterogeneous devices.
+//!
+//! [`super::partition`] answers "one model, many devices" and
+//! [`super::colocate`] answers "many models, one device"; this module is the
+//! general case on top of both: a bin-packing/assignment search that places
+//! every network of a model set onto a heterogeneous device pool, choosing
+//! per model whether to run **solo** on one board, **shard** across a device
+//! subset (the PR-4 cut search), or **co-locate** with other tenants on a
+//! shared board (the PR-5 joint budget search).
+//!
+//! The search is a deterministic greedy:
+//!
+//! 1. Evaluate the full solo matrix (model × device) up front, fanned across
+//!    cores via [`super::parallel_cases`].
+//! 2. Place models in descending weight-footprint order (the biggest model
+//!    has the fewest placement options, so it chooses first; ties keep input
+//!    order — the sort is stable).
+//! 3. For each model, enumerate candidates per the objective (below), every
+//!    candidate evaluation going through the caller's
+//!    [`DesignCache`](crate::pipeline::DesignCache) — fleets re-probe the
+//!    same (network, device-subset) points constantly, and the cache shares
+//!    those entries with the plain single/partitioned/colocated pipelines.
+//! 4. Under [`FleetObjective::MaxAggregateThroughput`], finish with an
+//!    improvement pass that widens the slowest solo/sharded placement onto
+//!    leftover free devices while that helps.
+//!
+//! Objective semantics:
+//!
+//! - **MaxAggregateThroughput** — maximize Σθ over all models. Per model:
+//!   best feasible solo on a free device; else the smallest feasible shard
+//!   over free devices with the best θ; else co-locate onto the existing
+//!   group with the best *marginal* aggregate θ.
+//! - **MinDevicesAtSlo { p99_ms }** — use as few boards as possible while
+//!   every model's tail-latency proxy ([`slo_metric`]) stays within the SLO.
+//!   Candidates are tiered by how many *new* devices they claim: co-locating
+//!   onto an occupied board costs 0, solo costs 1, a k-way shard costs k; the
+//!   cheapest tier with any SLO-meeting candidate wins (θ breaks ties). A
+//!   co-location candidate only qualifies if **every** tenant of the grown
+//!   group still meets the SLO. If some model meets the SLO nowhere, the
+//!   whole fleet is infeasible (`None`) — same contract as a plain DSE miss.
+//!
+//! Degenerate shapes reproduce the established searches *verbatim* so the
+//! fleet surface is a strict superset: 1 model × 1 device is the plain DSE,
+//! 1 model × M devices (under MaxAggregateThroughput) is the PR-4 partition
+//! of the full chain, N models × 1 device is the PR-5 co-location. The
+//! `tests/fleet_deploy.rs` goldens pin these bit-identically.
+
+use crate::device::Device;
+use crate::ir::Network;
+use crate::pipeline::DesignCache;
+
+use super::{parallel_cases, ColocatedResult, DseConfig, DseResult, PartitionedResult};
+
+/// What the fleet search optimizes for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FleetObjective {
+    /// Maximize the sum of all models' steady-state throughputs, using the
+    /// whole pool if it helps.
+    MaxAggregateThroughput,
+    /// Occupy as few devices as possible while every model's tail-latency
+    /// proxy ([`slo_metric`]) stays at or below `p99_ms`.
+    MinDevicesAtSlo { p99_ms: f64 },
+}
+
+/// One placement decision of a [`FleetResult`]. Model and device fields are
+/// **indices into the input lists** handed to [`fleet`], so a placement can
+/// be joined back to its network/board without cloning either.
+#[derive(Debug, Clone)]
+pub enum FleetPlacement {
+    /// One model alone on one board (plain DSE outcome).
+    Solo { model: usize, device: usize, result: DseResult },
+    /// One model split across a device chain (`devices` in chain order).
+    Sharded { model: usize, devices: Vec<usize>, result: PartitionedResult },
+    /// Several models sharing one board (`models` in tenant order — the
+    /// order the joint search saw them, which is their placement order).
+    Colocated { models: Vec<usize>, device: usize, result: ColocatedResult },
+}
+
+impl FleetPlacement {
+    /// The models this placement serves, in tenant order.
+    pub fn model_indices(&self) -> Vec<usize> {
+        match self {
+            FleetPlacement::Solo { model, .. } => vec![*model],
+            FleetPlacement::Sharded { model, .. } => vec![*model],
+            FleetPlacement::Colocated { models, .. } => models.clone(),
+        }
+    }
+
+    /// The devices this placement occupies, in chain order.
+    pub fn device_indices(&self) -> Vec<usize> {
+        match self {
+            FleetPlacement::Solo { device, .. } => vec![*device],
+            FleetPlacement::Sharded { devices, .. } => devices.clone(),
+            FleetPlacement::Colocated { device, .. } => vec![*device],
+        }
+    }
+
+    /// Steady-state throughput this placement contributes to the aggregate:
+    /// the model's θ for solo/sharded, the tenant sum for co-located.
+    pub fn throughput(&self) -> f64 {
+        match self {
+            FleetPlacement::Solo { result, .. } => result.throughput,
+            FleetPlacement::Sharded { result, .. } => result.throughput,
+            FleetPlacement::Colocated { result, .. } => result.aggregate_throughput(),
+        }
+    }
+
+    /// Placement-mode label for tables and JSON (`solo`/`sharded`/`colocated`).
+    pub fn mode(&self) -> &'static str {
+        match self {
+            FleetPlacement::Solo { .. } => "solo",
+            FleetPlacement::Sharded { .. } => "sharded",
+            FleetPlacement::Colocated { .. } => "colocated",
+        }
+    }
+}
+
+/// Outcome of a fleet placement search.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    /// Placement decisions in the order the greedy committed them (largest
+    /// model first; a co-location replaces the solo placement it grew from).
+    pub placements: Vec<FleetPlacement>,
+    /// The objective this result was searched under.
+    pub objective: FleetObjective,
+    /// Number of distinct devices the placements occupy.
+    pub devices_used: usize,
+    /// Σθ over all placements (samples/s).
+    pub aggregate_throughput: f64,
+}
+
+impl FleetResult {
+    /// The placement serving model `m` (an index into the input network
+    /// list), if any.
+    pub fn placement_of(&self, m: usize) -> Option<&FleetPlacement> {
+        self.placements.iter().find(|p| p.model_indices().contains(&m))
+    }
+}
+
+/// Tail-latency proxy of a steady-state deployment point: the analytic
+/// single-sample latency plus one service period (`1/θ`, in ms). At
+/// saturation an arriving request waits out the in-flight sample before its
+/// own pipeline traversal, so this is the p99 *floor* the deployment can
+/// promise — sharding a memory-starved model shrinks both terms, which is
+/// exactly the lever [`FleetObjective::MinDevicesAtSlo`] needs.
+pub fn slo_metric(latency_ms: f64, throughput: f64) -> f64 {
+    if throughput <= 0.0 {
+        return f64::INFINITY;
+    }
+    latency_ms + 1e3 / throughput
+}
+
+/// Place `networks` onto `devices` under `objective`, memoizing every
+/// candidate evaluation in the process-wide
+/// [`design_cache`](crate::pipeline::design_cache). Returns `None` when no
+/// feasible placement of the whole set exists (or, under
+/// [`FleetObjective::MinDevicesAtSlo`], when some model meets the SLO
+/// nowhere).
+pub fn fleet(
+    networks: &[Network],
+    devices: &[Device],
+    objective: FleetObjective,
+    cfg: &DseConfig,
+) -> Option<FleetResult> {
+    fleet_in(crate::pipeline::design_cache(), networks, devices, objective, cfg)
+}
+
+/// [`fleet`] against a caller-owned cache — the entry point
+/// [`DesignCache::explore_fleet`](crate::pipeline::DesignCache::explore_fleet)
+/// uses so sub-evaluations land in the *same* cache instance that memoizes
+/// the whole fleet outcome.
+pub fn fleet_in(
+    cache: &DesignCache,
+    networks: &[Network],
+    devices: &[Device],
+    objective: FleetObjective,
+    cfg: &DseConfig,
+) -> Option<FleetResult> {
+    let n = networks.len();
+    let m = devices.len();
+    if n == 0 || m == 0 {
+        return None;
+    }
+
+    // Degenerate shapes reproduce the established searches verbatim (the
+    // pipeline goldens pin these bit-identically against `.on_device`,
+    // `.on_devices` and `.colocate`).
+    if n == 1 && m == 1 {
+        let (result, _) = cache.explore(&networks[0], &devices[0], cfg);
+        let result = result?;
+        if let FleetObjective::MinDevicesAtSlo { p99_ms } = objective {
+            if slo_metric(result.latency_ms, result.throughput) > p99_ms {
+                return None;
+            }
+        }
+        return Some(finish(vec![FleetPlacement::Solo { model: 0, device: 0, result }], objective));
+    }
+    if n == 1 && objective == FleetObjective::MaxAggregateThroughput {
+        // One model over a pool IS the PR-4 sharded deployment of the full
+        // chain. (Under MinDevicesAtSlo the general greedy below applies —
+        // it prefers one board if one board meets the SLO.)
+        let (result, _) = cache.explore_partitioned(&networks[0], devices, None, cfg);
+        let result = result?;
+        return Some(finish(
+            vec![FleetPlacement::Sharded { model: 0, devices: (0..m).collect(), result }],
+            objective,
+        ));
+    }
+    if m == 1 {
+        // N models on one board IS the PR-5 co-location.
+        let (result, _) = cache.explore_colocated(networks, &devices[0], cfg);
+        let result = result?;
+        if let FleetObjective::MinDevicesAtSlo { p99_ms } = objective {
+            for t in &result.tenants {
+                if slo_metric(t.result.latency_ms, t.result.throughput) > p99_ms {
+                    return None;
+                }
+            }
+        }
+        return Some(finish(
+            vec![FleetPlacement::Colocated { models: (0..n).collect(), device: 0, result }],
+            objective,
+        ));
+    }
+
+    // Solo matrix up front: cell (i, j) = model i alone on device j. Every
+    // later candidate either reads a cell or goes through the cache, so the
+    // fan-out cost is paid once.
+    let pairs: Vec<(usize, usize)> =
+        (0..n).flat_map(|i| (0..m).map(move |j| (i, j))).collect();
+    let cells = parallel_cases(&pairs, |_, &(i, j)| cache.explore(&networks[i], &devices[j], cfg).0);
+    let mut solo: Vec<Vec<Option<DseResult>>> = vec![vec![None; m]; n];
+    for (&(i, j), r) in pairs.iter().zip(cells) {
+        solo[i][j] = r;
+    }
+
+    // Biggest weight footprint places first; the stable sort keeps input
+    // order on ties.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(networks[i].stats().weight_bits));
+
+    let mut placements: Vec<FleetPlacement> = Vec::new();
+    for &mi in &order {
+        place_one(cache, networks, devices, objective, cfg, &solo, mi, &mut placements)?;
+    }
+
+    if objective == FleetObjective::MaxAggregateThroughput {
+        improve(cache, networks, devices, cfg, &mut placements);
+    }
+
+    Some(finish(placements, objective))
+}
+
+/// Devices no committed placement occupies, ascending.
+fn free_devices(placements: &[FleetPlacement], m: usize) -> Vec<usize> {
+    let mut taken = vec![false; m];
+    for p in placements {
+        for d in p.device_indices() {
+            taken[d] = true;
+        }
+    }
+    (0..m).filter(|&d| !taken[d]).collect()
+}
+
+/// Commit the placement of model `mi` under the objective, or fail the whole
+/// fleet (`None`).
+#[allow(clippy::too_many_arguments)]
+fn place_one(
+    cache: &DesignCache,
+    networks: &[Network],
+    devices: &[Device],
+    objective: FleetObjective,
+    cfg: &DseConfig,
+    solo: &[Vec<Option<DseResult>>],
+    mi: usize,
+    placements: &mut Vec<FleetPlacement>,
+) -> Option<()> {
+    let free = free_devices(placements, devices.len());
+    match objective {
+        FleetObjective::MinDevicesAtSlo { p99_ms } => {
+            // Tier 0: grow an existing solo/co-located group (0 new devices).
+            if let Some((at, models, device, result)) =
+                best_colocate(cache, networks, devices, cfg, mi, placements, |grown| {
+                    grown
+                        .tenants
+                        .iter()
+                        .all(|t| slo_metric(t.result.latency_ms, t.result.throughput) <= p99_ms)
+                        .then(|| {
+                            // tie-break θ: the new tenant's throughput
+                            grown.tenants.last().map(|t| t.result.throughput).unwrap_or(0.0)
+                        })
+                })
+            {
+                placements[at] = FleetPlacement::Colocated { models, device, result };
+                return Some(());
+            }
+            // Tier 1: solo on a free device.
+            let best_solo = free
+                .iter()
+                .filter_map(|&d| {
+                    let r = solo[mi][d].as_ref()?;
+                    (slo_metric(r.latency_ms, r.throughput) <= p99_ms)
+                        .then(|| (r.throughput, d, r.clone()))
+                })
+                .max_by(|a, b| {
+                    a.0.partial_cmp(&b.0)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(b.1.cmp(&a.1)) // tie: lowest device index
+                });
+            if let Some((_, d, result)) = best_solo {
+                placements.push(FleetPlacement::Solo { model: mi, device: d, result });
+                return Some(());
+            }
+            // Tier k (k = 2..): the smallest shard over free devices that
+            // meets the SLO; within the tier, best θ.
+            for k in 2..=free.len() {
+                let subsets = combinations(&free, k);
+                let evals = parallel_cases(&subsets, |_, subset| {
+                    let devs: Vec<Device> = subset.iter().map(|&d| devices[d].clone()).collect();
+                    cache.explore_partitioned(&networks[mi], &devs, None, cfg).0
+                });
+                let best = subsets
+                    .iter()
+                    .zip(evals)
+                    .filter_map(|(subset, r)| {
+                        let r = r?;
+                        (slo_metric(r.latency_ms(), r.throughput) <= p99_ms)
+                            .then(|| (r.throughput, subset.clone(), r))
+                    })
+                    .max_by(|a, b| {
+                        a.0.partial_cmp(&b.0)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(b.1.cmp(&a.1)) // tie: lexicographically lowest subset
+                    });
+                if let Some((_, subset, result)) = best {
+                    placements.push(FleetPlacement::Sharded {
+                        model: mi,
+                        devices: subset,
+                        result,
+                    });
+                    return Some(());
+                }
+            }
+            None // the model meets the SLO nowhere: the fleet is infeasible
+        }
+        FleetObjective::MaxAggregateThroughput => {
+            // Best feasible solo on a free device.
+            let best_solo = free
+                .iter()
+                .filter_map(|&d| solo[mi][d].as_ref().map(|r| (r.throughput, d, r.clone())))
+                .max_by(|a, b| {
+                    a.0.partial_cmp(&b.0)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(b.1.cmp(&a.1))
+                });
+            if let Some((_, d, result)) = best_solo {
+                placements.push(FleetPlacement::Solo { model: mi, device: d, result });
+                return Some(());
+            }
+            // No single free board fits it: smallest feasible shard, best θ.
+            for k in 2..=free.len() {
+                let subsets = combinations(&free, k);
+                let evals = parallel_cases(&subsets, |_, subset| {
+                    let devs: Vec<Device> = subset.iter().map(|&d| devices[d].clone()).collect();
+                    cache.explore_partitioned(&networks[mi], &devs, None, cfg).0
+                });
+                let best = subsets
+                    .iter()
+                    .zip(evals)
+                    .filter_map(|(subset, r)| r.map(|r| (r.throughput, subset.clone(), r)))
+                    .max_by(|a, b| {
+                        a.0.partial_cmp(&b.0)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(b.1.cmp(&a.1))
+                    });
+                if let Some((_, subset, result)) = best {
+                    placements.push(FleetPlacement::Sharded {
+                        model: mi,
+                        devices: subset,
+                        result,
+                    });
+                    return Some(());
+                }
+            }
+            // No free board works (or none are left): co-locate onto the
+            // group with the best marginal aggregate θ.
+            if let Some((at, models, device, result)) =
+                best_colocate(cache, networks, devices, cfg, mi, placements, |grown| {
+                    Some(grown.aggregate_throughput())
+                })
+            {
+                placements[at] = FleetPlacement::Colocated { models, device, result };
+                return Some(());
+            }
+            None
+        }
+    }
+}
+
+/// Evaluate growing every colocatable group (a solo placement or an existing
+/// co-location — a sharded chain cannot take tenants) by model `mi`, scored
+/// by `score` (`None` = disqualified). Returns the winning
+/// `(placement index, grown model list, device, result)`; ties go to the
+/// lowest device index. Group evaluations fan across cores.
+fn best_colocate(
+    cache: &DesignCache,
+    networks: &[Network],
+    devices: &[Device],
+    cfg: &DseConfig,
+    mi: usize,
+    placements: &[FleetPlacement],
+    score: impl Fn(&ColocatedResult) -> Option<f64>,
+) -> Option<(usize, Vec<usize>, usize, ColocatedResult)> {
+    let groups: Vec<(usize, Vec<usize>, usize)> = placements
+        .iter()
+        .enumerate()
+        .filter_map(|(at, p)| match p {
+            FleetPlacement::Solo { model, device, .. } => Some((at, vec![*model], *device)),
+            FleetPlacement::Colocated { models, device, .. } => {
+                Some((at, models.clone(), *device))
+            }
+            FleetPlacement::Sharded { .. } => None,
+        })
+        .collect();
+    let evals = parallel_cases(&groups, |_, (_, models, device)| {
+        let mut tenants: Vec<Network> = models.iter().map(|&i| networks[i].clone()).collect();
+        tenants.push(networks[mi].clone());
+        cache.explore_colocated(&tenants, &devices[*device], cfg).0
+    });
+    groups
+        .into_iter()
+        .zip(evals)
+        .filter_map(|((at, mut models, device), r)| {
+            let r = r?;
+            let s = score(&r)?;
+            models.push(mi);
+            Some((s, at, models, device, r))
+        })
+        .max_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(b.3.cmp(&a.3)) // tie: lowest device index
+        })
+        .map(|(_, at, models, device, r)| (at, models, device, r))
+}
+
+/// MaxAggregateThroughput improvement pass: while free devices remain, widen
+/// the lowest-θ solo/sharded placement onto one more free device (best
+/// extension wins); stop as soon as widening no longer improves its θ.
+fn improve(
+    cache: &DesignCache,
+    networks: &[Network],
+    devices: &[Device],
+    cfg: &DseConfig,
+    placements: &mut [FleetPlacement],
+) {
+    loop {
+        let free = free_devices(placements, devices.len());
+        if free.is_empty() {
+            return;
+        }
+        // The slowest single-model placement is the one more silicon helps.
+        let slowest = placements
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| !matches!(p, FleetPlacement::Colocated { .. }))
+            .min_by(|a, b| {
+                a.1.throughput()
+                    .partial_cmp(&b.1.throughput())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+        let Some((at, current)) = slowest else { return };
+        let (model, mut chain, old_theta) = match current {
+            FleetPlacement::Solo { model, device, result } => {
+                (*model, vec![*device], result.throughput)
+            }
+            FleetPlacement::Sharded { model, devices, result } => {
+                (*model, devices.clone(), result.throughput)
+            }
+            FleetPlacement::Colocated { .. } => unreachable!("filtered above"),
+        };
+        let candidates: Vec<Vec<usize>> = free
+            .iter()
+            .map(|&f| {
+                let mut ext = chain.clone();
+                ext.push(f);
+                ext.sort_unstable(); // chain order = pool order: deterministic
+                ext
+            })
+            .collect();
+        let evals = parallel_cases(&candidates, |_, ext| {
+            let devs: Vec<Device> = ext.iter().map(|&d| devices[d].clone()).collect();
+            cache.explore_partitioned(&networks[model], &devs, None, cfg).0
+        });
+        let best = candidates
+            .into_iter()
+            .zip(evals)
+            .filter_map(|(ext, r)| r.map(|r| (r.throughput, ext, r)))
+            .max_by(|a, b| {
+                a.0.partial_cmp(&b.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.1.cmp(&a.1))
+            });
+        match best {
+            Some((theta, ext, result)) if theta > old_theta => {
+                chain = ext;
+                placements[at] =
+                    FleetPlacement::Sharded { model, devices: chain, result };
+            }
+            _ => return, // widening the bottleneck no longer helps
+        }
+    }
+}
+
+/// Fold committed placements into the result record.
+fn finish(placements: Vec<FleetPlacement>, objective: FleetObjective) -> FleetResult {
+    let mut used = std::collections::HashSet::new();
+    for p in &placements {
+        used.extend(p.device_indices());
+    }
+    let aggregate_throughput = placements.iter().map(FleetPlacement::throughput).sum();
+    FleetResult { devices_used: used.len(), aggregate_throughput, placements, objective }
+}
+
+/// All k-element subsets of `pool`, lexicographic, preserving pool order
+/// inside each subset (pool is ascending, so subsets are chains in pool
+/// order). Fleet pools are small (a handful of boards), so the C(|pool|, k)
+/// blow-up stays trivial.
+fn combinations(pool: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let n = pool.len();
+    let mut out = Vec::new();
+    if k == 0 || k > n {
+        return out;
+    }
+    let mut idx: Vec<usize> = (0..k).collect();
+    loop {
+        out.push(idx.iter().map(|&i| pool[i]).collect());
+        let mut i = k as isize - 1;
+        while i >= 0 && idx[i as usize] == n - k + i as usize {
+            i -= 1;
+        }
+        if i < 0 {
+            return out;
+        }
+        let i = i as usize;
+        idx[i] += 1;
+        for j in i + 1..k {
+            idx[j] = idx[j - 1] + 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{colocate, partition, run};
+    use crate::ir::Quant;
+    use crate::models;
+
+    fn cache() -> DesignCache {
+        DesignCache::new()
+    }
+
+    #[test]
+    fn combinations_are_lexicographic_and_complete() {
+        let pool = [1, 3, 5, 7];
+        let c2 = combinations(&pool, 2);
+        assert_eq!(c2, vec![
+            vec![1, 3], vec![1, 5], vec![1, 7],
+            vec![3, 5], vec![3, 7], vec![5, 7],
+        ]);
+        assert_eq!(combinations(&pool, 4), vec![vec![1, 3, 5, 7]]);
+        assert!(combinations(&pool, 0).is_empty());
+        assert!(combinations(&pool, 5).is_empty());
+    }
+
+    #[test]
+    fn empty_inputs_are_infeasible() {
+        let cfg = DseConfig::default();
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        assert!(fleet_in(&cache(), &[], &[dev.clone()], FleetObjective::MaxAggregateThroughput, &cfg)
+            .is_none());
+        assert!(fleet_in(&cache(), &[net], &[], FleetObjective::MaxAggregateThroughput, &cfg)
+            .is_none());
+    }
+
+    #[test]
+    fn one_by_one_matches_plain_dse() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let r = fleet_in(
+            &cache(),
+            std::slice::from_ref(&net),
+            std::slice::from_ref(&dev),
+            FleetObjective::MaxAggregateThroughput,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(r.placements.len(), 1);
+        assert_eq!(r.devices_used, 1);
+        let direct = run(&net, &dev, &cfg).unwrap();
+        match &r.placements[0] {
+            FleetPlacement::Solo { model: 0, device: 0, result } => {
+                assert_eq!(result.design.cfgs, direct.design.cfgs);
+                assert_eq!(result.design.off_bits, direct.design.off_bits);
+                assert_eq!(result.throughput, direct.throughput);
+            }
+            other => panic!("expected Solo, got {other:?}"),
+        }
+        assert_eq!(r.aggregate_throughput, direct.throughput);
+    }
+
+    #[test]
+    fn one_by_m_matches_partition_of_the_full_chain() {
+        let net = models::resnet18(Quant::W4A5);
+        let devs = [Device::zcu102(), Device::zcu102()];
+        let cfg = DseConfig::default();
+        let r = fleet_in(
+            &cache(),
+            std::slice::from_ref(&net),
+            &devs,
+            FleetObjective::MaxAggregateThroughput,
+            &cfg,
+        )
+        .unwrap();
+        let direct = partition::partition(&net, &devs, &cfg).unwrap();
+        match &r.placements[0] {
+            FleetPlacement::Sharded { model: 0, devices, result } => {
+                assert_eq!(devices, &[0, 1]);
+                assert_eq!(result.cuts, direct.cuts);
+                assert_eq!(result.throughput, direct.throughput);
+            }
+            other => panic!("expected Sharded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn n_by_one_matches_colocate() {
+        let nets = [models::resnet18(Quant::W4A5), models::squeezenet(Quant::W8A8)];
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let r = fleet_in(
+            &cache(),
+            &nets,
+            std::slice::from_ref(&dev),
+            FleetObjective::MaxAggregateThroughput,
+            &cfg,
+        )
+        .unwrap();
+        let direct = colocate::colocate(&nets, &dev, &cfg).unwrap();
+        match &r.placements[0] {
+            FleetPlacement::Colocated { models, device: 0, result } => {
+                assert_eq!(models, &[0, 1]);
+                assert_eq!(result.tenants.len(), direct.tenants.len());
+                for (a, b) in result.tenants.iter().zip(&direct.tenants) {
+                    assert_eq!(a.share, b.share);
+                    assert_eq!(a.result.throughput, b.result.throughput);
+                }
+            }
+            other => panic!("expected Colocated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn two_models_two_boards_go_solo_under_max_aggregate() {
+        let nets = [models::resnet18(Quant::W4A5), models::squeezenet(Quant::W8A8)];
+        let devs = [Device::zcu102(), Device::zc706()];
+        let cfg = DseConfig::default();
+        let c = cache();
+        let r = fleet_in(&c, &nets, &devs, FleetObjective::MaxAggregateThroughput, &cfg).unwrap();
+        assert_eq!(r.placements.len(), 2, "{:?}", r.placements);
+        assert_eq!(r.devices_used, 2);
+        let mut on = [false; 2];
+        for p in &r.placements {
+            match p {
+                FleetPlacement::Solo { device, .. } => on[*device] = true,
+                other => panic!("expected two Solo placements, got {other:?}"),
+            }
+        }
+        assert!(on[0] && on[1], "each board carries one model");
+        // aggregate is the placement sum, and every model is served once
+        let sum: f64 = r.placements.iter().map(FleetPlacement::throughput).sum();
+        assert_eq!(r.aggregate_throughput, sum);
+        assert!(r.placement_of(0).is_some() && r.placement_of(1).is_some());
+    }
+
+    #[test]
+    fn min_devices_colocates_under_a_loose_slo() {
+        let nets = [models::resnet18(Quant::W4A5), models::squeezenet(Quant::W8A8)];
+        let devs = [Device::zcu102(), Device::zcu102()];
+        let cfg = DseConfig::default();
+        let r = fleet_in(
+            &cache(),
+            &nets,
+            &devs,
+            FleetObjective::MinDevicesAtSlo { p99_ms: 1e9 },
+            &cfg,
+        )
+        .unwrap();
+        // a forgiving SLO lets both tenants share one board
+        assert_eq!(r.devices_used, 1, "{:?}", r.placements);
+        assert_eq!(r.placements.len(), 1);
+        assert!(matches!(&r.placements[0], FleetPlacement::Colocated { models, .. }
+            if models.len() == 2));
+    }
+
+    #[test]
+    fn min_devices_unmeetable_slo_is_infeasible() {
+        let nets = [models::resnet18(Quant::W4A5), models::squeezenet(Quant::W8A8)];
+        let devs = [Device::zcu102(), Device::zcu102()];
+        let cfg = DseConfig::default();
+        let r = fleet_in(
+            &cache(),
+            &nets,
+            &devs,
+            FleetObjective::MinDevicesAtSlo { p99_ms: 1e-9 },
+            &cfg,
+        );
+        assert!(r.is_none(), "no deployment can promise a sub-nanosecond p99");
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let nets = [models::resnet18(Quant::W4A5), models::squeezenet(Quant::W8A8)];
+        let devs = [Device::zcu102(), Device::zc706()];
+        let cfg = DseConfig::default();
+        let a = fleet_in(&cache(), &nets, &devs, FleetObjective::MaxAggregateThroughput, &cfg)
+            .unwrap();
+        let b = fleet_in(&cache(), &nets, &devs, FleetObjective::MaxAggregateThroughput, &cfg)
+            .unwrap();
+        assert_eq!(a.placements.len(), b.placements.len());
+        assert_eq!(a.aggregate_throughput, b.aggregate_throughput);
+        for (pa, pb) in a.placements.iter().zip(&b.placements) {
+            assert_eq!(pa.model_indices(), pb.model_indices());
+            assert_eq!(pa.device_indices(), pb.device_indices());
+            assert_eq!(pa.throughput(), pb.throughput());
+        }
+    }
+
+    #[test]
+    fn slo_metric_floors_at_latency_plus_service_period() {
+        assert_eq!(slo_metric(10.0, 100.0), 10.0 + 10.0);
+        assert!(slo_metric(10.0, 0.0).is_infinite());
+        assert!(slo_metric(5.0, 1e9) > 5.0);
+    }
+}

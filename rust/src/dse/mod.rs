@@ -25,6 +25,7 @@ pub mod colocate;
 mod compute_alloc;
 mod design;
 mod exhaustive;
+pub mod fleet;
 mod memory_alloc;
 pub mod partition;
 pub mod reference;
@@ -37,6 +38,7 @@ pub use colocate::{ColocatedResult, TenantPlan};
 pub use compute_alloc::{allocate_compute, increment_unroll};
 pub use design::Design;
 pub use exhaustive::{exhaustive_memory, ExhaustiveResult};
+pub use fleet::{slo_metric, FleetObjective, FleetPlacement, FleetResult};
 pub use memory_alloc::{
     allocate_memory, allocate_memory_warm, delta_bandwidth, delta_bandwidth_by,
     increment_offchip, increment_offchip_by, r_target, rebalance_all, write_burst_balance,

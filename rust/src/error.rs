@@ -21,7 +21,9 @@ pub enum Error {
     /// A request's flattened input length does not match the model's.
     InputLength { model: String, expected: usize, got: usize },
     /// Device name not in the library ([`crate::device::Device::by_name`]).
-    UnknownDevice(String),
+    /// Carries the known board names so a CLI `--devices` typo reports what
+    /// WOULD have worked, not just what didn't.
+    UnknownDevice { name: String, known: Vec<String> },
     /// Quantization label that [`crate::ir::Quant::parse`] rejects.
     UnknownQuant(String),
     /// Filesystem failure with the offending path.
@@ -60,7 +62,9 @@ impl fmt::Display for Error {
             Error::InputLength { model, expected, got } => {
                 write!(f, "model `{model}` expects input length {expected}, got {got}")
             }
-            Error::UnknownDevice(name) => write!(f, "unknown device `{name}`"),
+            Error::UnknownDevice { name, known } => {
+                write!(f, "unknown device `{name}` (known: {})", known.join(", "))
+            }
             Error::UnknownQuant(label) => {
                 write!(f, "unknown quantization `{label}` (w4a4|w4a5|w8a8|f32|w<N>a<M>)")
             }

@@ -8,13 +8,15 @@
 //! autows serve    [--artifact PATH] [--requests N] [--max-batch N] [--workers K]
 //!                 [--dispatch-shards S] [--device D]
 //! autows run      --config configs/resnet18_zcu102.toml
+//! autows dse|simulate|serve --models m1,m2,... --devices d1,d2,...
+//!                 [--objective agg|slo:<ms>]   # fleet placement
 //! ```
 
 use std::collections::HashMap;
 
 use autows::config::RunSpec;
 use autows::coordinator::{BatchPolicy, ServerOptions};
-use autows::dse::{self, DseConfig};
+use autows::dse::{self, DseConfig, FleetObjective};
 use autows::ir::Quant;
 use autows::pipeline::{drive_synthetic, drive_synthetic_tenant, Deployment, EngineSpec};
 use autows::report;
@@ -118,8 +120,9 @@ fn parse_device_chain(args: &Args) -> Result<Option<Vec<String>>, Error> {
 }
 
 /// Parse `--models m1,m2,...` into a tenant list for a co-located
-/// deployment. Rejects combining with `--model` (ambiguous) and with
-/// `--devices` (shard OR co-locate, not both).
+/// deployment. Rejects combining with `--model` (ambiguous). `--models`
+/// together with `--devices` is the fleet mode, handled by [`parse_fleet`]
+/// BEFORE this runs.
 fn parse_model_list(args: &Args) -> Result<Option<Vec<String>>, Error> {
     let Some(list) = args.flags.get("models") else {
         return Ok(None);
@@ -129,7 +132,9 @@ fn parse_model_list(args: &Args) -> Result<Option<Vec<String>>, Error> {
     }
     if args.has("devices") {
         return Err(Error::Usage(
-            "--models co-locates on ONE device; it cannot combine with --devices".to_string(),
+            "--models co-locates on ONE device; combine with --devices only via the fleet \
+             mode (both flags at once place N models onto the pool)"
+                .to_string(),
         ));
     }
     let names: Vec<String> = list
@@ -141,6 +146,84 @@ fn parse_model_list(args: &Args) -> Result<Option<Vec<String>>, Error> {
         return Err(Error::Usage("--models: empty model list".to_string()));
     }
     Ok(Some(names))
+}
+
+/// Fleet mode: `--models m1,m2,...` together with `--devices d1,d2,...`
+/// places the model set onto the device pool (the N×M generalization of
+/// sharding and co-location). Checked BEFORE the narrower parsers so the
+/// flag combination routes here instead of being rejected.
+fn parse_fleet(args: &Args) -> Result<Option<(Vec<String>, Vec<String>)>, Error> {
+    let (Some(models), Some(devices)) = (args.flags.get("models"), args.flags.get("devices"))
+    else {
+        return Ok(None);
+    };
+    if args.has("model") {
+        return Err(Error::Usage("give either --model or --models, not both".to_string()));
+    }
+    if args.has("device") {
+        return Err(Error::Usage("give either --device or --devices, not both".to_string()));
+    }
+    let split = |list: &str, what: &str| -> Result<Vec<String>, Error> {
+        let names: Vec<String> = list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if names.is_empty() {
+            return Err(Error::Usage(format!("--{what}: empty list")));
+        }
+        Ok(names)
+    };
+    Ok(Some((split(models, "models")?, split(devices, "devices")?)))
+}
+
+/// Parse `--objective agg` / `--objective slo:<ms>` into a
+/// [`FleetObjective`] (default: maximize aggregate throughput).
+fn parse_objective(args: &Args) -> Result<FleetObjective, Error> {
+    let Some(v) = args.flags.get("objective") else {
+        return Ok(FleetObjective::MaxAggregateThroughput);
+    };
+    if v == "agg" || v == "max-aggregate-throughput" {
+        return Ok(FleetObjective::MaxAggregateThroughput);
+    }
+    if let Some(ms) = v.strip_prefix("slo:") {
+        let p99_ms: f64 = ms
+            .parse()
+            .map_err(|_| Error::Usage(format!("--objective slo:<ms>: cannot parse `{ms}`")))?;
+        if p99_ms <= 0.0 {
+            return Err(Error::Usage(
+                "--objective slo:<ms>: the SLO must be positive".to_string(),
+            ));
+        }
+        return Ok(FleetObjective::MinDevicesAtSlo { p99_ms });
+    }
+    Err(Error::Usage(format!("--objective: `{v}` is not `agg` or `slo:<ms>`")))
+}
+
+/// Reject a stray `--objective` outside fleet mode (it would silently do
+/// nothing).
+fn reject_objective(args: &Args) -> Result<(), Error> {
+    if args.has("objective") {
+        return Err(Error::Usage(
+            "--objective applies to fleet placement (--models together with --devices)"
+                .to_string(),
+        ));
+    }
+    Ok(())
+}
+
+/// The fleet stage-0 builder for `--models` × `--devices` (every model
+/// shares the one `--quant` the CLI takes).
+fn fleet_builder(
+    models: &[String],
+    devices: &[String],
+    quant: Quant,
+) -> Result<autows::pipeline::FleetPlanned, Error> {
+    let pool: Vec<&str> = devices.iter().map(String::as_str).collect();
+    Deployment::fleet(
+        models.iter().map(|m| Deployment::for_model(m.as_str()).quant(quant)),
+        &pool,
+    )
 }
 
 /// The co-located stage-0 builder for a `--models` tenant list (every
@@ -188,7 +271,16 @@ const USAGE: &str = "usage: autows <report|dse|simulate|serve|run> [options]
   dse/simulate/serve also accept --devices d1,d2,... to shard the model
   across a chain of devices (e.g. --devices zcu102,zcu102), or
   --models m1,m2,... to co-locate several models on the ONE --device
-  (e.g. --models resnet18,squeezenet --device zcu102).";
+  (e.g. --models resnet18,squeezenet --device zcu102).
+
+  --models AND --devices together is the FLEET mode: place N models onto
+  the device pool (per model: solo, sharded, or co-located), optionally
+  under --objective agg (default, max aggregate throughput) or
+  --objective slo:<ms> (fewest devices meeting a p99 SLO), e.g.
+  autows dse --models resnet50,resnet18,squeezenet \\
+             --devices zc706,zcu102,zcu102 --quant w8a8 --objective slo:50
+  serve routes fleet requests through one router (least outstanding
+  requests across replicas) and reports per-model rollups.";
 
 fn main() {
     if let Err(e) = run_cli() {
@@ -219,6 +311,7 @@ fn run_cli() -> Result<(), Error> {
                 val("phi"),
                 val("mu"),
                 val("save"),
+                val("objective"),
                 bool_flag("vanilla"),
                 bool_flag("warm"),
                 bool_flag("tech"),
@@ -236,6 +329,7 @@ fn run_cli() -> Result<(), Error> {
                 val("batch"),
                 val("design"),
                 val("json"),
+                val("objective"),
             ],
         )?),
         "serve" => cmd_serve(&Args::parse(
@@ -251,6 +345,7 @@ fn run_cli() -> Result<(), Error> {
                 val("devices"),
                 val("models"),
                 val("quant"),
+                val("objective"),
             ],
         )?),
         "run" => cmd_run(&Args::parse("run", rest, &[val("config")])?),
@@ -309,6 +404,30 @@ fn cmd_dse(args: &Args) -> Result<(), Error> {
         .with_mu(args.get_num("mu", 512u64)?)
         .with_streaming(!args.has("vanilla"))
         .with_warm_start(args.has("warm"));
+
+    if let Some((models, pool)) = parse_fleet(args)? {
+        if args.has("save") || args.has("tech") {
+            return Err(Error::Usage(
+                "--save and --tech are single-model options (not valid with --models)"
+                    .to_string(),
+            ));
+        }
+        let objective = parse_objective(args)?;
+        let plan = fleet_builder(&models, &pool, quant)?.with_objective(objective);
+        match plan.explore(&cfg) {
+            Err(e) if e.is_infeasible() => {
+                println!(
+                    "INFEASIBLE: [{}] do not place on [{}] (vanilla={})",
+                    models.join(", "),
+                    pool.join(", "),
+                    args.has("vanilla")
+                );
+            }
+            other => print!("{}", other?.schedule().report()),
+        }
+        return Ok(());
+    }
+    reject_objective(args)?;
 
     if let Some(models) = parse_model_list(args)? {
         if args.has("save") || args.has("tech") {
@@ -397,6 +516,84 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
     let quant = parse_quant(&args.get("quant", "w4a5"))?;
     let batch: u64 = args.get_num("batch", 1u64)?;
     let json_path = args.flags.get("json").cloned();
+
+    if let Some((models, pool)) = parse_fleet(args)? {
+        if args.has("design") {
+            return Err(Error::Usage(
+                "--design checkpoints are single-model (not valid with --models)".to_string(),
+            ));
+        }
+        let objective = parse_objective(args)?;
+        let scheduled = fleet_builder(&models, &pool, quant)?
+            .with_objective(objective)
+            .explore(&DseConfig::default())?
+            .schedule_for_batch(batch);
+        let sim = scheduled.simulate(&SimConfig { batch, ..Default::default() });
+        print!("{}", scheduled.report());
+        println!(
+            "fleet sim batch={batch}: makespan={:.3} ms, stalls={:.1} us",
+            sim.makespan_s * 1e3,
+            sim.total_stall_s * 1e6
+        );
+        if let Some(path) = json_path {
+            let names = scheduled.model_names();
+            let objective_label = match scheduled.result().objective {
+                FleetObjective::MaxAggregateThroughput => {
+                    "max-aggregate-throughput".to_string()
+                }
+                FleetObjective::MinDevicesAtSlo { p99_ms } => format!("slo:{p99_ms}"),
+            };
+            let placements: Vec<String> = scheduled
+                .placements()
+                .iter()
+                .zip(&sim.per_placement)
+                .map(|(p, ps)| {
+                    let label: Vec<&str> =
+                        p.model_indices().iter().map(|&m| names[m].as_str()).collect();
+                    let devs: Vec<String> = p
+                        .device_indices()
+                        .iter()
+                        .map(|&d| format!("\"{}\"", json_escape(scheduled.devices()[d].name)))
+                        .collect();
+                    format!(
+                        "{{\"model\":\"{}\",\"mode\":\"{}\",\"devices\":[{}],\
+                         \"throughput_rps\":{},\"makespan_ms\":{},\"stall_us\":{}}}",
+                        json_escape(&label.join("+")),
+                        p.mode(),
+                        devs.join(","),
+                        jnum(p.throughput()),
+                        jnum(ps.makespan_s() * 1e3),
+                        jnum(ps.total_stall_s() * 1e6)
+                    )
+                })
+                .collect();
+            let model_names: Vec<String> =
+                names.iter().map(|m| format!("\"{}\"", json_escape(m))).collect();
+            let pool_names: Vec<String> = scheduled
+                .devices()
+                .iter()
+                .map(|d| format!("\"{}\"", json_escape(d.name)))
+                .collect();
+            let doc = format!(
+                "{{\"mode\":\"fleet\",\"models\":[{}],\"quant\":\"{}\",\"devices\":[{}],\
+                 \"objective\":\"{}\",\"batch\":{},\"aggregate_throughput_rps\":{},\
+                 \"devices_used\":{},\"makespan_ms\":{},\"stall_us\":{},\"placements\":[{}]}}\n",
+                model_names.join(","),
+                quant,
+                pool_names.join(","),
+                objective_label,
+                batch,
+                jnum(scheduled.result().aggregate_throughput),
+                scheduled.result().devices_used,
+                jnum(sim.makespan_s * 1e3),
+                jnum(sim.total_stall_s * 1e6),
+                placements.join(",")
+            );
+            write_json_summary(&path, &doc)?;
+        }
+        return Ok(());
+    }
+    reject_objective(args)?;
 
     if let Some(models) = parse_model_list(args)? {
         if args.has("design") {
@@ -575,6 +772,56 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
     let dispatch_shards: usize = args.get_num("dispatch-shards", 0usize)?;
     let device = args.get("device", "zcu102");
     let opts = ServerOptions { workers, dispatch_shards, ..Default::default() };
+
+    if let Some((models, pool)) = parse_fleet(args)? {
+        if args.has("artifact") {
+            return Err(Error::Usage(
+                "--artifact serving is single-model; fleet serving runs sim-only engines \
+                 behind the router"
+                    .to_string(),
+            ));
+        }
+        let quant = parse_quant(&args.get("quant", "w8a8"))?;
+        let objective = parse_objective(args)?;
+        let scheduled = fleet_builder(&models, &pool, quant)?
+            .with_objective(objective)
+            .explore(&DseConfig::default())?
+            .schedule_for_batch(max_batch as u64);
+        let router = scheduled.serve(
+            BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
+            opts,
+        )?;
+        let t0 = std::time::Instant::now();
+        for name in scheduled.model_names() {
+            let input_len = scheduled.input_len(name).expect("names come from the plan");
+            let mut pending = Vec::with_capacity(requests);
+            for _ in 0..requests {
+                pending.push(router.submit(name, vec![0.5; input_len])?);
+            }
+            for rx in pending {
+                rx.recv()
+                    .map_err(|_| Error::Serve("router: reply channel dropped".to_string()))??;
+            }
+        }
+        let elapsed = t0.elapsed();
+        println!(
+            "{} requests x {} models across {} devices in {:.1} ms:",
+            requests,
+            models.len(),
+            scheduled.result().devices_used,
+            elapsed.as_secs_f64() * 1e3
+        );
+        for name in scheduled.model_names() {
+            let m = router.model_metrics(name).expect("routed above");
+            println!(
+                "  {name}: throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+                m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
+            );
+        }
+        router.shutdown();
+        return Ok(());
+    }
+    reject_objective(args)?;
 
     if let Some(models) = parse_model_list(args)? {
         if args.has("artifact") {

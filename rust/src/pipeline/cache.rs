@@ -27,7 +27,8 @@ use std::sync::{Mutex, OnceLock};
 
 use crate::device::Device;
 use crate::dse::{
-    self, colocate, partition, ColocatedResult, DseConfig, DseResult, PartitionedResult,
+    self, colocate, fleet, partition, ColocatedResult, DseConfig, DseResult, FleetObjective,
+    FleetResult, PartitionedResult,
 };
 use crate::ir::Network;
 
@@ -44,16 +45,21 @@ pub struct CacheStats {
 }
 
 /// Memoization table for DSE outcomes, keyed by design-point content.
-/// Single-device, partitioned (multi-device) and co-located (multi-tenant)
-/// outcomes live in separate maps under disjoint key schemas — a
-/// 1-partition deployment, a 1-tenant co-location and the plain
-/// single-device deployment of the same content never collide, and a
-/// cached infeasible on one layout cannot leak to another.
+/// Single-device, partitioned (multi-device), co-located (multi-tenant) and
+/// fleet (multi-model × multi-device) outcomes live in separate maps under
+/// disjoint key schemas — a 1-partition deployment, a 1-tenant co-location,
+/// a 1×1 fleet and the plain single-device deployment of the same content
+/// never collide, and a cached infeasible on one layout cannot leak to
+/// another. A fleet lookup's *sub-evaluations* (each candidate solo, shard
+/// or co-location the placement search probes) land in the first three maps
+/// under their own schemas, so fleets share design points with the plain
+/// pipelines; the fourth map stores only whole placement outcomes.
 #[derive(Debug, Default)]
 pub struct DesignCache {
     map: Mutex<HashMap<String, Option<DseResult>>>,
     parts: Mutex<HashMap<String, Option<PartitionedResult>>>,
     colo: Mutex<HashMap<String, Option<ColocatedResult>>>,
+    fleet: Mutex<HashMap<String, Option<FleetResult>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -160,6 +166,39 @@ impl DesignCache {
         k
     }
 
+    /// Content key of a fleet design point: the **full model list** and the
+    /// **full device pool** (count and order matter on both sides — the pool
+    /// order is the chain order shard candidates are drawn in) plus the
+    /// placement objective and the config. The `|fleet|` prefix and the
+    /// objective tag keep this schema disjoint from the other three: a 1×1
+    /// fleet never answers (or is answered by) the single-device key of the
+    /// same content.
+    pub fn fleet_key(
+        networks: &[Network],
+        devices: &[Device],
+        objective: FleetObjective,
+        cfg: &DseConfig,
+    ) -> String {
+        let mut k = String::with_capacity(1024);
+        let _ = write!(k, "|fleet|nmod={}", networks.len());
+        for network in networks {
+            k.push('|');
+            k.push_str(&crate::ir::serialize_network(network));
+        }
+        let _ = write!(k, "|ndev={}", devices.len());
+        for device in devices {
+            Self::push_device(&mut k, device);
+        }
+        match objective {
+            FleetObjective::MaxAggregateThroughput => k.push_str("|obj=agg"),
+            FleetObjective::MinDevicesAtSlo { p99_ms } => {
+                let _ = write!(k, "|obj=slo:{:x}", p99_ms.to_bits());
+            }
+        }
+        Self::push_cfg(&mut k, cfg);
+        k
+    }
+
     /// Return the cached outcome for this design point, running the DSE on a
     /// miss. The boolean is `true` when the result came from the cache.
     pub fn explore(
@@ -226,6 +265,33 @@ impl DesignCache {
         (result, false)
     }
 
+    /// Return the cached fleet outcome for this (model list, device pool,
+    /// objective) point, running the placement search on a miss. The search's
+    /// sub-evaluations go through `self` too (same instance — see
+    /// [`crate::dse::fleet::fleet_in`]), so candidate solo/shard/co-location
+    /// points are shared with the plain pipelines while the whole-fleet
+    /// outcome memoizes here. The boolean is `true` when the result came
+    /// from the cache.
+    pub fn explore_fleet(
+        &self,
+        networks: &[Network],
+        devices: &[Device],
+        objective: FleetObjective,
+        cfg: &DseConfig,
+    ) -> (Option<FleetResult>, bool) {
+        let key = Self::fleet_key(networks, devices, objective, cfg);
+        if let Some(found) = self.fleet.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (found.clone(), true);
+        }
+        // run outside the lock, like the other three paths (the nested
+        // sub-lookups take the other maps' locks, never this one)
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let result = fleet::fleet_in(self, networks, devices, objective, cfg);
+        self.fleet.lock().unwrap().entry(key).or_insert_with(|| result.clone());
+        (result, false)
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -239,12 +305,14 @@ impl DesignCache {
         self.map.lock().unwrap().clear();
         self.parts.lock().unwrap().clear();
         self.colo.lock().unwrap().clear();
+        self.fleet.lock().unwrap().clear();
     }
 
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
             + self.parts.lock().unwrap().len()
             + self.colo.lock().unwrap().len()
+            + self.fleet.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -384,6 +452,82 @@ mod tests {
         assert!(!cc);
         assert_eq!(c.unwrap().tenants.len(), 1);
         assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn fleet_key_separates_content_and_never_collides_with_other_schemas() {
+        let a = models::toy_cnn(Quant::W8A8);
+        let b = models::squeezenet(Quant::W8A8);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let agg = FleetObjective::MaxAggregateThroughput;
+        let one = DesignCache::fleet_key(
+            std::slice::from_ref(&a),
+            std::slice::from_ref(&dev),
+            agg,
+            &cfg,
+        );
+        // the 1×1 fleet key never collides with the single-device key, the
+        // 1-partition key or the 1-tenant colocated key of the same content
+        assert_ne!(one, DesignCache::key(&a, &dev, &cfg));
+        assert_ne!(one, DesignCache::multi_key(&a, std::slice::from_ref(&dev), None, &cfg));
+        assert_ne!(one, DesignCache::colo_key(std::slice::from_ref(&a), &dev, &cfg));
+        // model list, pool, objective and config are all content
+        let two = DesignCache::fleet_key(&[a.clone(), b.clone()], &[dev.clone(), dev.clone()], agg, &cfg);
+        assert_ne!(one, two);
+        assert_ne!(
+            two,
+            DesignCache::fleet_key(&[b.clone(), a.clone()], &[dev.clone(), dev.clone()], agg, &cfg)
+        );
+        assert_ne!(
+            two,
+            DesignCache::fleet_key(&[a.clone(), b.clone()], std::slice::from_ref(&dev), agg, &cfg)
+        );
+        assert_ne!(
+            two,
+            DesignCache::fleet_key(
+                &[a.clone(), b.clone()],
+                &[dev.clone(), dev.clone()],
+                FleetObjective::MinDevicesAtSlo { p99_ms: 50.0 },
+                &cfg
+            )
+        );
+        assert_ne!(
+            DesignCache::fleet_key(
+                &[a.clone(), b.clone()],
+                &[dev.clone(), dev.clone()],
+                FleetObjective::MinDevicesAtSlo { p99_ms: 50.0 },
+                &cfg
+            ),
+            DesignCache::fleet_key(
+                &[a.clone(), b.clone()],
+                &[dev.clone(), dev.clone()],
+                FleetObjective::MinDevicesAtSlo { p99_ms: 60.0 },
+                &cfg
+            )
+        );
+        assert_ne!(two, DesignCache::fleet_key(&[a, b], &[dev.clone(), dev], agg, &cfg.with_batch(8)));
+    }
+
+    #[test]
+    fn fleet_outcomes_are_cached_and_subevals_share_the_other_maps() {
+        let nets = [models::toy_cnn(Quant::W8A8), models::squeezenet(Quant::W8A8)];
+        let devs = [Device::zcu102(), Device::zc706()];
+        let cfg = DseConfig::default();
+        let cache = DesignCache::new();
+        let agg = FleetObjective::MaxAggregateThroughput;
+        let (a, ca) = cache.explore_fleet(&nets, &devs, agg, &cfg);
+        let (b, cb) = cache.explore_fleet(&nets, &devs, agg, &cfg);
+        assert!(!ca && cb, "second lookup of the same fleet point must hit");
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.placements.len(), b.placements.len());
+        assert_eq!(a.aggregate_throughput, b.aggregate_throughput);
+        // the placement search's solo-matrix probes landed in the
+        // single-device map: re-probing one is a hit, not a miss
+        let before = cache.stats();
+        let (_, hit) = cache.explore(&nets[0], &devs[0], &cfg);
+        assert!(hit, "fleet sub-evaluations must populate the single-device schema");
+        assert_eq!(cache.stats().hits, before.hits + 1);
     }
 
     #[test]

@@ -1,0 +1,554 @@
+//! The fleet deployment stages: `FleetPlanned` → `FleetExplored` →
+//! `FleetScheduled`.
+//!
+//! Mirrors the single-device staged builder one-to-one —
+//! [`Deployment::fleet`](super::Deployment::fleet) takes N models AND M
+//! devices at once, then `explore` (the placement search of
+//! [`crate::dse::fleet`], through the design cache), then `schedule` (the
+//! placement-appropriate schedule per decision: one burst schedule for a
+//! solo model, one per partition for a shard, a shared-port composition for
+//! a co-located group), then the terminals `simulate` (per-device sims +
+//! fleet rollup) / `report` (the placement table) / `serve` (every
+//! per-device stack behind one [`Router`]).
+//!
+//! The degenerate shapes stay bit-identical to the narrower builders
+//! (1×1 ≡ `on_device`, 1×M ≡ `on_devices`, N×1 ≡ `colocate` — enforced by
+//! `tests/fleet_deploy.rs`), so `fleet` is a strict superset: the unit of
+//! deployment stops being a device and becomes a cluster.
+
+use crate::coordinator::{
+    BatchPolicy, ChainedEngine, ModelEntry, ModelRegistry, Router, Server, ServerOptions,
+    SimOnlyEngine,
+};
+use crate::device::Device;
+use crate::dse::{fleet, Design, DseConfig, FleetObjective, FleetPlacement, FleetResult};
+use crate::error::Error;
+use crate::ir::Network;
+use crate::schedule::{BurstSchedule, SharedDmaSchedule};
+use crate::sim::{
+    simulate, simulate_colocated, simulate_partitioned, ColocatedSimResult,
+    PartitionedSimResult, SimConfig, SimResult,
+};
+
+use super::cache::{design_cache, DesignCache};
+use super::stages::{Deployment, IntoDevice};
+
+/// Flattened per-sample input length of a design's network.
+fn input_len_of(design: &Design) -> usize {
+    let (c, h, w) = design.network.input_shape;
+    (c as usize) * (h as usize) * (w as usize)
+}
+
+/// Stage 1 (fleet) — N models resolved against an M-device pool, ready for
+/// the placement search. Created by [`Deployment::fleet`]; the objective
+/// defaults to [`FleetObjective::MaxAggregateThroughput`] and is swapped
+/// with [`FleetPlanned::with_objective`].
+#[derive(Debug, Clone)]
+pub struct FleetPlanned {
+    networks: Vec<Network>,
+    devices: Vec<Device>,
+    objective: FleetObjective,
+}
+
+impl FleetPlanned {
+    /// Resolve the model list and device pool eagerly (the
+    /// [`Deployment::fleet`] entry point). Model names must be unique — the
+    /// router routes by name, so a duplicate is a typed
+    /// [`Error::DuplicateModel`] here, not a surprise at `.serve`.
+    pub(super) fn plan<D: IntoDevice + Clone>(
+        models: Vec<Deployment>,
+        devices: &[D],
+    ) -> Result<FleetPlanned, Error> {
+        if models.is_empty() {
+            return Err(Error::Usage("fleet: the model list is empty".to_string()));
+        }
+        if devices.is_empty() {
+            return Err(Error::Usage("fleet: the device pool is empty".to_string()));
+        }
+        let devices: Vec<Device> = devices
+            .iter()
+            .cloned()
+            .map(IntoDevice::resolve)
+            .collect::<Result<_, _>>()?;
+        let networks: Vec<Network> = models
+            .into_iter()
+            .map(Deployment::into_network)
+            .collect::<Result<_, _>>()?;
+        for (i, net) in networks.iter().enumerate() {
+            if networks[..i].iter().any(|n| n.name == net.name) {
+                return Err(Error::DuplicateModel(net.name.clone()));
+            }
+        }
+        Ok(FleetPlanned {
+            networks,
+            devices,
+            objective: FleetObjective::MaxAggregateThroughput,
+        })
+    }
+
+    /// Build a fleet plan directly from parts.
+    pub fn from_parts(networks: Vec<Network>, devices: Vec<Device>) -> FleetPlanned {
+        assert!(!networks.is_empty(), "a fleet needs at least one model");
+        assert!(!devices.is_empty(), "a fleet needs at least one device");
+        FleetPlanned { networks, devices, objective: FleetObjective::MaxAggregateThroughput }
+    }
+
+    /// Swap the placement objective (default
+    /// [`FleetObjective::MaxAggregateThroughput`]).
+    pub fn with_objective(mut self, objective: FleetObjective) -> FleetPlanned {
+        self.objective = objective;
+        self
+    }
+
+    pub fn networks(&self) -> &[Network] {
+        &self.networks
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    pub fn objective(&self) -> FleetObjective {
+        self.objective
+    }
+
+    fn infeasible(&self, cfg: &DseConfig) -> Error {
+        let models: Vec<&str> = self.networks.iter().map(|n| n.name.as_str()).collect();
+        let pool: Vec<&str> = self.devices.iter().map(|d| d.name).collect();
+        Error::Infeasible {
+            model: models.join("+"),
+            device: pool.join("+"),
+            vanilla: !cfg.allow_streaming,
+        }
+    }
+
+    /// Run the placement search through the process-wide
+    /// [design cache](design_cache).
+    pub fn explore(self, cfg: &DseConfig) -> Result<FleetExplored, Error> {
+        self.explore_in(design_cache(), cfg)
+    }
+
+    /// [`FleetPlanned::explore`] with [`DseConfig::default`].
+    pub fn explore_default(self) -> Result<FleetExplored, Error> {
+        self.explore(&DseConfig::default())
+    }
+
+    /// [`FleetPlanned::explore`] against a caller-owned cache.
+    pub fn explore_in(self, cache: &DesignCache, cfg: &DseConfig) -> Result<FleetExplored, Error> {
+        let (outcome, cached) =
+            cache.explore_fleet(&self.networks, &self.devices, self.objective, cfg);
+        match outcome {
+            Some(outcome) => Ok(FleetExplored {
+                names: self.networks.iter().map(|n| n.name.clone()).collect(),
+                outcome,
+                devices: self.devices,
+                cfg: *cfg,
+                cached,
+            }),
+            None => Err(self.infeasible(cfg)),
+        }
+    }
+
+    /// Run the search bypassing the cache maps (benchmarks, isolation
+    /// tests). Sub-evaluations still share a fresh private cache so the
+    /// search's internal re-probes stay memoized.
+    pub fn explore_uncached(self, cfg: &DseConfig) -> Result<FleetExplored, Error> {
+        let scratch = DesignCache::new();
+        match fleet::fleet_in(&scratch, &self.networks, &self.devices, self.objective, cfg) {
+            Some(outcome) => Ok(FleetExplored {
+                names: self.networks.iter().map(|n| n.name.clone()).collect(),
+                outcome,
+                devices: self.devices,
+                cfg: *cfg,
+                cached: false,
+            }),
+            None => Err(self.infeasible(cfg)),
+        }
+    }
+}
+
+/// Stage 2 (fleet) — a feasible placement of every model with its
+/// solo/sharded/co-located design outcomes.
+#[derive(Debug, Clone)]
+pub struct FleetExplored {
+    outcome: FleetResult,
+    /// Model names by input index (placements refer to models by index; a
+    /// shard's subnetwork names mangle the original, so the plan keeps it).
+    names: Vec<String>,
+    devices: Vec<Device>,
+    cfg: DseConfig,
+    cached: bool,
+}
+
+impl FleetExplored {
+    pub fn result(&self) -> &FleetResult {
+        &self.outcome
+    }
+
+    pub fn placements(&self) -> &[FleetPlacement] {
+        &self.outcome.placements
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    /// Model names in input order (placements index into this).
+    pub fn model_names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn config(&self) -> &DseConfig {
+        &self.cfg
+    }
+
+    /// `true` when the whole placement came from the design cache (no
+    /// search ran).
+    pub fn was_cached(&self) -> bool {
+        self.cached
+    }
+
+    /// Derive each placement's schedule for the batch size the DSE planned
+    /// for.
+    pub fn schedule(self) -> FleetScheduled {
+        let batch = self.cfg.batch;
+        self.schedule_for_batch(batch)
+    }
+
+    /// [`FleetExplored::schedule`] for an explicit serving batch size: one
+    /// [`BurstSchedule`] for a solo placement, one per partition for a
+    /// shard, a [`SharedDmaSchedule`] composition for a co-located group —
+    /// exactly what the narrower builders derive for the same outcome.
+    pub fn schedule_for_batch(self, batch: u64) -> FleetScheduled {
+        let schedules = self
+            .outcome
+            .placements
+            .iter()
+            .map(|p| match p {
+                FleetPlacement::Solo { device, result, .. } => PlacementSchedule::Solo(
+                    BurstSchedule::from_design(&result.design, &self.devices[*device], batch),
+                ),
+                FleetPlacement::Sharded { result, .. } => PlacementSchedule::Sharded(
+                    result
+                        .parts
+                        .iter()
+                        .map(|p| BurstSchedule::from_design(&p.result.design, &p.device, batch))
+                        .collect(),
+                ),
+                FleetPlacement::Colocated { device, result, .. } => {
+                    let tenants: Vec<(&str, f64, &Design, &Device)> = result
+                        .tenants
+                        .iter()
+                        .map(|t| (t.name.as_str(), t.share, &t.result.design, &t.view))
+                        .collect();
+                    PlacementSchedule::Colocated(SharedDmaSchedule::compose(
+                        &tenants,
+                        &self.devices[*device],
+                        batch,
+                    ))
+                }
+            })
+            .collect();
+        FleetScheduled {
+            outcome: self.outcome,
+            names: self.names,
+            devices: self.devices,
+            schedules,
+            output_len: 10,
+        }
+    }
+}
+
+/// The placement-appropriate schedule of one [`FleetPlacement`].
+#[derive(Debug, Clone)]
+pub enum PlacementSchedule {
+    /// One burst schedule (solo placement).
+    Solo(BurstSchedule),
+    /// One burst schedule per partition, in chain order (sharded placement).
+    Sharded(Vec<BurstSchedule>),
+    /// The shared-DMA-port composition of every tenant's burst schedule
+    /// (co-located placement).
+    Colocated(SharedDmaSchedule),
+}
+
+/// One placement's simulation outcome inside a [`FleetSimReport`].
+#[derive(Debug, Clone)]
+pub enum PlacementSim {
+    Solo(SimResult),
+    Sharded(PartitionedSimResult),
+    Colocated(ColocatedSimResult),
+}
+
+impl PlacementSim {
+    pub fn makespan_s(&self) -> f64 {
+        match self {
+            PlacementSim::Solo(r) => r.makespan_s,
+            PlacementSim::Sharded(r) => r.makespan_s,
+            PlacementSim::Colocated(r) => r.makespan_s,
+        }
+    }
+
+    pub fn total_stall_s(&self) -> f64 {
+        match self {
+            PlacementSim::Solo(r) => r.total_stall_s,
+            PlacementSim::Sharded(r) => r.total_stall_s,
+            PlacementSim::Colocated(r) => r.total_stall_s,
+        }
+    }
+}
+
+/// Fleet-level simulation rollup: per-placement sims plus the figures a
+/// cluster operator asks first.
+#[derive(Debug, Clone)]
+pub struct FleetSimReport {
+    /// One simulation per placement, in placement order.
+    pub per_placement: Vec<PlacementSim>,
+    /// Fleet makespan: the slowest placement's makespan (placements run on
+    /// disjoint devices, concurrently).
+    pub makespan_s: f64,
+    /// Total stall time summed over every placement.
+    pub total_stall_s: f64,
+}
+
+/// Stage 3 (fleet) — placements + per-placement schedules: the terminal
+/// fleet artifact. Simulate it, render the placement table, or serve the
+/// whole fleet behind one [`Router`].
+#[derive(Debug, Clone)]
+pub struct FleetScheduled {
+    outcome: FleetResult,
+    names: Vec<String>,
+    devices: Vec<Device>,
+    schedules: Vec<PlacementSchedule>,
+    output_len: usize,
+}
+
+impl FleetScheduled {
+    pub fn result(&self) -> &FleetResult {
+        &self.outcome
+    }
+
+    pub fn placements(&self) -> &[FleetPlacement] {
+        &self.outcome.placements
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    /// Model names in input order (placements index into this).
+    pub fn model_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// One schedule per placement, in placement order.
+    pub fn schedules(&self) -> &[PlacementSchedule] {
+        &self.schedules
+    }
+
+    /// Output vector length of the served checksum engines (default 10).
+    pub fn with_output_len(mut self, output_len: usize) -> FleetScheduled {
+        self.output_len = output_len;
+        self
+    }
+
+    /// Flattened per-sample input length of a model, by name.
+    pub fn input_len(&self, model: &str) -> Option<usize> {
+        let idx = self.names.iter().position(|n| n == model)?;
+        let placement = self.outcome.placement_of(idx)?;
+        match placement {
+            FleetPlacement::Solo { result, .. } => Some(input_len_of(&result.design)),
+            FleetPlacement::Sharded { result, .. } => {
+                Some(input_len_of(&result.parts[0].result.design))
+            }
+            FleetPlacement::Colocated { models, result, .. } => {
+                let t = models.iter().position(|&m| m == idx)?;
+                Some(input_len_of(&result.tenants[t].result.design))
+            }
+        }
+    }
+
+    /// Validate every placement in its own simulator (single-device event
+    /// sim, partitioned chain sim, co-located shared-port sim) and roll the
+    /// fleet figures up.
+    pub fn simulate(&self, cfg: &SimConfig) -> FleetSimReport {
+        let per_placement: Vec<PlacementSim> = self
+            .outcome
+            .placements
+            .iter()
+            .map(|p| match p {
+                FleetPlacement::Solo { device, result, .. } => {
+                    PlacementSim::Solo(simulate(&result.design, &self.devices[*device], cfg))
+                }
+                FleetPlacement::Sharded { result, .. } => {
+                    let refs: Vec<(&Design, &Device)> =
+                        result.parts.iter().map(|p| (&p.result.design, &p.device)).collect();
+                    PlacementSim::Sharded(simulate_partitioned(&refs, cfg))
+                }
+                FleetPlacement::Colocated { device, result, .. } => {
+                    let stages: Vec<(&str, &Design, &Device)> = result
+                        .tenants
+                        .iter()
+                        .map(|t| (t.name.as_str(), &t.result.design, &t.view))
+                        .collect();
+                    PlacementSim::Colocated(simulate_colocated(
+                        &stages,
+                        &self.devices[*device],
+                        cfg,
+                    ))
+                }
+            })
+            .collect();
+        let makespan_s =
+            per_placement.iter().map(PlacementSim::makespan_s).fold(0.0, f64::max);
+        let total_stall_s = per_placement.iter().map(PlacementSim::total_stall_s).sum();
+        FleetSimReport { per_placement, makespan_s, total_stall_s }
+    }
+
+    /// Names of the devices a placement occupies, in chain order.
+    fn device_names(&self, p: &FleetPlacement) -> String {
+        let names: Vec<&str> =
+            p.device_indices().iter().map(|&d| self.devices[d].name).collect();
+        names.join(", ")
+    }
+
+    /// Human-readable fleet report: the pool header, then the placement
+    /// table — one line per model with its devices, mode, θ and memory
+    /// utilization.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let pool: Vec<&str> = self.devices.iter().map(|d| d.name).collect();
+        let objective = match self.outcome.objective {
+            FleetObjective::MaxAggregateThroughput => "max-aggregate-throughput".to_string(),
+            FleetObjective::MinDevicesAtSlo { p99_ms } => {
+                format!("min-devices-at-slo(p99<={p99_ms:.1} ms)")
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{} models fleet-placed over {} devices [{}] ({objective}): \
+             aggregate θ={:.1} fps, devices used {}/{}",
+            self.names.len(),
+            self.devices.len(),
+            pool.join(", "),
+            self.outcome.aggregate_throughput,
+            self.outcome.devices_used,
+            self.devices.len()
+        );
+        for p in &self.outcome.placements {
+            match p {
+                FleetPlacement::Solo { model, device, result } => {
+                    let dev = &self.devices[*device];
+                    let _ = writeln!(
+                        out,
+                        "  {:<16} solo      on [{}]: θ={:.1} fps, latency={:.2} ms, \
+                         mem {:.0}%",
+                        self.names[*model],
+                        dev.name,
+                        result.throughput,
+                        result.latency_ms,
+                        result.area.mem_utilization(dev) * 100.0
+                    );
+                }
+                FleetPlacement::Sharded { model, result, .. } => {
+                    let _ = writeln!(
+                        out,
+                        "  {:<16} sharded   on [{}]: θ={:.1} fps, latency={:.2} ms, \
+                         cuts={:?}",
+                        self.names[*model],
+                        self.device_names(p),
+                        result.throughput,
+                        result.latency_ms(),
+                        result.cuts
+                    );
+                }
+                FleetPlacement::Colocated { device, result, .. } => {
+                    for t in &result.tenants {
+                        let _ = writeln!(
+                            out,
+                            "  {:<16} colocated on [{}] (share {:.0}%): θ={:.1} fps \
+                             ({:.0}% of solo), mem {:.0}%",
+                            t.name,
+                            self.devices[*device].name,
+                            t.share * 100.0,
+                            t.result.throughput,
+                            t.norm_throughput() * 100.0,
+                            t.result.area.mem_utilization(&t.view) * 100.0
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Boot the whole fleet's serving side behind one [`Router`]: a
+    /// [`Server`] per solo placement (its own engine), a [`Server`] over a
+    /// [`ChainedEngine`] per sharded placement, a [`ModelRegistry`] per
+    /// co-located group — every stack registered under its device label,
+    /// routed by model name.
+    pub fn serve(&self, policy: BatchPolicy, opts: ServerOptions) -> Result<Router, Error> {
+        let mut router = Router::new();
+        for p in &self.outcome.placements {
+            match p {
+                FleetPlacement::Solo { model, device, result } => {
+                    let input_len = input_len_of(&result.design);
+                    let engine = SimOnlyEngine {
+                        design: result.design.clone(),
+                        device: self.devices[*device].clone(),
+                        input_len,
+                        output_len: self.output_len,
+                    };
+                    let server = Server::start_with_opts(
+                        move || Ok(Box::new(engine.clone()) as _),
+                        policy,
+                        opts,
+                    )
+                    .map_err(|e| Error::Serve(e.to_string()))?;
+                    router.add_server(
+                        self.devices[*device].name,
+                        &self.names[*model],
+                        input_len,
+                        server,
+                    );
+                }
+                FleetPlacement::Sharded { model, devices, result } => {
+                    let stages: Vec<(Design, Device)> = result
+                        .parts
+                        .iter()
+                        .map(|p| (p.result.design.clone(), p.device.clone()))
+                        .collect();
+                    let input_len = input_len_of(&result.parts[0].result.design);
+                    let engine = ChainedEngine::new(stages, input_len, self.output_len);
+                    let server = Server::start_with_opts(
+                        move || Ok(Box::new(engine.clone()) as _),
+                        policy,
+                        opts,
+                    )
+                    .map_err(|e| Error::Serve(e.to_string()))?;
+                    let label: Vec<&str> =
+                        devices.iter().map(|&d| self.devices[d].name).collect();
+                    router.add_server(label.join("+"), &self.names[*model], input_len, server);
+                }
+                FleetPlacement::Colocated { device, result, .. } => {
+                    let mut registry = ModelRegistry::new();
+                    for t in &result.tenants {
+                        let input_len = input_len_of(&t.result.design);
+                        let engine = SimOnlyEngine {
+                            design: t.result.design.clone(),
+                            device: t.view.clone(),
+                            input_len,
+                            output_len: self.output_len,
+                        };
+                        registry.register(
+                            ModelEntry { name: t.name.clone(), input_len, policy, options: opts },
+                            move || Ok(Box::new(engine.clone()) as _),
+                        )?;
+                    }
+                    router.add_registry(self.devices[*device].name, registry);
+                }
+            }
+        }
+        Ok(router)
+    }
+}

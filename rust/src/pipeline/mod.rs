@@ -71,6 +71,38 @@
 //! }
 //! ```
 //!
+//! **Fleet deployments** generalize all three: N models placed onto an
+//! M-device pool via [`Deployment::fleet`]. The placement search at
+//! `.explore()` decides per model between solo, sharded and co-located
+//! placement under a [`crate::dse::FleetObjective`] (maximize aggregate
+//! throughput, or meet a p99 SLO on the fewest devices — see
+//! [`crate::dse::fleet`]), `.schedule()` derives the placement-appropriate
+//! schedule per decision, and `.serve` fronts every per-device stack behind
+//! one [`crate::coordinator::Router`]. The degenerate shapes (1×1, 1×M,
+//! N×1) stay bit-identical to the narrower builders:
+//!
+//! ```no_run
+//! use autows::dse::{DseConfig, FleetObjective};
+//! use autows::ir::Quant;
+//! use autows::pipeline::Deployment;
+//!
+//! fn main() -> Result<(), autows::Error> {
+//!     let fleet = Deployment::fleet(
+//!         [
+//!             Deployment::for_model("resnet50").quant(Quant::W8A8),
+//!             Deployment::for_model("resnet18").quant(Quant::W4A5),
+//!             Deployment::for_model("squeezenet").quant(Quant::W8A8),
+//!         ],
+//!         &["zc706", "zcu102", "zcu102"],
+//!     )?                                        // -> FleetPlanned
+//!     .with_objective(FleetObjective::MinDevicesAtSlo { p99_ms: 50.0 })
+//!     .explore(&DseConfig::default())?          // -> FleetExplored (placement search)
+//!     .schedule();                              // -> FleetScheduled
+//!     print!("{}", fleet.report());             // placement table
+//!     Ok(())
+//! }
+//! ```
+//!
 //! Skipping a stage is a *compile* error — `Planned` simply has no
 //! `schedule` method:
 //!
@@ -122,6 +154,7 @@
 
 pub mod cache;
 mod colocated;
+mod fleet;
 mod partitioned;
 mod serve;
 mod stages;
@@ -130,6 +163,10 @@ pub mod sweep;
 pub use cache::{design_cache, CacheStats, DesignCache};
 pub use colocated::{
     ColocatedDeployment, ColocatedExplored, ColocatedPlanned, ColocatedScheduled,
+};
+pub use fleet::{
+    FleetExplored, FleetPlanned, FleetScheduled, FleetSimReport, PlacementSchedule,
+    PlacementSim,
 };
 pub use partitioned::{PartitionedExplored, PartitionedPlanned, PartitionedScheduled};
 pub use serve::{drive_synthetic, drive_synthetic_tenant, EngineSpec};

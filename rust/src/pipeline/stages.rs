@@ -57,7 +57,10 @@ impl IntoDevice for &Device {
 
 impl IntoDevice for &str {
     fn resolve(self) -> Result<Device, Error> {
-        Device::by_name(self).ok_or_else(|| Error::UnknownDevice(self.to_string()))
+        Device::by_name(self).ok_or_else(|| Error::UnknownDevice {
+            name: self.to_string(),
+            known: Device::known_names(),
+        })
     }
 }
 
@@ -146,6 +149,23 @@ impl Deployment {
         tenants: impl IntoIterator<Item = Deployment>,
     ) -> super::ColocatedDeployment {
         super::ColocatedDeployment { tenants: tenants.into_iter().collect() }
+    }
+
+    /// Place N models onto an M-device pool: the fleet generalization of
+    /// every narrower builder. The placement search at `.explore()` decides
+    /// per model between running **solo** on one device, **sharding** across
+    /// several (via the cut-point search), or **co-locating** with other
+    /// small models on a shared device — under the plan's
+    /// [`FleetObjective`](crate::dse::FleetObjective). Returns the
+    /// [`FleetPlanned`](super::FleetPlanned) stage; the degenerate shapes
+    /// (1×1, 1×M, N×1) stay bit-identical to
+    /// [`Deployment::on_device`]/[`Deployment::on_devices`]/
+    /// [`Deployment::colocate`].
+    pub fn fleet<D: IntoDevice + Clone>(
+        models: impl IntoIterator<Item = Deployment>,
+        devices: &[D],
+    ) -> Result<super::FleetPlanned, Error> {
+        super::FleetPlanned::plan(models.into_iter().collect(), devices)
     }
 
     /// Resolve model and a **device chain** into a

@@ -1,0 +1,390 @@
+//! Integration tests of the fleet deployment path: the degenerate goldens
+//! (1×1 ≡ `on_device`, 1×M ≡ `on_devices`, N×1 ≡ `colocate` — bit-identical
+//! designs, schedules and simulations), the four-schema cache-separation
+//! contract, the acceptance placement (resnet50 shards while the small pair
+//! co-locates on a mixed pool), typed errors for bad pools, and the
+//! router-fronted serving terminal.
+
+use autows::device::Device;
+use autows::dse::{self, colocate, partition, slo_metric, DseConfig, FleetObjective,
+    FleetPlacement};
+use autows::ir::Quant;
+use autows::pipeline::{Deployment, DesignCache, PlacementSchedule, PlacementSim};
+use autows::sim::SimConfig;
+use autows::Error;
+
+fn resnet18() -> Deployment {
+    Deployment::for_model("resnet18").quant(Quant::W4A5)
+}
+
+fn squeezenet() -> Deployment {
+    Deployment::for_model("squeezenet").quant(Quant::W8A8)
+}
+
+/// Golden (satellite): a 1×1 fleet is the single-device deployment —
+/// design, burst schedule and simulation are bit-identical, mirroring the
+/// 1-partition and 1-tenant goldens of PR 4/5.
+#[test]
+fn one_by_one_equals_on_device_bit_for_bit() {
+    let cfg = DseConfig::default();
+    let single = resnet18()
+        .on_device("zcu102")
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+    let fleet = Deployment::fleet([resnet18()], &["zcu102"])
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+
+    assert_eq!(fleet.placements().len(), 1);
+    assert_eq!(fleet.result().devices_used, 1);
+    match &fleet.placements()[0] {
+        FleetPlacement::Solo { model: 0, device: 0, result } => {
+            assert_eq!(result.design.cfgs, single.design().cfgs, "identical per-layer configs");
+            assert_eq!(result.design.off_bits, single.design().off_bits, "identical evictions");
+            assert_eq!(result.throughput, single.result().throughput);
+            assert_eq!(result.latency_ms, single.result().latency_ms);
+            assert_eq!(result.area, single.result().area);
+        }
+        other => panic!("expected a Solo placement, got {other:?}"),
+    }
+    // the placement's schedule is the single-device burst schedule, verbatim
+    match &fleet.schedules()[0] {
+        PlacementSchedule::Solo(b) => assert_eq!(b, single.burst_schedule()),
+        other => panic!("expected a Solo schedule, got {other:?}"),
+    }
+    assert_eq!(fleet.input_len("resnet18"), Some(single.input_len()));
+
+    // and the simulation is the single-device simulation, verbatim
+    let sim_cfg = SimConfig::default();
+    let sim_single = single.simulate(&sim_cfg);
+    let sim_fleet = fleet.simulate(&sim_cfg);
+    assert_eq!(sim_fleet.per_placement.len(), 1);
+    match &sim_fleet.per_placement[0] {
+        PlacementSim::Solo(r) => {
+            assert_eq!(r.makespan_s, sim_single.makespan_s, "bit-identical makespan");
+            assert_eq!(r.total_stall_s, sim_single.total_stall_s);
+            assert_eq!(r.events, sim_single.events);
+        }
+        other => panic!("expected a Solo sim, got {other:?}"),
+    }
+    assert_eq!(sim_fleet.makespan_s, sim_single.makespan_s);
+}
+
+/// Golden (satellite): a 1×M fleet under the default objective is the
+/// sharded deployment of the full chain — same cuts, schedules, simulation.
+#[test]
+fn one_by_m_equals_on_devices_bit_for_bit() {
+    let cfg = DseConfig::default();
+    let chain = ["zcu102", "zcu102"];
+    let sharded = resnet18()
+        .on_devices(&chain)
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+    let fleet = Deployment::fleet([resnet18()], &chain)
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+
+    assert_eq!(fleet.placements().len(), 1);
+    match &fleet.placements()[0] {
+        FleetPlacement::Sharded { model: 0, devices, result } => {
+            assert_eq!(devices, &[0, 1], "the whole pool, in chain order");
+            assert_eq!(result.cuts, sharded.result().cuts, "identical cut points");
+            assert_eq!(result.throughput, sharded.result().throughput);
+            assert_eq!(result.parts.len(), sharded.partitions().len());
+            for (a, b) in result.parts.iter().zip(sharded.partitions()) {
+                assert_eq!(a.lo, b.lo);
+                assert_eq!(a.hi, b.hi);
+                assert_eq!(a.result.design.cfgs, b.result.design.cfgs);
+                assert_eq!(a.result.design.off_bits, b.result.design.off_bits);
+            }
+        }
+        other => panic!("expected a Sharded placement, got {other:?}"),
+    }
+    match &fleet.schedules()[0] {
+        PlacementSchedule::Sharded(schedules) => {
+            assert_eq!(schedules.as_slice(), sharded.burst_schedules());
+        }
+        other => panic!("expected a Sharded schedule, got {other:?}"),
+    }
+    assert_eq!(fleet.input_len("resnet18"), Some(sharded.input_len()));
+
+    let sim_cfg = SimConfig::default();
+    let sim_sharded = sharded.simulate(&sim_cfg);
+    let sim_fleet = fleet.simulate(&sim_cfg);
+    match &sim_fleet.per_placement[0] {
+        PlacementSim::Sharded(r) => {
+            assert_eq!(r.makespan_s, sim_sharded.makespan_s, "bit-identical makespan");
+            assert_eq!(r.total_stall_s, sim_sharded.total_stall_s);
+            assert_eq!(r.steady_period_s, sim_sharded.steady_period_s);
+        }
+        other => panic!("expected a Sharded sim, got {other:?}"),
+    }
+}
+
+/// Golden (satellite): an N×1 fleet is the co-located deployment — same
+/// shares, per-tenant designs, shared-port schedule and simulation.
+#[test]
+fn n_by_one_equals_colocate_bit_for_bit() {
+    let cfg = DseConfig::default();
+    let joint = Deployment::colocate([resnet18(), squeezenet()])
+        .on_device("zcu102")
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+    let fleet = Deployment::fleet([resnet18(), squeezenet()], &["zcu102"])
+        .unwrap()
+        .explore_uncached(&cfg)
+        .unwrap()
+        .schedule();
+
+    assert_eq!(fleet.placements().len(), 1);
+    assert_eq!(fleet.result().devices_used, 1);
+    match &fleet.placements()[0] {
+        FleetPlacement::Colocated { models, device: 0, result } => {
+            assert_eq!(models, &[0, 1], "both models, in input order");
+            assert_eq!(result.tenants.len(), joint.tenants().len());
+            for (a, b) in result.tenants.iter().zip(joint.tenants()) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.share, b.share, "identical budget shares");
+                assert_eq!(a.result.design.cfgs, b.result.design.cfgs);
+                assert_eq!(a.result.throughput, b.result.throughput);
+            }
+            assert_eq!(result.min_norm_throughput, joint.result().min_norm_throughput);
+        }
+        other => panic!("expected a Colocated placement, got {other:?}"),
+    }
+    match &fleet.schedules()[0] {
+        PlacementSchedule::Colocated(port) => assert_eq!(port, joint.port_schedule()),
+        other => panic!("expected a Colocated schedule, got {other:?}"),
+    }
+    for name in ["resnet18", "squeezenet"] {
+        assert_eq!(fleet.input_len(name), joint.input_len(name));
+    }
+
+    let sim_cfg = SimConfig::default();
+    let sim_joint = joint.simulate(&sim_cfg);
+    let sim_fleet = fleet.simulate(&sim_cfg);
+    match &sim_fleet.per_placement[0] {
+        PlacementSim::Colocated(r) => {
+            assert_eq!(r.makespan_s, sim_joint.makespan_s, "bit-identical makespan");
+            assert_eq!(r.total_stall_s, sim_joint.total_stall_s);
+            assert_eq!(r.events, sim_joint.events);
+        }
+        other => panic!("expected a Colocated sim, got {other:?}"),
+    }
+}
+
+/// Satellite: the FOURTH cache schema never cross-answers the other three —
+/// while the fleet search's solo sub-evaluations deliberately land in the
+/// shared single-device map.
+#[test]
+fn four_cache_schemas_never_cross_answer() {
+    let cache = DesignCache::new();
+    let cfg = DseConfig::default();
+    let toy = || Deployment::for_model("toy").quant(Quant::W8A8);
+
+    // fleet 1×1 first: fills the fleet map AND (via its solo evaluation)
+    // the single-device map
+    let f = Deployment::fleet([toy()], &["zcu102"])
+        .unwrap()
+        .explore_in(&cache, &cfg)
+        .unwrap();
+    assert!(!f.was_cached());
+
+    // the same content through the 1-chain and 1-tenant schemas MISSES —
+    // their maps were never touched by the fleet lookup
+    let p = toy().on_devices(&["zcu102"]).unwrap().explore_in(&cache, &cfg).unwrap();
+    assert!(!p.was_cached(), "the 1-chain schema must not be answered by the fleet map");
+    let c = Deployment::colocate([toy()])
+        .on_device("zcu102")
+        .unwrap()
+        .explore_in(&cache, &cfg)
+        .unwrap();
+    assert!(!c.was_cached(), "the 1-tenant schema must not be answered by the fleet map");
+
+    // ...but the single-device schema HITS: fleet sub-evaluations share the
+    // first three maps by design (whole placements stay in the fourth)
+    let s = toy().on_device("zcu102").unwrap().explore_in(&cache, &cfg).unwrap();
+    assert!(s.was_cached(), "fleet solo sub-evaluations land in the single-device map");
+
+    // a second identical fleet plan hits the fourth map...
+    let f2 = Deployment::fleet([toy()], &["zcu102"])
+        .unwrap()
+        .explore_in(&cache, &cfg)
+        .unwrap();
+    assert!(f2.was_cached());
+    // ...and the objective is part of the key, so changing it re-searches
+    let f3 = Deployment::fleet([toy()], &["zcu102"])
+        .unwrap()
+        .with_objective(FleetObjective::MinDevicesAtSlo { p99_ms: 1e9 })
+        .explore_in(&cache, &cfg)
+        .unwrap();
+    assert!(!f3.was_cached(), "the objective must be part of the fleet key");
+}
+
+/// Acceptance: on a mixed [zc706, zcu102, zcu102] pool under a p99 SLO that
+/// no single board can meet for resnet50, the search shards resnet50 across
+/// two boards and co-locates the small resnet18+squeezenet pair on the
+/// remaining one. The SLO threshold is derived from the physics so the test
+/// tracks the model, not magic numbers.
+#[test]
+fn resnet50_shards_while_the_small_pair_colocates() {
+    let cfg = DseConfig::default();
+    let pool = [Device::zc706(), Device::zcu102(), Device::zcu102()];
+    let r50 = autows::models::resnet50(Quant::W8A8);
+    let r18 = autows::models::resnet18(Quant::W4A5);
+    let sqz = autows::models::squeezenet(Quant::W8A8);
+
+    // best solo tail-latency proxy for resnet50 anywhere in the pool
+    let m_solo_min = pool
+        .iter()
+        .map(|d| {
+            dse::run(&r50, d, &cfg)
+                .map_or(f64::INFINITY, |r| slo_metric(r.latency_ms, r.throughput))
+        })
+        .fold(f64::INFINITY, f64::min);
+    // sharding across the two zcu102s beats every solo option...
+    let shard = partition::partition(&r50, &pool[1..], &cfg).expect("2x zcu102 must shard");
+    let m_shard = slo_metric(shard.latency_ms(), shard.throughput);
+    assert!(m_shard < m_solo_min, "precondition: sharding helps ({m_shard} vs {m_solo_min})");
+    // ...and the small pair co-locates acceptably on either board flavour
+    let m_colo = [&pool[0], &pool[1]]
+        .into_iter()
+        .map(|d| {
+            let joint = colocate::colocate(&[r18.clone(), sqz.clone()], d, &cfg)
+                .expect("the small pair must co-locate");
+            joint
+                .tenants
+                .iter()
+                .map(|t| slo_metric(t.result.latency_ms, t.result.throughput))
+                .fold(0.0, f64::max)
+        })
+        .fold(0.0, f64::max);
+    assert!(m_colo < m_solo_min, "precondition: co-location beats solo resnet50");
+
+    // an SLO between "what sharding/co-location achieve" and "what any solo
+    // resnet50 achieves": only the mixed placement can satisfy it
+    let p99_ms = 0.5 * (m_shard.max(m_colo) + m_solo_min);
+
+    let fleet = Deployment::fleet(
+        [
+            Deployment::for_model("resnet50").quant(Quant::W8A8),
+            resnet18(),
+            squeezenet(),
+        ],
+        &["zc706", "zcu102", "zcu102"],
+    )
+    .unwrap()
+    .with_objective(FleetObjective::MinDevicesAtSlo { p99_ms })
+    .explore_uncached(&cfg)
+    .expect("the fleet must place")
+    .schedule();
+
+    assert_eq!(fleet.placements().len(), 2, "one shard + one co-located pair");
+    assert_eq!(fleet.result().devices_used, 3);
+    let sharded = fleet
+        .placements()
+        .iter()
+        .find_map(|p| match p {
+            FleetPlacement::Sharded { model: 0, devices, result } => Some((devices, result)),
+            _ => None,
+        })
+        .expect("resnet50 must shard");
+    assert_eq!(sharded.0.len(), 2, "across two boards");
+    assert!(
+        slo_metric(sharded.1.latency_ms(), sharded.1.throughput) <= p99_ms,
+        "the shard meets the SLO"
+    );
+    let colocated = fleet
+        .placements()
+        .iter()
+        .find_map(|p| match p {
+            FleetPlacement::Colocated { models, device, result } => {
+                Some((models, device, result))
+            }
+            _ => None,
+        })
+        .expect("the small pair must co-locate");
+    assert_eq!(colocated.0, &[1, 2], "resnet18 + squeezenet, in input order");
+    assert!(!sharded.0.contains(colocated.1), "on the remaining board");
+    for t in &colocated.2.tenants {
+        assert!(
+            slo_metric(t.result.latency_ms, t.result.throughput) <= p99_ms,
+            "{} meets the SLO",
+            t.name
+        );
+    }
+
+    // the placement table names every mode
+    let report = fleet.report();
+    assert!(report.contains("sharded"), "{report}");
+    assert!(report.contains("colocated"), "{report}");
+    assert!(report.contains("min-devices-at-slo"), "{report}");
+}
+
+/// Satellite: a typo'd pool name is the typed [`Error::UnknownDevice`]
+/// carrying the known board list (the CLI `--devices` path resolves through
+/// the same entry point).
+#[test]
+fn unknown_pool_device_is_typed_with_known_boards() {
+    let e = Deployment::fleet([resnet18()], &["zcu9000"]).unwrap_err();
+    match e {
+        Error::UnknownDevice { ref name, ref known } => {
+            assert_eq!(name, "zcu9000");
+            assert!(known.iter().any(|k| k == "zcu102"), "known list: {known:?}");
+        }
+        other => panic!("expected UnknownDevice, got {other:?}"),
+    }
+    // empty lists and duplicate names are typed too
+    let e = Deployment::fleet(Vec::new(), &["zcu102"]).unwrap_err();
+    assert!(matches!(e, Error::Usage(_)), "{e}");
+    let e = Deployment::fleet([resnet18(), resnet18()], &["zcu102", "zc706"]).unwrap_err();
+    assert!(matches!(e, Error::DuplicateModel(_)), "{e}");
+}
+
+/// The serving terminal: a two-model fleet behind one router answers
+/// requests for both models and rolls metrics up per model.
+#[test]
+fn fleet_serves_both_models_through_one_router() {
+    use autows::coordinator::{BatchPolicy, ServerOptions};
+
+    let fleet = Deployment::fleet([resnet18(), squeezenet()], &["zcu102", "zc706"])
+        .unwrap()
+        .explore_uncached(&DseConfig::default())
+        .unwrap()
+        .schedule();
+    let router = fleet
+        .serve(
+            BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+            ServerOptions::default(),
+        )
+        .unwrap();
+    assert_eq!(router.models(), vec!["resnet18".to_string(), "squeezenet".to_string()]);
+
+    for name in ["resnet18", "squeezenet"] {
+        let input_len = fleet.input_len(name).expect("planned above");
+        let mut pending = Vec::new();
+        for _ in 0..6 {
+            pending.push(router.submit(name, vec![0.5; input_len]).unwrap());
+        }
+        for rx in pending {
+            rx.recv().expect("reply channel alive").expect("no typed error");
+        }
+        let m = router.model_metrics(name).expect("routed above");
+        assert_eq!(m.requests, 6, "{name}");
+        assert!(m.throughput_rps > 0.0);
+    }
+    // an unknown model is a typed error, not a hang
+    let e = router.submit("vgg16", vec![0.0; 8]).unwrap_err();
+    assert!(matches!(e, Error::UnknownModel(_)), "{e}");
+    router.shutdown();
+}

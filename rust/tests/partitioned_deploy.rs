@@ -192,7 +192,7 @@ fn on_devices_error_surface() {
     assert!(matches!(e, Error::Usage(_)), "{e}");
 
     let e = Deployment::for_model("toy").on_devices(&["zcu102", "zcu9000"]).unwrap_err();
-    assert!(matches!(e, Error::UnknownDevice(ref d) if d == "zcu9000"), "{e}");
+    assert!(matches!(e, Error::UnknownDevice { ref name, .. } if name == "zcu9000"), "{e}");
 
     let e = Deployment::for_model("resnet9000").on_devices(&["zcu102"]).unwrap_err();
     assert!(matches!(e, Error::UnknownModel(_)), "{e}");

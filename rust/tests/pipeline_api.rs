@@ -102,7 +102,7 @@ fn infeasible_is_typed_and_cached() {
 #[test]
 fn unknown_names_are_typed_errors() {
     let e = Deployment::for_model("resnet18").on_device("zcu9000").unwrap_err();
-    assert!(matches!(e, Error::UnknownDevice(_)), "{e}");
+    assert!(matches!(e, Error::UnknownDevice { .. }), "{e}");
 
     let e = Deployment::for_model("resnet9000").on_device("zcu102").unwrap_err();
     assert!(matches!(e, Error::UnknownModel(_)), "{e}");

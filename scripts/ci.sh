@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 CI gate: build, test, format check, lint, smoke-run the launcher
-# (single-device and sharded), then record the DSE/simulator performance
+# (single-device, sharded, co-located, fleet), then record the DSE/simulator performance
 # trajectory (BENCH_dse.json via scripts/bench_dse.sh) and the serving-path
 # trajectory (BENCH_serve.json via scripts/bench_serve.sh). Run from
 # anywhere.
@@ -38,14 +38,22 @@ cargo run --release --bin autows -- run --config configs/resnet50_2xzcu102.toml
 echo "== smoke: autows run (co-located, resnet18 + squeezenet on one zcu102) =="
 cargo run --release --bin autows -- run --config configs/multitenant_zcu102.toml
 
-echo "== smoke: simulate --json parses (single + co-located) =="
+echo "== smoke: autows run (fleet, resnet18 + squeezenet over zcu102 + zc706) =="
+cargo run --release --bin autows -- run --config configs/fleet_mixed.toml
+
+echo "== smoke: simulate --json parses (single + co-located + fleet) =="
 SIM_JSON_DIR="$(mktemp -d)"
 trap 'rm -rf "$SIM_JSON_DIR"' EXIT
 cargo run --release --bin autows -- simulate --model resnet18 --device zcu102 \
     --quant w4a5 --json "$SIM_JSON_DIR/single.json"
 cargo run --release --bin autows -- simulate --models resnet18,squeezenet \
     --device zcu102 --quant w4a5 --json "$SIM_JSON_DIR/colocated.json"
-for f in "$SIM_JSON_DIR/single.json" "$SIM_JSON_DIR/colocated.json"; do
+cargo run --release --bin autows -- simulate --models resnet18,squeezenet \
+    --devices zcu102,zc706 --quant w4a5 --objective agg \
+    --json "$SIM_JSON_DIR/fleet.json"
+grep -q '"mode": *"fleet"' "$SIM_JSON_DIR/fleet.json" \
+    || { echo "fleet JSON missing its mode tag"; exit 1; }
+for f in "$SIM_JSON_DIR/single.json" "$SIM_JSON_DIR/colocated.json" "$SIM_JSON_DIR/fleet.json"; do
     if command -v python3 >/dev/null 2>&1; then
         python3 -m json.tool "$f" >/dev/null || { echo "invalid JSON: $f"; exit 1; }
     else
