@@ -1,6 +1,6 @@
 //! Network: an ordered chain of layers forming the accelerator pipeline.
 
-use super::{Layer, Quant};
+use super::{Layer, OpKind, PoolKind, Quant};
 
 /// A DNN model `D`: the ordered set of layers `l ∈ D`, each mapped to one
 /// Compute Engine (paper §IV).
@@ -106,6 +106,101 @@ impl Network {
         }
         self
     }
+
+    /// 128-bit FNV-1a content fingerprint: name, input shape, default
+    /// quantization and every layer's full definition (name, operator with
+    /// all parameters, dimensions, per-layer quantization, skip source).
+    ///
+    /// Streams raw field bytes straight into the hash — no intermediate
+    /// canonical-serialization string — so cache keys
+    /// ([`crate::pipeline::DesignCache`]) stop paying O(layers) string
+    /// formatting per lookup. Two networks with equal content always hash
+    /// equal; at 128 bits, distinct content colliding is negligible
+    /// (~2⁻⁶⁴ birthday bound over any realistic design-point population).
+    pub fn fingerprint(&self) -> u128 {
+        let mut h = Fnv128::new();
+        h.str(&self.name);
+        let (c, hh, w) = self.input_shape;
+        h.u32(c);
+        h.u32(hh);
+        h.u32(w);
+        h.u32(self.quant.w_bits);
+        h.u32(self.quant.a_bits);
+        h.u32(self.layers.len() as u32);
+        for l in &self.layers {
+            h.str(&l.name);
+            match l.op {
+                OpKind::Conv { kernel, stride, pad, groups } => {
+                    h.u32(0);
+                    h.u32(kernel);
+                    h.u32(stride);
+                    h.u32(pad);
+                    h.u32(groups);
+                }
+                OpKind::Fc => h.u32(1),
+                OpKind::Pool { kernel, stride, pad, kind } => {
+                    h.u32(2);
+                    h.u32(kernel);
+                    h.u32(stride);
+                    h.u32(pad);
+                    h.u32(match kind {
+                        PoolKind::Max => 0,
+                        PoolKind::Avg => 1,
+                    });
+                }
+                OpKind::GlobalAvgPool => h.u32(3),
+                OpKind::EltwiseAdd => h.u32(4),
+                OpKind::Relu => h.u32(5),
+            }
+            h.u32(l.c_in);
+            h.u32(l.c_out);
+            h.u32(l.h_in);
+            h.u32(l.w_in);
+            h.u32(l.quant.w_bits);
+            h.u32(l.quant.a_bits);
+            match l.skip_from {
+                None => h.u32(0),
+                Some(s) => {
+                    h.u32(1);
+                    h.u32(s as u32);
+                }
+            }
+        }
+        h.finish()
+    }
+}
+
+/// FNV-1a over 128 bits (the standard offset basis and prime).
+struct Fnv128(u128);
+
+impl Fnv128 {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013B;
+
+    fn new() -> Fnv128 {
+        Fnv128(Self::OFFSET)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u128;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed so `("ab","c")` and `("a","bc")` never collide.
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+
+    fn finish(&self) -> u128 {
+        self.0
+    }
 }
 
 #[cfg(test)]
@@ -164,5 +259,45 @@ mod tests {
         let n = tiny().with_quant(Quant::W4A4);
         assert!(n.layers.iter().all(|l| l.quant == Quant::W4A4));
         assert_eq!(n.stats().weight_bits, n.stats().params * 4);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_over_equal_content() {
+        assert_eq!(tiny().fingerprint(), tiny().fingerprint());
+        assert_eq!(tiny().fingerprint(), tiny().clone().fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_separates_every_field_class() {
+        let base = tiny().fingerprint();
+
+        let mut n = tiny();
+        n.name = "tiny2".into();
+        assert_ne!(n.fingerprint(), base, "name");
+
+        let mut n = tiny();
+        n.input_shape = (3, 8, 9);
+        assert_ne!(n.fingerprint(), base, "input shape");
+
+        let n = tiny().with_quant(Quant::W4A4);
+        assert_ne!(n.fingerprint(), base, "quantization");
+
+        let mut n = tiny();
+        n.layers[1].c_out += 1;
+        assert_ne!(n.fingerprint(), base, "layer dims");
+
+        let mut n = tiny();
+        if let OpKind::Conv { ref mut stride, .. } = n.layers[1].op {
+            *stride = 1;
+        }
+        assert_ne!(n.fingerprint(), base, "op params");
+
+        let mut n = tiny();
+        n.layers[2].skip_from = Some(0);
+        assert_ne!(n.fingerprint(), base, "skip source");
+
+        let mut n = tiny();
+        n.layers.pop();
+        assert_ne!(n.fingerprint(), base, "layer count");
     }
 }

@@ -2,14 +2,19 @@
 //!
 //! A DSE run is a pure function of `(network, device, DseConfig)`, so its
 //! result can be memoized. The cache key is **content-derived**, not
-//! identity-derived: the network is keyed by its canonical `.net`
-//! serialization (name, input shape, quantization, every layer), the device
-//! by all of its resource/clock/bandwidth fields (so `with_mem_scale`
-//! variants key separately), and the config by every hyperparameter
-//! (`φ`, `µ`, batch, streaming flag, bandwidth margin bits, warm start).
-//! Two lookups with equal content hit the same entry no matter how the
-//! values were constructed; any content difference — a scaled memory
-//! budget, a different quantization, one changed layer — misses.
+//! identity-derived: the network is keyed by its 128-bit FNV-1a content
+//! fingerprint ([`Network::fingerprint`] — name, input shape, quantization,
+//! every layer with all operator parameters), the device by all of its
+//! resource/clock/bandwidth fields (so `with_mem_scale` variants key
+//! separately), and the config by every hyperparameter (`φ`, `µ`, batch,
+//! streaming flag, bandwidth margin bits, warm start). Two lookups with
+//! equal content hit the same entry no matter how the values were
+//! constructed; any content difference — a scaled memory budget, a
+//! different quantization, one changed layer — misses. The fingerprint
+//! replaced the canonical `.net` serialization that early versions embedded
+//! verbatim: a key is now O(1) in network size instead of re-formatting
+//! every layer on every lookup, at a collision risk (~2⁻⁶⁴ birthday bound
+//! at 128 bits) far below any other failure mode of the tool.
 //!
 //! Infeasible outcomes are cached too (`None`), so a sweep that probes the
 //! same infeasible point twice pays for it once.
@@ -104,13 +109,19 @@ impl DesignCache {
         );
     }
 
-    /// The canonical content key of a design point. Stored verbatim (not
-    /// hashed down to 64 bits) so equal keys are *guaranteed* equal content.
+    /// Append the network's 128-bit content fingerprint to a key. Covers
+    /// name, input shape, quantization (global + per-layer overrides) and
+    /// every layer with all operator parameters — without building the
+    /// O(layers) canonical serialization string on every lookup.
+    fn push_network(k: &mut String, network: &Network) {
+        let _ = write!(k, "net#{:032x}", network.fingerprint());
+    }
+
+    /// The content key of a design point: the network's 128-bit fingerprint
+    /// plus every device field and DSE hyperparameter verbatim.
     pub fn key(network: &Network, device: &Device, cfg: &DseConfig) -> String {
-        let mut k = String::with_capacity(1024);
-        // network content: canonical .net serialization covers name, input
-        // shape, quantization (global + per-layer overrides) and every layer
-        k.push_str(&crate::ir::serialize_network(network));
+        let mut k = String::with_capacity(256);
+        Self::push_network(&mut k, network);
         Self::push_device(&mut k, device);
         Self::push_cfg(&mut k, cfg);
         k
@@ -128,8 +139,8 @@ impl DesignCache {
         cuts: Option<&[usize]>,
         cfg: &DseConfig,
     ) -> String {
-        let mut k = String::with_capacity(1024);
-        k.push_str(&crate::ir::serialize_network(network));
+        let mut k = String::with_capacity(256);
+        Self::push_network(&mut k, network);
         let _ = write!(k, "|ndev={}", devices.len());
         for device in devices {
             Self::push_device(&mut k, device);
@@ -155,11 +166,11 @@ impl DesignCache {
     /// single-device or partitioned keys: they live in a third map with its
     /// own schema.
     pub fn colo_key(networks: &[Network], device: &Device, cfg: &DseConfig) -> String {
-        let mut k = String::with_capacity(1024);
+        let mut k = String::with_capacity(256);
         let _ = write!(k, "|nten={}", networks.len());
         for network in networks {
             k.push('|');
-            k.push_str(&crate::ir::serialize_network(network));
+            Self::push_network(&mut k, network);
         }
         Self::push_device(&mut k, device);
         Self::push_cfg(&mut k, cfg);
@@ -179,11 +190,11 @@ impl DesignCache {
         objective: FleetObjective,
         cfg: &DseConfig,
     ) -> String {
-        let mut k = String::with_capacity(1024);
+        let mut k = String::with_capacity(256);
         let _ = write!(k, "|fleet|nmod={}", networks.len());
         for network in networks {
             k.push('|');
-            k.push_str(&crate::ir::serialize_network(network));
+            Self::push_network(&mut k, network);
         }
         let _ = write!(k, "|ndev={}", devices.len());
         for device in devices {
@@ -353,6 +364,22 @@ mod tests {
         assert_ne!(base, DesignCache::key(&net, &dev, &DseConfig::vanilla()));
         assert_ne!(base, DesignCache::key(&net, &dev, &DseConfig::warm()));
         assert_ne!(base, DesignCache::key(&net, &dev, &cfg.with_bw_margin(0.8)));
+    }
+
+    #[test]
+    fn network_keys_are_constant_size_and_layer_sensitive() {
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        // the fingerprint keeps keys O(1) in network size: a 50-layer model's
+        // key is no longer than the toy's
+        let toy_key = DesignCache::key(&models::toy_cnn(Quant::W8A8), &dev, &cfg);
+        let big_key = DesignCache::key(&models::resnet50(Quant::W8A8), &dev, &cfg);
+        assert_eq!(toy_key.len(), big_key.len());
+        assert!(toy_key.starts_with("net#"), "{toy_key}");
+        // a single changed layer still misses
+        let mut edited = models::resnet50(Quant::W8A8);
+        edited.layers[10].quant = Quant::W4A4;
+        assert_ne!(big_key, DesignCache::key(&edited, &dev, &cfg));
     }
 
     #[test]

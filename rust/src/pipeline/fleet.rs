@@ -369,13 +369,14 @@ impl FleetScheduled {
 
     /// Validate every placement in its own simulator (single-device event
     /// sim, partitioned chain sim, co-located shared-port sim) and roll the
-    /// fleet figures up.
+    /// fleet figures up. Placements are independent — each models its own
+    /// device(s) — so the sims fan across cores via
+    /// [`crate::dse::parallel_cases`], which returns results in input order:
+    /// the rollup (and `per_placement` indexing) is bit-identical to the
+    /// old sequential walk.
     pub fn simulate(&self, cfg: &SimConfig) -> FleetSimReport {
-        let per_placement: Vec<PlacementSim> = self
-            .outcome
-            .placements
-            .iter()
-            .map(|p| match p {
+        let per_placement: Vec<PlacementSim> =
+            crate::dse::parallel_cases(&self.outcome.placements, |_, p| match p {
                 FleetPlacement::Solo { device, result, .. } => {
                     PlacementSim::Solo(simulate(&result.design, &self.devices[*device], cfg))
                 }
@@ -396,8 +397,7 @@ impl FleetScheduled {
                         cfg,
                     ))
                 }
-            })
-            .collect();
+            });
         let makespan_s =
             per_placement.iter().map(PlacementSim::makespan_s).fold(0.0, f64::max);
         let total_stall_s = per_placement.iter().map(PlacementSim::total_stall_s).sum();

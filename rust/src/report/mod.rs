@@ -201,7 +201,11 @@ pub fn fig5() -> String {
     let mut out = String::from("Fig. 5: two-layer write/read scheduling\n");
     for (balanced, label) in [(false, "(a) imbalanced burst numbers"), (true, "(b) balanced burst numbers")] {
         let (d, dev) = fig5_scenario(balanced);
-        let sim = simulate(&d, &dev, &SimConfig { batch: 2, trace: true, max_trace_events: 64 });
+        let sim = simulate(
+            &d,
+            &dev,
+            &SimConfig { batch: 2, trace: true, max_trace_events: 64, ..Default::default() },
+        );
         out.push_str(&format!(
             "\n{label}: r_l1={} r_l2={} stalls={:.2}us makespan={:.2}us\n",
             d.repeats(0, 2),
@@ -283,7 +287,11 @@ pub fn fig5_gantt() -> String {
         [(false, "(a) imbalanced burst numbers"), (true, "(b) balanced burst numbers")]
     {
         let (d, dev) = fig5_scenario(balanced);
-        let sim = simulate(&d, &dev, &SimConfig { batch: 2, trace: true, max_trace_events: 256 });
+        let sim = simulate(
+            &d,
+            &dev,
+            &SimConfig { batch: 2, trace: true, max_trace_events: 256, ..Default::default() },
+        );
         out.push_str(&format!("\n{label} — stalls {:.2} us:\n", sim.total_stall_s * 1e6));
         out.push_str(&render_gantt(&sim.traces, 96));
     }

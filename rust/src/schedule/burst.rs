@@ -124,6 +124,34 @@ impl BurstSchedule {
     pub fn balanced(&self) -> bool {
         self.entries.windows(2).all(|w| w[0].r == w[1].r)
     }
+
+    /// Hyperperiod structure of the burst train: `(g, n)` with
+    /// `g = gcd_l r_l` and `n_l = r_l / g`.
+    ///
+    /// `from_design` fixes `t_rd_l = b·cycles_max / (r_l·clk)`, so the
+    /// product `r_l · t_rd_l` is the same for every slot — slot rates are
+    /// proportional to their repeat counts, every slot completes exactly
+    /// `n_l` iterations per `Σ_l n_l`-event round in steady state, and the
+    /// whole train finishes after `g` rounds. Balanced schedules (Eq. 10)
+    /// degenerate to `n_l = 1` everywhere with `g = r`. Returns
+    /// `(0, [])` for an empty (all-on-chip) schedule.
+    pub fn hyperperiod(&self) -> (u64, Vec<u64>) {
+        if self.entries.is_empty() {
+            return (0, Vec::new());
+        }
+        let g = self.entries.iter().fold(0u64, |acc, e| gcd_u64(acc, e.r));
+        (g, self.entries.iter().map(|e| e.r / g).collect())
+    }
+}
+
+/// Greatest common divisor (Euclid; `gcd(0, x) = x`).
+pub(crate) fn gcd_u64(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
 }
 
 #[cfg(test)]
@@ -172,6 +200,43 @@ mod tests {
     }
 
     #[test]
+    fn hyperperiod_of_balanced_schedule_is_one_iteration_per_slot() {
+        let (d, dev) = streamed_design();
+        let s = BurstSchedule::from_design(&d, &dev, 4);
+        let (g, n) = s.hyperperiod();
+        assert_eq!(g, s.entries[0].r, "balanced: g = r");
+        assert!(n.iter().all(|&x| x == 1), "balanced: one event per slot per round");
+        // the invariant the fast-forward relies on: Σ n_l · g = Σ r_l
+        let total: u64 = s.entries.iter().map(|e| e.r).sum();
+        assert_eq!(g * n.iter().sum::<u64>(), total);
+    }
+
+    #[test]
+    fn hyperperiod_of_unbalanced_counts() {
+        let (d, dev) = streamed_design();
+        let mut s = BurstSchedule::from_design(&d, &dev, 1);
+        assert!(s.entries.len() >= 2);
+        s.entries[0].r = 4;
+        s.entries[1].r = 6;
+        for e in &mut s.entries[2..] {
+            e.r = 2;
+        }
+        let (g, n) = s.hyperperiod();
+        assert_eq!(g, 2);
+        assert_eq!(n[0], 2);
+        assert_eq!(n[1], 3);
+        assert!(n[2..].iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn gcd_basics() {
+        assert_eq!(gcd_u64(0, 7), 7);
+        assert_eq!(gcd_u64(7, 0), 7);
+        assert_eq!(gcd_u64(12, 18), 6);
+        assert_eq!(gcd_u64(1, 1_000_000), 1);
+    }
+
+    #[test]
     fn empty_schedule_for_all_onchip_design() {
         let net = models::toy_cnn(Quant::W8A8);
         let dev = Device::u250();
@@ -180,5 +245,6 @@ mod tests {
         assert!(s.entries.is_empty());
         assert!(s.schedulable());
         assert_eq!(s.dma_utilization(), 0.0);
+        assert_eq!(s.hyperperiod(), (0, Vec::new()));
     }
 }

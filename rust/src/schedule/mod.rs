@@ -23,6 +23,7 @@ mod dma;
 mod link;
 mod port;
 
+pub(crate) use burst::gcd_u64;
 pub use burst::{BurstEntry, BurstSchedule};
 pub use dma::{demux_sequence, DemuxSlot};
 pub use link::LinkSpec;

@@ -21,14 +21,23 @@
 //! (bit-identical; enforced by `tests/colocated_deploy.rs`), mirroring the
 //! 1-partition shortcut of [`super::simulate_partitioned`] — with one
 //! tenant there are no foreign IO streams, so the two models coincide.
-
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+//!
+//! **Fast-forward**: the joint loop runs on the same indexed
+//! [`SlotQueue`] over flattened `(tenant, slot)` ids and the same
+//! round-boundary steady-state detector as the single-device engine, with
+//! the hyperperiod taken over *every* tenant's repeat counts. The joint
+//! orbit only locks when the tenants' trains are commensurate (equal
+//! per-round time advance — e.g. replicas of one plan); heterogeneous
+//! tenants simply never detect and take the full event loop, which the
+//! allocation-free queue still speeds up. `sim::reference` keeps the heap
+//! version as the oracle.
 
 use super::engine::{ideal_finish, simulate, SimConfig};
+use super::queue::SlotQueue;
+use super::steady::Detector;
 use crate::device::Device;
 use crate::dse::Design;
-use crate::schedule::BurstSchedule;
+use crate::schedule::{gcd_u64, BurstSchedule};
 
 /// Steady-state figures of one tenant in the joint simulation.
 #[derive(Debug, Clone, PartialEq)]
@@ -62,34 +71,36 @@ pub struct ColocatedSimResult {
     pub port_busy_frac: f64,
     /// Summed stall across tenants, seconds.
     pub total_stall_s: f64,
-    /// Summed events across tenants.
+    /// Summed events across tenants (semantic count, `Σ r` over all slots).
     pub events: u64,
+    /// Events the joint loop actually stepped; below `events` when the
+    /// steady-state fast-forward extrapolated the periodic tail.
+    pub events_processed: u64,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct Request {
-    time: f64,
-    tenant: usize,
-    slot: usize,
-    iteration: u64,
-}
-
-impl Eq for Request {}
-impl Ord for Request {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap by (time, tenant, slot): reversed for BinaryHeap
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then(other.tenant.cmp(&self.tenant))
-            .then(other.slot.cmp(&self.slot))
-    }
-}
-impl PartialOrd for Request {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
+/// Per-tenant burst schedules against the physical port's residual rate —
+/// the time-division timing model (see the module docs). Shared with
+/// [`super::reference::simulate_colocated`] so both engines interleave
+/// identical trains.
+pub(crate) fn port_view_schedules(
+    tenants: &[(&str, &Design, &Device)],
+    device: &Device,
+    cfg: &SimConfig,
+) -> Vec<BurstSchedule> {
+    // `from_design` subtracts the design's own β_io from the device it is
+    // given, so handing it a view whose bandwidth is `B_phys − Σ β_io
+    // (others)` makes its Eq. 8 rate exactly `B_phys − Σ β_io(all)`
+    // (floored at 1 bps inside `from_design`); read windows and offsets are
+    // bandwidth-free.
+    let total_io: f64 = tenants.iter().map(|&(_, design, _)| design.io_bandwidth()).sum();
+    tenants
+        .iter()
+        .map(|&(_, design, view)| {
+            let mut port_view = view.clone();
+            port_view.bandwidth_bps = device.bandwidth_bps - (total_io - design.io_bandwidth());
+            BurstSchedule::from_design(design, &port_view, cfg.batch)
+        })
+        .collect()
 }
 
 /// Simulate `(name, design, view)` tenants sharing one physical DMA port
@@ -123,42 +134,51 @@ pub fn simulate_colocated(
             port_busy_frac: r.dma_busy_frac,
             total_stall_s: r.total_stall_s,
             events: r.events,
+            events_processed: r.events_processed,
         };
     }
 
     let n = tenants.len();
-    // Time-division burst timing: a burst on the physical bus advances at
-    // the rate left after EVERY tenant's IO streams. `from_design`
-    // subtracts the design's own β_io from the device it is given, so
-    // handing it a view whose bandwidth is `B_phys − Σ β_io(others)` makes
-    // its Eq. 8 rate exactly `B_phys − Σ β_io(all)` (floored at 1 bps
-    // inside `from_design`); read windows and offsets are bandwidth-free.
-    let total_io: f64 = tenants.iter().map(|&(_, design, _)| design.io_bandwidth()).sum();
-    let schedules: Vec<BurstSchedule> = tenants
-        .iter()
-        .map(|&(_, design, view)| {
-            let mut port_view = view.clone();
-            port_view.bandwidth_bps =
-                device.bandwidth_bps - (total_io - design.io_bandwidth());
-            BurstSchedule::from_design(design, &port_view, cfg.batch)
-        })
-        .collect();
+    let schedules = port_view_schedules(tenants, device, cfg);
 
     // Ideal (stall-free) per-tenant pipeline time: fill + batch drains of
     // the tenant's bottleneck CE — the engine's own definition.
     let ideal: Vec<f64> =
         tenants.iter().map(|&(_, design, _)| ideal_finish(design, cfg.batch)).collect();
 
-    // Per (tenant, slot): cursor of that CE's sequential read chain.
-    let mut prev_read_end: Vec<Vec<f64>> = schedules
+    // Flatten to global slot ids in (tenant, slot) lexicographic order —
+    // the same order the reference heap breaks ties in, so both engines
+    // pop events identically.
+    struct FlatSlot {
+        tenant: usize,
+        t_wr: f64,
+        t_rd_static: f64,
+        t_rd_buffer: f64,
+        r: u64,
+        start_offset: f64,
+    }
+    let slots: Vec<FlatSlot> = schedules
         .iter()
-        .map(|s| s.entries.iter().map(|e| e.start_offset).collect())
+        .enumerate()
+        .flat_map(|(t, s)| {
+            s.entries.iter().map(move |e| FlatSlot {
+                tenant: t,
+                t_wr: e.t_wr,
+                t_rd_static: e.t_rd_static,
+                t_rd_buffer: e.t_rd_buffer,
+                r: e.r,
+                start_offset: e.start_offset,
+            })
+        })
         .collect();
-    let mut heap: BinaryHeap<Request> = BinaryHeap::new();
-    for (t, s) in schedules.iter().enumerate() {
-        for (slot, e) in s.entries.iter().enumerate() {
-            heap.push(Request { time: e.start_offset.max(0.0), tenant: t, slot, iteration: 0 });
-        }
+    let n_slots = slots.len();
+    let total_events: u64 = slots.iter().map(|s| s.r).sum();
+
+    let mut prev_read_end: Vec<f64> = slots.iter().map(|s| s.start_offset).collect();
+    let mut iters = vec![0u64; n_slots];
+    let mut queue = SlotQueue::with_slots(n_slots);
+    for (id, s) in slots.iter().enumerate() {
+        queue.push(id, s.start_offset.max(0.0));
     }
 
     let mut dma_free = 0.0_f64;
@@ -167,45 +187,97 @@ pub fn simulate_colocated(
     let mut contention_per_tenant = vec![0.0_f64; n];
     let mut events_per_tenant = vec![0_u64; n];
     let mut max_read_end = vec![0.0_f64; n];
+    let mut processed = 0_u64;
+    let mut skipped = 0_u64;
 
-    while let Some(req) = heap.pop() {
-        let e = &schedules[req.tenant].entries[req.slot];
+    // Joint hyperperiod: gcd over EVERY tenant's repeat counts. Only a
+    // commensurate joint orbit can match (uniform dt across all cursors);
+    // otherwise the detector never fires and the loop runs to completion.
+    let g = slots.iter().fold(0u64, |acc, s| gcd_u64(acc, s.r));
+    let n_per_round: Vec<u64> = slots.iter().map(|s| s.r / g.max(1)).collect();
+    let round_events: u64 = n_per_round.iter().sum();
+    let mut detector =
+        if cfg.fast_forward && !cfg.trace && g >= 4 { Some(Detector::new()) } else { None };
+
+    while let Some((id, time)) = queue.pop() {
+        let e = &slots[id];
         // the shared physical port serves one burst at a time, across ALL
         // tenants, FIFO in request-arrival order
-        let w_start = req.time.max(dma_free);
+        let w_start = time.max(dma_free);
         let w_end = w_start + e.t_wr;
         dma_free = w_end;
         dma_busy += e.t_wr;
 
-        let s_start = prev_read_end[req.tenant][req.slot];
+        let s_start = prev_read_end[id];
         let s_end = s_start + e.t_rd_static;
         let unconstrained_end = s_end + e.t_rd_buffer;
         let r_end = unconstrained_end.max(w_end);
         let stall = r_end - unconstrained_end;
-        prev_read_end[req.tenant][req.slot] = r_end;
-        stall_per_tenant[req.tenant] += stall;
+        prev_read_end[id] = r_end;
+        stall_per_tenant[e.tenant] += stall;
         // Attribution mirrors the single-device engine: had the port been
         // free at request time the write would have ended at
-        // `req.time + t_wr`; stall beyond that is queueing on the shared
+        // `time + t_wr`; stall beyond that is queueing on the shared
         // port (contention — own layers or other tenants), the rest is
         // intrinsic RAW wait.
         if stall > 0.0 {
-            let uncontended_end = req.time + e.t_wr;
+            let uncontended_end = time + e.t_wr;
             let intrinsic = (uncontended_end - unconstrained_end).max(0.0).min(stall);
-            contention_per_tenant[req.tenant] += stall - intrinsic;
+            contention_per_tenant[e.tenant] += stall - intrinsic;
         }
-        max_read_end[req.tenant] = max_read_end[req.tenant].max(r_end);
-        events_per_tenant[req.tenant] += 1;
+        max_read_end[e.tenant] = max_read_end[e.tenant].max(r_end);
+        events_per_tenant[e.tenant] += 1;
+        processed += 1;
+        iters[id] += 1;
 
-        if req.iteration + 1 < e.r {
-            heap.push(Request {
-                time: r_end,
-                tenant: req.tenant,
-                slot: req.slot,
-                iteration: req.iteration + 1,
-            });
+        if iters[id] < e.r {
+            queue.push(id, r_end);
+        }
+
+        if detector.is_some() && processed % round_events == 0 {
+            let delta = detector.as_mut().unwrap().observe(
+                &iters,
+                &prev_read_end,
+                dma_free,
+                dma_busy,
+                &stall_per_tenant,
+                &contention_per_tenant,
+                &n_per_round,
+            );
+            if let Some(delta) = delta {
+                let rounds_left = slots
+                    .iter()
+                    .enumerate()
+                    .map(|(id, s)| (s.r - iters[id]) / n_per_round[id])
+                    .min()
+                    .unwrap_or(0);
+                if rounds_left > 0 {
+                    let rf = rounds_left as f64;
+                    let shift = delta.dt * rf;
+                    dma_free += shift;
+                    dma_busy += delta.dma_busy * rf;
+                    for t in 0..n {
+                        stall_per_tenant[t] += delta.stall[t] * rf;
+                        contention_per_tenant[t] += delta.contention[t] * rf;
+                    }
+                    queue.clear();
+                    for (id, s) in slots.iter().enumerate() {
+                        prev_read_end[id] += shift;
+                        iters[id] += n_per_round[id] * rounds_left;
+                        events_per_tenant[s.tenant] += n_per_round[id] * rounds_left;
+                        max_read_end[s.tenant] = max_read_end[s.tenant].max(prev_read_end[id]);
+                        if iters[id] < s.r {
+                            queue.push(id, prev_read_end[id]);
+                        }
+                    }
+                    skipped += round_events * rounds_left;
+                }
+                detector = None;
+            }
         }
     }
+
+    debug_assert_eq!(processed + skipped, total_events, "every scheduled event accounted for");
 
     let per_tenant: Vec<TenantSim> = (0..n)
         .map(|t| {
@@ -227,7 +299,8 @@ pub fn simulate_colocated(
         latency_ms: makespan * 1e3,
         port_busy_frac: if makespan > 0.0 { dma_busy / makespan } else { 0.0 },
         total_stall_s: stall_per_tenant.iter().sum(),
-        events: events_per_tenant.iter().sum(),
+        events: processed + skipped,
+        events_processed: processed,
         per_tenant,
     }
 }
@@ -252,6 +325,7 @@ mod tests {
         assert_eq!(joint.total_stall_s, direct.total_stall_s);
         assert_eq!(joint.port_busy_frac, direct.dma_busy_frac);
         assert_eq!(joint.events, direct.events);
+        assert_eq!(joint.events_processed, direct.events_processed);
         assert_eq!(joint.per_tenant.len(), 1);
     }
 
@@ -311,5 +385,35 @@ mod tests {
         );
         let contention: f64 = joint.per_tenant.iter().map(|t| t.contention_s).sum();
         assert!(contention > 0.0, "the extra stall is port contention");
+    }
+
+    #[test]
+    fn joint_fast_forward_matches_the_reference_heap() {
+        // identical replicas: the joint trains are commensurate, so the
+        // steady-state detector can engage on the shared port too
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let cfg = SimConfig { batch: 8, ..Default::default() };
+        let tenants = [("a", &r.design, &dev), ("b", &r.design, &dev)];
+        let fast = simulate_colocated(&tenants, &dev, &cfg);
+        let oracle = crate::sim::reference::simulate_colocated(&tenants, &dev, &cfg);
+        assert_eq!(fast.events, oracle.events, "semantic event count is engine-independent");
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1e-300);
+        assert!(close(fast.makespan_s, oracle.makespan_s));
+        assert!(
+            close(fast.total_stall_s, oracle.total_stall_s)
+                || (fast.total_stall_s - oracle.total_stall_s).abs() < 1e-12 * oracle.makespan_s
+        );
+        assert!(close(fast.port_busy_frac, oracle.port_busy_frac));
+        for (f, o) in fast.per_tenant.iter().zip(&oracle.per_tenant) {
+            assert!(close(f.makespan_s, o.makespan_s), "{}: {} vs {}", f.name, f.makespan_s, o.makespan_s);
+            assert_eq!(f.events, o.events);
+        }
+        // with fast-forward off the joint loop is bit-identical to the heap
+        let off = SimConfig { fast_forward: false, ..cfg };
+        let full = simulate_colocated(&tenants, &dev, &off);
+        let oracle_off = crate::sim::reference::simulate_colocated(&tenants, &dev, &off);
+        assert_eq!(full, oracle_off);
     }
 }

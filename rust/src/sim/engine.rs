@@ -1,4 +1,4 @@
-//! The discrete-event engine.
+//! The discrete-event engine, with steady-state fast-forward.
 //!
 //! Shared resource: the DMA port (demux-routed, FIFO in request-arrival
 //! order, which for balanced designs degenerates to the paper's static
@@ -16,14 +16,31 @@
 //!
 //! Stall := extra time the buffer phase takes beyond its unconstrained
 //! duration because the write had not finished.
+//!
+//! **Fast-forward** (PR 9): the schedule is static, so the event stream is
+//! eventually periodic with the hyperperiod of the burst train
+//! ([`BurstSchedule::hyperperiod`]). The engine steps events normally
+//! through the warm-up transient, sampling the state vector at round
+//! boundaries; once [`super::steady`] sees the same round twice, the
+//! remaining `R` whole rounds collapse to one multiply-add per slot (times
+//! shift by `R·dt`, accumulators gain `R` round-increments) and only the
+//! exact tail — the last partial round — is event-stepped. Cost drops from
+//! O(batch · Σ r) to O(warm-up + one round + tail). Designs that never
+//! settle, and trace runs, take the full event loop; `sim::reference`
+//! preserves the pre-fast-forward engine as the equivalence oracle
+//! (`tests/sim_equivalence.rs`, `benches/sim_perf.rs`).
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
+use super::queue::SlotQueue;
+use super::steady::Detector;
 use super::trace::{TraceEvent, TraceKind};
 use crate::device::Device;
 use crate::dse::Design;
 use crate::schedule::BurstSchedule;
+
+/// Don't bother detecting unless the train runs at least this many rounds:
+/// three are needed to observe two matching windows, and anything shorter
+/// has no tail worth skipping.
+const MIN_ROUNDS: u64 = 4;
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -32,11 +49,16 @@ pub struct SimConfig {
     /// Record per-event traces (Fig. 5 rendering); off for latency runs.
     pub trace: bool,
     pub max_trace_events: usize,
+    /// Detect the steady-state period and extrapolate the remaining
+    /// iterations analytically. Equivalent to the full event loop within FP
+    /// rounding (gated ≤ 1e-9 relative vs [`super::reference`]); disable to
+    /// force every event through the loop. Trace runs always step fully.
+    pub fast_forward: bool,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { batch: 1, trace: false, max_trace_events: 4096 }
+        SimConfig { batch: 1, trace: false, max_trace_events: 4096, fast_forward: true }
     }
 }
 
@@ -58,34 +80,18 @@ pub struct SimResult {
     pub per_layer_contention_s: Vec<f64>,
     /// Fraction of the makespan the DMA port was busy.
     pub dma_busy_frac: f64,
-    /// Number of fragment-iteration events processed.
+    /// Fragment-iteration events in the schedule (`Σ_l r_l`): the semantic
+    /// event count, identical whether or not the engine fast-forwarded.
     pub events: u64,
+    /// Events the engine actually stepped through the loop; below `events`
+    /// when the periodic tail was extrapolated. Diagnostic only — excluded
+    /// from the reference-equivalence contract.
+    pub events_processed: u64,
+    /// A trace run hit `max_trace_events` and dropped later events (the
+    /// Fig. 5 rendering is a prefix, not the whole batch).
+    pub truncated: bool,
     /// Optional event trace.
     pub traces: Vec<TraceEvent>,
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct Request {
-    time: f64,
-    layer_slot: usize, // index into the schedule entries
-    iteration: u64,
-}
-
-impl Eq for Request {}
-impl Ord for Request {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap by (time, layer): reversed for BinaryHeap
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then(other.layer_slot.cmp(&self.layer_slot))
-    }
-}
-impl PartialOrd for Request {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
 }
 
 /// Ideal (stall-free) pipeline time of a batch: fill of every CE plus
@@ -118,28 +124,45 @@ pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult 
             per_layer_contention_s: per_layer_contention,
             dma_busy_frac: 0.0,
             events: 0,
+            events_processed: 0,
+            truncated: false,
             traces,
         };
     }
 
-    // Per streaming CE: cursor of its sequential read chain.
-    let n_slots = schedule.entries.len();
-    let mut prev_read_end: Vec<f64> = schedule.entries.iter().map(|e| e.start_offset).collect();
-    let mut heap: BinaryHeap<Request> = BinaryHeap::with_capacity(n_slots * 2);
-    for (slot, e) in schedule.entries.iter().enumerate() {
+    let entries = &schedule.entries;
+    let n_slots = entries.len();
+    let total_events: u64 = entries.iter().map(|e| e.r).sum();
+
+    // Per streaming CE: cursor of its sequential read chain, and how many
+    // of its r iterations have completed.
+    let mut prev_read_end: Vec<f64> = entries.iter().map(|e| e.start_offset).collect();
+    let mut iters = vec![0u64; n_slots];
+    let mut queue = SlotQueue::with_slots(n_slots);
+    for (slot, e) in entries.iter().enumerate() {
         // first write requested when the CE's window opens
-        heap.push(Request { time: e.start_offset.max(0.0), layer_slot: slot, iteration: 0 });
+        queue.push(slot, e.start_offset.max(0.0));
     }
 
     let mut dma_free = 0.0_f64;
     let mut dma_busy = 0.0_f64;
-    let mut events = 0_u64;
+    let mut processed = 0_u64;
+    let mut skipped = 0_u64;
     let mut max_read_end = 0.0_f64;
+    let mut truncated = false;
 
-    while let Some(req) = heap.pop() {
-        let e = &schedule.entries[req.layer_slot];
+    let (rounds_total, n_per_round) = schedule.hyperperiod();
+    let round_events: u64 = n_per_round.iter().sum();
+    let mut detector = if cfg.fast_forward && !cfg.trace && rounds_total >= MIN_ROUNDS {
+        Some(Detector::new())
+    } else {
+        None
+    };
+
+    while let Some((slot, time)) = queue.pop() {
+        let e = &entries[slot];
         // DMA burst (write side, clk_dma domain folded into t_wr)
-        let w_start = req.time.max(dma_free);
+        let w_start = time.max(dma_free);
         let w_end = w_start + e.t_wr;
         dma_free = w_end;
         dma_busy += e.t_wr;
@@ -147,40 +170,96 @@ pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult 
         // CE read iteration (compute-clock domain). The buffer phase chases
         // the write pointer (fine-grained RAW): it cannot finish before the
         // write finishes, but overlaps it word-by-word.
-        let s_start = prev_read_end[req.layer_slot];
+        let s_start = prev_read_end[slot];
         let s_end = s_start + e.t_rd_static;
         let unconstrained_end = s_end + e.t_rd_buffer;
         let r_end = unconstrained_end.max(w_end);
         let stall = r_end - unconstrained_end;
         let b_start = s_end;
-        prev_read_end[req.layer_slot] = r_end;
+        prev_read_end[slot] = r_end;
         per_layer_stall[e.layer] += stall;
         // Attribution: had the port been free at request time the write
-        // would have ended at `req.time + t_wr`; any stall beyond that point
+        // would have ended at `time + t_wr`; any stall beyond that point
         // is queueing behind other layers' bursts (contention), the rest is
         // the burst itself outrunning the read window (intrinsic RAW wait).
         if stall > 0.0 {
-            let uncontended_end = req.time + e.t_wr;
+            let uncontended_end = time + e.t_wr;
             let intrinsic = (uncontended_end - unconstrained_end).max(0.0).min(stall);
             per_layer_contention[e.layer] += stall - intrinsic;
         }
         max_read_end = max_read_end.max(r_end);
-        events += 1;
+        processed += 1;
+        iters[slot] += 1;
 
-        if cfg.trace && traces.len() + 4 <= cfg.max_trace_events {
-            traces.push(TraceEvent { layer: e.layer, kind: TraceKind::WriteBurst, start: w_start, end: w_end });
-            traces.push(TraceEvent { layer: e.layer, kind: TraceKind::ReadStatic, start: s_start, end: s_end });
-            if stall > 0.0 {
-                traces.push(TraceEvent { layer: e.layer, kind: TraceKind::Stall, start: s_end, end: b_start });
+        if cfg.trace && !truncated {
+            // reserve exactly what this event pushes (the stall bar only
+            // exists when the RAW check bit); stop at the first event that
+            // does not fit so the trace is always a strict prefix
+            let needed = if stall > 0.0 { 4 } else { 3 };
+            if traces.len() + needed <= cfg.max_trace_events {
+                traces.push(TraceEvent { layer: e.layer, kind: TraceKind::WriteBurst, start: w_start, end: w_end });
+                traces.push(TraceEvent { layer: e.layer, kind: TraceKind::ReadStatic, start: s_start, end: s_end });
+                if stall > 0.0 {
+                    traces.push(TraceEvent { layer: e.layer, kind: TraceKind::Stall, start: s_end, end: b_start });
+                }
+                traces.push(TraceEvent { layer: e.layer, kind: TraceKind::ReadBuffer, start: b_start, end: r_end });
+            } else {
+                truncated = true;
             }
-            traces.push(TraceEvent { layer: e.layer, kind: TraceKind::ReadBuffer, start: b_start, end: r_end });
         }
 
-        if req.iteration + 1 < e.r {
+        if iters[slot] < e.r {
             // buffer freed once its read phase completes
-            heap.push(Request { time: r_end, layer_slot: req.layer_slot, iteration: req.iteration + 1 });
+            queue.push(slot, r_end);
+        }
+
+        // Round boundary: sample the state vector; once two consecutive
+        // rounds match, collapse the remaining whole rounds analytically
+        // and event-step only the exact tail.
+        if detector.is_some() && processed % round_events == 0 {
+            let delta = detector.as_mut().unwrap().observe(
+                &iters,
+                &prev_read_end,
+                dma_free,
+                dma_busy,
+                &per_layer_stall,
+                &per_layer_contention,
+                &n_per_round,
+            );
+            if let Some(delta) = delta {
+                let rounds_left = entries
+                    .iter()
+                    .enumerate()
+                    .map(|(s, e)| (e.r - iters[s]) / n_per_round[s])
+                    .min()
+                    .unwrap_or(0);
+                if rounds_left > 0 {
+                    let rf = rounds_left as f64;
+                    let shift = delta.dt * rf;
+                    dma_free += shift;
+                    dma_busy += delta.dma_busy * rf;
+                    for l in 0..per_layer_stall.len() {
+                        per_layer_stall[l] += delta.stall[l] * rf;
+                        per_layer_contention[l] += delta.contention[l] * rf;
+                    }
+                    queue.clear();
+                    for (s, e) in entries.iter().enumerate() {
+                        prev_read_end[s] += shift;
+                        iters[s] += n_per_round[s] * rounds_left;
+                        max_read_end = max_read_end.max(prev_read_end[s]);
+                        if iters[s] < e.r {
+                            queue.push(s, prev_read_end[s]);
+                        }
+                    }
+                    skipped += round_events * rounds_left;
+                }
+                // one extrapolation per run; the tail is simulated exactly
+                detector = None;
+            }
         }
     }
+
+    debug_assert_eq!(processed + skipped, total_events, "every scheduled event accounted for");
 
     let makespan = ideal_finish.max(max_read_end);
     let total_stall: f64 = per_layer_stall.iter().sum();
@@ -191,7 +270,9 @@ pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult 
         per_layer_stall_s: per_layer_stall,
         per_layer_contention_s: per_layer_contention,
         dma_busy_frac: if makespan > 0.0 { dma_busy / makespan } else { 0.0 },
-        events,
+        events: processed + skipped,
+        events_processed: processed,
+        truncated,
         traces,
     }
 }
@@ -211,6 +292,8 @@ mod tests {
         let sim = simulate(&r.design, &dev, &SimConfig::default());
         assert_eq!(sim.total_stall_s, 0.0);
         assert_eq!(sim.events, 0);
+        assert_eq!(sim.events_processed, 0);
+        assert!(!sim.truncated);
         let rel = (sim.latency_ms - r.latency_ms).abs() / r.latency_ms;
         assert!(rel < 1e-9, "sim {} vs analytic {}", sim.latency_ms, r.latency_ms);
     }
@@ -252,5 +335,91 @@ mod tests {
         let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
         let sim = simulate(&r.design, &dev, &SimConfig::default());
         assert!((0.0..=1.0).contains(&sim.dma_busy_frac), "{}", sim.dma_busy_frac);
+    }
+
+    #[test]
+    fn fast_forward_skips_most_events_and_matches_the_full_loop() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let batch = 8u64;
+        let fast = simulate(&r.design, &dev, &SimConfig { batch, ..Default::default() });
+        let full = simulate(
+            &r.design,
+            &dev,
+            &SimConfig { batch, fast_forward: false, ..Default::default() },
+        );
+        // semantic event count unchanged; the loop stepped only a sliver
+        assert_eq!(fast.events, full.events);
+        assert_eq!(full.events_processed, full.events);
+        assert!(
+            fast.events_processed * 10 < fast.events,
+            "fast-forward must engage on a balanced schedule: stepped {} of {}",
+            fast.events_processed,
+            fast.events
+        );
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1e-300);
+        assert!(close(fast.makespan_s, full.makespan_s), "{} vs {}", fast.makespan_s, full.makespan_s);
+        assert!(close(fast.total_stall_s, full.total_stall_s) || (fast.total_stall_s - full.total_stall_s).abs() < 1e-12 * full.makespan_s);
+        assert!(close(fast.dma_busy_frac, full.dma_busy_frac));
+        for (a, b) in fast.per_layer_stall_s.iter().zip(&full.per_layer_stall_s) {
+            assert!(close(*a, *b) || (a - b).abs() < 1e-12 * full.makespan_s, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fast_forward_off_is_bit_identical_to_the_reference_oracle() {
+        let net = models::resnet18(Quant::W4A5);
+        let dev = Device::zcu102();
+        let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+        let cfg = SimConfig { batch: 4, fast_forward: false, ..Default::default() };
+        let full = simulate(&r.design, &dev, &cfg);
+        let oracle = crate::sim::reference::simulate(&r.design, &dev, &cfg);
+        assert_eq!(full, oracle, "indexed queue must not change the event order");
+    }
+
+    #[test]
+    fn trace_cap_reserves_exactly_what_is_pushed_and_reports_truncation() {
+        let (d, dev) = crate::sim::fig5_scenario(true);
+        // generous cap: everything fits, nothing truncated
+        let all = simulate(
+            &d,
+            &dev,
+            &SimConfig { batch: 1, trace: true, max_trace_events: 4096, ..Default::default() },
+        );
+        assert!(!all.truncated);
+        assert!(!all.traces.is_empty());
+        // tight cap: the prefix packs exactly as many whole events as fit
+        // (an event is 3 intervals, 4 when it stalls — the old `len + 4 <=
+        // cap` check wrongly reserved 4 for stall-free events too)
+        let cap = 7usize;
+        let cut = simulate(
+            &d,
+            &dev,
+            &SimConfig { batch: 1, trace: true, max_trace_events: cap, ..Default::default() },
+        );
+        assert!(cut.truncated, "events beyond the cap must be reported");
+        assert!(cut.traces.len() <= cap);
+        let mut sizes = Vec::new();
+        let mut cur = 0usize;
+        for t in &all.traces {
+            if t.kind == TraceKind::WriteBurst && cur > 0 {
+                sizes.push(cur);
+                cur = 0;
+            }
+            cur += 1;
+        }
+        sizes.push(cur);
+        let mut expect = 0usize;
+        for s in sizes {
+            if expect + s > cap {
+                break;
+            }
+            expect += s;
+        }
+        assert_eq!(cut.traces.len(), expect, "cap packs whole events exactly");
+        assert_eq!(cut.traces[..], all.traces[..cut.traces.len()], "truncation keeps a prefix");
+        // trace runs never fast-forward: every event was stepped
+        assert_eq!(cut.events_processed, cut.events);
     }
 }

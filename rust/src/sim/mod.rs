@@ -18,11 +18,23 @@
 //! joint event simulation interleaves every tenant's burst train on the
 //! port and attributes queueing stall as contention — see
 //! [`simulate_colocated`].
+//!
+//! The engines **fast-forward** through the steady state (PR 9): a static
+//! burst schedule makes the event stream periodic after warm-up, so the
+//! engine detects the repeating hyperperiod round and extrapolates the
+//! remaining iterations in O(1) per slot instead of stepping
+//! O(batch · Σ r) events ([`SimConfig::fast_forward`], on by default).
+//! The pre-fast-forward engines survive as [`reference`] — the equivalence
+//! oracle `tests/sim_equivalence.rs` and `benches/sim_perf.rs` pin the
+//! fast engines against.
 
 mod colocated;
 mod engine;
 mod fifo;
 mod partitioned;
+mod queue;
+pub mod reference;
+mod steady;
 mod trace;
 
 pub use colocated::{simulate_colocated, ColocatedSimResult, TenantSim};

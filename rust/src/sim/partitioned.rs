@@ -66,6 +66,12 @@ impl PartitionedSimResult {
     pub fn events(&self) -> u64 {
         self.per_partition.iter().map(|p| p.events).sum()
     }
+
+    /// Events the per-partition engines actually stepped, summed (below
+    /// [`Self::events`] when the fast-forward extrapolated).
+    pub fn events_processed(&self) -> u64 {
+        self.per_partition.iter().map(|p| p.events_processed).sum()
+    }
 }
 
 /// Simulate a chain of `(design, device)` partitions connected by streaming
@@ -76,10 +82,21 @@ pub fn simulate_partitioned(
     stages: &[(&Design, &Device)],
     cfg: &SimConfig,
 ) -> PartitionedSimResult {
+    simulate_partitioned_with(stages, cfg, simulate)
+}
+
+/// The chain/link composition, parametrized over the per-partition engine
+/// so [`super::reference`] reuses it verbatim around the pre-fast-forward
+/// engine — the analytic link model is engine-independent.
+pub(crate) fn simulate_partitioned_with(
+    stages: &[(&Design, &Device)],
+    cfg: &SimConfig,
+    engine: impl Fn(&Design, &Device, &SimConfig) -> SimResult,
+) -> PartitionedSimResult {
     assert!(!stages.is_empty(), "simulate_partitioned needs at least one stage");
 
     let per_partition: Vec<SimResult> =
-        stages.iter().map(|(design, device)| simulate(design, device, cfg)).collect();
+        stages.iter().map(|(design, device)| engine(design, device, cfg)).collect();
 
     let links: Vec<LinkSpec> = LinkSpec::chain(stages);
 

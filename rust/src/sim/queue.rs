@@ -1,0 +1,175 @@
+//! Indexed min-queue over burst slots.
+//!
+//! The event engines maintain one outstanding request per streaming slot
+//! (a slot's next burst is only requested when its previous read interval
+//! completes), so the pending set is bounded by the slot count known at
+//! schedule-build time. That turns the `BinaryHeap<Request>` of the
+//! pre-PR-9 engine — one allocation-backed heap node per event, plus the
+//! struct churn of push/pop — into an indexed binary heap over slot ids:
+//! every buffer is allocated once, sized from the schedule, and a
+//! fast-forward can [`SlotQueue::clear`] and rebuild the pending set in
+//! O(slots) when it re-seeds the tail simulation.
+//!
+//! Ordering matches the reference engine's `Request` ordering exactly:
+//! minimum `(time, slot)`, ties broken toward the lower slot id, so the two
+//! engines pop events in the same sequence and stay bit-identical until the
+//! first extrapolation.
+
+/// Marker for "slot not currently queued" in the position index.
+const ABSENT: usize = usize::MAX;
+
+/// Preallocated indexed binary min-heap keyed by `(time, slot id)`.
+#[derive(Debug)]
+pub(crate) struct SlotQueue {
+    /// Heap of slot ids, ordered by `(key[slot], slot)`.
+    heap: Vec<usize>,
+    /// `pos[slot]` = index of `slot` in `heap`, or [`ABSENT`].
+    pos: Vec<usize>,
+    /// `key[slot]` = request time of the slot's pending event.
+    key: Vec<f64>,
+}
+
+impl SlotQueue {
+    /// An empty queue able to hold `n_slots` distinct slots.
+    pub fn with_slots(n_slots: usize) -> SlotQueue {
+        SlotQueue { heap: Vec::with_capacity(n_slots), pos: vec![ABSENT; n_slots], key: vec![0.0; n_slots] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Queue `slot`'s next event at `time`. The slot must not already be
+    /// queued (one outstanding request per slot, by construction).
+    pub fn push(&mut self, slot: usize, time: f64) {
+        debug_assert_eq!(self.pos[slot], ABSENT, "slot {slot} already queued");
+        self.key[slot] = time;
+        self.pos[slot] = self.heap.len();
+        self.heap.push(slot);
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    /// Pop the earliest pending `(slot, time)`; ties go to the lower slot.
+    pub fn pop(&mut self) -> Option<(usize, f64)> {
+        let top = *self.heap.first()?;
+        let last = self.heap.pop().expect("non-empty heap");
+        self.pos[top] = ABSENT;
+        if top != last {
+            self.heap[0] = last;
+            self.pos[last] = 0;
+            self.sift_down(0);
+        }
+        Some((top, self.key[top]))
+    }
+
+    /// Drop every pending event (keeps the allocations).
+    pub fn clear(&mut self) {
+        for &slot in &self.heap {
+            self.pos[slot] = ABSENT;
+        }
+        self.heap.clear();
+    }
+
+    /// Strict `(key, slot)` order — total because event times are finite.
+    #[inline]
+    fn less(&self, a: usize, b: usize) -> bool {
+        match self.key[a].partial_cmp(&self.key[b]) {
+            Some(std::cmp::Ordering::Less) => true,
+            Some(std::cmp::Ordering::Greater) => false,
+            _ => a < b,
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.less(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                self.pos[self.heap[i]] = i;
+                self.pos[self.heap[parent]] = parent;
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let mut best = i;
+            for child in [2 * i + 1, 2 * i + 2] {
+                if child < n && self.less(self.heap[child], self.heap[best]) {
+                    best = child;
+                }
+            }
+            if best == i {
+                break;
+            }
+            self.heap.swap(i, best);
+            self.pos[self.heap[i]] = i;
+            self.pos[self.heap[best]] = best;
+            i = best;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_slot_tiebreak() {
+        let mut q = SlotQueue::with_slots(5);
+        q.push(3, 2.0);
+        q.push(0, 1.0);
+        q.push(4, 1.0);
+        q.push(1, 3.0);
+        assert_eq!(q.pop(), Some((0, 1.0)), "earliest time, lower slot on tie");
+        assert_eq!(q.pop(), Some((4, 1.0)));
+        assert_eq!(q.pop(), Some((3, 2.0)));
+        assert_eq!(q.pop(), Some((1, 3.0)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn reuse_after_pop_and_clear() {
+        let mut q = SlotQueue::with_slots(3);
+        q.push(1, 5.0);
+        q.push(2, 4.0);
+        assert_eq!(q.pop(), Some((2, 4.0)));
+        q.push(2, 6.0); // re-queue the popped slot
+        assert_eq!(q.len(), 2);
+        q.clear();
+        assert!(q.is_empty());
+        q.push(0, 9.0);
+        q.push(2, 8.0);
+        q.push(1, 7.0);
+        assert_eq!(q.pop(), Some((1, 7.0)));
+        assert_eq!(q.pop(), Some((2, 8.0)));
+        assert_eq!(q.pop(), Some((0, 9.0)));
+    }
+
+    #[test]
+    fn interleaved_push_pop_matches_a_sorted_stream() {
+        // drive a synthetic self-requeueing workload: each pop schedules the
+        // slot again later, like the engine's read-chain successor events
+        let mut q = SlotQueue::with_slots(4);
+        for slot in 0..4 {
+            q.push(slot, slot as f64 * 0.25);
+        }
+        let mut last = f64::NEG_INFINITY;
+        for step in 0..64 {
+            let (slot, t) = q.pop().expect("queue stays populated");
+            assert!(t >= last, "monotone event times: {t} after {last}");
+            last = t;
+            if step < 60 {
+                q.push(slot, t + 1.0 + slot as f64 * 0.125);
+            }
+        }
+    }
+}

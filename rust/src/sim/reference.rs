@@ -1,0 +1,314 @@
+//! The pre-fast-forward event engines, preserved as the equivalence oracle
+//! (mirroring [`crate::dse::reference`], PR 2's oracle for the incremental
+//! DSE engine).
+//!
+//! These are the PR-8-era simulators verbatim: a `BinaryHeap<Request>` per
+//! run, every fragment iteration of every slot event-stepped, no steady
+//! state detection — O(batch · Σ r) always. Differences from the
+//! preserved code are limited to the [`SimResult`] shape (the new
+//! `events_processed`/`truncated` fields are filled honestly: the oracle
+//! steps everything, so `events_processed == events`) and the trace-cap
+//! accounting, which carries the PR 9 fix so trace prefixes stay
+//! comparable across engines.
+//!
+//! `tests/sim_equivalence.rs` pins the fast engines to these across the
+//! model zoo × device grid (bit-exact with `fast_forward: false`, ≤ 1e-9
+//! relative once extrapolation engages), and `benches/sim_perf.rs` measures
+//! the speedup against them for `BENCH_sim.json`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::colocated::{ColocatedSimResult, TenantSim};
+use super::engine::{ideal_finish, SimConfig, SimResult};
+use super::partitioned::{simulate_partitioned_with, PartitionedSimResult};
+use super::trace::{TraceEvent, TraceKind};
+use crate::device::Device;
+use crate::dse::Design;
+use crate::schedule::BurstSchedule;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Request {
+    time: f64,
+    layer_slot: usize, // index into the schedule entries
+    iteration: u64,
+}
+
+impl Eq for Request {}
+impl Ord for Request {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by (time, layer): reversed for BinaryHeap
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.layer_slot.cmp(&self.layer_slot))
+    }
+}
+impl PartialOrd for Request {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Pre-fast-forward single-device engine: every event through the heap.
+pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult {
+    let schedule = BurstSchedule::from_design(design, device, cfg.batch);
+    let ideal_finish = ideal_finish(design, cfg.batch);
+
+    let mut per_layer_stall = vec![0.0; design.len()];
+    let mut per_layer_contention = vec![0.0; design.len()];
+    let mut traces = Vec::new();
+
+    if schedule.entries.is_empty() {
+        return SimResult {
+            makespan_s: ideal_finish,
+            latency_ms: ideal_finish * 1e3,
+            total_stall_s: 0.0,
+            per_layer_stall_s: per_layer_stall,
+            per_layer_contention_s: per_layer_contention,
+            dma_busy_frac: 0.0,
+            events: 0,
+            events_processed: 0,
+            truncated: false,
+            traces,
+        };
+    }
+
+    // Per streaming CE: cursor of its sequential read chain.
+    let n_slots = schedule.entries.len();
+    let mut prev_read_end: Vec<f64> = schedule.entries.iter().map(|e| e.start_offset).collect();
+    let mut heap: BinaryHeap<Request> = BinaryHeap::with_capacity(n_slots * 2);
+    for (slot, e) in schedule.entries.iter().enumerate() {
+        // first write requested when the CE's window opens
+        heap.push(Request { time: e.start_offset.max(0.0), layer_slot: slot, iteration: 0 });
+    }
+
+    let mut dma_free = 0.0_f64;
+    let mut dma_busy = 0.0_f64;
+    let mut events = 0_u64;
+    let mut max_read_end = 0.0_f64;
+    let mut truncated = false;
+
+    while let Some(req) = heap.pop() {
+        let e = &schedule.entries[req.layer_slot];
+        // DMA burst (write side, clk_dma domain folded into t_wr)
+        let w_start = req.time.max(dma_free);
+        let w_end = w_start + e.t_wr;
+        dma_free = w_end;
+        dma_busy += e.t_wr;
+
+        // CE read iteration (compute-clock domain). The buffer phase chases
+        // the write pointer (fine-grained RAW): it cannot finish before the
+        // write finishes, but overlaps it word-by-word.
+        let s_start = prev_read_end[req.layer_slot];
+        let s_end = s_start + e.t_rd_static;
+        let unconstrained_end = s_end + e.t_rd_buffer;
+        let r_end = unconstrained_end.max(w_end);
+        let stall = r_end - unconstrained_end;
+        let b_start = s_end;
+        prev_read_end[req.layer_slot] = r_end;
+        per_layer_stall[e.layer] += stall;
+        // Attribution: had the port been free at request time the write
+        // would have ended at `req.time + t_wr`; any stall beyond that point
+        // is queueing behind other layers' bursts (contention), the rest is
+        // the burst itself outrunning the read window (intrinsic RAW wait).
+        if stall > 0.0 {
+            let uncontended_end = req.time + e.t_wr;
+            let intrinsic = (uncontended_end - unconstrained_end).max(0.0).min(stall);
+            per_layer_contention[e.layer] += stall - intrinsic;
+        }
+        max_read_end = max_read_end.max(r_end);
+        events += 1;
+
+        if cfg.trace && !truncated {
+            let needed = if stall > 0.0 { 4 } else { 3 };
+            if traces.len() + needed <= cfg.max_trace_events {
+                traces.push(TraceEvent { layer: e.layer, kind: TraceKind::WriteBurst, start: w_start, end: w_end });
+                traces.push(TraceEvent { layer: e.layer, kind: TraceKind::ReadStatic, start: s_start, end: s_end });
+                if stall > 0.0 {
+                    traces.push(TraceEvent { layer: e.layer, kind: TraceKind::Stall, start: s_end, end: b_start });
+                }
+                traces.push(TraceEvent { layer: e.layer, kind: TraceKind::ReadBuffer, start: b_start, end: r_end });
+            } else {
+                truncated = true;
+            }
+        }
+
+        if req.iteration + 1 < e.r {
+            // buffer freed once its read phase completes
+            heap.push(Request { time: r_end, layer_slot: req.layer_slot, iteration: req.iteration + 1 });
+        }
+    }
+
+    let makespan = ideal_finish.max(max_read_end);
+    let total_stall: f64 = per_layer_stall.iter().sum();
+    SimResult {
+        makespan_s: makespan,
+        latency_ms: makespan * 1e3,
+        total_stall_s: total_stall,
+        per_layer_stall_s: per_layer_stall,
+        per_layer_contention_s: per_layer_contention,
+        dma_busy_frac: if makespan > 0.0 { dma_busy / makespan } else { 0.0 },
+        events,
+        events_processed: events,
+        truncated,
+        traces,
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct JointRequest {
+    time: f64,
+    tenant: usize,
+    slot: usize,
+    iteration: u64,
+}
+
+impl Eq for JointRequest {}
+impl Ord for JointRequest {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by (time, tenant, slot): reversed for BinaryHeap
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.tenant.cmp(&self.tenant))
+            .then(other.slot.cmp(&self.slot))
+    }
+}
+impl PartialOrd for JointRequest {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Pre-fast-forward co-located engine: the joint heap over every tenant's
+/// burst train (see [`super::simulate_colocated`] for the port model).
+pub fn simulate_colocated(
+    tenants: &[(&str, &Design, &Device)],
+    device: &Device,
+    cfg: &SimConfig,
+) -> ColocatedSimResult {
+    assert!(!tenants.is_empty(), "simulate_colocated needs at least one tenant");
+
+    // 1-tenant: the single-device event simulation, verbatim.
+    if tenants.len() == 1 {
+        let (name, design, view) = tenants[0];
+        let r = simulate(design, view, cfg);
+        return ColocatedSimResult {
+            makespan_s: r.makespan_s,
+            latency_ms: r.latency_ms,
+            per_tenant: vec![TenantSim {
+                name: name.to_string(),
+                makespan_s: r.makespan_s,
+                latency_ms: r.latency_ms,
+                total_stall_s: r.total_stall_s,
+                contention_s: r.per_layer_contention_s.iter().sum(),
+                events: r.events,
+            }],
+            port_busy_frac: r.dma_busy_frac,
+            total_stall_s: r.total_stall_s,
+            events: r.events,
+            events_processed: r.events_processed,
+        };
+    }
+
+    let n = tenants.len();
+    let schedules = super::colocated::port_view_schedules(tenants, device, cfg);
+    let ideal: Vec<f64> =
+        tenants.iter().map(|&(_, design, _)| ideal_finish(design, cfg.batch)).collect();
+
+    // Per (tenant, slot): cursor of that CE's sequential read chain.
+    let mut prev_read_end: Vec<Vec<f64>> = schedules
+        .iter()
+        .map(|s| s.entries.iter().map(|e| e.start_offset).collect())
+        .collect();
+    let mut heap: BinaryHeap<JointRequest> = BinaryHeap::new();
+    for (t, s) in schedules.iter().enumerate() {
+        for (slot, e) in s.entries.iter().enumerate() {
+            heap.push(JointRequest {
+                time: e.start_offset.max(0.0),
+                tenant: t,
+                slot,
+                iteration: 0,
+            });
+        }
+    }
+
+    let mut dma_free = 0.0_f64;
+    let mut dma_busy = 0.0_f64;
+    let mut stall_per_tenant = vec![0.0_f64; n];
+    let mut contention_per_tenant = vec![0.0_f64; n];
+    let mut events_per_tenant = vec![0_u64; n];
+    let mut max_read_end = vec![0.0_f64; n];
+
+    while let Some(req) = heap.pop() {
+        let e = &schedules[req.tenant].entries[req.slot];
+        // the shared physical port serves one burst at a time, across ALL
+        // tenants, FIFO in request-arrival order
+        let w_start = req.time.max(dma_free);
+        let w_end = w_start + e.t_wr;
+        dma_free = w_end;
+        dma_busy += e.t_wr;
+
+        let s_start = prev_read_end[req.tenant][req.slot];
+        let s_end = s_start + e.t_rd_static;
+        let unconstrained_end = s_end + e.t_rd_buffer;
+        let r_end = unconstrained_end.max(w_end);
+        let stall = r_end - unconstrained_end;
+        prev_read_end[req.tenant][req.slot] = r_end;
+        stall_per_tenant[req.tenant] += stall;
+        if stall > 0.0 {
+            let uncontended_end = req.time + e.t_wr;
+            let intrinsic = (uncontended_end - unconstrained_end).max(0.0).min(stall);
+            contention_per_tenant[req.tenant] += stall - intrinsic;
+        }
+        max_read_end[req.tenant] = max_read_end[req.tenant].max(r_end);
+        events_per_tenant[req.tenant] += 1;
+
+        if req.iteration + 1 < e.r {
+            heap.push(JointRequest {
+                time: r_end,
+                tenant: req.tenant,
+                slot: req.slot,
+                iteration: req.iteration + 1,
+            });
+        }
+    }
+
+    let per_tenant: Vec<TenantSim> = (0..n)
+        .map(|t| {
+            let makespan = ideal[t].max(max_read_end[t]);
+            TenantSim {
+                name: tenants[t].0.to_string(),
+                makespan_s: makespan,
+                latency_ms: makespan * 1e3,
+                total_stall_s: stall_per_tenant[t],
+                contention_s: contention_per_tenant[t],
+                events: events_per_tenant[t],
+            }
+        })
+        .collect();
+
+    let makespan = per_tenant.iter().map(|t| t.makespan_s).fold(0.0_f64, f64::max);
+    let events: u64 = events_per_tenant.iter().sum();
+    ColocatedSimResult {
+        makespan_s: makespan,
+        latency_ms: makespan * 1e3,
+        port_busy_frac: if makespan > 0.0 { dma_busy / makespan } else { 0.0 },
+        total_stall_s: stall_per_tenant.iter().sum(),
+        events,
+        events_processed: events,
+        per_tenant,
+    }
+}
+
+/// Pre-fast-forward partitioned simulation: the shared chain/link
+/// composition over this module's per-partition engine.
+pub fn simulate_partitioned(
+    stages: &[(&Design, &Device)],
+    cfg: &SimConfig,
+) -> PartitionedSimResult {
+    simulate_partitioned_with(stages, cfg, simulate)
+}

@@ -1,0 +1,233 @@
+//! Steady-state detection for the fast-forward engines.
+//!
+//! A static burst schedule makes the event stream eventually periodic: the
+//! dynamics are only `+` and `max` over fixed per-slot increments, so once
+//! the warm-up transient (pipeline fill offsets, initial port queueing)
+//! dies out, the whole system state advances by one uniform time delta per
+//! hyperperiod round — the same events in the same order, translated in
+//! time. The detector samples the state vector at round boundaries (every
+//! `Σ_l n_l` processed events, see
+//! [`crate::schedule::BurstSchedule::hyperperiod`]) and declares steady
+//! state when three consecutive snapshots show two identical windows:
+//! exact per-slot event counts (`n_l` each), a uniform time advance on
+//! every read cursor and on the DMA port clock, and repeating per-window
+//! increments of the stall/contention/busy accumulators.
+//!
+//! Time comparisons allow only FP rounding noise (a few ulp at the state's
+//! magnitude plus a `1e-10` relative-to-delta floor): because a translated
+//! re-execution of a round performs the identical operation sequence, true
+//! steady state matches to the ulp, while a still-converging transient
+//! misses and the engine simply keeps stepping — a false negative costs
+//! events, never correctness.
+
+/// State vector sampled at one round boundary.
+#[derive(Debug, Clone)]
+struct Snapshot {
+    iters: Vec<u64>,
+    read_end: Vec<f64>,
+    dma_free: f64,
+    dma_busy: f64,
+    stall: Vec<f64>,
+    contention: Vec<f64>,
+}
+
+/// Per-round increments of the detected periodic orbit.
+#[derive(Debug, Clone)]
+pub(crate) struct RoundDelta {
+    /// Uniform time advance of every cursor per round, seconds.
+    pub dt: f64,
+    /// DMA-port busy time accrued per round, seconds.
+    pub dma_busy: f64,
+    /// Per-accumulator stall increment per round (layer or tenant indexed,
+    /// matching whatever the caller accumulates into).
+    pub stall: Vec<f64>,
+    /// Per-accumulator contention increment per round.
+    pub contention: Vec<f64>,
+}
+
+/// Rolling three-snapshot window over round boundaries.
+#[derive(Debug)]
+pub(crate) struct Detector {
+    snaps: Vec<Snapshot>,
+}
+
+impl Detector {
+    pub fn new() -> Detector {
+        Detector { snaps: Vec::with_capacity(3) }
+    }
+
+    /// Record a round-boundary snapshot; returns the per-round deltas once
+    /// the last two windows match exactly (up to FP rounding).
+    #[allow(clippy::too_many_arguments)]
+    pub fn observe(
+        &mut self,
+        iters: &[u64],
+        read_end: &[f64],
+        dma_free: f64,
+        dma_busy: f64,
+        stall: &[f64],
+        contention: &[f64],
+        n_per_round: &[u64],
+    ) -> Option<RoundDelta> {
+        let cur = Snapshot {
+            iters: iters.to_vec(),
+            read_end: read_end.to_vec(),
+            dma_free,
+            dma_busy,
+            stall: stall.to_vec(),
+            contention: contention.to_vec(),
+        };
+        if self.snaps.len() == 3 {
+            self.snaps.rotate_left(1);
+            self.snaps[2] = cur;
+        } else {
+            self.snaps.push(cur);
+        }
+        if self.snaps.len() < 3 {
+            return None;
+        }
+        let (a, b, c) = (&self.snaps[0], &self.snaps[1], &self.snaps[2]);
+
+        // Event counts must advance by exactly n_l per slot in BOTH windows
+        // — integer, no tolerance.
+        for s in 0..n_per_round.len() {
+            if c.iters[s] - b.iters[s] != n_per_round[s] || b.iters[s] - a.iters[s] != n_per_round[s]
+            {
+                return None;
+            }
+        }
+
+        let dt = c.dma_free - b.dma_free;
+        if !dt.is_finite() || dt <= 0.0 {
+            return None;
+        }
+        // Rounding-noise tolerance: a handful of ulp at the compared
+        // magnitude, plus a tiny relative-to-dt floor. Scaled this tight,
+        // only a genuinely locked orbit matches; extrapolating it amplifies
+        // at most ulp-level error (well inside the 1e-9 equivalence gate).
+        let near = |x: f64, y: f64, mag: f64| {
+            (x - y).abs() <= 1e-10 * dt + 64.0 * f64::EPSILON * mag.abs().max(dt)
+        };
+        if !near(b.dma_free - a.dma_free, dt, c.dma_free) {
+            return None;
+        }
+        for s in 0..n_per_round.len() {
+            let mag = c.read_end[s];
+            if !near(c.read_end[s] - b.read_end[s], dt, mag)
+                || !near(b.read_end[s] - a.read_end[s], dt, mag)
+            {
+                return None;
+            }
+        }
+        if !near(c.dma_busy - b.dma_busy, b.dma_busy - a.dma_busy, c.dma_busy) {
+            return None;
+        }
+        for l in 0..stall.len() {
+            if !near(c.stall[l] - b.stall[l], b.stall[l] - a.stall[l], c.stall[l]) {
+                return None;
+            }
+            if !near(
+                c.contention[l] - b.contention[l],
+                b.contention[l] - a.contention[l],
+                c.contention[l],
+            ) {
+                return None;
+            }
+        }
+
+        Some(RoundDelta {
+            dt,
+            dma_busy: c.dma_busy - b.dma_busy,
+            stall: stall.iter().zip(&b.stall).map(|(cv, bv)| cv - bv).collect(),
+            contention: contention.iter().zip(&b.contention).map(|(cv, bv)| cv - bv).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shifted(base: &[f64], k: f64, dt: f64) -> Vec<f64> {
+        base.iter().map(|v| v + k * dt).collect()
+    }
+
+    #[test]
+    fn detects_a_perfectly_periodic_orbit_on_the_third_snapshot() {
+        let mut d = Detector::new();
+        let n_per = [2u64, 1];
+        let base = [1.0e-3, 1.5e-3];
+        let dt = 2.5e-4;
+        for k in 0..3u64 {
+            let iters = [10 + 2 * k, 5 + k];
+            let got = d.observe(
+                &iters,
+                &shifted(&base, k as f64, dt),
+                2.0e-3 + k as f64 * dt,
+                4.0e-4 + k as f64 * 1e-5,
+                &[0.0, 0.0],
+                &[0.0, 0.0],
+                &n_per,
+            );
+            if k < 2 {
+                assert!(got.is_none(), "needs three snapshots");
+            } else {
+                let delta = got.expect("periodic orbit detected");
+                assert!((delta.dt - dt).abs() < 1e-18);
+                assert!((delta.dma_busy - 1e-5).abs() < 1e-18);
+                assert_eq!(delta.stall, vec![0.0, 0.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_drifting_times_and_wrong_counts() {
+        // time drift far beyond rounding noise: no detection
+        let mut d = Detector::new();
+        let n_per = [1u64];
+        for k in 0..5u64 {
+            let drift = 1e-6 * (k as f64) * (k as f64); // accelerating
+            let got = d.observe(
+                &[k],
+                &[1e-3 + drift],
+                1e-3 + drift,
+                1e-4,
+                &[0.0],
+                &[0.0],
+                &n_per,
+            );
+            assert!(got.is_none(), "drifting orbit must not detect (k={k})");
+        }
+        // exact times but a count glitch in the middle window: no detection
+        let mut d = Detector::new();
+        let counts = [0u64, 1, 3, 4];
+        for (k, &n) in counts.iter().enumerate() {
+            let t = 1e-3 + k as f64 * 1e-4;
+            let got = d.observe(&[n], &[t], t, 1e-4, &[0.0], &[0.0], &n_per);
+            assert!(got.is_none(), "count glitch must not detect (k={k})");
+        }
+    }
+
+    #[test]
+    fn repeating_stall_increments_are_part_of_the_orbit() {
+        let mut d = Detector::new();
+        let n_per = [1u64];
+        let dt = 1e-4;
+        let mut last = None;
+        for k in 0..3u64 {
+            let t = 1e-3 + k as f64 * dt;
+            last = d.observe(
+                &[k],
+                &[t],
+                t,
+                1e-4 + k as f64 * 2e-5,
+                &[3e-6 * k as f64],
+                &[1e-6 * k as f64],
+                &n_per,
+            );
+        }
+        let delta = last.expect("stalling but periodic orbit detected");
+        assert!((delta.stall[0] - 3e-6).abs() < 1e-18);
+        assert!((delta.contention[0] - 1e-6).abs() < 1e-18);
+    }
+}

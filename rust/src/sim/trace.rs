@@ -191,7 +191,11 @@ mod tests {
     #[test]
     fn traces_are_well_formed() {
         let (d, dev) = fig5_scenario(true);
-        let s = simulate(&d, &dev, &SimConfig { batch: 1, trace: true, max_trace_events: 512 });
+        let s = simulate(
+            &d,
+            &dev,
+            &SimConfig { batch: 1, trace: true, max_trace_events: 512, ..Default::default() },
+        );
         assert!(!s.traces.is_empty());
         for t in &s.traces {
             assert!(t.end >= t.start, "{t:?}");
@@ -202,7 +206,11 @@ mod tests {
     #[test]
     fn csv_export_has_header_and_rows() {
         let (d, dev) = fig5_scenario(true);
-        let s = simulate(&d, &dev, &SimConfig { batch: 1, trace: true, max_trace_events: 64 });
+        let s = simulate(
+            &d,
+            &dev,
+            &SimConfig { batch: 1, trace: true, max_trace_events: 64, ..Default::default() },
+        );
         let csv = to_csv(&s.traces);
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines[0], "layer,kind,start_us,end_us");
@@ -215,7 +223,11 @@ mod tests {
     #[test]
     fn gantt_renders_both_channels() {
         let (d, dev) = fig5_scenario(false);
-        let s = simulate(&d, &dev, &SimConfig { batch: 2, trace: true, max_trace_events: 512 });
+        let s = simulate(
+            &d,
+            &dev,
+            &SimConfig { batch: 2, trace: true, max_trace_events: 512, ..Default::default() },
+        );
         let g = render_gantt(&s.traces, 100);
         assert!(g.contains("dma wr"));
         assert!(g.contains("ce rd"));

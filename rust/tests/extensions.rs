@@ -165,7 +165,11 @@ fn trace_exports_on_real_design() {
     let net = autows::models::resnet18(Quant::W4A5);
     let dev = Device::zcu102();
     let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
-    let sim = simulate(&r.design, &dev, &SimConfig { batch: 1, trace: true, max_trace_events: 256 });
+    let sim = simulate(
+        &r.design,
+        &dev,
+        &SimConfig { batch: 1, trace: true, max_trace_events: 256, ..Default::default() },
+    );
     assert!(!sim.traces.is_empty(), "streamed design must trace");
     let csv = to_csv(&sim.traces);
     assert!(csv.lines().count() > 10);

@@ -1,0 +1,282 @@
+//! Equivalence gate for the steady-state fast-forward simulator (PR 9).
+//!
+//! The fast engines (`sim::simulate`, `sim::simulate_colocated`,
+//! `sim::simulate_partitioned`) must agree with the preserved
+//! pre-fast-forward engines (`sim::reference`) on every result field —
+//! exactly for the integer event counts, to ≤1e-9 relative for every
+//! float — across the model zoo × device grid × batch sizes, and with
+//! `fast_forward: false` they must be **bit-identical** (same loop, new
+//! queue). `events_processed` is the one deliberate difference: it is the
+//! diagnostic count of events the engine stepped rather than skipped.
+//!
+//! Debug builds cap the grid at batch 8 (the reference engine grinds
+//! through every event, and a 256-batch resnet50 train is ~1e8 of them);
+//! release builds — `scripts/bench_sim.sh`, `cargo test --release` — run
+//! the full batch-256 comparison.
+
+use autows::device::Device;
+use autows::dse::{self, colocate, partition, DseConfig};
+use autows::ir::Quant;
+use autows::models;
+use autows::pipeline::{Deployment, PlacementSim};
+use autows::sim::{self, reference, simulate, SimConfig, SimResult};
+
+/// ≤1e-9 relative, with a span-scaled absolute floor for accumulators that
+/// sit at (or within rounding of) zero.
+fn close(a: f64, b: f64, span: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()) + 1e-12 * span
+}
+
+fn assert_sim_close(name: &str, fast: &SimResult, oracle: &SimResult) {
+    let span = oracle.makespan_s.max(1e-30);
+    assert_eq!(fast.events, oracle.events, "{name}: semantic event count");
+    assert!(
+        close(fast.makespan_s, oracle.makespan_s, span),
+        "{name}: makespan {} vs {}",
+        fast.makespan_s,
+        oracle.makespan_s
+    );
+    assert!(
+        close(fast.latency_ms, oracle.latency_ms, span * 1e3),
+        "{name}: latency {} vs {}",
+        fast.latency_ms,
+        oracle.latency_ms
+    );
+    assert!(
+        close(fast.total_stall_s, oracle.total_stall_s, span),
+        "{name}: stall {} vs {}",
+        fast.total_stall_s,
+        oracle.total_stall_s
+    );
+    assert!(
+        close(fast.dma_busy_frac, oracle.dma_busy_frac, 1.0),
+        "{name}: busy {} vs {}",
+        fast.dma_busy_frac,
+        oracle.dma_busy_frac
+    );
+    assert_eq!(fast.per_layer_stall_s.len(), oracle.per_layer_stall_s.len(), "{name}");
+    for (i, (&a, &b)) in
+        fast.per_layer_stall_s.iter().zip(&oracle.per_layer_stall_s).enumerate()
+    {
+        assert!(close(a, b, span), "{name}: layer {i} stall {a} vs {b}");
+    }
+    for (i, (&a, &b)) in
+        fast.per_layer_contention_s.iter().zip(&oracle.per_layer_contention_s).enumerate()
+    {
+        assert!(close(a, b, span), "{name}: layer {i} contention {a} vs {b}");
+    }
+}
+
+/// The zoo grid: every feasible (model, device) pair at several batch
+/// sizes. Known-feasible anchor cases must actually run — a silently empty
+/// grid would gate nothing.
+#[test]
+fn fast_forward_matches_reference_across_the_zoo() {
+    let zoo: &[(&str, Quant)] = &[
+        ("toy", Quant::W8A8),
+        ("resnet18", Quant::W4A5),
+        ("resnet50", Quant::W4A5),
+        ("squeezenet", Quant::W8A8),
+        ("vgg16", Quant::W4A4),
+        ("yolov5n", Quant::W8A8),
+    ];
+    let devices = [Device::zcu102(), Device::u250()];
+    let batches: &[u64] = if cfg!(debug_assertions) { &[1, 8] } else { &[1, 8, 256] };
+    let cfg = DseConfig::default();
+
+    let mut compared = Vec::new();
+    for (model, quant) in zoo {
+        let net = models::by_name(model, *quant).unwrap();
+        for dev in &devices {
+            let Some(r) = dse::run(&net, dev, &cfg) else { continue };
+            for &batch in batches {
+                let sim_cfg = SimConfig { batch, ..Default::default() };
+                let fast = simulate(&r.design, dev, &sim_cfg);
+                // debug builds: skip reference runs that would grind through
+                // tens of millions of events at unoptimized speed
+                if cfg!(debug_assertions) && fast.events > 5_000_000 {
+                    continue;
+                }
+                let oracle = reference::simulate(&r.design, dev, &sim_cfg);
+                let name = format!("{model}/{}-b{batch}", dev.name);
+                assert_sim_close(&name, &fast, &oracle);
+                assert!(
+                    fast.events_processed <= fast.events,
+                    "{name}: processed is a subset of the semantic count"
+                );
+                compared.push(name);
+            }
+        }
+    }
+    for anchor in ["resnet18/zcu102-b8", "resnet50/zcu102-b8", "resnet18/u250-b1"] {
+        assert!(
+            compared.iter().any(|n| n == anchor),
+            "anchor case {anchor} must be feasible and compared (got {compared:?})"
+        );
+    }
+}
+
+/// Batch 256 (the acceptance batch): the fast engine must actually skip —
+/// processing at least 10× fewer events than the semantic count — while
+/// its results stay self-consistent with the batch-8 run of the same
+/// design. (The full batch-256 reference comparison runs in release via
+/// the zoo grid above and `scripts/bench_sim.sh`.)
+#[test]
+fn big_batch_fast_forward_skips_and_scales() {
+    let net = models::resnet50(Quant::W4A5);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).expect("resnet50 streams on zcu102");
+
+    let small = simulate(&r.design, &dev, &SimConfig { batch: 8, ..Default::default() });
+    let big = simulate(&r.design, &dev, &SimConfig { batch: 256, ..Default::default() });
+    assert!(big.events > small.events, "more iterations, more semantic events");
+    assert!(
+        big.events_processed * 10 <= big.events,
+        "fast-forward must skip ≥10× of a 256-batch train (processed {} of {})",
+        big.events_processed,
+        big.events
+    );
+    // throughput is batch-linear once the pipeline is warm: 32× the batch
+    // takes ~32× the makespan, within a generous pipeline-fill allowance
+    let scale = big.makespan_s / small.makespan_s;
+    assert!(
+        (16.0..=64.0).contains(&scale),
+        "batch 8 -> 256 must scale the makespan ~32x, got {scale:.2}x"
+    );
+}
+
+/// With fast-forward disabled the engine is the reference loop over a
+/// different queue: results must be bit-identical, not just close.
+#[test]
+fn disabled_fast_forward_is_bit_identical_to_reference() {
+    let net = models::resnet18(Quant::W4A5);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).unwrap();
+    for batch in [1, 4] {
+        let cfg = SimConfig { batch, fast_forward: false, ..Default::default() };
+        let full = simulate(&r.design, &dev, &cfg);
+        let oracle = reference::simulate(&r.design, &dev, &cfg);
+        assert_eq!(full, oracle, "batch {batch}: full loop must be bit-identical");
+        assert_eq!(full.events, full.events_processed, "nothing skipped");
+    }
+    // the imbalanced fig5 scenario stalls: the stall path must match too
+    let (design, fig_dev) = sim::fig5_scenario(false);
+    let cfg = SimConfig { batch: 4, fast_forward: false, ..Default::default() };
+    assert_eq!(
+        simulate(&design, &fig_dev, &cfg),
+        reference::simulate(&design, &fig_dev, &cfg),
+        "stalling schedule must be bit-identical with fast-forward off"
+    );
+}
+
+/// Co-located (multi-tenant) joint simulation: fast vs reference heap.
+#[test]
+fn colocated_fast_forward_matches_reference() {
+    let nets = [models::resnet18(Quant::W4A5), models::squeezenet(Quant::W8A8)];
+    let dev = Device::zcu102();
+    let joint = colocate::colocate(&nets, &dev, &DseConfig::default()).expect("pair fits");
+    let tenants: Vec<(&str, &dse::Design, &Device)> = joint
+        .tenants
+        .iter()
+        .map(|t| (t.name.as_str(), &t.result.design, &t.view))
+        .collect();
+    let cfg = SimConfig { batch: 4, ..Default::default() };
+    let fast = sim::simulate_colocated(&tenants, &dev, &cfg);
+    let oracle = reference::simulate_colocated(&tenants, &dev, &cfg);
+
+    let span = oracle.makespan_s.max(1e-30);
+    assert_eq!(fast.events, oracle.events);
+    assert!(close(fast.makespan_s, oracle.makespan_s, span));
+    assert!(close(fast.latency_ms, oracle.latency_ms, span * 1e3));
+    assert!(close(fast.total_stall_s, oracle.total_stall_s, span));
+    assert!(close(fast.port_busy_frac, oracle.port_busy_frac, 1.0));
+    assert_eq!(fast.per_tenant.len(), oracle.per_tenant.len());
+    for (a, b) in fast.per_tenant.iter().zip(&oracle.per_tenant) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.events, b.events, "{}", a.name);
+        assert!(close(a.makespan_s, b.makespan_s, span), "{}", a.name);
+        assert!(close(a.total_stall_s, b.total_stall_s, span), "{}", a.name);
+        assert!(close(a.contention_s, b.contention_s, span), "{}", a.name);
+    }
+}
+
+/// Sharded (multi-device) chain: per-partition fast engines composed with
+/// the link model vs the same composition over the reference engine.
+#[test]
+fn partitioned_fast_forward_matches_reference() {
+    let net = models::resnet50(Quant::W4A5);
+    let devs = [Device::zcu102(), Device::zcu102()];
+    let sharded =
+        partition::partition(&net, &devs, &DseConfig::default()).expect("2x zcu102 chain");
+    let stages: Vec<(&dse::Design, &Device)> =
+        sharded.parts.iter().map(|p| (&p.result.design, &p.device)).collect();
+    let cfg = SimConfig { batch: 8, ..Default::default() };
+    let fast = sim::simulate_partitioned(&stages, &cfg);
+    let oracle = reference::simulate_partitioned(&stages, &cfg);
+
+    let span = oracle.makespan_s.max(1e-30);
+    assert!(close(fast.makespan_s, oracle.makespan_s, span));
+    assert!(close(fast.latency_ms, oracle.latency_ms, span * 1e3));
+    assert!(close(fast.steady_period_s, oracle.steady_period_s, span));
+    assert!(close(fast.total_stall_s, oracle.total_stall_s, span));
+    assert_eq!(fast.per_partition.len(), oracle.per_partition.len());
+    for (i, (a, b)) in fast.per_partition.iter().zip(&oracle.per_partition).enumerate() {
+        assert_sim_close(&format!("partition {i}"), a, b);
+    }
+    assert_eq!(fast.links.len(), oracle.links.len());
+}
+
+/// Fleet rollup: the (now parallel) per-placement fan-out must agree with
+/// reference simulations of each placement, in placement order.
+#[test]
+fn fleet_simulation_matches_per_placement_reference() {
+    use autows::dse::FleetPlacement;
+    let fleet = Deployment::fleet(
+        [
+            Deployment::for_model("resnet18").quant(Quant::W4A5),
+            Deployment::for_model("squeezenet").quant(Quant::W8A8),
+        ],
+        &["zcu102", "zc706"],
+    )
+    .unwrap()
+    .explore_uncached(&DseConfig::default())
+    .expect("pair places on the pool")
+    .schedule();
+    let pool = [Device::zcu102(), Device::zc706()];
+
+    let cfg = SimConfig { batch: 4, ..Default::default() };
+    let report = fleet.simulate(&cfg);
+    assert_eq!(report.per_placement.len(), fleet.placements().len());
+
+    for (sim, placement) in report.per_placement.iter().zip(fleet.placements()) {
+        match (sim, placement) {
+            (PlacementSim::Solo(fast), FleetPlacement::Solo { device, result, .. }) => {
+                let oracle = reference::simulate(&result.design, &pool[*device], &cfg);
+                assert_sim_close("fleet solo", fast, &oracle);
+            }
+            (PlacementSim::Sharded(fast), FleetPlacement::Sharded { result, .. }) => {
+                let stages: Vec<(&dse::Design, &Device)> =
+                    result.parts.iter().map(|p| (&p.result.design, &p.device)).collect();
+                let oracle = reference::simulate_partitioned(&stages, &cfg);
+                let span = oracle.makespan_s.max(1e-30);
+                assert!(close(fast.makespan_s, oracle.makespan_s, span), "fleet shard");
+                assert!(close(fast.total_stall_s, oracle.total_stall_s, span));
+            }
+            (PlacementSim::Colocated(fast), FleetPlacement::Colocated { device, result, .. }) => {
+                let tenants: Vec<(&str, &dse::Design, &Device)> = result
+                    .tenants
+                    .iter()
+                    .map(|t| (t.name.as_str(), &t.result.design, &t.view))
+                    .collect();
+                let oracle = reference::simulate_colocated(&tenants, &pool[*device], &cfg);
+                let span = oracle.makespan_s.max(1e-30);
+                assert_eq!(fast.events, oracle.events);
+                assert!(close(fast.makespan_s, oracle.makespan_s, span), "fleet colo");
+                assert!(close(fast.total_stall_s, oracle.total_stall_s, span));
+            }
+            (sim, placement) => {
+                panic!("placement/simulation shape mismatch: {placement:?} vs {sim:?}")
+            }
+        }
+    }
+}

@@ -14,8 +14,9 @@ cargo build --release
 # root, so a bare filename would land in rust/.)
 cargo bench --bench dse_perf -- --compare --warm --json "$PWD/BENCH_dse.json"
 
-# Simulator hot path (kept in the same report cadence; its own assertions
-# print to stdout).
+# Simulator hot path (kept in the same report cadence; the full
+# compare-mode run with its equivalence/acceptance assertions and the
+# BENCH_sim.json artifact lives in scripts/bench_sim.sh).
 cargo bench --bench sim_perf
 
 echo

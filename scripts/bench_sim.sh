@@ -1,0 +1,101 @@
+#!/usr/bin/env bash
+# Build release and record the simulator performance trajectory.
+#
+# Writes BENCH_sim.json at the repo root (next to BENCH_dse.json and
+# BENCH_serve.json): per (model/device, batch) case, the semantic event
+# count, the events the fast-forward engine actually processed, the
+# events_ratio between the two, the fast and reference median wall times
+# and their speedup. Always runs sim_perf in --compare mode, so the bench
+# itself enforces the ≤1e-9 fast-vs-reference equivalence on every case
+# and the acceptance gates on resnet50/zcu102 at batch=256 (≥10× fewer
+# processed events, ≥5× wall speedup).
+#
+# Regression gate: when the repo has a *committed* BENCH_sim.json baseline
+# (git show HEAD:BENCH_sim.json), a matching case whose fast wall time or
+# processed-event count grows more than 20% over the baseline fails the
+# run — or just warns when --advisory is passed (CI uses --advisory so
+# quick-run jitter cannot hard-fail unrelated changes). Pass --quick for
+# the small CI-cadence grid. Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# (Absolute path: cargo runs bench binaries with cwd set to the package
+# root, so a bare filename would land in rust/. The non-empty array also
+# keeps `set -u` happy on pre-4.4 bash when no flags are given.)
+ARGS=(--compare --json "$PWD/BENCH_sim.json")
+ADVISORY=0
+for arg in "$@"; do
+    case "$arg" in
+        --quick) ARGS=(--quick "${ARGS[@]}") ;;
+        --advisory) ADVISORY=1 ;;
+        *) echo "unknown flag: $arg (known: --quick --advisory)" >&2; exit 2 ;;
+    esac
+done
+
+cargo build --release
+
+cargo bench --bench sim_perf -- "${ARGS[@]}"
+
+echo
+echo "BENCH_sim.json:"
+cat BENCH_sim.json
+
+# ---- regression gate against the committed baseline ------------------------
+# Cases are keyed by name (model/device-bBATCH): a baseline recorded with a
+# different grid (quick vs full) simply has no matching keys for the extra
+# cases and gates nothing on them.
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "regression gate: python3 unavailable; skipped"
+    exit 0
+fi
+BASELINE="$(mktemp)"
+trap 'rm -f "$BASELINE"' EXIT
+if ! git show HEAD:BENCH_sim.json >"$BASELINE" 2>/dev/null; then
+    echo "regression gate: no committed BENCH_sim.json baseline; skipped"
+    exit 0
+fi
+echo
+echo "== simulator regression gate (>20% wall-time or processed-event growth vs committed baseline) =="
+ADVISORY="$ADVISORY" BASELINE="$BASELINE" python3 - <<'PY'
+import json, os, sys
+
+def points(doc):
+    return {c["name"]: (c.get("fast_median_s"), c.get("events_processed"))
+            for c in doc.get("cases", [])}
+
+with open(os.environ["BASELINE"]) as f:
+    base = points(json.load(f))
+with open("BENCH_sim.json") as f:
+    cur = points(json.load(f))
+
+regressions = []
+matched = 0
+for name, (b_wall, b_ev) in sorted(base.items()):
+    if name not in cur:
+        continue
+    c_wall, c_ev = cur[name]
+    matched += 1
+    bad = []
+    if b_wall and c_wall and c_wall > 1.2 * b_wall:
+        bad.append(f"wall {b_wall:.3e}s -> {c_wall:.3e}s")
+    if b_ev and c_ev and c_ev > 1.2 * b_ev:
+        bad.append(f"processed events {b_ev} -> {c_ev}")
+    tag = "REG" if bad else "OK "
+    detail = "; ".join(bad) if bad else \
+        f"wall {c_wall:.3e}s, {c_ev} processed events"
+    print(f"  {tag} {name:<28} {detail}")
+    if bad:
+        regressions.append(name)
+
+if not matched:
+    print("  no comparable cases (grid changed); nothing gated")
+elif regressions:
+    msg = f"{len(regressions)} case(s) regressed >20% vs committed baseline"
+    if os.environ.get("ADVISORY") == "1":
+        print(f"  WARNING (advisory): {msg}")
+    else:
+        print(f"  FAIL: {msg}")
+        sys.exit(1)
+else:
+    print(f"  all {matched} comparable cases within 20% of baseline")
+PY

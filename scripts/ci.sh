@@ -71,8 +71,13 @@ echo "== perf trajectory (BENCH_serve.json, quick sweep) =="
 # the full sweep (no flag) enforces the >20% regression gate strictly
 ./scripts/bench_serve.sh --quick --advisory
 
+echo "== perf trajectory (BENCH_sim.json, quick grid) =="
+# same --advisory reasoning; sim_perf itself still hard-asserts fast-vs-
+# reference equivalence and the fast-forward acceptance gates
+./scripts/bench_sim.sh --quick --advisory
+
 echo "== bench artifacts parse as JSON =="
-for f in BENCH_dse.json BENCH_serve.json; do
+for f in BENCH_dse.json BENCH_serve.json BENCH_sim.json; do
     [[ -s "$f" ]] || { echo "missing bench artifact: $f"; exit 1; }
     if command -v python3 >/dev/null 2>&1; then
         python3 -m json.tool "$f" >/dev/null || { echo "invalid JSON: $f"; exit 1; }
