@@ -90,7 +90,7 @@ fn pool_sweep(quick: bool) -> (SweepParams, Vec<SweepPoint>) {
         let server = Server::start_with_opts(
             move || Ok(Box::new(engine.clone()) as _),
             BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(500) },
-            ServerOptions { queue_cap: 0, workers, dispatch_shards: 0 },
+            ServerOptions { queue_cap: 0, workers, dispatch_shards: 0, telemetry: true },
         )
         .expect("sim engines boot");
         let schedule = ArrivalSchedule::poisson(requests, offered_rps, 42);
@@ -185,7 +185,7 @@ fn front_sweep(quick: bool) -> (FrontParams, Vec<FrontPoint>) {
         let server = Server::start_with_opts(
             move || Ok(Box::new(engine.clone()) as _),
             BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(200) },
-            ServerOptions { queue_cap: 0, workers, dispatch_shards: 0 },
+            ServerOptions { queue_cap: 0, workers, dispatch_shards: 0, telemetry: true },
         )
         .expect("sim engines boot");
         let t0 = Instant::now();
@@ -279,7 +279,7 @@ fn fleet_sweep(quick: bool) -> FleetReport {
         Server::start_with_opts(
             move || Ok(Box::new(engine.clone()) as _),
             BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(500) },
-            ServerOptions { queue_cap: 0, workers: 1, dispatch_shards: 0 },
+            ServerOptions { queue_cap: 0, workers: 1, dispatch_shards: 0, telemetry: true },
         )
         .expect("sim engines boot")
     };
@@ -325,6 +325,103 @@ fn fleet_sweep(quick: bool) -> FleetReport {
     }
 }
 
+struct TelemetryReport {
+    rounds: usize,
+    best_off_rps: f64,
+    best_on_rps: f64,
+    /// `best_on / best_off` achieved-rps at front saturation — the span
+    /// rings' hot-path cost. Gated ≥ 0.98 in `main`.
+    ratio: f64,
+    spans_recorded: u64,
+}
+
+/// The telemetry overhead gate: the front-saturation configuration at
+/// `workers = 8`, run paired with span recording off and on. The seqlock
+/// span rings ride the hottest path this bench has (three records per
+/// batch on the worker, one per dispatch on the shard), so the on-leg's
+/// achieved rps must stay within 2% of the off-leg. Paired best-of-N sheds
+/// scheduler noise: both legs get the same seeds, and only the best round
+/// of each is compared.
+fn telemetry_overhead(quick: bool) -> TelemetryReport {
+    let net = autows::models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).expect("toy cnn fits zcu102");
+    let input_len = 16usize;
+    let template = FrontEngine {
+        inner: SimOnlyEngine { design: r.design, device: dev, input_len, output_len: 4 },
+        batch_time: Duration::from_secs_f64(1e-3),
+    };
+    let paced_batch_s = template.batch_time.as_secs_f64();
+    let offered_rps = 1.25 * 8.0 * MAX_BATCH as f64 / paced_batch_s;
+    let submitters = 4usize;
+    let requests = if quick { 4000 } else { 8000 };
+    let per = requests / submitters;
+    let rounds = if quick { 2 } else { 3 };
+
+    let run_leg = |telemetry: bool, seed: u64| -> (f64, u64) {
+        let engine = template.clone();
+        let server = Server::start_with_opts(
+            move || Ok(Box::new(engine.clone()) as _),
+            BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(200) },
+            ServerOptions { queue_cap: 0, workers: 8, dispatch_shards: 0, telemetry },
+        )
+        .expect("sim engines boot");
+        let t0 = Instant::now();
+        let results: Vec<LoadResult> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..submitters)
+                .map(|k| {
+                    let server = &server;
+                    s.spawn(move || {
+                        let schedule = ArrivalSchedule::poisson(
+                            per,
+                            offered_rps / submitters as f64,
+                            seed + k as u64,
+                        );
+                        run_open_loop(&schedule, || server.submit(vec![0.5; input_len]))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("submitter thread")).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64().max(1e-12);
+        let completed: usize = results.iter().map(|r| r.completed).sum();
+        assert_eq!(completed, per * submitters, "telemetry leg must lose no responses");
+        assert_eq!(
+            server.serving_path_locks(),
+            0,
+            "telemetry must not put a lock on the serving path"
+        );
+        let spans = server.spans_recorded();
+        if telemetry {
+            assert!(spans > 0, "the telemetry-on leg must record spans");
+        } else {
+            assert_eq!(spans, 0, "the telemetry-off leg must record nothing");
+        }
+        server.shutdown();
+        (completed as f64 / wall, spans)
+    };
+
+    let mut best_off = 0.0_f64;
+    let mut best_on = 0.0_f64;
+    let mut spans_recorded = 0_u64;
+    for round in 0..rounds {
+        let seed = 1000 + 10 * round as u64;
+        let (off, _) = run_leg(false, seed);
+        let (on, spans) = run_leg(true, seed);
+        best_off = best_off.max(off);
+        best_on = best_on.max(on);
+        spans_recorded = spans_recorded.max(spans);
+    }
+    let ratio = best_on / best_off.max(1e-9);
+    TelemetryReport {
+        rounds,
+        best_off_rps: best_off,
+        best_on_rps: best_on,
+        ratio,
+        spans_recorded,
+    }
+}
+
 fn json_f64(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
@@ -346,6 +443,7 @@ fn write_json(
     speedup: f64,
     front: &FrontReport,
     fleet: &FleetReport,
+    tele: &TelemetryReport,
 ) {
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"serve_pool\",\n");
@@ -430,6 +528,16 @@ fn write_json(
         "    \"router_overhead_frac\": {}\n",
         json_f64(fleet.overhead_frac)
     ));
+    out.push_str("  },\n");
+    out.push_str("  \"telemetry\": {\n");
+    out.push_str(&format!("    \"rounds\": {},\n", tele.rounds));
+    out.push_str(&format!(
+        "    \"best_off_rps\": {},\n",
+        json_f64(tele.best_off_rps)
+    ));
+    out.push_str(&format!("    \"best_on_rps\": {},\n", json_f64(tele.best_on_rps)));
+    out.push_str(&format!("    \"on_over_off_ratio\": {},\n", json_f64(tele.ratio)));
+    out.push_str(&format!("    \"spans_recorded\": {}\n", tele.spans_recorded));
     out.push_str("  }\n}\n");
     std::fs::write(path, out).expect("write BENCH_serve.json");
     println!("wrote {path}");
@@ -561,10 +669,17 @@ fn main() {
     }
     println!("\nrouter overhead: {:.1}% of direct achieved-rps", fleet.overhead_frac * 100.0);
 
+    println!("\n=== Telemetry overhead (span recording off vs on at front saturation) ===\n");
+    let tele = telemetry_overhead(quick);
+    println!("leg      best(rps)   (best of {} paired rounds, workers=8)", tele.rounds);
+    println!("off      {:>9.0}", tele.best_off_rps);
+    println!("on       {:>9.0}   ({} spans recorded)", tele.best_on_rps, tele.spans_recorded);
+    println!("\ntelemetry on/off achieved-rps ratio: {:.3}", tele.ratio);
+
     if let Some(path) = json_path {
         let front =
             FrontReport { params: &fparams, points: &fpoints, speedup_w8_over_w1: front_speedup };
-        write_json(&path, &params, &points, speedup, &front, &fleet);
+        write_json(&path, &params, &points, speedup, &front, &fleet, &tele);
     }
     assert!(
         speedup >= 2.0,
@@ -580,6 +695,14 @@ fn main() {
         "the router must cost under 10%: routed {:.0} rps vs direct {:.0} rps",
         fleet.routed.achieved_rps,
         fleet.direct.achieved_rps
+    );
+    assert!(
+        tele.ratio >= 0.98,
+        "span recording must cost under 2% at front saturation: \
+         on {:.0} rps vs off {:.0} rps (ratio {:.3})",
+        tele.best_on_rps,
+        tele.best_off_rps,
+        tele.ratio
     );
 
     pjrt_e2e();

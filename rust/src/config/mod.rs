@@ -26,6 +26,11 @@
 //! artifact  = "artifacts/toy_cnn_b8.hlo.txt"
 //! requests  = 64
 //! max_batch = 8
+//!
+//! [telemetry]
+//! metrics_out      = "out/serve_metrics.prom"  # or a .json path for a JSON snapshot
+//! trace_out        = "out/serve_spans.json"    # Chrome trace-event (Perfetto)
+//! stats_interval_s = 5                         # periodic stderr stats
 //! ```
 //!
 //! A co-located (multi-tenant) run replaces `[model]` with a `[[tenant]]`
@@ -124,6 +129,8 @@ pub struct RunSpec {
     pub serve: Option<ServeSpec>,
     /// Optional memory sweep (Fig. 6 style): list of `A_mem` scale factors.
     pub mem_sweep: Vec<f64>,
+    /// Telemetry outputs (`[telemetry]` section; all-default when absent).
+    pub telemetry: TelemetrySpec,
 }
 
 /// Serving parameters (`[serve]` section).
@@ -141,6 +148,36 @@ pub struct ServeSpec {
     /// ([`crate::coordinator::ServerOptions::dispatch_shards`]): `0` (the
     /// default) auto-sizes from the pool, any other value pins the count.
     pub dispatch_shards: usize,
+}
+
+/// Telemetry outputs (`[telemetry]` section). Span recording defaults on
+/// (its hot-path cost is gated below 2% by `benches/e2e_serve.rs`); the
+/// writers and the periodic reporter are opt-in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySpec {
+    /// Record serving spans
+    /// ([`crate::coordinator::ServerOptions::telemetry`]). Request metrics
+    /// and counters are always collected; this gates only the span rings.
+    pub enabled: bool,
+    /// Write the final metrics snapshot here after the serving session:
+    /// Prometheus text, or a JSON snapshot when the path ends in `.json`.
+    pub metrics_out: Option<String>,
+    /// Write the serving spans here as Chrome trace-event (Perfetto) JSON.
+    pub trace_out: Option<String>,
+    /// Periodic one-line stats to stderr every this many seconds while the
+    /// serving session runs.
+    pub stats_interval_s: Option<f64>,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        TelemetrySpec {
+            enabled: true,
+            metrics_out: None,
+            trace_out: None,
+            stats_interval_s: None,
+        }
+    }
 }
 
 /// A configuration error: parse failure or semantic problem.
@@ -174,7 +211,7 @@ fn invalid(msg: impl Into<String>) -> ConfigError {
 /// Known keys per section: a typo'd key silently falling back to its
 /// default is the worst failure mode a config system can have, so anything
 /// not listed here is rejected with the expected alternatives.
-const KNOWN_KEYS: [(&str, &[&str]); 7] = [
+const KNOWN_KEYS: [(&str, &[&str]); 8] = [
     ("", &["title"]),
     ("model", &["name", "file", "quant"]),
     ("device", &["name", "devices", "mem_scale", "mem_sweep"]),
@@ -182,6 +219,7 @@ const KNOWN_KEYS: [(&str, &[&str]); 7] = [
     ("sim", &["batch"]),
     ("serve", &["artifact", "requests", "max_batch", "max_wait_ms", "workers", "dispatch_shards"]),
     ("fleet", &["objective", "slo_p99_ms"]),
+    ("telemetry", &["enabled", "metrics_out", "trace_out", "stats_interval_s"]),
 ];
 
 impl RunSpec {
@@ -455,6 +493,50 @@ impl RunSpec {
             None
         };
 
+        // [telemetry]
+        let telemetry = {
+            let enabled = doc.try_bool_or("telemetry", "enabled", true).map_err(invalid)?;
+            let opt_str = |key: &str| -> Result<Option<String>, ConfigError> {
+                match doc.get("telemetry", key) {
+                    None => Ok(None),
+                    Some(_) => Ok(Some(
+                        doc.try_str_or("telemetry", key, "").map_err(invalid)?.to_string(),
+                    )),
+                }
+            };
+            let metrics_out = opt_str("metrics_out")?;
+            let trace_out = opt_str("trace_out")?;
+            let stats_interval_s = match doc.get("telemetry", "stats_interval_s") {
+                None => None,
+                Some(_) => {
+                    let secs = doc
+                        .try_float_or("telemetry", "stats_interval_s", 0.0)
+                        .map_err(invalid)?;
+                    if !secs.is_finite() || secs <= 0.0 {
+                        return Err(invalid(format!(
+                            "telemetry.stats_interval_s {secs} must be positive"
+                        )));
+                    }
+                    Some(secs)
+                }
+            };
+            if !enabled && trace_out.is_some() {
+                return Err(invalid(
+                    "telemetry.trace_out needs span recording: drop the key or set \
+                     telemetry.enabled = true (the trace would be empty)",
+                ));
+            }
+            if (metrics_out.is_some() || trace_out.is_some() || stats_interval_s.is_some())
+                && !doc.has_section("serve")
+            {
+                return Err(invalid(
+                    "telemetry outputs describe the serving session: add a [serve] section \
+                     or drop the output keys",
+                ));
+            }
+            TelemetrySpec { enabled, metrics_out, trace_out, stats_interval_s }
+        };
+
         // device.mem_sweep = [0.5, 1.0, ...]
         let mem_sweep = match doc.get("device", "mem_sweep") {
             None => Vec::new(),
@@ -485,6 +567,7 @@ impl RunSpec {
             sim_batch,
             serve,
             mem_sweep,
+            telemetry,
         })
     }
 
@@ -581,6 +664,44 @@ impl RunSpec {
         })
     }
 
+    /// Spawn the `[telemetry]` periodic stderr reporter, when configured.
+    fn start_stats(
+        &self,
+        handles: Vec<crate::coordinator::MetricsHandle>,
+    ) -> Option<crate::telemetry::StatsReporter> {
+        self.telemetry.stats_interval_s.map(|secs| {
+            crate::telemetry::StatsReporter::start(
+                handles,
+                std::time::Duration::from_secs_f64(secs),
+            )
+        })
+    }
+
+    /// Write the `[telemetry]` output files from the final serving snapshot
+    /// (metrics format by extension, spans as Chrome trace-event JSON).
+    fn emit_telemetry(
+        &self,
+        t: &crate::telemetry::TelemetrySnapshot,
+    ) -> Result<(), crate::Error> {
+        if let Some(path) = &self.telemetry.metrics_out {
+            let text = if path.ends_with(".json") {
+                crate::telemetry::json_snapshot(t)
+            } else {
+                crate::telemetry::prometheus_text(t)
+            };
+            std::fs::write(path, text)
+                .map_err(|source| crate::Error::Io { path: path.clone(), source })?;
+            println!("  metrics written to {path}");
+        }
+        if let Some(path) = &self.telemetry.trace_out {
+            let text = crate::telemetry::chrome_trace_spans(&t.spans);
+            std::fs::write(path, text)
+                .map_err(|source| crate::Error::Io { path: path.clone(), source })?;
+            println!("  span trace written to {path}");
+        }
+        Ok(())
+    }
+
     /// Execute the full run this spec describes — DSE, simulation, the
     /// optional memory sweep, the optional serving session — printing the
     /// launcher's progress report to stdout. This is `autows run`.
@@ -673,17 +794,23 @@ impl RunSpec {
                         max_wait: std::time::Duration::from_millis(serve.max_wait_ms),
                     },
                     ServerOptions {
-                    workers: serve.workers,
-                    dispatch_shards: serve.dispatch_shards,
-                    ..Default::default()
-                },
+                        workers: serve.workers,
+                        dispatch_shards: serve.dispatch_shards,
+                        telemetry: self.telemetry.enabled,
+                        ..Default::default()
+                    },
                 )?;
+            let stats = self.start_stats(vec![server.metrics_handle()]);
             crate::pipeline::drive_synthetic(&server, serve.requests, c * h * w)?;
             let m = server.metrics();
             println!(
                 "  throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
                 m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
             );
+            if let Some(s) = stats {
+                s.stop();
+            }
+            self.emit_telemetry(&server.telemetry())?;
             server.shutdown();
         }
         Ok(())
@@ -746,9 +873,12 @@ impl RunSpec {
                 ServerOptions {
                     workers: serve.workers,
                     dispatch_shards: serve.dispatch_shards,
+                    telemetry: self.telemetry.enabled,
                     ..Default::default()
                 },
             )?;
+            let stats = self
+                .start_stats(router.metrics_handles().into_iter().map(|(_, h)| h).collect());
             for name in scheduled.model_names() {
                 let input_len =
                     scheduled.input_len(name).expect("names come from the plan itself");
@@ -768,6 +898,10 @@ impl RunSpec {
                     m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
                 );
             }
+            if let Some(s) = stats {
+                s.stop();
+            }
+            self.emit_telemetry(&router.telemetry())?;
             router.shutdown();
         }
         Ok(())
@@ -833,9 +967,12 @@ impl RunSpec {
                 ServerOptions {
                     workers: serve.workers,
                     dispatch_shards: serve.dispatch_shards,
+                    telemetry: self.telemetry.enabled,
                     ..Default::default()
                 },
             )?;
+            let stats = self
+                .start_stats(registry.metrics_handles().into_iter().map(|(_, h)| h).collect());
             for name in scheduled.tenant_names() {
                 let input_len =
                     scheduled.input_len(name).expect("names come from the plan itself");
@@ -851,6 +988,10 @@ impl RunSpec {
                     m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
                 );
             }
+            if let Some(s) = stats {
+                s.stop();
+            }
+            self.emit_telemetry(&registry.telemetry())?;
             registry.shutdown();
         }
         Ok(())
@@ -917,15 +1058,21 @@ impl RunSpec {
                 ServerOptions {
                     workers: serve.workers,
                     dispatch_shards: serve.dispatch_shards,
+                    telemetry: self.telemetry.enabled,
                     ..Default::default()
                 },
             )?;
+            let stats = self.start_stats(vec![server.metrics_handle()]);
             crate::pipeline::drive_synthetic(&server, serve.requests, scheduled.input_len())?;
             let m = server.metrics();
             println!(
                 "  throughput {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
                 m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
             );
+            if let Some(s) = stats {
+                s.stop();
+            }
+            self.emit_telemetry(&server.telemetry())?;
             server.shutdown();
         }
         Ok(())
@@ -1213,6 +1360,55 @@ dispatch_shards = 2
         )
         .unwrap_err();
         assert!(e.to_string().contains("single-device"), "{e}");
+    }
+
+    #[test]
+    fn telemetry_section_parses_and_validates() {
+        // defaults when absent: spans on, no outputs
+        let s = RunSpec::from_str("[model]\nname = \"toy\"").unwrap();
+        assert_eq!(s.telemetry, TelemetrySpec::default());
+        assert!(s.telemetry.enabled);
+        // the full section
+        let s = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[serve]\nrequests = 8\n\
+             [telemetry]\nmetrics_out = \"m.prom\"\ntrace_out = \"t.json\"\n\
+             stats_interval_s = 2",
+        )
+        .unwrap();
+        assert_eq!(s.telemetry.metrics_out.as_deref(), Some("m.prom"));
+        assert_eq!(s.telemetry.trace_out.as_deref(), Some("t.json"));
+        assert_eq!(s.telemetry.stats_interval_s, Some(2.0));
+        assert!(s.telemetry.enabled);
+        // spans off makes trace_out contradictory (the file would be empty)
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[serve]\nrequests = 8\n\
+             [telemetry]\nenabled = false\ntrace_out = \"t.json\"",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("enabled"), "{e}");
+        // ... but metrics_out stays legal: request metrics are always on
+        let s = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[serve]\nrequests = 8\n\
+             [telemetry]\nenabled = false\nmetrics_out = \"m.prom\"",
+        )
+        .unwrap();
+        assert!(!s.telemetry.enabled);
+        // outputs without a serving session are a spec error, not a no-op
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[telemetry]\nmetrics_out = \"m.prom\"",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("[serve]"), "{e}");
+        // non-positive intervals and typo'd keys rejected
+        let e = RunSpec::from_str(
+            "[model]\nname = \"toy\"\n[serve]\nrequests = 8\n\
+             [telemetry]\nstats_interval_s = 0",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("positive"), "{e}");
+        let e = RunSpec::from_str("[model]\nname = \"toy\"\n[telemetry]\nenbled = true")
+            .unwrap_err();
+        assert!(e.to_string().contains("unknown key"), "{e}");
     }
 
     #[test]

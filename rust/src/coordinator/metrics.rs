@@ -14,7 +14,7 @@
 //!   and dispatch never waits on a metrics read.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Linear-interpolation percentile over an ascending-sorted slice (the
@@ -316,6 +316,34 @@ impl MetricsHub {
 
     pub fn fold_locks(&self) -> u64 {
         self.fold_locks.load(Ordering::Acquire)
+    }
+}
+
+/// Cloneable, thread-safe reader onto a server's metrics hub.
+///
+/// [`MetricsHub`] itself is crate-private and a `Server` is not `Sync`
+/// (its submit side holds mpsc senders); this handle carries just the
+/// `Arc`'d hub so stats reporters and exporters can snapshot from any
+/// thread without borrowing the server.
+#[derive(Clone)]
+pub struct MetricsHandle {
+    hub: Arc<MetricsHub>,
+}
+
+impl MetricsHandle {
+    pub(crate) fn new(hub: Arc<MetricsHub>) -> MetricsHandle {
+        MetricsHandle { hub }
+    }
+
+    /// Fold pending batch events and summarize (same as
+    /// `Server::metrics`).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.hub.snapshot()
+    }
+
+    /// The serving-path lock tripwire — must stay 0.
+    pub fn serving_path_locks(&self) -> u64 {
+        self.hub.serving_path_locks()
     }
 }
 

@@ -39,7 +39,7 @@ pub use loadgen::{
     run_open_loop, run_open_loop_mixed, ArrivalSchedule, Completion, LoadResult, MixedSchedule,
     MixedSpec,
 };
-pub use metrics::{Metrics, MetricsSnapshot, WorkerStats};
+pub use metrics::{Metrics, MetricsHandle, MetricsSnapshot, WorkerStats};
 pub use oneshot::ReplyHandle;
 pub use priority::{Priority, PriorityBatcher};
 pub use registry::{ModelEntry, ModelRegistry};

@@ -15,8 +15,11 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use super::{BatchPolicy, Engine, MetricsSnapshot, Priority, Response, Server, ServerOptions};
+use super::{
+    BatchPolicy, Engine, MetricsHandle, MetricsSnapshot, Priority, Response, Server, ServerOptions,
+};
 use crate::error::Error;
+use crate::telemetry::{counters_snapshot, TelemetrySnapshot};
 
 /// Static description of one served model.
 #[derive(Debug, Clone)]
@@ -124,6 +127,39 @@ impl ModelRegistry {
     /// Per-model metrics.
     pub fn metrics(&self, model: &str) -> Option<MetricsSnapshot> {
         self.servers.get(model).map(|(_, s)| s.metrics())
+    }
+
+    /// Cloneable metrics reader handles, one per registered model (sorted
+    /// by name) — for stats reporters snapshotting from other threads.
+    pub fn metrics_handles(&self) -> Vec<(String, MetricsHandle)> {
+        let mut out: Vec<(String, MetricsHandle)> = self
+            .servers
+            .iter()
+            .map(|(name, (_, s))| (name.clone(), s.metrics_handle()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// One combined telemetry observation across every registered model:
+    /// metrics folded conservatively (counts sum, percentiles max), spans
+    /// concatenated in model-name order, process-wide counters read once.
+    /// Span timestamps stay relative to each server's own boot epoch.
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        let mut names: Vec<&String> = self.servers.keys().collect();
+        names.sort_unstable();
+        let mut snaps = Vec::with_capacity(names.len());
+        let mut spans = Vec::new();
+        for name in names {
+            let (_, server) = &self.servers[name];
+            snaps.push(server.metrics());
+            spans.extend(server.telemetry_spans());
+        }
+        TelemetrySnapshot {
+            metrics: super::router::fold_snapshots(&snaps),
+            counters: counters_snapshot(),
+            spans,
+        }
     }
 
     /// Shut down every serving loop, flushing pending requests.

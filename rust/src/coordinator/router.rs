@@ -35,8 +35,9 @@ use std::sync::mpsc::RecvError;
 use std::sync::Arc;
 
 use crate::error::Error;
+use crate::telemetry::{counters_snapshot, TelemetrySnapshot};
 
-use super::{MetricsSnapshot, ModelRegistry, Priority, ReplyHandle, Response, Server};
+use super::{MetricsHandle, MetricsSnapshot, ModelRegistry, Priority, ReplyHandle, Response, Server};
 
 /// One per-device serving stack behind the router.
 enum Backend {
@@ -77,6 +78,17 @@ pub struct EndpointMetrics {
     pub outstanding: usize,
     /// One serving snapshot per model this endpoint answers.
     pub per_model: Vec<(String, MetricsSnapshot)>,
+    /// Request-weighted mean dispatch-queue depth across this endpoint's
+    /// servers (the underlying `Server`s collect it; the rollup used to
+    /// drop it).
+    pub queue_depth_mean: f64,
+    /// Deepest dispatch queue observed on any of this endpoint's servers.
+    pub queue_depth_max: usize,
+    /// Fewest batches any single pool worker served — with
+    /// `worker_batches_max`, the endpoint's pool-skew signal.
+    pub worker_batches_min: u64,
+    /// Most batches any single pool worker served.
+    pub worker_batches_max: u64,
 }
 
 /// Reply handle returned by [`Router::submit`]: wraps the backend's
@@ -242,13 +254,70 @@ impl Router {
                         .filter_map(|m| r.metrics(m).map(|s| (m.to_string(), s)))
                         .collect(),
                 };
+                // fold the endpoint's own servers so queue depth and
+                // worker skew survive the rollup boundary
+                let snaps: Vec<MetricsSnapshot> =
+                    per_model.iter().map(|(_, s)| s.clone()).collect();
+                let folded = fold_snapshots(&snaps);
+                let (min_b, max_b) = worker_skew(&folded);
                 EndpointMetrics {
                     label: e.label.clone(),
                     outstanding: e.outstanding.load(Ordering::Relaxed),
                     per_model,
+                    queue_depth_mean: folded.queue_depth_mean,
+                    queue_depth_max: folded.queue_depth_max,
+                    worker_batches_min: min_b,
+                    worker_batches_max: max_b,
                 }
             })
             .collect()
+    }
+
+    /// Cloneable metrics reader handles for every single-model server
+    /// endpoint, labeled `label/model`. (Registry endpoints expose their
+    /// own via [`ModelRegistry::metrics_handles`].)
+    pub fn metrics_handles(&self) -> Vec<(String, MetricsHandle)> {
+        let mut out = Vec::new();
+        for e in &self.endpoints {
+            match &e.backend {
+                Backend::Server { model, server, .. } => {
+                    out.push((format!("{}/{}", e.label, model), server.metrics_handle()));
+                }
+                Backend::Registry(r) => {
+                    for (model, h) in r.metrics_handles() {
+                        out.push((format!("{}/{}", e.label, model), h));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// One combined telemetry observation across the whole fleet: metrics
+    /// folded conservatively over every endpoint's servers, spans
+    /// concatenated in endpoint order, process-wide counters read once.
+    /// Span timestamps stay relative to each server's own boot epoch.
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        let mut snaps = Vec::new();
+        let mut spans = Vec::new();
+        for e in &self.endpoints {
+            match &e.backend {
+                Backend::Server { server, .. } => {
+                    snaps.push(server.metrics());
+                    spans.extend(server.telemetry_spans());
+                }
+                Backend::Registry(r) => {
+                    let t = r.telemetry();
+                    snaps.push(t.metrics);
+                    spans.extend(t.spans);
+                }
+            }
+        }
+        TelemetrySnapshot {
+            metrics: fold_snapshots(&snaps),
+            counters: counters_snapshot(),
+            spans,
+        }
     }
 
     /// Cross-replica rollup for one model: request/batch counts and
@@ -278,8 +347,20 @@ impl Router {
     }
 }
 
-/// Fold replica snapshots into one conservative model-level view.
-fn fold_snapshots(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
+/// Pool-skew extremes across a snapshot's per-worker accounting.
+fn worker_skew(snap: &MetricsSnapshot) -> (u64, u64) {
+    let batches = snap.per_worker.iter().map(|w| w.batches);
+    match (batches.clone().min(), batches.max()) {
+        (Some(min), Some(max)) => (min, max),
+        _ => (0, 0),
+    }
+}
+
+/// Fold replica snapshots into one conservative model-level view (counts
+/// and throughput sum, percentiles max, means weight by requests,
+/// per-worker entries concatenate). Shared by the model/endpoint rollups
+/// here and the registry's combined telemetry.
+pub(crate) fn fold_snapshots(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
     let mut out = MetricsSnapshot {
         requests: 0,
         batches: 0,
@@ -473,6 +554,49 @@ mod tests {
             .sum();
         assert_eq!(per_endpoint, 6);
         assert!(router.model_metrics("resnet9000").is_none());
+        router.shutdown();
+    }
+
+    #[test]
+    fn endpoint_rollup_keeps_queue_depth_and_worker_skew() {
+        let mut router = Router::new();
+        router.add_server("dev0", "toy", 2, server(2, Duration::ZERO));
+        for i in 0..8 {
+            let _ = router.infer("toy", vec![i as f32, 1.0]).unwrap();
+        }
+        let eps = router.endpoint_metrics();
+        assert_eq!(eps.len(), 1);
+        let e = &eps[0];
+        // the underlying server sampled queue depth and per-worker batches;
+        // the endpoint view must carry them instead of dropping them
+        assert!(e.queue_depth_mean >= 0.0);
+        assert!(
+            e.worker_batches_max >= e.worker_batches_min,
+            "skew bounds ordered: {}..{}",
+            e.worker_batches_min,
+            e.worker_batches_max
+        );
+        assert!(e.worker_batches_max > 0, "the one worker served batches");
+        // model-level rollup keeps the same signals
+        let rolled = router.model_metrics("toy").unwrap();
+        assert!(!rolled.per_worker.is_empty(), "per-worker stats survive the fold");
+        assert_eq!(rolled.queue_depth_max, e.queue_depth_max);
+        router.shutdown();
+    }
+
+    #[test]
+    fn router_telemetry_combines_endpoints() {
+        let mut router = Router::new();
+        router.add_server("dev0", "toy", 2, server(2, Duration::ZERO));
+        router.add_server("dev1", "toy", 2, server(2, Duration::ZERO));
+        for i in 0..6 {
+            let _ = router.infer("toy", vec![i as f32, 1.0]).unwrap();
+        }
+        let t = router.telemetry();
+        assert_eq!(t.metrics.requests, 6, "fleet-wide fold covers every endpoint");
+        assert!(!t.spans.is_empty(), "default-on telemetry records spans");
+        assert!(t.counters.iter().any(|(n, _)| n == "sim_runs"));
+        assert_eq!(router.metrics_handles().len(), 2);
         router.shutdown();
     }
 }

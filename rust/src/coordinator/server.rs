@@ -51,7 +51,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::metrics::{BatchSink, MetricsHub};
+use super::metrics::{BatchSink, MetricsHandle, MetricsHub};
 use super::oneshot::{ReplyHandle, ReplySender, SlotPool};
 use super::sync::AtomicBox;
 use super::{BatchPolicy, MetricsSnapshot, Priority, PriorityBatcher};
@@ -60,6 +60,10 @@ use crate::dse::Design;
 use crate::error::Error;
 use crate::runtime::{LoadedModel, Tensor};
 use crate::sim::{simulate, SimConfig};
+use crate::telemetry::{
+    counters_snapshot, SpanKind, SpanScribe, TelemetryHub, TelemetrySnapshot,
+    DEFAULT_SPAN_CAPACITY,
+};
 
 /// An inference request entering the coordinator.
 pub struct Request {
@@ -88,11 +92,17 @@ pub struct ServerOptions {
     /// shard count (clamped to `workers`). With `workers = 1` the front is
     /// always the single pre-pool loop, whatever this says.
     pub dispatch_shards: usize,
+    /// Record serving-path spans (wait/engine/reply per worker, batch per
+    /// shard, steal markers) into per-lane lock-free rings readable via
+    /// [`Server::telemetry`]. Recording is a handful of relaxed/release
+    /// atomic stores per batch — it keeps [`Server::serving_path_locks`]
+    /// at 0 — but can be switched off for overhead A/B runs.
+    pub telemetry: bool,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        ServerOptions { queue_cap: 0, workers: 1, dispatch_shards: 0 }
+        ServerOptions { queue_cap: 0, workers: 1, dispatch_shards: 0, telemetry: true }
     }
 }
 
@@ -309,6 +319,9 @@ pub struct Server {
     /// queued-but-undispatched requests with [`Error::ShuttingDown`]
     /// instead of flushing them through the engines.
     abort: Arc<AtomicBool>,
+    /// Span rings (one per lane), present when `ServerOptions::telemetry`
+    /// was on at boot.
+    telemetry: Option<Arc<TelemetryHub>>,
 }
 
 /// Adapt a single-shot factory to the pool-compatible `Fn` bound. The
@@ -364,10 +377,21 @@ impl Server {
         let hub = Arc::new(MetricsHub::new());
         let in_flight = Arc::new(AtomicUsize::new(0));
         let abort = Arc::new(AtomicBool::new(false));
+        // Rings exist before any traffic: the hot path only ever clones an
+        // Arc it was handed at spawn. The single-worker shape batches on
+        // the worker thread, so it has no shard lanes.
+        let telemetry = opts.telemetry.then(|| {
+            Arc::new(TelemetryHub::new(
+                workers,
+                if workers == 1 { 0 } else { shards },
+                DEFAULT_SPAN_CAPACITY,
+            ))
+        });
 
         let (threads, ready_rx) = if workers == 1 {
             let rx = rxs.pop().expect("one shard");
-            spawn_single(factory, policy, &hub, &in_flight, &abort, rx)
+            let scribe = telemetry.as_ref().map(|t| t.worker_scribe(0));
+            spawn_single(factory, policy, &hub, &in_flight, &abort, rx, scribe)
         } else {
             spawn_pool(
                 Arc::new(factory),
@@ -376,6 +400,7 @@ impl Server {
                 &in_flight,
                 &abort,
                 rxs,
+                telemetry.as_deref(),
             )
         };
 
@@ -412,6 +437,7 @@ impl Server {
             queue_cap: opts.queue_cap,
             shards,
             abort,
+            telemetry,
         })
     }
 
@@ -472,6 +498,39 @@ impl Server {
     /// the fold lock this takes.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.hub.snapshot()
+    }
+
+    /// Cloneable, thread-safe reader onto this server's metrics hub — for
+    /// stats reporters and exporters that must snapshot from other threads
+    /// without borrowing the server.
+    pub fn metrics_handle(&self) -> MetricsHandle {
+        MetricsHandle::new(self.hub.clone())
+    }
+
+    /// One coherent telemetry observation: folded request metrics, the
+    /// process-wide counter registry, and every ring-resident serving span
+    /// (empty when `ServerOptions::telemetry` was off). Reader-side work
+    /// only — the span rings are read through their seqlocks, never
+    /// blocking a writer.
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            metrics: self.hub.snapshot(),
+            counters: counters_snapshot(),
+            spans: self.telemetry.as_ref().map(|t| t.spans()).unwrap_or_default(),
+        }
+    }
+
+    /// Total spans recorded since boot (0 with telemetry off).
+    pub fn spans_recorded(&self) -> u64 {
+        self.telemetry.as_ref().map(|t| t.recorded()).unwrap_or(0)
+    }
+
+    /// Just the ring-resident spans (no metrics fold, no counter reads) —
+    /// the building block `Router`/`ModelRegistry` rollups use to combine
+    /// several servers into one snapshot without reading the process-wide
+    /// counters once per server.
+    pub fn telemetry_spans(&self) -> Vec<crate::telemetry::Span> {
+        self.telemetry.as_ref().map(|t| t.spans()).unwrap_or_default()
     }
 
     /// Dispatch shards actually running (1 for the single-worker shape).
@@ -539,6 +598,7 @@ fn spawn_single<F>(
     in_flight: &Arc<AtomicUsize>,
     abort: &Arc<AtomicBool>,
     rx: mpsc::Receiver<Request>,
+    scribe: Option<SpanScribe>,
 ) -> (Vec<std::thread::JoinHandle<()>>, mpsc::Receiver<Result<()>>)
 where
     F: Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static,
@@ -581,7 +641,7 @@ where
                             // the drain can exceed max_batch; split so the
                             // flush never feeds an engine an oversized batch
                             for chunk in split_batches(batch, policy.max_batch) {
-                                process(&mut engine, chunk, &sink, &in_flight, 0);
+                                process(&mut engine, chunk, &sink, &in_flight, 0, scribe.as_ref());
                             }
                         }
                     }
@@ -591,7 +651,7 @@ where
             // … and queue depth is sampled exactly once for it.
             if let Some(batch) = formed {
                 hub.record_queue_depth(batcher.pending());
-                process(&mut engine, batch, &sink, &in_flight, 0);
+                process(&mut engine, batch, &sink, &in_flight, 0, scribe.as_ref());
             }
         }
     });
@@ -652,6 +712,7 @@ impl Drop for ShardLiveGuard {
 /// request stream and hand formed batches to `cfg.workers` workers through
 /// lock-free per-worker mailboxes; each worker constructs its own engine on
 /// its own thread and steals from sibling mailboxes when idle.
+#[allow(clippy::too_many_arguments)]
 fn spawn_pool<F>(
     factory: Arc<F>,
     cfg: PoolConfig,
@@ -659,6 +720,7 @@ fn spawn_pool<F>(
     in_flight: &Arc<AtomicUsize>,
     abort: &Arc<AtomicBool>,
     rxs: Vec<mpsc::Receiver<Request>>,
+    telemetry: Option<&TelemetryHub>,
 ) -> (Vec<std::thread::JoinHandle<()>>, mpsc::Receiver<Result<()>>)
 where
     F: Fn() -> Result<Box<dyn Engine>> + Send + Sync + 'static,
@@ -682,6 +744,7 @@ where
         let shared = shared.clone();
         let sink = hub.sink();
         let in_flight = in_flight.clone();
+        let scribe = telemetry.map(|t| t.worker_scribe(idx));
         handles.push(std::thread::spawn(move || {
             // liveness first: a failed boot must still decrement
             let _live = WorkerLiveGuard(shared.clone());
@@ -698,7 +761,7 @@ where
                     return;
                 }
             };
-            worker_loop(idx, &mut engine, &shared, &sink, &in_flight);
+            worker_loop(idx, &mut engine, &shared, &sink, &in_flight, scribe.as_ref());
         }));
     }
     drop(ready_tx);
@@ -710,9 +773,10 @@ where
         let hub = hub.clone();
         let in_flight = in_flight.clone();
         let abort = abort.clone();
+        let scribe = telemetry.map(|t| t.shard_scribe(shard));
         handles.push(std::thread::spawn(move || {
             let _live = ShardLiveGuard(shared.clone());
-            shard_loop(shard, shards, policy, rx, &shared, &hub, &in_flight, &abort);
+            shard_loop(shard, shards, policy, rx, &shared, &hub, &in_flight, &abort, scribe);
         }));
     }
     (handles, ready_rx)
@@ -730,11 +794,12 @@ fn shard_loop(
     hub: &MetricsHub,
     in_flight: &AtomicUsize,
     abort: &AtomicBool,
+    scribe: Option<SpanScribe>,
 ) {
     let epoch = Instant::now();
     let now = |e: &Instant| e.elapsed().as_secs_f64();
     let mut batcher: PriorityBatcher<Request> = PriorityBatcher::new(policy);
-    let mut router = ShardRouter::new(shard, shards, shared, hub, in_flight);
+    let mut router = ShardRouter::new(shard, shards, shared, hub, in_flight, scribe);
     loop {
         let wait = batcher.time_to_deadline(now(&epoch)).unwrap_or(Duration::from_secs(3600));
         let formed = match rx.recv_timeout(wait) {
@@ -775,6 +840,9 @@ struct ShardRouter<'a> {
     shared: &'a PoolShared,
     hub: &'a MetricsHub,
     in_flight: &'a AtomicUsize,
+    /// This shard lane's span ring (telemetry on): records one `Batch`
+    /// span per dispatch, covering the mailbox hand-off.
+    scribe: Option<SpanScribe>,
 }
 
 impl<'a> ShardRouter<'a> {
@@ -784,6 +852,7 @@ impl<'a> ShardRouter<'a> {
         shared: &'a PoolShared,
         hub: &'a MetricsHub,
         in_flight: &'a AtomicUsize,
+        scribe: Option<SpanScribe>,
     ) -> ShardRouter<'a> {
         let workers = shared.mailboxes.len();
         ShardRouter {
@@ -793,6 +862,7 @@ impl<'a> ShardRouter<'a> {
             shared,
             hub,
             in_flight,
+            scribe,
         }
     }
 
@@ -803,6 +873,9 @@ impl<'a> ShardRouter<'a> {
     /// `queue_cap`, into typed rejections at submit).
     fn dispatch(&mut self, batch: Vec<Request>) {
         let n = batch.len();
+        // span start: the Batch span covers the hand-off, including any
+        // backpressure wait for a free mailbox
+        let t0 = Instant::now();
         // one queue-depth sample per dispatched batch: everything admitted
         // but not yet on an engine = pending in batchers + parked in
         // mailboxes (the just-formed batch intentionally excluded, exactly
@@ -821,6 +894,9 @@ impl<'a> ShardRouter<'a> {
                     Ok(()) => {
                         self.rotate = (self.rotate + k + 1) % self.own.len();
                         threads[w].unpark();
+                        if let Some(s) = &self.scribe {
+                            s.record_between(SpanKind::Batch, n, t0, Instant::now());
+                        }
                         return;
                     }
                     Err(back) => boxed = back,
@@ -830,6 +906,9 @@ impl<'a> ShardRouter<'a> {
                 match self.shared.mailboxes[w].put(boxed) {
                     Ok(()) => {
                         threads[w].unpark();
+                        if let Some(s) = &self.scribe {
+                            s.record_between(SpanKind::Batch, n, t0, Instant::now());
+                        }
                         return;
                     }
                     Err(back) => boxed = back,
@@ -859,6 +938,7 @@ fn worker_loop(
     shared: &Arc<PoolShared>,
     sink: &BatchSink,
     in_flight: &AtomicUsize,
+    scribe: Option<&SpanScribe>,
 ) {
     let n = shared.mailboxes.len();
     let mut front_done = false;
@@ -869,7 +949,13 @@ fn worker_loop(
             let w = (idx + off) % n;
             if let Some(batch) = shared.mailboxes[w].take() {
                 shared.queued.fetch_sub(batch.len(), Ordering::AcqRel);
-                process(engine, *batch, sink, in_flight, idx);
+                if off != 0 {
+                    // a steal: instantaneous marker on the stealing lane
+                    if let Some(s) = scribe {
+                        s.mark(SpanKind::Steal, batch.len());
+                    }
+                }
+                process(engine, *batch, sink, in_flight, idx, scribe);
                 served = true;
                 break;
             }
@@ -925,6 +1011,7 @@ fn process(
     sink: &BatchSink,
     in_flight: &AtomicUsize,
     worker: usize,
+    scribe: Option<&SpanScribe>,
 ) {
     let inputs: Vec<Vec<f32>> =
         batch.iter_mut().map(|r| std::mem::take(&mut r.input)).collect();
@@ -937,6 +1024,14 @@ fn process(
     sink.record(worker, &latencies, accel, busy);
     in_flight.fetch_sub(batch.len(), Ordering::AcqRel);
     let n = batch.len();
+    if let Some(s) = scribe {
+        // Wait covers the oldest request's queue time (admission → engine
+        // pickup); Engine covers the batch execution on this lane
+        if let Some(earliest) = batch.iter().map(|r| r.submitted).min() {
+            s.record_between(SpanKind::Wait, n, earliest, t0);
+        }
+        s.record_between(SpanKind::Engine, n, t0, done);
+    }
     match result {
         Ok(outputs) => {
             for (req, (out, lat)) in
@@ -951,6 +1046,10 @@ fn process(
                 req.reply.send(Err(Error::Serve(format!("batch failed: {msg}"))));
             }
         }
+    }
+    if let Some(s) = scribe {
+        // Reply covers the fan-out back to the submitters
+        s.record_between(SpanKind::Reply, n, done, Instant::now());
     }
 }
 
@@ -1015,7 +1114,7 @@ mod tests {
             move || Ok(Box::new(e.clone()) as _),
             // huge wait so requests pile up in the queue
             BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(5) },
-            ServerOptions { queue_cap: 4, workers: 1, dispatch_shards: 0 },
+            ServerOptions { queue_cap: 4, workers: 1, dispatch_shards: 0, telemetry: true },
         )
         .unwrap();
         let mut pending = Vec::new();
@@ -1124,7 +1223,7 @@ mod tests {
         let server = Server::start_with_opts(
             move || Ok(Box::new(e.clone()) as _),
             BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 0 },
+            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 0, telemetry: true },
         )
         .unwrap();
         assert_eq!(server.dispatch_shards(), 2, "workers=4 auto-sizes to 2 shards");
@@ -1168,7 +1267,7 @@ mod tests {
                 }) as _)
             },
             BatchPolicy::default(),
-            ServerOptions { queue_cap: 0, workers: 3, dispatch_shards: 0 },
+            ServerOptions { queue_cap: 0, workers: 3, dispatch_shards: 0, telemetry: true },
         );
         assert!(err.is_err(), "one failed engine fails the whole boot");
         assert_eq!(calls.load(Ordering::Acquire), 3, "every worker tried its factory");
@@ -1192,7 +1291,8 @@ mod tests {
     #[test]
     fn shard_auto_sizing_follows_the_pool() {
         let eff = |workers, dispatch_shards| {
-            ServerOptions { queue_cap: 0, workers, dispatch_shards }.effective_dispatch_shards()
+            ServerOptions { queue_cap: 0, workers, dispatch_shards, telemetry: true }
+                .effective_dispatch_shards()
         };
         assert_eq!(eff(1, 0), 1);
         assert_eq!(eff(2, 0), 1);
@@ -1211,7 +1311,7 @@ mod tests {
         let server = Server::start_with_opts(
             move || Ok(Box::new(e.clone()) as _),
             BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 4 },
+            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 4, telemetry: true },
         )
         .unwrap();
         assert_eq!(server.dispatch_shards(), 4);
@@ -1232,7 +1332,7 @@ mod tests {
         let server = Server::start_with_opts(
             move || Ok(Box::new(e.clone()) as _),
             BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
-            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2 },
+            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2, telemetry: true },
         )
         .unwrap();
         for round in 0..8 {
@@ -1249,13 +1349,67 @@ mod tests {
         assert_eq!(
             server.serving_path_locks(),
             0,
-            "dispatch/batch-completion must never take a lock"
+            "dispatch/batch-completion must never take a lock — telemetry is ON here"
         );
         assert!(
             server.reply_slots_recycled() > 64,
             "steady-state submits must reuse pooled reply slots, recycled {}",
             server.reply_slots_recycled()
         );
+        assert!(server.spans_recorded() > 0, "telemetry defaults on and records spans");
+        server.shutdown();
+    }
+
+    #[test]
+    fn telemetry_snapshot_covers_the_request_lifecycle() {
+        let e = sim_engine();
+        let server = Server::start_with_opts(
+            move || Ok(Box::new(e.clone()) as _),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2, telemetry: true },
+        )
+        .unwrap();
+        let rxs: Vec<_> =
+            (0..32).map(|_| server.submit(vec![0.5; 3 * 32 * 32]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let t = server.telemetry();
+        assert_eq!(t.metrics.requests, 32);
+        use crate::telemetry::SpanKind;
+        let count = |k: SpanKind| t.spans.iter().filter(|s| s.kind == k).count();
+        assert!(count(SpanKind::Engine) > 0, "engine spans recorded");
+        assert!(count(SpanKind::Wait) > 0, "wait spans recorded");
+        assert!(count(SpanKind::Reply) > 0, "reply spans recorded");
+        assert!(count(SpanKind::Batch) > 0, "shard lanes record batch spans");
+        // engine spans carry the served requests
+        let engine_items: u64 = t
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Engine)
+            .map(|s| u64::from(s.items))
+            .sum();
+        assert_eq!(engine_items, 32, "engine spans account for every request");
+        assert!(t.spans.iter().any(|s| s.is_shard_lane()), "shard lanes present");
+        assert!(t.counters.iter().any(|(n, _)| n == "sim_runs"));
+        assert_eq!(server.serving_path_locks(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn telemetry_off_records_nothing() {
+        let e = sim_engine();
+        let server = Server::start_with_opts(
+            move || Ok(Box::new(e.clone()) as _),
+            BatchPolicy::default(),
+            ServerOptions { queue_cap: 0, workers: 2, dispatch_shards: 0, telemetry: false },
+        )
+        .unwrap();
+        server.infer(vec![0.5; 3 * 32 * 32]).unwrap();
+        assert_eq!(server.spans_recorded(), 0);
+        let t = server.telemetry();
+        assert!(t.spans.is_empty(), "no rings exist with telemetry off");
+        assert_eq!(t.metrics.requests, 1, "metrics still flow");
         server.shutdown();
     }
 }

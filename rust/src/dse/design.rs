@@ -174,6 +174,7 @@ impl Design {
     /// come back unchanged) and close the log.
     pub fn rollback_trial(&mut self) {
         let Some(txn) = self.txn.take() else { return };
+        crate::telemetry::counters().dse_trial_rollbacks.incr();
         for (i, s) in txn.layers.into_iter().rev() {
             self.touched[i] = false;
             self.cfgs[i] = s.cfg;

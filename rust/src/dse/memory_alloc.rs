@@ -202,7 +202,13 @@ fn evict_until_fit(design: &mut Design, device: &Device, cfg: &DseConfig) -> boo
     while design.mem_blocks() > budget {
         // pop the freshest minimal-ΔB candidate; stale generations drop out
         let l = loop {
-            match heap.pop() {
+            let popped = heap.pop();
+            if popped.is_some() {
+                // stale pops included: the lazy-invalidation overhead is
+                // part of the telemetry signal
+                crate::telemetry::counters().dse_heap_pops.incr();
+            }
+            match popped {
                 None => return false, // everything already evicted and still over budget
                 Some(e) if e.gen == gen[e.layer] => break e.layer,
                 Some(_) => continue,

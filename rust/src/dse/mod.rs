@@ -180,6 +180,7 @@ pub fn run(network: &Network, device: &Device, cfg: &DseConfig) -> Option<DseRes
 
     // ALLOCATE_COMPUTE (which re-runs ALLOCATE_MEMORY after every unroll).
     let iterations = allocate_compute(&mut design, device, cfg);
+    crate::telemetry::counters().dse_greedy_steps.add(iterations as u64);
 
     let throughput = design.min_throughput();
     Some(DseResult {

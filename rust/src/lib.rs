@@ -71,6 +71,8 @@
 //!   dispatch, metrics.
 //! - [`pipeline`] — the staged deployment builder tying all of the above
 //!   together, with the content-keyed design cache and cache-aware sweeps.
+//! - [`telemetry`] — lock-free serving spans, process-wide counters, and
+//!   exposition (Prometheus text, JSON, Chrome trace-event).
 //! - [`config`] — `autows run` launcher specs ([`config::RunSpec`]) parsed
 //!   from a TOML subset, executed through the pipeline.
 //! - [`report`] — regenerates every table and figure of the paper's
@@ -92,6 +94,7 @@ pub mod report;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 pub use ce::{CeConfig, CeModel};

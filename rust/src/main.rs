@@ -15,12 +15,16 @@
 use std::collections::HashMap;
 
 use autows::config::RunSpec;
-use autows::coordinator::{BatchPolicy, ServerOptions};
+use autows::coordinator::{BatchPolicy, MetricsHandle, ServerOptions};
 use autows::dse::{self, DseConfig, FleetObjective};
 use autows::ir::Quant;
 use autows::pipeline::{drive_synthetic, drive_synthetic_tenant, Deployment, EngineSpec};
 use autows::report;
-use autows::sim::SimConfig;
+use autows::sim::{render_gantt, to_csv, SimConfig};
+use autows::telemetry::{
+    chrome_trace_sim, chrome_trace_spans, json_snapshot, prometheus_text, StatsReporter,
+    TelemetrySnapshot,
+};
 use autows::Error;
 
 /// One recognized flag: its name and whether it consumes a value.
@@ -256,16 +260,85 @@ fn write_json_summary(path: &str, text: &str) -> Result<(), Error> {
     Ok(())
 }
 
+/// Event cap for `simulate --trace-out` runs: large enough for whole-batch
+/// traces of the zoo models, bounded so a misjudged batch cannot OOM.
+const TRACE_EVENT_CAP: usize = 200_000;
+
+/// The serve telemetry flags, shared by every serve path:
+/// `--metrics-out PATH` (Prometheus text, or a JSON snapshot when the path
+/// ends in `.json`), `--trace-out PATH` (Chrome trace-event / Perfetto
+/// spans), `--stats-interval SECS` (periodic one-line stats to stderr).
+struct TelemetryCli {
+    metrics_out: Option<String>,
+    trace_out: Option<String>,
+    stats_interval_s: Option<f64>,
+}
+
+impl TelemetryCli {
+    fn from_args(args: &Args) -> Result<TelemetryCli, Error> {
+        let stats_interval_s = match args.flags.get("stats-interval") {
+            None => None,
+            Some(v) => {
+                let secs: f64 = v.parse().map_err(|_| {
+                    Error::Usage(format!("--stats-interval: cannot parse `{v}`"))
+                })?;
+                if !secs.is_finite() || secs <= 0.0 {
+                    return Err(Error::Usage(
+                        "--stats-interval: the interval must be positive seconds".to_string(),
+                    ));
+                }
+                Some(secs)
+            }
+        };
+        Ok(TelemetryCli {
+            metrics_out: args.flags.get("metrics-out").cloned(),
+            trace_out: args.flags.get("trace-out").cloned(),
+            stats_interval_s,
+        })
+    }
+
+    /// Spawn the periodic stderr reporter when `--stats-interval` was given.
+    fn start_stats(&self, handles: Vec<MetricsHandle>) -> Option<StatsReporter> {
+        self.stats_interval_s.map(|secs| {
+            StatsReporter::start(handles, std::time::Duration::from_secs_f64(secs))
+        })
+    }
+
+    /// Write `--metrics-out` (format by extension) and `--trace-out` from
+    /// the final telemetry snapshot.
+    fn emit(&self, t: &TelemetrySnapshot) -> Result<(), Error> {
+        if let Some(path) = &self.metrics_out {
+            let text =
+                if path.ends_with(".json") { json_snapshot(t) } else { prometheus_text(t) };
+            std::fs::write(path, text)
+                .map_err(|source| Error::Io { path: path.clone(), source })?;
+            println!("metrics written to {path}");
+        }
+        if let Some(path) = &self.trace_out {
+            let text = chrome_trace_spans(&t.spans);
+            std::fs::write(path, text)
+                .map_err(|source| Error::Io { path: path.clone(), source })?;
+            println!("span trace written to {path}");
+        }
+        Ok(())
+    }
+}
+
 const USAGE: &str = "usage: autows <report|dse|simulate|serve|run> [options]
   report <table1|tech|compress|strategies|table2|table3|fig5|fig6|fig7|yolo|all>
   dse      --model resnet18 --device zcu102 --quant w4a5 [--vanilla] [--phi 1] [--mu 512]
            [--warm] [--save PATH] [--tech]
   simulate --model resnet18 --device zcu102 --quant w4a5 [--batch 1] [--design PATH]
-           [--json PATH]   # machine-readable simulation summary
+           [--json PATH]       # machine-readable simulation summary
+           [--trace-out PATH]  # single-model event trace: .csv, .json
+                               # (Chrome trace-event / Perfetto), or text gantt
   serve    --artifact artifacts/toy_cnn_b8.hlo.txt [--requests 64] [--max-batch 8] [--workers 1] [--device zcu102]
            (--models m1,m2 [--quant w8a8] serves co-located sim-only tenants;
             --workers K fans execution out to a K-engine pool;
             --dispatch-shards S pins the batching-front shard count, 0 = auto)
+           [--metrics-out PATH]    # Prometheus text, or JSON when PATH ends .json
+           [--trace-out PATH]      # serving spans as Chrome trace-event (Perfetto) JSON
+           [--stats-interval SECS] # periodic one-line stats to stderr
   run      --config configs/resnet18_zcu102.toml   # full pipeline from a config file
 
   dse/simulate/serve also accept --devices d1,d2,... to shard the model
@@ -329,6 +402,7 @@ fn run_cli() -> Result<(), Error> {
                 val("batch"),
                 val("design"),
                 val("json"),
+                val("trace-out"),
                 val("objective"),
             ],
         )?),
@@ -346,6 +420,9 @@ fn run_cli() -> Result<(), Error> {
                 val("models"),
                 val("quant"),
                 val("objective"),
+                val("metrics-out"),
+                val("trace-out"),
+                val("stats-interval"),
             ],
         )?),
         "run" => cmd_run(&Args::parse("run", rest, &[val("config")])?),
@@ -516,6 +593,16 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
     let quant = parse_quant(&args.get("quant", "w4a5"))?;
     let batch: u64 = args.get_num("batch", 1u64)?;
     let json_path = args.flags.get("json").cloned();
+    let trace_out = args.flags.get("trace-out").cloned();
+    // event traces are a single-model, single-device diagnostic
+    let reject_trace_out = |what: &str| -> Result<(), Error> {
+        if trace_out.is_some() {
+            return Err(Error::Usage(format!(
+                "--trace-out traces the single-model simulation (not valid with {what})"
+            )));
+        }
+        Ok(())
+    };
 
     if let Some((models, pool)) = parse_fleet(args)? {
         if args.has("design") {
@@ -523,6 +610,7 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
                 "--design checkpoints are single-model (not valid with --models)".to_string(),
             ));
         }
+        reject_trace_out("--models/--devices")?;
         let objective = parse_objective(args)?;
         let scheduled = fleet_builder(&models, &pool, quant)?
             .with_objective(objective)
@@ -557,13 +645,17 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
                         .collect();
                     format!(
                         "{{\"model\":\"{}\",\"mode\":\"{}\",\"devices\":[{}],\
-                         \"throughput_rps\":{},\"makespan_ms\":{},\"stall_us\":{}}}",
+                         \"throughput_rps\":{},\"makespan_ms\":{},\"stall_us\":{},\
+                         \"events\":{},\"events_processed\":{},\"truncated\":{}}}",
                         json_escape(&label.join("+")),
                         p.mode(),
                         devs.join(","),
                         jnum(p.throughput()),
                         jnum(ps.makespan_s() * 1e3),
-                        jnum(ps.total_stall_s() * 1e6)
+                        jnum(ps.total_stall_s() * 1e6),
+                        ps.events(),
+                        ps.events_processed(),
+                        ps.truncated()
                     )
                 })
                 .collect();
@@ -574,10 +666,15 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
                 .iter()
                 .map(|d| format!("\"{}\"", json_escape(d.name)))
                 .collect();
+            let events: u64 = sim.per_placement.iter().map(|p| p.events()).sum();
+            let events_processed: u64 =
+                sim.per_placement.iter().map(|p| p.events_processed()).sum();
+            let truncated = sim.per_placement.iter().any(|p| p.truncated());
             let doc = format!(
                 "{{\"mode\":\"fleet\",\"models\":[{}],\"quant\":\"{}\",\"devices\":[{}],\
                  \"objective\":\"{}\",\"batch\":{},\"aggregate_throughput_rps\":{},\
-                 \"devices_used\":{},\"makespan_ms\":{},\"stall_us\":{},\"placements\":[{}]}}\n",
+                 \"devices_used\":{},\"makespan_ms\":{},\"stall_us\":{},\"events\":{},\
+                 \"events_processed\":{},\"truncated\":{},\"placements\":[{}]}}\n",
                 model_names.join(","),
                 quant,
                 pool_names.join(","),
@@ -587,6 +684,9 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
                 scheduled.result().devices_used,
                 jnum(sim.makespan_s * 1e3),
                 jnum(sim.total_stall_s * 1e6),
+                events,
+                events_processed,
+                truncated,
                 placements.join(",")
             );
             write_json_summary(&path, &doc)?;
@@ -601,6 +701,7 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
                 "--design checkpoints are single-model (not valid with --models)".to_string(),
             ));
         }
+        reject_trace_out("--models")?;
         let scheduled = colocate_builder(&models, quant)
             .on_device(device.as_str())?
             .explore(&DseConfig::default())?
@@ -652,7 +753,7 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
                 "{{\"mode\":\"colocated\",\"models\":[{}],\"quant\":\"{}\",\
                  \"device\":\"{}\",\"batch\":{},\
                  \"makespan_ms\":{},\"stall_us\":{},\"port_busy_frac\":{},\"events\":{},\
-                 \"tenants\":[{}]}}\n",
+                 \"events_processed\":{},\"truncated\":{},\"tenants\":[{}]}}\n",
                 names.join(","),
                 quant,
                 json_escape(&device),
@@ -661,6 +762,8 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
                 jnum(sim.total_stall_s * 1e6),
                 jnum(sim.port_busy_frac),
                 sim.events,
+                sim.events_processed,
+                sim.truncated,
                 tenants.join(",")
             );
             write_json_summary(&path, &doc)?;
@@ -674,6 +777,7 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
                 "--design checkpoints are single-device (not valid with --devices)".to_string(),
             ));
         }
+        reject_trace_out("--devices")?;
         let scheduled = Deployment::for_model(&model)
             .quant(quant)
             .on_devices(&chain)?
@@ -696,7 +800,8 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
             let doc = format!(
                 "{{\"mode\":\"sharded\",\"model\":\"{}\",\"quant\":\"{}\",\"devices\":[{}],\
                  \"batch\":{},\"makespan_ms\":{},\"stall_us\":{},\"steady_period_us\":{},\
-                 \"bottleneck\":\"{:?}\",\"events\":{}}}\n",
+                 \"bottleneck\":\"{:?}\",\"events\":{},\"events_processed\":{},\
+                 \"truncated\":{}}}\n",
                 json_escape(&model),
                 quant,
                 devices.join(","),
@@ -705,7 +810,9 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
                 jnum(sim.total_stall_s * 1e6),
                 jnum(sim.steady_period_s * 1e6),
                 sim.bottleneck,
-                sim.events()
+                sim.events(),
+                sim.events_processed(),
+                sim.truncated()
             );
             write_json_summary(&path, &doc)?;
         }
@@ -726,7 +833,13 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
     };
     let scheduled = explored.schedule_for_batch(batch);
     let analytic_ms = scheduled.design().latency_ms(1);
-    let sim = scheduled.simulate(&SimConfig { batch, ..Default::default() });
+    // a --trace-out run records the full event trace (no fast-forward)
+    let sim_cfg = if trace_out.is_some() {
+        SimConfig { batch, trace: true, max_trace_events: TRACE_EVENT_CAP, ..Default::default() }
+    } else {
+        SimConfig { batch, ..Default::default() }
+    };
+    let sim = scheduled.simulate(&sim_cfg);
     println!(
         "{model}-{quant} on {device} batch={batch}: makespan={:.3} ms, stalls={:.1} us, \
          DMA busy {:.0}%, {} events (analytic latency {:.3} ms)",
@@ -740,7 +853,8 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
         let doc = format!(
             "{{\"mode\":\"single\",\"model\":\"{}\",\"quant\":\"{}\",\"device\":\"{}\",\
              \"batch\":{},\"makespan_ms\":{},\"stall_us\":{},\"dma_busy_frac\":{},\
-             \"events\":{},\"analytic_latency_ms\":{}}}\n",
+             \"events\":{},\"events_processed\":{},\"truncated\":{},\
+             \"analytic_latency_ms\":{}}}\n",
             json_escape(&model),
             quant,
             json_escape(&device),
@@ -749,9 +863,28 @@ fn cmd_simulate(args: &Args) -> Result<(), Error> {
             jnum(sim.total_stall_s * 1e6),
             jnum(sim.dma_busy_frac),
             sim.events,
+            sim.events_processed,
+            sim.truncated,
             jnum(analytic_ms)
         );
         write_json_summary(&path, &doc)?;
+    }
+    if let Some(path) = trace_out {
+        let text = if path.ends_with(".csv") {
+            to_csv(&sim.traces)
+        } else if path.ends_with(".json") {
+            chrome_trace_sim(&sim.traces)
+        } else {
+            render_gantt(&sim.traces, 100)
+        };
+        std::fs::write(&path, text)
+            .map_err(|source| Error::Io { path: path.clone(), source })?;
+        if sim.truncated {
+            eprintln!(
+                "note: trace hit the {TRACE_EVENT_CAP}-event cap; {path} holds a prefix"
+            );
+        }
+        println!("simulation trace written to {path}");
     }
     Ok(())
 }
@@ -772,6 +905,7 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
     let dispatch_shards: usize = args.get_num("dispatch-shards", 0usize)?;
     let device = args.get("device", "zcu102");
     let opts = ServerOptions { workers, dispatch_shards, ..Default::default() };
+    let tele = TelemetryCli::from_args(args)?;
 
     if let Some((models, pool)) = parse_fleet(args)? {
         if args.has("artifact") {
@@ -791,6 +925,8 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
             BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
             opts,
         )?;
+        let stats =
+            tele.start_stats(router.metrics_handles().into_iter().map(|(_, h)| h).collect());
         let t0 = std::time::Instant::now();
         for name in scheduled.model_names() {
             let input_len = scheduled.input_len(name).expect("names come from the plan");
@@ -818,6 +954,10 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
                 m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
             );
         }
+        if let Some(s) = stats {
+            s.stop();
+        }
+        tele.emit(&router.telemetry())?;
         router.shutdown();
         return Ok(());
     }
@@ -842,6 +982,8 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
             BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
             opts,
         )?;
+        let stats =
+            tele.start_stats(registry.metrics_handles().into_iter().map(|(_, h)| h).collect());
         let t0 = std::time::Instant::now();
         for name in scheduled.tenant_names() {
             let input_len = scheduled.input_len(name).expect("names come from the plan");
@@ -861,6 +1003,10 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
                 m.throughput_rps, m.p50_ms, m.p99_ms, m.mean_batch
             );
         }
+        if let Some(s) = stats {
+            s.stop();
+        }
+        tele.emit(&registry.telemetry())?;
         registry.shutdown();
         return Ok(());
     }
@@ -891,6 +1037,7 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
             BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(2) },
             opts,
         )?;
+        let stats = tele.start_stats(vec![server.metrics_handle()]);
         let t0 = std::time::Instant::now();
         drive_synthetic(&server, requests, scheduled.input_len())?;
         let elapsed = t0.elapsed();
@@ -905,6 +1052,10 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
             m.p99_ms,
             m.mean_batch
         );
+        if let Some(s) = stats {
+            s.stop();
+        }
+        tele.emit(&server.telemetry())?;
         server.shutdown();
         return Ok(());
     }
@@ -924,6 +1075,7 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
         opts,
     )?;
 
+    let stats = tele.start_stats(vec![server.metrics_handle()]);
     let t0 = std::time::Instant::now();
     drive_synthetic(&server, requests, scheduled.input_len())?;
     let elapsed = t0.elapsed();
@@ -938,6 +1090,10 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
         m.mean_batch,
         m.sim_accel_s * 1e3
     );
+    if let Some(s) = stats {
+        s.stop();
+    }
+    tele.emit(&server.telemetry())?;
     server.shutdown();
     Ok(())
 }

@@ -47,6 +47,17 @@ pub struct CacheStats {
     pub misses: u64,
     /// Distinct design points currently stored.
     pub entries: usize,
+    /// Per-schema breakdown of `hits`/`misses` — single-device,
+    /// partitioned (multi-device), co-located (multi-tenant) and fleet
+    /// lookups counted separately (they always sum to the aggregates).
+    pub single_hits: u64,
+    pub single_misses: u64,
+    pub partitioned_hits: u64,
+    pub partitioned_misses: u64,
+    pub colocated_hits: u64,
+    pub colocated_misses: u64,
+    pub fleet_hits: u64,
+    pub fleet_misses: u64,
 }
 
 /// Memoization table for DSE outcomes, keyed by design-point content.
@@ -67,6 +78,16 @@ pub struct DesignCache {
     fleet: Mutex<HashMap<String, Option<FleetResult>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    // per-schema breakdowns (each lookup bumps its schema counter AND the
+    // aggregate above, so the aggregates stay exact sums)
+    single_hits: AtomicU64,
+    single_misses: AtomicU64,
+    partitioned_hits: AtomicU64,
+    partitioned_misses: AtomicU64,
+    colocated_hits: AtomicU64,
+    colocated_misses: AtomicU64,
+    fleet_hits: AtomicU64,
+    fleet_misses: AtomicU64,
 }
 
 impl DesignCache {
@@ -221,10 +242,12 @@ impl DesignCache {
         let key = Self::key(network, device, cfg);
         if let Some(found) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.single_hits.fetch_add(1, Ordering::Relaxed);
             return (found.clone(), true);
         }
         // run outside the lock: DSE work must not serialize parallel sweeps
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.single_misses.fetch_add(1, Ordering::Relaxed);
         let result = dse::run(network, device, cfg);
         self.map.lock().unwrap().entry(key).or_insert_with(|| result.clone());
         (result, false)
@@ -243,10 +266,12 @@ impl DesignCache {
         let key = Self::multi_key(network, devices, cuts, cfg);
         if let Some(found) = self.parts.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.partitioned_hits.fetch_add(1, Ordering::Relaxed);
             return (found.clone(), true);
         }
         // run outside the lock, like the single-device path
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.partitioned_misses.fetch_add(1, Ordering::Relaxed);
         let result = match cuts {
             None => partition::partition(network, devices, cfg),
             Some(cuts) => partition::partition_with_cuts(network, devices, cuts, cfg),
@@ -267,10 +292,12 @@ impl DesignCache {
         let key = Self::colo_key(networks, device, cfg);
         if let Some(found) = self.colo.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.colocated_hits.fetch_add(1, Ordering::Relaxed);
             return (found.clone(), true);
         }
         // run outside the lock, like the other two paths
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.colocated_misses.fetch_add(1, Ordering::Relaxed);
         let result = colocate::colocate(networks, device, cfg);
         self.colo.lock().unwrap().entry(key).or_insert_with(|| result.clone());
         (result, false)
@@ -293,11 +320,13 @@ impl DesignCache {
         let key = Self::fleet_key(networks, devices, objective, cfg);
         if let Some(found) = self.fleet.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.fleet_hits.fetch_add(1, Ordering::Relaxed);
             return (found.clone(), true);
         }
         // run outside the lock, like the other three paths (the nested
         // sub-lookups take the other maps' locks, never this one)
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.fleet_misses.fetch_add(1, Ordering::Relaxed);
         let result = fleet::fleet_in(self, networks, devices, objective, cfg);
         self.fleet.lock().unwrap().entry(key).or_insert_with(|| result.clone());
         (result, false)
@@ -308,6 +337,14 @@ impl DesignCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.len(),
+            single_hits: self.single_hits.load(Ordering::Relaxed),
+            single_misses: self.single_misses.load(Ordering::Relaxed),
+            partitioned_hits: self.partitioned_hits.load(Ordering::Relaxed),
+            partitioned_misses: self.partitioned_misses.load(Ordering::Relaxed),
+            colocated_hits: self.colocated_hits.load(Ordering::Relaxed),
+            colocated_misses: self.colocated_misses.load(Ordering::Relaxed),
+            fleet_hits: self.fleet_hits.load(Ordering::Relaxed),
+            fleet_misses: self.fleet_misses.load(Ordering::Relaxed),
         }
     }
 
@@ -397,6 +434,33 @@ mod tests {
         assert_eq!(a.throughput, b.throughput);
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn per_schema_counters_partition_the_aggregates() {
+        let net = models::toy_cnn(Quant::W8A8);
+        let dev = Device::zcu102();
+        let cfg = DseConfig::default();
+        let cache = DesignCache::new();
+        // one miss + one hit on two different schemas
+        let _ = cache.explore(&net, &dev, &cfg);
+        let _ = cache.explore(&net, &dev, &cfg);
+        let _ = cache.explore_partitioned(&net, &[dev.clone(), dev.clone()], None, &cfg);
+        let _ = cache.explore_partitioned(&net, &[dev.clone(), dev.clone()], None, &cfg);
+        let s = cache.stats();
+        assert_eq!((s.single_hits, s.single_misses), (1, 1));
+        assert_eq!((s.partitioned_hits, s.partitioned_misses), (1, 1));
+        assert_eq!((s.colocated_hits, s.colocated_misses), (0, 0));
+        assert_eq!((s.fleet_hits, s.fleet_misses), (0, 0));
+        // the per-schema breakdown always sums to the aggregates
+        assert_eq!(
+            s.hits,
+            s.single_hits + s.partitioned_hits + s.colocated_hits + s.fleet_hits
+        );
+        assert_eq!(
+            s.misses,
+            s.single_misses + s.partitioned_misses + s.colocated_misses + s.fleet_misses
+        );
     }
 
     #[test]

@@ -295,6 +295,34 @@ impl PlacementSim {
             PlacementSim::Colocated(r) => r.total_stall_s,
         }
     }
+
+    /// Semantic fragment-iteration event count of this placement's sim.
+    pub fn events(&self) -> u64 {
+        match self {
+            PlacementSim::Solo(r) => r.events,
+            PlacementSim::Sharded(r) => r.events(),
+            PlacementSim::Colocated(r) => r.events,
+        }
+    }
+
+    /// Events the engine actually stepped; below [`Self::events`] when the
+    /// steady-state fast-forward extrapolated the periodic tail.
+    pub fn events_processed(&self) -> u64 {
+        match self {
+            PlacementSim::Solo(r) => r.events_processed,
+            PlacementSim::Sharded(r) => r.events_processed(),
+            PlacementSim::Colocated(r) => r.events_processed,
+        }
+    }
+
+    /// Whether a trace run hit `max_trace_events` and dropped later events.
+    pub fn truncated(&self) -> bool {
+        match self {
+            PlacementSim::Solo(r) => r.truncated,
+            PlacementSim::Sharded(r) => r.truncated(),
+            PlacementSim::Colocated(r) => r.truncated,
+        }
+    }
 }
 
 /// Fleet-level simulation rollup: per-placement sims plus the figures a

@@ -76,6 +76,10 @@ pub struct ColocatedSimResult {
     /// Events the joint loop actually stepped; below `events` when the
     /// steady-state fast-forward extrapolated the periodic tail.
     pub events_processed: u64,
+    /// A trace run hit `max_trace_events` and dropped later events. Only the
+    /// 1-tenant path can trace; the joint loop never does, so it reports
+    /// `false` honestly.
+    pub truncated: bool,
 }
 
 /// Per-tenant burst schedules against the physical port's residual rate —
@@ -135,6 +139,7 @@ pub fn simulate_colocated(
             total_stall_s: r.total_stall_s,
             events: r.events,
             events_processed: r.events_processed,
+            truncated: r.truncated,
         };
     }
 
@@ -301,6 +306,7 @@ pub fn simulate_colocated(
         total_stall_s: stall_per_tenant.iter().sum(),
         events: processed + skipped,
         events_processed: processed,
+        truncated: false,
         per_tenant,
     }
 }

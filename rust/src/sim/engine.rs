@@ -116,6 +116,7 @@ pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult 
     let mut traces = Vec::new();
 
     if schedule.entries.is_empty() {
+        crate::telemetry::counters().sim_runs.incr();
         return SimResult {
             makespan_s: ideal_finish,
             latency_ms: ideal_finish * 1e3,
@@ -150,6 +151,7 @@ pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult 
     let mut skipped = 0_u64;
     let mut max_read_end = 0.0_f64;
     let mut truncated = false;
+    let mut ff_rounds = 0_u64;
 
     let (rounds_total, n_per_round) = schedule.hyperperiod();
     let round_events: u64 = n_per_round.iter().sum();
@@ -252,6 +254,7 @@ pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult 
                         }
                     }
                     skipped += round_events * rounds_left;
+                    ff_rounds = rounds_left;
                 }
                 // one extrapolation per run; the tail is simulated exactly
                 detector = None;
@@ -260,6 +263,17 @@ pub fn simulate(design: &Design, device: &Device, cfg: &SimConfig) -> SimResult 
     }
 
     debug_assert_eq!(processed + skipped, total_events, "every scheduled event accounted for");
+
+    // fast-forward diagnostics into the process-wide telemetry registry
+    // (relaxed counter bumps; the sim loop itself is untouched)
+    let g = crate::telemetry::counters();
+    g.sim_runs.incr();
+    g.sim_events.add(processed + skipped);
+    g.sim_events_processed.add(processed);
+    if skipped > 0 {
+        g.sim_fast_forwards.incr();
+        g.sim_rounds_skipped.add(ff_rounds);
+    }
 
     let makespan = ideal_finish.max(max_read_end);
     let total_stall: f64 = per_layer_stall.iter().sum();

@@ -72,6 +72,12 @@ impl PartitionedSimResult {
     pub fn events_processed(&self) -> u64 {
         self.per_partition.iter().map(|p| p.events_processed).sum()
     }
+
+    /// Whether any partition's trace hit `max_trace_events` and dropped
+    /// later events.
+    pub fn truncated(&self) -> bool {
+        self.per_partition.iter().any(|p| p.truncated)
+    }
 }
 
 /// Simulate a chain of `(design, device)` partitions connected by streaming

@@ -211,6 +211,7 @@ pub fn simulate_colocated(
             total_stall_s: r.total_stall_s,
             events: r.events,
             events_processed: r.events_processed,
+            truncated: r.truncated,
         };
     }
 
@@ -300,6 +301,7 @@ pub fn simulate_colocated(
         total_stall_s: stall_per_tenant.iter().sum(),
         events,
         events_processed: events,
+        truncated: false,
         per_tenant,
     }
 }

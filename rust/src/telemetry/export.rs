@@ -1,0 +1,357 @@
+//! Exposition formats: Prometheus text, JSON snapshot, and Chrome
+//! trace-event (Perfetto-loadable) JSON.
+//!
+//! Every function here is a **pure formatter** over an already-taken
+//! [`TelemetrySnapshot`] (or span/trace slice) — no globals are read, so
+//! the outputs are deterministic and golden-testable. Ordering is stable
+//! by construction: metric families appear in a fixed sequence, labeled
+//! series iterate [`SpanKind::ALL`] / worker index / the snapshot's own
+//! counter order.
+
+use super::spans::{Span, SpanKind, SHARD_LANE_BASE};
+use super::TelemetrySnapshot;
+use crate::sim::TraceEvent;
+
+/// Per-kind span aggregate (computed at exposition time, never on the
+/// serving path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanStats {
+    pub kind: SpanKind,
+    /// Spans recorded (still resident in the rings).
+    pub count: u64,
+    /// Requests those spans covered.
+    pub items: u64,
+    /// Summed duration, µs.
+    pub dur_us_sum: u64,
+    /// Longest single span, µs.
+    pub dur_us_max: u64,
+}
+
+/// Aggregate `spans` per kind, in [`SpanKind::ALL`] order (zero-count
+/// kinds included, so the exposition shape never depends on load).
+pub fn span_stats(spans: &[Span]) -> Vec<SpanStats> {
+    SpanKind::ALL
+        .iter()
+        .map(|&kind| {
+            let mut s = SpanStats { kind, count: 0, items: 0, dur_us_sum: 0, dur_us_max: 0 };
+            for span in spans.iter().filter(|sp| sp.kind == kind) {
+                s.count += 1;
+                s.items += u64::from(span.items);
+                s.dur_us_sum += span.dur_us;
+                s.dur_us_max = s.dur_us_max.max(span.dur_us);
+            }
+            s
+        })
+        .collect()
+}
+
+/// A finite f64 rendered as a bare number (`0` for the non-finite values
+/// that cannot appear in a healthy snapshot — both formats stay parseable
+/// regardless).
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Prometheus label-value escaping: backslash, double-quote, newline.
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// JSON string escaping (same character set; names here are identifiers).
+fn escape_json(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn family(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// Render the snapshot in the Prometheus text exposition format
+/// (version 0.0.4): `# HELP`/`# TYPE` headers, one `name{labels} value`
+/// sample per line, stable family and series order.
+pub fn prometheus_text(t: &TelemetrySnapshot) -> String {
+    let m = &t.metrics;
+    let mut out = String::with_capacity(4096);
+
+    family(&mut out, "autows_requests_total", "Requests completed by the serving session.", "counter");
+    out.push_str(&format!("autows_requests_total {}\n", m.requests));
+    family(&mut out, "autows_batches_total", "Engine batches executed.", "counter");
+    out.push_str(&format!("autows_batches_total {}\n", m.batches));
+    family(&mut out, "autows_mean_batch", "Mean requests per engine batch.", "gauge");
+    out.push_str(&format!("autows_mean_batch {}\n", num(m.mean_batch)));
+    family(&mut out, "autows_throughput_rps", "Achieved request throughput over the session.", "gauge");
+    out.push_str(&format!("autows_throughput_rps {}\n", num(m.throughput_rps)));
+    family(&mut out, "autows_latency_ms", "Request latency distribution, milliseconds.", "gauge");
+    out.push_str(&format!("autows_latency_ms{{quantile=\"0.5\"}} {}\n", num(m.p50_ms)));
+    out.push_str(&format!("autows_latency_ms{{quantile=\"0.95\"}} {}\n", num(m.p95_ms)));
+    out.push_str(&format!("autows_latency_ms{{quantile=\"0.99\"}} {}\n", num(m.p99_ms)));
+    out.push_str(&format!("autows_latency_ms{{quantile=\"mean\"}} {}\n", num(m.mean_ms)));
+    family(&mut out, "autows_queue_depth", "Dispatch-point queue depth (requests admitted, not yet on an engine).", "gauge");
+    out.push_str(&format!("autows_queue_depth{{stat=\"mean\"}} {}\n", num(m.queue_depth_mean)));
+    out.push_str(&format!("autows_queue_depth{{stat=\"max\"}} {}\n", m.queue_depth_max));
+    family(&mut out, "autows_sim_accel_seconds_total", "Simulated accelerator busy time, seconds.", "counter");
+    out.push_str(&format!("autows_sim_accel_seconds_total {}\n", num(m.sim_accel_s)));
+
+    family(&mut out, "autows_worker_batches_total", "Batches served per pool worker.", "counter");
+    for (w, ws) in m.per_worker.iter().enumerate() {
+        out.push_str(&format!("autows_worker_batches_total{{worker=\"{w}\"}} {}\n", ws.batches));
+    }
+    family(&mut out, "autows_worker_requests_total", "Requests served per pool worker.", "counter");
+    for (w, ws) in m.per_worker.iter().enumerate() {
+        out.push_str(&format!("autows_worker_requests_total{{worker=\"{w}\"}} {}\n", ws.requests));
+    }
+    family(&mut out, "autows_worker_busy_seconds_total", "Engine busy time per pool worker, seconds.", "counter");
+    for (w, ws) in m.per_worker.iter().enumerate() {
+        out.push_str(&format!("autows_worker_busy_seconds_total{{worker=\"{w}\"}} {}\n", num(ws.busy_s)));
+    }
+
+    let stats = span_stats(&t.spans);
+    family(&mut out, "autows_spans_total", "Serving-path spans recorded per kind (ring-resident).", "counter");
+    for s in &stats {
+        out.push_str(&format!("autows_spans_total{{kind=\"{}\"}} {}\n", s.kind.label(), s.count));
+    }
+    family(&mut out, "autows_span_items_total", "Requests covered by the recorded spans, per kind.", "counter");
+    for s in &stats {
+        out.push_str(&format!("autows_span_items_total{{kind=\"{}\"}} {}\n", s.kind.label(), s.items));
+    }
+    family(&mut out, "autows_span_duration_us_sum", "Summed span duration per kind, microseconds.", "counter");
+    for s in &stats {
+        out.push_str(&format!("autows_span_duration_us_sum{{kind=\"{}\"}} {}\n", s.kind.label(), s.dur_us_sum));
+    }
+    family(&mut out, "autows_span_duration_us_max", "Longest single span per kind, microseconds.", "gauge");
+    for s in &stats {
+        out.push_str(&format!("autows_span_duration_us_max{{kind=\"{}\"}} {}\n", s.kind.label(), s.dur_us_max));
+    }
+
+    family(&mut out, "autows_pipeline_counter", "Process-wide DSE/simulator/design-cache counters.", "counter");
+    for (name, value) in &t.counters {
+        out.push_str(&format!("autows_pipeline_counter{{name=\"{}\"}} {value}\n", escape_label(name)));
+    }
+    out
+}
+
+/// Render the snapshot as one JSON document (machine-readable sibling of
+/// [`prometheus_text`]; key order is fixed).
+pub fn json_snapshot(t: &TelemetrySnapshot) -> String {
+    let m = &t.metrics;
+    let mut out = String::with_capacity(2048);
+    out.push('{');
+    out.push_str(&format!("\"requests\":{},", m.requests));
+    out.push_str(&format!("\"batches\":{},", m.batches));
+    out.push_str(&format!("\"mean_batch\":{},", num(m.mean_batch)));
+    out.push_str(&format!("\"p50_ms\":{},", num(m.p50_ms)));
+    out.push_str(&format!("\"p95_ms\":{},", num(m.p95_ms)));
+    out.push_str(&format!("\"p99_ms\":{},", num(m.p99_ms)));
+    out.push_str(&format!("\"mean_ms\":{},", num(m.mean_ms)));
+    out.push_str(&format!("\"throughput_rps\":{},", num(m.throughput_rps)));
+    out.push_str(&format!("\"sim_accel_s\":{},", num(m.sim_accel_s)));
+    out.push_str(&format!("\"queue_depth_mean\":{},", num(m.queue_depth_mean)));
+    out.push_str(&format!("\"queue_depth_max\":{},", m.queue_depth_max));
+    out.push_str("\"per_worker\":[");
+    for (w, ws) in m.per_worker.iter().enumerate() {
+        if w > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"worker\":{w},\"batches\":{},\"requests\":{},\"busy_s\":{}}}",
+            ws.batches,
+            ws.requests,
+            num(ws.busy_s)
+        ));
+    }
+    out.push_str("],\"spans\":[");
+    for (i, s) in span_stats(&t.spans).iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"kind\":\"{}\",\"count\":{},\"items\":{},\"dur_us_sum\":{},\"dur_us_max\":{}}}",
+            s.kind.label(),
+            s.count,
+            s.items,
+            s.dur_us_sum,
+            s.dur_us_max
+        ));
+    }
+    out.push_str("],\"counters\":{");
+    for (i, (name, value)) in t.counters.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":{value}", escape_json(name)));
+    }
+    out.push_str("}}\n");
+    out
+}
+
+/// Display tid for a lane: workers keep their index, shard lanes map to a
+/// compact 10000+ block (cosmetic — Perfetto sorts tracks by tid).
+fn lane_tid(lane: u32) -> u32 {
+    if lane >= SHARD_LANE_BASE {
+        10_000 + (lane - SHARD_LANE_BASE)
+    } else {
+        lane
+    }
+}
+
+/// Serialize serving spans as a Chrome trace-event JSON document
+/// (load in Perfetto / `chrome://tracing`). One complete (`"X"`) event per
+/// span; lanes become threads of pid 0, named via metadata events.
+pub fn chrome_trace_spans(spans: &[Span]) -> String {
+    let mut lanes: Vec<u32> = spans.iter().map(|s| s.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    let mut out = String::with_capacity(256 + spans.len() * 96);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for &lane in &lanes {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let name = if lane >= SHARD_LANE_BASE {
+            format!("shard {}", lane - SHARD_LANE_BASE)
+        } else {
+            format!("worker {lane}")
+        };
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\"args\":{{\"name\":\"{name}\"}}}}",
+            lane_tid(lane)
+        ));
+    }
+    for s in spans {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"serve\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"items\":{}}}}}",
+            s.kind.label(),
+            s.start_us,
+            s.dur_us,
+            lane_tid(s.lane),
+            s.items
+        ));
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// Serialize a simulator [`TraceEvent`] stream (seconds) as Chrome
+/// trace-event JSON: layers become threads, event kinds become slice
+/// names, timestamps convert to µs.
+pub fn chrome_trace_sim(traces: &[TraceEvent]) -> String {
+    let mut layers: Vec<usize> = traces.iter().map(|t| t.layer).collect();
+    layers.sort_unstable();
+    layers.dedup();
+    let mut out = String::with_capacity(256 + traces.len() * 96);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for &layer in &layers {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{layer},\"args\":{{\"name\":\"layer {layer}\"}}}}"
+        ));
+    }
+    for t in traces {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"sim\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":0,\"tid\":{}}}",
+            t.kind.label(),
+            t.start * 1e6,
+            (t.end - t.start).max(0.0) * 1e6,
+            t.layer
+        ));
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_span(kind: SpanKind, lane: u32, items: u32, start_us: u64, dur_us: u64) -> Span {
+        Span { kind, lane, items, start_us, dur_us }
+    }
+
+    #[test]
+    fn span_stats_cover_every_kind_in_stable_order() {
+        let spans = vec![
+            one_span(SpanKind::Engine, 0, 4, 10, 30),
+            one_span(SpanKind::Engine, 1, 2, 40, 10),
+            one_span(SpanKind::Wait, 0, 4, 0, 10),
+        ];
+        let stats = span_stats(&spans);
+        assert_eq!(stats.len(), SpanKind::ALL.len());
+        assert_eq!(stats[0].kind, SpanKind::Wait);
+        assert_eq!(stats[0].count, 1);
+        assert_eq!(stats[1].kind, SpanKind::Engine);
+        assert_eq!((stats[1].count, stats[1].items, stats[1].dur_us_sum, stats[1].dur_us_max), (2, 6, 40, 30));
+        // absent kinds still appear, zeroed
+        assert_eq!(stats[4].kind, SpanKind::Steal);
+        assert_eq!(stats[4].count, 0);
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape_json("x\"y"), "x\\\"y");
+    }
+
+    #[test]
+    fn non_finite_values_stay_parseable() {
+        assert_eq!(num(f64::NAN), "0");
+        assert_eq!(num(f64::INFINITY), "0");
+        assert_eq!(num(1.5), "1.5");
+    }
+
+    #[test]
+    fn chrome_trace_sim_is_balanced_json() {
+        use crate::sim::TraceKind;
+        let traces = vec![
+            TraceEvent { layer: 1, kind: TraceKind::WriteBurst, start: 0.0, end: 1e-6 },
+            TraceEvent { layer: 1, kind: TraceKind::Stall, start: 1e-6, end: 2e-6 },
+        ];
+        let doc = chrome_trace_sim(&traces);
+        assert!(doc.starts_with("{\"traceEvents\":["));
+        assert!(doc.ends_with("],\"displayTimeUnit\":\"ms\"}\n"));
+        assert_eq!(doc.matches("\"ph\":\"X\"").count(), 2);
+        assert_eq!(doc.matches("\"ph\":\"M\"").count(), 1, "one thread_name per layer");
+        assert!(doc.contains("\"name\":\"write\""));
+        assert!(doc.contains("\"name\":\"stall\""));
+        // braces balance (cheap structural check without a JSON parser)
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+    }
+
+    #[test]
+    fn chrome_trace_spans_names_worker_and_shard_lanes() {
+        let spans = vec![
+            one_span(SpanKind::Engine, 2, 4, 10, 30),
+            one_span(SpanKind::Batch, SHARD_LANE_BASE + 1, 4, 5, 2),
+        ];
+        let doc = chrome_trace_spans(&spans);
+        assert!(doc.contains("\"name\":\"worker 2\""));
+        assert!(doc.contains("\"name\":\"shard 1\""));
+        assert!(doc.contains("\"tid\":10001"));
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+    }
+}

@@ -1,0 +1,260 @@
+//! Unified telemetry: lock-free serving spans, process-wide counters, and
+//! exposition formats.
+//!
+//! Three layers, strictly separated by cost:
+//!
+//! 1. **Recording** ([`spans`], [`registry`]) — what the hot paths touch.
+//!    Span rings are single-writer seqlocks (no locks, no allocation);
+//!    counters are relaxed atomics. The
+//!    [`serving_path_locks`](crate::coordinator::Server::serving_path_locks)
+//!    tripwire stays 0 with telemetry on.
+//! 2. **Snapshot** ([`TelemetrySnapshot`]) — taken on demand from
+//!    `Server::telemetry()` / `Router::telemetry()` / registry terminals.
+//!    Folds the coordinator's batch-event metrics, the global counter
+//!    registry (DSE + sim + design cache), and every span ring.
+//! 3. **Exposition** ([`export`]) — pure formatters over a snapshot:
+//!    Prometheus text, JSON, and Chrome trace-event (Perfetto) JSON.
+//!    Deterministic ordering, so the formats are golden-tested.
+//!
+//! The CLI surfaces all of it: `autows serve --metrics-out PATH
+//! --trace-out PATH --stats-interval SECS` and
+//! `autows simulate --trace-out x.csv|x.json|x.txt`.
+
+mod export;
+mod registry;
+mod spans;
+
+pub use export::{
+    chrome_trace_sim, chrome_trace_spans, json_snapshot, prometheus_text, span_stats, SpanStats,
+};
+pub use registry::{counters, Counter, GlobalCounters};
+pub use spans::{Span, SpanKind, SpanRing, SpanScribe, SHARD_LANE_BASE};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{MetricsHandle, MetricsSnapshot};
+
+/// Spans retained per lane ring. Small enough that an idle hub costs a few
+/// dozen KB, large enough to cover the recent window every exporter cares
+/// about.
+pub const DEFAULT_SPAN_CAPACITY: usize = 1024;
+
+/// Owns the span rings for one serving session: one ring per pool worker
+/// (lane = worker index) and one per batcher shard (lane =
+/// [`SHARD_LANE_BASE`]` + shard`). Created at boot, before any traffic, so
+/// the hot path never allocates or locks to reach its ring.
+pub struct TelemetryHub {
+    epoch: Instant,
+    workers: usize,
+    rings: Vec<Arc<SpanRing>>,
+}
+
+impl TelemetryHub {
+    /// A hub for `workers` pool lanes and `shards` batcher lanes.
+    pub fn new(workers: usize, shards: usize, capacity: usize) -> TelemetryHub {
+        let epoch = Instant::now();
+        let mut rings = Vec::with_capacity(workers + shards);
+        for w in 0..workers {
+            rings.push(Arc::new(SpanRing::new(w as u32, capacity)));
+        }
+        for s in 0..shards {
+            rings.push(Arc::new(SpanRing::new(SHARD_LANE_BASE + s as u32, capacity)));
+        }
+        TelemetryHub { epoch, workers, rings }
+    }
+
+    /// The instant all span timestamps are relative to.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Recording handle for pool worker `w`. Hand exactly one out per
+    /// lane — the rings are single-writer.
+    pub(crate) fn worker_scribe(&self, w: usize) -> SpanScribe {
+        SpanScribe::new(Arc::clone(&self.rings[w]), self.epoch)
+    }
+
+    /// Recording handle for batcher shard `s`.
+    pub(crate) fn shard_scribe(&self, s: usize) -> SpanScribe {
+        SpanScribe::new(Arc::clone(&self.rings[self.workers + s]), self.epoch)
+    }
+
+    /// Every ring-resident span, ordered by lane then recording order.
+    /// Lock-free with respect to the writers.
+    pub fn spans(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            out.extend(ring.snapshot());
+        }
+        out
+    }
+
+    /// Total spans ever recorded across all lanes.
+    pub fn recorded(&self) -> u64 {
+        self.rings.iter().map(|r| r.recorded()).sum()
+    }
+}
+
+/// One coherent observation of a serving session: folded request metrics,
+/// the process-wide counter registry, and the resident spans. The
+/// exposition formatters ([`prometheus_text`], [`json_snapshot`],
+/// [`chrome_trace_spans`]) are pure functions of this value.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    pub metrics: MetricsSnapshot,
+    /// `(name, value)` pairs in stable name order — see
+    /// [`counters_snapshot`].
+    pub counters: Vec<(String, u64)>,
+    pub spans: Vec<Span>,
+}
+
+/// Read every process-wide counter: the design cache's per-schema
+/// hit/miss atomics and the [`counters`] registry (DSE search + simulator
+/// fast-forward). Stable name order; purely relaxed loads.
+pub fn counters_snapshot() -> Vec<(String, u64)> {
+    let cache = crate::pipeline::design_cache().stats();
+    let g = counters();
+    let pairs: [(&str, u64); 19] = [
+        ("cache_entries", cache.entries as u64),
+        ("cache_hits", cache.hits),
+        ("cache_hits_colocated", cache.colocated_hits),
+        ("cache_hits_fleet", cache.fleet_hits),
+        ("cache_hits_partitioned", cache.partitioned_hits),
+        ("cache_hits_single", cache.single_hits),
+        ("cache_misses", cache.misses),
+        ("cache_misses_colocated", cache.colocated_misses),
+        ("cache_misses_fleet", cache.fleet_misses),
+        ("cache_misses_partitioned", cache.partitioned_misses),
+        ("cache_misses_single", cache.single_misses),
+        ("dse_greedy_steps", g.dse_greedy_steps.get()),
+        ("dse_heap_pops", g.dse_heap_pops.get()),
+        ("dse_trial_rollbacks", g.dse_trial_rollbacks.get()),
+        ("sim_events", g.sim_events.get()),
+        ("sim_events_processed", g.sim_events_processed.get()),
+        ("sim_fast_forwards", g.sim_fast_forwards.get()),
+        ("sim_rounds_skipped", g.sim_rounds_skipped.get()),
+        ("sim_runs", g.sim_runs.get()),
+    ];
+    pairs.iter().map(|&(n, v)| (n.to_string(), v)).collect()
+}
+
+/// Periodic one-line stats reports to stderr during a serve session
+/// (`--stats-interval`). Reads through cloneable [`MetricsHandle`]s — the
+/// reporter thread never touches the `Server` itself, and snapshots are
+/// the only cost it imposes.
+pub struct StatsReporter {
+    stop: Arc<AtomicBool>,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl StatsReporter {
+    /// Start reporting over `handles` (one per server; sums are across all
+    /// of them) every `interval`.
+    pub fn start(handles: Vec<MetricsHandle>, interval: Duration) -> StatsReporter {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let started = Instant::now();
+        let thread = thread::spawn(move || {
+            let mut last_requests = 0u64;
+            loop {
+                // sleep in short slices so stop() returns promptly
+                let mut slept = Duration::ZERO;
+                while slept < interval {
+                    if flag.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let slice = Duration::from_millis(20).min(interval - slept);
+                    thread::sleep(slice);
+                    slept += slice;
+                }
+                if flag.load(Ordering::Relaxed) {
+                    return;
+                }
+                let mut requests = 0u64;
+                let mut batches = 0u64;
+                let mut p99 = 0f64;
+                let mut queue_max = 0usize;
+                let mut locks = 0u64;
+                for h in &handles {
+                    let m = h.snapshot();
+                    requests += m.requests;
+                    batches += m.batches;
+                    p99 = p99.max(m.p99_ms);
+                    queue_max = queue_max.max(m.queue_depth_max);
+                    locks += h.serving_path_locks();
+                }
+                eprintln!(
+                    "[autows stats +{}s] requests={requests} (+{}) batches={batches} p99={p99:.2}ms queue_max={queue_max} locks={locks}",
+                    started.elapsed().as_secs(),
+                    requests.saturating_sub(last_requests),
+                );
+                last_requests = requests;
+            }
+        });
+        StatsReporter { stop, thread: Some(thread) }
+    }
+
+    /// Stop and join the reporter thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for StatsReporter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_lanes_are_disjoint_and_ordered() {
+        let hub = TelemetryHub::new(2, 2, 8);
+        hub.worker_scribe(0).mark(SpanKind::Engine, 1);
+        hub.worker_scribe(1).mark(SpanKind::Engine, 2);
+        hub.shard_scribe(0).mark(SpanKind::Batch, 3);
+        hub.shard_scribe(1).mark(SpanKind::Batch, 4);
+        let spans = hub.spans();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans[0].lane, 0);
+        assert_eq!(spans[1].lane, 1);
+        assert_eq!(spans[2].lane, SHARD_LANE_BASE);
+        assert_eq!(spans[3].lane, SHARD_LANE_BASE + 1);
+        assert!(spans[2].is_shard_lane() && !spans[1].is_shard_lane());
+        assert_eq!(hub.recorded(), 4);
+    }
+
+    #[test]
+    fn counters_snapshot_is_sorted_and_complete() {
+        let snap = counters_snapshot();
+        assert_eq!(snap.len(), 19);
+        for pair in snap.windows(2) {
+            assert!(pair[0].0 < pair[1].0, "counter names must be sorted: {pair:?}");
+        }
+        assert!(snap.iter().any(|(n, _)| n == "dse_greedy_steps"));
+        assert!(snap.iter().any(|(n, _)| n == "sim_runs"));
+        assert!(snap.iter().any(|(n, _)| n == "cache_hits_single"));
+    }
+
+    #[test]
+    fn stats_reporter_stops_promptly() {
+        let t0 = Instant::now();
+        let reporter = StatsReporter::start(Vec::new(), Duration::from_secs(60));
+        thread::sleep(Duration::from_millis(30));
+        reporter.stop();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

@@ -1,0 +1,95 @@
+//! Process-wide named counters unifying DSE search telemetry and
+//! simulator fast-forward diagnostics.
+//!
+//! The counters are plain relaxed atomics in a `const`-initialized static
+//! — incrementing one is a few nanoseconds and never takes a lock, so the
+//! DSE inner loops and the simulator can record unconditionally. The
+//! design-cache hit/miss counters are NOT duplicated here: the cache keeps
+//! its own per-schema atomics ([`crate::pipeline::CacheStats`]) and
+//! [`crate::telemetry::counters_snapshot`] folds them in at read time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotone relaxed counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Every process-wide counter the telemetry layer maintains.
+#[derive(Debug)]
+pub struct GlobalCounters {
+    /// Greedy compute-allocation iterations across every DSE run
+    /// (Algorithm 1 unroll increments).
+    pub dse_greedy_steps: Counter,
+    /// Min-ΔB eviction-heap pops in `ALLOCATE_MEMORY` (stale generations
+    /// included — the lazy-invalidation overhead is part of the signal).
+    pub dse_heap_pops: Counter,
+    /// Undo-log trial rollbacks (random search / annealing proposals that
+    /// were rejected or reset).
+    pub dse_trial_rollbacks: Counter,
+    /// Event-simulator runs completed.
+    pub sim_runs: Counter,
+    /// Semantic events across all runs (`Σ r`, extrapolated included).
+    pub sim_events: Counter,
+    /// Events the loops actually stepped (below `sim_events` when the
+    /// steady-state fast-forward engaged).
+    pub sim_events_processed: Counter,
+    /// Runs where the steady-state detector extrapolated (one possible
+    /// extrapolation per run).
+    pub sim_fast_forwards: Counter,
+    /// Whole hyperperiod rounds skipped by those extrapolations.
+    pub sim_rounds_skipped: Counter,
+}
+
+/// The process-wide counter registry.
+pub fn counters() -> &'static GlobalCounters {
+    static GLOBAL: GlobalCounters = GlobalCounters {
+        dse_greedy_steps: Counter::new(),
+        dse_heap_pops: Counter::new(),
+        dse_trial_rollbacks: Counter::new(),
+        sim_runs: Counter::new(),
+        sim_events: Counter::new(),
+        sim_events_processed: Counter::new(),
+        sim_fast_forwards: Counter::new(),
+        sim_rounds_skipped: Counter::new(),
+    };
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counter::new();
+        assert_eq!(c.get(), 0);
+        c.incr();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn global_registry_is_shared_and_monotone() {
+        let before = counters().sim_runs.get();
+        counters().sim_runs.incr();
+        assert!(counters().sim_runs.get() >= before + 1);
+    }
+}

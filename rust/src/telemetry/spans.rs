@@ -1,0 +1,327 @@
+//! Lock-free span ring buffers for the serving path.
+//!
+//! Each lane (pool worker or batcher shard) owns ONE [`SpanRing`] and is
+//! its only writer; snapshots read concurrently through a seqlock
+//! protocol. The write path is a handful of relaxed/release atomic stores
+//! — no `Mutex`, no allocation — so recording a span cannot contend with
+//! another lane, block a snapshot, or trip the
+//! [`serving_path_locks`](crate::coordinator::Server::serving_path_locks)
+//! tripwire. A snapshot that races a writer skips the slot being
+//! rewritten (sequence validation) instead of tearing it.
+//!
+//! Spans are packed into two `u64` data words per slot: the start
+//! timestamp (µs since the owning hub's epoch) and a packed
+//! `kind | items | duration` word, so one record is exactly four atomic
+//! stores (odd seal, two data words, even seal).
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What a recorded span measured — one stage of the request lifecycle
+/// through the sharded serving front
+/// (admit → shard/batcher → mailbox or steal → worker/engine → reply).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Queue wait: earliest admission in the batch until the engine took it.
+    Wait,
+    /// Engine execution of one batch (simulated accelerator + numerics).
+    Engine,
+    /// Reply fan-out back to the submitters.
+    Reply,
+    /// Batch formation + mailbox hand-off on a batcher shard.
+    Batch,
+    /// A worker stealing a foreign mailbox batch (instant marker).
+    Steal,
+}
+
+impl SpanKind {
+    /// Every kind, in the stable exposition order.
+    pub const ALL: [SpanKind; 5] = [
+        SpanKind::Wait,
+        SpanKind::Engine,
+        SpanKind::Reply,
+        SpanKind::Batch,
+        SpanKind::Steal,
+    ];
+
+    /// Stable label used by every exposition format.
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Wait => "wait",
+            SpanKind::Engine => "engine",
+            SpanKind::Reply => "reply",
+            SpanKind::Batch => "batch",
+            SpanKind::Steal => "steal",
+        }
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            SpanKind::Wait => 0,
+            SpanKind::Engine => 1,
+            SpanKind::Reply => 2,
+            SpanKind::Batch => 3,
+            SpanKind::Steal => 4,
+        }
+    }
+
+    fn from_code(code: u64) -> SpanKind {
+        match code {
+            0 => SpanKind::Wait,
+            1 => SpanKind::Engine,
+            2 => SpanKind::Reply,
+            3 => SpanKind::Batch,
+            _ => SpanKind::Steal,
+        }
+    }
+}
+
+/// One decoded span, as returned by snapshots.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Lane of the recording ring: a worker index, or
+    /// [`SHARD_LANE_BASE`]` + shard` for batcher shards.
+    pub lane: u32,
+    /// Requests the span covered (clamped to 16 bits in storage).
+    pub items: u32,
+    /// Start, µs since the owning hub's epoch.
+    pub start_us: u64,
+    /// Duration in µs (clamped to 40 bits in storage — ~12 days).
+    pub dur_us: u64,
+}
+
+impl Span {
+    /// Is this span from a batcher-shard lane (vs a pool worker)?
+    pub fn is_shard_lane(&self) -> bool {
+        self.lane >= SHARD_LANE_BASE
+    }
+}
+
+/// Shard lanes are offset by this base so worker and shard ids never
+/// collide in one hub.
+pub const SHARD_LANE_BASE: u32 = 1 << 16;
+
+const DUR_BITS: u64 = 40;
+const DUR_MASK: u64 = (1 << DUR_BITS) - 1;
+const ITEM_BITS: u64 = 16;
+const ITEM_MASK: u64 = (1 << ITEM_BITS) - 1;
+
+fn pack(kind: SpanKind, items: u32, dur_us: u64) -> u64 {
+    (kind.code() << (DUR_BITS + ITEM_BITS))
+        | (u64::from(items).min(ITEM_MASK) << DUR_BITS)
+        | dur_us.min(DUR_MASK)
+}
+
+fn unpack(word: u64) -> (SpanKind, u32, u64) {
+    let kind = SpanKind::from_code(word >> (DUR_BITS + ITEM_BITS));
+    let items = ((word >> DUR_BITS) & ITEM_MASK) as u32;
+    (kind, items, word & DUR_MASK)
+}
+
+/// One seqlock-guarded slot: `seq` is odd while the writer is mid-update,
+/// even (and non-zero) when the data words are consistent.
+struct SpanSlot {
+    seq: AtomicU64,
+    start: AtomicU64,
+    packed: AtomicU64,
+}
+
+/// Fixed-capacity single-writer span ring. The owning lane records;
+/// any thread may snapshot concurrently.
+pub struct SpanRing {
+    lane: u32,
+    mask: usize,
+    slots: Box<[SpanSlot]>,
+    /// Total records ever written (the ring index is `head & mask`).
+    head: AtomicU64,
+}
+
+impl SpanRing {
+    /// A ring for `lane` holding the last `capacity` spans (rounded up to
+    /// a power of two, minimum 2).
+    pub fn new(lane: u32, capacity: usize) -> SpanRing {
+        let cap = capacity.next_power_of_two().max(2);
+        let slots: Vec<SpanSlot> = (0..cap)
+            .map(|_| SpanSlot {
+                seq: AtomicU64::new(0),
+                start: AtomicU64::new(0),
+                packed: AtomicU64::new(0),
+            })
+            .collect();
+        SpanRing { lane, mask: cap - 1, slots: slots.into_boxed_slice(), head: AtomicU64::new(0) }
+    }
+
+    pub fn lane(&self) -> u32 {
+        self.lane
+    }
+
+    /// Total spans ever recorded (older ones may have been overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Record one span. Single-writer: only the owning lane may call this.
+    /// Lock-free and allocation-free — safe on the serving hot path.
+    pub fn record(&self, kind: SpanKind, items: usize, start_us: u64, dur_us: u64) {
+        let head = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[head as usize & self.mask];
+        let seq = slot.seq.load(Ordering::Relaxed);
+        // seal odd, publish data, seal even (seqlock write protocol)
+        slot.seq.store(seq.wrapping_add(1), Ordering::Relaxed);
+        fence(Ordering::Release);
+        slot.start.store(start_us, Ordering::Relaxed);
+        slot.packed.store(pack(kind, items.min(u32::MAX as usize) as u32, dur_us), Ordering::Relaxed);
+        slot.seq.store(seq.wrapping_add(2), Ordering::Release);
+        self.head.store(head + 1, Ordering::Release);
+    }
+
+    /// Decode every completed span currently in the ring, oldest first.
+    /// Lock-free: a slot the writer is concurrently rewriting is skipped
+    /// (sequence validation), never torn.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let head = self.head.load(Ordering::Acquire) as usize;
+        let len = self.slots.len();
+        let written = head.min(len);
+        let first = if head > len { head & self.mask } else { 0 };
+        let mut out = Vec::with_capacity(written);
+        for k in 0..written {
+            let slot = &self.slots[(first + k) & self.mask];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                continue; // never written, or mid-write
+            }
+            let start = slot.start.load(Ordering::Relaxed);
+            let packed = slot.packed.load(Ordering::Relaxed);
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                continue; // rewritten while we read
+            }
+            let (kind, items, dur_us) = unpack(packed);
+            out.push(Span { kind, lane: self.lane, items, start_us: start, dur_us });
+        }
+        out
+    }
+}
+
+/// A single lane's recording handle: the ring plus the hub epoch the
+/// timestamps are relative to. Cloneable (workers hand one to the threads
+/// they spawn).
+#[derive(Clone)]
+pub struct SpanScribe {
+    ring: Arc<SpanRing>,
+    epoch: Instant,
+}
+
+impl SpanScribe {
+    pub(crate) fn new(ring: Arc<SpanRing>, epoch: Instant) -> SpanScribe {
+        SpanScribe { ring, epoch }
+    }
+
+    /// µs of `t` since the hub epoch (0 for pre-epoch instants).
+    pub fn us_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.us_of(Instant::now())
+    }
+
+    /// Record a span covering `start..end`.
+    pub fn record_between(&self, kind: SpanKind, items: usize, start: Instant, end: Instant) {
+        let s = self.us_of(start);
+        let e = self.us_of(end);
+        self.ring.record(kind, items, s, e.saturating_sub(s));
+    }
+
+    /// Record an instantaneous marker (duration 0) at now.
+    pub fn mark(&self, kind: SpanKind, items: usize) {
+        self.ring.record(kind, items, self.now_us(), 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_roundtrips_and_clamps() {
+        for kind in SpanKind::ALL {
+            let (k, items, dur) = unpack(pack(kind, 37, 123_456));
+            assert_eq!((k, items, dur), (kind, 37, 123_456));
+        }
+        // items clamp to 16 bits, durations to 40
+        let (_, items, dur) = unpack(pack(SpanKind::Engine, u32::MAX, u64::MAX));
+        assert_eq!(items, ITEM_MASK as u32);
+        assert_eq!(dur, DUR_MASK);
+    }
+
+    #[test]
+    fn ring_keeps_order_and_wraps() {
+        let ring = SpanRing::new(7, 4);
+        for i in 0..3 {
+            ring.record(SpanKind::Engine, i as usize, i * 10, 5);
+        }
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].start_us, 0);
+        assert_eq!(spans[2].start_us, 20);
+        assert!(spans.iter().all(|s| s.lane == 7 && s.kind == SpanKind::Engine));
+        // overflow the capacity: the oldest spans fall out, order holds
+        for i in 3..9 {
+            ring.record(SpanKind::Wait, i as usize, i * 10, 5);
+        }
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans[0].start_us, 50);
+        assert_eq!(spans[3].start_us, 80);
+        assert_eq!(ring.recorded(), 9);
+    }
+
+    #[test]
+    fn empty_ring_snapshots_empty() {
+        assert!(SpanRing::new(0, 16).snapshot().is_empty());
+    }
+
+    #[test]
+    fn concurrent_snapshots_never_tear() {
+        // one writer, many readers: every decoded span must be internally
+        // consistent (start == 1000*items, dur == items) — a torn read
+        // would mix the two words of different records
+        let ring = Arc::new(SpanRing::new(1, 8));
+        let writer = {
+            let ring = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                for i in 1..20_000u64 {
+                    ring.record(SpanKind::Engine, i as usize & 0xFF, (i & 0xFF) * 1000, i & 0xFF);
+                }
+            })
+        };
+        for _ in 0..200 {
+            for s in ring.snapshot() {
+                assert_eq!(s.start_us, u64::from(s.items) * 1000, "torn span: {s:?}");
+                assert_eq!(s.dur_us, u64::from(s.items), "torn span: {s:?}");
+            }
+        }
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn scribe_timestamps_are_epoch_relative() {
+        let ring = Arc::new(SpanRing::new(0, 8));
+        let epoch = Instant::now();
+        let scribe = SpanScribe::new(Arc::clone(&ring), epoch);
+        // a pre-epoch instant saturates to 0 instead of panicking
+        let t0 = epoch - std::time::Duration::from_secs(1);
+        assert_eq!(scribe.us_of(t0), 0);
+        scribe.record_between(SpanKind::Reply, 3, epoch, epoch + std::time::Duration::from_micros(250));
+        scribe.mark(SpanKind::Steal, 2);
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].kind, SpanKind::Reply);
+        assert_eq!(spans[0].dur_us, 250);
+        assert_eq!(spans[1].kind, SpanKind::Steal);
+        assert_eq!(spans[1].dur_us, 0);
+    }
+}

@@ -116,7 +116,7 @@ fn pool_of_one_matches_legacy_server_on_fixed_trace() {
     let pooled = Server::start_with_opts(
         move || Ok(Box::new(engine.clone()) as _),
         policy,
-        ServerOptions { queue_cap: 0, workers: 1, dispatch_shards: 1 },
+        ServerOptions { queue_cap: 0, workers: 1, dispatch_shards: 1, telemetry: true },
     )
     .unwrap();
 
@@ -151,7 +151,7 @@ fn pool_preserves_per_request_integrity_under_load() {
     let server = Server::start_with_opts(
         move || Ok(Box::new(engine.clone()) as _),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
-        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 0 },
+        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 0, telemetry: true },
     )
     .unwrap();
 
@@ -188,7 +188,7 @@ fn pool_overload_rejects_instead_of_deadlocking() {
     let server = Server::start_with_opts(
         move || Ok(Box::new(paced.clone()) as _),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
-        ServerOptions { queue_cap: 4, workers: 2, dispatch_shards: 0 },
+        ServerOptions { queue_cap: 4, workers: 2, dispatch_shards: 0, telemetry: true },
     )
     .unwrap();
 
@@ -227,7 +227,7 @@ fn sharded_front_high_priority_beats_backlog() {
         // max_batch far above the backlog: only a deadline can flush
         BatchPolicy { max_batch: 100, max_wait },
         // one shard so the backlog and the high request share a batcher
-        ServerOptions { queue_cap: 0, workers: 2, dispatch_shards: 1 },
+        ServerOptions { queue_cap: 0, workers: 2, dispatch_shards: 1, telemetry: true },
     )
     .unwrap();
 
@@ -266,7 +266,7 @@ fn sharded_front_zero_wait_and_unit_batch_edges() {
     let zero_wait = Server::start_with_opts(
         move || Ok(Box::new(e.clone()) as _),
         BatchPolicy { max_batch: 8, max_wait: Duration::ZERO },
-        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2 },
+        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2, telemetry: true },
     )
     .unwrap();
     let rxs: Vec<_> =
@@ -283,7 +283,7 @@ fn sharded_front_zero_wait_and_unit_batch_edges() {
     let unit_batch = Server::start_with_opts(
         move || Ok(Box::new(e.clone()) as _),
         BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
-        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 4 },
+        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 4, telemetry: true },
     )
     .unwrap();
     let rxs: Vec<_> =
@@ -308,7 +308,7 @@ fn sharded_front_checksum_integrity_k8() {
     let server = Server::start_with_opts(
         move || Ok(Box::new(engine.clone()) as _),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
-        ServerOptions { queue_cap: 0, workers: 8, dispatch_shards: 0 },
+        ServerOptions { queue_cap: 0, workers: 8, dispatch_shards: 0, telemetry: true },
     )
     .unwrap();
     assert_eq!(server.dispatch_shards(), 4, "workers=8 auto-sizes to 4 shards");
@@ -355,7 +355,7 @@ fn metrics_snapshots_under_load_do_not_stall_dispatch() {
     let server = Server::start_with_opts(
         move || Ok(Box::new(engine.clone()) as _),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
-        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2 },
+        ServerOptions { queue_cap: 0, workers: 4, dispatch_shards: 2, telemetry: true },
     )
     .unwrap();
 

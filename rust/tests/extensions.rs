@@ -90,7 +90,7 @@ fn registry_multi_model_serving() {
                 name: alias.into(),
                 input_len,
                 policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-                options: ServerOptions { queue_cap: 64, workers: 1, dispatch_shards: 0 },
+                options: ServerOptions { queue_cap: 64, workers: 1, dispatch_shards: 0, telemetry: true },
             },
             move || Ok(Box::new(engine.clone()) as _),
         )

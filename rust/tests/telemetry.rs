@@ -1,0 +1,316 @@
+//! Telemetry integration tests: golden exposition formats and a live
+//! served session.
+//!
+//! The format tests pin the **exact** Prometheus text, JSON snapshot, and
+//! Chrome trace-event documents for a hand-built [`TelemetrySnapshot`] —
+//! the exporters are pure functions of the snapshot, so these are true
+//! goldens (no load-dependent noise). The live test boots a real sharded
+//! server, drives it, and checks the properties that matter across any
+//! load: snapshots fold idempotently, spans account for every request,
+//! and the serving-path lock tripwire stays at zero with recording on.
+
+use std::time::Duration;
+
+use autows::coordinator::{
+    BatchPolicy, MetricsSnapshot, Server, ServerOptions, SimOnlyEngine, WorkerStats,
+};
+use autows::device::Device;
+use autows::dse::{self, DseConfig};
+use autows::ir::Quant;
+use autows::pipeline::drive_synthetic;
+use autows::telemetry::{
+    chrome_trace_spans, json_snapshot, prometheus_text, span_stats, Span, SpanKind,
+    TelemetrySnapshot, SHARD_LANE_BASE,
+};
+
+/// A fully determined snapshot: every float chosen to render exactly
+/// (`4.0` → `4`, `1.5` → `1.5`) so the goldens are byte-stable.
+fn fixture() -> TelemetrySnapshot {
+    TelemetrySnapshot {
+        metrics: MetricsSnapshot {
+            requests: 12,
+            batches: 3,
+            mean_batch: 4.0,
+            p50_ms: 1.5,
+            p95_ms: 2.5,
+            p99_ms: 3.5,
+            mean_ms: 1.75,
+            throughput_rps: 256.0,
+            sim_accel_s: 0.125,
+            per_worker: vec![
+                WorkerStats { batches: 2, requests: 8, busy_s: 0.25 },
+                WorkerStats { batches: 1, requests: 4, busy_s: 0.125 },
+            ],
+            queue_depth_mean: 1.5,
+            queue_depth_max: 4,
+        },
+        counters: vec![("cache_hits".to_string(), 7), ("sim_runs".to_string(), 2)],
+        spans: vec![
+            Span { kind: SpanKind::Wait, lane: 0, items: 4, start_us: 0, dur_us: 10 },
+            Span { kind: SpanKind::Engine, lane: 0, items: 4, start_us: 10, dur_us: 30 },
+            Span { kind: SpanKind::Engine, lane: 1, items: 2, start_us: 15, dur_us: 20 },
+            Span { kind: SpanKind::Batch, lane: SHARD_LANE_BASE, items: 4, start_us: 2, dur_us: 3 },
+        ],
+    }
+}
+
+const PROM_GOLDEN: &str = "\
+# HELP autows_requests_total Requests completed by the serving session.
+# TYPE autows_requests_total counter
+autows_requests_total 12
+# HELP autows_batches_total Engine batches executed.
+# TYPE autows_batches_total counter
+autows_batches_total 3
+# HELP autows_mean_batch Mean requests per engine batch.
+# TYPE autows_mean_batch gauge
+autows_mean_batch 4
+# HELP autows_throughput_rps Achieved request throughput over the session.
+# TYPE autows_throughput_rps gauge
+autows_throughput_rps 256
+# HELP autows_latency_ms Request latency distribution, milliseconds.
+# TYPE autows_latency_ms gauge
+autows_latency_ms{quantile=\"0.5\"} 1.5
+autows_latency_ms{quantile=\"0.95\"} 2.5
+autows_latency_ms{quantile=\"0.99\"} 3.5
+autows_latency_ms{quantile=\"mean\"} 1.75
+# HELP autows_queue_depth Dispatch-point queue depth (requests admitted, not yet on an engine).
+# TYPE autows_queue_depth gauge
+autows_queue_depth{stat=\"mean\"} 1.5
+autows_queue_depth{stat=\"max\"} 4
+# HELP autows_sim_accel_seconds_total Simulated accelerator busy time, seconds.
+# TYPE autows_sim_accel_seconds_total counter
+autows_sim_accel_seconds_total 0.125
+# HELP autows_worker_batches_total Batches served per pool worker.
+# TYPE autows_worker_batches_total counter
+autows_worker_batches_total{worker=\"0\"} 2
+autows_worker_batches_total{worker=\"1\"} 1
+# HELP autows_worker_requests_total Requests served per pool worker.
+# TYPE autows_worker_requests_total counter
+autows_worker_requests_total{worker=\"0\"} 8
+autows_worker_requests_total{worker=\"1\"} 4
+# HELP autows_worker_busy_seconds_total Engine busy time per pool worker, seconds.
+# TYPE autows_worker_busy_seconds_total counter
+autows_worker_busy_seconds_total{worker=\"0\"} 0.25
+autows_worker_busy_seconds_total{worker=\"1\"} 0.125
+# HELP autows_spans_total Serving-path spans recorded per kind (ring-resident).
+# TYPE autows_spans_total counter
+autows_spans_total{kind=\"wait\"} 1
+autows_spans_total{kind=\"engine\"} 2
+autows_spans_total{kind=\"reply\"} 0
+autows_spans_total{kind=\"batch\"} 1
+autows_spans_total{kind=\"steal\"} 0
+# HELP autows_span_items_total Requests covered by the recorded spans, per kind.
+# TYPE autows_span_items_total counter
+autows_span_items_total{kind=\"wait\"} 4
+autows_span_items_total{kind=\"engine\"} 6
+autows_span_items_total{kind=\"reply\"} 0
+autows_span_items_total{kind=\"batch\"} 4
+autows_span_items_total{kind=\"steal\"} 0
+# HELP autows_span_duration_us_sum Summed span duration per kind, microseconds.
+# TYPE autows_span_duration_us_sum counter
+autows_span_duration_us_sum{kind=\"wait\"} 10
+autows_span_duration_us_sum{kind=\"engine\"} 50
+autows_span_duration_us_sum{kind=\"reply\"} 0
+autows_span_duration_us_sum{kind=\"batch\"} 3
+autows_span_duration_us_sum{kind=\"steal\"} 0
+# HELP autows_span_duration_us_max Longest single span per kind, microseconds.
+# TYPE autows_span_duration_us_max gauge
+autows_span_duration_us_max{kind=\"wait\"} 10
+autows_span_duration_us_max{kind=\"engine\"} 30
+autows_span_duration_us_max{kind=\"reply\"} 0
+autows_span_duration_us_max{kind=\"batch\"} 3
+autows_span_duration_us_max{kind=\"steal\"} 0
+# HELP autows_pipeline_counter Process-wide DSE/simulator/design-cache counters.
+# TYPE autows_pipeline_counter counter
+autows_pipeline_counter{name=\"cache_hits\"} 7
+autows_pipeline_counter{name=\"sim_runs\"} 2
+";
+
+#[test]
+fn prometheus_text_matches_golden() {
+    assert_eq!(prometheus_text(&fixture()), PROM_GOLDEN);
+}
+
+#[test]
+fn json_snapshot_matches_golden() {
+    let golden = concat!(
+        "{\"requests\":12,\"batches\":3,\"mean_batch\":4,",
+        "\"p50_ms\":1.5,\"p95_ms\":2.5,\"p99_ms\":3.5,\"mean_ms\":1.75,",
+        "\"throughput_rps\":256,\"sim_accel_s\":0.125,",
+        "\"queue_depth_mean\":1.5,\"queue_depth_max\":4,",
+        "\"per_worker\":[",
+        "{\"worker\":0,\"batches\":2,\"requests\":8,\"busy_s\":0.25},",
+        "{\"worker\":1,\"batches\":1,\"requests\":4,\"busy_s\":0.125}],",
+        "\"spans\":[",
+        "{\"kind\":\"wait\",\"count\":1,\"items\":4,\"dur_us_sum\":10,\"dur_us_max\":10},",
+        "{\"kind\":\"engine\",\"count\":2,\"items\":6,\"dur_us_sum\":50,\"dur_us_max\":30},",
+        "{\"kind\":\"reply\",\"count\":0,\"items\":0,\"dur_us_sum\":0,\"dur_us_max\":0},",
+        "{\"kind\":\"batch\",\"count\":1,\"items\":4,\"dur_us_sum\":3,\"dur_us_max\":3},",
+        "{\"kind\":\"steal\",\"count\":0,\"items\":0,\"dur_us_sum\":0,\"dur_us_max\":0}],",
+        "\"counters\":{\"cache_hits\":7,\"sim_runs\":2}}\n",
+    );
+    assert_eq!(json_snapshot(&fixture()), golden);
+}
+
+#[test]
+fn chrome_trace_spans_matches_golden() {
+    let spans = vec![
+        Span { kind: SpanKind::Engine, lane: 0, items: 4, start_us: 10, dur_us: 30 },
+        Span { kind: SpanKind::Batch, lane: SHARD_LANE_BASE, items: 4, start_us: 2, dur_us: 3 },
+    ];
+    let golden = concat!(
+        "{\"traceEvents\":[",
+        "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,",
+        "\"args\":{\"name\":\"worker 0\"}},",
+        "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":10000,",
+        "\"args\":{\"name\":\"shard 0\"}},",
+        "{\"name\":\"engine\",\"cat\":\"serve\",\"ph\":\"X\",\"ts\":10,\"dur\":30,",
+        "\"pid\":0,\"tid\":0,\"args\":{\"items\":4}},",
+        "{\"name\":\"batch\",\"cat\":\"serve\",\"ph\":\"X\",\"ts\":2,\"dur\":3,",
+        "\"pid\":0,\"tid\":10000,\"args\":{\"items\":4}}",
+        "],\"displayTimeUnit\":\"ms\"}\n",
+    );
+    assert_eq!(chrome_trace_spans(&spans), golden);
+}
+
+/// An empty session still renders both formats in full shape — every
+/// family and key appears, zeroed, so scrapers never see a varying schema.
+#[test]
+fn empty_snapshot_keeps_the_exposition_shape() {
+    let empty = TelemetrySnapshot {
+        metrics: MetricsSnapshot {
+            requests: 0,
+            batches: 0,
+            mean_batch: 0.0,
+            p50_ms: 0.0,
+            p95_ms: 0.0,
+            p99_ms: 0.0,
+            mean_ms: 0.0,
+            throughput_rps: 0.0,
+            sim_accel_s: 0.0,
+            per_worker: Vec::new(),
+            queue_depth_mean: 0.0,
+            queue_depth_max: 0,
+        },
+        counters: Vec::new(),
+        spans: Vec::new(),
+    };
+    let prom = prometheus_text(&empty);
+    assert!(prom.contains("autows_requests_total 0\n"));
+    // every span kind still gets a zero sample
+    for kind in SpanKind::ALL {
+        assert!(prom.contains(&format!("autows_spans_total{{kind=\"{}\"}} 0\n", kind.label())));
+    }
+    // per-series families keep their HELP/TYPE headers even with no series
+    assert!(prom.contains("# TYPE autows_worker_batches_total counter\n"));
+    assert!(prom.contains("# TYPE autows_pipeline_counter counter\n"));
+    let js = json_snapshot(&empty);
+    assert!(js.starts_with('{') && js.ends_with("}\n"));
+    assert!(js.contains("\"per_worker\":[]"));
+    assert!(js.contains("\"counters\":{}"));
+    assert_eq!(js.matches('{').count(), js.matches('}').count());
+}
+
+/// Non-finite metric values (possible only from a corrupted snapshot)
+/// must not leak `NaN`/`inf` tokens into either format.
+#[test]
+fn non_finite_metrics_render_parseable() {
+    let mut t = fixture();
+    t.metrics.mean_batch = f64::NAN;
+    t.metrics.throughput_rps = f64::INFINITY;
+    let prom = prometheus_text(&t);
+    assert!(prom.contains("autows_mean_batch 0\n"));
+    assert!(prom.contains("autows_throughput_rps 0\n"));
+    assert!(!prom.contains("NaN") && !prom.contains("inf"));
+    let js = json_snapshot(&t);
+    assert!(js.contains("\"mean_batch\":0,"));
+    assert!(!js.contains("NaN") && !js.contains("inf"));
+}
+
+fn boot_server(telemetry: bool) -> Server {
+    let net = autows::models::toy_cnn(Quant::W8A8);
+    let dev = Device::zcu102();
+    let r = dse::run(&net, &dev, &DseConfig::default()).expect("toy cnn fits zcu102");
+    let engine =
+        SimOnlyEngine { design: r.design, device: dev, input_len: 16, output_len: 4 };
+    Server::start_with_opts(
+        move || Ok(Box::new(engine.clone()) as _),
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+        ServerOptions { queue_cap: 0, workers: 2, dispatch_shards: 0, telemetry },
+    )
+    .expect("sim engines boot")
+}
+
+/// Live session: snapshots fold idempotently, engine spans account for
+/// every request, and recording never takes a serving-path lock.
+#[test]
+fn live_server_telemetry_accounts_for_every_request() {
+    const REQUESTS: usize = 64;
+    let server = boot_server(true);
+    drive_synthetic(&server, REQUESTS, 16).expect("all requests served");
+
+    // Folding is idempotent: a second snapshot (which re-takes the fold
+    // lock and drains an empty event queue) reports identical totals.
+    let t1 = server.telemetry();
+    let t2 = server.telemetry();
+    assert_eq!(t1.metrics.requests, REQUESTS as u64);
+    assert_eq!(t2.metrics.requests, t1.metrics.requests);
+    assert_eq!(t2.metrics.batches, t1.metrics.batches);
+    assert_eq!(t2.metrics.queue_depth_max, t1.metrics.queue_depth_max);
+
+    // 64 requests fit in the rings (1024 slots/lane) — engine spans must
+    // cover each request exactly once.
+    let stats = span_stats(&t2.spans);
+    let engine = stats.iter().find(|s| s.kind == SpanKind::Engine).expect("ALL covers Engine");
+    assert_eq!(engine.items, REQUESTS as u64, "engine spans must cover every request");
+    assert!(engine.count >= t2.metrics.batches, "one engine span per batch at least");
+    assert!(server.spans_recorded() > 0);
+
+    // The tripwire: span recording rides the dispatch path lock-free.
+    assert_eq!(server.serving_path_locks(), 0);
+
+    // The live snapshot renders in both formats without structural damage.
+    let prom = prometheus_text(&t2);
+    assert!(prom.contains(&format!("autows_requests_total {REQUESTS}\n")));
+    let js = json_snapshot(&t2);
+    assert_eq!(js.matches('{').count(), js.matches('}').count());
+
+    // Process-wide counters arrive sorted by name (the exposition order).
+    let names: Vec<&str> = t2.counters.iter().map(|(n, _)| n.as_str()).collect();
+    let mut sorted = names.clone();
+    sorted.sort_unstable();
+    assert_eq!(names, sorted, "counters must expose in sorted order");
+    for key in ["dse_greedy_steps", "sim_runs", "cache_hits", "sim_events_processed"] {
+        assert!(names.contains(&key), "counter {key} missing from the snapshot");
+    }
+    server.shutdown();
+}
+
+/// `telemetry: false` disables the span rings entirely — zero spans after
+/// real load — while metrics keep working.
+#[test]
+fn telemetry_off_records_no_spans() {
+    let server = boot_server(false);
+    drive_synthetic(&server, 32, 16).expect("all requests served");
+    assert_eq!(server.spans_recorded(), 0);
+    let t = server.telemetry();
+    assert_eq!(t.metrics.requests, 32);
+    assert!(t.spans.is_empty());
+    assert_eq!(server.serving_path_locks(), 0);
+    server.shutdown();
+}
+
+/// A cloneable [`MetricsHandle`] reads the same hub as the server.
+#[test]
+fn metrics_handle_tracks_the_server() {
+    let server = boot_server(true);
+    let handle = server.metrics_handle();
+    drive_synthetic(&server, 16, 16).expect("all requests served");
+    let via_handle = handle.snapshot();
+    let via_server = server.telemetry().metrics;
+    assert_eq!(via_handle.requests, 16);
+    assert_eq!(via_handle.requests, via_server.requests);
+    assert_eq!(via_handle.batches, via_server.batches);
+    assert_eq!(handle.serving_path_locks(), 0);
+    server.shutdown();
+}

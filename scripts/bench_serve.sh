@@ -39,6 +39,34 @@ echo
 echo "BENCH_serve.json:"
 cat BENCH_serve.json
 
+# ---- telemetry overhead gate ------------------------------------------------
+# The bench already hard-asserts span recording costs <2% at front
+# saturation; re-check the recorded artifact here so a hand-edited or stale
+# BENCH_serve.json cannot slip an overhead regression past review.
+if command -v python3 >/dev/null 2>&1; then
+    echo
+    echo "== telemetry overhead gate (span recording on/off rps ratio >= 0.98) =="
+    python3 - <<'PY'
+import json, sys
+
+with open("BENCH_serve.json") as f:
+    doc = json.load(f)
+tele = doc.get("telemetry")
+if tele is None:
+    print("  FAIL: BENCH_serve.json has no telemetry section")
+    sys.exit(1)
+ratio = tele["on_over_off_ratio"]
+print(f"  off {tele['best_off_rps']:9.0f} rps -> on {tele['best_on_rps']:9.0f} rps "
+      f"({ratio:5.3f}x, {tele['spans_recorded']} spans, best of {tele['rounds']} rounds)")
+if ratio < 0.98:
+    print(f"  FAIL: span recording costs more than 2% ({ratio:5.3f}x)")
+    sys.exit(1)
+print("  telemetry overhead within budget")
+PY
+else
+    echo "telemetry overhead gate: python3 unavailable; skipped"
+fi
+
 # ---- regression gate against the committed baseline ------------------------
 # Points are keyed (section, workers, requests, paced_batch_s): a baseline
 # recorded with different sweep parameters (quick vs full, resized sweep)

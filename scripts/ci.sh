@@ -63,6 +63,33 @@ for f in "$SIM_JSON_DIR/single.json" "$SIM_JSON_DIR/colocated.json" "$SIM_JSON_D
 done
 echo "simulate --json OK"
 
+echo "== smoke: simulate --trace-out (Perfetto event trace) =="
+cargo run --release --bin autows -- simulate --model resnet18 --device zcu102 \
+    --quant w4a5 --trace-out "$SIM_JSON_DIR/sim_trace.json"
+grep -q '"traceEvents":' "$SIM_JSON_DIR/sim_trace.json" \
+    || { echo "sim trace missing traceEvents"; exit 1; }
+
+echo "== smoke: serve telemetry (metrics + span-trace exports) =="
+cargo run --release --bin autows -- serve --models resnet18,squeezenet --device zcu102 \
+    --requests 48 --metrics-out "$SIM_JSON_DIR/metrics.json" --stats-interval 1
+cargo run --release --bin autows -- serve --devices zcu102,zcu102 --requests 48 \
+    --metrics-out "$SIM_JSON_DIR/metrics.prom" --trace-out "$SIM_JSON_DIR/spans.json"
+grep -q '^autows_requests_total ' "$SIM_JSON_DIR/metrics.prom" \
+    || { echo "Prometheus exposition missing autows_requests_total"; exit 1; }
+grep -q '^# TYPE autows_spans_total counter$' "$SIM_JSON_DIR/metrics.prom" \
+    || { echo "Prometheus exposition missing the span families"; exit 1; }
+grep -q '"traceEvents":' "$SIM_JSON_DIR/spans.json" \
+    || { echo "span trace missing traceEvents"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    for f in "$SIM_JSON_DIR/metrics.json" "$SIM_JSON_DIR/spans.json" "$SIM_JSON_DIR/sim_trace.json"; do
+        python3 -m json.tool "$f" >/dev/null || { echo "invalid JSON: $f"; exit 1; }
+    done
+else
+    grep -q '"requests":' "$SIM_JSON_DIR/metrics.json" \
+        || { echo "metrics JSON missing requests field"; exit 1; }
+fi
+echo "serve telemetry OK"
+
 echo "== perf trajectory (BENCH_dse.json) =="
 ./scripts/bench_dse.sh
 
